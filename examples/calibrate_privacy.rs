@@ -1,0 +1,68 @@
+//! Privacy-accountant walkthrough: sigma calibration, the epsilon
+//! trajectory over training, and the batch-size / noise tradeoff — the
+//! quantities a practitioner fixes before touching the optimizer.
+//!
+//!   cargo run --release --example calibrate_privacy
+
+use fastdp::privacy::{calibrate_sigma, epsilon_for, RdpAccountant};
+use fastdp::util::table::Table;
+
+fn main() {
+    let n = 50_000usize; // dataset size
+    let delta = 1e-5;
+
+    // The paper's flagship settings: eps = 3 (language), eps = 2 (vision).
+    let mut t = Table::new(
+        &format!("sigma calibration (N = {n}, delta = {delta:e})"),
+        &["target eps", "batch", "steps", "q", "sigma", "achieved eps"],
+    );
+    for (eps, batch, steps) in [
+        (3.0, 1024usize, 1000u64),
+        (3.0, 4096, 1000),
+        (2.0, 1024, 2000),
+        (8.0, 1024, 1000),
+    ] {
+        let q = batch as f64 / n as f64;
+        let sigma = calibrate_sigma(q, steps, eps, delta);
+        t.row(&[
+            format!("{eps}"),
+            batch.to_string(),
+            steps.to_string(),
+            format!("{q:.4}"),
+            format!("{sigma:.3}"),
+            format!("{:.4}", epsilon_for(q, sigma, steps, delta)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Live accountant, as the coordinator uses it: epsilon grows ~sqrt(steps).
+    let q = 1024.0 / n as f64;
+    let sigma = calibrate_sigma(q, 1000, 3.0, delta);
+    let mut acc = RdpAccountant::new(q, sigma);
+    let mut traj = Table::new("epsilon trajectory during training", &["step", "epsilon"]);
+    for step in 1..=1000u64 {
+        acc.step();
+        if step % 200 == 0 || step == 1 || step == 50 {
+            traj.row(&[step.to_string(), format!("{:.4}", acc.epsilon(delta))]);
+        }
+    }
+    print!("\n{}", traj.render());
+
+    // Bigger logical batches need more noise per step but see each sample
+    // more often — the classical q/sigma tradeoff.
+    let mut trade = Table::new(
+        "noise needed for eps = 3 over one epoch-equivalent",
+        &["batch", "q", "steps (1 epoch)", "sigma"],
+    );
+    for batch in [256usize, 1024, 4096, 16384] {
+        let q = batch as f64 / n as f64;
+        let steps = (n / batch).max(1) as u64 * 10; // 10 epochs
+        trade.row(&[
+            batch.to_string(),
+            format!("{q:.4}"),
+            steps.to_string(),
+            format!("{:.3}", calibrate_sigma(q, steps, 3.0, delta)),
+        ]);
+    }
+    print!("\n{}", trade.render());
+}

@@ -1,0 +1,89 @@
+//! Full analytic complexity report over the paper's model zoo —
+//! regenerates the content of Tables 7, 8 and 10 interactively.
+//!
+//!   cargo run --release --example complexity_report -- [--image 224] [--seq 256]
+
+use fastdp::arch::catalog::{by_name, language_model, vision_model, LANGUAGE_ZOO, VISION_ZOO};
+use fastdp::cli::Args;
+use fastdp::complexity::{self, Strategy};
+use fastdp::util::stats::fmt_count;
+use fastdp::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let img = args.get_usize("image", 224) as u64;
+    let seq = args.get_usize("seq", 256) as u64;
+
+    // ---- Table 7: parameter census -------------------------------------
+    let mut t7 = Table::new(
+        "Table 7: % of trainable params in generalized linear layers",
+        &["model", "GL weights", "GL bias", "other", "% applicable to BK"],
+    );
+    for name in VISION_ZOO.iter().chain(LANGUAGE_ZOO.iter()) {
+        let a = by_name(name).unwrap();
+        t7.row(&[
+            name.to_string(),
+            fmt_count(a.gl_weight_params() as f64),
+            a.gl_bias.to_string(),
+            a.other_params.to_string(),
+            format!("{:.2}%", 100.0 * a.bk_applicable_fraction()),
+        ]);
+    }
+    print!("{}", t7.render());
+
+    // ---- Table 10: mixed ghost norm savings -----------------------------
+    let mut t10 = Table::new(
+        &format!("Table 10: per-sample-norm space @ {img}x{img} (B=1)"),
+        &["model", "mixed", "instantiation", "save", "ghost", "save"],
+    );
+    for name in VISION_ZOO {
+        let a = vision_model(name, img).unwrap();
+        let layers: Vec<_> = a.gl_layers().cloned().collect();
+        let ghost: f64 = layers.iter().map(|l| complexity::norm_space_ghost(1.0, l)).sum();
+        let inst: f64 = layers.iter().map(|l| complexity::norm_space_inst(1.0, l)).sum();
+        let mixed: f64 = layers.iter().map(|l| complexity::norm_space_mixed(1.0, l)).sum();
+        t10.row(&[
+            name.to_string(),
+            fmt_count(mixed),
+            fmt_count(inst),
+            format!("{:.1}x", inst / mixed),
+            fmt_count(ghost),
+            format!("{:.1}x", ghost / mixed),
+        ]);
+    }
+    print!("\n{}", t10.render());
+
+    // ---- Table 8: whole-model time/space under each implementation ------
+    let mut t8 = Table::new(
+        &format!("Table 8: model complexity ratios vs BK (B=100, T={seq} text / {img}^2 vision)"),
+        &["model", "bk time", "nondp", "ghostclip", "opacus", "bk space", "nondp", "ghostclip", "opacus"],
+    );
+    let models: Vec<(&str, Vec<fastdp::arch::LayerDims>)> = vec![
+        ("roberta-base", language_model("roberta-base", seq).unwrap().gl_layers().cloned().collect()),
+        ("roberta-large", language_model("roberta-large", seq).unwrap().gl_layers().cloned().collect()),
+        ("vit-base", vision_model("vit_base", img).unwrap().gl_layers().cloned().collect()),
+        ("vit-large", vision_model("vit_large", img).unwrap().gl_layers().cloned().collect()),
+        ("beit-large", vision_model("beit_large", img).unwrap().gl_layers().cloned().collect()),
+        ("gpt2 (T=100)", language_model("gpt2", 100).unwrap().gl_layers().cloned().collect()),
+        ("gpt2 (T=1000)", language_model("gpt2", 1000).unwrap().gl_layers().cloned().collect()),
+        ("gpt2-large (T=100)", language_model("gpt2-large", 100).unwrap().gl_layers().cloned().collect()),
+        ("gpt2-large (T=1000)", language_model("gpt2-large", 1000).unwrap().gl_layers().cloned().collect()),
+    ];
+    for (name, layers) in &models {
+        let bk = complexity::model_cost(Strategy::BkMixOpt, 100.0, layers);
+        let row = |s: Strategy| complexity::model_cost(s, 100.0, layers);
+        let (nd, gc, op) = (row(Strategy::NonDp), row(Strategy::GhostClip), row(Strategy::Opacus));
+        t8.row(&[
+            name.to_string(),
+            fmt_count(bk.time),
+            format!("{:.2}x", nd.time / bk.time),
+            format!("{:.2}x", gc.time / bk.time),
+            format!("{:.2}x", op.time / bk.time),
+            fmt_count(bk.space),
+            format!("{:.2}x", nd.space / bk.space),
+            format!("{:.2}x", gc.space / bk.space),
+            format!("{:.2}x", op.space / bk.space),
+        ]);
+    }
+    print!("\n{}", t8.render());
+}

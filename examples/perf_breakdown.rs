@@ -1,0 +1,128 @@
+//! L3 hot-path profiling (EXPERIMENTS.md §Perf): break one fused training
+//! step into its phases — noise generation (Rust DRBG), batch literal
+//! creation, PJRT execute, and output readback — to locate the
+//! coordinator-side bottleneck.
+//!
+//!   cargo run --release --example perf_breakdown -- [--model gpt_e2e] [--iters 10]
+
+use fastdp::bench::artifacts_dir;
+use fastdp::cli::Args;
+use fastdp::coordinator::noise::NoiseSource;
+use fastdp::data::TokenCorpus;
+use fastdp::runtime::{literal_i32, scalar_f32, scalar_i32, Runtime};
+use fastdp::util::stats::{fmt_duration, Summary};
+use fastdp::util::table::Table;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "gpt_e2e").to_string();
+    let iters = args.get_usize("iters", 10);
+
+    let rt = Runtime::load(artifacts_dir())?;
+    let meta = rt.model(&model)?.clone();
+    let strategy = "bk_mixopt";
+    let art = rt.artifact(&model, "step", Some(strategy))?.clone();
+    let init = rt.artifact(&model, "init", None)?.clone();
+    let seed = scalar_i32(0);
+    let mut params = rt.execute(&init, &[&seed])?;
+    params.truncate(meta.param_names.len());
+
+    let vocab = meta.spec.opt_i64("vocab", 512) as usize;
+    let seq = meta.spec.opt_i64("seq", 64) as usize;
+    let b = meta.batch;
+    let mut corpus = TokenCorpus::new(vocab, seq, 7);
+    let mut noise_src = NoiseSource::new(3);
+
+    let opt_zeros: Vec<xla::Literal> = meta
+        .param_names
+        .iter()
+        .map(|n| {
+            let s = meta.param_shape(n).unwrap();
+            fastdp::runtime::literal_f32(&vec![0f32; s.iter().product()], s).unwrap()
+        })
+        .collect();
+    let scalars = [
+        scalar_f32(1e-3),
+        scalar_f32(1.0),
+        scalar_f32(0.5),
+        scalar_f32(b as f32),
+        scalar_f32(1.0),
+    ];
+
+    let mut t_noise = Summary::new();
+    let mut t_batch = Summary::new();
+    let mut t_exec = Summary::new();
+    let mut t_read = Summary::new();
+
+    // warmup (compile)
+    {
+        let (xs, ys) = corpus.sample_batch(b);
+        let xl = literal_i32(&xs, &[b, seq])?;
+        let yl = literal_i32(&ys, &[b, seq])?;
+        let noise = noise_src.tensors(&meta)?;
+        let mut a: Vec<&xla::Literal> = params.iter().collect();
+        a.extend(opt_zeros.iter());
+        a.extend(opt_zeros.iter());
+        a.push(&xl);
+        a.push(&yl);
+        a.extend(noise.iter());
+        a.extend(scalars.iter());
+        rt.execute(&art, &a)?;
+    }
+
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let noise = noise_src.tensors(&meta)?;
+        t_noise.push(t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let (xs, ys) = corpus.sample_batch(b);
+        let xl = literal_i32(&xs, &[b, seq])?;
+        let yl = literal_i32(&ys, &[b, seq])?;
+        t_batch.push(t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let exe = rt.executable(&art)?;
+        let mut a: Vec<&xla::Literal> = params.iter().collect();
+        a.extend(opt_zeros.iter());
+        a.extend(opt_zeros.iter());
+        a.push(&xl);
+        a.push(&yl);
+        a.extend(noise.iter());
+        a.extend(scalars.iter());
+        let bufs = exe.execute::<&xla::Literal>(&a)?;
+        t_exec.push(t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        params = outs
+            .into_iter()
+            .take(meta.param_names.len())
+            .collect();
+        t_read.push(t0.elapsed().as_secs_f64());
+    }
+
+    let total =
+        t_noise.mean() + t_batch.mean() + t_exec.mean() + t_read.mean();
+    let mut t = Table::new(
+        &format!("{model} ({strategy}) step phase breakdown, {iters} iters"),
+        &["phase", "mean", "share"],
+    );
+    for (name, s) in [
+        ("noise generation (DRBG)", &t_noise),
+        ("batch sampling + literals", &t_batch),
+        ("PJRT execute", &t_exec),
+        ("readback (tuple->literals)", &t_read),
+    ] {
+        t.row(&[
+            name.into(),
+            fmt_duration(s.mean()),
+            format!("{:.1}%", 100.0 * s.mean() / total),
+        ]);
+    }
+    t.row(&["TOTAL".into(), fmt_duration(total), "100%".into()]);
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Quickstart: the fastdp equivalent of the paper's Section 4 snippet —
+//! attach DP to a training run in a few lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Trains the small MLP artifact with the Book-Keeping (BK) algorithm at
+//! (eps = 3, delta = 1e-5) for 30 steps and prints the loss + epsilon.
+
+use fastdp::config::TrainConfig;
+use fastdp::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    // The whole "PrivacyEngine.attach" ceremony is a config:
+    let mut cfg = TrainConfig::default();
+    cfg.model = "mlp_e2e".into(); // an AOT-compiled (model, B) pair
+    cfg.strategy = "bk".into(); // the paper's Algorithm 1
+    cfg.steps = 30;
+    cfg.lr = 0.5;
+    cfg.clip = 1.0;
+    cfg.privacy.target_epsilon = 3.0;
+    cfg.privacy.target_delta = 1e-5;
+    cfg.privacy.dataset_size = 50_000;
+
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run()?;
+
+    println!(
+        "\nquickstart: loss {:.4} -> {:.4} in {} steps at eps = {:.3} (sigma = {:.3})",
+        report.initial_loss, report.final_loss, report.steps, report.final_epsilon, report.sigma
+    );
+    assert!(report.final_loss < report.initial_loss, "DP training should learn");
+    Ok(())
+}

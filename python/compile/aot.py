@@ -1,0 +1,395 @@
+"""AOT lowering: JAX (L2, calling L1 kernels) -> HLO text artifacts.
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator
+loads the HLO with `HloModuleProto::from_text_file` and never touches
+Python again.
+
+HLO *text* — not `lowered.compiler_ir(...).serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--filter NAME]
+                        [--kernel-impl jnp|pallas] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import kernels as K
+from . import models as M
+from . import strategies as S
+from .specs import default_specs
+
+SCALARS = ("lr", "clip", "sigma_r", "batch", "step")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(x.dtype)]
+
+
+def _desc(name: str, x) -> Dict:
+    return dict(name=name, shape=list(x.shape), dtype=_dt(x))
+
+
+def _spec_of(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class ArtifactBuilder:
+    def __init__(self, out_dir: str, kernel_impl: str):
+        self.out_dir = out_dir
+        self.kernel_impl = kernel_impl
+        self.models: Dict[str, Dict] = {}
+        self.artifacts: List[Dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _emit(self, fname: str, fn, example_args, entry: Dict):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = fname
+        self.artifacts.append(entry)
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s",
+              flush=True)
+
+    def build_spec(self, spec: Dict, filter_: str | None):
+        name = spec["name"]
+        if filter_ and filter_ not in name:
+            return
+        model = M.make_model(spec["model"])
+        B = spec["batch"]
+        optimizer = spec["optimizer"]
+        clip_fn = spec["clip_fn"]
+        trainable = model.param_names()
+        frozen = model.frozen_names() if hasattr(model, "frozen_names") else []
+        params0 = model.init_params(jax.random.PRNGKey(0))
+        pshapes = {k: list(params0[k].shape) for k in trainable + frozen}
+        (xs, xd), (ys, yd) = model.data_spec(B)
+        n_params = sum(
+            int(jnp.prod(jnp.asarray(params0[k].shape))) for k in trainable)
+
+        self.models[name] = dict(
+            spec=spec["model"], batch=B, optimizer=optimizer, clip_fn=clip_fn,
+            group=spec["group"], param_names=trainable, frozen_names=frozen,
+            param_shapes=pshapes, layer_meta=model.layer_meta(),
+            n_params=n_params, kernel_impl=self.kernel_impl,
+        )
+        print(f"[{name}] {n_params / 1e6:.2f}M trainable params, B={B}",
+              flush=True)
+
+        # ---- init(seed) -> all params (trainable then frozen) -----------
+        def init_fn(seed):
+            p = model.init_params(jax.random.PRNGKey(seed))
+            return tuple(p[k] for k in trainable + frozen)
+
+        self._emit(
+            f"{name}__init.hlo.txt", init_fn,
+            (jnp.zeros((), jnp.int32),),
+            dict(model=name, kind="init", strategy=None,
+                 inputs=[dict(name="seed", shape=[], dtype="i32")],
+                 outputs=[dict(name=k, shape=pshapes[k], dtype="f32")
+                          for k in trainable + frozen]),
+        )
+
+        # ---- eval(params..., x, y) -> mean loss --------------------------
+        def eval_fn(*args):
+            p = dict(zip(trainable + frozen, args[: len(trainable) + len(frozen)]))
+            x, y = args[-2], args[-1]
+            taps = [jnp.zeros(s, jnp.float32) for s in model.tap_shapes(B)]
+            losses, _ = model.forward(p, taps, x, y)
+            return (jnp.mean(losses),)
+
+        eval_args = tuple(params0[k] for k in trainable + frozen) + (
+            _spec_of(xs, xd), _spec_of(ys, yd))
+        self._emit(
+            f"{name}__eval.hlo.txt", eval_fn, eval_args,
+            dict(model=name, kind="eval", strategy=None,
+                 inputs=[dict(name=k, shape=pshapes[k], dtype="f32")
+                         for k in trainable + frozen]
+                 + [dict(name="x", shape=list(xs), dtype=_dt(_spec_of(xs, xd))),
+                    dict(name="y", shape=list(ys), dtype=_dt(_spec_of(ys, yd)))],
+                 outputs=[dict(name="loss", shape=[], dtype="f32")]),
+        )
+
+        # ---- step_<strategy> ---------------------------------------------
+        for strategy in spec["strategies"]:
+            self._build_step(name, model, strategy, optimizer, clip_fn, B,
+                             trainable, frozen, pshapes, params0, xs, xd, ys, yd)
+
+        # ---- gradient-accumulation pair: clipgrad_<strategy> + apply ------
+        # clipgrad returns the *clipped gradient sum* (pre-noise) so the
+        # coordinator can accumulate k physical batches into one logical
+        # batch and add noise once — the DP-correct accumulation the
+        # paper's codebase supports (Appendix D.4).
+        for strategy in spec["strategies"]:
+            self._build_clipgrad(name, model, strategy, clip_fn, B, trainable,
+                                 frozen, pshapes, params0, xs, xd, ys, yd)
+        self._build_apply(name, optimizer, trainable, pshapes, params0)
+
+    def _build_step(self, name, model, strategy, optimizer, clip_fn, B,
+                    trainable, frozen, pshapes, params0, xs, xd, ys, yd):
+        step = S.build_step(model, strategy, optimizer, clip_fn)
+        adam = optimizer == "adam"
+        with_noise = strategy != "nondp"
+
+        n_tr, n_fr = len(trainable), len(frozen)
+
+        def flat_step(*args):
+            i = 0
+            p = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+            p.update(zip(frozen, args[i: i + n_fr])); i += n_fr
+            if adam:
+                m = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+                v = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+                opt_state = (m, v)
+            else:
+                opt_state = None
+            x = args[i]; y = args[i + 1]; i += 2
+            if with_noise:
+                noise = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+            else:
+                noise = {k: jnp.zeros(pshapes[k], jnp.float32)
+                         for k in trainable}
+            scal = dict(zip(SCALARS, args[i: i + len(SCALARS)]))
+            new_p, new_opt, metrics = step(p, opt_state, x, y, noise, scal)
+            outs = [new_p[k] for k in trainable]
+            if adam:
+                m2, v2 = new_opt
+                outs += [m2[k] for k in trainable] + [v2[k] for k in trainable]
+            mkeys = S.metric_keys(strategy)
+            assert sorted(metrics) == mkeys, (sorted(metrics), mkeys)
+            outs += [metrics[k] for k in mkeys]
+            # jax.jit prunes arguments that don't appear in the jaxpr (e.g.
+            # the `step` scalar under SGD), which would desync the manifest
+            # signature from the compiled program. Touch every scalar in a
+            # zero-valued metric to pin the full signature.
+            touch = jnp.zeros((), jnp.float32)
+            for s in scal.values():
+                touch = touch + 0.0 * s
+            outs.append(touch)
+            return tuple(outs)
+
+        # probe metric keys with an eval-shaped trace
+        example: List = [params0[k] for k in trainable]
+        inputs = [dict(name=k, shape=pshapes[k], dtype="f32") for k in trainable]
+        example += [params0[k] for k in frozen]
+        inputs += [dict(name=f"frozen:{k}", shape=pshapes[k], dtype="f32")
+                   for k in frozen]
+        if adam:
+            for tag in ("m", "v"):
+                example += [jnp.zeros(pshapes[k], jnp.float32) for k in trainable]
+                inputs += [dict(name=f"{tag}:{k}", shape=pshapes[k], dtype="f32")
+                           for k in trainable]
+        example += [_spec_of(xs, xd), _spec_of(ys, yd)]
+        inputs += [dict(name="x", shape=list(xs), dtype=_dt(_spec_of(xs, xd))),
+                   dict(name="y", shape=list(ys), dtype=_dt(_spec_of(ys, yd)))]
+        if with_noise:
+            example += [_spec_of(pshapes[k], jnp.float32) for k in trainable]
+            inputs += [dict(name=f"noise:{k}", shape=pshapes[k], dtype="f32")
+                       for k in trainable]
+        example += [jnp.zeros((), jnp.float32)] * len(SCALARS)
+        inputs += [dict(name=s, shape=[], dtype="f32") for s in SCALARS]
+
+        mkeys = S.metric_keys(strategy)
+        final_fn = flat_step
+
+        outputs = [dict(name=k, shape=pshapes[k], dtype="f32") for k in trainable]
+        if adam:
+            for tag in ("m", "v"):
+                outputs += [dict(name=f"{tag}:{k}", shape=pshapes[k], dtype="f32")
+                            for k in trainable]
+        outputs += [dict(name=f"metric:{k}", shape=[], dtype="f32")
+                    for k in mkeys]
+        outputs.append(dict(name="metric:zzz_touch", shape=[], dtype="f32"))
+
+        self._emit(
+            f"{name}__step_{strategy}.hlo.txt", final_fn, tuple(example),
+            dict(model=name, kind="step", strategy=strategy, inputs=inputs,
+                 outputs=outputs),
+        )
+
+    def _build_clipgrad(self, name, model, strategy, clip_fn, B, trainable,
+                        frozen, pshapes, params0, xs, xd, ys, yd):
+        n_tr, n_fr = len(trainable), len(frozen)
+
+        def flat_grads(*args):
+            i = 0
+            p = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+            p.update(zip(frozen, args[i: i + n_fr])); i += n_fr
+            x, y, R = args[i], args[i + 1], args[i + 2]
+            if strategy == "nondp":
+                frozen_p = {k: v for k, v in p.items() if k not in trainable}
+
+                def f(tp):
+                    taps = [jnp.zeros(s, jnp.float32)
+                            for s in model.tap_shapes(B)]
+                    losses, _ = model.forward({**frozen_p, **tp}, taps, x, y)
+                    return jnp.sum(losses), losses
+
+                tr = {k: p[k] for k in trainable}
+                (_, losses), grads = jax.value_and_grad(f, has_aux=True)(tr)
+                outs = [grads[k] for k in trainable]
+                # same metric slots as the DP branch: mean_clip, loss,
+                # mean_sq_norm
+                outs += [jnp.ones((), jnp.float32), jnp.mean(losses),
+                         jnp.zeros((), jnp.float32)]
+                outs.append(0.0 * R)
+                return tuple(outs)
+            gf = S.build_grad_fn(model, strategy, clip_fn)
+            grads, sq_norms, C, losses = gf(p, x, y, R)
+            outs = [grads[k] for k in trainable]
+            outs += [jnp.mean(C), jnp.mean(losses), jnp.mean(sq_norms)]
+            outs.append(0.0 * R)
+            return tuple(outs)
+
+        example = [params0[k] for k in trainable]
+        inputs = [dict(name=k, shape=pshapes[k], dtype="f32") for k in trainable]
+        example += [params0[k] for k in frozen]
+        inputs += [dict(name=f"frozen:{k}", shape=pshapes[k], dtype="f32")
+                   for k in frozen]
+        example += [_spec_of(xs, xd), _spec_of(ys, yd),
+                    jnp.zeros((), jnp.float32)]
+        inputs += [dict(name="x", shape=list(xs), dtype=_dt(_spec_of(xs, xd))),
+                   dict(name="y", shape=list(ys), dtype=_dt(_spec_of(ys, yd))),
+                   dict(name="clip", shape=[], dtype="f32")]
+        outputs = [dict(name=f"grad:{k}", shape=pshapes[k], dtype="f32")
+                   for k in trainable]
+        outputs += [dict(name="metric:mean_clip", shape=[], dtype="f32"),
+                    dict(name="metric:loss", shape=[], dtype="f32"),
+                    dict(name="metric:mean_sq_norm", shape=[], dtype="f32"),
+                    dict(name="metric:zzz_touch", shape=[], dtype="f32")]
+        self._emit(
+            f"{name}__clipgrad_{strategy}.hlo.txt", flat_grads, tuple(example),
+            dict(model=name, kind="clipgrad", strategy=strategy,
+                 inputs=inputs, outputs=outputs),
+        )
+
+    def _build_apply(self, name, optimizer, trainable, pshapes, params0):
+        adam = optimizer == "adam"
+        n_tr = len(trainable)
+
+        def flat_apply(*args):
+            i = 0
+            p = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+            if adam:
+                m = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+                v = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+            g = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+            noise = dict(zip(trainable, args[i: i + n_tr])); i += n_tr
+            lr, sigma_r, batch, stepno = args[i: i + 4]
+            if adam:
+                new_p, m2, v2 = S.apply_adam(p, m, v, g, noise, trainable, lr,
+                                             sigma_r, batch, stepno)
+                outs = [new_p[k] for k in trainable]
+                outs += [m2[k] for k in trainable] + [v2[k] for k in trainable]
+            else:
+                new_p = S.apply_sgd(p, g, noise, trainable, lr, sigma_r, batch)
+                outs = [new_p[k] for k in trainable]
+            touch = 0.0 * (lr + sigma_r + batch + stepno)
+            outs.append(touch)
+            return tuple(outs)
+
+        example = [params0[k] for k in trainable]
+        inputs = [dict(name=k, shape=pshapes[k], dtype="f32") for k in trainable]
+        if adam:
+            for tag in ("m", "v"):
+                example += [jnp.zeros(pshapes[k], jnp.float32) for k in trainable]
+                inputs += [dict(name=f"{tag}:{k}", shape=pshapes[k], dtype="f32")
+                           for k in trainable]
+        for tag in ("grad", "noise"):
+            example += [_spec_of(pshapes[k], jnp.float32) for k in trainable]
+            inputs += [dict(name=f"{tag}:{k}", shape=pshapes[k], dtype="f32")
+                       for k in trainable]
+        example += [jnp.zeros((), jnp.float32)] * 4
+        inputs += [dict(name=s, shape=[], dtype="f32")
+                   for s in ("lr", "sigma_r", "batch", "step")]
+        outputs = [dict(name=k, shape=pshapes[k], dtype="f32") for k in trainable]
+        if adam:
+            for tag in ("m", "v"):
+                outputs += [dict(name=f"{tag}:{k}", shape=pshapes[k], dtype="f32")
+                            for k in trainable]
+        outputs.append(dict(name="metric:zzz_touch", shape=[], dtype="f32"))
+        self._emit(
+            f"{name}__apply.hlo.txt", flat_apply, tuple(example),
+            dict(model=name, kind="apply", strategy=None, inputs=inputs,
+                 outputs=outputs),
+        )
+
+    def write_manifest(self, source_hash: str):
+        manifest = dict(version=1, source_hash=source_hash,
+                        kernel_impl=self.kernel_impl, models=self.models,
+                        artifacts=self.artifacts)
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.artifacts)} artifacts")
+
+
+def source_hash() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _dirs, files in os.walk(base):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--filter", default=None)
+    ap.add_argument("--kernel-impl", default=os.environ.get(
+        "FASTDP_KERNEL_IMPL", "jnp"), choices=["jnp", "pallas"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    K.set_impl(args.kernel_impl)
+    shash = source_hash() + ":" + args.kernel_impl
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if not args.force and not args.filter and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        if old.get("source_hash") == shash and all(
+            os.path.exists(os.path.join(args.out_dir, a["file"]))
+            for a in old.get("artifacts", [])
+        ):
+            print("artifacts up to date (source hash match); skipping")
+            return
+
+    b = ArtifactBuilder(args.out_dir, args.kernel_impl)
+    t0 = time.time()
+    for spec in default_specs():
+        b.build_spec(spec, args.filter)
+    b.write_manifest(shash)
+    print(f"total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Layer-1 kernels with a jnp/pallas dispatch switch.
+
+Every op exists twice: a Pallas kernel (interpret=True) and a pure-jnp
+oracle in ref.py. `set_impl("pallas"|"jnp")` (or FASTDP_KERNEL_IMPL)
+selects which one the Layer-2 model traces into its HLO artifact. The
+pytest suite asserts the two implementations agree to float tolerance,
+which is what makes the jnp lowering a valid stand-in on the wall-clock
+benches (interpret-mode Pallas is CPU-numpy-speed and would distort
+timing shape).
+"""
+
+from __future__ import annotations
+
+import os
+
+from . import ref
+from .clipped_sum import bias_clipped_sum, clipped_sum
+from .dp_update import dp_adam_update, dp_sgd_update
+from .ghost_norm import embedding_ghost_norm, ghost_norm, ghost_norm_t1
+from .per_sample_grad import per_sample_grad, per_sample_grad_norm
+
+_IMPL = os.environ.get("FASTDP_KERNEL_IMPL", "jnp")
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("jnp", "pallas"), impl
+    _IMPL = impl
+
+
+def get_impl() -> str:
+    return _IMPL
+
+
+def op_ghost_norm(a, g):
+    if _IMPL == "pallas":
+        return ghost_norm(a, g)
+    return ref.ghost_norm_ref(a, g)
+
+
+def op_ghost_norm_t1(a, g):
+    if _IMPL == "pallas":
+        return ghost_norm_t1(a, g)
+    return ref.ghost_norm_t1_ref(a, g)
+
+
+def op_embedding_ghost_norm(tokens, g):
+    if _IMPL == "pallas":
+        return embedding_ghost_norm(tokens, g)
+    return ref.embedding_ghost_norm_ref(tokens, g)
+
+
+def op_per_sample_grad(a, g):
+    if _IMPL == "pallas":
+        return per_sample_grad(a, g)
+    psg = ref.per_sample_grad_ref(a, g)
+    import jax.numpy as jnp
+
+    return psg, jnp.sum(jnp.square(psg), axis=(1, 2))
+
+
+def op_per_sample_grad_norm(a, g):
+    if _IMPL == "pallas":
+        return per_sample_grad_norm(a, g)
+    return ref.per_sample_grad_norm_ref(a, g)
+
+
+def op_clipped_sum(a, g, c):
+    if _IMPL == "pallas":
+        return clipped_sum(a, g, c)
+    return ref.clipped_sum_ref(a, g, c)
+
+
+def op_bias_clipped_sum(g, c):
+    if _IMPL == "pallas":
+        return bias_clipped_sum(g, c)
+    return ref.bias_clipped_sum_ref(g, c)
+
+
+__all__ = [
+    "ref",
+    "set_impl",
+    "get_impl",
+    "ghost_norm",
+    "ghost_norm_t1",
+    "embedding_ghost_norm",
+    "per_sample_grad",
+    "per_sample_grad_norm",
+    "clipped_sum",
+    "bias_clipped_sum",
+    "dp_sgd_update",
+    "dp_adam_update",
+    "op_ghost_norm",
+    "op_ghost_norm_t1",
+    "op_embedding_ghost_norm",
+    "op_per_sample_grad",
+    "op_per_sample_grad_norm",
+    "op_clipped_sum",
+    "op_bias_clipped_sum",
+]

@@ -1,0 +1,78 @@
+"""Pallas clipped-weighted-sum kernel (Layer 1).
+
+G = a^T diag(c) g = sum_i c_i a_i^T g_i — the book-keeping replacement
+for GhostClip's second back-propagation (paper Algorithm 1 line 9).
+
+TPU mapping: sequential grid over B accumulating a [d, p] tile resident
+in VMEM; each step streams one sample's [T, d]/[T, p] slabs from HBM and
+issues one MXU matmul. Revisiting the same output block across grid steps
+is the canonical Pallas accumulation pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _clipped_sum_kernel(a_ref, g_ref, c_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[0]  # (T, d)
+    g = g_ref[0]  # (T, p)
+    c = c_ref[0]  # scalar clip factor for this sample
+    out_ref[...] += c * jnp.dot(a.T, g, preferred_element_type=jnp.float32)
+
+
+def clipped_sum(a: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Sum of clipped per-sample gradients for one generalized linear layer.
+
+    a: (B, T, d), g: (B, T, p), c: (B,). Returns (d, p) float32.
+    """
+    B, T, d = a.shape
+    p = g.shape[2]
+    return pl.pallas_call(
+        _clipped_sum_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, p), jnp.float32),
+        interpret=True,
+    )(a, g, c)
+
+
+def _bias_clipped_sum_kernel(g_ref, c_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[0]  # (T, p)
+    c = c_ref[0]
+    out_ref[...] += c * jnp.sum(g, axis=0)
+
+
+def bias_clipped_sum(g: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Clipped bias gradient: sum_i c_i sum_t g_{i,t}. Returns (p,)."""
+    B, T, p = g.shape
+    return pl.pallas_call(
+        _bias_clipped_sum_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((p,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(g, c)

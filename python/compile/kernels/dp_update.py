@@ -1,0 +1,96 @@
+"""Pallas fused DP optimizer-update kernels (Layer 1).
+
+Fuses noise addition (Eq. 1) with the parameter update so the private
+gradient is never materialized separately. Elementwise over a flat
+parameter vector, tiled in VMEM-sized blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _pad_to(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = x.shape[0]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    return jnp.pad(x, (0, rem))
+
+
+def _sgd_kernel(w_ref, g_ref, n_ref, scal_ref, out_ref):
+    # scal_ref: (3,) = [lr, sigma_r, batch]
+    lr = scal_ref[0]
+    sigma_r = scal_ref[1]
+    batch = scal_ref[2]
+    out_ref[...] = w_ref[...] - lr * (g_ref[...] + sigma_r * n_ref[...]) / batch
+
+
+def dp_sgd_update(w, g_clipped, noise, lr, sigma_r, batch):
+    """w' = w - lr * (G + sigma*R*noise)/B on a flat (M,) tensor."""
+    (m,) = w.shape
+    wp = _pad_to(w, BLOCK)
+    gp = _pad_to(g_clipped, BLOCK)
+    np_ = _pad_to(noise, BLOCK)
+    scal = jnp.stack(
+        [jnp.asarray(lr, jnp.float32), jnp.asarray(sigma_r, jnp.float32),
+         jnp.asarray(batch, jnp.float32)]
+    )
+    mp = wp.shape[0]
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(mp // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        interpret=True,
+    )(wp, gp, np_, scal)
+    return out[:m]
+
+
+def _adam_kernel(w_ref, m_ref, v_ref, g_ref, n_ref, scal_ref,
+                 wo_ref, mo_ref, vo_ref):
+    # scal_ref: (7,) = [lr, sigma_r, batch, beta1, beta2, eps, step]
+    lr, sigma_r, batch = scal_ref[0], scal_ref[1], scal_ref[2]
+    beta1, beta2, eps, step = scal_ref[3], scal_ref[4], scal_ref[5], scal_ref[6]
+    ghat = (g_ref[...] + sigma_r * n_ref[...]) / batch
+    m2 = beta1 * m_ref[...] + (1.0 - beta1) * ghat
+    v2 = beta2 * v_ref[...] + (1.0 - beta2) * ghat * ghat
+    mhat = m2 / (1.0 - beta1**step)
+    vhat = v2 / (1.0 - beta2**step)
+    wo_ref[...] = w_ref[...] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    mo_ref[...] = m2
+    vo_ref[...] = v2
+
+
+def dp_adam_update(w, m, v, g_clipped, noise, lr, sigma_r, batch, step,
+                   beta1=0.9, beta2=0.999, eps=1e-8):
+    """Fused private Adam step on flat (M,) tensors; returns (w', m', v')."""
+    (n,) = w.shape
+    pads = [_pad_to(t, BLOCK) for t in (w, m, v, g_clipped, noise)]
+    scal = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(sigma_r, jnp.float32),
+        jnp.asarray(batch, jnp.float32), jnp.asarray(beta1, jnp.float32),
+        jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(step, jnp.float32),
+    ])
+    mp = pads[0].shape[0]
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    outs = pl.pallas_call(
+        _adam_kernel,
+        grid=(mp // BLOCK,),
+        in_specs=[spec, spec, spec, spec, spec, pl.BlockSpec((7,), lambda i: (0,))],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((mp,), jnp.float32)] * 3,
+        interpret=True,
+    )(*pads, scal)
+    return tuple(o[:n] for o in outs)

@@ -1,0 +1,118 @@
+"""Pallas ghost-norm kernel (Layer 1).
+
+Computes per-sample squared gradient norms ||dL_i/dW||_F^2 from the
+book-kept pair (a, dL/ds) without instantiating per-sample gradients —
+paper Eq. (2), module (3) of Table 3.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid step per sample;
+the [T, d] activation slab and [T, p] output-grad slab stream HBM->VMEM,
+the two T x T Gram matrices are MXU matmuls, and only a scalar leaves the
+kernel. The VMEM working set is T(d+p) + 2T^2 floats, which is exactly
+the quantity the layerwise 2T^2 < pd decision (Section 3.2) controls.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ghost_norm_kernel(a_ref, g_ref, out_ref):
+    # Blocks: a_ref (1, T, d), g_ref (1, T, p), out_ref (1,)
+    a = a_ref[0]  # (T, d)
+    g = g_ref[0]  # (T, p)
+    # Two Gram matmuls — MXU work on real hardware.
+    gram_a = jnp.dot(a, a.T, preferred_element_type=jnp.float32)  # (T, T)
+    gram_g = jnp.dot(g, g.T, preferred_element_type=jnp.float32)  # (T, T)
+    out_ref[0] = jnp.sum(gram_a * gram_g)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ghost_norm(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample squared grad norms via the ghost norm trick.
+
+    a: (B, T, d) activations; g: (B, T, p) output gradients. Returns (B,)
+    float32 squared norms.
+    """
+    assert a.ndim == 3 and g.ndim == 3 and a.shape[:2] == g.shape[:2], (
+        a.shape,
+        g.shape,
+    )
+    B, T, d = a.shape
+    p = g.shape[2]
+    return pl.pallas_call(
+        _ghost_norm_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=True,
+    )(a, g)
+
+
+def _ghost_norm_t1_kernel(a_ref, g_ref, out_ref):
+    # T == 1 fast path: norms factorize, no Gram matrices at all.
+    a = a_ref[0]  # (1, d)
+    g = g_ref[0]  # (1, p)
+    out_ref[0] = jnp.sum(a * a) * jnp.sum(g * g)
+
+
+def ghost_norm_t1(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """T==1 specialization: ||a_i||^2 ||g_i||^2 (O(B(p+d)) time)."""
+    if a.ndim == 2:
+        a = a[:, None, :]
+    if g.ndim == 2:
+        g = g[:, None, :]
+    B, T, d = a.shape
+    assert T == 1, f"ghost_norm_t1 requires T==1, got T={T}"
+    p = g.shape[2]
+    return pl.pallas_call(
+        _ghost_norm_t1_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=True,
+    )(a, g)
+
+
+def _embedding_ghost_norm_kernel(tok_ref, g_ref, out_ref):
+    # Blocks: tok_ref (1, T) int32, g_ref (1, T, p), out_ref (1,)
+    tok = tok_ref[0]  # (T,)
+    g = g_ref[0]  # (T, p)
+    same = (tok[:, None] == tok[None, :]).astype(jnp.float32)  # (T, T)
+    gram_g = jnp.dot(g, g.T, preferred_element_type=jnp.float32)
+    out_ref[0] = jnp.sum(same * gram_g)
+
+
+def embedding_ghost_norm(tokens: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Ghost norm for embedding layers: the one-hot Gram matrix is the
+    token-equality mask, so no d-sized work appears at all.
+
+    tokens: (B, T) integer ids; g: (B, T, p). Returns (B,).
+    """
+    B, T = tokens.shape
+    p = g.shape[2]
+    return pl.pallas_call(
+        _embedding_ghost_norm_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda i: (i, 0)),
+            pl.BlockSpec((1, T, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=True,
+    )(tokens.astype(jnp.int32), g)

@@ -1,0 +1,76 @@
+"""Pallas per-sample-gradient instantiation kernel (Layer 1).
+
+Module (4) of the paper's Table 3: dL_i/dW = a_i^T g_i for every sample.
+This is the *non-ghost* norm route used by Opacus/FastGradClip and by the
+hybrid BK algorithms on layers where 2T^2 >= pd (Section 3.2) — there the
+[d, p] per-sample intermediate is smaller than the [T, T] Gram pair.
+
+TPU mapping: grid over B; each step one MXU matmul producing a [d, p]
+VMEM tile, reduced to a squared norm on-chip; optionally the gradient
+itself is written back to HBM (Opacus semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _psg_kernel(a_ref, g_ref, psg_ref, norm_ref):
+    a = a_ref[0]  # (T, d)
+    g = g_ref[0]  # (T, p)
+    psg = jnp.dot(a.T, g, preferred_element_type=jnp.float32)  # (d, p)
+    psg_ref[0] = psg
+    norm_ref[0] = jnp.sum(psg * psg)
+
+
+def per_sample_grad(a: jnp.ndarray, g: jnp.ndarray):
+    """Instantiate per-sample gradients and their squared norms.
+
+    a: (B, T, d), g: (B, T, p). Returns (psg (B, d, p), sq_norms (B,)).
+    """
+    B, T, d = a.shape
+    p = g.shape[2]
+    return pl.pallas_call(
+        _psg_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, d, p), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, g)
+
+
+def _psg_norm_kernel(a_ref, g_ref, norm_ref):
+    a = a_ref[0]
+    g = g_ref[0]
+    psg = jnp.dot(a.T, g, preferred_element_type=jnp.float32)
+    norm_ref[0] = jnp.sum(psg * psg)
+
+
+def per_sample_grad_norm(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Squared norms via instantiation WITHOUT storing the gradients —
+    FastGradClip semantics (the [d, p] tile never leaves VMEM). (B,)."""
+    B, T, d = a.shape
+    p = g.shape[2]
+    return pl.pallas_call(
+        _psg_norm_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=True,
+    )(a, g)

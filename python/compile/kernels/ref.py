@@ -1,0 +1,157 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package is
+checked against its oracle under pytest (exact shapes) and hypothesis
+(randomized shape/dtype sweeps).
+
+Shape conventions (paper notation, Table 3):
+  B — batch size, T — feature dimension (sequence length / H*W; 1 for
+  non-sequential data), d — layer input width, p — layer output width.
+
+  a : (B, T, d)   activation tensor (layer input)
+  g : (B, T, p)   output gradient dL/ds for the summed loss L = sum_i L_i
+  c : (B,)        per-sample clipping factors C_i
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ghost_norm_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample squared Frobenius norm of dL_i/dW without the gradient.
+
+    Paper Eq. (2):  ||dL_i/dW||_F^2 = vec(g_i g_i^T) . vec(a_i a_i^T)
+                                    = sum_{t,s} (g_t . g_s)(a_t . a_s).
+
+    Time 2BT^2(p+d), space 2BT^2 (module 3 in Table 3).
+    Returns (B,) squared norms.
+    """
+    gram_a = jnp.einsum("btd,bsd->bts", a, a)
+    gram_g = jnp.einsum("btp,bsp->bts", g, g)
+    return jnp.sum(gram_a * gram_g, axis=(1, 2))
+
+
+def ghost_norm_t1_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """T == 1 fast path: the Gram matrices are scalars, so the squared
+    norm factorizes to ||a_i||^2 * ||g_i||^2 (O(B(p+d)) time, O(B) space).
+
+    a: (B, 1, d), g: (B, 1, p) (or 2-D (B, d)/(B, p)).
+    """
+    a2 = jnp.sum(jnp.square(a.reshape(a.shape[0], -1)), axis=1)
+    g2 = jnp.sum(jnp.square(g.reshape(g.shape[0], -1)), axis=1)
+    return a2 * g2
+
+
+def embedding_ghost_norm_ref(tokens: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Ghost norm for an embedding layer (Li et al. 2021).
+
+    The one-hot activation a_i has Gram matrix
+    (a_i a_i^T)_{ts} = 1[token_t == token_s], so
+      ||dL_i/dW||_F^2 = sum_{t,s} 1[tok_t == tok_s] (g_t . g_s).
+
+    tokens: (B, T) int32, g: (B, T, p). Returns (B,).
+    """
+    same = (tokens[:, :, None] == tokens[:, None, :]).astype(g.dtype)
+    gram_g = jnp.einsum("btp,bsp->bts", g, g)
+    return jnp.sum(same * gram_g, axis=(1, 2))
+
+
+def per_sample_grad_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Module 4: instantiate per-sample gradients dL_i/dW = a_i^T g_i.
+
+    Time 2BTpd, space Bpd. Returns (B, d, p).
+    """
+    return jnp.einsum("btd,btp->bdp", a, g)
+
+
+def per_sample_grad_norm_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample squared norms via instantiation (the non-ghost route).
+
+    Must agree with ghost_norm_ref to float tolerance — that agreement is
+    the heart of the ghost-norm trick.
+    """
+    psg = per_sample_grad_ref(a, g)
+    return jnp.sum(jnp.square(psg), axis=(1, 2))
+
+
+def clipped_sum_ref(a: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Book-keeping weighted sum: G = a^T diag(c) g = sum_i c_i a_i^T g_i.
+
+    One tensor contraction (2BTpd time, pd space) — the replacement for
+    GhostClip's entire second back-propagation. Returns (d, p).
+    """
+    return jnp.einsum("btd,b,btp->dp", a, c, g)
+
+
+def bias_ghost_norm_ref(g: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample squared grad norm for a bias term: dL_i/db = sum_t g_t.
+
+    Returns (B,).
+    """
+    gb = jnp.sum(g, axis=1)  # (B, p)
+    return jnp.sum(jnp.square(gb), axis=1)
+
+
+def bias_clipped_sum_ref(g: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Clipped bias gradient sum: sum_i c_i sum_t g_{i,t}. Returns (p,)."""
+    return jnp.einsum("btp,b->p", g, c)
+
+
+def clip_factor_abadi_ref(sq_norms: jnp.ndarray, R: jnp.ndarray) -> jnp.ndarray:
+    """Abadi et al. (2016) clipping: C_i = min(R / ||g_i||, 1)."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    return jnp.minimum(R / jnp.maximum(norms, 1e-12), 1.0)
+
+
+def clip_factor_automatic_ref(
+    sq_norms: jnp.ndarray, R: jnp.ndarray, gamma: float = 0.01
+) -> jnp.ndarray:
+    """Bu et al. (2022b) automatic clipping: C_i = R / (||g_i|| + gamma)."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    return R / (norms + gamma)
+
+
+def clip_factor_flat_ref(sq_norms: jnp.ndarray, R: jnp.ndarray) -> jnp.ndarray:
+    """Bu et al. (2021b) flat clipping: C_i = 1[||g_i|| <= R]."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    return (norms <= R).astype(sq_norms.dtype)
+
+
+def dp_sgd_update_ref(
+    w: jnp.ndarray,
+    g_clipped: jnp.ndarray,
+    noise: jnp.ndarray,
+    lr: jnp.ndarray,
+    sigma_r: jnp.ndarray,
+    batch: jnp.ndarray,
+) -> jnp.ndarray:
+    """Private SGD step on one tensor (Eq. 1):
+
+    w' = w - lr * (G_clipped + sigma*R * noise) / B
+    """
+    return w - lr * (g_clipped + sigma_r * noise) / batch
+
+
+def dp_adam_update_ref(
+    w: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    g_clipped: jnp.ndarray,
+    noise: jnp.ndarray,
+    lr: jnp.ndarray,
+    sigma_r: jnp.ndarray,
+    batch: jnp.ndarray,
+    step: jnp.ndarray,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """Private Adam step on one tensor; returns (w', m', v')."""
+    ghat = (g_clipped + sigma_r * noise) / batch
+    m2 = beta1 * m + (1.0 - beta1) * ghat
+    v2 = beta2 * v + (1.0 - beta2) * jnp.square(ghat)
+    mhat = m2 / (1.0 - beta1**step)
+    vhat = v2 / (1.0 - beta2**step)
+    w2 = w - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return w2, m2, v2

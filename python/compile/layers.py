@@ -1,0 +1,278 @@
+"""Layer-2 building blocks with book-keeping taps.
+
+Every generalized linear layer output gets an additive zero "tap"
+`z` (s = aW + b + z). Differentiating the summed loss w.r.t. the taps —
+and *only* the taps — yields exactly the output gradients dL/ds_(l) in a
+single back-propagation in which XLA never forms the parameter gradients
+a^T dL/ds. This is the JAX analogue of the paper's ghost differentiation
+trick + PyTorch backward hooks (Appendix D.2): the tap plays the role of
+the hook, and leaving parameters out of the diff set plays the role of
+`requires_grad=False` (no origin-parameter work-around is needed because
+JAX differentiates w.r.t. explicit arguments, not graph leaves).
+
+Each block returns (output, cache) where the cache records what the DP
+strategies need: the activation tensor (or tokens / normalized input),
+the tap index, the layer kind and its (T, d, p) dims.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Cache = Dict[str, Any]
+
+
+def linear(
+    params: Dict[str, jnp.ndarray],
+    taps: List[jnp.ndarray],
+    caches: List[Cache],
+    tap_idx: int,
+    name: str,
+    a: jnp.ndarray,
+) -> jnp.ndarray:
+    """Generalized linear layer s = a W (+ b) + z with book-keeping.
+
+    `a` is (B, T, d) or (B, d) (treated as T == 1).
+    """
+    squeeze = a.ndim == 2
+    a3 = a[:, None, :] if squeeze else a
+    w = params[f"{name}.weight"]  # (d, p)
+    s = jnp.einsum("btd,dp->btp", a3, w)
+    bias_name = f"{name}.bias" if f"{name}.bias" in params else None
+    if bias_name:
+        s = s + params[bias_name]
+    s = s + taps[tap_idx]
+    caches.append(
+        dict(
+            kind="linear",
+            name=name,
+            tap=tap_idx,
+            a=a3,
+            T=a3.shape[1],
+            d=a3.shape[2],
+            p=w.shape[1],
+            weight=f"{name}.weight",
+            bias=bias_name,
+        )
+    )
+    return s[:, 0, :] if squeeze else s
+
+
+def embedding(
+    params: Dict[str, jnp.ndarray],
+    taps: List[jnp.ndarray],
+    caches: List[Cache],
+    tap_idx: int,
+    name: str,
+    tokens: jnp.ndarray,
+) -> jnp.ndarray:
+    """Token embedding lookup with book-keeping tap.
+
+    tokens: (B, T) int32. The activation "tensor" is the one-hot matrix,
+    recorded as the raw tokens (the ghost norm uses the equality Gram).
+    """
+    w = params[f"{name}.weight"]  # (V, p)
+    s = jnp.take(w, tokens, axis=0) + taps[tap_idx]
+    caches.append(
+        dict(
+            kind="embedding",
+            name=name,
+            tap=tap_idx,
+            tokens=tokens,
+            T=tokens.shape[1],
+            d=w.shape[0],
+            p=w.shape[1],
+            weight=f"{name}.weight",
+            bias=None,
+        )
+    )
+    return s
+
+
+def position_bias(
+    params: Dict[str, jnp.ndarray],
+    taps: List[jnp.ndarray],
+    caches: List[Cache],
+    tap_idx: int,
+    name: str,
+    x: jnp.ndarray,
+) -> jnp.ndarray:
+    """Learned positional embedding s = x + P + z.
+
+    dL_i/dP = g_i directly (bias-like parameter with a T axis), so the
+    per-sample norm/clipped-sum need no activation at all.
+    """
+    p = params[f"{name}.weight"]  # (T, dm)
+    s = x + p[None, :, :] + taps[tap_idx]
+    caches.append(
+        dict(
+            kind="posbias",
+            name=name,
+            tap=tap_idx,
+            T=x.shape[1],
+            d=1,
+            p=x.shape[2],
+            weight=f"{name}.weight",
+            bias=None,
+        )
+    )
+    return s
+
+
+def layernorm(
+    params: Dict[str, jnp.ndarray],
+    taps: List[jnp.ndarray],
+    caches: List[Cache],
+    tap_idx: int,
+    name: str,
+    x: jnp.ndarray,
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """LayerNorm with book-keeping tap after the affine transform.
+
+    Norm layers are not generalized-linear; the paper instantiates their
+    (tiny: 2p parameters) per-sample gradients directly:
+      dL_i/dgamma = sum_t g_t * xhat_t,   dL_i/dbeta = sum_t g_t.
+    The cache stores xhat for exactly that.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * lax.rsqrt(var + eps)
+    s = xhat * params[f"{name}.gamma"] + params[f"{name}.beta"] + taps[tap_idx]
+    caches.append(
+        dict(
+            kind="layernorm",
+            name=name,
+            tap=tap_idx,
+            xhat=xhat,
+            T=x.shape[1] if x.ndim == 3 else 1,
+            d=x.shape[-1],
+            p=x.shape[-1],
+            gamma=f"{name}.gamma",
+            beta=f"{name}.beta",
+        )
+    )
+    return s
+
+
+def conv2d(
+    params: Dict[str, jnp.ndarray],
+    taps: List[jnp.ndarray],
+    caches: List[Cache],
+    tap_idx: int,
+    name: str,
+    x: jnp.ndarray,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jnp.ndarray:
+    """2-D convolution implemented as its im2col generalized-linear form.
+
+    x: (B, H, W, Cin). Weight (kh*kw*Cin, Cout). Extracting patches makes
+    the conv literally s = a W with a (B, T=H'*W', d=kh*kw*Cin) — the
+    exact reduction (Bu et al. 2022a) that lets ghost norm / per-sample
+    instantiation treat convs like linears. Returns (B, H', W', Cout) and
+    records the patch tensor as the activation.
+    """
+    w = params[f"{name}.weight"]  # (kh*kw*cin, cout)
+    kh = kw = int(round((w.shape[0] // x.shape[3]) ** 0.5))
+    cin, cout = x.shape[3], w.shape[1]
+    # (B, C*kh*kw, H', W') with feature dim ordered (cin, kh, kw)
+    patches = lax.conv_general_dilated_patches(
+        jnp.transpose(x, (0, 3, 1, 2)),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+    )
+    B, feat, Hp, Wp = patches.shape
+    a = jnp.transpose(patches.reshape(B, feat, Hp * Wp), (0, 2, 1))  # (B,T,d)
+    s = jnp.einsum("btd,dp->btp", a, w)
+    bias_name = f"{name}.bias" if f"{name}.bias" in params else None
+    if bias_name:
+        s = s + params[bias_name]
+    s = s + taps[tap_idx]
+    caches.append(
+        dict(
+            kind="conv2d",
+            name=name,
+            tap=tap_idx,
+            a=a,
+            T=Hp * Wp,
+            d=feat,
+            p=cout,
+            weight=f"{name}.weight",
+            bias=bias_name,
+        )
+    )
+    return s.reshape(B, Hp, Wp, cout)
+
+
+def lora_linear(
+    params: Dict[str, jnp.ndarray],
+    taps: List[jnp.ndarray],
+    caches: List[Cache],
+    tap_idx: int,
+    name: str,
+    a: jnp.ndarray,
+    scale: float = 1.0,
+) -> int:
+    """LoRA branch u = aL, v = uR added to a frozen base weight (§E.2).
+
+    Consumes TWO taps (tap_idx, tap_idx+1): one per sub-module, so BK
+    treats L (d x r) and R (r x p) as two generalized linear layers.
+    Returns (output, next_tap_idx).
+    """
+    squeeze = a.ndim == 2
+    a3 = a[:, None, :] if squeeze else a
+    w = params[f"{name}.weight"]  # frozen (d, p)
+    l = params[f"{name}.lora_a"]  # (d, r)
+    r = params[f"{name}.lora_b"]  # (r, p)
+    u = jnp.einsum("btd,dr->btr", a3, l) + taps[tap_idx]
+    caches.append(
+        dict(
+            kind="linear",
+            name=f"{name}.lora_a",
+            tap=tap_idx,
+            a=a3,
+            T=a3.shape[1],
+            d=a3.shape[2],
+            p=l.shape[1],
+            weight=f"{name}.lora_a",
+            bias=None,
+        )
+    )
+    v = jnp.einsum("btr,rp->btp", u, r) + taps[tap_idx + 1]
+    caches.append(
+        dict(
+            kind="linear",
+            name=f"{name}.lora_b",
+            tap=tap_idx + 1,
+            a=u,
+            T=u.shape[1],
+            d=u.shape[2],
+            p=r.shape[1],
+            weight=f"{name}.lora_b",
+            bias=None,
+        )
+    )
+    s = jnp.einsum("btd,dp->btp", a3, w) + scale * v
+    bias_name = f"{name}.bias" if f"{name}.bias" in params else None
+    if bias_name:
+        s = s + params[bias_name]
+    return (s[:, 0, :] if squeeze else s), tap_idx + 2
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample CE. logits (B, K) or (B, T, K); labels int (B,)/(B, T).
+
+    For sequences, the per-sample loss is the mean over positions.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - picked
+    if ce.ndim == 2:
+        ce = jnp.mean(ce, axis=1)
+    return ce

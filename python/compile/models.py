@@ -1,0 +1,402 @@
+"""Layer-2 models: MLP, GPT-mini transformer, small CNN.
+
+Each model exposes the book-keeping interface the DP strategies consume:
+
+  init_params(key)            -> dict[name -> array]
+  param_names()               -> ordered list (the AOT interchange order)
+  tap_shapes(B)               -> list of tap shapes (zeros at runtime)
+  forward(params, taps, x, y) -> (per_sample_losses (B,), caches)
+  data_spec(B)                -> ((x_shape, x_dtype), (y_shape, y_dtype))
+  layer_meta()                -> per-layer dicts (kind, T, d, p) for the
+                                 Rust complexity engine cross-check
+
+The forward is written so that a single jax.grad w.r.t. the taps performs
+one back-propagation that computes only output gradients (ghost
+differentiation); see layers.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+class MLP:
+    """Plain MLP classifier over flattened vectors (T = 1 regime).
+
+    Matches the paper's Figure 2 / Figure 9 workload: CIFAR images
+    flattened into vectors, depth x width sweeps.
+    """
+
+    def __init__(self, d_in=3072, width=512, depth=4, n_classes=10, name="mlp"):
+        self.d_in, self.width, self.depth, self.n_classes = d_in, width, depth, n_classes
+        self.name = name
+        self.dims = (
+            [(d_in, width)] + [(width, width)] * (depth - 2) + [(width, n_classes)]
+        )
+
+    def param_names(self) -> List[str]:
+        out = []
+        for i in range(len(self.dims)):
+            out += [f"fc{i}.weight", f"fc{i}.bias"]
+        return out
+
+    def init_params(self, key) -> Dict[str, jnp.ndarray]:
+        params = {}
+        for i, (d, p) in enumerate(self.dims):
+            key, k1 = jax.random.split(key)
+            params[f"fc{i}.weight"] = _glorot(k1, (d, p))
+            params[f"fc{i}.bias"] = jnp.zeros((p,), jnp.float32)
+        return params
+
+    def tap_shapes(self, B: int) -> List[Tuple[int, ...]]:
+        return [(B, 1, p) for (_, p) in self.dims]
+
+    def data_spec(self, B: int):
+        return ((B, self.d_in), jnp.float32), ((B,), jnp.int32)
+
+    def forward(self, params, taps, x, y):
+        caches: List[dict] = []
+        a = x
+        for i in range(len(self.dims)):
+            s = L.linear(params, taps, caches, i, f"fc{i}", a)
+            a = jax.nn.relu(s) if i < len(self.dims) - 1 else s
+        losses = L.softmax_cross_entropy(a, y)
+        return losses, caches
+
+    def layer_meta(self):
+        return [
+            dict(kind="linear", name=f"fc{i}", T=1, d=d, p=p)
+            for i, (d, p) in enumerate(self.dims)
+        ]
+
+
+class GPTMini:
+    """Decoder-only transformer (causal LM) — the paper's GPT2/RoBERTa
+    regime where T^2 << pd and ghost norm wins everywhere.
+
+    Full-size GPT2 cannot execute on this single-core CPU testbed; the
+    architecture is identical and every dimension is configurable (the
+    complexity engine carries the true GPT2 dims — see DESIGN.md
+    substitutions).
+    """
+
+    def __init__(self, vocab=512, d_model=128, n_layer=2, n_head=4, seq=64,
+                 name="gpt"):
+        assert d_model % n_head == 0
+        self.vocab, self.dm, self.nl, self.nh, self.T = (
+            vocab, d_model, n_layer, n_head, seq)
+        self.name = name
+
+    def param_names(self) -> List[str]:
+        names = ["tok_emb.weight", "pos_emb.weight"]
+        for i in range(self.nl):
+            pre = f"h{i}."
+            names += [pre + "ln1.gamma", pre + "ln1.beta"]
+            for nm in ("attn_q", "attn_k", "attn_v", "attn_o"):
+                names += [pre + nm + ".weight", pre + nm + ".bias"]
+            names += [pre + "ln2.gamma", pre + "ln2.beta"]
+            for nm in ("fc1", "fc2"):
+                names += [pre + nm + ".weight", pre + nm + ".bias"]
+        names += ["ln_f.gamma", "ln_f.beta", "lm_head.weight"]
+        return names
+
+    def init_params(self, key) -> Dict[str, jnp.ndarray]:
+        p: Dict[str, jnp.ndarray] = {}
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        p["tok_emb.weight"] = 0.02 * jax.random.normal(
+            k1, (self.vocab, self.dm), jnp.float32)
+        p["pos_emb.weight"] = 0.01 * jax.random.normal(
+            k2, (self.T, self.dm), jnp.float32)
+        for i in range(self.nl):
+            pre = f"h{i}."
+            p[pre + "ln1.gamma"] = jnp.ones((self.dm,), jnp.float32)
+            p[pre + "ln1.beta"] = jnp.zeros((self.dm,), jnp.float32)
+            for nm in ("attn_q", "attn_k", "attn_v", "attn_o"):
+                key, k = jax.random.split(key)
+                p[pre + nm + ".weight"] = _glorot(k, (self.dm, self.dm))
+                p[pre + nm + ".bias"] = jnp.zeros((self.dm,), jnp.float32)
+            p[pre + "ln2.gamma"] = jnp.ones((self.dm,), jnp.float32)
+            p[pre + "ln2.beta"] = jnp.zeros((self.dm,), jnp.float32)
+            key, ka, kb = jax.random.split(key, 3)
+            p[pre + "fc1.weight"] = _glorot(ka, (self.dm, 4 * self.dm))
+            p[pre + "fc1.bias"] = jnp.zeros((4 * self.dm,), jnp.float32)
+            p[pre + "fc2.weight"] = _glorot(kb, (4 * self.dm, self.dm))
+            p[pre + "fc2.bias"] = jnp.zeros((self.dm,), jnp.float32)
+        p["ln_f.gamma"] = jnp.ones((self.dm,), jnp.float32)
+        p["ln_f.beta"] = jnp.zeros((self.dm,), jnp.float32)
+        p["lm_head.weight"] = _glorot(k3, (self.dm, self.vocab))
+        return p
+
+    def tap_shapes(self, B: int) -> List[Tuple[int, ...]]:
+        shapes: List[Tuple[int, ...]] = [(B, self.T, self.dm)]  # tok_emb
+        shapes.append((B, self.T, self.dm))  # pos_emb
+        for _ in range(self.nl):
+            shapes.append((B, self.T, self.dm))  # ln1
+            shapes += [(B, self.T, self.dm)] * 4  # q k v o
+            shapes.append((B, self.T, self.dm))  # ln2
+            shapes.append((B, self.T, 4 * self.dm))  # fc1
+            shapes.append((B, self.T, self.dm))  # fc2
+        shapes.append((B, self.T, self.dm))  # ln_f
+        shapes.append((B, self.T, self.vocab))  # lm_head
+        return shapes
+
+    def data_spec(self, B: int):
+        return ((B, self.T), jnp.int32), ((B, self.T), jnp.int32)
+
+    def forward(self, params, taps, x, y):
+        caches: List[dict] = []
+        ti = 0
+        h = L.embedding(params, taps, caches, ti, "tok_emb", x); ti += 1
+        h = L.position_bias(params, taps, caches, ti, "pos_emb", h); ti += 1
+        B = x.shape[0]
+        hd = self.dm // self.nh
+        mask = jnp.tril(jnp.ones((self.T, self.T), jnp.float32))
+        for i in range(self.nl):
+            pre = f"h{i}."
+            z = L.layernorm(params, taps, caches, ti, pre + "ln1", h); ti += 1
+            q = L.linear(params, taps, caches, ti, pre + "attn_q", z); ti += 1
+            k = L.linear(params, taps, caches, ti, pre + "attn_k", z); ti += 1
+            v = L.linear(params, taps, caches, ti, pre + "attn_v", z); ti += 1
+            qh = q.reshape(B, self.T, self.nh, hd).transpose(0, 2, 1, 3)
+            kh = k.reshape(B, self.T, self.nh, hd).transpose(0, 2, 1, 3)
+            vh = v.reshape(B, self.T, self.nh, hd).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhtd,bhsd->bhts", qh, kh) / jnp.sqrt(float(hd))
+            att = jnp.where(mask[None, None] > 0, att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhts,bhsd->bhtd", att, vh)
+            o = o.transpose(0, 2, 1, 3).reshape(B, self.T, self.dm)
+            o = L.linear(params, taps, caches, ti, pre + "attn_o", o); ti += 1
+            h = h + o
+            z = L.layernorm(params, taps, caches, ti, pre + "ln2", h); ti += 1
+            f = L.linear(params, taps, caches, ti, pre + "fc1", z); ti += 1
+            f = jax.nn.gelu(f)
+            f = L.linear(params, taps, caches, ti, pre + "fc2", f); ti += 1
+            h = h + f
+        h = L.layernorm(params, taps, caches, ti, "ln_f", h); ti += 1
+        logits = L.linear(params, taps, caches, ti, "lm_head", h); ti += 1
+        losses = L.softmax_cross_entropy(logits, y)
+        return losses, caches
+
+    def layer_meta(self):
+        meta = [
+            dict(kind="embedding", name="tok_emb", T=self.T, d=self.vocab, p=self.dm),
+            dict(kind="posbias", name="pos_emb", T=self.T, d=1, p=self.dm),
+        ]
+        for i in range(self.nl):
+            pre = f"h{i}."
+            meta.append(dict(kind="layernorm", name=pre + "ln1", T=self.T,
+                             d=self.dm, p=self.dm))
+            for nm in ("attn_q", "attn_k", "attn_v", "attn_o"):
+                meta.append(dict(kind="linear", name=pre + nm, T=self.T,
+                                 d=self.dm, p=self.dm))
+            meta.append(dict(kind="layernorm", name=pre + "ln2", T=self.T,
+                             d=self.dm, p=self.dm))
+            meta.append(dict(kind="linear", name=pre + "fc1", T=self.T,
+                             d=self.dm, p=4 * self.dm))
+            meta.append(dict(kind="linear", name=pre + "fc2", T=self.T,
+                             d=4 * self.dm, p=self.dm))
+        meta.append(dict(kind="layernorm", name="ln_f", T=self.T, d=self.dm,
+                         p=self.dm))
+        meta.append(dict(kind="linear", name="lm_head", T=self.T, d=self.dm,
+                         p=self.vocab))
+        return meta
+
+
+class GPTMiniLoRA(GPTMini):
+    """GPT-mini with LoRA adapters on the attention projections (§E.2).
+
+    Base weights are frozen (no taps, no DP bookkeeping); only the LoRA
+    factors L (d x r) / R (r x p) are trained with DP.
+    """
+
+    def __init__(self, rank=8, **kw):
+        super().__init__(name=kw.pop("name", "gptlora"), **kw)
+        self.rank = rank
+        self.lora_targets = ["attn_q", "attn_v"]
+
+    def param_names(self) -> List[str]:
+        names = []
+        for i in range(self.nl):
+            for nm in self.lora_targets:
+                names += [f"h{i}.{nm}.lora_a", f"h{i}.{nm}.lora_b"]
+        return names
+
+    def frozen_names(self) -> List[str]:
+        return super().param_names()
+
+    def init_params(self, key):
+        base = super().init_params(key)
+        for i in range(self.nl):
+            for nm in self.lora_targets:
+                key, k = jax.random.split(key)
+                base[f"h{i}.{nm}.lora_a"] = 0.02 * jax.random.normal(
+                    k, (self.dm, self.rank), jnp.float32)
+                base[f"h{i}.{nm}.lora_b"] = jnp.zeros(
+                    (self.rank, self.dm), jnp.float32)
+        return base
+
+    def tap_shapes(self, B: int) -> List[Tuple[int, ...]]:
+        shapes: List[Tuple[int, ...]] = []
+        for _ in range(self.nl):
+            for _ in self.lora_targets:
+                shapes.append((B, self.T, self.rank))  # u = aL
+                shapes.append((B, self.T, self.dm))  # v = uR
+        return shapes
+
+    def forward(self, params, taps, x, y):
+        caches: List[dict] = []
+        ti = 0
+        B = x.shape[0]
+        h = jnp.take(params["tok_emb.weight"], x, axis=0)
+        h = h + params["pos_emb.weight"][None]
+        hd = self.dm // self.nh
+        mask = jnp.tril(jnp.ones((self.T, self.T), jnp.float32))
+
+        def frozen_linear(name, a):
+            return jnp.einsum("btd,dp->btp", a, params[name + ".weight"]) + params[
+                name + ".bias"]
+
+        def ln(name, v):
+            mu = jnp.mean(v, axis=-1, keepdims=True)
+            var = jnp.mean(jnp.square(v - mu), axis=-1, keepdims=True)
+            vh = (v - mu) * jax.lax.rsqrt(var + 1e-5)
+            return vh * params[name + ".gamma"] + params[name + ".beta"]
+
+        for i in range(self.nl):
+            pre = f"h{i}."
+            z = ln(pre + "ln1", h)
+            if "attn_q" in self.lora_targets:
+                q, ti = L.lora_linear(params, taps, caches, ti, pre + "attn_q", z)
+            else:
+                q = frozen_linear(pre + "attn_q", z)
+            k = frozen_linear(pre + "attn_k", z)
+            if "attn_v" in self.lora_targets:
+                v, ti = L.lora_linear(params, taps, caches, ti, pre + "attn_v", z)
+            else:
+                v = frozen_linear(pre + "attn_v", z)
+            qh = q.reshape(B, self.T, self.nh, hd).transpose(0, 2, 1, 3)
+            kh = k.reshape(B, self.T, self.nh, hd).transpose(0, 2, 1, 3)
+            vh = v.reshape(B, self.T, self.nh, hd).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhtd,bhsd->bhts", qh, kh) / jnp.sqrt(float(hd))
+            att = jnp.where(mask[None, None] > 0, att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhts,bhsd->bhtd", att, vh)
+            o = o.transpose(0, 2, 1, 3).reshape(B, self.T, self.dm)
+            h = h + frozen_linear(pre + "attn_o", o)
+            z = ln(pre + "ln2", h)
+            f = jax.nn.gelu(frozen_linear(pre + "fc1", z))
+            h = h + frozen_linear(pre + "fc2", f)
+        h = ln("ln_f", h)
+        logits = jnp.einsum("btd,dp->btp", h, params["lm_head.weight"])
+        losses = L.softmax_cross_entropy(logits, y)
+        return losses, caches
+
+    def layer_meta(self):
+        meta = []
+        for i in range(self.nl):
+            for nm in self.lora_targets:
+                meta.append(dict(kind="linear", name=f"h{i}.{nm}.lora_a",
+                                 T=self.T, d=self.dm, p=self.rank))
+                meta.append(dict(kind="linear", name=f"h{i}.{nm}.lora_b",
+                                 T=self.T, d=self.rank, p=self.dm))
+        return meta
+
+
+class SmallConv:
+    """Small CNN on (H, W, C) images — the large-T regime where the
+    layerwise 2T^2 < pd decision flips per layer (paper Section 3).
+
+    With 32x32 inputs the first conv has T = 1024, d = 27: 2T^2 = 2.1M
+    >> pd = 432, so hybrids must pick instantiation there — exactly the
+    paper's Figure 7 crossover, at CPU-feasible scale.
+    """
+
+    def __init__(self, hw=32, c_in=3, channels=(16, 32), n_classes=10,
+                 kernel=3, name="conv"):
+        self.hw, self.c_in, self.channels, self.k = hw, c_in, tuple(channels), kernel
+        self.n_classes = n_classes
+        self.name = name
+        self.flat = (hw // (2 ** len(self.channels))) ** 2 * self.channels[-1]
+
+    def param_names(self) -> List[str]:
+        out = []
+        for i in range(len(self.channels)):
+            out += [f"conv{i}.weight", f"conv{i}.bias"]
+        out += ["head.weight", "head.bias"]
+        return out
+
+    def init_params(self, key):
+        p = {}
+        cin = self.c_in
+        for i, cout in enumerate(self.channels):
+            key, k = jax.random.split(key)
+            p[f"conv{i}.weight"] = _glorot(k, (self.k * self.k * cin, cout))
+            p[f"conv{i}.bias"] = jnp.zeros((cout,), jnp.float32)
+            cin = cout
+        key, k = jax.random.split(key)
+        p["head.weight"] = _glorot(k, (self.flat, self.n_classes))
+        p["head.bias"] = jnp.zeros((self.n_classes,), jnp.float32)
+        return p
+
+    def tap_shapes(self, B: int):
+        shapes = []
+        hw = self.hw
+        for cout in self.channels:
+            shapes.append((B, hw * hw, cout))
+            hw //= 2
+        shapes.append((B, 1, self.n_classes))
+        return shapes
+
+    def data_spec(self, B: int):
+        return ((B, self.hw, self.hw, self.c_in), jnp.float32), ((B,), jnp.int32)
+
+    def forward(self, params, taps, x, y):
+        caches: List[dict] = []
+        h = x
+        for i in range(len(self.channels)):
+            s = L.conv2d(params, taps, caches, i, f"conv{i}", h)
+            h = jax.nn.relu(s)
+            B, H, W, C = h.shape
+            h = h.reshape(B, H // 2, 2, W // 2, 2, C).max(axis=(2, 4))
+        h = h.reshape(h.shape[0], -1)
+        logits = L.linear(params, taps, caches, len(self.channels), "head", h)
+        losses = L.softmax_cross_entropy(logits, y)
+        return losses, caches
+
+    def layer_meta(self):
+        meta = []
+        hw, cin = self.hw, self.c_in
+        for i, cout in enumerate(self.channels):
+            meta.append(dict(kind="conv2d", name=f"conv{i}", T=hw * hw,
+                             d=self.k * self.k * cin, p=cout))
+            hw //= 2
+            cin = cout
+        meta.append(dict(kind="linear", name="head", T=1, d=self.flat,
+                         p=self.n_classes))
+        return meta
+
+
+def make_model(spec: dict):
+    """Model factory from a JSON-able spec (shared with aot.py / Rust)."""
+    kind = spec["kind"]
+    kw = {k: v for k, v in spec.items() if k not in ("kind", "name")}
+    if kind == "mlp":
+        return MLP(name=spec.get("name", "mlp"), **kw)
+    if kind == "gpt":
+        return GPTMini(name=spec.get("name", "gpt"), **kw)
+    if kind == "gptlora":
+        return GPTMiniLoRA(name=spec.get("name", "gptlora"), **kw)
+    if kind == "conv":
+        return SmallConv(name=spec.get("name", "conv"), **kw)
+    raise ValueError(f"unknown model kind {kind!r}")

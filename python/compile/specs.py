@@ -1,0 +1,116 @@
+"""Artifact specs: which (model, batch, optimizer, strategy) tuples get
+AOT-lowered to HLO. Shared vocabulary with the Rust side via
+artifacts/manifest.json.
+
+Groups:
+  e2e    — the end-to-end training drivers (examples/)
+  bench  — the paper-figure wall-clock benches (Figures 2/5/9, Tables 1/9)
+  conv   — the large-T hybrid regime (Figure 6 scaled)
+  peft   — LoRA fine-tuning (§E.2)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .strategies import STRATEGIES
+
+ALL = list(STRATEGIES)
+# the four implementations the paper benchmarks head-to-head most often
+CORE = ["nondp", "opacus", "ghostclip", "bk"]
+
+
+def default_specs() -> List[Dict]:
+    specs: List[Dict] = []
+
+    # ---- end-to-end drivers --------------------------------------------
+    specs.append(dict(
+        name="gpt_e2e",
+        group="e2e",
+        model=dict(kind="gpt", vocab=1024, d_model=192, n_layer=4, n_head=6,
+                   seq=96),
+        batch=8,
+        optimizer="adam",
+        clip_fn="automatic",
+        strategies=["bk", "bk_mixopt", "nondp"],
+    ))
+    specs.append(dict(
+        name="mlp_e2e",
+        group="e2e",
+        model=dict(kind="mlp", d_in=128, width=256, depth=4, n_classes=10),
+        batch=32,
+        optimizer="sgd",
+        clip_fn="abadi",
+        strategies=["bk", "nondp"],
+    ))
+
+    # ---- MLP sweep: paper Figure 2 / Figure 9 (deep / shallow / wide) --
+    mlp_cfgs = [
+        ("mlp_deep", dict(kind="mlp", d_in=512, width=256, depth=10,
+                          n_classes=100), 64),
+        ("mlp_shallow", dict(kind="mlp", d_in=512, width=256, depth=4,
+                             n_classes=100), 64),
+        ("mlp_wide", dict(kind="mlp", d_in=512, width=1024, depth=4,
+                          n_classes=100), 64),
+    ]
+    for name, mspec, B in mlp_cfgs:
+        specs.append(dict(name=name, group="bench", model=mspec, batch=B,
+                          optimizer="sgd", clip_fn="automatic",
+                          strategies=ALL))
+
+    # batch-size ablation on the wide config (paper Fig 2 right: Opacus
+    # explodes in B; Fig 9 batch sweep)
+    for B in (16, 256):
+        specs.append(dict(name=f"mlp_wide_b{B}", group="bench",
+                          model=mlp_cfgs[2][1], batch=B, optimizer="sgd",
+                          clip_fn="automatic", strategies=CORE))
+
+    # ---- language regime: paper Figure 5 / Tables 1, 8, 9 (scaled) -----
+    specs.append(dict(
+        name="gpt_bench",
+        group="bench",
+        model=dict(kind="gpt", vocab=512, d_model=128, n_layer=2, n_head=4,
+                   seq=64),
+        batch=16,
+        optimizer="adam",
+        clip_fn="automatic",
+        strategies=ALL,
+    ))
+    # sequence-length ablation (T is the paper's pivotal dimension)
+    for T in (16, 256):
+        specs.append(dict(
+            name=f"gpt_t{T}",
+            group="bench",
+            model=dict(kind="gpt", vocab=512, d_model=128, n_layer=2,
+                       n_head=4, seq=T),
+            batch=8,
+            optimizer="adam",
+            clip_fn="automatic",
+            strategies=CORE + ["bk_mixopt"],
+        ))
+
+    # ---- vision / large-T regime: paper Figure 6 (scaled) --------------
+    specs.append(dict(
+        name="conv_bench",
+        group="conv",
+        model=dict(kind="conv", hw=32, c_in=3, channels=[16, 32],
+                   n_classes=10),
+        batch=16,
+        optimizer="sgd",
+        clip_fn="automatic",
+        strategies=ALL,
+    ))
+
+    # ---- parameter-efficient fine-tuning (§E.2) ------------------------
+    specs.append(dict(
+        name="gptlora",
+        group="peft",
+        model=dict(kind="gptlora", vocab=512, d_model=128, n_layer=2,
+                   n_head=4, seq=64, rank=8),
+        batch=16,
+        optimizer="adam",
+        clip_fn="automatic",
+        strategies=["bk", "opacus", "nondp"],
+    ))
+
+    return specs

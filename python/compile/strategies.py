@@ -1,0 +1,376 @@
+"""Layer-2 DP training strategies — the paper's Figure 3 lineup.
+
+Every implementation computes the *same* private gradient (Eq. 1); they
+differ only in how the per-sample norms and the clipped sum are obtained.
+Module indices follow the paper's Table 3:
+
+  (1) forward  (2a) output grads  (2b) parameter grads  (3) ghost norm
+  (4) per-sample grad instantiation  (5) weighted sum of per-sample grads
+
+  nondp          = 1 + 2a + 2b
+  opacus         = 1 + 2a + 2b + 4 + 5
+  fastgradclip   = 1 + 2a + 4(norm only) + 2a + 2b        (2 backprops)
+  ghostclip      = 1 + 2a + 2b + 3 + 2a + 2b              (2 backprops)
+  mixghostclip   = 1 + 2a + 2b + min{3,4} + 2a + 2b       (Bu et al. 22a)
+  bk             = 1 + 2a + 3 + 2b'                       (ours: 1 backprop)
+  bk_mixghostclip= 1 + 2a + min{3,4} + 2b'
+  bk_mixopt      = 1 + 2a + min{3 + 2b', 4 + 5}
+
+2b' is the book-kept clipped sum a^T diag(C) dL/ds (kernels.clipped_sum).
+"2a-only" backprops differentiate w.r.t. the taps (ghost differentiation,
+see layers.py); "full" backprops also request parameter gradients, whose
+total squared norm is emitted as a metric so XLA cannot dead-code them
+(Opacus/GhostClip really pay for module 2b — the metric is also what
+their PyTorch versions expose as `param.grad`).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+STRATEGIES = (
+    "nondp",
+    "opacus",
+    "fastgradclip",
+    "ghostclip",
+    "mixghostclip",
+    "bk",
+    "bk_mixghostclip",
+    "bk_mixopt",
+)
+
+CLIP_FNS = ("abadi", "automatic", "flat")
+
+
+def clip_factors(sq_norms: jnp.ndarray, R: jnp.ndarray, clip_fn: str) -> jnp.ndarray:
+    if clip_fn == "abadi":
+        return K.ref.clip_factor_abadi_ref(sq_norms, R)
+    if clip_fn == "automatic":
+        return K.ref.clip_factor_automatic_ref(sq_norms, R)
+    if clip_fn == "flat":
+        return K.ref.clip_factor_flat_ref(sq_norms, R)
+    raise ValueError(f"unknown clip_fn {clip_fn!r}")
+
+
+def ghost_preferred(cache: dict) -> bool:
+    """The paper's layerwise decision (Section 3.2): ghost iff 2T^2 < pd."""
+    return 2 * cache["T"] ** 2 < cache["d"] * cache["p"]
+
+
+# ---------------------------------------------------------------------------
+# back-propagation variants
+
+
+def _zero_taps(model, B):
+    return [jnp.zeros(s, jnp.float32) for s in model.tap_shapes(B)]
+
+
+def tap_backprop(model, params, x, y):
+    """(1) + (2a): single backprop computing ONLY output gradients."""
+    B = x.shape[0]
+
+    def f(taps):
+        losses, caches = model.forward(params, taps, x, y)
+        return jnp.sum(losses), (losses, caches)
+
+    gtaps, (losses, caches) = jax.grad(f, has_aux=True)(_zero_taps(model, B))
+    return gtaps, losses, caches
+
+
+def full_backprop(model, params, x, y, trainable: List[str]):
+    """(1) + (2a) + (2b): backprop also computing parameter gradients.
+
+    Returns (gtaps, gparams, losses, caches).
+    """
+    B = x.shape[0]
+    tr = {k: params[k] for k in trainable}
+    frozen = {k: v for k, v in params.items() if k not in tr}
+
+    def f(tp, taps):
+        losses, caches = model.forward({**frozen, **tp}, taps, x, y)
+        return jnp.sum(losses), (losses, caches)
+
+    (gparams, gtaps), (losses, caches) = jax.grad(
+        f, argnums=(0, 1), has_aux=True
+    )(tr, _zero_taps(model, B))
+    return gtaps, gparams, losses, caches
+
+
+def reweighted_backprop(model, params, x, y, C, trainable: List[str]):
+    """Second backprop of GhostClip/FastGradClip: grad of sum_i C_i L_i."""
+    B = x.shape[0]
+    taps = _zero_taps(model, B)
+    tr = {k: params[k] for k in trainable}
+    frozen = {k: v for k, v in params.items() if k not in tr}
+    Cs = jax.lax.stop_gradient(C)
+
+    def f(tp):
+        losses, _ = model.forward({**frozen, **tp}, taps, x, y)
+        return jnp.sum(Cs * losses)
+
+    return jax.grad(f)(tr)
+
+
+# ---------------------------------------------------------------------------
+# per-sample norms / clipped sums from the book-kept (a, dL/ds) pairs
+
+
+def layer_sq_norms(
+    caches: List[dict],
+    gtaps: List[jnp.ndarray],
+    decision: Callable[[dict], str],
+    store_psg: bool,
+):
+    """Per-sample squared grad norms summed over all trainable tensors.
+
+    decision(cache) -> "ghost" | "inst" for generalized linear layers.
+    If store_psg, instantiated per-sample grads are kept (Opacus /
+    BK-MixOpt module (4)+(5) route); else only their norms (FastGradClip /
+    BK-MixGhostClip route).
+    Returns (total_sq (B,), psg_store name->(B,d,p)).
+    """
+    total = None
+    psg_store: Dict[str, jnp.ndarray] = {}
+
+    def acc(v):
+        nonlocal total
+        total = v if total is None else total + v
+
+    for c in caches:
+        g = gtaps[c["tap"]]
+        kind = c["kind"]
+        if kind in ("linear", "conv2d"):
+            if decision(c) == "ghost":
+                if c["T"] == 1:
+                    acc(K.op_ghost_norm_t1(c["a"], g))
+                else:
+                    acc(K.op_ghost_norm(c["a"], g))
+            elif store_psg:
+                psg, sq = K.op_per_sample_grad(c["a"], g)
+                psg_store[c["weight"]] = psg
+                acc(sq)
+            else:
+                acc(K.op_per_sample_grad_norm(c["a"], g))
+            if c.get("bias"):
+                acc(K.ref.bias_ghost_norm_ref(g))
+        elif kind == "embedding":
+            acc(K.op_embedding_ghost_norm(c["tokens"], g))
+        elif kind == "posbias":
+            acc(jnp.sum(jnp.square(g), axis=(1, 2)))
+        elif kind == "layernorm":
+            dgamma = jnp.einsum("btp,btp->bp", g, c["xhat"])
+            dbeta = jnp.sum(g, axis=1)
+            acc(jnp.sum(jnp.square(dgamma), axis=1)
+                + jnp.sum(jnp.square(dbeta), axis=1))
+        else:
+            raise ValueError(kind)
+    return total, psg_store
+
+
+def layer_clipped_grads(
+    caches: List[dict],
+    gtaps: List[jnp.ndarray],
+    C: jnp.ndarray,
+    psg_store: Dict[str, jnp.ndarray],
+) -> Dict[str, jnp.ndarray]:
+    """Sum of clipped per-sample gradients for every trainable tensor.
+
+    Uses the stored per-sample gradients (module 5, 2Bpd) where available,
+    the book-kept clipped sum (module 2b', 2BTpd) otherwise.
+    """
+    grads: Dict[str, jnp.ndarray] = {}
+    for c in caches:
+        g = gtaps[c["tap"]]
+        kind = c["kind"]
+        if kind in ("linear", "conv2d"):
+            w = c["weight"]
+            if w in psg_store:
+                grads[w] = jnp.einsum("b,bdp->dp", C, psg_store[w])
+            else:
+                grads[w] = K.op_clipped_sum(c["a"], g, C)
+            if c.get("bias"):
+                grads[c["bias"]] = K.op_bias_clipped_sum(g, C)
+        elif kind == "embedding":
+            V = c["d"]
+            p = g.shape[2]
+            weighted = (C[:, None, None] * g).reshape(-1, p)
+            grads[c["weight"]] = jnp.zeros((V, p), jnp.float32).at[
+                c["tokens"].reshape(-1)
+            ].add(weighted)
+        elif kind == "posbias":
+            grads[c["weight"]] = jnp.einsum("b,btp->tp", C, g)
+        elif kind == "layernorm":
+            dgamma = jnp.einsum("btp,btp->bp", g, c["xhat"])
+            dbeta = jnp.sum(g, axis=1)
+            grads[c["gamma"]] = jnp.einsum("b,bp->p", C, dgamma)
+            grads[c["beta"]] = jnp.einsum("b,bp->p", C, dbeta)
+        else:
+            raise ValueError(kind)
+    return grads
+
+
+# ---------------------------------------------------------------------------
+# optimizer application
+
+
+def apply_sgd(params, grads, noise, trainable, lr, sigma_r, batch):
+    new = dict(params)
+    for k in trainable:
+        new[k] = K.ref.dp_sgd_update_ref(
+            params[k], grads[k], noise[k], lr, sigma_r, batch)
+    return new
+
+
+def apply_adam(params, m, v, grads, noise, trainable, lr, sigma_r, batch, step):
+    new_p, new_m, new_v = dict(params), dict(m), dict(v)
+    for k in trainable:
+        new_p[k], new_m[k], new_v[k] = K.ref.dp_adam_update_ref(
+            params[k], m[k], v[k], grads[k], noise[k], lr, sigma_r, batch, step)
+    return new_p, new_m, new_v
+
+
+def _grad_sq_total(gparams: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """sum ||dL/dW||^2 over tensors — emitted as a metric so the full
+    backprop's module (2b) survives DCE (it is also a real diagnostic)."""
+    tot = jnp.zeros((), jnp.float32)
+    for v in gparams.values():
+        tot = tot + jnp.sum(jnp.square(v))
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# strategy step builders
+
+
+def metric_keys(strategy: str) -> List[str]:
+    """Sorted metric names emitted by build_step for this strategy."""
+    if strategy == "nondp":
+        return sorted(["loss", "grad_sq"])
+    keys = ["loss", "mean_sq_norm", "mean_clip"]
+    if strategy in ("opacus", "ghostclip", "mixghostclip"):
+        keys.append("grad_sq")
+    return sorted(keys)
+
+
+def _decision_for(strategy: str) -> Callable[[dict], str]:
+    if strategy in ("opacus", "fastgradclip"):
+        return lambda c: "inst"
+    if strategy in ("ghostclip", "bk"):
+        return lambda c: "ghost"
+    # hybrids: the paper's layerwise rule
+    return lambda c: "ghost" if ghost_preferred(c) else "inst"
+
+
+def build_step(model, strategy: str, optimizer: str = "sgd",
+               clip_fn: str = "automatic"):
+    """Returns step(params, opt_state, x, y, noise, scalars) -> (params',
+    opt_state', metrics) implementing one logical DP-SGD/Adam step for one
+    physical batch. scalars = dict(lr, clip, sigma_r, batch, step).
+
+    `noise` maps trainable tensor name -> standard normal of same shape
+    (sampled by the Rust coordinator's DRBG — L3 owns privacy-critical
+    randomness).
+    """
+    assert strategy in STRATEGIES, strategy
+    trainable = model.param_names()
+
+    def step(params, opt_state, x, y, noise, scalars):
+        lr = scalars["lr"]
+        R = scalars["clip"]
+        sigma_r = scalars["sigma_r"]
+        batch = scalars["batch"]
+        stepno = scalars["step"]
+
+        metrics: Dict[str, jnp.ndarray] = {}
+
+        if strategy == "nondp":
+            tr = {k: params[k] for k in trainable}
+            frozen = {k: v for k, v in params.items() if k not in tr}
+
+            def f(tp):
+                losses, _ = model.forward({**frozen, **tp},
+                                          _zero_taps(model, x.shape[0]), x, y)
+                return jnp.sum(losses), losses
+
+            (loss_sum, losses), grads = jax.value_and_grad(f, has_aux=True)(tr)
+            metrics["loss"] = jnp.mean(losses)
+            metrics["grad_sq"] = _grad_sq_total(grads)
+            zero_noise = {k: jnp.zeros_like(noise[k]) for k in trainable}
+            if optimizer == "sgd":
+                new_params = apply_sgd(params, grads, zero_noise, trainable,
+                                       lr, 0.0, batch)
+                return new_params, opt_state, metrics
+            m, v = opt_state
+            new_params, m2, v2 = apply_adam(params, m, v, grads, zero_noise,
+                                            trainable, lr, 0.0, batch, stepno)
+            return new_params, (m2, v2), metrics
+
+        decision = _decision_for(strategy)
+        two_pass = strategy in ("fastgradclip", "ghostclip", "mixghostclip")
+        full_first = strategy in ("opacus", "ghostclip", "mixghostclip")
+        store_psg = strategy in ("opacus", "bk_mixopt")
+
+        if full_first:
+            gtaps, gparams, losses, caches = full_backprop(
+                model, params, x, y, trainable)
+            metrics["grad_sq"] = _grad_sq_total(gparams)
+        else:
+            gtaps, losses, caches = tap_backprop(model, params, x, y)
+
+        dec = (lambda c: "ghost") if strategy == "ghostclip" else decision
+        sq_norms, psg_store = layer_sq_norms(
+            caches, gtaps, dec, store_psg=store_psg)
+        C = clip_factors(sq_norms, R, clip_fn)
+        metrics["loss"] = jnp.mean(losses)
+        metrics["mean_sq_norm"] = jnp.mean(sq_norms)
+        metrics["mean_clip"] = jnp.mean(C)
+
+        if two_pass:
+            grads = reweighted_backprop(model, params, x, y, C, trainable)
+        else:
+            grads = layer_clipped_grads(caches, gtaps, C, psg_store)
+
+        if optimizer == "sgd":
+            new_params = apply_sgd(params, grads, noise, trainable, lr,
+                                   sigma_r, batch)
+            return new_params, opt_state, metrics
+        m, v = opt_state
+        new_params, m2, v2 = apply_adam(params, m, v, grads, noise, trainable,
+                                        lr, sigma_r, batch, stepno)
+        return new_params, (m2, v2), metrics
+
+    return step
+
+
+def build_grad_fn(model, strategy: str, clip_fn: str = "automatic"):
+    """Like build_step but returns the raw private gradient (pre-noise,
+    pre-update) — used by the equivalence tests and by gradient
+    accumulation semantics checks."""
+    trainable = model.param_names()
+
+    def grads_fn(params, x, y, R):
+        scalars_strategy = strategy
+        decision = _decision_for(scalars_strategy)
+        two_pass = strategy in ("fastgradclip", "ghostclip", "mixghostclip")
+        full_first = strategy in ("opacus", "ghostclip", "mixghostclip")
+        store_psg = strategy in ("opacus", "bk_mixopt")
+        if full_first:
+            gtaps, _gp, losses, caches = full_backprop(
+                model, params, x, y, trainable)
+        else:
+            gtaps, losses, caches = tap_backprop(model, params, x, y)
+        dec = (lambda c: "ghost") if strategy == "ghostclip" else decision
+        sq_norms, psg_store = layer_sq_norms(caches, gtaps, dec, store_psg)
+        C = clip_factors(sq_norms, R, clip_fn)
+        if two_pass:
+            grads = reweighted_backprop(model, params, x, y, C, trainable)
+        else:
+            grads = layer_clipped_grads(caches, gtaps, C, psg_store)
+        return grads, sq_norms, C, losses
+
+    return grads_fn

@@ -1,0 +1,171 @@
+"""L2 model correctness: shapes, tap bookkeeping, layer metadata
+consistency (the contract the Rust complexity engine relies on), and the
+conv-as-im2col equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from compile import models as M
+
+
+def zero_taps(model, B):
+    return [jnp.zeros(s, jnp.float32) for s in model.tap_shapes(B)]
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [
+        dict(kind="mlp", d_in=20, width=16, depth=4, n_classes=7),
+        dict(kind="gpt", vocab=40, d_model=24, n_layer=2, n_head=3, seq=10),
+        dict(kind="conv", hw=8, c_in=3, channels=(4, 6), n_classes=3),
+    ],
+    ids=lambda s: s["kind"],
+)
+def test_forward_shapes_and_caches(spec):
+    model = M.make_model(dict(spec))
+    params = model.init_params(jax.random.PRNGKey(0))
+    assert set(params.keys()) >= set(model.param_names())
+    B = 5
+    rng = np.random.default_rng(0)
+    (xs, xd), (ys, yd) = model.data_spec(B)
+    x = (jnp.asarray(rng.integers(0, spec.get("vocab", 10), size=xs), jnp.int32)
+         if xd == jnp.int32
+         else jnp.asarray(rng.normal(size=xs), jnp.float32))
+    k = spec.get("n_classes", spec.get("vocab", 10))
+    y = jnp.asarray(rng.integers(0, k, size=ys), jnp.int32)
+
+    losses, caches = model.forward(params, zero_taps(model, B), x, y)
+    assert losses.shape == (B,)
+    assert np.isfinite(np.asarray(losses)).all()
+    # every cache entry points at a valid tap with matching grad shape
+    shapes = model.tap_shapes(B)
+    assert len(caches) == len(shapes)
+    seen = set()
+    for c in caches:
+        assert c["tap"] not in seen, "each tap used exactly once"
+        seen.add(c["tap"])
+    # random classifier loss ~ ln(k)
+    assert abs(float(jnp.mean(losses)) - np.log(k)) < 1.2
+
+
+def test_layer_meta_matches_caches():
+    """The manifest layer_meta (used by Rust) must agree with the runtime
+    cache dims."""
+    spec = dict(kind="gpt", vocab=40, d_model=24, n_layer=2, n_head=3, seq=10)
+    model = M.make_model(spec)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B = 3
+    x = jnp.zeros((B, 10), jnp.int32)
+    y = jnp.zeros((B, 10), jnp.int32)
+    _, caches = model.forward(params, zero_taps(model, B), x, y)
+    meta = model.layer_meta()
+    assert len(meta) == len(caches)
+    for m, c in zip(meta, caches):
+        assert m["kind"] == c["kind"], (m, c["kind"])
+        assert m["name"] == c["name"]
+        assert m["T"] == c["T"]
+        assert m["p"] == c["p"]
+        if c["kind"] in ("linear", "conv2d", "embedding"):
+            assert m["d"] == c["d"]
+
+
+def test_param_count_consistency():
+    spec = dict(kind="gpt", vocab=64, d_model=32, n_layer=2, n_head=4, seq=12)
+    model = M.make_model(spec)
+    params = model.init_params(jax.random.PRNGKey(0))
+    total = sum(int(np.prod(params[k].shape)) for k in model.param_names())
+    # embedding 64*32 + pos 12*32 + blocks + ln_f + lm_head 32*64
+    assert total > 2 * 64 * 32
+    # weights from layer_meta cover the generalized linear weight params
+    meta_weights = sum(
+        m["d"] * m["p"] for m in model.layer_meta()
+        if m["kind"] in ("linear", "embedding", "conv2d"))
+    named_weights = sum(
+        int(np.prod(params[k].shape))
+        for k in model.param_names()
+        if k.endswith(".weight") and "pos_emb" not in k)
+    assert meta_weights == named_weights
+
+
+def test_conv_im2col_equals_lax_conv():
+    """The conv layer computes the same output as lax.conv (the im2col
+    reduction is exact, not an approximation)."""
+    from compile import layers as L
+
+    rng = np.random.default_rng(0)
+    B, H, W, Cin, Cout, K = 2, 8, 8, 3, 5, 3
+    x = jnp.asarray(rng.normal(size=(B, H, W, Cin)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K * K * Cin, Cout)), jnp.float32)
+    params = {"c.weight": w, "c.bias": jnp.zeros((Cout,), jnp.float32)}
+    taps = [jnp.zeros((B, H * W, Cout), jnp.float32)]
+    caches = []
+    out = L.conv2d(params, taps, caches, 0, "c", x)  # (B, H, W, Cout)
+
+    # reference: lax.conv_general_dilated with OIHW weights built from the
+    # patch layout (cin, kh, kw) -> (cout, cin, kh, kw)
+    w4 = w.reshape(Cin, K, K, Cout).transpose(3, 0, 1, 2)
+    ref = lax.conv_general_dilated(
+        x.transpose(0, 3, 1, 2), w4, (1, 1), "SAME")
+    np.testing.assert_allclose(
+        out.transpose(0, 3, 1, 2), ref, rtol=1e-4, atol=1e-5)
+    assert caches[0]["T"] == H * W
+    assert caches[0]["d"] == K * K * Cin
+
+
+def test_taps_inject_into_output_gradient():
+    """dL/dtap == dL/ds: perturbing a tap perturbs the output exactly like
+    perturbing the layer output (the hook semantics)."""
+    model = M.make_model(dict(kind="mlp", d_in=6, width=5, depth=2, n_classes=3))
+    params = model.init_params(jax.random.PRNGKey(0))
+    B = 2
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(B, 6)), jnp.float32)
+    y = jnp.asarray([0, 2], jnp.int32)
+
+    taps = zero_taps(model, B)
+    eps = 1e-3
+
+    def loss_with_tap(t0):
+        tp = [t0] + taps[1:]
+        losses, _ = model.forward(params, tp, x, y)
+        return jnp.sum(losses)
+
+    g = jax.grad(loss_with_tap)(taps[0])
+    # finite difference along a random direction
+    d = jnp.asarray(np.random.default_rng(1).normal(size=taps[0].shape),
+                    jnp.float32)
+    fd = (loss_with_tap(taps[0] + eps * d) - loss_with_tap(taps[0] - eps * d)) / (
+        2 * eps)
+    np.testing.assert_allclose(float(fd), float(jnp.sum(g * d)), rtol=2e-2)
+
+
+def test_make_model_rejects_unknown():
+    with pytest.raises(ValueError):
+        M.make_model(dict(kind="quantum"))
+
+
+def test_gpt_causality():
+    """Causal mask: future tokens must not affect past positions' loss."""
+    spec = dict(kind="gpt", vocab=30, d_model=16, n_layer=1, n_head=2, seq=8)
+    model = M.make_model(spec)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(0, 30, size=(1, 8)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 30, size=(1, 8)), jnp.int32)
+
+    def logits_fn(xx):
+        taps = zero_taps(model, 1)
+        # reach into forward: use losses per-position via one-hot y? use
+        # the lm_head cache output instead
+        losses, caches = model.forward(params, taps, xx, y)
+        return caches  # last cache is lm_head with activation 'a'
+
+    # change the LAST input token; earlier positions' hidden states
+    # (tap activations at position < 7) must be unchanged
+    x2 = x.at[0, -1].set((int(x[0, -1]) + 1) % 30)
+    c1 = logits_fn(x)[-1]["a"]  # lm_head input (B, T, dm)
+    c2 = logits_fn(x2)[-1]["a"]
+    np.testing.assert_allclose(c1[0, :-1], c2[0, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(c1[0, -1], c2[0, -1])

@@ -1,0 +1,74 @@
+//! Figures 2 & 9: MLP speed/memory across implementations — deep,
+//! shallow, and wide configurations plus the batch-size ablation on the
+//! wide network (where the paper shows Opacus going OOM at B=1024).
+//! Measured on the real artifacts, one child process per point.
+
+use fastdp::bench::{artifacts_dir, emit, layers_of, maybe_run_child, measure_in_child};
+use fastdp::complexity::{model_cost, Strategy};
+use fastdp::runtime::Manifest;
+use fastdp::util::stats::{fmt_bytes, fmt_duration};
+use fastdp::util::table::Table;
+
+fn main() {
+    maybe_run_child();
+    let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
+    let iters = 3;
+
+    let mut t = Table::new(
+        "Figure 2: MLP speed & memory by implementation (measured)",
+        &["config", "strategy", "time/step", "throughput", "peak RSS", "analytic space x nondp"],
+    );
+    for model in ["mlp_deep", "mlp_shallow", "mlp_wide"] {
+        let meta = &manifest.models[model];
+        let layers = layers_of(meta);
+        let b = meta.batch as f64;
+        let nondp_space = model_cost(Strategy::NonDp, b, &layers).space;
+        for strat in manifest.strategies_for(model) {
+            match measure_in_child(model, &strat, iters) {
+                Ok(r) => {
+                    let s = Strategy::parse(&strat).unwrap();
+                    let c = model_cost(s, b, &layers);
+                    t.row(&[
+                        model.into(),
+                        strat.clone(),
+                        fmt_duration(r.mean_step_secs),
+                        format!("{:.0}/s", r.throughput),
+                        fmt_bytes(r.peak_rss as f64),
+                        format!("{:.2}x", c.space / nondp_space),
+                    ]);
+                }
+                Err(e) => eprintln!("skip {model}:{strat}: {e}"),
+            }
+        }
+    }
+    emit("fig2_mlp", &t, true);
+
+    // Figure 9 ablation: batch size on the wide config
+    let mut t9 = Table::new(
+        "Figure 9: batch-size ablation, wide MLP (measured)",
+        &["batch", "strategy", "time/step", "throughput", "peak RSS"],
+    );
+    for model in ["mlp_wide_b16", "mlp_wide", "mlp_wide_b256"] {
+        let meta = &manifest.models[model];
+        for strat in manifest.strategies_for(model) {
+            match measure_in_child(model, &strat, iters) {
+                Ok(r) => {
+                    t9.row(&[
+                        meta.batch.to_string(),
+                        strat.clone(),
+                        fmt_duration(r.mean_step_secs),
+                        format!("{:.0}/s", r.throughput),
+                        fmt_bytes(r.peak_rss as f64),
+                    ]);
+                }
+                Err(e) => eprintln!("skip {model}:{strat}: {e}"),
+            }
+        }
+    }
+    println!();
+    emit("fig9_batch_ablation", &t9, true);
+    println!(
+        "\nexpected shape (paper Fig 2/9): opacus RSS grows ~linearly with B \
+         (per-sample grads), bk/ghostclip stay near nondp; bk fastest among DP."
+    );
+}

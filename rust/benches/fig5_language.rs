@@ -1,0 +1,90 @@
+//! Figure 5: language-model efficiency (GPT2 on E2E / RoBERTa on GLUE in
+//! the paper) — measured across all implementations on the GPT artifact,
+//! plus the sequence-length sweep (T = 16 / 64 / 256) that drives the
+//! paper's T^2-vs-pd analysis.
+
+use fastdp::bench::{artifacts_dir, emit, layers_of, maybe_run_child, measure_in_child};
+use fastdp::complexity::{model_cost, Strategy};
+use fastdp::runtime::Manifest;
+use fastdp::util::stats::{fmt_bytes, fmt_duration};
+use fastdp::util::table::Table;
+
+fn main() {
+    maybe_run_child();
+    let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
+    let iters = 3;
+
+    let mut t = Table::new(
+        "Figure 5: GPT-mini, all implementations (measured)",
+        &["strategy", "time/step", "vs nondp", "throughput", "peak RSS"],
+    );
+    let mut nondp_time = None;
+    let mut rows = Vec::new();
+    let mut order = vec!["nondp".to_string()];
+    order.extend(
+        manifest
+            .strategies_for("gpt_bench")
+            .into_iter()
+            .filter(|s| s != "nondp"),
+    );
+    for strat in order {
+        match measure_in_child("gpt_bench", &strat, iters) {
+            Ok(r) => {
+                if strat == "nondp" {
+                    nondp_time = Some(r.mean_step_secs);
+                }
+                rows.push(r);
+            }
+            Err(e) => eprintln!("skip {strat}: {e}"),
+        }
+    }
+    for r in rows {
+        t.row(&[
+            r.strategy.clone(),
+            fmt_duration(r.mean_step_secs),
+            nondp_time
+                .map(|n| format!("{:.2}x", r.mean_step_secs / n))
+                .unwrap_or_default(),
+            format!("{:.1}/s", r.throughput),
+            fmt_bytes(r.peak_rss as f64),
+        ]);
+    }
+    emit("fig5_language", &t, true);
+
+    // sequence-length sweep
+    let mut ts = Table::new(
+        "Figure 5 companion: sequence-length sweep (measured + analytic)",
+        &["T", "strategy", "time/step", "peak RSS", "analytic time x nondp"],
+    );
+    for model in ["gpt_t16", "gpt_bench", "gpt_t256"] {
+        let meta = &manifest.models[model];
+        let layers = layers_of(meta);
+        let b = meta.batch as f64;
+        let t_seq = meta.spec.opt_i64("seq", 0);
+        let nd = model_cost(Strategy::NonDp, b, &layers).time;
+        for strat in ["nondp", "opacus", "ghostclip", "bk", "bk_mixopt"] {
+            if !manifest.strategies_for(model).iter().any(|s| s == strat) {
+                continue;
+            }
+            match measure_in_child(model, strat, iters) {
+                Ok(r) => {
+                    let s = Strategy::parse(strat).unwrap();
+                    ts.row(&[
+                        t_seq.to_string(),
+                        strat.into(),
+                        fmt_duration(r.mean_step_secs),
+                        fmt_bytes(r.peak_rss as f64),
+                        format!("{:.2}x", model_cost(s, b, &layers).time / nd),
+                    ]);
+                }
+                Err(e) => eprintln!("skip {model}:{strat}: {e}"),
+            }
+        }
+    }
+    println!();
+    emit("fig5_seq_sweep", &ts, true);
+    println!(
+        "\nexpected shape (paper Fig 5): DP-BK speed 0.86-0.89x of non-DP; \
+         ghostclip ~1.6x slower than bk; opacus memory grows with model/batch."
+    );
+}

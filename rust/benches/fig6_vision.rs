@@ -1,0 +1,68 @@
+//! Figure 6: vision efficiency in the large-T regime. Measured on the
+//! CNN artifact (32^2, where the conv layers already cross 2T^2 > pd),
+//! and analytic at the paper's true scale (VGG11 / BEiT-large @224^2)
+//! where ghost-norm-only implementations explode in memory.
+
+use fastdp::arch::catalog::vision_model;
+use fastdp::bench::{artifacts_dir, emit, layers_of, maybe_run_child, measure_in_child};
+use fastdp::complexity::{model_cost, Strategy, ALL_STRATEGIES};
+use fastdp::runtime::Manifest;
+use fastdp::util::stats::{fmt_bytes, fmt_count, fmt_duration};
+use fastdp::util::table::Table;
+
+fn main() {
+    maybe_run_child();
+    let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
+    let iters = 3;
+
+    let mut t = Table::new(
+        "Figure 6 (measured, CNN 32^2): hybrid wins where ghost can't",
+        &["strategy", "time/step", "throughput", "peak RSS", "analytic space x nondp"],
+    );
+    let meta = &manifest.models["conv_bench"];
+    let layers = layers_of(meta);
+    let b = meta.batch as f64;
+    let nondp_space = model_cost(Strategy::NonDp, b, &layers).space;
+    for strat in manifest.strategies_for("conv_bench") {
+        match measure_in_child("conv_bench", &strat, iters) {
+            Ok(r) => {
+                let s = Strategy::parse(&strat).unwrap();
+                t.row(&[
+                    strat.clone(),
+                    fmt_duration(r.mean_step_secs),
+                    format!("{:.0}/s", r.throughput),
+                    fmt_bytes(r.peak_rss as f64),
+                    format!("{:.2}x", model_cost(s, b, &layers).space / nondp_space),
+                ]);
+            }
+            Err(e) => eprintln!("skip {strat}: {e}"),
+        }
+    }
+    emit("fig6_cnn_measured", &t, true);
+
+    // analytic at paper scale
+    for (name, img) in [("vgg11", 224u64), ("beit_large", 224)] {
+        let arch = vision_model(name, img).unwrap();
+        let l: Vec<_> = arch.gl_layers().cloned().collect();
+        let mut ta = Table::new(
+            &format!("Figure 6 (analytic, {name} @{img}^2, B=1): space by implementation"),
+            &["strategy", "space (floats)", "x nondp"],
+        );
+        let nd = model_cost(Strategy::NonDp, 1.0, &l).space;
+        for s in ALL_STRATEGIES {
+            let c = model_cost(s, 1.0, &l);
+            ta.row(&[
+                s.name().into(),
+                fmt_count(c.space),
+                format!("{:.2}x", c.space / nd),
+            ]);
+        }
+        println!();
+        emit(&format!("fig6_{name}_analytic"), &ta, true);
+    }
+    println!(
+        "\nexpected shape (paper Fig 6 + §3.1): ghostclip/bk explode on VGG11 \
+         (first conv 2T^2 = 5e9 floats); hybrids track nondp; on BEiT \
+         (transformer) ghost is fine and hybrids equal bk."
+    );
+}

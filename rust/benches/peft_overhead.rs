@@ -1,0 +1,56 @@
+//! §E.2: DP parameter-efficient fine-tuning — BK on LoRA vs the
+//! per-sample-instantiation (Opacus-style) implementation, measured on
+//! the gptlora artifact, plus the analytic overhead formulas of §E.2.
+
+use fastdp::bench::{artifacts_dir, emit, maybe_run_child, measure_in_child};
+use fastdp::runtime::Manifest;
+use fastdp::util::stats::{fmt_bytes, fmt_count, fmt_duration};
+use fastdp::util::table::Table;
+
+fn main() {
+    maybe_run_child();
+    let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
+    let iters = 3;
+
+    let mut t = Table::new(
+        "DP LoRA fine-tuning (measured, gpt-mini rank 8)",
+        &["strategy", "time/step", "throughput", "peak RSS"],
+    );
+    for strat in manifest.strategies_for("gptlora") {
+        match measure_in_child("gptlora", &strat, iters) {
+            Ok(r) => t
+                .row(&[
+                    strat.clone(),
+                    fmt_duration(r.mean_step_secs),
+                    format!("{:.1}/s", r.throughput),
+                    fmt_bytes(r.peak_rss as f64),
+                ])
+                .to_owned(),
+            Err(e) => {
+                eprintln!("skip {strat}: {e}");
+                continue;
+            }
+        };
+    }
+    emit("peft_measured", &t, false);
+
+    // Analytic §E.2 overheads for LoRA: instantiation Br(p+d) + 2BTr(p+d)
+    // time vs BK 4BT^2 space + 2BT^2(p+d+2r) time.
+    let mut a = Table::new(
+        "§E.2 analytic LoRA overhead per layer (B=16, T=64, d=p=128)",
+        &["rank", "inst space Br(p+d)", "BK space 4BT^2", "BK wins?"],
+    );
+    let (b, t_seq, d, p) = (16.0, 64.0, 128.0, 128.0);
+    for r in [4.0, 16.0, 64.0, 256.0] {
+        let inst = b * r * (p + d);
+        let bk = 4.0 * b * t_seq * t_seq;
+        a.row(&[
+            format!("{r}"),
+            fmt_count(inst),
+            fmt_count(bk),
+            if bk < inst { "yes" } else { "no (small rank)" }.into(),
+        ]);
+    }
+    println!();
+    emit("peft_analytic", &a, false);
+}

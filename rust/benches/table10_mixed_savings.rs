@@ -1,0 +1,36 @@
+//! Table 10: space complexity of the per-sample gradient norm over the
+//! vision zoo at 224^2 — mixed ghost norm vs pure instantiation vs pure
+//! ghost, with the savings multipliers the paper headlines.
+
+use fastdp::arch::catalog::{vision_model, VISION_ZOO};
+use fastdp::bench::emit;
+use fastdp::complexity::{norm_space_ghost, norm_space_inst, norm_space_mixed};
+use fastdp::util::stats::fmt_count;
+use fastdp::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 10: per-sample-norm space @224^2 (B=1)",
+        &["model", "mixed (MGN)", "instantiation", "saving", "ghost", "saving"],
+    );
+    for name in VISION_ZOO {
+        let a = vision_model(name, 224).unwrap();
+        let layers: Vec<_> = a.gl_layers().cloned().collect();
+        let ghost: f64 = layers.iter().map(|l| norm_space_ghost(1.0, l)).sum();
+        let inst: f64 = layers.iter().map(|l| norm_space_inst(1.0, l)).sum();
+        let mixed: f64 = layers.iter().map(|l| norm_space_mixed(1.0, l)).sum();
+        t.row(&[
+            name.to_string(),
+            fmt_count(mixed),
+            fmt_count(inst),
+            format!("{:.1}x", inst / mixed),
+            fmt_count(ghost),
+            format!("{:.1}x", ghost / mixed),
+        ]);
+    }
+    emit("table10_mixed_savings", &t, true);
+    println!(
+        "\npaper reference rows: resnet18 1.0M/11.5M(11.5x)/399M(399x), \
+         vit_base 3.8M/86.3M(22.7x)/3.8M(1.0x), beit_large 5.7M/303.8M(53.3x)/5.7M(1.0x)"
+    );
+}

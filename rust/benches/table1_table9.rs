@@ -1,0 +1,102 @@
+//! Tables 1 & 9: wall-clock efficiency of each DP implementation vs
+//! non-private training — time/step, max throughput, relative speed, and
+//! memory (measured peak RSS per isolated child process + analytic).
+//!
+//! The paper measures GPT2/RoBERTa/BEiT on an A100; this testbed runs the
+//! architecture-faithful scaled artifacts on XLA-CPU. Absolute numbers
+//! differ; the *ordering and ratios* are the reproduction target:
+//!   speed:  nondp > bk > ghostclip > opacus   (T small)
+//!   memory: opacus >> bk ~ ghostclip ~ nondp
+
+use fastdp::bench::{artifacts_dir, emit, maybe_run_child, measure_in_child};
+use fastdp::complexity::{model_cost, Strategy};
+use fastdp::runtime::Manifest;
+use fastdp::util::stats::{fmt_bytes, fmt_duration};
+use fastdp::util::table::Table;
+
+fn main() {
+    maybe_run_child();
+    let manifest = Manifest::load(&artifacts_dir()).expect("manifest (run `make artifacts`)");
+    let iters = std::env::var("FASTDP_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+
+    let mut t = Table::new(
+        "Table 1/9: per-implementation efficiency (measured, XLA-CPU)",
+        &[
+            "model", "strategy", "time/step", "throughput", "speedup by bk",
+            "peak RSS", "analytic time x", "analytic space x",
+        ],
+    );
+    for model in ["gpt_bench", "mlp_wide"] {
+        let meta = &manifest.models[model];
+        let layers = fastdp::bench::layers_of(meta);
+        let b = meta.batch as f64;
+        let bk_analytic = model_cost(Strategy::Bk, b, &layers);
+
+        let mut bk_time = None;
+        let strategies = manifest.strategies_for(model);
+        // bk first so the speedup column is available
+        let mut ordered = vec!["bk".to_string()];
+        ordered.extend(strategies.iter().filter(|s| *s != "bk").cloned());
+        let mut rows = Vec::new();
+        for strat in &ordered {
+            match measure_in_child(model, strat, iters) {
+                Ok(r) => {
+                    if strat == "bk" {
+                        bk_time = Some(r.mean_step_secs);
+                    }
+                    rows.push(r);
+                }
+                Err(e) => eprintln!("skip {model}:{strat}: {e}"),
+            }
+        }
+        for r in rows {
+            let s = Strategy::parse(&r.strategy).unwrap();
+            let c = model_cost(s, b, &layers);
+            t.row(&[
+                r.model.clone(),
+                r.strategy.clone(),
+                fmt_duration(r.mean_step_secs),
+                format!("{:.1}/s", r.throughput),
+                bk_time
+                    .map(|bt| format!("{:.2}x", r.mean_step_secs / bt))
+                    .unwrap_or_default(),
+                fmt_bytes(r.peak_rss as f64),
+                format!("{:.2}x", c.time / bk_analytic.time),
+                format!("{:.2}x", c.space / bk_analytic.space),
+            ]);
+        }
+    }
+    emit("table1_table9", &t, false);
+
+    // Max-batch estimate under a memory ceiling (the paper's 40GB A100):
+    // argmax B s.t. analytic space(B) <= ceiling.
+    let mut mb = Table::new(
+        "Table 9 (max physical batch under 40GB, analytic, gpt2 T=100)",
+        &["strategy", "max batch", "space at max"],
+    );
+    let gpt2 = fastdp::arch::catalog::language_model("gpt2", 100).unwrap();
+    let layers: Vec<_> = gpt2.gl_layers().cloned().collect();
+    let ceiling = 40e9 / 4.0; // floats
+    for s in fastdp::complexity::ALL_STRATEGIES {
+        let mut b = 1u64;
+        while model_cost(s, (b * 2) as f64, &layers).space < ceiling && b < (1 << 20) {
+            b *= 2;
+        }
+        // refine linearly
+        let mut best = b;
+        for cand in (b..=b * 2).step_by((b / 8).max(1) as usize) {
+            if model_cost(s, cand as f64, &layers).space < ceiling {
+                best = cand;
+            }
+        }
+        mb.row(&[
+            s.name().into(),
+            best.to_string(),
+            fmt_bytes(model_cost(s, best as f64, &layers).space * 4.0),
+        ]);
+    }
+    emit("table9_maxbatch", &mb, false);
+}

@@ -1,0 +1,83 @@
+//! Tables 2 & 5: per-layer complexity of every DP implementation —
+//! the paper's symbolic coefficients evaluated on representative layers
+//! in the small-T (language) and large-T (first-conv) regimes, plus the
+//! qualitative Table 2 summary (backprops / instantiation flags).
+
+use fastdp::arch::{LayerDims, LayerKind};
+use fastdp::complexity::{layer_cost, ALL_STRATEGIES};
+use fastdp::bench::emit;
+use fastdp::util::stats::fmt_count;
+use fastdp::util::table::Table;
+
+fn layer(t: u64, d: u64, p: u64) -> LayerDims {
+    LayerDims {
+        kind: LayerKind::Linear,
+        name: "rep".into(),
+        t,
+        d,
+        p,
+    }
+}
+
+fn main() {
+    // Table 2 qualitative summary
+    let mut t2 = Table::new(
+        "Table 2: implementation properties",
+        &["strategy", "backprops", "instantiates psg", "ghost norm"],
+    );
+    for s in ALL_STRATEGIES {
+        t2.row(&[
+            s.name().into(),
+            s.backprops().to_string(),
+            if s.instantiates_psg() { "yes" } else { "no" }.into(),
+            match s.name() {
+                "ghostclip" | "bk" => "always",
+                "nondp" | "opacus" | "fastgradclip" => "never",
+                _ => "layerwise",
+            }
+            .into(),
+        ]);
+    }
+    emit("table2_properties", &t2, false);
+
+    // Table 5 evaluated: one RoBERTa-like layer (T=256, d=p=1024) and the
+    // VGG11 first conv (T=224^2, d=27, p=64), B=32.
+    let b = 32.0;
+    for (tag, l) in [
+        ("language layer T=256 d=p=1024", layer(256, 1024, 1024)),
+        (
+            "vgg11 conv1 T=224^2 d=27 p=64",
+            LayerDims {
+                kind: LayerKind::Conv,
+                name: "conv1".into(),
+                t: 224 * 224,
+                d: 27,
+                p: 64,
+            },
+        ),
+    ] {
+        let mut t5 = Table::new(
+            &format!("Table 5 evaluated: {tag} (B={b})"),
+            &["strategy", "time", "vs nondp", "space overhead"],
+        );
+        let nondp = layer_cost(fastdp::complexity::Strategy::NonDp, b, &l).time;
+        for s in ALL_STRATEGIES {
+            let c = layer_cost(s, b, &l);
+            t5.row(&[
+                s.name().into(),
+                fmt_count(c.time),
+                format!("{:.3}x", c.time / nondp),
+                fmt_count(c.space_overhead),
+            ]);
+        }
+        emit(
+            &format!(
+                "table5_{}",
+                if tag.starts_with("language") { "language" } else { "conv" }
+            ),
+            &t5,
+            false,
+        );
+        println!();
+    }
+}

@@ -1,0 +1,72 @@
+//! Table 3: time/space of the six computation modules, plus a *measured*
+//! validation that the analytic model predicts real XLA-CPU ratios: the
+//! BK-vs-GhostClip and BK-vs-Opacus step-time ratios on the gpt_bench
+//! artifacts should land near the analytic prediction.
+
+use fastdp::bench::{artifacts_dir, emit, layers_of, maybe_run_child, measure_in_child};
+use fastdp::arch::{LayerDims, LayerKind};
+use fastdp::complexity::{model_cost, module_space, module_time, Module, Strategy};
+use fastdp::runtime::Manifest;
+use fastdp::util::stats::fmt_count;
+use fastdp::util::table::Table;
+
+fn main() {
+    maybe_run_child();
+
+    let l = LayerDims {
+        kind: LayerKind::Linear,
+        name: "rep".into(),
+        t: 64,
+        d: 512,
+        p: 512,
+    };
+    let b = 16.0;
+    let mut t3 = Table::new(
+        "Table 3: module costs on a T=64, d=p=512 layer (B=16)",
+        &["module", "time", "space"],
+    );
+    for (name, m) in [
+        ("(1) forward", Module::Forward),
+        ("(2a) output grad", Module::OutputGrad),
+        ("(2b) param grad", Module::ParamGrad),
+        ("(3) ghost norm", Module::GhostNorm),
+        ("(4) psg instantiation", Module::PsgInstantiation),
+        ("(5) weighted sum", Module::WeightedSum),
+    ] {
+        t3.row(&[
+            name.into(),
+            fmt_count(module_time(m, b, &l)),
+            fmt_count(module_space(m, b, &l)),
+        ]);
+    }
+    emit("table3_modules", &t3, false);
+
+    // measured validation on gpt_bench
+    let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
+    let meta = &manifest.models["gpt_bench"];
+    let layers = layers_of(meta);
+    let bb = meta.batch as f64;
+    let predict = |s: Strategy| model_cost(s, bb, &layers).time;
+
+    let mut v = Table::new(
+        "analytic vs measured step-time ratios (gpt_bench)",
+        &["pair", "analytic", "measured"],
+    );
+    let iters = 3;
+    let bk = measure_in_child("gpt_bench", "bk", iters).expect("bk");
+    for other in ["nondp", "ghostclip", "opacus", "fastgradclip"] {
+        match measure_in_child("gpt_bench", other, iters) {
+            Ok(r) => {
+                let s = Strategy::parse(other).unwrap();
+                v.row(&[
+                    format!("{other}/bk"),
+                    format!("{:.2}x", predict(s) / predict(Strategy::Bk)),
+                    format!("{:.2}x", r.mean_step_secs / bk.mean_step_secs),
+                ]);
+            }
+            Err(e) => eprintln!("skip {other}: {e}"),
+        }
+    }
+    println!();
+    emit("table3_validation", &v, false);
+}

@@ -1,0 +1,69 @@
+//! Table 8: whole-model time and space complexity at B=100 for BK vs
+//! non-DP / GhostClip / Opacus, over the language + vision lineup of the
+//! paper (text T=256, GPT2 at T=100 and T=1000, vision at 224^2).
+
+use fastdp::arch::catalog::{language_model, vision_model};
+use fastdp::bench::emit;
+use fastdp::complexity::{model_cost, Strategy};
+use fastdp::util::stats::fmt_count;
+use fastdp::util::table::Table;
+
+fn main() {
+    let b = 100.0;
+    let rows: Vec<(String, Vec<fastdp::arch::LayerDims>, Strategy)> = vec![
+        ("roberta-base T=256", language_model("roberta-base", 256), Strategy::Bk),
+        ("roberta-large T=256", language_model("roberta-large", 256), Strategy::Bk),
+        ("vit-base 224^2", vision_model("vit_base", 224), Strategy::BkMixOpt),
+        ("vit-large 224^2", vision_model("vit_large", 224), Strategy::BkMixOpt),
+        ("beit-large 224^2", vision_model("beit_large", 224), Strategy::BkMixOpt),
+        ("gpt2 T=100", language_model("gpt2", 100), Strategy::Bk),
+        ("gpt2-medium T=100", language_model("gpt2-medium", 100), Strategy::Bk),
+        ("gpt2-large T=100", language_model("gpt2-large", 100), Strategy::Bk),
+        ("gpt2 T=1000", language_model("gpt2", 1000), Strategy::Bk),
+        ("gpt2-medium T=1000", language_model("gpt2-medium", 1000), Strategy::Bk),
+        ("gpt2-large T=1000", language_model("gpt2-large", 1000), Strategy::Bk),
+    ]
+    .into_iter()
+    .map(|(n, a, s)| (n.to_string(), a.unwrap().gl_layers().cloned().collect(), s))
+    .collect();
+
+    let mut t = Table::new(
+        "Table 8: time complexity at B=100 (ratios vs BK in parens)",
+        &["model", "BK", "non-DP", "GhostClip", "Opacus"],
+    );
+    let mut ts = Table::new(
+        "Table 8: space complexity at B=100 (ratios vs BK in parens)",
+        &["model", "BK", "non-DP", "GhostClip", "Opacus"],
+    );
+    for (name, layers, bk_variant) in &rows {
+        let bk = model_cost(*bk_variant, b, layers);
+        let fmt = |c: fastdp::complexity::ModelCost, base: f64, time: bool| {
+            let v = if time { c.time } else { c.space };
+            format!("{} ({:.2}x)", fmt_count(v), v / base)
+        };
+        let nd = model_cost(Strategy::NonDp, b, layers);
+        let gc = model_cost(Strategy::GhostClip, b, layers);
+        let op = model_cost(Strategy::Opacus, b, layers);
+        t.row(&[
+            name.clone(),
+            fmt_count(bk.time),
+            fmt(nd.clone(), bk.time, true),
+            fmt(gc.clone(), bk.time, true),
+            fmt(op.clone(), bk.time, true),
+        ]);
+        ts.row(&[
+            name.clone(),
+            fmt_count(bk.space),
+            fmt(nd, bk.space, false),
+            fmt(gc, bk.space, false),
+            fmt(op, bk.space, false),
+        ]);
+    }
+    emit("table8_time", &t, true);
+    println!();
+    emit("table8_space", &ts, true);
+    println!(
+        "\npaper reference (T=100/256): non-DP 0.86-0.97x, GhostClip 1.54-1.66x, \
+         Opacus 1.01-1.30x time; Opacus 3.2-10.1x space"
+    );
+}

@@ -1,0 +1,150 @@
+//! Named catalog: every model the paper's tables/figures mention,
+//! constructible at any input resolution / sequence length.
+
+use super::{language, vision, Arch};
+
+/// Vision models at a given square image size.
+pub fn vision_model(name: &str, img: u64) -> Option<Arch> {
+    let a = match name {
+        "resnet18" => vision::resnet(name, img, [2, 2, 2, 2], false, false),
+        "resnet34" => vision::resnet(name, img, [3, 4, 6, 3], false, false),
+        "resnet50" => vision::resnet(name, img, [3, 4, 6, 3], true, false),
+        "resnet101" => vision::resnet(name, img, [3, 4, 23, 3], true, false),
+        "resnet152" => vision::resnet(name, img, [3, 8, 36, 3], true, false),
+        "wide_resnet50" => vision::resnet(name, img, [3, 4, 6, 3], true, true),
+        "wide_resnet101" => vision::resnet(name, img, [3, 4, 23, 3], true, true),
+        "vgg11" => vision::vgg(name, img, &vision::VGG11),
+        "vgg13" => vision::vgg(name, img, &vision::VGG13),
+        "vgg16" => vision::vgg(name, img, &vision::VGG16),
+        "vgg19" => vision::vgg(name, img, &vision::VGG19),
+        "densenet121" => vision::densenet(name, img, [6, 12, 24, 16], 32, 64),
+        "densenet161" => vision::densenet(name, img, [6, 12, 36, 24], 48, 96),
+        "densenet201" => vision::densenet(name, img, [6, 12, 48, 32], 32, 64),
+        "vit_tiny" => vision::vit(name, img, 16, 192, 12, true),
+        "vit_small" => vision::vit(name, img, 16, 384, 12, true),
+        "vit_base" => vision::vit(name, img, 16, 768, 12, true),
+        "vit_large" => vision::vit(name, img, 16, 1024, 24, true),
+        "deit_tiny" => vision::vit(name, img, 16, 192, 12, true),
+        "deit_small" => vision::vit(name, img, 16, 384, 12, true),
+        "deit_base" => vision::vit(name, img, 16, 768, 12, true),
+        "beit_base" => vision::vit(name, img, 16, 768, 12, true),
+        "beit_large" => vision::vit(name, img, 16, 1024, 24, true),
+        "crossvit_tiny" => vision::crossvit(name, 240, 96, 192, 9),
+        "crossvit_small" => vision::crossvit(name, 240, 192, 384, 9),
+        "crossvit_base" => vision::crossvit(name, 240, 384, 768, 9),
+        "convnext_small" => vision::convnext(name, img, [96, 192, 384, 768], [3, 3, 27, 3]),
+        "convnext_base" => vision::convnext(name, img, [128, 256, 512, 1024], [3, 3, 27, 3]),
+        "convnext_large" => vision::convnext(name, img, [192, 384, 768, 1536], [3, 3, 27, 3]),
+        _ => return None,
+    };
+    Some(a)
+}
+
+/// Language models at a given sequence length.
+pub fn language_model(name: &str, t: u64) -> Option<Arch> {
+    let a = match name {
+        "gpt2" => language::gpt2(name, t, 768, 12),
+        "gpt2-medium" => language::gpt2(name, t, 1024, 24),
+        "gpt2-large" => language::gpt2(name, t, 1280, 36),
+        "roberta-base" => language::roberta(name, t, 768, 12),
+        "roberta-large" => language::roberta(name, t, 1024, 24),
+        "distilroberta-base" => language::roberta(name, t, 768, 6),
+        "bert-base" => language::bert(name, t, 768, 12, 30522),
+        "bert-large" => language::bert(name, t, 1024, 24, 30522),
+        "longformer-base" => language::longformer(name, t, 768, 12),
+        "longformer-large" => language::longformer(name, t, 1024, 24),
+        "t5-small" => language::t5(name, t, 512, 2048, 6, 6),
+        "t5-base" => language::t5(name, t, 768, 3072, 12, 12),
+        "t5-large" => language::t5(name, t, 1024, 4096, 24, 24),
+        _ => return None,
+    };
+    Some(a)
+}
+
+/// Any model with the paper's default dims (224^2 images, T = 256 text).
+pub fn by_name(name: &str) -> Option<Arch> {
+    vision_model(name, 224).or_else(|| language_model(name, 256))
+}
+
+/// The Table 7 / Table 10 model zoo, in paper order.
+pub const VISION_ZOO: [&str; 25] = [
+    "resnet18",
+    "resnet34",
+    "resnet50",
+    "resnet101",
+    "resnet152",
+    "densenet121",
+    "densenet161",
+    "densenet201",
+    "wide_resnet50",
+    "wide_resnet101",
+    "vit_tiny",
+    "vit_small",
+    "vit_base",
+    "vit_large",
+    "crossvit_tiny",
+    "crossvit_small",
+    "crossvit_base",
+    "convnext_small",
+    "convnext_base",
+    "convnext_large",
+    "deit_tiny",
+    "deit_small",
+    "deit_base",
+    "beit_base",
+    "beit_large",
+];
+
+pub const LANGUAGE_ZOO: [&str; 13] = [
+    "roberta-base",
+    "roberta-large",
+    "distilroberta-base",
+    "bert-base",
+    "bert-large",
+    "longformer-base",
+    "longformer-large",
+    "t5-small",
+    "t5-base",
+    "t5-large",
+    "gpt2",
+    "gpt2-medium",
+    "gpt2-large",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_zoo_constructs() {
+        for name in VISION_ZOO {
+            let a = vision_model(name, 224).unwrap_or_else(|| panic!("{name}"));
+            assert!(a.total_params() > 1_000_000, "{name} too small");
+            assert!(!a.layers.is_empty());
+        }
+        for name in LANGUAGE_ZOO {
+            let a = language_model(name, 256).unwrap_or_else(|| panic!("{name}"));
+            assert!(a.total_params() > 10_000_000, "{name} too small");
+        }
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn table7_fractions_above_98_percent() {
+        // Paper Table 7: every zoo model has >= 98.9% of trainable params
+        // in generalized linear weights.
+        for name in VISION_ZOO.iter().chain(LANGUAGE_ZOO.iter()) {
+            let a = by_name(name).unwrap();
+            let f = a.bk_applicable_fraction();
+            assert!(f > 0.975, "{name}: BK fraction {f:.4}");
+        }
+    }
+
+    #[test]
+    fn resolution_scales_t_not_params() {
+        let lo = vision_model("resnet18", 224).unwrap();
+        let hi = vision_model("resnet18", 512).unwrap();
+        assert_eq!(lo.total_params(), hi.total_params());
+        assert!(hi.layers[0].t > lo.layers[0].t);
+    }
+}

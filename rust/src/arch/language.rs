@@ -1,0 +1,171 @@
+//! Language architectures: GPT2, BERT/RoBERTa (+distil), Longformer, T5.
+//! T (sequence length) is a free parameter — the paper evaluates GPT2 at
+//! T = 100 and T = 1000, RoBERTa at T = 256, Longformer at T = 4096.
+
+use super::Arch;
+
+/// GPT2 family (Conv1D layers in HF are linears; c_attn fuses qkv).
+pub fn gpt2(name: &str, t: u64, dm: u64, depth: u64) -> Arch {
+    let mut a = Arch::new(name);
+    let vocab = 50257;
+    a.embedding("wte", t, vocab, dm);
+    a.embedding("wpe", t, 1024, dm);
+    for i in 0..depth {
+        a.norm(&format!("h{i}.ln1"), t, dm);
+        a.linear(&format!("h{i}.attn.c_attn"), t, dm, 3 * dm, true);
+        a.linear(&format!("h{i}.attn.c_proj"), t, dm, dm, true);
+        a.norm(&format!("h{i}.ln2"), t, dm);
+        a.linear(&format!("h{i}.mlp.c_fc"), t, dm, 4 * dm, true);
+        a.linear(&format!("h{i}.mlp.c_proj"), t, 4 * dm, dm, true);
+    }
+    a.norm("ln_f", t, dm);
+    // lm_head is tied to wte — not counted twice.
+    a
+}
+
+/// BERT/RoBERTa encoder (separate q,k,v,o projections).
+pub fn bert_like(name: &str, t: u64, dm: u64, depth: u64, vocab: u64, max_pos: u64) -> Arch {
+    let mut a = Arch::new(name);
+    a.embedding("word_emb", t, vocab, dm);
+    a.embedding("pos_emb", t, max_pos, dm);
+    a.embedding("type_emb", t, 2, dm);
+    a.norm("emb_ln", t, dm);
+    for i in 0..depth {
+        for nm in ["q", "k", "v", "o"] {
+            a.linear(&format!("l{i}.attn.{nm}"), t, dm, dm, true);
+        }
+        a.norm(&format!("l{i}.attn_ln"), t, dm);
+        a.linear(&format!("l{i}.fc1"), t, dm, 4 * dm, true);
+        a.linear(&format!("l{i}.fc2"), t, 4 * dm, dm, true);
+        a.norm(&format!("l{i}.out_ln"), t, dm);
+    }
+    a.linear("pooler", 1, dm, dm, true);
+    a
+}
+
+pub fn roberta(name: &str, t: u64, dm: u64, depth: u64) -> Arch {
+    bert_like(name, t, dm, depth, 50265, 514)
+}
+
+pub fn bert(name: &str, t: u64, dm: u64, depth: u64, vocab: u64) -> Arch {
+    bert_like(name, t, dm, depth, vocab, 512)
+}
+
+/// Longformer: RoBERTa weights + extra global-attention q,k,v per layer.
+pub fn longformer(name: &str, t: u64, dm: u64, depth: u64) -> Arch {
+    let mut a = bert_like(name, t, dm, depth, 50265, 4098);
+    for i in 0..depth {
+        for nm in ["q_global", "k_global", "v_global"] {
+            a.linear(&format!("l{i}.attn.{nm}"), t, dm, dm, true);
+        }
+    }
+    a
+}
+
+/// T5 encoder-decoder; no biases anywhere (paper Table 7: bias = 0),
+/// RMSNorm has a single scale vector per layer.
+pub fn t5(name: &str, t: u64, dm: u64, ff: u64, enc: u64, dec: u64) -> Arch {
+    let mut a = Arch::new(name);
+    let vocab = 32128;
+    a.embedding("shared_emb", t, vocab, dm);
+    for i in 0..enc {
+        for nm in ["q", "k", "v", "o"] {
+            a.linear(&format!("enc{i}.attn.{nm}"), t, dm, dm, false);
+        }
+        a.linear(&format!("enc{i}.wi"), t, dm, ff, false);
+        a.linear(&format!("enc{i}.wo"), t, ff, dm, false);
+        // two RMSNorms: scale only (p params each) — count as other
+        a.other_params += 2 * dm;
+    }
+    for i in 0..dec {
+        for nm in ["q", "k", "v", "o", "xq", "xk", "xv", "xo"] {
+            a.linear(&format!("dec{i}.attn.{nm}"), t, dm, dm, false);
+        }
+        a.linear(&format!("dec{i}.wi"), t, dm, ff, false);
+        a.linear(&format!("dec{i}.wo"), t, ff, dm, false);
+        a.other_params += 3 * dm;
+    }
+    a.other_params += 2 * dm; // final norms
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_small_params() {
+        let a = gpt2("gpt2", 100, 768, 12);
+        // HF gpt2: 124.4M total
+        let total = a.total_params();
+        assert!(
+            (total as f64 - 124.4e6).abs() / 124.4e6 < 0.01,
+            "gpt2 params {total}"
+        );
+        // paper Table 7: GL weights 124.3M (includes embeddings), other 38400
+        assert!((a.gl_weight_params() as f64 - 124.3e6).abs() / 124.3e6 < 0.01);
+        assert_eq!(a.other_params, 2 * 768 * 25);
+    }
+
+    #[test]
+    fn gpt2_large_params() {
+        let a = gpt2("gpt2-large", 100, 1280, 36);
+        let total = a.total_params();
+        assert!(
+            (total as f64 - 774.0e6).abs() / 774.0e6 < 0.01,
+            "gpt2-large params {total}"
+        );
+    }
+
+    #[test]
+    fn roberta_base_params() {
+        let a = roberta("roberta-base", 256, 768, 12);
+        let total = a.total_params();
+        // HF roberta-base: ~124.6M (sans LM head)
+        assert!(
+            (total as f64 - 124.6e6).abs() / 124.6e6 < 0.02,
+            "roberta-base params {total}"
+        );
+        assert!(a.bk_applicable_fraction() > 0.998);
+    }
+
+    #[test]
+    fn roberta_large_params() {
+        let a = roberta("roberta-large", 256, 1024, 24);
+        let total = a.total_params();
+        assert!(
+            (total as f64 - 355.0e6).abs() / 355.0e6 < 0.02,
+            "roberta-large params {total}"
+        );
+    }
+
+    #[test]
+    fn bert_base_params() {
+        let a = bert("bert-base-uncased", 256, 768, 12, 30522);
+        let total = a.total_params();
+        assert!(
+            (total as f64 - 109.5e6).abs() / 109.5e6 < 0.02,
+            "bert-base params {total}"
+        );
+    }
+
+    #[test]
+    fn t5_base_params() {
+        let a = t5("t5-base", 256, 768, 3072, 12, 12);
+        let total = a.total_params();
+        // paper Table 7: 222.9M GL weights, zero bias
+        assert!(
+            (total as f64 - 222.9e6).abs() / 222.9e6 < 0.02,
+            "t5-base params {total}"
+        );
+        assert_eq!(a.gl_bias, 0);
+    }
+
+    #[test]
+    fn sequence_length_is_free() {
+        let short = gpt2("g", 100, 768, 12);
+        let long = gpt2("g", 1000, 768, 12);
+        assert_eq!(short.total_params(), long.total_params());
+        assert_eq!(long.layers[2].t, 1000);
+    }
+}

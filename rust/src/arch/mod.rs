@@ -1,0 +1,163 @@
+//! Architecture catalog: per-layer (T, d, p) dims for the model zoo the
+//! paper analyzes (Tables 4, 7, 8, 10; Figures 7, 10-19).
+//!
+//! Dimension conventions (paper Appendix B):
+//!  * linear     — d = in features, p = out features, T = tokens (1 if none)
+//!  * conv       — d = C_in * k_h * k_w, p = C_out, T = H_out * W_out
+//!  * embedding  — d = vocab, p = dim, T = sequence length
+//!  * norm       — p = normalized dim (gamma + beta = 2p params)
+//!
+//! These are *shape calculators*, not weights: they let the complexity
+//! engine evaluate full-size GPT2 / ResNet / ViT on ImageNet dims even
+//! though the CPU testbed executes only the scaled-down artifacts.
+
+pub mod catalog;
+pub mod language;
+pub mod vision;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Linear,
+    Conv,
+    Embedding,
+    Norm,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerDims {
+    pub kind: LayerKind,
+    pub name: String,
+    pub t: u64,
+    pub d: u64,
+    pub p: u64,
+}
+
+impl LayerDims {
+    pub fn weight_params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Norm => 0,
+            _ => self.d * self.p,
+        }
+    }
+}
+
+/// A named architecture: ordered layers plus bias/norm bookkeeping for
+/// the Table 7 parameter census.
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: String,
+    pub layers: Vec<LayerDims>,
+    /// Bias parameter count over generalized linear layers.
+    pub gl_bias: u64,
+    /// Weight+bias parameters in non-GL layers (norms).
+    pub other_params: u64,
+}
+
+impl Arch {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            layers: Vec::new(),
+            gl_bias: 0,
+            other_params: 0,
+        }
+    }
+
+    pub fn linear(&mut self, name: &str, t: u64, d: u64, p: u64, bias: bool) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::Linear,
+            name: name.into(),
+            t,
+            d,
+            p,
+        });
+        if bias {
+            self.gl_bias += p;
+        }
+        self
+    }
+
+    /// Conv with explicit output spatial size.
+    pub fn conv_dims(
+        &mut self,
+        name: &str,
+        t_out: u64,
+        cin: u64,
+        cout: u64,
+        k: u64,
+        bias: bool,
+    ) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::Conv,
+            name: name.into(),
+            t: t_out,
+            d: cin * k * k,
+            p: cout,
+        });
+        if bias {
+            self.gl_bias += cout;
+        }
+        self
+    }
+
+    pub fn embedding(&mut self, name: &str, t: u64, vocab: u64, dim: u64) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::Embedding,
+            name: name.into(),
+            t,
+            d: vocab,
+            p: dim,
+        });
+        self
+    }
+
+    pub fn norm(&mut self, name: &str, t: u64, dim: u64) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::Norm,
+            name: name.into(),
+            t,
+            d: dim,
+            p: dim,
+        });
+        self.other_params += 2 * dim;
+        self
+    }
+
+    /// Weight parameters in generalized linear layers (Table 7 col 1).
+    pub fn gl_weight_params(&self) -> u64 {
+        self.layers.iter().map(LayerDims::weight_params).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.gl_weight_params() + self.gl_bias + self.other_params
+    }
+
+    /// Fraction of trainable parameters BK applies to (Table 7 last col).
+    pub fn bk_applicable_fraction(&self) -> f64 {
+        self.gl_weight_params() as f64 / self.total_params() as f64
+    }
+
+    /// Only the generalized linear layers (complexity tables skip norms).
+    pub fn gl_layers(&self) -> impl Iterator<Item = &LayerDims> {
+        self.layers.iter().filter(|l| l.kind != LayerKind::Norm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_builder_counts() {
+        let mut a = Arch::new("toy");
+        a.linear("fc1", 1, 10, 20, true)
+            .norm("ln", 1, 20)
+            .conv_dims("c1", 64, 3, 8, 3, true)
+            .embedding("emb", 16, 100, 32);
+        assert_eq!(a.gl_weight_params(), 10 * 20 + 27 * 8 + 100 * 32);
+        assert_eq!(a.gl_bias, 20 + 8);
+        assert_eq!(a.other_params, 40);
+        assert_eq!(a.gl_layers().count(), 3);
+        assert!(a.bk_applicable_fraction() > 0.95);
+    }
+}

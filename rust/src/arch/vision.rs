@@ -1,0 +1,362 @@
+//! Vision architectures: ResNet / WideResNet, VGG, DenseNet, ViT / DeiT /
+//! BEiT, CrossViT, ConvNeXt — at arbitrary input resolution (the paper
+//! sweeps 32^2 / 224^2 / 512^2 in Figures 7 and 10-19).
+
+use super::Arch;
+
+/// Spatial tracker: square feature maps through convs/pools.
+#[derive(Clone, Copy)]
+struct Hw(u64);
+
+impl Hw {
+    fn conv(&mut self, k: u64, stride: u64, pad: u64) -> u64 {
+        self.0 = (self.0 + 2 * pad - k) / stride + 1;
+        self.0
+    }
+
+    fn t(&self) -> u64 {
+        self.0 * self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ResNet family
+
+fn basic_block(a: &mut Arch, hw: &mut Hw, idx: &mut u32, cin: u64, cout: u64, stride: u64) {
+    let t_in = hw.t();
+    hw.conv(3, stride, 1);
+    a.conv_dims(&format!("layer{idx}.conv1"), hw.t(), cin, cout, 3, false);
+    a.norm(&format!("layer{idx}.bn1"), hw.t(), cout);
+    a.conv_dims(&format!("layer{idx}.conv2"), hw.t(), cout, cout, 3, false);
+    a.norm(&format!("layer{idx}.bn2"), hw.t(), cout);
+    if stride != 1 || cin != cout {
+        // 1x1 downsample on the residual path
+        let _ = t_in;
+        a.conv_dims(&format!("layer{idx}.down"), hw.t(), cin, cout, 1, false);
+        a.norm(&format!("layer{idx}.bn_down"), hw.t(), cout);
+    }
+    *idx += 1;
+}
+
+fn bottleneck(
+    a: &mut Arch,
+    hw: &mut Hw,
+    idx: &mut u32,
+    cin: u64,
+    width: u64,
+    cout: u64,
+    stride: u64,
+) {
+    a.conv_dims(&format!("layer{idx}.conv1"), hw.t(), cin, width, 1, false);
+    a.norm(&format!("layer{idx}.bn1"), hw.t(), width);
+    hw.conv(3, stride, 1);
+    a.conv_dims(&format!("layer{idx}.conv2"), hw.t(), width, width, 3, false);
+    a.norm(&format!("layer{idx}.bn2"), hw.t(), width);
+    a.conv_dims(&format!("layer{idx}.conv3"), hw.t(), width, cout, 1, false);
+    a.norm(&format!("layer{idx}.bn3"), hw.t(), cout);
+    if stride != 1 || cin != cout {
+        a.conv_dims(&format!("layer{idx}.down"), hw.t(), cin, cout, 1, false);
+        a.norm(&format!("layer{idx}.bn_down"), hw.t(), cout);
+    }
+    *idx += 1;
+}
+
+/// blocks: per-stage block counts; `wide` doubles the bottleneck width.
+pub fn resnet(name: &str, img: u64, blocks: [u64; 4], bottle: bool, wide: bool) -> Arch {
+    let mut a = Arch::new(name);
+    let mut hw = Hw(img);
+    hw.conv(7, 2, 3);
+    a.conv_dims("conv1", hw.t(), 3, 64, 7, false);
+    a.norm("bn1", hw.t(), 64);
+    hw.conv(3, 2, 1); // maxpool
+
+    let expansion = if bottle { 4 } else { 1 };
+    let mut cin = 64u64;
+    let mut idx = 0u32;
+    for (stage, &n) in blocks.iter().enumerate() {
+        let base = 64 << stage;
+        // torchvision "wide" doubles the bottleneck's inner 3x3 width
+        // (width_per_group = 128); the block output stays base * 4.
+        let width = if wide { base * 2 } else { base };
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            if bottle {
+                bottleneck(&mut a, &mut hw, &mut idx, cin, width, base * 4, stride);
+                cin = base * 4;
+            } else {
+                basic_block(&mut a, &mut hw, &mut idx, cin, base, stride);
+                cin = base;
+            }
+        }
+    }
+    a.linear("fc", 1, 512 * expansion, 1000, true);
+    a
+}
+
+// ---------------------------------------------------------------------------
+// VGG
+
+pub fn vgg(name: &str, img: u64, cfg: &[i64]) -> Arch {
+    // cfg entries: channel count, or -1 for maxpool.
+    let mut a = Arch::new(name);
+    let mut hw = Hw(img);
+    let mut cin = 3u64;
+    let mut i = 0;
+    for &c in cfg {
+        if c < 0 {
+            hw.conv(2, 2, 0);
+        } else {
+            hw.conv(3, 1, 1);
+            a.conv_dims(&format!("conv{i}"), hw.t(), cin, c as u64, 3, true);
+            cin = c as u64;
+            i += 1;
+        }
+    }
+    // classifier expects 7x7 after adaptive pool at 224; scale with input
+    let pool = 7u64;
+    a.linear("fc1", 1, cin * pool * pool, 4096, true);
+    a.linear("fc2", 1, 4096, 4096, true);
+    a.linear("fc3", 1, 4096, 1000, true);
+    a
+}
+
+pub const VGG11: [i64; 13] = [64, -1, 128, -1, 256, 256, -1, 512, 512, -1, 512, 512, -1];
+pub const VGG13: [i64; 15] = [64, 64, -1, 128, 128, -1, 256, 256, -1, 512, 512, -1, 512, 512, -1];
+pub const VGG16: [i64; 18] = [
+    64, 64, -1, 128, 128, -1, 256, 256, 256, -1, 512, 512, 512, -1, 512, 512, 512, -1,
+];
+pub const VGG19: [i64; 21] = [
+    64, 64, -1, 128, 128, -1, 256, 256, 256, 256, -1, 512, 512, 512, 512, -1, 512, 512, 512, 512,
+    -1,
+];
+
+// ---------------------------------------------------------------------------
+// DenseNet
+
+pub fn densenet(name: &str, img: u64, blocks: [u64; 4], growth: u64, init: u64) -> Arch {
+    let mut a = Arch::new(name);
+    let mut hw = Hw(img);
+    hw.conv(7, 2, 3);
+    a.conv_dims("conv0", hw.t(), 3, init, 7, false);
+    a.norm("bn0", hw.t(), init);
+    hw.conv(3, 2, 1);
+    let mut c = init;
+    for (bi, &n) in blocks.iter().enumerate() {
+        for li in 0..n {
+            // dense layer: bn + 1x1 -> 4k, bn + 3x3 -> k
+            a.norm(&format!("b{bi}l{li}.bn1"), hw.t(), c);
+            a.conv_dims(&format!("b{bi}l{li}.conv1"), hw.t(), c, 4 * growth, 1, false);
+            a.norm(&format!("b{bi}l{li}.bn2"), hw.t(), 4 * growth);
+            a.conv_dims(&format!("b{bi}l{li}.conv2"), hw.t(), 4 * growth, growth, 3, false);
+            c += growth;
+        }
+        if bi < 3 {
+            // transition: 1x1 halving + avgpool/2
+            a.norm(&format!("t{bi}.bn"), hw.t(), c);
+            a.conv_dims(&format!("t{bi}.conv"), hw.t(), c, c / 2, 1, false);
+            c /= 2;
+            hw.conv(2, 2, 0);
+        }
+    }
+    a.norm("bn_final", hw.t(), c);
+    a.linear("classifier", 1, c, 1000, true);
+    a
+}
+
+// ---------------------------------------------------------------------------
+// ViT / DeiT / BEiT (isotropic transformers on patches)
+
+pub fn vit(name: &str, img: u64, patch: u64, dm: u64, depth: u64, cls_token: bool) -> Arch {
+    let mut a = Arch::new(name);
+    let grid = img / patch;
+    let t_patch = grid * grid;
+    let t = t_patch + if cls_token { 1 } else { 0 };
+    // patch embedding as conv: d = 3*patch^2
+    a.conv_dims("patch_embed", t_patch, 3, dm, patch, true);
+    for i in 0..depth {
+        a.norm(&format!("blk{i}.ln1"), t, dm);
+        a.linear(&format!("blk{i}.qkv"), t, dm, 3 * dm, true);
+        a.linear(&format!("blk{i}.proj"), t, dm, dm, true);
+        a.norm(&format!("blk{i}.ln2"), t, dm);
+        a.linear(&format!("blk{i}.fc1"), t, dm, 4 * dm, true);
+        a.linear(&format!("blk{i}.fc2"), t, 4 * dm, dm, true);
+    }
+    a.norm("ln_f", t, dm);
+    a.linear("head", 1, dm, 1000, true);
+    a
+}
+
+/// CrossViT: two patch branches (12 & 16 on 240px) with cross-attention.
+/// Multi-scale dims follow the timm configs; cross-attention projection
+/// layers between branches are included at their token counts.
+pub fn crossvit(name: &str, img: u64, dm_s: u64, dm_l: u64, depth: u64) -> Arch {
+    let mut a = Arch::new(name);
+    let t_s = (img / 12) * (img / 12) + 1;
+    let t_l = (img / 16) * (img / 16) + 1;
+    a.conv_dims("patch_s", t_s - 1, 3, dm_s, 12, true);
+    a.conv_dims("patch_l", t_l - 1, 3, dm_l, 16, true);
+    for i in 0..depth {
+        for (tag, t, dm) in [("s", t_s, dm_s), ("l", t_l, dm_l)] {
+            a.norm(&format!("blk{i}{tag}.ln1"), t, dm);
+            a.linear(&format!("blk{i}{tag}.qkv"), t, dm, 3 * dm, true);
+            a.linear(&format!("blk{i}{tag}.proj"), t, dm, dm, true);
+            a.norm(&format!("blk{i}{tag}.ln2"), t, dm);
+            a.linear(&format!("blk{i}{tag}.fc1"), t, dm, 3 * dm, true);
+            a.linear(&format!("blk{i}{tag}.fc2"), t, 3 * dm, dm, true);
+        }
+        // cross-branch fusion projections
+        a.linear(&format!("fuse{i}.s2l"), 1, dm_s, dm_l, true);
+        a.linear(&format!("fuse{i}.l2s"), 1, dm_l, dm_s, true);
+    }
+    a.linear("head_s", 1, dm_s, 1000, true);
+    a.linear("head_l", 1, dm_l, 1000, true);
+    a
+}
+
+// ---------------------------------------------------------------------------
+// ConvNeXt
+
+pub fn convnext(name: &str, img: u64, dims: [u64; 4], depths: [u64; 4]) -> Arch {
+    let mut a = Arch::new(name);
+    let mut hw = Hw(img);
+    hw.conv(4, 4, 0);
+    a.conv_dims("stem", hw.t(), 3, dims[0], 4, true);
+    a.norm("stem_ln", hw.t(), dims[0]);
+    for s in 0..4 {
+        if s > 0 {
+            a.norm(&format!("down{s}.ln"), hw.t(), dims[s - 1]);
+            hw.conv(2, 2, 0);
+            a.conv_dims(&format!("down{s}.conv"), hw.t(), dims[s - 1], dims[s], 2, true);
+        }
+        let c = dims[s];
+        for b in 0..depths[s] {
+            // depthwise 7x7: model as d = k^2 per output channel
+            a.conv_dims(&format!("st{s}b{b}.dw"), hw.t(), 1, c * 49 / 49, 7, true);
+            // (d = 49, p = c) — depthwise weight is (49, c)
+            let last = a.layers.last_mut().unwrap();
+            last.d = 49;
+            last.p = c;
+            a.norm(&format!("st{s}b{b}.ln"), hw.t(), c);
+            a.linear(&format!("st{s}b{b}.pw1"), hw.t(), c, 4 * c, true);
+            a.linear(&format!("st{s}b{b}.pw2"), hw.t(), 4 * c, c, true);
+        }
+    }
+    a.norm("ln_f", 1, dims[3]);
+    a.linear("head", 1, dims[3], 1000, true);
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_structure_matches_paper_table4() {
+        let a = resnet("resnet18", 224, [2, 2, 2, 2], false, false);
+        // conv1: T = 112^2, pd = 147*64 = 9408 (paper 9.4e3)
+        let c1 = &a.layers[0];
+        assert_eq!(c1.t, 112 * 112);
+        assert_eq!(c1.d * c1.p, 9408);
+        // conv2_x: four 3x3 convs at 56^2 with pd = 36864 (paper 3.7e4 x4)
+        let c2: Vec<_> = a
+            .layers
+            .iter()
+            .filter(|l| l.t == 56 * 56 && l.kind == super::super::LayerKind::Conv)
+            .collect();
+        assert_eq!(c2.len(), 4);
+        assert!(c2.iter().all(|l| l.d * l.p == 36864));
+        // total params ~11.7M (torchvision: 11.69M)
+        let total = a.total_params();
+        assert!(
+            (total as f64 - 11.7e6).abs() / 11.7e6 < 0.02,
+            "resnet18 params {total}"
+        );
+        // BK applicability ~99.9% (paper Table 7)
+        assert!(a.bk_applicable_fraction() > 0.985);
+    }
+
+    #[test]
+    fn resnet50_param_count() {
+        let a = resnet("resnet50", 224, [3, 4, 6, 3], true, false);
+        let total = a.total_params();
+        assert!(
+            (total as f64 - 25.5e6).abs() / 25.5e6 < 0.02,
+            "resnet50 params {total}"
+        );
+    }
+
+    #[test]
+    fn wide_resnet50_param_count() {
+        let a = resnet("wide_resnet50", 224, [3, 4, 6, 3], true, true);
+        let total = a.total_params();
+        assert!(
+            (total as f64 - 68.9e6).abs() / 68.9e6 < 0.02,
+            "wide_resnet50 params {total}"
+        );
+    }
+
+    #[test]
+    fn vgg11_param_count() {
+        let a = vgg("vgg11", 224, &VGG11);
+        let total = a.total_params();
+        // torchvision vgg11: 132.86M
+        assert!(
+            (total as f64 - 132.9e6).abs() / 132.9e6 < 0.01,
+            "vgg11 params {total}"
+        );
+        // first conv: T = 224^2, pd = 27*64 = 1728 (paper §3.1: 1.7e3)
+        let c0 = &a.layers[0];
+        assert_eq!(c0.t, 224 * 224);
+        assert_eq!(c0.d * c0.p, 1728);
+    }
+
+    #[test]
+    fn vit_base_matches_paper() {
+        let a = vit("vit_base", 224, 16, 768, 12, true);
+        // paper Table 7: 86.3M GL weights
+        let glw = a.gl_weight_params();
+        assert!(
+            (glw as f64 - 86.3e6).abs() / 86.3e6 < 0.02,
+            "vit_base GL weights {glw}"
+        );
+        // paper Table 10: ghost norm total 2 sum T^2 = 3.8M
+        let ghost: f64 = a
+            .gl_layers()
+            .map(|l| 2.0 * (l.t as f64) * (l.t as f64))
+            .sum();
+        assert!(
+            (ghost - 3.8e6).abs() / 3.8e6 < 0.05,
+            "vit_base ghost space {ghost}"
+        );
+    }
+
+    #[test]
+    fn vit_large_matches_paper() {
+        let a = vit("vit_large", 224, 16, 1024, 24, true);
+        let glw = a.gl_weight_params();
+        assert!(
+            (glw as f64 - 303.8e6).abs() / 303.8e6 < 0.02,
+            "vit_large GL weights {glw}"
+        );
+    }
+
+    #[test]
+    fn densenet121_param_count() {
+        let a = densenet("densenet121", 224, [6, 12, 24, 16], 32, 64);
+        let total = a.total_params();
+        // torchvision densenet121: 7.98M
+        assert!(
+            (total as f64 - 7.98e6).abs() / 7.98e6 < 0.03,
+            "densenet121 params {total}"
+        );
+    }
+
+    #[test]
+    fn spatial_tracker() {
+        let mut hw = Hw(224);
+        assert_eq!(hw.conv(7, 2, 3), 112);
+        assert_eq!(hw.conv(3, 2, 1), 56);
+        assert_eq!(hw.conv(3, 1, 1), 56);
+        assert_eq!(hw.conv(2, 2, 0), 28);
+    }
+}

@@ -1,0 +1,278 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations of step executables, with *per-process* peak-RSS isolation.
+//!
+//! Memory attribution problem: XLA's CPU allocator retains arenas, so
+//! measuring several strategies in one process smears their footprints.
+//! Solution: the bench binary re-execs itself once per (model, strategy)
+//! with `FASTDP_BENCH_CHILD=<model>:<strategy>:<iters>`; the child runs
+//! the measurement and prints one JSON line; the parent aggregates into
+//! the paper-style table. Results are also written to `bench_results/`.
+
+use crate::json::Value;
+use crate::runtime::{literal_f32, literal_i32, scalar_f32, scalar_i32, scalar_of, Runtime};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+use crate::util::stats::{peak_rss_bytes, Summary};
+use anyhow::{anyhow, Context, Result};
+use std::time::Instant;
+
+pub const CHILD_ENV: &str = "FASTDP_BENCH_CHILD";
+
+/// Result of benchmarking one (model, strategy) pair.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub model: String,
+    pub strategy: String,
+    pub batch: usize,
+    pub mean_step_secs: f64,
+    pub min_step_secs: f64,
+    pub peak_rss: u64,
+    pub compile_secs: f64,
+    pub throughput: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("model", Value::from(self.model.as_str()))
+            .set("strategy", Value::from(self.strategy.as_str()))
+            .set("batch", Value::from(self.batch))
+            .set("mean_step_secs", Value::from(self.mean_step_secs))
+            .set("min_step_secs", Value::from(self.min_step_secs))
+            .set("peak_rss", Value::from(self.peak_rss as f64))
+            .set("compile_secs", Value::from(self.compile_secs))
+            .set("throughput", Value::from(self.throughput));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(BenchResult {
+            model: v.req_str("model").map_err(|e| anyhow!(e))?.to_string(),
+            strategy: v.req_str("strategy").map_err(|e| anyhow!(e))?.to_string(),
+            batch: v.req_i64("batch").map_err(|e| anyhow!(e))? as usize,
+            mean_step_secs: v.req_f64("mean_step_secs").map_err(|e| anyhow!(e))?,
+            min_step_secs: v.req_f64("min_step_secs").map_err(|e| anyhow!(e))?,
+            peak_rss: v.req_f64("peak_rss").map_err(|e| anyhow!(e))? as u64,
+            compile_secs: v.req_f64("compile_secs").map_err(|e| anyhow!(e))?,
+            throughput: v.req_f64("throughput").map_err(|e| anyhow!(e))?,
+        })
+    }
+}
+
+/// Measure one (model, strategy) step executable in THIS process.
+pub fn measure_step(rt: &Runtime, model: &str, strategy: &str, warmup: usize, iters: usize)
+    -> Result<BenchResult> {
+    let meta = rt.model(model)?.clone();
+    let art = rt.artifact(model, "step", Some(strategy))?.clone();
+    let b = meta.batch;
+
+    // params from init
+    let init = rt.artifact(model, "init", None)?.clone();
+    let seed = scalar_i32(0);
+    let all_params = rt.execute(&init, &[&seed])?;
+    let n_tr = meta.param_names.len();
+    let params = &all_params[..n_tr];
+    let frozen = &all_params[n_tr..];
+
+    // synthetic inputs straight from the artifact descriptors
+    let (xd, yd) = (
+        art.inputs[art.input_index("x").unwrap()].clone(),
+        art.inputs[art.input_index("y").unwrap()].clone(),
+    );
+    let mut rng = Xoshiro256::new(11);
+    let xl = match xd.dtype {
+        crate::runtime::Dtype::F32 => {
+            let data: Vec<f32> = (0..xd.elements()).map(|_| rng.next_f32() - 0.5).collect();
+            literal_f32(&data, &xd.shape)?
+        }
+        _ => {
+            let vocab = meta.spec.opt_i64("vocab", 512) as u64;
+            let data: Vec<i32> = (0..xd.elements())
+                .map(|_| rng.next_below(vocab) as i32)
+                .collect();
+            literal_i32(&data, &xd.shape)?
+        }
+    };
+    let classes = meta
+        .spec
+        .get("n_classes")
+        .and_then(Value::as_i64)
+        .or_else(|| meta.spec.get("vocab").and_then(Value::as_i64))
+        .unwrap_or(10) as u64;
+    let ydata: Vec<i32> = (0..yd.elements())
+        .map(|_| rng.next_below(classes) as i32)
+        .collect();
+    let yl = literal_i32(&ydata, &yd.shape)?;
+
+    let with_noise = strategy != "nondp";
+    let mut gs = GaussianSource::new(5);
+    let noise: Vec<xla::Literal> = if with_noise {
+        meta.param_names
+            .iter()
+            .map(|name| {
+                let shape = meta.param_shape(name).unwrap();
+                let n: usize = shape.iter().product();
+                let mut buf = vec![0f32; n];
+                gs.fill_f32(&mut buf);
+                literal_f32(&buf, shape).unwrap()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let opt_state: Vec<xla::Literal> = if meta.is_adam() {
+        meta.param_names
+            .iter()
+            .flat_map(|name| {
+                let shape = meta.param_shape(name).unwrap();
+                let n: usize = shape.iter().product();
+                vec![literal_f32(&vec![0f32; n], shape).unwrap()]
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let scalars = [
+        scalar_f32(1e-3),
+        scalar_f32(1.0),
+        scalar_f32(0.5),
+        scalar_f32(b as f32),
+        scalar_f32(1.0),
+    ];
+
+    let run_once = |rt: &Runtime| -> Result<f32> {
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.extend(frozen.iter());
+        if meta.is_adam() {
+            args.extend(opt_state.iter()); // m
+            args.extend(opt_state.iter()); // v (zeros again)
+        }
+        args.push(&xl);
+        args.push(&yl);
+        args.extend(noise.iter());
+        args.extend(scalars.iter());
+        let outs = rt.execute(&art, &args)?;
+        scalar_of(&outs[art.output_index("metric:loss").unwrap()])
+    };
+
+    for _ in 0..warmup {
+        run_once(rt)?;
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let loss = run_once(rt)?;
+        s.push(t0.elapsed().as_secs_f64());
+        assert!(loss.is_finite());
+    }
+    Ok(BenchResult {
+        model: model.to_string(),
+        strategy: strategy.to_string(),
+        batch: b,
+        mean_step_secs: s.mean(),
+        min_step_secs: s.min(),
+        peak_rss: peak_rss_bytes(),
+        compile_secs: *rt.compile_secs.borrow(),
+        throughput: b as f64 / s.mean(),
+    })
+}
+
+/// Parent side: spawn self as a child per (model, strategy).
+pub fn measure_in_child(model: &str, strategy: &str, iters: usize) -> Result<BenchResult> {
+    let exe = std::env::current_exe()?;
+    let out = std::process::Command::new(exe)
+        .env(CHILD_ENV, format!("{model}:{strategy}:{iters}"))
+        .env("FASTDP_LOG", "error")
+        .output()
+        .context("spawning bench child")?;
+    if !out.status.success() {
+        anyhow::bail!(
+            "bench child {model}:{strategy} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .rev()
+        .find(|l| l.starts_with('{'))
+        .ok_or_else(|| anyhow!("no JSON line from child: {stdout}"))?;
+    BenchResult::from_json(&crate::json::parse(line).map_err(|e| anyhow!("{e}"))?)
+}
+
+/// Call at the top of every bench main(): if we are a child, run the one
+/// measurement, print JSON, and exit.
+pub fn maybe_run_child() {
+    if let Ok(spec) = std::env::var(CHILD_ENV) {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let (model, strategy, iters) = (parts[0], parts[1], parts[2].parse().unwrap_or(3));
+        let rt = Runtime::load(artifacts_dir()).expect("runtime");
+        match measure_step(&rt, model, strategy, 1, iters) {
+            Ok(r) => {
+                println!("{}", r.to_json());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("child error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Convert manifest layer metadata to complexity-engine layer dims.
+pub fn layers_of(meta: &crate::runtime::ModelMeta) -> Vec<crate::arch::LayerDims> {
+    meta.layer_meta
+        .iter()
+        .map(|l| crate::arch::LayerDims {
+            kind: match l.kind.as_str() {
+                "conv2d" => crate::arch::LayerKind::Conv,
+                "embedding" => crate::arch::LayerKind::Embedding,
+                "layernorm" => crate::arch::LayerKind::Norm,
+                _ => crate::arch::LayerKind::Linear,
+            },
+            name: l.name.clone(),
+            t: l.t as u64,
+            d: l.d as u64,
+            p: l.p as u64,
+        })
+        .collect()
+}
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Write a rendered table to bench_results/<name>.<ext> and stdout.
+pub fn emit(name: &str, table: &crate::util::table::Table, csv: bool) {
+    print!("{}", table.render());
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(format!("{name}.md")), table.markdown());
+    if csv {
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), table.csv());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_result_json_roundtrip() {
+        let r = BenchResult {
+            model: "m".into(),
+            strategy: "bk".into(),
+            batch: 8,
+            mean_step_secs: 0.25,
+            min_step_secs: 0.2,
+            peak_rss: 1024,
+            compile_secs: 1.5,
+            throughput: 32.0,
+        };
+        let v = r.to_json();
+        let r2 = BenchResult::from_json(&crate::json::parse(&v.to_string()).unwrap()).unwrap();
+        assert_eq!(r2.model, "m");
+        assert_eq!(r2.batch, 8);
+        assert!((r2.throughput - 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,226 @@
+//! The paper's modular complexity analysis (Section 2.2, Tables 2/3/5/8).
+//!
+//! Every DP implementation decomposes into the modules of Table 3:
+//!   (1)  forward pass                 time 2BTpd   space pd + BTd
+//!   (2a) output gradient              time 2BTpd   space BT(p+d)
+//!   (2b) parameter gradient           time 2BTpd   space pd
+//!   (3)  ghost norm                   time 2BT^2(p+d)  space 2BT^2
+//!   (4)  per-sample grad instantiation time 2BTpd  space Bpd
+//!   (5)  weighted sum of psg          time 2Bpd    space 0
+//!
+//! The engine evaluates those formulas per layer, applies the paper's
+//! layerwise decision (ghost iff 2T^2 < pd) for the hybrid algorithms,
+//! and aggregates over a model — exactly regenerating Tables 2, 3, 4, 5,
+//! 8, 10 and the layerwise series behind Figures 7 and 10-19.
+
+pub mod strategy;
+
+use crate::arch::{LayerDims, LayerKind};
+
+pub use strategy::{layer_cost, Strategy, ALL_STRATEGIES};
+
+/// Time cost (multiply-accumulate*2, matching the paper's 2BTpd counting)
+/// of one module on one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Module {
+    Forward,
+    OutputGrad,
+    ParamGrad,
+    GhostNorm,
+    PsgInstantiation,
+    WeightedSum,
+}
+
+/// f64 everywhere: counts overflow u64 at ImageNet scale (2BT^2 with
+/// T = 224^2 and B = 100 is ~5e14 per layer).
+pub fn module_time(m: Module, b: f64, l: &LayerDims) -> f64 {
+    let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
+    match m {
+        Module::Forward | Module::OutputGrad | Module::ParamGrad | Module::PsgInstantiation => {
+            2.0 * b * t * p * d
+        }
+        Module::GhostNorm => match l.kind {
+            // embedding ghost norm has no activation Gram (token equality
+            // mask): 2BT^2 p + BT^2
+            LayerKind::Embedding => 2.0 * b * t * t * p + b * t * t,
+            _ => 2.0 * b * t * t * (p + d),
+        },
+        Module::WeightedSum => 2.0 * b * p * d,
+    }
+}
+
+pub fn module_space(m: Module, b: f64, l: &LayerDims) -> f64 {
+    let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
+    match m {
+        Module::Forward => p * d + b * t * d,
+        Module::OutputGrad => b * t * (p + d),
+        Module::ParamGrad => p * d,
+        Module::GhostNorm => 2.0 * b * t * t,
+        Module::PsgInstantiation => b * p * d,
+        Module::WeightedSum => 0.0,
+    }
+}
+
+/// The paper's layerwise decision (Section 3.2): ghost norm iff
+/// 2T^2 < p*d. Norm layers always instantiate (tiny params); embeddings
+/// always ghost (instantiation is V*p per sample).
+pub fn ghost_preferred(l: &LayerDims) -> bool {
+    match l.kind {
+        LayerKind::Embedding => true,
+        LayerKind::Norm => false,
+        _ => 2.0 * (l.t as f64) * (l.t as f64) < (l.p as f64) * (l.d as f64),
+    }
+}
+
+/// Space complexity of computing ONE layer's per-sample grad norm under
+/// the mixed ghost norm (Table 4 / Table 10 / Figures 7, 10-19).
+pub fn norm_space_ghost(b: f64, l: &LayerDims) -> f64 {
+    module_space(Module::GhostNorm, b, l)
+}
+
+pub fn norm_space_inst(b: f64, l: &LayerDims) -> f64 {
+    module_space(Module::PsgInstantiation, b, l)
+}
+
+pub fn norm_space_mixed(b: f64, l: &LayerDims) -> f64 {
+    norm_space_ghost(b, l).min(norm_space_inst(b, l))
+}
+
+/// Per-layer time/space of a full DP implementation (Table 5 row).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub time: f64,
+    /// Extra space on top of non-DP training (the paper's convention).
+    pub space_overhead: f64,
+}
+
+impl Cost {
+    pub fn add(&mut self, other: Cost) {
+        self.time += other.time;
+        self.space_overhead += other.space_overhead;
+    }
+}
+
+/// Whole-model cost under a strategy (Table 8).
+#[derive(Clone, Debug, Default)]
+pub struct ModelCost {
+    pub time: f64,
+    /// Peak space including weights + activations (Table 8 lower half).
+    pub space: f64,
+    /// Non-DP baseline for ratio reporting.
+    pub nondp_time: f64,
+    pub nondp_space: f64,
+}
+
+impl ModelCost {
+    pub fn time_ratio(&self) -> f64 {
+        self.time / self.nondp_time
+    }
+
+    pub fn space_ratio(&self) -> f64 {
+        self.space / self.nondp_space
+    }
+}
+
+/// Activation/weight space shared by every implementation (Table 8:
+/// sum_l pd + B sum_l T(3d + p); the B-independent pd term is the weights).
+pub fn base_space(b: f64, layers: &[LayerDims]) -> f64 {
+    let weights: f64 = layers.iter().map(|l| (l.p * l.d) as f64).sum();
+    let acts: f64 = layers
+        .iter()
+        .map(|l| b * (l.t as f64) * (3.0 * l.d as f64 + l.p as f64))
+        .sum();
+    weights + acts
+}
+
+/// Evaluate a strategy over a whole model (Table 8 rows).
+pub fn model_cost(strategy: Strategy, b: f64, layers: &[LayerDims]) -> ModelCost {
+    let mut time = 0.0;
+    let mut overhead = 0.0;
+    for l in layers {
+        let c = strategy::layer_cost(strategy, b, l);
+        time += c.time;
+        overhead += c.space_overhead;
+    }
+    let nondp_time: f64 = layers
+        .iter()
+        .map(|l| strategy::layer_cost(Strategy::NonDp, b, l).time)
+        .sum();
+    let base = base_space(b, layers);
+    ModelCost {
+        time,
+        space: base + overhead,
+        nondp_time,
+        nondp_space: base,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{LayerDims, LayerKind};
+
+    fn lin(t: u64, d: u64, p: u64) -> LayerDims {
+        LayerDims {
+            kind: LayerKind::Linear,
+            name: "l".into(),
+            t,
+            d,
+            p,
+        }
+    }
+
+    #[test]
+    fn module_formulas_match_table3() {
+        let l = lin(10, 20, 30);
+        let b = 4.0;
+        assert_eq!(module_time(Module::Forward, b, &l), 2.0 * 4.0 * 10.0 * 30.0 * 20.0);
+        assert_eq!(module_time(Module::GhostNorm, b, &l), 2.0 * 4.0 * 100.0 * 50.0);
+        assert_eq!(module_time(Module::WeightedSum, b, &l), 2.0 * 4.0 * 600.0);
+        assert_eq!(module_space(Module::GhostNorm, b, &l), 2.0 * 4.0 * 100.0);
+        assert_eq!(module_space(Module::PsgInstantiation, b, &l), 4.0 * 600.0);
+    }
+
+    #[test]
+    fn decision_threshold() {
+        // 2T^2 < pd: T=10 -> 200 < 600 => ghost
+        assert!(ghost_preferred(&lin(10, 20, 30)));
+        // T=100 -> 20000 > 600 => instantiate
+        assert!(!ghost_preferred(&lin(100, 20, 30)));
+        // embedding always ghost even with huge T
+        let emb = LayerDims {
+            kind: LayerKind::Embedding,
+            name: "e".into(),
+            t: 10_000,
+            d: 50_000,
+            p: 768,
+        };
+        assert!(ghost_preferred(&emb));
+    }
+
+    #[test]
+    fn mixed_is_min() {
+        for l in [lin(1, 512, 512), lin(3136, 576, 64)] {
+            let m = norm_space_mixed(8.0, &l);
+            assert_eq!(m, norm_space_ghost(8.0, &l).min(norm_space_inst(8.0, &l)));
+            assert!(m <= norm_space_ghost(8.0, &l));
+            assert!(m <= norm_space_inst(8.0, &l));
+        }
+    }
+
+    #[test]
+    fn resnet_conv1_matches_paper_table4() {
+        // conv1 of ResNet @224^2: T = 112^2, d = 3*7*7, p = 64
+        let l = LayerDims {
+            kind: LayerKind::Conv,
+            name: "conv1".into(),
+            t: 112 * 112,
+            d: 147,
+            p: 64,
+        };
+        // paper: 2T^2 = 3.1e8, pd = 9.4e3 (B = 1)
+        assert!((norm_space_ghost(1.0, &l) - 3.148e8).abs() / 3.148e8 < 0.01);
+        assert_eq!(norm_space_inst(1.0, &l), 9408.0);
+        assert!(!ghost_preferred(&l));
+    }
+}

@@ -1,0 +1,239 @@
+//! Strategy composition — Table 2 / Table 5 of the paper, encoded as
+//! module sums with the layerwise mixed decision for hybrids.
+
+use super::{ghost_preferred, module_space, module_time, Cost, Module};
+use crate::arch::{LayerDims, LayerKind};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    NonDp,
+    Opacus,
+    FastGradClip,
+    GhostClip,
+    MixGhostClip,
+    Bk,
+    BkMixGhostClip,
+    BkMixOpt,
+}
+
+pub const ALL_STRATEGIES: [Strategy; 8] = [
+    Strategy::NonDp,
+    Strategy::Opacus,
+    Strategy::FastGradClip,
+    Strategy::GhostClip,
+    Strategy::MixGhostClip,
+    Strategy::Bk,
+    Strategy::BkMixGhostClip,
+    Strategy::BkMixOpt,
+];
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::NonDp => "nondp",
+            Strategy::Opacus => "opacus",
+            Strategy::FastGradClip => "fastgradclip",
+            Strategy::GhostClip => "ghostclip",
+            Strategy::MixGhostClip => "mixghostclip",
+            Strategy::Bk => "bk",
+            Strategy::BkMixGhostClip => "bk_mixghostclip",
+            Strategy::BkMixOpt => "bk_mixopt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        ALL_STRATEGIES.iter().copied().find(|x| x.name() == s)
+    }
+
+    /// Number of back-propagations (paper Table 2).
+    pub fn backprops(&self) -> u32 {
+        match self {
+            Strategy::NonDp | Strategy::Opacus | Strategy::Bk
+            | Strategy::BkMixGhostClip | Strategy::BkMixOpt => 1,
+            Strategy::FastGradClip | Strategy::GhostClip | Strategy::MixGhostClip => 2,
+        }
+    }
+
+    pub fn instantiates_psg(&self) -> bool {
+        matches!(self, Strategy::Opacus | Strategy::FastGradClip)
+    }
+}
+
+/// Per-layer cost of one training step under `strategy` (Table 5).
+///
+/// Norm layers (LayerNorm etc.) are treated uniformly: every DP
+/// implementation instantiates their (tiny) per-sample grads; their time
+/// is the standard 6BTp and their overhead Bp — negligible next to
+/// generalized linear layers, but included for honesty.
+pub fn layer_cost(strategy: Strategy, b: f64, l: &LayerDims) -> Cost {
+    if l.kind == LayerKind::Norm {
+        let t = module_time(Module::Forward, b, l) / (l.d as f64).max(1.0) * 3.0;
+        let over = if strategy == Strategy::NonDp {
+            0.0
+        } else {
+            b * (l.p as f64)
+        };
+        return Cost {
+            time: t,
+            space_overhead: over,
+        };
+    }
+
+    let fwd = module_time(Module::Forward, b, l);
+    let og = module_time(Module::OutputGrad, b, l);
+    let pg = module_time(Module::ParamGrad, b, l);
+    let gn = module_time(Module::GhostNorm, b, l);
+    let psg = module_time(Module::PsgInstantiation, b, l);
+    let ws = module_time(Module::WeightedSum, b, l);
+    let sp_gn = module_space(Module::GhostNorm, b, l);
+    let sp_psg = module_space(Module::PsgInstantiation, b, l);
+    let ghost = ghost_preferred(l);
+
+    match strategy {
+        // (1) + (2a) + (2b)
+        Strategy::NonDp => Cost {
+            time: fwd + og + pg,
+            space_overhead: 0.0,
+        },
+        // (1) + (2a) + (2b) + (4) + (5)
+        Strategy::Opacus => Cost {
+            time: fwd + og + pg + psg + ws,
+            space_overhead: sp_psg,
+        },
+        // (1) + (2a) + (4 norms) + 2nd-pass param grads.
+        // The paper's own module equation (§2.2) sums to 10BTpd, but its
+        // Tables 2/5 list 8BTpd — the second pass's output-gradient
+        // recomputation is attributed to the clipping norm pass. We
+        // follow the tables, which are the reproduction target.
+        Strategy::FastGradClip => Cost {
+            time: fwd + og + psg + pg,
+            space_overhead: sp_psg,
+        },
+        // (1) + (2a) + (2b) + (3) + (2a) + (2b)
+        Strategy::GhostClip => Cost {
+            time: fwd + og + pg + gn + og + pg,
+            space_overhead: sp_gn,
+        },
+        // Table 5: 8BTpd + <2BTpd, 2BT^2(p+d)> (same 8-vs-10 convention
+        // as FastGradClip above).
+        Strategy::MixGhostClip => Cost {
+            time: fwd + og + pg + pg + if ghost { gn } else { psg },
+            space_overhead: sp_gn.min(sp_psg),
+        },
+        // (1) + (2a) + (3) + (2b')
+        Strategy::Bk => Cost {
+            time: fwd + og + gn + pg,
+            space_overhead: sp_gn,
+        },
+        // (1) + (2a) + min{(3),(4)} + (2b')
+        Strategy::BkMixGhostClip => Cost {
+            time: fwd + og + if ghost { gn } else { psg } + pg,
+            space_overhead: sp_gn.min(sp_psg),
+        },
+        // (1) + (2a) + min{(3)+(2b'), (4)+(5)}
+        Strategy::BkMixOpt => Cost {
+            time: fwd + og + if ghost { gn + pg } else { psg + ws },
+            space_overhead: sp_gn.min(sp_psg),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{LayerDims, LayerKind};
+
+    fn lin(t: u64, d: u64, p: u64) -> LayerDims {
+        LayerDims {
+            kind: LayerKind::Linear,
+            name: "l".into(),
+            t,
+            d,
+            p,
+        }
+    }
+
+    /// Table 2: with T small (ghost regime), time orders as
+    /// nondp ~ bk < fastgradclip ~ opacus < ghostclip,
+    /// and space as nondp < bk ~ ghostclip << opacus.
+    #[test]
+    fn table2_orderings_small_t() {
+        let l = lin(100, 1024, 1024); // 2T^2 = 2e4 << pd = 1e6
+        let b = 32.0;
+        let t = |s| layer_cost(s, b, &l).time;
+        let sp = |s| layer_cost(s, b, &l).space_overhead;
+        assert!(t(Strategy::Bk) < t(Strategy::FastGradClip));
+        assert!(t(Strategy::Bk) < t(Strategy::Opacus));
+        assert!(t(Strategy::Opacus) < t(Strategy::GhostClip));
+        // both 8BTpd up to the cubic weighted-sum term
+        assert!((t(Strategy::FastGradClip) - t(Strategy::Opacus)).abs() / t(Strategy::Opacus) < 0.01);
+        // bk time = 6BTpd + 2BT^2(p+d): within 3.5% of nondp here
+        assert!(t(Strategy::Bk) / t(Strategy::NonDp) < 1.07);
+        assert!(sp(Strategy::Bk) < sp(Strategy::Opacus));
+        assert_eq!(sp(Strategy::Bk), sp(Strategy::GhostClip));
+        assert_eq!(sp(Strategy::NonDp), 0.0);
+    }
+
+    /// Large T: ghost norm explodes; hybrids must beat both bases.
+    #[test]
+    fn hybrids_dominate_large_t() {
+        let l = lin(224 * 224, 147, 64); // ResNet conv1 shape
+        let b = 8.0;
+        let sp = |s| layer_cost(s, b, &l).space_overhead;
+        assert!(sp(Strategy::BkMixOpt) <= sp(Strategy::Bk));
+        assert!(sp(Strategy::BkMixOpt) <= sp(Strategy::Opacus));
+        let t = |s| layer_cost(s, b, &l).time;
+        assert!(t(Strategy::BkMixOpt) < t(Strategy::GhostClip));
+        assert!(t(Strategy::BkMixOpt) < t(Strategy::Bk));
+    }
+
+    /// In the ghost regime hybrids degenerate to their base (paper §3.2).
+    #[test]
+    fn hybrids_equal_base_small_t() {
+        let l = lin(64, 512, 512);
+        let b = 16.0;
+        assert_eq!(
+            layer_cost(Strategy::BkMixOpt, b, &l),
+            layer_cost(Strategy::Bk, b, &l)
+        );
+        // MixGhostClip degenerates to the ghost-norm choice (same space;
+        // time follows the Table 5 8-vs-10 convention, see layer_cost).
+        assert_eq!(
+            layer_cost(Strategy::MixGhostClip, b, &l).space_overhead,
+            layer_cost(Strategy::GhostClip, b, &l).space_overhead
+        );
+    }
+
+    /// Table 2 exact coefficients on a representative layer.
+    #[test]
+    fn exact_coefficients() {
+        let l = lin(10, 20, 30);
+        let b = 2.0;
+        let btpd = 2.0 * 10.0 * 30.0 * 20.0;
+        let bt2pd = 2.0 * 100.0 * 50.0;
+        assert_eq!(layer_cost(Strategy::NonDp, b, &l).time, 6.0 * btpd);
+        assert_eq!(layer_cost(Strategy::Opacus, b, &l).time, 8.0 * btpd + 2.0 * 2.0 * 600.0);
+        assert_eq!(
+            layer_cost(Strategy::GhostClip, b, &l).time,
+            10.0 * btpd + 2.0 * bt2pd
+        );
+        assert_eq!(layer_cost(Strategy::Bk, b, &l).time, 6.0 * btpd + 2.0 * bt2pd);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ALL_STRATEGIES {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn backprop_counts_match_table2() {
+        assert_eq!(Strategy::NonDp.backprops(), 1);
+        assert_eq!(Strategy::Opacus.backprops(), 1);
+        assert_eq!(Strategy::FastGradClip.backprops(), 2);
+        assert_eq!(Strategy::GhostClip.backprops(), 2);
+        assert_eq!(Strategy::Bk.backprops(), 1);
+    }
+}

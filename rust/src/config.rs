@@ -1,0 +1,234 @@
+//! Typed run configuration: JSON file + CLI overrides -> validated config.
+//!
+//! A config names a model from `artifacts/manifest.json`, a DP
+//! implementation strategy, optimizer hyperparameters, and the privacy
+//! target. `sigma` may be given directly or calibrated from
+//! (epsilon, delta, q, steps) by the accountant.
+
+use crate::cli::Args;
+use crate::json::Value;
+use std::path::PathBuf;
+
+#[derive(Clone, Debug)]
+pub struct PrivacyConfig {
+    /// Target (epsilon, delta); sigma is calibrated if not set explicitly.
+    pub target_epsilon: f64,
+    pub target_delta: f64,
+    /// Explicit noise multiplier (sigma); overrides calibration if > 0.
+    pub sigma: f64,
+    /// Training-set size N (for the sampling rate q = B/N).
+    pub dataset_size: usize,
+    /// Hard stop when the spent epsilon exceeds the target.
+    pub strict_budget: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub strategy: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub clip: f64,
+    pub logical_batch: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub checkpoint_dir: Option<PathBuf>,
+    pub checkpoint_every: usize,
+    pub privacy: PrivacyConfig,
+    /// Disable DP entirely (strategy must be "nondp").
+    pub disable_dp: bool,
+}
+
+impl Default for PrivacyConfig {
+    fn default() -> Self {
+        Self {
+            target_epsilon: 3.0,
+            target_delta: 1e-5,
+            sigma: 0.0,
+            dataset_size: 50_000,
+            strict_budget: true,
+        }
+    }
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "gpt_e2e".to_string(),
+            strategy: "bk".to_string(),
+            steps: 100,
+            lr: 1e-3,
+            clip: 1.0,
+            logical_batch: 0, // 0 = physical batch from manifest
+            seed: 0,
+            log_every: 10,
+            eval_every: 0,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            privacy: PrivacyConfig::default(),
+            disable_dp: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        let mut c = TrainConfig::default();
+        c.model = v.opt_str("model", &c.model).to_string();
+        c.strategy = v.opt_str("strategy", &c.strategy).to_string();
+        c.artifacts_dir = PathBuf::from(v.opt_str("artifacts_dir", "artifacts"));
+        c.steps = v.opt_i64("steps", c.steps as i64) as usize;
+        c.lr = v.opt_f64("lr", c.lr);
+        c.clip = v.opt_f64("clip", c.clip);
+        c.logical_batch = v.opt_i64("logical_batch", 0) as usize;
+        c.seed = v.opt_i64("seed", 0) as u64;
+        c.log_every = v.opt_i64("log_every", c.log_every as i64) as usize;
+        c.eval_every = v.opt_i64("eval_every", 0) as usize;
+        c.checkpoint_every = v.opt_i64("checkpoint_every", 0) as usize;
+        if let Some(d) = v.get("checkpoint_dir").and_then(Value::as_str) {
+            c.checkpoint_dir = Some(PathBuf::from(d));
+        }
+        if let Some(p) = v.get("privacy") {
+            c.privacy.target_epsilon = p.opt_f64("target_epsilon", 3.0);
+            c.privacy.target_delta = p.opt_f64("target_delta", 1e-5);
+            c.privacy.sigma = p.opt_f64("sigma", 0.0);
+            c.privacy.dataset_size = p.opt_i64("dataset_size", 50_000) as usize;
+            c.privacy.strict_budget = p.opt_bool("strict_budget", true);
+        }
+        c.disable_dp = v.opt_bool("disable_dp", false);
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let v = crate::json::from_file(path)?;
+        Self::from_json(&v)
+    }
+
+    /// Apply `--key value` CLI overrides on top of the file config.
+    pub fn apply_cli(&mut self, args: &Args) -> Result<(), String> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        if let Some(s) = args.get("strategy") {
+            self.strategy = s.to_string();
+        }
+        if let Some(d) = args.get("artifacts-dir") {
+            self.artifacts_dir = PathBuf::from(d);
+        }
+        self.steps = args.get_usize("steps", self.steps);
+        self.lr = args.get_f64("lr", self.lr);
+        self.clip = args.get_f64("clip", self.clip);
+        self.seed = args.get_u64("seed", self.seed);
+        self.logical_batch = args.get_usize("logical-batch", self.logical_batch);
+        self.log_every = args.get_usize("log-every", self.log_every);
+        self.eval_every = args.get_usize("eval-every", self.eval_every);
+        self.privacy.target_epsilon = args.get_f64("epsilon", self.privacy.target_epsilon);
+        self.privacy.target_delta = args.get_f64("delta", self.privacy.target_delta);
+        self.privacy.sigma = args.get_f64("sigma", self.privacy.sigma);
+        self.privacy.dataset_size = args.get_usize("dataset-size", self.privacy.dataset_size);
+        if args.has_flag("no-dp") {
+            self.disable_dp = true;
+            self.strategy = "nondp".to_string();
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        const STRATEGIES: [&str; 8] = [
+            "nondp",
+            "opacus",
+            "fastgradclip",
+            "ghostclip",
+            "mixghostclip",
+            "bk",
+            "bk_mixghostclip",
+            "bk_mixopt",
+        ];
+        if !STRATEGIES.contains(&self.strategy.as_str()) {
+            return Err(format!(
+                "unknown strategy '{}', expected one of {STRATEGIES:?}",
+                self.strategy
+            ));
+        }
+        if self.steps == 0 {
+            return Err("steps must be > 0".into());
+        }
+        if self.lr <= 0.0 {
+            return Err("lr must be > 0".into());
+        }
+        if self.clip <= 0.0 {
+            return Err("clip must be > 0".into());
+        }
+        if !self.disable_dp && self.strategy != "nondp" {
+            let p = &self.privacy;
+            if p.sigma == 0.0 && (p.target_epsilon <= 0.0 || p.target_delta <= 0.0) {
+                return Err("privacy: need sigma > 0 or a positive (epsilon, delta) target".into());
+            }
+            if p.dataset_size == 0 {
+                return Err("privacy.dataset_size must be > 0".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_full() {
+        let v = parse(
+            r#"{
+          "model": "mlp_e2e", "strategy": "bk_mixopt", "steps": 7,
+          "lr": 0.5, "clip": 2.0, "seed": 9,
+          "privacy": {"target_epsilon": 8, "target_delta": 1e-6,
+                      "dataset_size": 1000}
+        }"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.model, "mlp_e2e");
+        assert_eq!(c.strategy, "bk_mixopt");
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.privacy.dataset_size, 1000);
+        assert!((c.privacy.target_delta - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn rejects_bad_strategy() {
+        let v = parse(r#"{"strategy": "warpspeed"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_privacy() {
+        let v = parse(r#"{"strategy": "bk", "privacy": {"target_epsilon": 0, "sigma": 0}}"#)
+            .unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TrainConfig::default();
+        let args = crate::cli::Args::parse(
+            "train --strategy opacus --steps 3 --sigma 1.1"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.strategy, "opacus");
+        assert_eq!(c.steps, 3);
+        assert!((c.privacy.sigma - 1.1).abs() < 1e-12);
+    }
+}

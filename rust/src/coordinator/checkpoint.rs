@@ -1,0 +1,151 @@
+//! Checkpointing: params (+ optimizer state) to a simple self-describing
+//! binary format — a JSON header (model name, step, tensor count/lengths)
+//! followed by raw little-endian f32 data.
+
+use crate::json::Value;
+use crate::runtime::ModelMeta;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"FASTDP01";
+
+pub fn save(dir: &Path, step: usize, meta: &ModelMeta, tensors: &[Vec<f32>]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut header = Value::obj();
+    header.set("model", Value::from(meta.name.as_str()));
+    header.set("step", Value::from(step));
+    header.set("optimizer", Value::from(meta.optimizer.as_str()));
+    header.set(
+        "lengths",
+        Value::Arr(tensors.iter().map(|t| Value::from(t.len())).collect()),
+    );
+    let htext = header.to_string();
+    let path = dir.join(format!("ckpt_{step:08}.fdp"));
+    let tmp = dir.join(format!(".ckpt_{step:08}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(htext.len() as u64).to_le_bytes())?;
+        f.write_all(htext.as_bytes())?;
+        for t in tensors {
+            // SAFETY-free little-endian write
+            let mut bytes = Vec::with_capacity(t.len() * 4);
+            for x in t {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &path)?; // atomic publish
+    Ok(())
+}
+
+pub fn load(path: &Path, meta: &ModelMeta) -> Result<(usize, Vec<Vec<f32>>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad checkpoint magic in {}", path.display());
+    }
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let hlen = u64::from_le_bytes(lenb) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = crate::json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+    let model = header.req_str("model").map_err(|e| anyhow!(e))?;
+    if model != meta.name {
+        bail!("checkpoint is for model '{model}', expected '{}'", meta.name);
+    }
+    let step = header.req_i64("step").map_err(|e| anyhow!(e))? as usize;
+    let lengths: Vec<usize> = header
+        .req_arr("lengths")
+        .map_err(|e| anyhow!(e))?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect();
+    let mut tensors = Vec::with_capacity(lengths.len());
+    for n in lengths {
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let mut t = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            t.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        tensors.push(t);
+    }
+    Ok((step, tensors))
+}
+
+/// Most recent checkpoint in `dir`, if any.
+pub fn latest(dir: &Path) -> Option<PathBuf> {
+    let mut best: Option<PathBuf> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let p = entry.ok()?.path();
+        let name = p.file_name()?.to_str()?;
+        if name.starts_with("ckpt_") && name.ends_with(".fdp") {
+            if best.as_ref().map(|b| p > *b).unwrap_or(true) {
+                best = Some(p.clone());
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta() -> ModelMeta {
+        let v = crate::json::parse(
+            r#"{
+          "models": {"ck": {"spec": null, "batch": 1, "optimizer": "sgd",
+            "clip_fn": "abadi", "group": "t", "param_names": ["a"],
+            "frozen_names": [], "param_shapes": {"a": [4]},
+            "layer_meta": [], "n_params": 4}},
+          "artifacts": []}"#,
+        )
+        .unwrap();
+        crate::runtime::Manifest::from_json(&v).unwrap().models["ck"].clone()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fastdp_ckpt_{}", std::process::id()));
+        let meta = fake_meta();
+        let tensors = vec![vec![1.0f32, -2.5, 3.25, 0.0], vec![9.0f32; 7]];
+        save(&dir, 42, &meta, &tensors).unwrap();
+        save(&dir, 7, &meta, &tensors).unwrap();
+        let latest_path = latest(&dir).unwrap();
+        assert!(latest_path.to_str().unwrap().contains("00000042"));
+        let (step, loaded) = load(&latest_path, &meta).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(loaded, tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_model() {
+        let dir = std::env::temp_dir().join(format!("fastdp_ckpt2_{}", std::process::id()));
+        let meta = fake_meta();
+        save(&dir, 1, &meta, &[vec![0.0]]).unwrap();
+        let mut other = meta.clone();
+        other.name = "different".into();
+        assert!(load(&latest(&dir).unwrap(), &other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let dir = std::env::temp_dir().join(format!("fastdp_ckpt3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ckpt_00000001.fdp");
+        std::fs::write(&p, b"NOTMAGIC????").unwrap();
+        assert!(load(&p, &fake_meta()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

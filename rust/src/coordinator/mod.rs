@@ -1,0 +1,500 @@
+//! Layer-3 training coordinator — the runtime half of the paper's
+//! `PrivacyEngine.attach(optimizer)` workflow (Section 4).
+//!
+//! Responsibilities:
+//!  * noise calibration via the RDP accountant (sigma from (eps, delta))
+//!  * Poisson subsampling + physical batching of the synthetic corpus
+//!  * strategy dispatch: fused `step_<strategy>` executables on the fast
+//!    path, `clipgrad + apply` pairs when gradient accumulation is on
+//!  * DP noise generation (L3 owns the privacy-critical DRBG; JAX never
+//!    samples noise)
+//!  * budget enforcement, metrics, checkpointing
+//!
+//! Python is never on this path: everything executes through the PJRT
+//! runtime on AOT artifacts.
+
+pub mod checkpoint;
+pub mod noise;
+
+use crate::config::TrainConfig;
+use crate::privacy::{calibrate_sigma, RdpAccountant};
+use crate::runtime::{literal_f32, literal_i32, scalar_f32, scalar_i32, scalar_of, Runtime};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::{peak_rss_bytes, Summary};
+use crate::{data, info};
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::Instant;
+
+/// One logged training step.
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub mean_clip: f32,
+    pub epsilon: f64,
+    pub step_secs: f64,
+}
+
+/// Final report of a training run (consumed by examples / benches /
+/// EXPERIMENTS.md).
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub model: String,
+    pub strategy: String,
+    pub steps: usize,
+    pub sigma: f64,
+    pub final_loss: f32,
+    pub initial_loss: f32,
+    pub final_epsilon: f64,
+    pub logs: Vec<StepLog>,
+    pub throughput_samples_per_sec: f64,
+    pub mean_step_secs: f64,
+    pub compile_secs: f64,
+    pub peak_rss_bytes: u64,
+}
+
+/// Batch source abstraction so the trainer drives either token or vector
+/// workloads through one loop.
+pub enum BatchSource {
+    Tokens(data::TokenCorpus),
+    Vectors { ds: data::VectorDataset, image_hw: Option<(usize, usize)> },
+}
+
+impl BatchSource {
+    /// Produce (x, y) literals for a physical batch of size b.
+    fn sample(&mut self, b: usize, x_shape: &[usize], y_shape: &[usize])
+        -> Result<(xla::Literal, xla::Literal)> {
+        match self {
+            BatchSource::Tokens(c) => {
+                let (xs, ys) = c.sample_batch(b);
+                Ok((literal_i32(&xs, x_shape)?, literal_i32(&ys, y_shape)?))
+            }
+            BatchSource::Vectors { ds, .. } => {
+                let (xs, ys) = ds.sample_batch(b);
+                Ok((literal_f32(&xs, x_shape)?, literal_i32(&ys, y_shape)?))
+            }
+        }
+    }
+}
+
+pub struct Trainer {
+    pub rt: Runtime,
+    pub cfg: TrainConfig,
+    pub meta: crate::runtime::ModelMeta,
+    pub accountant: Option<RdpAccountant>,
+    pub sigma: f64,
+    source: BatchSource,
+    params: Vec<xla::Literal>,
+    frozen: Vec<xla::Literal>,
+    opt_m: Vec<xla::Literal>,
+    opt_v: Vec<xla::Literal>,
+    noise: noise::NoiseSource,
+    rng: Xoshiro256,
+    step_no: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let rt = Runtime::load(cfg.artifacts_dir.clone())?;
+        let meta = rt.model(&cfg.model)?.clone();
+        let b_phys = meta.batch;
+        let logical = if cfg.logical_batch == 0 { b_phys } else { cfg.logical_batch };
+        if logical % b_phys != 0 {
+            bail!(
+                "logical batch {} must be a multiple of the physical batch {}",
+                logical,
+                b_phys
+            );
+        }
+
+        // privacy calibration
+        let dp = cfg.strategy != "nondp" && !cfg.disable_dp;
+        let q = logical as f64 / cfg.privacy.dataset_size as f64;
+        let sigma = if !dp {
+            0.0
+        } else if cfg.privacy.sigma > 0.0 {
+            cfg.privacy.sigma
+        } else {
+            let s = calibrate_sigma(
+                q,
+                cfg.steps as u64,
+                cfg.privacy.target_epsilon,
+                cfg.privacy.target_delta,
+            );
+            info!(
+                "calibrated sigma={s:.4} for (eps={}, delta={}) at q={q:.5} over {} steps",
+                cfg.privacy.target_epsilon, cfg.privacy.target_delta, cfg.steps
+            );
+            s
+        };
+        let accountant = dp.then(|| RdpAccountant::new(q, sigma));
+
+        // data source from the model spec
+        let spec = &meta.spec;
+        let source = match spec.opt_str("kind", "") {
+            "gpt" | "gptlora" => BatchSource::Tokens(data::TokenCorpus::new(
+                spec.req_i64("vocab").map_err(|e| anyhow!(e))? as usize,
+                spec.req_i64("seq").map_err(|e| anyhow!(e))? as usize,
+                cfg.seed ^ 0xDA7A,
+            )),
+            "mlp" => BatchSource::Vectors {
+                ds: data::VectorDataset::new(
+                    spec.req_i64("d_in").map_err(|e| anyhow!(e))? as usize,
+                    spec.opt_i64("n_classes", 10) as usize,
+                    2.0,
+                    cfg.seed ^ 0xDA7A,
+                ),
+                image_hw: None,
+            },
+            "conv" => {
+                let hw = spec.opt_i64("hw", 32) as usize;
+                let c = spec.opt_i64("c_in", 3) as usize;
+                BatchSource::Vectors {
+                    ds: data::VectorDataset::new(
+                        hw * hw * c,
+                        spec.opt_i64("n_classes", 10) as usize,
+                        1.0,
+                        cfg.seed ^ 0xDA7A,
+                    ),
+                    image_hw: Some((hw, c)),
+                }
+            }
+            other => bail!("unknown model kind '{other}' in manifest"),
+        };
+
+        Ok(Self {
+            rt,
+            meta,
+            accountant,
+            sigma,
+            source,
+            params: Vec::new(),
+            frozen: Vec::new(),
+            opt_m: Vec::new(),
+            opt_v: Vec::new(),
+            noise: noise::NoiseSource::new(cfg.seed ^ 0x0153),
+            rng: Xoshiro256::new(cfg.seed),
+            step_no: 0,
+            cfg,
+        })
+    }
+
+    /// Initialize parameters via the init artifact (or a checkpoint).
+    pub fn init(&mut self) -> Result<()> {
+        if let (Some(dir), true) = (&self.cfg.checkpoint_dir, self.cfg.checkpoint_every > 0) {
+            let latest = checkpoint::latest(dir);
+            if let Some(path) = latest {
+                info!("resuming from checkpoint {}", path.display());
+                let (step, tensors) = checkpoint::load(&path, &self.meta)?;
+                self.step_no = step;
+                self.set_flat_state(tensors)?;
+                return Ok(());
+            }
+        }
+        let init = self.rt.artifact(&self.cfg.model, "init", None)?.clone();
+        let seed = scalar_i32(self.cfg.seed as i32);
+        let outs = self.rt.execute(&init, &[&seed])?;
+        let n_tr = self.meta.param_names.len();
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        self.frozen = it.collect();
+        if self.meta.is_adam() {
+            self.opt_m = self.zeros_like_params()?;
+            self.opt_v = self.zeros_like_params()?;
+        }
+        Ok(())
+    }
+
+    fn zeros_like_params(&self) -> Result<Vec<xla::Literal>> {
+        self.meta
+            .param_names
+            .iter()
+            .map(|name| {
+                let shape = self.meta.param_shape(name).map_err(|e| anyhow!(e))?;
+                let n: usize = shape.iter().product();
+                literal_f32(&vec![0f32; n], shape)
+            })
+            .collect()
+    }
+
+    fn set_flat_state(&mut self, tensors: Vec<Vec<f32>>) -> Result<()> {
+        let n_tr = self.meta.param_names.len();
+        let mut out = Vec::with_capacity(tensors.len());
+        for (i, data) in tensors.iter().enumerate() {
+            let name = &self.meta.param_names[i % n_tr];
+            out.push(literal_f32(data, self.meta.param_shape(name).map_err(|e| anyhow!(e))?)?);
+        }
+        let mut it = out.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        if self.meta.is_adam() {
+            self.opt_m = (&mut it).take(n_tr).collect();
+            self.opt_v = (&mut it).take(n_tr).collect();
+        }
+        Ok(())
+    }
+
+    fn data_shapes(&self, art: &crate::runtime::ArtifactMeta) -> Result<(Vec<usize>, Vec<usize>)> {
+        let xi = art
+            .input_index("x")
+            .ok_or_else(|| anyhow!("artifact missing x input"))?;
+        let yi = art
+            .input_index("y")
+            .ok_or_else(|| anyhow!("artifact missing y input"))?;
+        Ok((art.inputs[xi].shape.clone(), art.inputs[yi].shape.clone()))
+    }
+
+    /// Evaluate mean loss on `batches` fresh batches.
+    pub fn eval(&mut self, batches: usize) -> Result<f32> {
+        let eval = self.rt.artifact(&self.cfg.model, "eval", None)?.clone();
+        let (xs, ys) = self.data_shapes(&eval)?;
+        let b = self.meta.batch;
+        let mut total = 0.0f32;
+        for _ in 0..batches {
+            let (xl, yl) = self.source.sample(b, &xs, &ys)?;
+            let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+            args.extend(self.frozen.iter());
+            args.push(&xl);
+            args.push(&yl);
+            total += scalar_of(&self.rt.execute(&eval, &args)?[0])?;
+        }
+        Ok(total / batches as f32)
+    }
+
+    /// One *logical* training step (possibly several physical batches).
+    pub fn train_step(&mut self) -> Result<StepLog> {
+        let b_phys = self.meta.batch;
+        let logical = if self.cfg.logical_batch == 0 { b_phys } else { self.cfg.logical_batch };
+        let accum = logical / b_phys;
+        let t0 = Instant::now();
+
+        let (loss, mean_clip) = if accum == 1 {
+            self.fused_step(logical)?
+        } else {
+            self.accumulated_step(accum, logical)?
+        };
+
+        if let Some(acc) = &mut self.accountant {
+            acc.step();
+        }
+        self.step_no += 1;
+
+        if self.cfg.checkpoint_every > 0 && self.step_no % self.cfg.checkpoint_every == 0 {
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                self.save_checkpoint(&dir)?;
+            }
+        }
+
+        Ok(StepLog {
+            step: self.step_no,
+            loss,
+            mean_clip,
+            epsilon: self.epsilon(),
+            step_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Fast path: the fused step artifact (one physical == one logical).
+    fn fused_step(&mut self, logical: usize) -> Result<(f32, f32)> {
+        let art = self
+            .rt
+            .artifact(&self.cfg.model, "step", Some(&self.cfg.strategy))?
+            .clone();
+        let (xs, ys) = self.data_shapes(&art)?;
+        let (xl, yl) = self.source.sample(self.meta.batch, &xs, &ys)?;
+        let with_noise = self.cfg.strategy != "nondp";
+
+        let noise = if with_noise {
+            self.noise.tensors(&self.meta)?
+        } else {
+            Vec::new()
+        };
+        let scalars = [
+            scalar_f32(self.cfg.lr as f32),
+            scalar_f32(self.cfg.clip as f32),
+            scalar_f32((self.sigma * self.cfg.clip) as f32),
+            scalar_f32(logical as f32),
+            scalar_f32((self.step_no + 1) as f32),
+        ];
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.extend(self.frozen.iter());
+        if self.meta.is_adam() {
+            args.extend(self.opt_m.iter());
+            args.extend(self.opt_v.iter());
+        }
+        args.push(&xl);
+        args.push(&yl);
+        args.extend(noise.iter());
+        args.extend(scalars.iter());
+
+        let outs = self.rt.execute(&art, &args)?;
+        let loss = scalar_of(&outs[art.output_index("metric:loss").unwrap()])?;
+        let clip = art
+            .output_index("metric:mean_clip")
+            .map(|i| scalar_of(&outs[i]).unwrap_or(1.0))
+            .unwrap_or(1.0);
+        let n_tr = self.meta.param_names.len();
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        if self.meta.is_adam() {
+            self.opt_m = (&mut it).take(n_tr).collect();
+            self.opt_v = (&mut it).take(n_tr).collect();
+        }
+        Ok((loss, clip))
+    }
+
+    /// Gradient accumulation: k clipgrad micro-steps summed host-side,
+    /// then one apply with a single noise draw (DP-correct: per-sample
+    /// clipping is per micro-batch, noise is per logical batch).
+    fn accumulated_step(&mut self, accum: usize, logical: usize) -> Result<(f32, f32)> {
+        let cg = self
+            .rt
+            .artifact(&self.cfg.model, "clipgrad", Some(&self.cfg.strategy))?
+            .clone();
+        let (xs, ys) = self.data_shapes(&cg)?;
+        let n_tr = self.meta.param_names.len();
+        let mut acc_grads: Vec<Vec<f32>> = Vec::new();
+        let mut loss_sum = 0.0f32;
+        let mut clip_sum = 0.0f32;
+        let clip_lit = scalar_f32(self.cfg.clip as f32);
+        for _ in 0..accum {
+            let (xl, yl) = self.source.sample(self.meta.batch, &xs, &ys)?;
+            let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+            args.extend(self.frozen.iter());
+            args.push(&xl);
+            args.push(&yl);
+            args.push(&clip_lit);
+            let outs = self.rt.execute(&cg, &args)?;
+            loss_sum += scalar_of(&outs[cg.output_index("metric:loss").unwrap()])?;
+            clip_sum += scalar_of(&outs[cg.output_index("metric:mean_clip").unwrap()])?;
+            for (i, lit) in outs[..n_tr].iter().enumerate() {
+                let v = lit.to_vec::<f32>()?;
+                if acc_grads.len() <= i {
+                    acc_grads.push(v);
+                } else {
+                    for (a, x) in acc_grads[i].iter_mut().zip(v.iter()) {
+                        *a += *x;
+                    }
+                }
+            }
+        }
+
+        // apply: params' = opt(params, sum_grads + sigma*R*noise)
+        let apply = self.rt.artifact(&self.cfg.model, "apply", None)?.clone();
+        let grads: Vec<xla::Literal> = acc_grads
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                literal_f32(g, self.meta.param_shape(&self.meta.param_names[i]).unwrap())
+            })
+            .collect::<Result<_>>()?;
+        let with_noise = self.cfg.strategy != "nondp";
+        let noise = if with_noise {
+            self.noise.tensors(&self.meta)?
+        } else {
+            self.zeros_like_params()?
+        };
+        let scalars = [
+            scalar_f32(self.cfg.lr as f32),
+            scalar_f32(if with_noise { (self.sigma * self.cfg.clip) as f32 } else { 0.0 }),
+            scalar_f32(logical as f32),
+            scalar_f32((self.step_no + 1) as f32),
+        ];
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        if self.meta.is_adam() {
+            args.extend(self.opt_m.iter());
+            args.extend(self.opt_v.iter());
+        }
+        args.extend(grads.iter());
+        args.extend(noise.iter());
+        args.extend(scalars.iter());
+        let outs = self.rt.execute(&apply, &args)?;
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        if self.meta.is_adam() {
+            self.opt_m = (&mut it).take(n_tr).collect();
+            self.opt_v = (&mut it).take(n_tr).collect();
+        }
+        Ok((loss_sum / accum as f32, clip_sum / accum as f32))
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.accountant
+            .as_ref()
+            .map(|a| a.epsilon(self.cfg.privacy.target_delta))
+            .unwrap_or(0.0)
+    }
+
+    pub fn save_checkpoint(&self, dir: &std::path::Path) -> Result<()> {
+        let mut tensors: Vec<Vec<f32>> = Vec::new();
+        for p in self.params.iter().chain(self.opt_m.iter()).chain(self.opt_v.iter()) {
+            tensors.push(p.to_vec::<f32>()?);
+        }
+        checkpoint::save(dir, self.step_no, &self.meta, &tensors)
+            .context("saving checkpoint")
+    }
+
+    /// Full training run per the config; logs every `log_every` steps.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        self.init()?;
+        let initial_loss = self.eval(2)?;
+        info!(
+            "model={} strategy={} params={:.2}M B={} sigma={:.3} initial_loss={initial_loss:.4}",
+            self.cfg.model,
+            self.cfg.strategy,
+            self.meta.n_params as f64 / 1e6,
+            self.meta.batch,
+            self.sigma
+        );
+        let mut report = TrainReport {
+            model: self.cfg.model.clone(),
+            strategy: self.cfg.strategy.clone(),
+            sigma: self.sigma,
+            initial_loss,
+            ..Default::default()
+        };
+        let mut times = Summary::new();
+        let logical = if self.cfg.logical_batch == 0 { self.meta.batch } else { self.cfg.logical_batch };
+        let run_t0 = Instant::now();
+        let mut last_loss = initial_loss;
+        for s in 0..self.cfg.steps {
+            if self.cfg.privacy.strict_budget
+                && self.accountant.is_some()
+                && self.epsilon() >= self.cfg.privacy.target_epsilon
+                && self.cfg.privacy.sigma > 0.0
+            {
+                info!("privacy budget exhausted at step {s}; stopping");
+                break;
+            }
+            let log = self.train_step()?;
+            times.push(log.step_secs);
+            last_loss = log.loss;
+            if self.cfg.log_every > 0 && (s + 1) % self.cfg.log_every == 0 {
+                info!(
+                    "step {:>5} loss {:.4} clip {:.3} eps {:.3} ({:.0} samples/s)",
+                    log.step,
+                    log.loss,
+                    log.mean_clip,
+                    log.epsilon,
+                    logical as f64 / log.step_secs
+                );
+                report.logs.push(log);
+            }
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+                let ev = self.eval(2)?;
+                info!("eval loss {ev:.4}");
+            }
+        }
+        let elapsed = run_t0.elapsed().as_secs_f64();
+        report.steps = self.step_no;
+        report.final_loss = last_loss;
+        report.final_epsilon = self.epsilon();
+        report.mean_step_secs = times.mean();
+        report.throughput_samples_per_sec =
+            (self.step_no * logical) as f64 / elapsed.max(1e-9);
+        report.compile_secs = *self.rt.compile_secs.borrow();
+        report.peak_rss_bytes = peak_rss_bytes();
+        // deterministic tiny perturbation consumers to silence unused warnings
+        let _ = &self.rng;
+        Ok(report)
+    }
+}

@@ -1,0 +1,16 @@
+//! Minimal JSON parser/serializer (the serde facade is unavailable
+//! offline). Supports the full JSON grammar; numbers are f64 with an i64
+//! fast path — all we need for configs and artifact manifests.
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+
+/// Convenience: parse a file.
+pub fn from_file(path: &std::path::Path) -> Result<Value, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+}

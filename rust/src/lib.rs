@@ -1,0 +1,29 @@
+//! # fastdp — Book-Keeping differentially private optimization
+//!
+//! Reproduction of *"Differentially Private Optimization on Large Model at
+//! Small Cost"* (Bu, Wang, Zha, Karypis — ICML 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — ghost-norm / clipped-sum /
+//!   per-sample-gradient kernels (`python/compile/kernels/`).
+//! * **Layer 2 (JAX, build time)** — transformer / MLP / CNN forward +
+//!   book-keeping backward, one AOT-lowered HLO artifact per
+//!   (model, DP implementation) pair (`python/compile/`).
+//! * **Layer 3 (this crate, run time)** — training coordinator, privacy
+//!   accountant, complexity engine, data pipeline and PJRT runtime.
+//!   Python is never on the training path.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod arch;
+pub mod bench;
+pub mod cli;
+pub mod complexity;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod privacy;
+pub mod runtime;
+pub mod util;

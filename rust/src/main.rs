@@ -1,0 +1,182 @@
+//! fastdp CLI — launcher for DP training runs and analysis reports.
+//!
+//! Subcommands:
+//!   train       — run DP training per a JSON config (+ CLI overrides)
+//!   complexity  — print the paper's complexity tables for a model
+//!   calibrate   — solve sigma for a (epsilon, delta, q, steps) target
+//!   list        — list models/strategies available in artifacts/
+//!   version
+
+use fastdp::cli::Args;
+use fastdp::complexity::{self, Strategy, ALL_STRATEGIES};
+use fastdp::config::TrainConfig;
+use fastdp::coordinator::Trainer;
+use fastdp::privacy;
+use fastdp::util::stats::{fmt_bytes, fmt_count};
+use fastdp::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("complexity") => cmd_complexity(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("list") => cmd_list(&args),
+        Some("version") | None => {
+            println!("fastdp 0.1.0 — Book-Keeping DP optimization (Bu et al., ICML 2023)");
+            println!("usage: fastdp <train|complexity|calibrate|list|version> [--opts]");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let mut cfg = match args.get("config") {
+        Some(path) => match TrainConfig::load(std::path::Path::new(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        },
+        None => TrainConfig::default(),
+    };
+    if let Err(e) = cfg.apply_cli(args) {
+        eprintln!("config error: {e}");
+        return 2;
+    }
+    let mut trainer = match Trainer::new(cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("init error: {e:#}");
+            return 1;
+        }
+    };
+    match trainer.run() {
+        Ok(report) => {
+            println!(
+                "done: {} steps, loss {:.4} -> {:.4}, eps = {:.3}, {:.1} samples/s \
+                 (mean step {:.0} ms, compile {:.1}s, peak RSS {})",
+                report.steps,
+                report.initial_loss,
+                report.final_loss,
+                report.final_epsilon,
+                report.throughput_samples_per_sec,
+                report.mean_step_secs * 1e3,
+                report.compile_secs,
+                fmt_bytes(report.peak_rss_bytes as f64),
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("training error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_complexity(args: &Args) -> i32 {
+    let model = args.get_or("model", "resnet18");
+    let img = args.get_usize("image", 224) as u64;
+    let seq = args.get_usize("seq", 256) as u64;
+    let b = args.get_f64("batch", 100.0);
+    let arch = fastdp::arch::catalog::vision_model(model, img)
+        .or_else(|| fastdp::arch::catalog::language_model(model, seq));
+    let Some(arch) = arch else {
+        eprintln!("unknown model '{model}' (try resnet18, vit_base, gpt2, roberta-base, ...)");
+        return 2;
+    };
+    let layers: Vec<_> = arch.gl_layers().cloned().collect();
+    let mut t = Table::new(
+        &format!("{model}: per-strategy complexity (B={b})"),
+        &["strategy", "time", "time-vs-nondp", "space", "space-vs-nondp"],
+    );
+    for s in ALL_STRATEGIES {
+        let c = complexity::model_cost(s, b, &layers);
+        t.row(&[
+            s.name().into(),
+            fmt_count(c.time),
+            format!("{:.2}x", c.time_ratio()),
+            fmt_count(c.space),
+            format!("{:.2}x", c.space_ratio()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // layerwise decision summary (Table 4 style)
+    let ghost: f64 = layers.iter().map(|l| complexity::norm_space_ghost(1.0, l)).sum();
+    let inst: f64 = layers.iter().map(|l| complexity::norm_space_inst(1.0, l)).sum();
+    let mixed: f64 = layers.iter().map(|l| complexity::norm_space_mixed(1.0, l)).sum();
+    println!(
+        "\nper-sample-norm space (B=1): ghost {} | instantiation {} | mixed {} \
+         (saves {:.1}x vs inst, {:.1}x vs ghost)",
+        fmt_count(ghost),
+        fmt_count(inst),
+        fmt_count(mixed),
+        inst / mixed,
+        ghost / mixed
+    );
+    let n_ghost = layers.iter().filter(|l| complexity::ghost_preferred(l)).count();
+    println!(
+        "layerwise decision: {n_ghost}/{} layers prefer ghost norm (2T^2 < pd)",
+        layers.len()
+    );
+    0
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    let eps = args.get_f64("epsilon", 3.0);
+    let delta = args.get_f64("delta", 1e-5);
+    let n = args.get_usize("dataset-size", 50_000);
+    let batch = args.get_usize("batch", 1024);
+    let steps = args.get_u64("steps", 1000);
+    let q = batch as f64 / n as f64;
+    let sigma = privacy::calibrate_sigma(q, steps, eps, delta);
+    let achieved = privacy::epsilon_for(q, sigma, steps, delta);
+    println!(
+        "q = {q:.5} (B={batch}, N={n}), steps = {steps}\n\
+         sigma = {sigma:.4} achieves eps = {achieved:.4} at delta = {delta:e} \
+         (target {eps})"
+    );
+    // epsilon trajectory
+    let mut t = Table::new("epsilon trajectory", &["step", "epsilon"]);
+    for frac in [0.1, 0.25, 0.5, 0.75, 1.0] {
+        let s = ((steps as f64) * frac) as u64;
+        t.row(&[s.to_string(), format!("{:.4}", privacy::epsilon_for(q, sigma, s, delta))]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_list(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts-dir", "artifacts");
+    let m = match fastdp::runtime::Manifest::load(std::path::Path::new(dir)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot read manifest: {e} (run `make artifacts`)");
+            return 1;
+        }
+    };
+    let mut t = Table::new(
+        &format!("artifacts in {dir} (kernel_impl={})", m.kernel_impl),
+        &["model", "group", "params", "batch", "optimizer", "strategies"],
+    );
+    for (name, meta) in &m.models {
+        t.row(&[
+            name.clone(),
+            meta.group.clone(),
+            fmt_count(meta.n_params as f64),
+            meta.batch.to_string(),
+            meta.optimizer.clone(),
+            m.strategies_for(name).join(","),
+        ]);
+    }
+    print!("{}", t.render());
+    let _ = Strategy::parse("bk"); // keep import honest
+    0
+}

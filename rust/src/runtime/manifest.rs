@@ -1,0 +1,294 @@
+//! Typed view of artifacts/manifest.json (written by python/compile/aot.py).
+
+use crate::json::{self, Value};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => Err(format!("unknown dtype '{other}'")),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorDesc {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+
+    fn from_json(v: &Value) -> Result<Self, String> {
+        Ok(TensorDesc {
+            name: v.req_str("name")?.to_string(),
+            shape: v
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| "bad dim".to_string()))
+                .collect::<Result<_, _>>()?,
+            dtype: Dtype::parse(v.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// Per-layer dims for the complexity-engine cross-check (paper (T, d, p)).
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub kind: String,
+    pub name: String,
+    pub t: usize,
+    pub d: usize,
+    pub p: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub group: String,
+    pub batch: usize,
+    pub optimizer: String,
+    pub clip_fn: String,
+    pub kernel_impl: String,
+    pub param_names: Vec<String>,
+    pub frozen_names: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub layer_meta: Vec<LayerMeta>,
+    pub n_params: usize,
+    pub spec: Value,
+}
+
+impl ModelMeta {
+    pub fn param_shape(&self, name: &str) -> Result<&[usize], String> {
+        self.param_shapes
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| format!("no shape for param '{name}'"))
+    }
+
+    pub fn param_elems(&self, name: &str) -> usize {
+        self.param_shapes
+            .get(name)
+            .map(|s| s.iter().product())
+            .unwrap_or(0)
+    }
+
+    pub fn is_adam(&self) -> bool {
+        self.optimizer == "adam"
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub kind: String,
+    pub strategy: Option<String>,
+    pub file: String,
+    pub inputs: Vec<TensorDesc>,
+    pub outputs: Vec<TensorDesc>,
+}
+
+impl ArtifactMeta {
+    /// Index of the named output (e.g. "metric:loss").
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|d| d.name == name)
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|d| d.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub source_hash: String,
+    pub kernel_impl: String,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let v = json::from_file(&dir.join("manifest.json"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .get("models")
+            .and_then(Value::as_obj)
+            .ok_or("manifest: missing models")?
+        {
+            let mut shapes = BTreeMap::new();
+            for (p, s) in m
+                .get("param_shapes")
+                .and_then(Value::as_obj)
+                .ok_or("manifest: missing param_shapes")?
+            {
+                shapes.insert(
+                    p.clone(),
+                    s.as_arr()
+                        .ok_or("bad shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                );
+            }
+            let layer_meta = m
+                .req_arr("layer_meta")?
+                .iter()
+                .map(|l| {
+                    Ok(LayerMeta {
+                        kind: l.req_str("kind")?.to_string(),
+                        name: l.req_str("name")?.to_string(),
+                        t: l.req_i64("T")? as usize,
+                        d: l.req_i64("d")? as usize,
+                        p: l.req_i64("p")? as usize,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            let str_list = |key: &str| -> Vec<String> {
+                m.get(key)
+                    .and_then(Value::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|x| x.as_str().map(String::from))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    group: m.opt_str("group", "").to_string(),
+                    batch: m.req_i64("batch")? as usize,
+                    optimizer: m.req_str("optimizer")?.to_string(),
+                    clip_fn: m.req_str("clip_fn")?.to_string(),
+                    kernel_impl: m.opt_str("kernel_impl", "jnp").to_string(),
+                    param_names: str_list("param_names"),
+                    frozen_names: str_list("frozen_names"),
+                    param_shapes: shapes,
+                    layer_meta,
+                    n_params: m.req_i64("n_params")? as usize,
+                    spec: m.get("spec").cloned().unwrap_or(Value::Null),
+                },
+            );
+        }
+        let artifacts = v
+            .req_arr("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    model: a.req_str("model")?.to_string(),
+                    kind: a.req_str("kind")?.to_string(),
+                    strategy: a
+                        .get("strategy")
+                        .and_then(Value::as_str)
+                        .map(String::from),
+                    file: a.req_str("file")?.to_string(),
+                    inputs: a
+                        .req_arr("inputs")?
+                        .iter()
+                        .map(TensorDesc::from_json)
+                        .collect::<Result<_, _>>()?,
+                    outputs: a
+                        .req_arr("outputs")?
+                        .iter()
+                        .map(TensorDesc::from_json)
+                        .collect::<Result<_, _>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Manifest {
+            source_hash: v.opt_str("source_hash", "").to_string(),
+            kernel_impl: v.opt_str("kernel_impl", "jnp").to_string(),
+            models,
+            artifacts,
+        })
+    }
+
+    /// Strategies available for a model's step artifacts.
+    pub fn strategies_for(&self, model: &str) -> Vec<String> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == "step")
+            .filter_map(|a| a.strategy.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    fn sample() -> Value {
+        parse(
+            r#"{
+          "version": 1, "source_hash": "abc", "kernel_impl": "jnp",
+          "models": {"m1": {
+            "spec": {"kind": "mlp"}, "batch": 8, "optimizer": "adam",
+            "clip_fn": "automatic", "group": "bench",
+            "param_names": ["w"], "frozen_names": [],
+            "param_shapes": {"w": [3, 4]},
+            "layer_meta": [{"kind": "linear", "name": "w", "T": 1, "d": 3, "p": 4}],
+            "n_params": 12, "kernel_impl": "jnp"
+          }},
+          "artifacts": [{
+            "model": "m1", "kind": "step", "strategy": "bk",
+            "file": "m1__step_bk.hlo.txt",
+            "inputs": [{"name": "w", "shape": [3, 4], "dtype": "f32"}],
+            "outputs": [{"name": "w", "shape": [3, 4], "dtype": "f32"},
+                        {"name": "metric:loss", "shape": [], "dtype": "f32"}]
+          }]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.models["m1"].batch, 8);
+        assert!(m.models["m1"].is_adam());
+        assert_eq!(m.models["m1"].param_shape("w").unwrap(), &[3, 4]);
+        assert_eq!(m.models["m1"].layer_meta[0].d, 3);
+        let a = &m.artifacts[0];
+        assert_eq!(a.strategy.as_deref(), Some("bk"));
+        assert_eq!(a.output_index("metric:loss"), Some(1));
+        assert_eq!(a.inputs[0].elements(), 12);
+        assert_eq!(a.inputs[0].bytes(), 48);
+        assert_eq!(m.strategies_for("m1"), vec!["bk"]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::from_json(&parse("{}").unwrap()).is_err());
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

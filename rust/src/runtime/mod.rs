@@ -1,0 +1,171 @@
+//! Runtime: load AOT artifacts (HLO text + manifest.json) and execute
+//! them on the PJRT CPU client. This is the only module that talks to
+//! the `xla` crate; everything above it works with `Literal`s and
+//! manifest metadata.
+//!
+//! Interchange contract (see python/compile/aot.py):
+//!  * `<model>__init.hlo.txt`            — seed -> params
+//!  * `<model>__eval.hlo.txt`            — params, x, y -> loss
+//!  * `<model>__step_<strategy>.hlo.txt` — params, [m, v], x, y,
+//!                                         [noise...], scalars -> params',
+//!                                         [m', v'], metrics
+//! All computations are lowered with return_tuple=True, so execution
+//! yields one tuple literal that we decompose by the manifest's output
+//! descriptors.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Dtype, LayerMeta, Manifest, ModelMeta, TensorDesc};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A compiled-executable cache keyed by artifact file name.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile seconds (reported by the coordinator).
+    pub compile_secs: RefCell<f64>,
+}
+
+impl Runtime {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)
+            .map_err(|e| anyhow!("loading manifest from {}: {e}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                self.manifest.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, model: &str, kind: &str, strategy: Option<&str>)
+        -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.model == model && a.kind == kind
+                && a.strategy.as_deref() == strategy)
+            .ok_or_else(|| anyhow!(
+                "artifact model={model} kind={kind} strategy={strategy:?} not found \
+                 (re-run `make artifacts`?)"))
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, art: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&art.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&art.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", art.file))?,
+        );
+        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(art.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs (passed by reference so
+    /// params can stay host-resident across steps); returns the
+    /// decomposed output tuple, validated against the manifest.
+    pub fn execute(&self, art: &ArtifactMeta, inputs: &[&xla::Literal])
+        -> Result<Vec<xla::Literal>> {
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                art.file,
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(art)?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", art.file))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = tuple.to_tuple().context("decomposing result tuple")?;
+        if outs.len() != art.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, executable returned {}",
+                art.file,
+                art.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Build a f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_f32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_i32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Scalar literals (0-d).
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Read back a f32 literal as a host vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 output.
+pub fn scalar_of(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

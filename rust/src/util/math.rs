@@ -1,0 +1,162 @@
+//! Special functions needed by the privacy accountant (no libm-extras
+//! offline): erf/erfc, standard normal CDF, log-sum-exp, log binomial.
+
+/// Abramowitz & Stegun 7.1.26-style erf via the Numerical-Recipes erfc
+/// approximation; |error| < 1.2e-7 — ample for accounting (we binary
+/// search over it, so only monotonicity + ~1e-6 accuracy matter).
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal CDF Phi(x).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// log(Gamma(x)) via Lanczos (g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// log C(n, k) for real-valued RDP order interpolation.
+pub fn ln_binom(n: f64, k: f64) -> f64 {
+    ln_gamma(n + 1.0) - ln_gamma(k + 1.0) - ln_gamma(n - k + 1.0)
+}
+
+/// Numerically stable log(sum(exp(xs))).
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// Stable log(exp(a) + exp(b)).
+pub fn log_add_exp(a: f64, b: f64) -> f64 {
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    if hi == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    hi + (lo - hi).exp().ln_1p()
+}
+
+/// Binary search for the root of a monotone-increasing `f` on [lo, hi].
+pub fn bisect<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, iters: usize) -> f64 {
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) > 0.0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_points() {
+        // Reference values from tables.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn norm_cdf_symmetry_and_points() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 5e-7);
+        assert!((norm_cdf(1.96) - 0.9750021).abs() < 1e-5);
+        // symmetry holds to the accuracy of the erfc approximation (~1e-7)
+        for x in [-3.0, -1.0, 0.3, 2.5] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 5e-7);
+        }
+    }
+
+    #[test]
+    fn ln_gamma_factorials() {
+        for n in 1..15u64 {
+            let fact: f64 = (1..n).map(|k| k as f64).product::<f64>().ln();
+            assert!(
+                (ln_gamma(n as f64) - fact).abs() < 1e-8,
+                "ln_gamma({n}) = {} want {}",
+                ln_gamma(n as f64),
+                fact
+            );
+        }
+    }
+
+    #[test]
+    fn ln_binom_pascal() {
+        // C(10,3) = 120
+        assert!((ln_binom(10.0, 3.0) - 120f64.ln()).abs() < 1e-8);
+        // C(52,5) = 2598960
+        assert!((ln_binom(52.0, 5.0) - 2598960f64.ln()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lse_basics() {
+        assert!((log_sum_exp(&[0.0, 0.0]) - 2f64.ln()).abs() < 1e-12);
+        assert!((log_add_exp(1000.0, 1000.0) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(log_sum_exp(&[]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bisect_sqrt2() {
+        let r = bisect(|x| x * x - 2.0, 0.0, 2.0, 80);
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+}

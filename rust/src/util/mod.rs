@@ -1,0 +1,11 @@
+//! Small self-contained utilities. The environment is offline (no rand /
+//! criterion / statistical crates), so the usual helpers are
+//! reimplemented here with tests: PRNG + Gaussian sampling, special
+//! functions for the accountant, timing/summary stats, table rendering,
+//! and a tiny leveled logger.
+
+pub mod log;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod table;

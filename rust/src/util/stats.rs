@@ -1,0 +1,199 @@
+//! Timing + summary statistics for the bench harness (criterion is not
+//! available offline; this is the minimal honest replacement: warmup,
+//! repeated timed runs, mean/median/stddev/min, and RSS sampling).
+
+use std::time::Instant;
+
+/// Online summary of a sample set.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn var(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Time `f` with warmup; returns per-iteration seconds.
+pub fn time_iters<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Current process resident set size in bytes (Linux, /proc/self/statm).
+pub fn rss_bytes() -> u64 {
+    if let Ok(statm) = std::fs::read_to_string("/proc/self/statm") {
+        if let Some(pages) = statm.split_whitespace().nth(1) {
+            if let Ok(p) = pages.parse::<u64>() {
+                return p * 4096;
+            }
+        }
+    }
+    0
+}
+
+/// Peak RSS (VmHWM) in bytes from /proc/self/status.
+pub fn peak_rss_bytes() -> u64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+                return kb * 1024;
+            }
+        }
+    }
+    0
+}
+
+/// Human formatting helpers used across bench tables.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2}{}", UNITS[u])
+}
+
+pub fn fmt_count(c: f64) -> String {
+    if c >= 1e12 {
+        format!("{:.1}T", c / 1e12)
+    } else if c >= 1e9 {
+        format!("{:.1}G", c / 1e9)
+    } else if c >= 1e6 {
+        format!("{:.1}M", c / 1e6)
+    } else if c >= 1e3 {
+        format!("{:.1}K", c / 1e3)
+    } else {
+        format!("{c:.0}")
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else {
+        format!("{:.0}m{:02.0}s", (secs / 60.0).floor(), secs % 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.var() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn timing_positive() {
+        let s = time_iters(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            2,
+            5,
+        );
+        assert_eq!(s.n(), 5);
+        assert!(s.min() > 0.0);
+    }
+
+    #[test]
+    fn rss_nonzero_on_linux() {
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(1536.0), "1.50KB");
+        assert_eq!(fmt_count(2_500_000.0), "2.5M");
+        assert_eq!(fmt_duration(0.0025), "2.5ms");
+        assert_eq!(fmt_duration(125.0), "2m05s");
+    }
+}

@@ -1,0 +1,221 @@
+//! Property-based tests (hand-rolled generator loop; proptest is not
+//! vendored offline). Each property runs across hundreds of randomized
+//! cases drawn from a seeded PRNG, shrinking is replaced by printing the
+//! failing seed/case.
+
+use fastdp::arch::{LayerDims, LayerKind};
+use fastdp::complexity::{
+    ghost_preferred, layer_cost, model_cost, norm_space_ghost, norm_space_inst,
+    norm_space_mixed, Strategy, ALL_STRATEGIES,
+};
+use fastdp::privacy::{calibrate_sigma, epsilon_for, rdp_sampled_gaussian};
+use fastdp::util::rng::Xoshiro256;
+
+fn random_layer(rng: &mut Xoshiro256) -> LayerDims {
+    let kind = match rng.next_below(3) {
+        0 => LayerKind::Linear,
+        1 => LayerKind::Conv,
+        _ => LayerKind::Embedding,
+    };
+    LayerDims {
+        kind,
+        name: "x".into(),
+        t: 1 + rng.next_below(4096),
+        d: 1 + rng.next_below(4096),
+        p: 1 + rng.next_below(4096),
+    }
+}
+
+/// Invariant 4 (DESIGN.md): mixed space = sum min{2T^2, pd} is never
+/// worse than either pure policy, layerwise and model-wise.
+#[test]
+fn prop_mixed_never_worse() {
+    let mut rng = Xoshiro256::new(0xA11CE);
+    for case in 0..500 {
+        let l = random_layer(&mut rng);
+        let b = 1.0 + rng.next_below(128) as f64;
+        let m = norm_space_mixed(b, &l);
+        assert!(
+            m <= norm_space_ghost(b, &l) + 1e-9 && m <= norm_space_inst(b, &l) + 1e-9,
+            "case {case}: {l:?}"
+        );
+    }
+}
+
+/// BK-MixOpt is never slower than BK or (improved) Opacus per layer, and
+/// its space overhead is the min of the two bases (paper Table 5).
+#[test]
+fn prop_bkmixopt_dominates() {
+    let mut rng = Xoshiro256::new(0xB0B);
+    for case in 0..500 {
+        let mut l = random_layer(&mut rng);
+        l.kind = LayerKind::Linear;
+        let b = 1.0 + rng.next_below(64) as f64;
+        let mix = layer_cost(Strategy::BkMixOpt, b, &l);
+        let bk = layer_cost(Strategy::Bk, b, &l);
+        let op = layer_cost(Strategy::Opacus, b, &l);
+        assert!(mix.time <= bk.time + 1e-6, "case {case} time vs bk: {l:?}");
+        assert!(
+            mix.space_overhead <= bk.space_overhead + 1e-6
+                && mix.space_overhead <= op.space_overhead + 1e-6,
+            "case {case} space: {l:?}"
+        );
+    }
+}
+
+/// Every DP strategy costs at least non-DP, on any layer and model.
+#[test]
+fn prop_dp_never_cheaper_than_nondp() {
+    let mut rng = Xoshiro256::new(0xCAFE);
+    for _ in 0..300 {
+        let layers: Vec<LayerDims> = (0..1 + rng.next_below(12))
+            .map(|_| random_layer(&mut rng))
+            .collect();
+        let b = 1.0 + rng.next_below(64) as f64;
+        let nd = model_cost(Strategy::NonDp, b, &layers);
+        for s in ALL_STRATEGIES {
+            let c = model_cost(s, b, &layers);
+            assert!(c.time + 1e-6 >= nd.time, "{s:?} time under nondp");
+            assert!(c.space + 1e-6 >= nd.space, "{s:?} space under nondp");
+        }
+    }
+}
+
+/// The layerwise decision is exactly the 2T^2 < pd threshold for
+/// linear/conv layers.
+#[test]
+fn prop_decision_threshold_exact() {
+    let mut rng = Xoshiro256::new(7);
+    for _ in 0..500 {
+        let mut l = random_layer(&mut rng);
+        if l.kind == LayerKind::Embedding {
+            assert!(ghost_preferred(&l));
+            continue;
+        }
+        let lhs = 2.0 * (l.t as f64) * (l.t as f64);
+        let rhs = (l.p * l.d) as f64;
+        assert_eq!(ghost_preferred(&l), lhs < rhs, "{l:?}");
+    }
+}
+
+/// RDP is monotone: increasing in alpha and q, decreasing in sigma.
+#[test]
+fn prop_rdp_monotonicity() {
+    let mut rng = Xoshiro256::new(0xDEED);
+    for _ in 0..300 {
+        let q = 0.001 + 0.5 * rng.next_f64();
+        let sigma = 0.5 + 4.0 * rng.next_f64();
+        let alpha = 2.0 + rng.next_below(60) as f64;
+        let base = rdp_sampled_gaussian(q, sigma, alpha);
+        assert!(base >= 0.0);
+        assert!(rdp_sampled_gaussian(q, sigma, alpha + 1.0) >= base - 1e-12);
+        assert!(rdp_sampled_gaussian((q * 1.5).min(1.0), sigma, alpha) >= base - 1e-12);
+        assert!(rdp_sampled_gaussian(q, sigma * 1.5, alpha) <= base + 1e-12);
+    }
+}
+
+/// Calibration always lands at or below the epsilon target and is tight
+/// within 2%.
+#[test]
+fn prop_calibration_tight() {
+    let mut rng = Xoshiro256::new(0x5160A);
+    for _ in 0..25 {
+        let q = 0.002 + 0.1 * rng.next_f64();
+        let steps = 100 + rng.next_below(5000);
+        let eps = 0.5 + 8.0 * rng.next_f64();
+        let sigma = calibrate_sigma(q, steps, eps, 1e-5);
+        let achieved = epsilon_for(q, sigma, steps, 1e-5);
+        assert!(achieved <= eps * 1.0001, "q={q} steps={steps} eps={eps}");
+        assert!(achieved >= eps * 0.98, "overshoot: {achieved} vs {eps}");
+    }
+}
+
+/// Epsilon composition is superadditive-ish: eps(2k steps) >= eps(k).
+#[test]
+fn prop_epsilon_grows_with_steps() {
+    let mut rng = Xoshiro256::new(0xE9);
+    for _ in 0..50 {
+        let q = 0.001 + 0.05 * rng.next_f64();
+        let sigma = 0.8 + 2.0 * rng.next_f64();
+        let k = 50 + rng.next_below(2000);
+        let e1 = epsilon_for(q, sigma, k, 1e-5);
+        let e2 = epsilon_for(q, sigma, 2 * k, 1e-5);
+        assert!(e2 >= e1 - 1e-12);
+        assert!(e2 <= 2.0 * e1 * (2.0f64).sqrt() + 1.0, "sublinear-ish growth");
+    }
+}
+
+/// Poisson sampler: expected batch size concentration (statistical).
+#[test]
+fn prop_poisson_concentration() {
+    for seed in 0..5u64 {
+        let n = 5000;
+        let q = 0.02;
+        let mut s = fastdp::data::PoissonSampler::new(n, q, seed);
+        let mut total = 0usize;
+        let reps = 50;
+        for _ in 0..reps {
+            total += s.sample().len();
+        }
+        let mean = total as f64 / reps as f64;
+        let expect = n as f64 * q;
+        let sd = (n as f64 * q * (1.0 - q)).sqrt();
+        assert!(
+            (mean - expect).abs() < 4.0 * sd / (reps as f64).sqrt(),
+            "seed {seed}: mean {mean} vs {expect}"
+        );
+    }
+}
+
+/// JSON roundtrip fuzz: render(parse(x)) == render(parse(render(parse(x)))).
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    let mut rng = Xoshiro256::new(0x15);
+
+    fn gen(rng: &mut Xoshiro256, depth: u32) -> fastdp::json::Value {
+        use fastdp::json::Value;
+        match if depth > 3 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.next_f64() < 0.5),
+            2 => Value::Int(rng.next_u64() as i64 / 1000),
+            3 => Value::Str(format!("s{}\"\\\n{}", rng.next_below(100), rng.next_below(10))),
+            4 => Value::Arr((0..rng.next_below(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => {
+                let mut o = Value::obj();
+                for i in 0..rng.next_below(5) {
+                    o.set(&format!("k{i}"), gen(rng, depth + 1));
+                }
+                o
+            }
+        }
+    }
+
+    for case in 0..200 {
+        let v = gen(&mut rng, 0);
+        let text = v.to_string();
+        let re = fastdp::json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, re, "case {case}");
+        let pretty = v.to_string_pretty();
+        assert_eq!(v, fastdp::json::parse(&pretty).unwrap(), "case {case} pretty");
+    }
+}
+
+/// Gradient-clipping factor functions: after clipping, effective norms
+/// are bounded by R (Abadi/flat) — checked on random norms.
+#[test]
+fn prop_clip_factor_bounds() {
+    let mut rng = Xoshiro256::new(0xC11F);
+    for _ in 0..1000 {
+        let norm = rng.next_f64() * 20.0;
+        let r = 0.1 + rng.next_f64() * 5.0;
+        // Abadi: c = min(r/norm, 1) => c*norm <= r and c <= 1
+        let c = (r / norm.max(1e-12)).min(1.0);
+        assert!(c * norm <= r + 1e-9);
+        // flat: indicator
+        let cf = if norm <= r { 1.0 } else { 0.0 };
+        assert!(cf * norm <= r + 1e-9);
+        // automatic: c = r/(norm + 0.01) => c*norm < r
+        let ca = r / (norm + 0.01);
+        assert!(ca * norm < r + 1e-9);
+    }
+}

@@ -1,0 +1,219 @@
+//! Integration: load real AOT artifacts, execute init/eval/step, and
+//! verify the cross-layer contract (shapes, metrics, DP-step semantics).
+//!
+//! Requires `make artifacts` to have run (the Makefile orders this).
+
+use fastdp::runtime::{literal_f32, literal_i32, scalar_f32, scalar_i32, scalar_of, Runtime};
+use fastdp::util::rng::{GaussianSource, Xoshiro256};
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    Runtime::load(dir).expect("runtime")
+}
+
+/// Standard-normal noise literals, one per trainable tensor, from a seed.
+fn noise_literals(meta: &fastdp::runtime::ModelMeta, seed: u64) -> Vec<xla::Literal> {
+    let mut gs = GaussianSource::new(seed);
+    meta.param_names
+        .iter()
+        .map(|name| {
+            let shape = meta.param_shape(name).unwrap();
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0f32; n];
+            gs.fill_f32(&mut buf);
+            literal_f32(&buf, shape).unwrap()
+        })
+        .collect()
+}
+
+fn zeros_like_params(meta: &fastdp::runtime::ModelMeta) -> Vec<xla::Literal> {
+    meta.param_names
+        .iter()
+        .map(|name| {
+            let shape = meta.param_shape(name).unwrap();
+            let n: usize = shape.iter().product();
+            literal_f32(&vec![0f32; n], shape).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_lists_models_and_artifacts() {
+    let rt = runtime();
+    assert!(rt.manifest.models.contains_key("mlp_e2e"));
+    assert!(rt.manifest.models.contains_key("gpt_bench"));
+    let strategies = rt.manifest.strategies_for("gpt_bench");
+    for s in ["nondp", "opacus", "ghostclip", "bk", "bk_mixopt"] {
+        assert!(strategies.iter().any(|x| x == s), "missing strategy {s}");
+    }
+}
+
+#[test]
+fn init_eval_step_roundtrip_mlp() {
+    let rt = runtime();
+    let meta = rt.model("mlp_e2e").unwrap().clone();
+    let b = meta.batch;
+    let d_in = 128usize;
+
+    // init(seed) -> params
+    let init = rt.artifact("mlp_e2e", "init", None).unwrap().clone();
+    let seed = scalar_i32(0);
+    let params = rt.execute(&init, &[&seed]).unwrap();
+    assert_eq!(params.len(), meta.param_names.len());
+
+    // synthetic batch
+    let mut rng = Xoshiro256::new(7);
+    let x: Vec<f32> = (0..b * d_in).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
+    let xl = literal_f32(&x, &[b, d_in]).unwrap();
+    let yl = literal_i32(&y, &[b]).unwrap();
+
+    // eval before training: ~ln(10) for a 10-way random classifier
+    let eval = rt.artifact("mlp_e2e", "eval", None).unwrap().clone();
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&xl);
+    args.push(&yl);
+    let loss0 = scalar_of(&rt.execute(&eval, &args).unwrap()[0]).unwrap();
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss0={loss0}");
+    assert!((loss0 - 10f32.ln()).abs() < 1.0, "loss0={loss0}");
+
+    // Repeated BK steps with sigma=0 on a fixed batch reduce the loss.
+    let step = rt.artifact("mlp_e2e", "step", Some("bk")).unwrap().clone();
+    let loss_idx = step.output_index("metric:loss").unwrap();
+    let mut cur = params;
+    let mut last_loss = f32::INFINITY;
+    for it in 0..5 {
+        let noise = noise_literals(&meta, 100 + it as u64);
+        let scalars = [
+            scalar_f32(0.5),            // lr
+            scalar_f32(1.0),            // clip R
+            scalar_f32(0.0),            // sigma*R = 0: pure clipped descent
+            scalar_f32(b as f32),       // batch
+            scalar_f32((it + 1) as f32),// step
+        ];
+        let mut sargs: Vec<&xla::Literal> = cur.iter().collect();
+        sargs.push(&xl);
+        sargs.push(&yl);
+        sargs.extend(noise.iter());
+        sargs.extend(scalars.iter());
+
+        let outs = rt.execute(&step, &sargs).unwrap();
+        let loss = scalar_of(&outs[loss_idx]).unwrap();
+        assert!(loss.is_finite());
+        if it > 0 {
+            assert!(
+                loss < last_loss + 0.05,
+                "loss should not increase much: {last_loss} -> {loss}"
+            );
+        }
+        last_loss = loss;
+        cur = outs.into_iter().take(meta.param_names.len()).collect();
+    }
+    assert!(
+        last_loss < loss0,
+        "training should reduce loss: {loss0} -> {last_loss}"
+    );
+}
+
+#[test]
+fn dp_strategies_agree_on_one_step() {
+    // The paper's central claim at the systems level: every implementation
+    // computes the same private gradient. Run one step of each strategy
+    // from identical params/batch/noise and compare updated parameters.
+    let rt = runtime();
+    let meta = rt.model("gpt_bench").unwrap().clone();
+    let b = meta.batch;
+    let seq = 64usize;
+
+    let init = rt.artifact("gpt_bench", "init", None).unwrap().clone();
+    let seed = scalar_i32(3);
+    let params = rt.execute(&init, &[&seed]).unwrap();
+
+    let mut rng = Xoshiro256::new(5);
+    let x: Vec<i32> = (0..b * seq).map(|_| rng.next_below(512) as i32).collect();
+    let y: Vec<i32> = (0..b * seq).map(|_| rng.next_below(512) as i32).collect();
+    let xl = literal_i32(&x, &[b, seq]).unwrap();
+    let yl = literal_i32(&y, &[b, seq]).unwrap();
+
+    let strategies = [
+        "opacus",
+        "fastgradclip",
+        "ghostclip",
+        "mixghostclip",
+        "bk",
+        "bk_mixghostclip",
+        "bk_mixopt",
+    ];
+    let m0 = zeros_like_params(&meta);
+    let v0 = zeros_like_params(&meta);
+    let noise = noise_literals(&meta, 99);
+    let scalars = [
+        scalar_f32(1e-3),
+        scalar_f32(1.0),
+        scalar_f32(0.5),
+        scalar_f32(b as f32),
+        scalar_f32(1.0),
+    ];
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for strat in strategies {
+        let step = rt
+            .artifact("gpt_bench", "step", Some(strat))
+            .unwrap()
+            .clone();
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.extend(m0.iter());
+        args.extend(v0.iter());
+        args.push(&xl);
+        args.push(&yl);
+        args.extend(noise.iter());
+        args.extend(scalars.iter());
+
+        let outs = rt.execute(&step, &args).unwrap();
+        let new_params: Vec<Vec<f32>> = outs[..meta.param_names.len()]
+            .iter()
+            .map(|l| l.to_vec::<f32>().unwrap())
+            .collect();
+        match &reference {
+            None => reference = Some(new_params),
+            Some(r) => {
+                for (i, (a, b_)) in r.iter().zip(new_params.iter()).enumerate() {
+                    let max_rel = a
+                        .iter()
+                        .zip(b_.iter())
+                        .map(|(x, y)| (x - y).abs() / (x.abs().max(y.abs()).max(1e-3)))
+                        .fold(0f32, f32::max);
+                    assert!(
+                        max_rel < 5e-3,
+                        "strategy {strat} diverges from opacus on tensor {} ({}): rel {max_rel}",
+                        i,
+                        meta.param_names[i],
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn artifact_descriptors_match_execution() {
+    let rt = runtime();
+    let init = rt.artifact("mlp_e2e", "init", None).unwrap().clone();
+    let seed = scalar_i32(1);
+    let outs = rt.execute(&init, &[&seed]).unwrap();
+    for (desc, lit) in init.outputs.iter().zip(outs.iter()) {
+        let got = lit.array_shape().unwrap();
+        let want: Vec<i64> = desc.shape.iter().map(|&d| d as i64).collect();
+        assert_eq!(got.dims(), &want[..], "shape mismatch for {}", desc.name);
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_arity() {
+    let rt = runtime();
+    let init = rt.artifact("mlp_e2e", "init", None).unwrap().clone();
+    assert!(rt.execute(&init, &[]).is_err());
+}
