@@ -32,7 +32,7 @@ fn main() {
                         model.into(),
                         strat.clone(),
                         fmt_duration(r.mean_step_secs),
-                        format!("{:.0}/s", r.throughput),
+                        format!("{:.0}/s", r.samples_per_sec),
                         fmt_bytes(r.peak_rss as f64),
                         format!("{:.2}x", c.space / nondp_space),
                     ]);
@@ -57,7 +57,7 @@ fn main() {
                         meta.batch.to_string(),
                         strat.clone(),
                         fmt_duration(r.mean_step_secs),
-                        format!("{:.0}/s", r.throughput),
+                        format!("{:.0}/s", r.samples_per_sec),
                         fmt_bytes(r.peak_rss as f64),
                     ]);
                 }

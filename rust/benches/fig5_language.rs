@@ -45,7 +45,7 @@ fn main() {
             nondp_time
                 .map(|n| format!("{:.2}x", r.mean_step_secs / n))
                 .unwrap_or_default(),
-            format!("{:.1}/s", r.throughput),
+            format!("{:.1}/s", r.samples_per_sec),
             fmt_bytes(r.peak_rss as f64),
         ]);
     }

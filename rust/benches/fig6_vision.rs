@@ -30,7 +30,7 @@ fn main() {
                 t.row(&[
                     strat.clone(),
                     fmt_duration(r.mean_step_secs),
-                    format!("{:.0}/s", r.throughput),
+                    format!("{:.0}/s", r.samples_per_sec),
                     fmt_bytes(r.peak_rss as f64),
                     format!("{:.2}x", model_cost(s, b, &layers).space / nondp_space),
                 ]);

@@ -22,7 +22,7 @@ fn main() {
                 .row(&[
                     strat.clone(),
                     fmt_duration(r.mean_step_secs),
-                    format!("{:.1}/s", r.throughput),
+                    format!("{:.1}/s", r.samples_per_sec),
                     fmt_bytes(r.peak_rss as f64),
                 ])
                 .to_owned(),

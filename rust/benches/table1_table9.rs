@@ -59,7 +59,7 @@ fn main() {
                 r.model.clone(),
                 r.strategy.clone(),
                 fmt_duration(r.mean_step_secs),
-                format!("{:.1}/s", r.throughput),
+                format!("{:.1}/s", r.samples_per_sec),
                 bk_time
                     .map(|bt| format!("{:.2}x", r.mean_step_secs / bt))
                     .unwrap_or_default(),

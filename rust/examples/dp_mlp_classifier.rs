@@ -1,14 +1,16 @@
 //! DP MLP classification with gradient accumulation + checkpointing:
 //! demonstrates the logical-vs-physical batch split (paper footnote 2 and
 //! Appendix D.4) — per-sample clipping per micro-batch, one noise draw
-//! per logical batch — and crash-safe resume.
+//! per logical batch — and crash-safe resume, all on the native backend.
 //!
 //!   cargo run --release --example dp_mlp_classifier
+
+#![allow(clippy::field_reassign_with_default)]
 
 use fastdp::config::TrainConfig;
 use fastdp::coordinator::Trainer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastdp::error::Result<()> {
     let ckpt_dir = std::env::temp_dir().join("fastdp_mlp_ckpt");
     let _ = std::fs::remove_dir_all(&ckpt_dir);
 
@@ -18,8 +20,8 @@ fn main() -> anyhow::Result<()> {
     cfg.steps = 20;
     cfg.lr = 0.5;
     cfg.clip = 1.0;
-    // physical batch is 32 (baked into the artifact); accumulate 4 of
-    // them into a logical batch of 128:
+    // physical batch is 32 (from the model spec); accumulate 4 of them
+    // into a logical batch of 128:
     cfg.logical_batch = 128;
     cfg.privacy.sigma = 1.0; // explicit noise multiplier
     cfg.privacy.dataset_size = 50_000;

@@ -1,0 +1,111 @@
+//! Hot-path profiling on the native backend: break one DP training step
+//! into its coordinator-side phases — noise generation (Rust DRBG),
+//! batch synthesis, and the fused kernel step — and compare the step
+//! cost across strategies (the paper's Table 1/9 shape, at MLP scale).
+//!
+//!   cargo run --release --example perf_breakdown -- [--model mlp_e2e] [--iters 20]
+
+use fastdp::cli::Args;
+use fastdp::complexity::Strategy;
+use fastdp::coordinator::noise::NoiseSource;
+use fastdp::data::VectorDataset;
+use fastdp::runtime::native::model::NativeSpec;
+use fastdp::runtime::native::NativeBackend;
+use fastdp::runtime::{Backend, BatchX, StepHyper};
+use fastdp::util::stats::{fmt_duration, Summary};
+use fastdp::util::table::Table;
+use std::time::Instant;
+
+fn main() -> fastdp::error::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "mlp_e2e").to_string();
+    let iters = args.get_usize("iters", 20);
+
+    let spec = NativeSpec::by_name(&model)
+        .ok_or_else(|| fastdp::anyhow!("model '{model}' not in the native registry"))?;
+    let rows = spec.batch * spec.seq;
+    let mut ds = VectorDataset::new(spec.d_in, spec.n_classes, 2.0, 7);
+    let mut noise_src = NoiseSource::new(3);
+    let h = StepHyper {
+        lr: 1e-3,
+        clip: 1.0,
+        sigma_r: 0.5,
+        logical_batch: spec.batch as f32,
+        step: 1.0,
+    };
+
+    // ---- phase breakdown on the BK fast path -----------------------
+    let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 0)?;
+    be.init(0)?;
+    let (mut t_noise, mut t_batch, mut t_step) = (Summary::new(), Summary::new(), Summary::new());
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let noise = noise_src.tensors(be.info());
+        t_noise.push(t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let (xs, y) = ds.sample_batch(rows);
+        let x = BatchX::F32(xs);
+        t_batch.push(t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        be.step(&x, &y, &noise, &h)?;
+        t_step.push(t0.elapsed().as_secs_f64());
+    }
+    let mut t = Table::new(
+        &format!("{model}: BK step phase breakdown ({iters} iters)"),
+        &["phase", "mean", "min", "share"],
+    );
+    let total = t_noise.mean() + t_batch.mean() + t_step.mean();
+    for (name, s) in [("noise DRBG", &t_noise), ("batch synth", &t_batch), ("kernel step", &t_step)]
+    {
+        t.row(&[
+            name.into(),
+            fmt_duration(s.mean()),
+            fmt_duration(s.min()),
+            format!("{:.1}%", 100.0 * s.mean() / total),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- strategy comparison (fresh backend per strategy) ----------
+    let mut t = Table::new(
+        &format!("{model}: step time by strategy"),
+        &["strategy", "mean/step", "vs nondp"],
+    );
+    let mut nondp_mean = 0.0f64;
+    for strat in [
+        Strategy::NonDp,
+        Strategy::Bk,
+        Strategy::BkMixOpt,
+        Strategy::GhostClip,
+        Strategy::FastGradClip,
+        Strategy::Opacus,
+    ] {
+        let mut be = NativeBackend::new(spec.clone(), strat, 0)?;
+        be.init(0)?;
+        let (xs, y) = ds.sample_batch(rows);
+        let x = BatchX::F32(xs);
+        let nondp = strat == Strategy::NonDp;
+        let noise = if nondp { Vec::new() } else { noise_src.tensors(be.info()) };
+        // nondp takes no noise, so its hyper must carry sigma_r = 0
+        let hs = StepHyper { sigma_r: if nondp { 0.0 } else { h.sigma_r }, ..h };
+        let mut s = Summary::new();
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            be.step(&x, &y, &noise, &hs)?;
+            s.push(t0.elapsed().as_secs_f64());
+        }
+        if strat == Strategy::NonDp {
+            nondp_mean = s.mean();
+        }
+        t.row(&[
+            strat.name().into(),
+            fmt_duration(s.mean()),
+            format!("{:.2}x", s.mean() / nondp_mean.max(1e-12)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(paper Table 2: nondp ~ bk < fastgradclip ~ opacus < ghostclip for small T)");
+    Ok(())
+}

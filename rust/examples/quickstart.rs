@@ -3,16 +3,20 @@
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Trains the small MLP artifact with the Book-Keeping (BK) algorithm at
-//! (eps = 3, delta = 1e-5) for 30 steps and prints the loss + epsilon.
+//! Trains the small MLP on the native kernel backend with the
+//! Book-Keeping (BK) algorithm at (eps = 3, delta = 1e-5) for 30 steps
+//! and prints the loss + epsilon. No artifacts, no Python, no XLA.
+
+#![allow(clippy::field_reassign_with_default)]
 
 use fastdp::config::TrainConfig;
 use fastdp::coordinator::Trainer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastdp::error::Result<()> {
     // The whole "PrivacyEngine.attach" ceremony is a config:
     let mut cfg = TrainConfig::default();
-    cfg.model = "mlp_e2e".into(); // an AOT-compiled (model, B) pair
+    cfg.backend = "native".into(); // pure-Rust BK kernels (the default)
+    cfg.model = "mlp_e2e".into(); // a native registry model
     cfg.strategy = "bk".into(); // the paper's Algorithm 1
     cfg.steps = 30;
     cfg.lr = 0.5;

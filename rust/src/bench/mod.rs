@@ -1,18 +1,27 @@
 //! Bench harness (criterion is unavailable offline): warmup + timed
-//! iterations of step executables, with *per-process* peak-RSS isolation.
+//! iterations of training steps, with *per-process* peak-RSS isolation.
 //!
-//! Memory attribution problem: XLA's CPU allocator retains arenas, so
-//! measuring several strategies in one process smears their footprints.
-//! Solution: the bench binary re-execs itself once per (model, strategy)
-//! with `FASTDP_BENCH_CHILD=<model>:<strategy>:<iters>`; the child runs
-//! the measurement and prints one JSON line; the parent aggregates into
-//! the paper-style table. Results are also written to `bench_results/`.
+//! Memory attribution problem: allocators retain arenas, so measuring
+//! several strategies in one process smears their footprints. Solution:
+//! the CLI re-execs itself once per (model, strategy) with
+//! `FASTDP_BENCH_CHILD=<model>:<strategy>:<warmup>:<iters>:<threads>`;
+//! the child runs the measurement and prints one JSON line; the parent
+//! aggregates into the paper-style table and (with `--json`) writes
+//! `BENCH_native_kernels.json` so the perf trajectory is tracked across
+//! PRs.
+//!
+//! The native measurement additionally reports the arena's steady-state
+//! allocation count — 0 once warm, the flat-memory invariant.
 
+use crate::complexity::Strategy;
+use crate::data;
+use crate::error::Result;
 use crate::json::Value;
-use crate::runtime::{literal_f32, literal_i32, scalar_f32, scalar_i32, scalar_of, Runtime};
-use crate::util::rng::{GaussianSource, Xoshiro256};
-use crate::util::stats::{peak_rss_bytes, Summary};
-use anyhow::{anyhow, Context, Result};
+use crate::runtime::native::{model::NativeSpec, par, NativeBackend};
+use crate::runtime::{Backend, BatchX, StepHyper};
+use crate::util::stats::{fmt_bytes, fmt_duration, peak_rss_bytes, Summary};
+use crate::util::table::Table;
+use crate::{anyhow, bail};
 use std::time::Instant;
 
 pub const CHILD_ENV: &str = "FASTDP_BENCH_CHILD";
@@ -23,11 +32,13 @@ pub struct BenchResult {
     pub model: String,
     pub strategy: String,
     pub batch: usize,
+    pub threads: usize,
     pub mean_step_secs: f64,
     pub min_step_secs: f64,
+    pub samples_per_sec: f64,
     pub peak_rss: u64,
-    pub compile_secs: f64,
-    pub throughput: f64,
+    /// Arena pool misses in the last warm step (0 = flat memory).
+    pub steady_allocs: usize,
 }
 
 impl BenchResult {
@@ -36,11 +47,12 @@ impl BenchResult {
         v.set("model", Value::from(self.model.as_str()))
             .set("strategy", Value::from(self.strategy.as_str()))
             .set("batch", Value::from(self.batch))
+            .set("threads", Value::from(self.threads))
             .set("mean_step_secs", Value::from(self.mean_step_secs))
             .set("min_step_secs", Value::from(self.min_step_secs))
+            .set("samples_per_sec", Value::from(self.samples_per_sec))
             .set("peak_rss", Value::from(self.peak_rss as f64))
-            .set("compile_secs", Value::from(self.compile_secs))
-            .set("throughput", Value::from(self.throughput));
+            .set("steady_allocs", Value::from(self.steady_allocs));
         v
     }
 
@@ -49,18 +61,295 @@ impl BenchResult {
             model: v.req_str("model").map_err(|e| anyhow!(e))?.to_string(),
             strategy: v.req_str("strategy").map_err(|e| anyhow!(e))?.to_string(),
             batch: v.req_i64("batch").map_err(|e| anyhow!(e))? as usize,
+            threads: v.opt_i64("threads", 1) as usize,
             mean_step_secs: v.req_f64("mean_step_secs").map_err(|e| anyhow!(e))?,
             min_step_secs: v.req_f64("min_step_secs").map_err(|e| anyhow!(e))?,
+            samples_per_sec: v.req_f64("samples_per_sec").map_err(|e| anyhow!(e))?,
             peak_rss: v.req_f64("peak_rss").map_err(|e| anyhow!(e))? as u64,
-            compile_secs: v.req_f64("compile_secs").map_err(|e| anyhow!(e))?,
-            throughput: v.req_f64("throughput").map_err(|e| anyhow!(e))?,
+            steady_allocs: v.opt_i64("steady_allocs", 0) as usize,
         })
     }
 }
 
-/// Measure one (model, strategy) step executable in THIS process.
-pub fn measure_step(rt: &Runtime, model: &str, strategy: &str, warmup: usize, iters: usize)
-    -> Result<BenchResult> {
+/// Measure one (model, strategy) native step in THIS process.
+pub fn measure_native(
+    model: &str,
+    strategy: &str,
+    warmup: usize,
+    iters: usize,
+    threads: usize,
+) -> Result<BenchResult> {
+    let spec = NativeSpec::by_name(model)
+        .ok_or_else(|| anyhow!("model '{model}' not in the native registry"))?;
+    let strat = Strategy::parse(strategy).ok_or_else(|| anyhow!("unknown strategy '{strategy}'"))?;
+    let threads = if threads == 0 { par::default_threads() } else { threads };
+    let mut be = NativeBackend::new(spec.clone(), strat, threads)?;
+    be.init(0)?;
+
+    let rows = spec.batch * spec.seq;
+    let mut ds = data::VectorDataset::new(spec.d_in, spec.n_classes, 2.0, 11);
+    let (xs, y) = ds.sample_batch(rows);
+    let x = BatchX::F32(xs);
+    let dp = strat != Strategy::NonDp;
+    let noise: Vec<Vec<f32>> = if dp {
+        let mut ns = crate::coordinator::noise::NoiseSource::new(5);
+        ns.tensors(be.info())
+    } else {
+        Vec::new()
+    };
+    let h = StepHyper {
+        lr: 1e-3,
+        clip: 1.0,
+        sigma_r: if dp { 0.5 } else { 0.0 },
+        logical_batch: spec.batch as f32,
+        step: 1.0,
+    };
+
+    for _ in 0..warmup.max(1) {
+        be.step(&x, &y, &noise, &h)?;
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let out = be.step(&x, &y, &noise, &h)?;
+        s.push(t0.elapsed().as_secs_f64());
+        if !out.loss.is_finite() {
+            bail!("{model}/{strategy}: loss diverged during bench");
+        }
+    }
+    // Read after the timed loop: even with warmup == 1 (the cold step),
+    // the last timed iteration ran against a saturated arena pool.
+    let steady_allocs = be.alloc_stats().fresh_allocs_last_step;
+    Ok(BenchResult {
+        model: model.to_string(),
+        strategy: strategy.to_string(),
+        batch: spec.batch,
+        threads,
+        mean_step_secs: s.mean(),
+        min_step_secs: s.min(),
+        samples_per_sec: spec.batch as f64 / s.mean(),
+        peak_rss: peak_rss_bytes(),
+        steady_allocs,
+    })
+}
+
+/// Shared child protocol, spawn half: re-exec the current binary with
+/// the `CHILD_ENV` spec (`model:strategy:warmup:iters:threads`). The
+/// child side is [`maybe_run_native_child`] (or the PJRT benches'
+/// `maybe_run_child`).
+fn spawn_child_raw(spec: &str) -> std::io::Result<std::process::Output> {
+    let exe = std::env::current_exe()?;
+    std::process::Command::new(exe)
+        .env(CHILD_ENV, spec)
+        .env("FASTDP_LOG", "error")
+        .output()
+}
+
+/// Shared child protocol, parse half: the child prints exactly one
+/// JSON result line; protocol violations are hard errors.
+fn parse_child_output(spec: &str, out: std::process::Output) -> Result<BenchResult> {
+    if !out.status.success() {
+        bail!(
+            "bench child {spec} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .rev()
+        .find(|l| l.starts_with('{'))
+        .ok_or_else(|| anyhow!("bench child {spec}: no JSON line in output: {stdout}"))?;
+    BenchResult::from_json(&crate::json::parse(line).map_err(|e| anyhow!("{e}"))?)
+}
+
+/// Parent side: re-exec self per (model, strategy) for RSS isolation.
+/// Falls back to in-process measurement only when the *spawn itself*
+/// fails (no exe handle, exotic sandbox) — a child that ran but broke
+/// the protocol is a hard error, because silently re-measuring in the
+/// parent would smear peak-RSS attribution across strategies.
+pub fn measure_native_isolated(
+    model: &str,
+    strategy: &str,
+    warmup: usize,
+    iters: usize,
+    threads: usize,
+) -> Result<BenchResult> {
+    let spec = format!("{model}:{strategy}:{warmup}:{iters}:{threads}");
+    match spawn_child_raw(&spec) {
+        Ok(out) => parse_child_output(&spec, out),
+        Err(_) => measure_native(model, strategy, warmup, iters, threads),
+    }
+}
+
+/// Call at the top of the CLI main(): if we are a bench child, run the
+/// one measurement, print JSON, and exit.
+pub fn maybe_run_native_child() {
+    if let Ok(spec) = std::env::var(CHILD_ENV) {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() < 2 {
+            eprintln!("bad {CHILD_ENV} spec '{spec}'");
+            std::process::exit(1);
+        }
+        let warmup = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+        let iters = parts.get(3).and_then(|s| s.parse().ok()).unwrap_or(10);
+        let threads = parts.get(4).and_then(|s| s.parse().ok()).unwrap_or(0);
+        match measure_native(parts[0], parts[1], warmup, iters, threads) {
+            Ok(r) => {
+                println!("{}", r.to_json());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("child error: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// The `fastdp bench` subcommand: measure a strategy list on one native
+/// model, print the paper-style table, optionally write
+/// `BENCH_native_kernels.json` (machine-readable perf trajectory).
+pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
+    let model = args.get_or("model", "mlp_e2e").to_string();
+    let strategies: Vec<String> = args
+        .get_or("strategy", "bk,nondp")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let warmup = args.get_usize("warmup", 5);
+    let iters = args.get_usize("iters", 20);
+    let threads = args.get_usize("threads", 0);
+    let isolate = !args.has_flag("no-isolate");
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    for strat in &strategies {
+        let r = if isolate {
+            measure_native_isolated(&model, strat, warmup, iters, threads)
+        } else {
+            measure_native(&model, strat, warmup, iters, threads)
+        };
+        match r {
+            Ok(r) => results.push(r),
+            Err(e) => {
+                eprintln!("bench {model}/{strat}: {e}");
+                return 1;
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("native kernel bench: {model} (warmup={warmup}, iters={iters})"),
+        &["strategy", "mean/step", "min/step", "samples/s", "peak RSS", "steady allocs"],
+    );
+    for r in &results {
+        t.row(&[
+            r.strategy.clone(),
+            fmt_duration(r.mean_step_secs),
+            fmt_duration(r.min_step_secs),
+            format!("{:.0}", r.samples_per_sec),
+            fmt_bytes(r.peak_rss as f64),
+            r.steady_allocs.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let find = |name: &str| results.iter().find(|r| r.strategy == name);
+    let ratio = match (find("bk"), find("nondp")) {
+        (Some(bk), Some(nd)) if nd.mean_step_secs > 0.0 => {
+            let ratio = bk.mean_step_secs / nd.mean_step_secs;
+            println!(
+                "bk/nondp step-time ratio: {ratio:.2}x (paper: 1.03x time complexity on GPT2)"
+            );
+            Some(ratio)
+        }
+        _ => None,
+    };
+    if results.iter().all(|r| r.steady_allocs == 0) {
+        println!("steady-state allocations: flat (0 arena misses per step) across all strategies");
+    } else {
+        for r in results.iter().filter(|r| r.steady_allocs > 0) {
+            eprintln!(
+                "warning: {} had {} steady-state allocations per step",
+                r.strategy, r.steady_allocs
+            );
+        }
+    }
+
+    if args.has_flag("json") {
+        let mut root = Value::obj();
+        root.set("model", Value::from(model.as_str()))
+            .set("warmup", Value::from(warmup))
+            .set("iters", Value::from(iters))
+            .set(
+                "results",
+                Value::Arr(results.iter().map(BenchResult::to_json).collect()),
+            );
+        if let Some(r) = ratio {
+            root.set("bk_vs_nondp_time_ratio", Value::from(r));
+        }
+        let path = "BENCH_native_kernels.json";
+        match std::fs::write(path, root.to_string_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+/// Convert manifest layer metadata to complexity-engine layer dims.
+pub fn layers_of(meta: &crate::runtime::ModelMeta) -> Vec<crate::arch::LayerDims> {
+    meta.layer_meta
+        .iter()
+        .map(|l| crate::arch::LayerDims {
+            kind: match l.kind.as_str() {
+                "conv2d" => crate::arch::LayerKind::Conv,
+                "embedding" => crate::arch::LayerKind::Embedding,
+                "layernorm" => crate::arch::LayerKind::Norm,
+                _ => crate::arch::LayerKind::Linear,
+            },
+            name: l.name.clone(),
+            t: l.t as u64,
+            d: l.d as u64,
+            p: l.p as u64,
+        })
+        .collect()
+}
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Write a rendered table to bench_results/<name>.<ext> and stdout.
+pub fn emit(name: &str, table: &crate::util::table::Table, csv: bool) {
+    print!("{}", table.render());
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(format!("{name}.md")), table.markdown());
+    if csv {
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), table.csv());
+    }
+}
+
+// ---- PJRT (artifact) measurement, feature-gated --------------------------
+
+/// Measure one (model, strategy) step executable in THIS process on the
+/// PJRT runtime. Used by the artifact-driven bench targets.
+#[cfg(feature = "xla-runtime")]
+pub fn measure_step(
+    rt: &crate::runtime::pjrt::Runtime,
+    model: &str,
+    strategy: &str,
+    warmup: usize,
+    iters: usize,
+) -> Result<BenchResult> {
+    use crate::runtime::pjrt::{literal_f32, literal_i32, scalar_f32, scalar_i32, scalar_of};
+    use crate::util::rng::{GaussianSource, Xoshiro256};
+
     let meta = rt.model(model)?.clone();
     let art = rt.artifact(model, "step", Some(strategy))?.clone();
     let b = meta.batch;
@@ -122,10 +411,10 @@ pub fn measure_step(rt: &Runtime, model: &str, strategy: &str, warmup: usize, it
     let opt_state: Vec<xla::Literal> = if meta.is_adam() {
         meta.param_names
             .iter()
-            .flat_map(|name| {
+            .map(|name| {
                 let shape = meta.param_shape(name).unwrap();
                 let n: usize = shape.iter().product();
-                vec![literal_f32(&vec![0f32; n], shape).unwrap()]
+                literal_f32(&vec![0f32; n], shape).unwrap()
             })
             .collect()
     } else {
@@ -139,7 +428,7 @@ pub fn measure_step(rt: &Runtime, model: &str, strategy: &str, warmup: usize, it
         scalar_f32(1.0),
     ];
 
-    let run_once = |rt: &Runtime| -> Result<f32> {
+    let run_once = |rt: &crate::runtime::pjrt::Runtime| -> Result<f32> {
         let mut args: Vec<&xla::Literal> = params.iter().collect();
         args.extend(frozen.iter());
         if meta.is_adam() {
@@ -162,94 +451,51 @@ pub fn measure_step(rt: &Runtime, model: &str, strategy: &str, warmup: usize, it
         let t0 = Instant::now();
         let loss = run_once(rt)?;
         s.push(t0.elapsed().as_secs_f64());
-        assert!(loss.is_finite());
+        if !loss.is_finite() {
+            bail!("{model}/{strategy}: loss diverged during bench");
+        }
     }
     Ok(BenchResult {
         model: model.to_string(),
         strategy: strategy.to_string(),
         batch: b,
+        threads: 1,
         mean_step_secs: s.mean(),
         min_step_secs: s.min(),
+        samples_per_sec: b as f64 / s.mean(),
         peak_rss: peak_rss_bytes(),
-        compile_secs: *rt.compile_secs.borrow(),
-        throughput: b as f64 / s.mean(),
+        steady_allocs: 0,
     })
 }
 
-/// Parent side: spawn self as a child per (model, strategy).
+/// Parent side of the PJRT bench: spawn self as a child per
+/// (model, strategy). The child must call [`maybe_run_child`].
+#[cfg(feature = "xla-runtime")]
 pub fn measure_in_child(model: &str, strategy: &str, iters: usize) -> Result<BenchResult> {
-    let exe = std::env::current_exe()?;
-    let out = std::process::Command::new(exe)
-        .env(CHILD_ENV, format!("{model}:{strategy}:{iters}"))
-        .env("FASTDP_LOG", "error")
-        .output()
-        .context("spawning bench child")?;
-    if !out.status.success() {
-        anyhow::bail!(
-            "bench child {model}:{strategy} failed:\n{}",
-            String::from_utf8_lossy(&out.stderr)
-        );
-    }
-    let stdout = String::from_utf8_lossy(&out.stdout);
-    let line = stdout
-        .lines()
-        .rev()
-        .find(|l| l.starts_with('{'))
-        .ok_or_else(|| anyhow!("no JSON line from child: {stdout}"))?;
-    BenchResult::from_json(&crate::json::parse(line).map_err(|e| anyhow!("{e}"))?)
+    let spec = format!("{model}:{strategy}:1:{iters}:0");
+    let out = spawn_child_raw(&spec).map_err(|e| anyhow!("spawning bench child: {e}"))?;
+    parse_child_output(&spec, out)
 }
 
-/// Call at the top of every bench main(): if we are a child, run the one
-/// measurement, print JSON, and exit.
+/// Call at the top of every PJRT bench main(): if we are a child, run
+/// the one measurement against the artifacts, print JSON, and exit.
+#[cfg(feature = "xla-runtime")]
 pub fn maybe_run_child() {
     if let Ok(spec) = std::env::var(CHILD_ENV) {
         let parts: Vec<&str> = spec.split(':').collect();
-        let (model, strategy, iters) = (parts[0], parts[1], parts[2].parse().unwrap_or(3));
-        let rt = Runtime::load(artifacts_dir()).expect("runtime");
+        let (model, strategy) = (parts[0], parts[1]);
+        let iters = parts.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
+        let rt = crate::runtime::pjrt::Runtime::load(artifacts_dir()).expect("runtime");
         match measure_step(&rt, model, strategy, 1, iters) {
             Ok(r) => {
                 println!("{}", r.to_json());
                 std::process::exit(0);
             }
             Err(e) => {
-                eprintln!("child error: {e:#}");
+                eprintln!("child error: {e}");
                 std::process::exit(1);
             }
         }
-    }
-}
-
-/// Convert manifest layer metadata to complexity-engine layer dims.
-pub fn layers_of(meta: &crate::runtime::ModelMeta) -> Vec<crate::arch::LayerDims> {
-    meta.layer_meta
-        .iter()
-        .map(|l| crate::arch::LayerDims {
-            kind: match l.kind.as_str() {
-                "conv2d" => crate::arch::LayerKind::Conv,
-                "embedding" => crate::arch::LayerKind::Embedding,
-                "layernorm" => crate::arch::LayerKind::Norm,
-                _ => crate::arch::LayerKind::Linear,
-            },
-            name: l.name.clone(),
-            t: l.t as u64,
-            d: l.d as u64,
-            p: l.p as u64,
-        })
-        .collect()
-}
-
-pub fn artifacts_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-/// Write a rendered table to bench_results/<name>.<ext> and stdout.
-pub fn emit(name: &str, table: &crate::util::table::Table, csv: bool) {
-    print!("{}", table.render());
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
-    let _ = std::fs::create_dir_all(&dir);
-    let _ = std::fs::write(dir.join(format!("{name}.md")), table.markdown());
-    if csv {
-        let _ = std::fs::write(dir.join(format!("{name}.csv")), table.csv());
     }
 }
 
@@ -263,16 +509,36 @@ mod tests {
             model: "m".into(),
             strategy: "bk".into(),
             batch: 8,
+            threads: 4,
             mean_step_secs: 0.25,
             min_step_secs: 0.2,
+            samples_per_sec: 32.0,
             peak_rss: 1024,
-            compile_secs: 1.5,
-            throughput: 32.0,
+            steady_allocs: 0,
         };
         let v = r.to_json();
         let r2 = BenchResult::from_json(&crate::json::parse(&v.to_string()).unwrap()).unwrap();
         assert_eq!(r2.model, "m");
         assert_eq!(r2.batch, 8);
-        assert!((r2.throughput - 32.0).abs() < 1e-12);
+        assert_eq!(r2.threads, 4);
+        assert!((r2.samples_per_sec - 32.0).abs() < 1e-12);
+        assert_eq!(r2.steady_allocs, 0);
+    }
+
+    #[test]
+    fn measure_native_reports_steady_state() {
+        // Tiny in-process measurement: BK on the seed MLP reaches a warm
+        // arena (no steady-state allocations) and finite throughput.
+        let r = measure_native("mlp_e2e", "bk", 2, 2, 2).unwrap();
+        assert_eq!(r.steady_allocs, 0, "arena must be warm after warmup");
+        assert!(r.mean_step_secs > 0.0);
+        assert!(r.samples_per_sec > 0.0);
+        assert_eq!(r.batch, 32);
+    }
+
+    #[test]
+    fn measure_native_rejects_unknowns() {
+        assert!(measure_native("nope", "bk", 1, 1, 1).is_err());
+        assert!(measure_native("mlp_e2e", "warp", 1, 1, 1).is_err());
     }
 }

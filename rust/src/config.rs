@@ -24,6 +24,11 @@ pub struct PrivacyConfig {
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Execution backend: "native" (default, pure Rust kernels) or
+    /// "pjrt" (AOT artifacts; needs the `xla-runtime` feature).
+    pub backend: String,
+    /// Worker threads for the native kernels (0 = one per core).
+    pub threads: usize,
     pub artifacts_dir: PathBuf,
     pub model: String,
     pub strategy: String,
@@ -56,8 +61,10 @@ impl Default for PrivacyConfig {
 impl Default for TrainConfig {
     fn default() -> Self {
         Self {
+            backend: "native".to_string(),
+            threads: 0,
             artifacts_dir: PathBuf::from("artifacts"),
-            model: "gpt_e2e".to_string(),
+            model: "mlp_e2e".to_string(),
             strategy: "bk".to_string(),
             steps: 100,
             lr: 1e-3,
@@ -77,6 +84,8 @@ impl Default for TrainConfig {
 impl TrainConfig {
     pub fn from_json(v: &Value) -> Result<Self, String> {
         let mut c = TrainConfig::default();
+        c.backend = v.opt_str("backend", &c.backend).to_string();
+        c.threads = v.opt_i64("threads", 0) as usize;
         c.model = v.opt_str("model", &c.model).to_string();
         c.strategy = v.opt_str("strategy", &c.strategy).to_string();
         c.artifacts_dir = PathBuf::from(v.opt_str("artifacts_dir", "artifacts"));
@@ -110,6 +119,10 @@ impl TrainConfig {
 
     /// Apply `--key value` CLI overrides on top of the file config.
     pub fn apply_cli(&mut self, args: &Args) -> Result<(), String> {
+        if let Some(b) = args.get("backend") {
+            self.backend = b.to_string();
+        }
+        self.threads = args.get_usize("threads", self.threads);
         if let Some(m) = args.get("model") {
             self.model = m.to_string();
         }
@@ -152,6 +165,12 @@ impl TrainConfig {
             return Err(format!(
                 "unknown strategy '{}', expected one of {STRATEGIES:?}",
                 self.strategy
+            ));
+        }
+        if self.backend != "native" && self.backend != "pjrt" {
+            return Err(format!(
+                "unknown backend '{}', expected 'native' or 'pjrt'",
+                self.backend
             ));
         }
         if self.steps == 0 {
@@ -203,6 +222,23 @@ mod tests {
         assert_eq!(c.steps, 7);
         assert_eq!(c.privacy.dataset_size, 1000);
         assert!((c.privacy.target_delta - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn backend_parse_and_reject() {
+        let v = parse(r#"{"backend": "native", "threads": 4}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.backend, "native");
+        assert_eq!(c.threads, 4);
+        let v = parse(r#"{"backend": "tpu"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let mut c = TrainConfig::default();
+        let args = crate::cli::Args::parse(
+            "train --backend pjrt --threads 2".split_whitespace().map(String::from),
+        );
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.backend, "pjrt");
+        assert_eq!(c.threads, 2);
     }
 
     #[test]

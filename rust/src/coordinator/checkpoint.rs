@@ -3,19 +3,20 @@
 //! followed by raw little-endian f32 data.
 
 use crate::json::Value;
-use crate::runtime::ModelMeta;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::runtime::ModelInfo;
+use crate::{anyhow, bail};
+use crate::error::{Context, Result};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"FASTDP01";
 
-pub fn save(dir: &Path, step: usize, meta: &ModelMeta, tensors: &[Vec<f32>]) -> Result<()> {
+pub fn save(dir: &Path, step: usize, info: &ModelInfo, tensors: &[Vec<f32>]) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let mut header = Value::obj();
-    header.set("model", Value::from(meta.name.as_str()));
+    header.set("model", Value::from(info.name.as_str()));
     header.set("step", Value::from(step));
-    header.set("optimizer", Value::from(meta.optimizer.as_str()));
+    header.set("optimizer", Value::from(info.optimizer.as_str()));
     header.set(
         "lengths",
         Value::Arr(tensors.iter().map(|t| Value::from(t.len())).collect()),
@@ -42,7 +43,7 @@ pub fn save(dir: &Path, step: usize, meta: &ModelMeta, tensors: &[Vec<f32>]) -> 
     Ok(())
 }
 
-pub fn load(path: &Path, meta: &ModelMeta) -> Result<(usize, Vec<Vec<f32>>)> {
+pub fn load(path: &Path, info: &ModelInfo) -> Result<(usize, Vec<Vec<f32>>)> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}", path.display()))?;
     let mut magic = [0u8; 8];
@@ -58,8 +59,8 @@ pub fn load(path: &Path, meta: &ModelMeta) -> Result<(usize, Vec<Vec<f32>>)> {
     let header = crate::json::parse(std::str::from_utf8(&hbytes)?)
         .map_err(|e| anyhow!("checkpoint header: {e}"))?;
     let model = header.req_str("model").map_err(|e| anyhow!(e))?;
-    if model != meta.name {
-        bail!("checkpoint is for model '{model}', expected '{}'", meta.name);
+    if model != info.name {
+        bail!("checkpoint is for model '{model}', expected '{}'", info.name);
     }
     let step = header.req_i64("step").map_err(|e| anyhow!(e))? as usize;
     let lengths: Vec<usize> = header
@@ -87,10 +88,11 @@ pub fn latest(dir: &Path) -> Option<PathBuf> {
     for entry in std::fs::read_dir(dir).ok()? {
         let p = entry.ok()?.path();
         let name = p.file_name()?.to_str()?;
-        if name.starts_with("ckpt_") && name.ends_with(".fdp") {
-            if best.as_ref().map(|b| p > *b).unwrap_or(true) {
-                best = Some(p.clone());
-            }
+        if name.starts_with("ckpt_")
+            && name.ends_with(".fdp")
+            && best.as_ref().map(|b| p > *b).unwrap_or(true)
+        {
+            best = Some(p.clone());
         }
     }
     best
@@ -99,30 +101,32 @@ pub fn latest(dir: &Path) -> Option<PathBuf> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::native::model::NativeSpec;
 
-    fn fake_meta() -> ModelMeta {
-        let v = crate::json::parse(
-            r#"{
-          "models": {"ck": {"spec": null, "batch": 1, "optimizer": "sgd",
-            "clip_fn": "abadi", "group": "t", "param_names": ["a"],
-            "frozen_names": [], "param_shapes": {"a": [4]},
-            "layer_meta": [], "n_params": 4}},
-          "artifacts": []}"#,
-        )
-        .unwrap();
-        crate::runtime::Manifest::from_json(&v).unwrap().models["ck"].clone()
+    fn fake_info() -> ModelInfo {
+        NativeSpec {
+            name: "ck".into(),
+            batch: 1,
+            seq: 1,
+            d_in: 2,
+            hidden: vec![],
+            n_classes: 2,
+            optimizer: "sgd".into(),
+            clip_fn: "abadi".into(),
+        }
+        .info()
     }
 
     #[test]
     fn roundtrip() {
         let dir = std::env::temp_dir().join(format!("fastdp_ckpt_{}", std::process::id()));
-        let meta = fake_meta();
+        let info = fake_info();
         let tensors = vec![vec![1.0f32, -2.5, 3.25, 0.0], vec![9.0f32; 7]];
-        save(&dir, 42, &meta, &tensors).unwrap();
-        save(&dir, 7, &meta, &tensors).unwrap();
+        save(&dir, 42, &info, &tensors).unwrap();
+        save(&dir, 7, &info, &tensors).unwrap();
         let latest_path = latest(&dir).unwrap();
         assert!(latest_path.to_str().unwrap().contains("00000042"));
-        let (step, loaded) = load(&latest_path, &meta).unwrap();
+        let (step, loaded) = load(&latest_path, &info).unwrap();
         assert_eq!(step, 42);
         assert_eq!(loaded, tensors);
         std::fs::remove_dir_all(&dir).ok();
@@ -131,9 +135,9 @@ mod tests {
     #[test]
     fn rejects_wrong_model() {
         let dir = std::env::temp_dir().join(format!("fastdp_ckpt2_{}", std::process::id()));
-        let meta = fake_meta();
-        save(&dir, 1, &meta, &[vec![0.0]]).unwrap();
-        let mut other = meta.clone();
+        let info = fake_info();
+        save(&dir, 1, &info, &[vec![0.0]]).unwrap();
+        let mut other = info.clone();
         other.name = "different".into();
         assert!(load(&latest(&dir).unwrap(), &other).is_err());
         std::fs::remove_dir_all(&dir).ok();
@@ -145,7 +149,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("ckpt_00000001.fdp");
         std::fs::write(&p, b"NOTMAGIC????").unwrap();
-        assert!(load(&p, &fake_meta()).is_err());
+        assert!(load(&p, &fake_info()).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,28 +1,29 @@
-//! Layer-3 training coordinator — the runtime half of the paper's
-//! `PrivacyEngine.attach(optimizer)` workflow (Section 4).
+//! Training coordinator — the runtime half of the paper's
+//! `PrivacyEngine.attach(optimizer)` workflow (Section 4), rewired to
+//! drive any [`Backend`](crate::runtime::Backend).
 //!
 //! Responsibilities:
+//!  * backend selection by config (native kernels by default, PJRT
+//!    artifacts behind the `xla-runtime` feature)
 //!  * noise calibration via the RDP accountant (sigma from (eps, delta))
-//!  * Poisson subsampling + physical batching of the synthetic corpus
-//!  * strategy dispatch: fused `step_<strategy>` executables on the fast
-//!    path, `clipgrad + apply` pairs when gradient accumulation is on
-//!  * DP noise generation (L3 owns the privacy-critical DRBG; JAX never
-//!    samples noise)
+//!  * synthetic data pipeline + physical batching
+//!  * strategy dispatch: fused `step` on the fast path, `clipped_grads +
+//!    apply_update` pairs when gradient accumulation is on
+//!  * DP noise generation (the coordinator owns the privacy-critical
+//!    DRBG; backends take noise as input and never sample)
 //!  * budget enforcement, metrics, checkpointing
 //!
-//! Python is never on this path: everything executes through the PJRT
-//! runtime on AOT artifacts.
+//! Neither Python nor XLA is on this path in the default build.
 
 pub mod checkpoint;
 pub mod noise;
 
 use crate::config::TrainConfig;
+use crate::error::{Context, Result};
 use crate::privacy::{calibrate_sigma, RdpAccountant};
-use crate::runtime::{literal_f32, literal_i32, scalar_f32, scalar_i32, scalar_of, Runtime};
-use crate::util::rng::Xoshiro256;
+use crate::runtime::{create_backend, Backend, BatchX, ModelInfo, StepHyper};
 use crate::util::stats::{peak_rss_bytes, Summary};
-use crate::{data, info};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{bail, data, info};
 use std::time::Instant;
 
 /// One logged training step.
@@ -41,6 +42,7 @@ pub struct StepLog {
 pub struct TrainReport {
     pub model: String,
     pub strategy: String,
+    pub backend: String,
     pub steps: usize,
     pub sigma: f64,
     pub final_loss: f32,
@@ -53,51 +55,69 @@ pub struct TrainReport {
     pub peak_rss_bytes: u64,
 }
 
-/// Batch source abstraction so the trainer drives either token or vector
+/// Batch source abstraction so the trainer drives token and vector
 /// workloads through one loop.
 pub enum BatchSource {
     Tokens(data::TokenCorpus),
-    Vectors { ds: data::VectorDataset, image_hw: Option<(usize, usize)> },
+    Vectors(data::VectorDataset),
 }
 
 impl BatchSource {
-    /// Produce (x, y) literals for a physical batch of size b.
-    fn sample(&mut self, b: usize, x_shape: &[usize], y_shape: &[usize])
-        -> Result<(xla::Literal, xla::Literal)> {
+    /// Build the source matching a model description.
+    fn for_model(info: &ModelInfo, seed: u64) -> Result<Self> {
+        match info.kind.as_str() {
+            "gpt" | "gptlora" => Ok(BatchSource::Tokens(data::TokenCorpus::new(
+                info.n_classes,
+                info.seq,
+                seed,
+            ))),
+            "mlp" | "seqmlp" | "conv" => {
+                // class separation as in the seed pipeline: conv images
+                // are lower-contrast than flat vectors
+                let sep = if info.kind == "conv" { 1.0 } else { 2.0 };
+                Ok(BatchSource::Vectors(data::VectorDataset::new(
+                    info.d_in,
+                    info.n_classes,
+                    sep,
+                    seed,
+                )))
+            }
+            other => bail!("unknown model kind '{other}'"),
+        }
+    }
+
+    /// Produce (x, y) for one physical batch (`b` samples of `t` rows).
+    fn sample(&mut self, b: usize, t: usize) -> (BatchX, Vec<i32>) {
         match self {
             BatchSource::Tokens(c) => {
                 let (xs, ys) = c.sample_batch(b);
-                Ok((literal_i32(&xs, x_shape)?, literal_i32(&ys, y_shape)?))
+                (BatchX::I32(xs), ys)
             }
-            BatchSource::Vectors { ds, .. } => {
-                let (xs, ys) = ds.sample_batch(b);
-                Ok((literal_f32(&xs, x_shape)?, literal_i32(&ys, y_shape)?))
+            BatchSource::Vectors(ds) => {
+                // one labeled feature row per token: B*T rows per batch
+                let (xs, ys) = ds.sample_batch(b * t);
+                (BatchX::F32(xs), ys)
             }
         }
     }
 }
 
 pub struct Trainer {
-    pub rt: Runtime,
+    pub backend: Box<dyn Backend>,
     pub cfg: TrainConfig,
-    pub meta: crate::runtime::ModelMeta,
+    pub info: ModelInfo,
     pub accountant: Option<RdpAccountant>,
     pub sigma: f64,
     source: BatchSource,
-    params: Vec<xla::Literal>,
-    frozen: Vec<xla::Literal>,
-    opt_m: Vec<xla::Literal>,
-    opt_v: Vec<xla::Literal>,
     noise: noise::NoiseSource,
-    rng: Xoshiro256,
     step_no: usize,
 }
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
-        let rt = Runtime::load(cfg.artifacts_dir.clone())?;
-        let meta = rt.model(&cfg.model)?.clone();
-        let b_phys = meta.batch;
+        let backend = create_backend(&cfg)?;
+        let info = backend.info().clone();
+        let b_phys = info.batch;
         let logical = if cfg.logical_batch == 0 { b_phys } else { cfg.logical_batch };
         if logical % b_phys != 0 {
             bail!(
@@ -128,142 +148,84 @@ impl Trainer {
             s
         };
         let accountant = dp.then(|| RdpAccountant::new(q, sigma));
-
-        // data source from the model spec
-        let spec = &meta.spec;
-        let source = match spec.opt_str("kind", "") {
-            "gpt" | "gptlora" => BatchSource::Tokens(data::TokenCorpus::new(
-                spec.req_i64("vocab").map_err(|e| anyhow!(e))? as usize,
-                spec.req_i64("seq").map_err(|e| anyhow!(e))? as usize,
-                cfg.seed ^ 0xDA7A,
-            )),
-            "mlp" => BatchSource::Vectors {
-                ds: data::VectorDataset::new(
-                    spec.req_i64("d_in").map_err(|e| anyhow!(e))? as usize,
-                    spec.opt_i64("n_classes", 10) as usize,
-                    2.0,
-                    cfg.seed ^ 0xDA7A,
-                ),
-                image_hw: None,
-            },
-            "conv" => {
-                let hw = spec.opt_i64("hw", 32) as usize;
-                let c = spec.opt_i64("c_in", 3) as usize;
-                BatchSource::Vectors {
-                    ds: data::VectorDataset::new(
-                        hw * hw * c,
-                        spec.opt_i64("n_classes", 10) as usize,
-                        1.0,
-                        cfg.seed ^ 0xDA7A,
-                    ),
-                    image_hw: Some((hw, c)),
-                }
-            }
-            other => bail!("unknown model kind '{other}' in manifest"),
-        };
+        let source = BatchSource::for_model(&info, cfg.seed ^ 0xDA7A)?;
 
         Ok(Self {
-            rt,
-            meta,
+            backend,
+            info,
             accountant,
             sigma,
             source,
-            params: Vec::new(),
-            frozen: Vec::new(),
-            opt_m: Vec::new(),
-            opt_v: Vec::new(),
             noise: noise::NoiseSource::new(cfg.seed ^ 0x0153),
-            rng: Xoshiro256::new(cfg.seed),
             step_no: 0,
             cfg,
         })
     }
 
-    /// Initialize parameters via the init artifact (or a checkpoint).
+    fn logical_batch(&self) -> usize {
+        if self.cfg.logical_batch == 0 {
+            self.info.batch
+        } else {
+            self.cfg.logical_batch
+        }
+    }
+
+    /// Whether the step consumes noise tensors. Keyed on the strategy
+    /// alone (not `disable_dp`): DP-strategy executables take noise as
+    /// an input regardless, and sigma_r is 0 when DP is disabled, so
+    /// the draw is a no-op numerically but keeps the arity contract.
+    fn wants_noise(&self) -> bool {
+        self.cfg.strategy != "nondp"
+    }
+
+    /// Initialize parameters via the backend (or resume a checkpoint).
     pub fn init(&mut self) -> Result<()> {
         if let (Some(dir), true) = (&self.cfg.checkpoint_dir, self.cfg.checkpoint_every > 0) {
-            let latest = checkpoint::latest(dir);
-            if let Some(path) = latest {
+            if let Some(path) = checkpoint::latest(dir) {
                 info!("resuming from checkpoint {}", path.display());
-                let (step, tensors) = checkpoint::load(&path, &self.meta)?;
+                let (step, tensors) = checkpoint::load(&path, &self.info)?;
                 self.step_no = step;
-                self.set_flat_state(tensors)?;
+                // Replay the privacy ledger and burn the consumed noise
+                // draws: the pre-crash steps spent budget and used the
+                // deterministic streams for steps 1..=step, so a resumed
+                // run must account for them and never redraw them.
+                if let Some(acc) = &mut self.accountant {
+                    for _ in 0..step {
+                        acc.step();
+                    }
+                }
+                self.noise.skip_to(step as u64);
+                self.backend.load_state(tensors)?;
                 return Ok(());
             }
         }
-        let init = self.rt.artifact(&self.cfg.model, "init", None)?.clone();
-        let seed = scalar_i32(self.cfg.seed as i32);
-        let outs = self.rt.execute(&init, &[&seed])?;
-        let n_tr = self.meta.param_names.len();
-        let mut it = outs.into_iter();
-        self.params = (&mut it).take(n_tr).collect();
-        self.frozen = it.collect();
-        if self.meta.is_adam() {
-            self.opt_m = self.zeros_like_params()?;
-            self.opt_v = self.zeros_like_params()?;
-        }
-        Ok(())
-    }
-
-    fn zeros_like_params(&self) -> Result<Vec<xla::Literal>> {
-        self.meta
-            .param_names
-            .iter()
-            .map(|name| {
-                let shape = self.meta.param_shape(name).map_err(|e| anyhow!(e))?;
-                let n: usize = shape.iter().product();
-                literal_f32(&vec![0f32; n], shape)
-            })
-            .collect()
-    }
-
-    fn set_flat_state(&mut self, tensors: Vec<Vec<f32>>) -> Result<()> {
-        let n_tr = self.meta.param_names.len();
-        let mut out = Vec::with_capacity(tensors.len());
-        for (i, data) in tensors.iter().enumerate() {
-            let name = &self.meta.param_names[i % n_tr];
-            out.push(literal_f32(data, self.meta.param_shape(name).map_err(|e| anyhow!(e))?)?);
-        }
-        let mut it = out.into_iter();
-        self.params = (&mut it).take(n_tr).collect();
-        if self.meta.is_adam() {
-            self.opt_m = (&mut it).take(n_tr).collect();
-            self.opt_v = (&mut it).take(n_tr).collect();
-        }
-        Ok(())
-    }
-
-    fn data_shapes(&self, art: &crate::runtime::ArtifactMeta) -> Result<(Vec<usize>, Vec<usize>)> {
-        let xi = art
-            .input_index("x")
-            .ok_or_else(|| anyhow!("artifact missing x input"))?;
-        let yi = art
-            .input_index("y")
-            .ok_or_else(|| anyhow!("artifact missing y input"))?;
-        Ok((art.inputs[xi].shape.clone(), art.inputs[yi].shape.clone()))
+        self.backend.init(self.cfg.seed)
     }
 
     /// Evaluate mean loss on `batches` fresh batches.
     pub fn eval(&mut self, batches: usize) -> Result<f32> {
-        let eval = self.rt.artifact(&self.cfg.model, "eval", None)?.clone();
-        let (xs, ys) = self.data_shapes(&eval)?;
-        let b = self.meta.batch;
         let mut total = 0.0f32;
-        for _ in 0..batches {
-            let (xl, yl) = self.source.sample(b, &xs, &ys)?;
-            let mut args: Vec<&xla::Literal> = self.params.iter().collect();
-            args.extend(self.frozen.iter());
-            args.push(&xl);
-            args.push(&yl);
-            total += scalar_of(&self.rt.execute(&eval, &args)?[0])?;
+        for _ in 0..batches.max(1) {
+            let (x, y) = self.source.sample(self.info.batch, self.info.seq);
+            total += self.backend.eval_loss(&x, &y)?;
         }
-        Ok(total / batches as f32)
+        Ok(total / batches.max(1) as f32)
+    }
+
+    fn hyper(&self, logical: usize) -> StepHyper {
+        StepHyper {
+            lr: self.cfg.lr as f32,
+            clip: self.cfg.clip as f32,
+            sigma_r: (self.sigma * self.cfg.clip) as f32,
+            logical_batch: logical as f32,
+            step: (self.step_no + 1) as f32,
+        }
     }
 
     /// One *logical* training step (possibly several physical batches).
     pub fn train_step(&mut self) -> Result<StepLog> {
-        let b_phys = self.meta.batch;
-        let logical = if self.cfg.logical_batch == 0 { b_phys } else { self.cfg.logical_batch };
+        let b_phys = self.info.batch;
+        let logical = self.logical_batch();
         let accum = logical / b_phys;
         let t0 = Instant::now();
 
@@ -293,127 +255,49 @@ impl Trainer {
         })
     }
 
-    /// Fast path: the fused step artifact (one physical == one logical).
+    /// Fast path: one fused backend step (one physical == one logical).
     fn fused_step(&mut self, logical: usize) -> Result<(f32, f32)> {
-        let art = self
-            .rt
-            .artifact(&self.cfg.model, "step", Some(&self.cfg.strategy))?
-            .clone();
-        let (xs, ys) = self.data_shapes(&art)?;
-        let (xl, yl) = self.source.sample(self.meta.batch, &xs, &ys)?;
-        let with_noise = self.cfg.strategy != "nondp";
-
-        let noise = if with_noise {
-            self.noise.tensors(&self.meta)?
+        let (x, y) = self.source.sample(self.info.batch, self.info.seq);
+        let noise = if self.wants_noise() {
+            self.noise.tensors(&self.info)
         } else {
             Vec::new()
         };
-        let scalars = [
-            scalar_f32(self.cfg.lr as f32),
-            scalar_f32(self.cfg.clip as f32),
-            scalar_f32((self.sigma * self.cfg.clip) as f32),
-            scalar_f32(logical as f32),
-            scalar_f32((self.step_no + 1) as f32),
-        ];
-        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
-        args.extend(self.frozen.iter());
-        if self.meta.is_adam() {
-            args.extend(self.opt_m.iter());
-            args.extend(self.opt_v.iter());
-        }
-        args.push(&xl);
-        args.push(&yl);
-        args.extend(noise.iter());
-        args.extend(scalars.iter());
-
-        let outs = self.rt.execute(&art, &args)?;
-        let loss = scalar_of(&outs[art.output_index("metric:loss").unwrap()])?;
-        let clip = art
-            .output_index("metric:mean_clip")
-            .map(|i| scalar_of(&outs[i]).unwrap_or(1.0))
-            .unwrap_or(1.0);
-        let n_tr = self.meta.param_names.len();
-        let mut it = outs.into_iter();
-        self.params = (&mut it).take(n_tr).collect();
-        if self.meta.is_adam() {
-            self.opt_m = (&mut it).take(n_tr).collect();
-            self.opt_v = (&mut it).take(n_tr).collect();
-        }
-        Ok((loss, clip))
+        let h = self.hyper(logical);
+        let out = self.backend.step(&x, &y, &noise, &h)?;
+        Ok((out.loss, out.mean_clip))
     }
 
-    /// Gradient accumulation: k clipgrad micro-steps summed host-side,
-    /// then one apply with a single noise draw (DP-correct: per-sample
-    /// clipping is per micro-batch, noise is per logical batch).
+    /// Gradient accumulation: k clipped-grad micro-steps summed
+    /// host-side, then one apply with a single noise draw (DP-correct:
+    /// per-sample clipping is per micro-batch, noise is per logical
+    /// batch).
     fn accumulated_step(&mut self, accum: usize, logical: usize) -> Result<(f32, f32)> {
-        let cg = self
-            .rt
-            .artifact(&self.cfg.model, "clipgrad", Some(&self.cfg.strategy))?
-            .clone();
-        let (xs, ys) = self.data_shapes(&cg)?;
-        let n_tr = self.meta.param_names.len();
         let mut acc_grads: Vec<Vec<f32>> = Vec::new();
         let mut loss_sum = 0.0f32;
         let mut clip_sum = 0.0f32;
-        let clip_lit = scalar_f32(self.cfg.clip as f32);
         for _ in 0..accum {
-            let (xl, yl) = self.source.sample(self.meta.batch, &xs, &ys)?;
-            let mut args: Vec<&xla::Literal> = self.params.iter().collect();
-            args.extend(self.frozen.iter());
-            args.push(&xl);
-            args.push(&yl);
-            args.push(&clip_lit);
-            let outs = self.rt.execute(&cg, &args)?;
-            loss_sum += scalar_of(&outs[cg.output_index("metric:loss").unwrap()])?;
-            clip_sum += scalar_of(&outs[cg.output_index("metric:mean_clip").unwrap()])?;
-            for (i, lit) in outs[..n_tr].iter().enumerate() {
-                let v = lit.to_vec::<f32>()?;
-                if acc_grads.len() <= i {
-                    acc_grads.push(v);
-                } else {
-                    for (a, x) in acc_grads[i].iter_mut().zip(v.iter()) {
-                        *a += *x;
+            let (x, y) = self.source.sample(self.info.batch, self.info.seq);
+            let (grads, out) = self.backend.clipped_grads(&x, &y, self.cfg.clip as f32)?;
+            loss_sum += out.loss;
+            clip_sum += out.mean_clip;
+            if acc_grads.is_empty() {
+                acc_grads = grads;
+            } else {
+                for (a, g) in acc_grads.iter_mut().zip(grads.iter()) {
+                    for (av, gv) in a.iter_mut().zip(g.iter()) {
+                        *av += *gv;
                     }
                 }
             }
         }
-
-        // apply: params' = opt(params, sum_grads + sigma*R*noise)
-        let apply = self.rt.artifact(&self.cfg.model, "apply", None)?.clone();
-        let grads: Vec<xla::Literal> = acc_grads
-            .iter()
-            .enumerate()
-            .map(|(i, g)| {
-                literal_f32(g, self.meta.param_shape(&self.meta.param_names[i]).unwrap())
-            })
-            .collect::<Result<_>>()?;
-        let with_noise = self.cfg.strategy != "nondp";
-        let noise = if with_noise {
-            self.noise.tensors(&self.meta)?
+        let noise = if self.wants_noise() {
+            self.noise.tensors(&self.info)
         } else {
-            self.zeros_like_params()?
+            Vec::new()
         };
-        let scalars = [
-            scalar_f32(self.cfg.lr as f32),
-            scalar_f32(if with_noise { (self.sigma * self.cfg.clip) as f32 } else { 0.0 }),
-            scalar_f32(logical as f32),
-            scalar_f32((self.step_no + 1) as f32),
-        ];
-        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
-        if self.meta.is_adam() {
-            args.extend(self.opt_m.iter());
-            args.extend(self.opt_v.iter());
-        }
-        args.extend(grads.iter());
-        args.extend(noise.iter());
-        args.extend(scalars.iter());
-        let outs = self.rt.execute(&apply, &args)?;
-        let mut it = outs.into_iter();
-        self.params = (&mut it).take(n_tr).collect();
-        if self.meta.is_adam() {
-            self.opt_m = (&mut it).take(n_tr).collect();
-            self.opt_v = (&mut it).take(n_tr).collect();
-        }
+        let h = self.hyper(logical);
+        self.backend.apply_update(&acc_grads, &noise, &h)?;
         Ok((loss_sum / accum as f32, clip_sum / accum as f32))
     }
 
@@ -425,12 +309,8 @@ impl Trainer {
     }
 
     pub fn save_checkpoint(&self, dir: &std::path::Path) -> Result<()> {
-        let mut tensors: Vec<Vec<f32>> = Vec::new();
-        for p in self.params.iter().chain(self.opt_m.iter()).chain(self.opt_v.iter()) {
-            tensors.push(p.to_vec::<f32>()?);
-        }
-        checkpoint::save(dir, self.step_no, &self.meta, &tensors)
-            .context("saving checkpoint")
+        let tensors = self.backend.state()?;
+        checkpoint::save(dir, self.step_no, &self.info, &tensors).context("saving checkpoint")
     }
 
     /// Full training run per the config; logs every `log_every` steps.
@@ -438,22 +318,24 @@ impl Trainer {
         self.init()?;
         let initial_loss = self.eval(2)?;
         info!(
-            "model={} strategy={} params={:.2}M B={} sigma={:.3} initial_loss={initial_loss:.4}",
+            "model={} strategy={} backend={} params={:.2}M B={} sigma={:.3} initial_loss={initial_loss:.4}",
             self.cfg.model,
             self.cfg.strategy,
-            self.meta.n_params as f64 / 1e6,
-            self.meta.batch,
+            self.cfg.backend,
+            self.info.n_params as f64 / 1e6,
+            self.info.batch,
             self.sigma
         );
         let mut report = TrainReport {
             model: self.cfg.model.clone(),
             strategy: self.cfg.strategy.clone(),
+            backend: self.cfg.backend.clone(),
             sigma: self.sigma,
             initial_loss,
             ..Default::default()
         };
         let mut times = Summary::new();
-        let logical = if self.cfg.logical_batch == 0 { self.meta.batch } else { self.cfg.logical_batch };
+        let logical = self.logical_batch();
         let run_t0 = Instant::now();
         let mut last_loss = initial_loss;
         for s in 0..self.cfg.steps {
@@ -489,12 +371,9 @@ impl Trainer {
         report.final_loss = last_loss;
         report.final_epsilon = self.epsilon();
         report.mean_step_secs = times.mean();
-        report.throughput_samples_per_sec =
-            (self.step_no * logical) as f64 / elapsed.max(1e-9);
-        report.compile_secs = *self.rt.compile_secs.borrow();
+        report.throughput_samples_per_sec = (self.step_no * logical) as f64 / elapsed.max(1e-9);
+        report.compile_secs = self.backend.compile_secs();
         report.peak_rss_bytes = peak_rss_bytes();
-        // deterministic tiny perturbation consumers to silence unused warnings
-        let _ = &self.rng;
         Ok(report)
     }
 }

@@ -1,14 +1,14 @@
 //! DP noise generation — the privacy-critical sampling path.
 //!
-//! Kept in one auditable place at L3 (the JAX artifacts take noise as an
-//! input and never sample it). Streams are forked per (step, tensor) so
-//! accumulation order can't correlate draws. Swap `NoiseSource` for a
-//! DRBG-backed implementation for production deployments; the interface
-//! is the only thing the trainer sees.
+//! Kept in one auditable place at the coordinator (backends take noise
+//! as an *input* and never sample it — neither the native kernels nor
+//! the JAX artifacts own randomness). Streams are forked per
+//! (step, tensor) so accumulation order can't correlate draws. Swap
+//! `NoiseSource` for a DRBG-backed implementation for production
+//! deployments; this interface is the only thing the trainer sees.
 
-use crate::runtime::{literal_f32, ModelMeta};
+use crate::runtime::ModelInfo;
 use crate::util::rng::{GaussianSource, Xoshiro256};
-use anyhow::{anyhow, Result};
 
 pub struct NoiseSource {
     root: Xoshiro256,
@@ -23,21 +23,29 @@ impl NoiseSource {
         }
     }
 
-    /// Standard-normal literals, one per trainable tensor. Each call
-    /// advances the step counter (one logical batch = one draw set).
-    pub fn tensors(&mut self, meta: &ModelMeta) -> Result<Vec<xla::Literal>> {
+    /// Fast-forward the step counter (checkpoint resume): the draws for
+    /// steps 1..=step were already consumed by the pre-crash run and
+    /// must never be replayed — reusing them would correlate the
+    /// resumed noise with the released pre-crash parameters.
+    pub fn skip_to(&mut self, step: u64) {
+        self.step = self.step.max(step);
+    }
+
+    /// Standard-normal tensors, one per trainable tensor in
+    /// `param_names` order. Each call advances the step counter (one
+    /// logical batch = one draw set).
+    pub fn tensors(&mut self, info: &ModelInfo) -> Vec<Vec<f32>> {
         self.step += 1;
-        meta.param_names
+        info.param_names
             .iter()
             .enumerate()
             .map(|(i, name)| {
-                let shape = meta.param_shape(name).map_err(|e| anyhow!(e))?;
-                let n: usize = shape.iter().product();
+                let n: usize = info.param_shapes[name].iter().product();
                 let mut gs =
                     GaussianSource::from_rng(self.root.fork(self.step * 1_000_003 + i as u64));
                 let mut buf = vec![0f32; n];
                 gs.fill_f32(&mut buf);
-                literal_f32(&buf, shape)
+                buf
             })
             .collect()
     }
@@ -46,32 +54,51 @@ impl NoiseSource {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::native::model::NativeSpec;
+
+    fn two_tensor_info() -> ModelInfo {
+        NativeSpec {
+            name: "noise_t".into(),
+            batch: 1,
+            seq: 1,
+            d_in: 16,
+            hidden: vec![],
+            n_classes: 16,
+            optimizer: "sgd".into(),
+            clip_fn: "abadi".into(),
+        }
+        .info()
+    }
 
     #[test]
     fn draws_differ_across_steps_and_tensors() {
-        // build a fake 2-tensor meta via the manifest parser
-        let v = crate::json::parse(
-            r#"{
-          "models": {"m": {"spec": null, "batch": 1, "optimizer": "sgd",
-            "clip_fn": "abadi", "group": "t", "param_names": ["a", "b"],
-            "frozen_names": [], "param_shapes": {"a": [16], "b": [16]},
-            "layer_meta": [], "n_params": 32}},
-          "artifacts": []}"#,
-        )
-        .unwrap();
-        let m = crate::runtime::Manifest::from_json(&v).unwrap();
-        let meta = m.models["m"].clone();
+        let info = two_tensor_info();
+        assert_eq!(info.param_names.len(), 2); // w0 (16x16), b0 (16)
         let mut ns = NoiseSource::new(7);
-        let t1 = ns.tensors(&meta).unwrap();
-        let t2 = ns.tensors(&meta).unwrap();
-        let a1 = t1[0].to_vec::<f32>().unwrap();
-        let b1 = t1[1].to_vec::<f32>().unwrap();
-        let a2 = t2[0].to_vec::<f32>().unwrap();
-        assert_ne!(a1, b1, "tensor streams must differ");
-        assert_ne!(a1, a2, "step streams must differ");
+        let t1 = ns.tensors(&info);
+        let t2 = ns.tensors(&info);
+        assert_eq!(t1[0].len(), 256);
+        assert_eq!(t1[1].len(), 16);
+        assert_ne!(t1[0][..16], t1[1][..], "tensor streams must differ");
+        assert_ne!(t1[0], t2[0], "step streams must differ");
         // determinism under same seed
         let mut ns2 = NoiseSource::new(7);
-        let t1b = ns2.tensors(&meta).unwrap();
-        assert_eq!(a1, t1b[0].to_vec::<f32>().unwrap());
+        let t1b = ns2.tensors(&info);
+        assert_eq!(t1[0], t1b[0]);
+        assert_eq!(t1[1], t1b[1]);
+    }
+
+    #[test]
+    fn skip_to_burns_consumed_draws() {
+        let info = two_tensor_info();
+        let mut pre_crash = NoiseSource::new(9);
+        let step1 = pre_crash.tensors(&info);
+        let step2 = pre_crash.tensors(&info);
+        // resume after one completed step: must continue at step 2
+        let mut resumed = NoiseSource::new(9);
+        resumed.skip_to(1);
+        let next = resumed.tensors(&info);
+        assert_eq!(next[0], step2[0], "resume must continue the stream");
+        assert_ne!(next[0], step1[0], "resume must not replay spent draws");
     }
 }

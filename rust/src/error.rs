@@ -1,0 +1,184 @@
+//! Minimal error handling for an offline, zero-dependency build.
+//!
+//! The seed code leaned on the `anyhow` crate; the default build must
+//! compile with no network and no vendored registry, so this module
+//! provides the small slice of that API the codebase actually uses:
+//! a string-backed [`Error`], the [`anyhow!`](crate::anyhow) /
+//! [`bail!`](crate::bail) macros, and a [`Context`] extension trait for
+//! `Result` / `Option`. Error chains are flattened into one message with
+//! `context: cause` nesting, which is exactly what the CLI prints.
+
+use std::fmt;
+
+/// A flattened, display-oriented error.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Prepend a higher-level context message.
+    pub fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::new(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::new(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for results and options (drop-in for
+/// `anyhow::Context`): annotates the error with a message.
+pub trait Context<T> {
+    fn context<D: fmt::Display>(self, ctx: D) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, ctx: D) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, ctx: D) -> Result<T> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (drop-in for
+/// `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::new(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::error::Error::new(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::new(format!("{}", $err))
+    };
+}
+
+/// Early-return with an [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<u8> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn macros_and_context_compose() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        let s = String::from("wrapped");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "wrapped");
+
+        let r: Result<u8> = io_fail().context("opening file");
+        assert_eq!(r.unwrap_err().to_string(), "opening file: gone");
+        let r: Result<u8> = io_fail().with_context(|| format!("attempt {}", 2));
+        assert_eq!(r.unwrap_err().to_string(), "attempt 2: gone");
+
+        let n: Option<u8> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u8> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 7");
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn g() -> Result<u8> {
+            let _: i64 = "12".parse()?;
+            let _ = std::str::from_utf8(b"ok")?;
+            io_fail()?;
+            Ok(0)
+        }
+        assert_eq!(g().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn wrap_nests() {
+        let e = Error::new("inner").wrap("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

@@ -1,20 +1,35 @@
 //! # fastdp — Book-Keeping differentially private optimization
 //!
 //! Reproduction of *"Differentially Private Optimization on Large Model at
-//! Small Cost"* (Bu, Wang, Zha, Karypis — ICML 2023) as a three-layer
-//! Rust + JAX + Pallas stack:
+//! Small Cost"* (Bu, Wang, Zha, Karypis — ICML 2023).
 //!
-//! * **Layer 1 (Pallas, build time)** — ghost-norm / clipped-sum /
-//!   per-sample-gradient kernels (`python/compile/kernels/`).
-//! * **Layer 2 (JAX, build time)** — transformer / MLP / CNN forward +
-//!   book-keeping backward, one AOT-lowered HLO artifact per
-//!   (model, DP implementation) pair (`python/compile/`).
-//! * **Layer 3 (this crate, run time)** — training coordinator, privacy
-//!   accountant, complexity engine, data pipeline and PJRT runtime.
-//!   Python is never on the training path.
+//! The run-time stack is pure Rust and self-contained:
 //!
-//! See DESIGN.md for the full system inventory and the per-experiment
-//! index mapping every paper table/figure to a bench target.
+//! * **runtime::native (default)** — the BK step end-to-end as fused
+//!   native kernels: forward/backward for generalized-linear models,
+//!   ghost-norm / per-sample-instantiation norms with the paper's mixed
+//!   layerwise dispatch, the clipped weighted sum, and noisy SGD/Adam —
+//!   cache-blocked, thread-fanned over the batch, and allocation-free in
+//!   steady state (step-scoped buffer arena).
+//! * **runtime::pjrt (feature `xla-runtime`)** — the original AOT
+//!   artifact executor (HLO text + manifest from `python/compile/`,
+//!   executed on the PJRT CPU client). Off by default because the `xla`
+//!   crate is not buildable offline.
+//! * **coordinator** — training loop, RDP accountant, DP noise DRBG,
+//!   Poisson batching, checkpointing; drives either backend through the
+//!   `runtime::Backend` trait.
+//!
+//! The build-time Python layers (`python/compile/`: Pallas kernels + JAX
+//! AOT lowering) only matter for the PJRT path; the native path needs no
+//! Python at all.
+//!
+//! See DESIGN.md for the backend contract, the native kernel
+//! memory/threading model, and the per-experiment index mapping paper
+//! tables/figures to bench targets.
+
+// Config structs are built as `default() + field edits` throughout (the
+// seed codebase's idiom); keep clippy's -D warnings CI green on it.
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod arch;
 pub mod bench;
@@ -23,6 +38,7 @@ pub mod complexity;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod json;
 pub mod privacy;
 pub mod runtime;

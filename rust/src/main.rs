@@ -1,30 +1,36 @@
-//! fastdp CLI — launcher for DP training runs and analysis reports.
+//! fastdp CLI — launcher for DP training runs, benches and analysis.
 //!
 //! Subcommands:
 //!   train       — run DP training per a JSON config (+ CLI overrides)
+//!   bench       — time native-kernel steps per strategy (`--json` writes
+//!                 BENCH_native_kernels.json)
 //!   complexity  — print the paper's complexity tables for a model
 //!   calibrate   — solve sigma for a (epsilon, delta, q, steps) target
-//!   list        — list models/strategies available in artifacts/
+//!   list        — list native models (and PJRT artifacts if present)
 //!   version
 
 use fastdp::cli::Args;
-use fastdp::complexity::{self, Strategy, ALL_STRATEGIES};
+use fastdp::complexity::{self, ALL_STRATEGIES};
 use fastdp::config::TrainConfig;
 use fastdp::coordinator::Trainer;
 use fastdp::privacy;
+use fastdp::runtime::native::model::NativeSpec;
 use fastdp::util::stats::{fmt_bytes, fmt_count};
 use fastdp::util::table::Table;
 
 fn main() {
+    // Bench child processes short-circuit before argument parsing.
+    fastdp::bench::maybe_run_native_child();
     let args = Args::from_env();
     let code = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("bench") => fastdp::bench::run_native_bench(&args),
         Some("complexity") => cmd_complexity(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("list") => cmd_list(&args),
         Some("version") | None => {
-            println!("fastdp 0.1.0 — Book-Keeping DP optimization (Bu et al., ICML 2023)");
-            println!("usage: fastdp <train|complexity|calibrate|list|version> [--opts]");
+            println!("fastdp 0.2.0 — Book-Keeping DP optimization (Bu et al., ICML 2023)");
+            println!("usage: fastdp <train|bench|complexity|calibrate|list|version> [--opts]");
             0
         }
         Some(other) => {
@@ -53,7 +59,7 @@ fn cmd_train(args: &Args) -> i32 {
     let mut trainer = match Trainer::new(cfg) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("init error: {e:#}");
+            eprintln!("init error: {e}");
             return 1;
         }
     };
@@ -61,20 +67,20 @@ fn cmd_train(args: &Args) -> i32 {
         Ok(report) => {
             println!(
                 "done: {} steps, loss {:.4} -> {:.4}, eps = {:.3}, {:.1} samples/s \
-                 (mean step {:.0} ms, compile {:.1}s, peak RSS {})",
+                 (mean step {:.1} ms, backend {}, peak RSS {})",
                 report.steps,
                 report.initial_loss,
                 report.final_loss,
                 report.final_epsilon,
                 report.throughput_samples_per_sec,
                 report.mean_step_secs * 1e3,
-                report.compile_secs,
+                report.backend,
                 fmt_bytes(report.peak_rss_bytes as f64),
             );
             0
         }
         Err(e) => {
-            eprintln!("training error: {e:#}");
+            eprintln!("training error: {e}");
             1
         }
     }
@@ -154,29 +160,61 @@ fn cmd_calibrate(args: &Args) -> i32 {
 }
 
 fn cmd_list(args: &Args) -> i32 {
-    let dir = args.get_or("artifacts-dir", "artifacts");
-    let m = match fastdp::runtime::Manifest::load(std::path::Path::new(dir)) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("cannot read manifest: {e} (run `make artifacts`)");
-            return 1;
-        }
-    };
+    // Native registry (always available).
     let mut t = Table::new(
-        &format!("artifacts in {dir} (kernel_impl={})", m.kernel_impl),
-        &["model", "group", "params", "batch", "optimizer", "strategies"],
+        "native models (backend=native, no artifacts needed)",
+        &["model", "kind", "B", "T", "dims", "params", "optimizer", "clip"],
     );
-    for (name, meta) in &m.models {
+    for spec in NativeSpec::registry() {
+        let info = spec.info();
+        let dims: Vec<String> = std::iter::once(spec.d_in)
+            .chain(spec.hidden.iter().copied())
+            .chain(std::iter::once(spec.n_classes))
+            .map(|d| d.to_string())
+            .collect();
         t.row(&[
-            name.clone(),
-            meta.group.clone(),
-            fmt_count(meta.n_params as f64),
-            meta.batch.to_string(),
-            meta.optimizer.clone(),
-            m.strategies_for(name).join(","),
+            spec.name.clone(),
+            info.kind.clone(),
+            spec.batch.to_string(),
+            spec.seq.to_string(),
+            dims.join("-"),
+            fmt_count(info.n_params as f64),
+            spec.optimizer.clone(),
+            spec.clip_fn.clone(),
         ]);
     }
     print!("{}", t.render());
-    let _ = Strategy::parse("bk"); // keep import honest
+    println!(
+        "strategies: {}",
+        ALL_STRATEGIES.iter().map(|s| s.name()).collect::<Vec<_>>().join(", ")
+    );
+
+    // PJRT artifacts, when a manifest exists on disk.
+    let dir = args.get_or("artifacts-dir", "artifacts");
+    match fastdp::runtime::Manifest::load(std::path::Path::new(dir)) {
+        Ok(m) => {
+            let mut t = Table::new(
+                &format!("PJRT artifacts in {dir} (kernel_impl={})", m.kernel_impl),
+                &["model", "group", "params", "batch", "optimizer", "strategies"],
+            );
+            for (name, meta) in &m.models {
+                t.row(&[
+                    name.clone(),
+                    meta.group.clone(),
+                    fmt_count(meta.n_params as f64),
+                    meta.batch.to_string(),
+                    meta.optimizer.clone(),
+                    m.strategies_for(name).join(","),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        Err(_) => {
+            println!(
+                "no PJRT artifacts in '{dir}' (native backend needs none; \
+                 run `make artifacts` + --features xla-runtime for the PJRT path)"
+            );
+        }
+    }
     0
 }

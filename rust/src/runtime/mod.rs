@@ -1,171 +1,232 @@
-//! Runtime: load AOT artifacts (HLO text + manifest.json) and execute
-//! them on the PJRT CPU client. This is the only module that talks to
-//! the `xla` crate; everything above it works with `Literal`s and
-//! manifest metadata.
+//! Runtime layer: the [`Backend`] abstraction the coordinator trains
+//! through, with two implementations.
 //!
-//! Interchange contract (see python/compile/aot.py):
-//!  * `<model>__init.hlo.txt`            — seed -> params
-//!  * `<model>__eval.hlo.txt`            — params, x, y -> loss
-//!  * `<model>__step_<strategy>.hlo.txt` — params, [m, v], x, y,
-//!                                         [noise...], scalars -> params',
-//!                                         [m', v'], metrics
-//! All computations are lowered with return_tuple=True, so execution
-//! yields one tuple literal that we decompose by the manifest's output
-//! descriptors.
+//! * [`native`] — the default. Runs the whole Book-Keeping DP step
+//!   (forward, book-kept backward, ghost/per-sample norms, clipped
+//!   weighted sum, noisy SGD/Adam) as fused Rust kernels. Zero external
+//!   dependencies; builds and runs offline.
+//! * [`pjrt`] — the original AOT-artifact executor (HLO text +
+//!   manifest.json on the PJRT CPU client), demoted behind the
+//!   `xla-runtime` cargo feature because the `xla` crate is not
+//!   buildable in the offline environment. See DESIGN.md for the
+//!   re-enable recipe.
+//!
+//! Everything above this module speaks [`ModelInfo`] + host tensors
+//! (`Vec<f32>` / label vectors); no XLA types leak upward.
 
-mod manifest;
+pub mod manifest;
+pub mod native;
+#[cfg(feature = "xla-runtime")]
+pub mod pjrt;
 
 pub use manifest::{ArtifactMeta, Dtype, LayerMeta, Manifest, ModelMeta, TensorDesc};
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::rc::Rc;
-use std::time::Instant;
+use crate::error::Result;
+use crate::{anyhow, bail};
+use std::collections::BTreeMap;
 
-/// A compiled-executable cache keyed by artifact file name.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub dir: PathBuf,
-    pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// Cumulative compile seconds (reported by the coordinator).
-    pub compile_secs: RefCell<f64>,
+/// Backend-neutral model description: what the coordinator, noise
+/// source, and checkpointing need to know about a model.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    /// "mlp" | "seqmlp" | "gpt" | ... (drives the data pipeline).
+    pub kind: String,
+    /// Samples per physical batch (the paper's B).
+    pub batch: usize,
+    /// Tokens per sample (the paper's T; 1 for flat inputs).
+    pub seq: usize,
+    /// Input feature width (vector models).
+    pub d_in: usize,
+    pub n_classes: usize,
+    /// "sgd" | "adam".
+    pub optimizer: String,
+    /// "abadi" | "automatic" | "flat".
+    pub clip_fn: String,
+    /// Trainable tensors, in state/noise/checkpoint order.
+    pub param_names: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub n_params: usize,
 }
 
-impl Runtime {
-    /// Load the manifest and create a CPU PJRT client.
-    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
-        let dir = dir.into();
-        let manifest = Manifest::load(&dir)
-            .map_err(|e| anyhow!("loading manifest from {}: {e}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            dir,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            compile_secs: RefCell::new(0.0),
-        })
+impl ModelInfo {
+    pub fn is_adam(&self) -> bool {
+        self.optimizer == "adam"
     }
 
-    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
-        self.manifest
-            .models
+    pub fn param_shape(&self, name: &str) -> Result<&[usize]> {
+        self.param_shapes
             .get(name)
-            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
-                self.manifest.models.keys().collect::<Vec<_>>()))
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("no shape for param '{name}'"))
     }
 
-    pub fn artifact(&self, model: &str, kind: &str, strategy: Option<&str>)
-        -> Result<&ArtifactMeta> {
-        self.manifest
-            .artifacts
-            .iter()
-            .find(|a| a.model == model && a.kind == kind
-                && a.strategy.as_deref() == strategy)
-            .ok_or_else(|| anyhow!(
-                "artifact model={model} kind={kind} strategy={strategy:?} not found \
-                 (re-run `make artifacts`?)"))
-    }
-
-    /// Compile (or fetch from cache) the executable for an artifact.
-    pub fn executable(&self, art: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(&art.file) {
-            return Ok(exe.clone());
+    /// Tensors in a full state snapshot (params [+ Adam m, v]).
+    pub fn state_tensor_count(&self) -> usize {
+        if self.is_adam() {
+            3 * self.param_names.len()
+        } else {
+            self.param_names.len()
         }
-        let path = self.dir.join(&art.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", art.file))?,
-        );
-        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
-        self.cache.borrow_mut().insert(art.file.clone(), exe.clone());
-        Ok(exe)
+    }
+}
+
+/// Input features for one physical batch (labels travel separately).
+#[derive(Clone, Debug)]
+pub enum BatchX {
+    /// Flat `(B*T*d)` feature rows.
+    F32(Vec<f32>),
+    /// Flat `(B*T)` token ids.
+    I32(Vec<i32>),
+}
+
+/// Scalar hyperparameters of one optimizer step (the artifact scalar
+/// tail, in order: lr, R, sigma*R, logical batch, 1-based step).
+#[derive(Clone, Copy, Debug)]
+pub struct StepHyper {
+    pub lr: f32,
+    pub clip: f32,
+    /// sigma * R; 0 disables noise injection.
+    pub sigma_r: f32,
+    pub logical_batch: f32,
+    pub step: f32,
+}
+
+/// Metrics of one step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepOut {
+    /// Mean per-row loss.
+    pub loss: f32,
+    /// Mean per-sample clip factor (1.0 for nondp).
+    pub mean_clip: f32,
+}
+
+/// Arena / allocator telemetry (native backend).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AllocStats {
+    /// Heap allocations the last step could not serve from the pool.
+    /// Zero once warm — the paper's flat-memory claim as an invariant.
+    pub fresh_allocs_last_step: usize,
+    /// Total bytes ever handed out by the arena.
+    pub arena_bytes: usize,
+}
+
+/// One trainable (model, strategy) pair the coordinator can drive.
+///
+/// A backend owns parameters and optimizer state; the trainer owns
+/// data, privacy accounting, noise, and batching. `noise` slices are
+/// standard-normal tensors in `param_names` order (empty = no noise).
+pub trait Backend {
+    fn info(&self) -> &ModelInfo;
+    fn strategy(&self) -> &str;
+
+    /// (Re-)initialize parameters from a seed.
+    fn init(&mut self, seed: u64) -> Result<()>;
+
+    /// Mean loss on one batch (no mutation).
+    fn eval_loss(&mut self, x: &BatchX, y: &[i32]) -> Result<f32>;
+
+    /// One fused optimizer step: clipped-gradient computation + noisy
+    /// update (the fast path when logical batch == physical batch).
+    fn step(&mut self, x: &BatchX, y: &[i32], noise: &[Vec<f32>], h: &StepHyper) -> Result<StepOut>;
+
+    /// Gradient-accumulation half-step: per-sample-clipped gradient sums
+    /// for one micro-batch, no update.
+    fn clipped_grads(&mut self, x: &BatchX, y: &[i32], clip: f32)
+        -> Result<(Vec<Vec<f32>>, StepOut)>;
+
+    /// Apply an optimizer update from accumulated gradient sums.
+    fn apply_update(&mut self, grads: &[Vec<f32>], noise: &[Vec<f32>], h: &StepHyper) -> Result<()>;
+
+    /// Snapshot params (+ optimizer state) for checkpointing.
+    fn state(&self) -> Result<Vec<Vec<f32>>>;
+
+    /// Restore a snapshot (params only, or full state).
+    fn load_state(&mut self, tensors: Vec<Vec<f32>>) -> Result<()>;
+
+    /// Cumulative artifact-compile seconds (PJRT; 0 for native).
+    fn compile_secs(&self) -> f64 {
+        0.0
     }
 
-    /// Execute an artifact on literal inputs (passed by reference so
-    /// params can stay host-resident across steps); returns the
-    /// decomposed output tuple, validated against the manifest.
-    pub fn execute(&self, art: &ArtifactMeta, inputs: &[&xla::Literal])
-        -> Result<Vec<xla::Literal>> {
-        if inputs.len() != art.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                art.file,
-                art.inputs.len(),
-                inputs.len()
-            );
+    fn alloc_stats(&self) -> AllocStats {
+        AllocStats::default()
+    }
+}
+
+/// Construct the backend selected by the config.
+pub fn create_backend(cfg: &crate::config::TrainConfig) -> Result<Box<dyn Backend>> {
+    match cfg.backend.as_str() {
+        "native" => {
+            let spec = native::model::NativeSpec::by_name(&cfg.model).ok_or_else(|| {
+                anyhow!(
+                    "model '{}' is not in the native registry (available: {})",
+                    cfg.model,
+                    native::model::registry_names().join(", ")
+                )
+            })?;
+            let strategy = crate::complexity::Strategy::parse(&cfg.strategy)
+                .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
+            Ok(Box::new(native::NativeBackend::new(spec, strategy, cfg.threads)?))
         }
-        let exe = self.executable(art)?;
-        let result = exe
-            .execute::<&xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", art.file))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let outs = tuple.to_tuple().context("decomposing result tuple")?;
-        if outs.len() != art.outputs.len() {
-            bail!(
-                "{}: manifest promises {} outputs, executable returned {}",
-                art.file,
-                art.outputs.len(),
-                outs.len()
-            );
+        "pjrt" => {
+            #[cfg(feature = "xla-runtime")]
+            {
+                Ok(Box::new(pjrt::PjrtBackend::load(cfg)?))
+            }
+            #[cfg(not(feature = "xla-runtime"))]
+            {
+                bail!(
+                    "backend 'pjrt' requires building with --features xla-runtime \
+                     (and a local `xla` crate; see DESIGN.md)"
+                )
+            }
         }
-        Ok(outs)
+        other => bail!("unknown backend '{other}' (expected 'native' or 'pjrt')"),
     }
 }
 
-/// Build a f32 literal of the given shape.
-pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product();
-    if n != data.len() {
-        bail!("literal_f32: {} elements for shape {:?}", data.len(), shape);
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_backend_native_default() {
+        let cfg = crate::config::TrainConfig::default();
+        let be = create_backend(&cfg).unwrap();
+        assert_eq!(be.info().name, cfg.model);
+        assert_eq!(be.strategy(), cfg.strategy);
+        assert_eq!(be.compile_secs(), 0.0);
     }
-    let lit = xla::Literal::vec1(data);
-    if shape.len() == 1 {
-        return Ok(lit);
+
+    #[test]
+    fn create_backend_rejects_unknowns() {
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.model = "not_a_model".into();
+        assert!(create_backend(&cfg).is_err());
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.backend = "tpu".into();
+        assert!(create_backend(&cfg).is_err());
     }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
-}
 
-/// Build an i32 literal of the given shape.
-pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product();
-    if n != data.len() {
-        bail!("literal_i32: {} elements for shape {:?}", data.len(), shape);
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn pjrt_backend_gated_off_by_default() {
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.backend = "pjrt".into();
+        let err = create_backend(&cfg).unwrap_err().to_string();
+        assert!(err.contains("xla-runtime"), "{err}");
     }
-    let lit = xla::Literal::vec1(data);
-    if shape.len() == 1 {
-        return Ok(lit);
+
+    #[test]
+    fn model_info_helpers() {
+        let info = native::model::NativeSpec::by_name("mlp_e2e").unwrap().info();
+        assert!(!info.is_adam());
+        assert_eq!(info.state_tensor_count(), info.param_names.len());
+        assert_eq!(info.param_shape("w0").unwrap(), &[128, 256]);
+        assert!(info.param_shape("nope").is_err());
+        let seq = native::model::NativeSpec::by_name("seq_e2e").unwrap().info();
+        assert!(seq.is_adam());
+        assert_eq!(seq.state_tensor_count(), 3 * seq.param_names.len());
     }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
-}
-
-/// Scalar literals (0-d).
-pub fn scalar_f32(x: f32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
-
-pub fn scalar_i32(x: i32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
-
-/// Read back a f32 literal as a host vector.
-pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Read a scalar f32 output.
-pub fn scalar_of(lit: &xla::Literal) -> Result<f32> {
-    Ok(lit.get_first_element::<f32>()?)
 }

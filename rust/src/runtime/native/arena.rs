@@ -1,0 +1,151 @@
+//! Step-scoped buffer arena for the native backend.
+//!
+//! Every per-step tensor (activations, output-gradient caches, Gram
+//! matrices, per-sample norms, reduction partials, gradient accumulators)
+//! is checked out of the arena at the start of a step and returned at the
+//! end. Shapes are static for a given (model, strategy) pair, so after
+//! the first step the pool holds exactly the buffer set a step needs and
+//! steady-state heap allocation is **zero** — the paper's "<1% memory
+//! overhead" claim becomes an assertable invariant instead of a hope.
+//! [`Arena::fresh_allocs`] reports how many pool misses the current step
+//! incurred; the bench harness and tests assert it is 0 once warm.
+
+/// A recycling pool of `Vec<f32>` buffers.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+    /// Buffers created because no pooled one fit (current step).
+    fresh: usize,
+    /// Total f32 capacity ever allocated through this arena.
+    total_elems: usize,
+    /// Buffers currently checked out (sanity/leak accounting).
+    outstanding: usize,
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark the start of a step: resets the per-step miss counter.
+    pub fn begin_step(&mut self) {
+        self.fresh = 0;
+    }
+
+    /// Check a zeroed buffer of exactly `len` elements out of the pool.
+    ///
+    /// Best-fit over pooled capacities; a miss allocates fresh (counted).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        self.outstanding += 1;
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len {
+                let better = match best {
+                    Some(j) => b.capacity() < self.free[j].capacity(),
+                    None => true,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.fresh += 1;
+                self.total_elems += len;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        self.outstanding = self.outstanding.saturating_sub(1);
+        self.free.push(buf);
+    }
+
+    /// Return several buffers at once.
+    pub fn give_all(&mut self, bufs: Vec<Vec<f32>>) {
+        for b in bufs {
+            self.give(b);
+        }
+    }
+
+    /// Pool misses (fresh heap allocations) since `begin_step`.
+    pub fn fresh_allocs(&self) -> usize {
+        self.fresh
+    }
+
+    /// Total bytes ever allocated through the arena.
+    pub fn total_bytes(&self) -> usize {
+        self.total_elems * std::mem::size_of::<f32>()
+    }
+
+    /// Buffers currently checked out.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_step_has_zero_fresh_allocs() {
+        let mut a = Arena::new();
+        // step 1: cold pool
+        a.begin_step();
+        let x = a.take(128);
+        let y = a.take(64);
+        let z = a.take(128);
+        assert_eq!(a.fresh_allocs(), 3);
+        assert_eq!(a.outstanding(), 3);
+        a.give(x);
+        a.give(y);
+        a.give(z);
+        assert_eq!(a.outstanding(), 0);
+        // step 2: identical request sequence is fully served by the pool
+        a.begin_step();
+        let x = a.take(128);
+        let y = a.take(64);
+        let z = a.take(128);
+        assert_eq!(a.fresh_allocs(), 0, "steady state must not allocate");
+        a.give_all(vec![x, y, z]);
+    }
+
+    #[test]
+    fn buffers_come_back_zeroed_and_sized() {
+        let mut a = Arena::new();
+        let mut x = a.take(16);
+        for v in x.iter_mut() {
+            *v = 7.0;
+        }
+        a.give(x);
+        let y = a.take(8);
+        assert_eq!(y.len(), 8);
+        assert!(y.iter().all(|&v| v == 0.0), "reused buffer must be zeroed");
+        a.give(y);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut a = Arena::new();
+        let big = a.take(1024);
+        let small = a.take(32);
+        a.give(big);
+        a.give(small);
+        a.begin_step();
+        let b = a.take(16);
+        // must have reused the 32-capacity buffer, not the 1024 one
+        assert!(b.capacity() < 1024);
+        assert_eq!(a.fresh_allocs(), 0);
+        a.give(b);
+    }
+}

@@ -1,0 +1,680 @@
+//! Native Book-Keeping kernels: the DP hot path as plain Rust.
+//!
+//! These mirror the reference semantics of `python/compile/kernels/ref.py`
+//! (the jnp oracles) with the paper's (B, T, d, p) shape conventions:
+//!
+//! * `a` — layer-input activations, `(B, T, d)` flattened row-major
+//! * `g` — output gradients of the **summed** loss, `(B, T, p)`
+//! * `c` — per-sample clip factors, `(B,)`
+//!
+//! Performance model (see DESIGN.md):
+//! * matmuls are cache-blocked over the reduction dimension and fan out
+//!   over rows / the batch via `par`;
+//! * reductions over the batch accumulate into per-worker partial
+//!   buffers merged in worker order, so results are deterministic for a
+//!   fixed thread count;
+//! * no kernel allocates: all scratch is passed in by the caller (the
+//!   backend checks it out of the step arena).
+//!
+//! The clipped-weighted-sum kernel is shared by every DP strategy, so
+//! two strategies given bitwise-identical clip factors produce
+//! bitwise-identical clipped gradients (asserted in
+//! `tests/native_kernels.rs`).
+
+#![allow(clippy::too_many_arguments)]
+
+use super::par;
+
+/// Reduction-dimension block size for the forward matmul: keeps a block
+/// of weight rows hot in L1/L2 while streaming the row chunk.
+const KB: usize = 64;
+
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// Forward: `out (rows, p) = a (rows, d) · w (d, p) [+ bias]`.
+///
+/// `rows = B*T`. Cache-blocked i-k-j loop, threaded over rows.
+pub fn linear_forward(
+    a: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    rows: usize,
+    d: usize,
+    p: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), rows * d);
+    debug_assert_eq!(w.len(), d * p);
+    debug_assert_eq!(out.len(), rows * p);
+    par::par_rows(out, rows, p, threads, |r0, chunk| {
+        for out_row in chunk.chunks_mut(p) {
+            match bias {
+                Some(b) => out_row.copy_from_slice(b),
+                None => out_row.fill(0.0),
+            }
+        }
+        let n_rows = chunk.len() / p;
+        for j0 in (0..d).step_by(KB) {
+            let j1 = (j0 + KB).min(d);
+            for ri in 0..n_rows {
+                let a_row = &a[(r0 + ri) * d..(r0 + ri) * d + d];
+                let out_row = &mut chunk[ri * p..ri * p + p];
+                for (j, &av) in a_row.iter().enumerate().take(j1).skip(j0) {
+                    if av != 0.0 {
+                        let w_row = &w[j * p..j * p + p];
+                        for (o, &wv) in out_row.iter_mut().zip(w_row) {
+                            *o += av * wv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Backward (data): `da (rows, d) = g (rows, p) · w^T`, i.e.
+/// `da[r, j] = g[r, :] · w[j, :]` — contiguous dot products.
+pub fn backward_data(
+    g: &[f32],
+    w: &[f32],
+    da: &mut [f32],
+    rows: usize,
+    d: usize,
+    p: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(g.len(), rows * p);
+    debug_assert_eq!(w.len(), d * p);
+    debug_assert_eq!(da.len(), rows * d);
+    par::par_rows(da, rows, d, threads, |r0, chunk| {
+        for (ri, da_row) in chunk.chunks_mut(d).enumerate() {
+            let g_row = &g[(r0 + ri) * p..(r0 + ri) * p + p];
+            for (j, slot) in da_row.iter_mut().enumerate() {
+                *slot = dot(g_row, &w[j * p..j * p + p]);
+            }
+        }
+    });
+}
+
+/// ReLU forward, in place.
+pub fn relu_forward(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: zero `da` wherever the *post-activation* is zero.
+pub fn relu_backward(da: &mut [f32], act: &[f32]) {
+    debug_assert_eq!(da.len(), act.len());
+    for (d, &a) in da.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Row-wise softmax cross-entropy with integer labels.
+///
+/// Returns the loss **summed** over rows (the per-sample-clipping
+/// convention: L = sum_i L_i). When `g` is given, writes the gradient of
+/// the summed loss: `g = softmax(logits) - onehot(y)`.
+pub fn softmax_xent(
+    logits: &[f32],
+    y: &[i32],
+    rows: usize,
+    c: usize,
+    mut g: Option<&mut [f32]>,
+) -> f32 {
+    debug_assert_eq!(logits.len(), rows * c);
+    debug_assert_eq!(y.len(), rows);
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let row = &logits[r * c..r * c + c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &v in row {
+            z += (v - m).exp();
+        }
+        let yi = y[r] as usize;
+        debug_assert!(yi < c, "label {yi} out of range {c}");
+        loss += (z.ln() - (row[yi] - m)) as f64;
+        if let Some(gbuf) = g.as_deref_mut() {
+            let grow = &mut gbuf[r * c..r * c + c];
+            for (gq, &v) in grow.iter_mut().zip(row) {
+                *gq = (v - m).exp() / z;
+            }
+            grow[yi] -= 1.0;
+        }
+    }
+    loss as f32
+}
+
+/// Ghost norm (paper Eq. 2, module 3 of Table 3): accumulates the
+/// per-sample squared Frobenius norm of `dL_i/dW` into `sq[i]` **without
+/// forming the gradient**, from the activation and output-gradient Gram
+/// matrices: `||dL_i/dW||^2 = sum_{t,s} (a_t·a_s)(g_t·g_s)`.
+///
+/// Time `O(B T^2 (p+d))`, scratch `2 B T^2` (`gram_a`, `gram_g`). For
+/// `t == 1` the Grams are scalars and the norm factorizes to
+/// `||a_i||^2 ||g_i||^2` in `O(B (p+d))` with no scratch touched.
+pub fn ghost_norm(
+    a: &[f32],
+    g: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    p: usize,
+    gram_a: &mut [f32],
+    gram_g: &mut [f32],
+    sq: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), b * t * d);
+    debug_assert_eq!(g.len(), b * t * p);
+    debug_assert_eq!(sq.len(), b);
+    if t == 1 {
+        for i in 0..b {
+            let a2 = dot(&a[i * d..(i + 1) * d], &a[i * d..(i + 1) * d]);
+            let g2 = dot(&g[i * p..(i + 1) * p], &g[i * p..(i + 1) * p]);
+            sq[i] += a2 * g2;
+        }
+        return;
+    }
+    debug_assert!(gram_a.len() >= b * t * t);
+    debug_assert!(gram_g.len() >= b * t * t);
+    gram_of(a, b, t, d, gram_a, threads);
+    gram_of(g, b, t, p, gram_g, threads);
+    par::par_rows(sq, b, 1, threads, |i0, chunk| {
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            let i = i0 + k;
+            *slot += dot(
+                &gram_a[i * t * t..(i + 1) * t * t],
+                &gram_g[i * t * t..(i + 1) * t * t],
+            );
+        }
+    });
+}
+
+/// Per-sample Gram matrices: `gram[i, t1, t2] = x_i[t1, :] · x_i[t2, :]`
+/// for `x (b, t, w)`. Symmetric — computes the upper triangle and
+/// mirrors. Threaded over the batch.
+fn gram_of(x: &[f32], b: usize, t: usize, w: usize, gram: &mut [f32], threads: usize) {
+    par::par_rows(gram, b, t * t, threads, |i0, chunk| {
+        for (k, gm) in chunk.chunks_mut(t * t).enumerate() {
+            let xi = &x[(i0 + k) * t * w..(i0 + k + 1) * t * w];
+            for t1 in 0..t {
+                let r1 = &xi[t1 * w..(t1 + 1) * w];
+                for t2 in t1..t {
+                    let v = dot(r1, &xi[t2 * w..(t2 + 1) * w]);
+                    gm[t1 * t + t2] = v;
+                    gm[t2 * t + t1] = v;
+                }
+            }
+        }
+    });
+}
+
+/// Per-sample gradient instantiation (module 4): `psg[i] = a_i^T g_i`,
+/// stored `(b, d, p)`. Time `O(B T p d)`, space `B p d` — the route the
+/// mixed decision picks when `2T^2 >= pd`.
+pub fn psg_instantiate(
+    a: &[f32],
+    g: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    p: usize,
+    psg: &mut [f32],
+    threads: usize,
+) {
+    let dp = d * p;
+    debug_assert_eq!(psg.len(), b * dp);
+    par::par_rows(psg, b, dp, threads, |i0, chunk| {
+        for (k, pg) in chunk.chunks_mut(dp).enumerate() {
+            pg.fill(0.0);
+            let i = i0 + k;
+            for tt in 0..t {
+                let row = i * t + tt;
+                let a_row = &a[row * d..row * d + d];
+                let g_row = &g[row * p..row * p + p];
+                for (j, &av) in a_row.iter().enumerate() {
+                    if av != 0.0 {
+                        let acc = &mut pg[j * p..j * p + p];
+                        for (o, &gv) in acc.iter_mut().zip(g_row) {
+                            *o += av * gv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Accumulate `sq[i] += ||psg_i||^2` from stored per-sample gradients.
+pub fn sq_norms_from_psg(psg: &[f32], b: usize, n_per: usize, sq: &mut [f32], threads: usize) {
+    debug_assert_eq!(psg.len(), b * n_per);
+    debug_assert_eq!(sq.len(), b);
+    par::par_rows(sq, b, 1, threads, |i0, chunk| {
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            let s = &psg[(i0 + k) * n_per..(i0 + k + 1) * n_per];
+            *slot += dot(s, s);
+        }
+    });
+}
+
+/// Instantiation-route norms **without** storing all per-sample grads:
+/// each worker materializes one `d*p` gradient at a time in its scratch
+/// slice and accumulates its squared norm. `scratch >= workers * d * p`.
+pub fn psg_norms_streaming(
+    a: &[f32],
+    g: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    p: usize,
+    scratch: &mut [f32],
+    sq: &mut [f32],
+    threads: usize,
+) {
+    let dp = d * p;
+    debug_assert_eq!(sq.len(), b);
+    par::par_batch(sq, b, 1, scratch, dp, threads, |i0, n, sqc, scr| {
+        for k in 0..n {
+            let i = i0 + k;
+            scr.fill(0.0);
+            for tt in 0..t {
+                let row = i * t + tt;
+                let a_row = &a[row * d..row * d + d];
+                let g_row = &g[row * p..row * p + p];
+                for (j, &av) in a_row.iter().enumerate() {
+                    if av != 0.0 {
+                        let acc = &mut scr[j * p..j * p + p];
+                        for (o, &gv) in acc.iter_mut().zip(g_row) {
+                            *o += av * gv;
+                        }
+                    }
+                }
+            }
+            sqc[k] += dot(scr, scr);
+        }
+    });
+}
+
+/// Book-keeping weighted sum (module 5 fused with the parameter-gradient
+/// contraction): `out (d, p) += sum_i c_i a_i^T g_i`, with `c_i = 1` when
+/// `c` is `None` (the non-DP parameter gradient).
+///
+/// Fans out over the batch into per-worker `d*p` partials (`partials >=
+/// workers * d * p`), merged in worker order. This single kernel computes
+/// the clipped gradient for **every** strategy, so identical clip factors
+/// yield bitwise-identical gradients across strategies.
+pub fn weighted_grad(
+    a: &[f32],
+    g: &[f32],
+    c: Option<&[f32]>,
+    b: usize,
+    t: usize,
+    d: usize,
+    p: usize,
+    partials: &mut [f32],
+    out: &mut [f32],
+    threads: usize,
+) {
+    let dp = d * p;
+    debug_assert_eq!(out.len(), dp);
+    let accum = |acc: &mut [f32], i0: usize, n: usize| {
+        for i in i0..i0 + n {
+            let ci = match c {
+                Some(cs) => cs[i],
+                None => 1.0,
+            };
+            if ci == 0.0 {
+                continue;
+            }
+            for tt in 0..t {
+                let row = i * t + tt;
+                let a_row = &a[row * d..row * d + d];
+                let g_row = &g[row * p..row * p + p];
+                for (j, &av) in a_row.iter().enumerate() {
+                    let s = ci * av;
+                    if s != 0.0 {
+                        let slot = &mut acc[j * p..j * p + p];
+                        for (o, &gv) in slot.iter_mut().zip(g_row) {
+                            *o += s * gv;
+                        }
+                    }
+                }
+            }
+        }
+    };
+    let workers = threads.max(1).min(b.max(1));
+    if workers <= 1 || b < 2 {
+        accum(out, 0, b);
+        return;
+    }
+    debug_assert!(partials.len() >= workers * dp);
+    let used = workers * dp;
+    partials[..used].fill(0.0);
+    par::par_reduce(b, &mut partials[..used], dp, workers, |i0, n, acc| accum(acc, i0, n));
+    for wk in 0..workers {
+        let src = &partials[wk * dp..(wk + 1) * dp];
+        for (o, &s) in out.iter_mut().zip(src) {
+            *o += s;
+        }
+    }
+}
+
+/// Weighted sum from **stored** per-sample gradients (BK-MixOpt reuses
+/// the instantiation done for the norms): `out += sum_i c_i psg_i`.
+pub fn weighted_sum_psg(
+    psg: &[f32],
+    c: &[f32],
+    b: usize,
+    d: usize,
+    p: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let dp = d * p;
+    debug_assert_eq!(psg.len(), b * dp);
+    debug_assert_eq!(out.len(), dp);
+    par::par_rows(out, d, p, threads, |j0, chunk| {
+        for (i, &ci) in c.iter().enumerate().take(b) {
+            if ci == 0.0 {
+                continue;
+            }
+            let base = i * dp + j0 * p;
+            let src = &psg[base..base + chunk.len()];
+            for (o, &s) in chunk.iter_mut().zip(src) {
+                *o += ci * s;
+            }
+        }
+    });
+}
+
+/// Per-sample bias-gradient squared norms: `sq[i] += ||sum_t g_i[t,:]||^2`
+/// (ghost and instantiation coincide for bias). `scratch >= workers * p`.
+pub fn bias_sq_norms(
+    g: &[f32],
+    b: usize,
+    t: usize,
+    p: usize,
+    scratch: &mut [f32],
+    sq: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(sq.len(), b);
+    par::par_batch(sq, b, 1, scratch, p, threads, |i0, n, sqc, scr| {
+        for k in 0..n {
+            let i = i0 + k;
+            scr.fill(0.0);
+            for tt in 0..t {
+                let g_row = &g[(i * t + tt) * p..(i * t + tt) * p + p];
+                for (o, &gv) in scr.iter_mut().zip(g_row) {
+                    *o += gv;
+                }
+            }
+            sqc[k] += dot(scr, scr);
+        }
+    });
+}
+
+/// Clipped bias-gradient sum: `out[q] += sum_i c_i sum_t g_i[t, q]`
+/// (`c_i = 1` when `c` is `None`). Serial — `p` is tiny next to `d*p`.
+pub fn bias_grad(g: &[f32], c: Option<&[f32]>, b: usize, t: usize, p: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), p);
+    for i in 0..b {
+        let ci = match c {
+            Some(cs) => cs[i],
+            None => 1.0,
+        };
+        if ci == 0.0 {
+            continue;
+        }
+        for tt in 0..t {
+            let g_row = &g[(i * t + tt) * p..(i * t + tt) * p + p];
+            for (o, &gv) in out.iter_mut().zip(g_row) {
+                *o += ci * gv;
+            }
+        }
+    }
+}
+
+/// Clipping flavors (matching `ref.py` exactly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClipKind {
+    /// Abadi et al. (2016): `C_i = min(R / ||g_i||, 1)`.
+    Abadi,
+    /// Bu et al. (2022b) automatic: `C_i = R / (||g_i|| + 0.01)`.
+    Automatic,
+    /// Bu et al. (2021b) flat: `C_i = 1[||g_i|| <= R]`.
+    Flat,
+}
+
+impl ClipKind {
+    pub fn parse(s: &str) -> Option<ClipKind> {
+        match s {
+            "abadi" => Some(ClipKind::Abadi),
+            "automatic" => Some(ClipKind::Automatic),
+            "flat" => Some(ClipKind::Flat),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClipKind::Abadi => "abadi",
+            ClipKind::Automatic => "automatic",
+            ClipKind::Flat => "flat",
+        }
+    }
+}
+
+/// Per-sample clip factors from squared norms.
+pub fn clip_factors(sq: &[f32], r: f32, kind: ClipKind, c: &mut [f32]) {
+    debug_assert_eq!(sq.len(), c.len());
+    for (ci, &s) in c.iter_mut().zip(sq) {
+        let norm = s.max(0.0).sqrt();
+        *ci = match kind {
+            ClipKind::Abadi => (r / norm.max(1e-12)).min(1.0),
+            ClipKind::Automatic => r / (norm + 0.01),
+            ClipKind::Flat => {
+                if norm <= r {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        };
+    }
+}
+
+/// Private SGD step on one tensor (paper Eq. 1):
+/// `w -= lr * (G + sigma_r * z) / batch`.
+pub fn sgd_update(w: &mut [f32], gsum: &[f32], noise: Option<&[f32]>, lr: f32, sigma_r: f32, batch: f32) {
+    debug_assert_eq!(w.len(), gsum.len());
+    match noise {
+        Some(z) => {
+            for ((wv, &gv), &zv) in w.iter_mut().zip(gsum).zip(z) {
+                *wv -= lr * (gv + sigma_r * zv) / batch;
+            }
+        }
+        None => {
+            for (wv, &gv) in w.iter_mut().zip(gsum) {
+                *wv -= lr * gv / batch;
+            }
+        }
+    }
+}
+
+/// Private Adam step on one tensor (matching `dp_adam_update_ref`).
+pub fn adam_update(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    gsum: &[f32],
+    noise: Option<&[f32]>,
+    lr: f32,
+    sigma_r: f32,
+    batch: f32,
+    step: f32,
+) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let c1 = 1.0 - B1.powf(step);
+    let c2 = 1.0 - B2.powf(step);
+    for i in 0..w.len() {
+        let z = noise.map(|n| n[i]).unwrap_or(0.0);
+        let ghat = (gsum[i] + sigma_r * z) / batch;
+        m[i] = B1 * m[i] + (1.0 - B1) * ghat;
+        v[i] = B2 * v[i] + (1.0 - B2) * ghat * ghat;
+        let mhat = m[i] / c1;
+        let vhat = v[i] / c2;
+        w[i] -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn randv(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() - 0.5).collect()
+    }
+
+    fn naive_matmul(a: &[f32], w: &[f32], rows: usize, d: usize, p: usize) -> Vec<f32> {
+        let mut out = vec![0f32; rows * p];
+        for r in 0..rows {
+            for j in 0..d {
+                for q in 0..p {
+                    out[r * p + q] += a[r * d + j] * w[j * p + q];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn forward_matches_naive() {
+        let mut rng = Xoshiro256::new(1);
+        for &(rows, d, p) in &[(1usize, 1usize, 1usize), (7, 5, 3), (33, 17, 9), (64, 128, 32)] {
+            let a = randv(&mut rng, rows * d);
+            let w = randv(&mut rng, d * p);
+            let bias = randv(&mut rng, p);
+            let mut out = vec![0f32; rows * p];
+            linear_forward(&a, &w, Some(&bias), &mut out, rows, d, p, 4);
+            let mut want = naive_matmul(&a, &w, rows, d, p);
+            for r in 0..rows {
+                for q in 0..p {
+                    want[r * p + q] += bias[q];
+                }
+            }
+            for (x, y) in out.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_data_matches_naive() {
+        let mut rng = Xoshiro256::new(2);
+        let (rows, d, p) = (19usize, 11usize, 13usize);
+        let g = randv(&mut rng, rows * p);
+        let w = randv(&mut rng, d * p);
+        let mut da = vec![0f32; rows * d];
+        backward_data(&g, &w, &mut da, rows, d, p, 4);
+        for r in 0..rows {
+            for j in 0..d {
+                let mut want = 0f32;
+                for q in 0..p {
+                    want += g[r * p + q] * w[j * p + q];
+                }
+                assert!((da[r * d + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits() {
+        let rows = 4;
+        let c = 10;
+        let logits = vec![0f32; rows * c];
+        let y = vec![3i32; rows];
+        let mut g = vec![0f32; rows * c];
+        let loss = softmax_xent(&logits, &y, rows, c, Some(&mut g));
+        assert!((loss / rows as f32 - (c as f32).ln()).abs() < 1e-5);
+        // gradient rows sum to zero; true class is prob - 1
+        for r in 0..rows {
+            let s: f32 = g[r * c..(r + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-5);
+            assert!((g[r * c + 3] - (0.1 - 1.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relu_roundtrip() {
+        let mut x = vec![-1.0f32, 0.0, 2.0];
+        relu_forward(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        let mut da = vec![5.0f32, 5.0, 5.0];
+        relu_backward(&mut da, &x);
+        assert_eq!(da, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn ghost_norm_t1_factorizes() {
+        let mut rng = Xoshiro256::new(3);
+        let (b, d, p) = (6usize, 9usize, 4usize);
+        let a = randv(&mut rng, b * d);
+        let g = randv(&mut rng, b * p);
+        let mut sq = vec![0f32; b];
+        ghost_norm(&a, &g, b, 1, d, p, &mut [], &mut [], &mut sq, 2);
+        for i in 0..b {
+            let a2: f32 = a[i * d..(i + 1) * d].iter().map(|x| x * x).sum();
+            let g2: f32 = g[i * p..(i + 1) * p].iter().map(|x| x * x).sum();
+            assert!((sq[i] - a2 * g2).abs() / (a2 * g2).max(1e-6) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn clip_factor_kinds() {
+        let sq = vec![4.0f32, 0.25, 100.0];
+        let mut c = vec![0f32; 3];
+        clip_factors(&sq, 1.0, ClipKind::Abadi, &mut c);
+        assert!((c[0] - 0.5).abs() < 1e-6);
+        assert!((c[1] - 1.0).abs() < 1e-6);
+        clip_factors(&sq, 1.0, ClipKind::Flat, &mut c);
+        assert_eq!(c, vec![0.0, 1.0, 0.0]);
+        clip_factors(&sq, 1.0, ClipKind::Automatic, &mut c);
+        assert!((c[0] - 1.0 / 2.01).abs() < 1e-6);
+        assert_eq!(ClipKind::parse("automatic"), Some(ClipKind::Automatic));
+        assert_eq!(ClipKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn updates_match_scalar_math() {
+        let mut w = vec![1.0f32];
+        sgd_update(&mut w, &[2.0], Some(&[0.5]), 0.1, 2.0, 4.0);
+        // w - 0.1*(2 + 2*0.5)/4 = 1 - 0.075
+        assert!((w[0] - 0.925).abs() < 1e-6);
+
+        let (mut w, mut m, mut v) = (vec![1.0f32], vec![0f32], vec![0f32]);
+        adam_update(&mut w, &mut m, &mut v, &[4.0], None, 0.01, 0.0, 4.0, 1.0);
+        // ghat = 1; mhat = 1; vhat = 1 => w -= 0.01 * 1/(1+eps)
+        assert!((w[0] - 0.99).abs() < 1e-5);
+        assert!((m[0] - 0.1).abs() < 1e-6);
+        assert!((v[0] - 0.001).abs() < 1e-7);
+    }
+}

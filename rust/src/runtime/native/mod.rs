@@ -1,0 +1,805 @@
+//! Native backend: the Book-Keeping DP step end-to-end in Rust.
+//!
+//! Executes generalized-linear models (see `model`) with the fused
+//! kernels in `kernels`, dispatching per layer between the ghost-norm
+//! and per-sample-instantiation routes exactly as the complexity
+//! engine's `ghost_preferred` decides. One `NativeBackend` is
+//! constructed per (model, strategy) pair — mirroring the one
+//! artifact-per-strategy layout of the PJRT path — and implements the
+//! [`Backend`](crate::runtime::Backend) trait the coordinator drives.
+//!
+//! Strategy execution plans (paper Table 2):
+//!
+//! | strategy          | backprops | norms              | clipped sum        |
+//! |-------------------|-----------|--------------------|--------------------|
+//! | `nondp`           | 1         | —                  | plain sum          |
+//! | `opacus`          | 1         | stored psg         | from stored psg    |
+//! | `fastgradclip`    | 2         | streamed psg       | weighted contraction |
+//! | `ghostclip`       | 2         | ghost (Gram)       | weighted contraction |
+//! | `mixghostclip`    | 2         | per-layer min      | weighted contraction |
+//! | `bk`              | 1         | ghost, g cached    | weighted contraction |
+//! | `bk_mixghostclip` | 1         | per-layer min      | weighted contraction |
+//! | `bk_mixopt`       | 1         | per-layer min      | psg reused on inst layers |
+//!
+//! All per-step buffers come from the [`arena::Arena`]; after the first
+//! (warm-up) step the pool is saturated and steady-state heap
+//! allocation is zero — asserted by tests and reported by the bench.
+
+pub mod arena;
+pub mod kernels;
+pub mod model;
+pub mod par;
+
+use self::arena::Arena;
+use self::kernels::ClipKind;
+use self::model::NativeSpec;
+use crate::complexity::{ghost_preferred, Strategy};
+use crate::error::Result;
+use crate::runtime::{AllocStats, Backend, BatchX, ModelInfo, StepHyper, StepOut};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+use crate::{anyhow, bail};
+
+/// Per-layer norm route (the mixed ghost/per-sample decision).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum NormRoute {
+    Ghost,
+    Inst,
+}
+
+pub struct NativeBackend {
+    spec: NativeSpec,
+    info: ModelInfo,
+    strategy: Strategy,
+    clip_kind: ClipKind,
+    /// Norm route per layer (unused for nondp).
+    routes: Vec<NormRoute>,
+    /// Layers whose per-sample grads are materialized and reused.
+    store_psg: Vec<bool>,
+    threads: usize,
+    /// Trainable tensors in order w0, b0, w1, b1, ...
+    params: Vec<Vec<f32>>,
+    opt_m: Vec<Vec<f32>>,
+    opt_v: Vec<Vec<f32>>,
+    arena: Arena,
+    last_fresh: usize,
+    initialized: bool,
+}
+
+impl NativeBackend {
+    pub fn new(spec: NativeSpec, strategy: Strategy, threads: usize) -> Result<Self> {
+        let clip_kind = ClipKind::parse(&spec.clip_fn)
+            .ok_or_else(|| anyhow!("unknown clip_fn '{}' in model '{}'", spec.clip_fn, spec.name))?;
+        if spec.optimizer != "sgd" && spec.optimizer != "adam" {
+            bail!("unknown optimizer '{}' in model '{}'", spec.optimizer, spec.name);
+        }
+        if spec.batch == 0 || spec.seq == 0 || spec.d_in == 0 || spec.n_classes == 0 {
+            bail!("model '{}' has a zero dimension", spec.name);
+        }
+        let layers = spec.arch_layers();
+        let routes: Vec<NormRoute> = layers
+            .iter()
+            .map(|l| match strategy {
+                Strategy::Opacus | Strategy::FastGradClip => NormRoute::Inst,
+                Strategy::GhostClip | Strategy::Bk | Strategy::NonDp => NormRoute::Ghost,
+                Strategy::MixGhostClip | Strategy::BkMixGhostClip | Strategy::BkMixOpt => {
+                    if ghost_preferred(l) {
+                        NormRoute::Ghost
+                    } else {
+                        NormRoute::Inst
+                    }
+                }
+            })
+            .collect();
+        let store_psg: Vec<bool> = routes
+            .iter()
+            .map(|r| match strategy {
+                Strategy::Opacus => true,
+                Strategy::BkMixOpt => *r == NormRoute::Inst,
+                _ => false,
+            })
+            .collect();
+        let threads = if threads == 0 { par::default_threads() } else { threads };
+        let info = spec.info();
+        let zeros = || -> Vec<Vec<f32>> {
+            info.param_names
+                .iter()
+                .map(|n| vec![0.0; info.param_shapes[n].iter().product()])
+                .collect()
+        };
+        let params = zeros();
+        let (opt_m, opt_v) = if info.is_adam() {
+            (zeros(), zeros())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        Ok(Self {
+            spec,
+            info,
+            strategy,
+            clip_kind,
+            routes,
+            store_psg,
+            threads,
+            params,
+            opt_m,
+            opt_v,
+            arena: Arena::new(),
+            last_fresh: 0,
+            initialized: false,
+        })
+    }
+
+    pub fn strategy_enum(&self) -> Strategy {
+        self.strategy
+    }
+
+    fn two_pass(&self) -> bool {
+        matches!(
+            self.strategy,
+            Strategy::FastGradClip | Strategy::GhostClip | Strategy::MixGhostClip
+        )
+    }
+
+    fn rows(&self) -> usize {
+        self.spec.batch * self.spec.seq
+    }
+
+    fn max_dp(&self) -> usize {
+        self.spec.layer_widths().iter().map(|&(d, p)| d * p).max().unwrap_or(1)
+    }
+
+    fn max_p(&self) -> usize {
+        self.spec.layer_widths().iter().map(|&(_, p)| p).max().unwrap_or(1)
+    }
+
+    fn features_of<'a>(&self, x: &'a BatchX) -> Result<&'a [f32]> {
+        match x {
+            BatchX::F32(v) => Ok(v.as_slice()),
+            BatchX::I32(_) => {
+                bail!("native backend takes f32 features (token inputs need the pjrt backend)")
+            }
+        }
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32]) -> Result<()> {
+        let rows = self.rows();
+        if x.len() != rows * self.spec.d_in {
+            bail!(
+                "x has {} elements, expected {} (B*T*d = {}*{}*{})",
+                x.len(),
+                rows * self.spec.d_in,
+                self.spec.batch,
+                self.spec.seq,
+                self.spec.d_in
+            );
+        }
+        if y.len() != rows {
+            bail!("y has {} labels, expected {}", y.len(), rows);
+        }
+        if !self.initialized {
+            bail!("backend not initialized (call init first)");
+        }
+        Ok(())
+    }
+
+    /// Forward pass into arena-held activations; `acts[l]` is the input
+    /// of layer `l`, `acts[n_layers]` the logits.
+    fn forward(&mut self, x: &[f32]) -> Vec<Vec<f32>> {
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 1);
+        let mut a0 = self.arena.take(rows * dims[0].0);
+        a0.copy_from_slice(x);
+        acts.push(a0);
+        for &(_, p) in &dims {
+            acts.push(self.arena.take(rows * p));
+        }
+        for (l, &(d, p)) in dims.iter().enumerate() {
+            let (head, tail) = acts.split_at_mut(l + 1);
+            kernels::linear_forward(
+                &head[l],
+                &self.params[2 * l],
+                Some(&self.params[2 * l + 1]),
+                &mut tail[0],
+                rows,
+                d,
+                p,
+                self.threads,
+            );
+            if l + 1 < nl {
+                kernels::relu_forward(&mut tail[0]);
+            }
+        }
+        acts
+    }
+
+    /// Compute per-tensor gradient sums into `grads` (2 per layer,
+    /// zero-initialized by the caller): the plain gradient for nondp,
+    /// the clipped-per-sample sum for every DP strategy.
+    fn compute_grads(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        clip: f32,
+        grads: &mut [Vec<f32>],
+    ) -> Result<StepOut> {
+        self.check_batch(x, y)?;
+        let b = self.spec.batch;
+        let t = self.spec.seq;
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let c_out = dims[nl - 1].1;
+        debug_assert_eq!(grads.len(), 2 * nl);
+        let threads = self.threads;
+        let workers = threads.max(1).min(b.max(1));
+
+        let mut acts = self.forward(x);
+
+        let out = if self.strategy == Strategy::NonDp {
+            // -- single backward, plain summed gradients ---------------
+            let mut g = self.arena.take(rows * c_out);
+            let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+            let mut partials = self.arena.take(workers * self.max_dp());
+            for l in (0..nl).rev() {
+                let (d, p) = dims[l];
+                kernels::weighted_grad(
+                    &acts[l], &g, None, b, t, d, p, &mut partials, &mut grads[2 * l], threads,
+                );
+                kernels::bias_grad(&g, None, b, t, p, &mut grads[2 * l + 1]);
+                if l > 0 {
+                    let mut g_prev = self.arena.take(rows * d);
+                    kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
+                    kernels::relu_backward(&mut g_prev, &acts[l]);
+                    self.arena.give(std::mem::replace(&mut g, g_prev));
+                }
+            }
+            self.arena.give(g);
+            self.arena.give(partials);
+            StepOut {
+                loss: loss / rows as f32,
+                mean_clip: 1.0,
+            }
+        } else if self.two_pass() {
+            self.grads_two_pass(&acts, y, clip, grads)?
+        } else {
+            self.grads_one_pass(&acts, y, clip, grads)?
+        };
+
+        while let Some(a) = acts.pop() {
+            self.arena.give(a);
+        }
+        Ok(out)
+    }
+
+    /// GhostClip / FastGradClip / MixGhostClip: norm pass + a second
+    /// backward that re-derives the output gradients for the clipped
+    /// contraction (the honest 2-backprop cost of Table 2).
+    fn grads_two_pass(
+        &mut self,
+        acts: &[Vec<f32>],
+        y: &[i32],
+        clip: f32,
+        grads: &mut [Vec<f32>],
+    ) -> Result<StepOut> {
+        let b = self.spec.batch;
+        let t = self.spec.seq;
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let c_out = dims[nl - 1].1;
+        let threads = self.threads;
+        let workers = threads.max(1).min(b.max(1));
+
+        let need_gram = t > 1 && self.routes.iter().any(|r| *r == NormRoute::Ghost);
+        let need_stream = self.routes.iter().any(|r| *r == NormRoute::Inst);
+        let mut gram_a = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut gram_g = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut stream = if need_stream {
+            self.arena.take(workers * self.max_dp())
+        } else {
+            Vec::new()
+        };
+        let mut bias_scratch = self.arena.take(workers * self.max_p());
+        let mut sq = self.arena.take(b);
+
+        // ---- pass 1: norms ------------------------------------------
+        let mut g = self.arena.take(rows * c_out);
+        let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            match self.routes[l] {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    &acts[l], &g, b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    &acts[l], &g, b, t, d, p, &mut stream, &mut sq, threads,
+                ),
+            }
+            kernels::bias_sq_norms(&g, b, t, p, &mut bias_scratch, &mut sq, threads);
+            if l > 0 {
+                let mut g_prev = self.arena.take(rows * d);
+                kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
+                kernels::relu_backward(&mut g_prev, &acts[l]);
+                self.arena.give(std::mem::replace(&mut g, g_prev));
+            }
+        }
+        self.arena.give(g);
+
+        let mut cfac = self.arena.take(b);
+        kernels::clip_factors(&sq, clip, self.clip_kind, &mut cfac);
+        let mean_clip = cfac.iter().sum::<f32>() / b as f32;
+
+        // ---- pass 2: re-backpropagate + clipped contraction ----------
+        let mut partials = self.arena.take(workers * self.max_dp());
+        let mut g = self.arena.take(rows * c_out);
+        kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            kernels::weighted_grad(
+                &acts[l],
+                &g,
+                Some(&cfac),
+                b,
+                t,
+                d,
+                p,
+                &mut partials,
+                &mut grads[2 * l],
+                threads,
+            );
+            kernels::bias_grad(&g, Some(&cfac), b, t, p, &mut grads[2 * l + 1]);
+            if l > 0 {
+                let mut g_prev = self.arena.take(rows * d);
+                kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
+                kernels::relu_backward(&mut g_prev, &acts[l]);
+                self.arena.give(std::mem::replace(&mut g, g_prev));
+            }
+        }
+        self.arena.give(g);
+        self.arena.give(partials);
+        self.arena.give(cfac);
+        self.arena.give(sq);
+        self.arena.give(bias_scratch);
+        if need_stream {
+            self.arena.give(stream);
+        }
+        if need_gram {
+            self.arena.give(gram_g);
+            self.arena.give(gram_a);
+        }
+        Ok(StepOut {
+            loss: loss / rows as f32,
+            mean_clip,
+        })
+    }
+
+    /// Opacus / BK / BK-MixGhostClip / BK-MixOpt: one backward with the
+    /// output gradients book-kept per layer; norms inline; the clipped
+    /// sum reuses the caches (and, for Opacus / MixOpt-inst layers, the
+    /// materialized per-sample grads) — no second backprop.
+    fn grads_one_pass(
+        &mut self,
+        acts: &[Vec<f32>],
+        y: &[i32],
+        clip: f32,
+        grads: &mut [Vec<f32>],
+    ) -> Result<StepOut> {
+        let b = self.spec.batch;
+        let t = self.spec.seq;
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let c_out = dims[nl - 1].1;
+        let threads = self.threads;
+        let workers = threads.max(1).min(b.max(1));
+
+        let need_gram = t > 1 && self.routes.iter().any(|r| *r == NormRoute::Ghost);
+        let need_stream = self
+            .routes
+            .iter()
+            .zip(&self.store_psg)
+            .any(|(r, s)| *r == NormRoute::Inst && !s);
+        let mut gram_a = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut gram_g = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut stream = if need_stream {
+            self.arena.take(workers * self.max_dp())
+        } else {
+            Vec::new()
+        };
+        let mut bias_scratch = self.arena.take(workers * self.max_p());
+        let mut sq = self.arena.take(b);
+        let mut psg: Vec<Option<Vec<f32>>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let (d, p) = dims[l];
+            if self.store_psg[l] {
+                psg.push(Some(self.arena.take(b * d * p)));
+            } else {
+                psg.push(None);
+            }
+        }
+
+        // ---- single backward: cache g, norms inline ------------------
+        let mut gcache: Vec<Vec<f32>> = dims.iter().map(|&(_, p)| self.arena.take(rows * p)).collect();
+        let loss = {
+            let top = &mut gcache[nl - 1];
+            kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(top))
+        };
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            match (self.routes[l], psg[l].as_mut()) {
+                (NormRoute::Inst, Some(store)) => {
+                    kernels::psg_instantiate(&acts[l], &gcache[l], b, t, d, p, store, threads);
+                    kernels::sq_norms_from_psg(store, b, d * p, &mut sq, threads);
+                }
+                (NormRoute::Inst, None) => kernels::psg_norms_streaming(
+                    &acts[l], &gcache[l], b, t, d, p, &mut stream, &mut sq, threads,
+                ),
+                (NormRoute::Ghost, _) => kernels::ghost_norm(
+                    &acts[l], &gcache[l], b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads,
+                ),
+            }
+            kernels::bias_sq_norms(&gcache[l], b, t, p, &mut bias_scratch, &mut sq, threads);
+            if l > 0 {
+                let (lo, hi) = gcache.split_at_mut(l);
+                kernels::backward_data(&hi[0], &self.params[2 * l], &mut lo[l - 1], rows, d, p, threads);
+                kernels::relu_backward(&mut lo[l - 1], &acts[l]);
+            }
+        }
+
+        let mut cfac = self.arena.take(b);
+        kernels::clip_factors(&sq, clip, self.clip_kind, &mut cfac);
+        let mean_clip = cfac.iter().sum::<f32>() / b as f32;
+
+        // ---- book-kept clipped sums (no recompute) -------------------
+        let mut partials = self.arena.take(workers * self.max_dp());
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            match &psg[l] {
+                Some(store) => {
+                    kernels::weighted_sum_psg(store, &cfac, b, d, p, &mut grads[2 * l], threads)
+                }
+                None => kernels::weighted_grad(
+                    &acts[l],
+                    &gcache[l],
+                    Some(&cfac),
+                    b,
+                    t,
+                    d,
+                    p,
+                    &mut partials,
+                    &mut grads[2 * l],
+                    threads,
+                ),
+            }
+            kernels::bias_grad(&gcache[l], Some(&cfac), b, t, p, &mut grads[2 * l + 1]);
+        }
+
+        self.arena.give(partials);
+        self.arena.give(cfac);
+        self.arena.give_all(gcache);
+        for slot in psg.into_iter().flatten() {
+            self.arena.give(slot);
+        }
+        self.arena.give(sq);
+        self.arena.give(bias_scratch);
+        if need_stream {
+            self.arena.give(stream);
+        }
+        if need_gram {
+            self.arena.give(gram_g);
+            self.arena.give(gram_a);
+        }
+        Ok(StepOut {
+            loss: loss / rows as f32,
+            mean_clip,
+        })
+    }
+
+    fn update_params(&mut self, grads: &[Vec<f32>], noise: &[Vec<f32>], h: &StepHyper) -> Result<()> {
+        let n = self.params.len();
+        if grads.len() != n {
+            bail!("update got {} grad tensors, expected {n}", grads.len());
+        }
+        if !noise.is_empty() && noise.len() != n {
+            bail!("update got {} noise tensors, expected 0 or {n}", noise.len());
+        }
+        if noise.is_empty() && h.sigma_r != 0.0 {
+            // Refuse to silently run an unnoised "DP" step: the caller
+            // would charge epsilon for noise that was never injected.
+            bail!("sigma_r = {} but no noise tensors were supplied", h.sigma_r);
+        }
+        let adam = self.info.is_adam();
+        for k in 0..n {
+            if grads[k].len() != self.params[k].len() {
+                bail!(
+                    "grad tensor {k} has {} elements, expected {}",
+                    grads[k].len(),
+                    self.params[k].len()
+                );
+            }
+            let z = if noise.is_empty() { None } else { Some(noise[k].as_slice()) };
+            if adam {
+                kernels::adam_update(
+                    &mut self.params[k],
+                    &mut self.opt_m[k],
+                    &mut self.opt_v[k],
+                    &grads[k],
+                    z,
+                    h.lr,
+                    h.sigma_r,
+                    h.logical_batch,
+                    h.step,
+                );
+            } else {
+                kernels::sgd_update(&mut self.params[k], &grads[k], z, h.lr, h.sigma_r, h.logical_batch);
+            }
+        }
+        Ok(())
+    }
+
+    fn take_grad_bufs(&mut self) -> Vec<Vec<f32>> {
+        let sizes: Vec<usize> = self.params.iter().map(Vec::len).collect();
+        sizes.into_iter().map(|n| self.arena.take(n)).collect()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn strategy(&self) -> &str {
+        self.strategy.name()
+    }
+
+    fn init(&mut self, seed: u64) -> Result<()> {
+        let root = Xoshiro256::new(seed ^ 0x1A17_F00D);
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        for (l, &(d, p)) in dims.iter().enumerate() {
+            // He init for hidden (ReLU) layers; a damped head so initial
+            // logits are near-uniform (loss ~ ln C, like the artifacts).
+            let scale = if l + 1 < nl {
+                (2.0 / d as f32).sqrt()
+            } else {
+                0.05 * (1.0 / d as f32).sqrt()
+            };
+            let mut gs = GaussianSource::from_rng(root.fork(l as u64 + 1));
+            let w = &mut self.params[2 * l];
+            gs.fill_f32(w);
+            for v in w.iter_mut() {
+                *v *= scale;
+            }
+            for v in self.params[2 * l + 1].iter_mut() {
+                *v = 0.0;
+            }
+        }
+        for t in self.opt_m.iter_mut().chain(self.opt_v.iter_mut()) {
+            for v in t.iter_mut() {
+                *v = 0.0;
+            }
+        }
+        self.initialized = true;
+        Ok(())
+    }
+
+    fn eval_loss(&mut self, x: &BatchX, y: &[i32]) -> Result<f32> {
+        let x = self.features_of(x)?;
+        self.check_batch(x, y)?;
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let mut acts = self.forward(x);
+        let loss = kernels::softmax_xent(&acts[nl], y, rows, dims[nl - 1].1, None);
+        while let Some(a) = acts.pop() {
+            self.arena.give(a);
+        }
+        Ok(loss / rows as f32)
+    }
+
+    fn step(&mut self, x: &BatchX, y: &[i32], noise: &[Vec<f32>], h: &StepHyper) -> Result<StepOut> {
+        let x = self.features_of(x)?;
+        self.arena.begin_step();
+        let mut grads = self.take_grad_bufs();
+        let out = self.compute_grads(x, y, h.clip, &mut grads);
+        let upd = match &out {
+            Ok(_) => self.update_params(&grads, noise, h),
+            Err(_) => Ok(()),
+        };
+        self.arena.give_all(grads);
+        let out = out?;
+        upd?;
+        self.last_fresh = self.arena.fresh_allocs();
+        debug_assert_eq!(self.arena.outstanding(), 0, "arena leak in step");
+        Ok(out)
+    }
+
+    fn clipped_grads(&mut self, x: &BatchX, y: &[i32], clip: f32) -> Result<(Vec<Vec<f32>>, StepOut)> {
+        let x = self.features_of(x)?;
+        self.arena.begin_step();
+        // The gradient sums are handed to the caller (host-side
+        // accumulation), so they are plain Vecs rather than arena
+        // buffers — cloning out of the arena would cost the same
+        // allocation plus an extra copy.
+        let mut grads: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let out = self.compute_grads(x, y, clip, &mut grads)?;
+        self.last_fresh = self.arena.fresh_allocs();
+        Ok((grads, out))
+    }
+
+    fn apply_update(&mut self, grads: &[Vec<f32>], noise: &[Vec<f32>], h: &StepHyper) -> Result<()> {
+        self.update_params(grads, noise, h)
+    }
+
+    fn state(&self) -> Result<Vec<Vec<f32>>> {
+        let mut out: Vec<Vec<f32>> = self.params.clone();
+        out.extend(self.opt_m.iter().cloned());
+        out.extend(self.opt_v.iter().cloned());
+        Ok(out)
+    }
+
+    fn load_state(&mut self, tensors: Vec<Vec<f32>>) -> Result<()> {
+        let n = self.params.len();
+        let want_full = if self.info.is_adam() { 3 * n } else { n };
+        if tensors.len() != n && tensors.len() != want_full {
+            bail!(
+                "load_state got {} tensors, expected {n} (params) or {want_full} (full state)",
+                tensors.len()
+            );
+        }
+        for (k, t) in tensors.iter().enumerate() {
+            let slot = k % n;
+            let want = self.params[slot].len();
+            if t.len() != want {
+                bail!("state tensor {k} has {} elements, expected {want}", t.len());
+            }
+        }
+        let full = tensors.len() == want_full && self.info.is_adam();
+        let mut it = tensors.into_iter();
+        for slot in self.params.iter_mut() {
+            *slot = it.next().unwrap();
+        }
+        if full {
+            for slot in self.opt_m.iter_mut() {
+                *slot = it.next().unwrap();
+            }
+            for slot in self.opt_v.iter_mut() {
+                *slot = it.next().unwrap();
+            }
+        }
+        self.initialized = true;
+        Ok(())
+    }
+
+    fn alloc_stats(&self) -> AllocStats {
+        AllocStats {
+            fresh_allocs_last_step: self.last_fresh,
+            arena_bytes: self.arena.total_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny_spec() -> NativeSpec {
+        NativeSpec {
+            name: "tiny".into(),
+            batch: 4,
+            seq: 1,
+            d_in: 8,
+            hidden: vec![12],
+            n_classes: 3,
+            optimizer: "sgd".into(),
+            clip_fn: "automatic".into(),
+        }
+    }
+
+    fn batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
+        let rows = spec.batch * spec.seq;
+        let mut rng = Xoshiro256::new(seed);
+        let x: Vec<f32> = (0..rows * spec.d_in).map(|_| rng.next_f32() - 0.5).collect();
+        let y: Vec<i32> = (0..rows)
+            .map(|_| rng.next_below(spec.n_classes as u64) as i32)
+            .collect();
+        (BatchX::F32(x), y)
+    }
+
+    fn hyper() -> StepHyper {
+        StepHyper {
+            lr: 0.1,
+            clip: 1.0,
+            sigma_r: 0.0,
+            logical_batch: 4.0,
+            step: 1.0,
+        }
+    }
+
+    #[test]
+    fn step_is_deterministic() {
+        let (x, y) = batch_for(&tiny_spec(), 7);
+        let run = || -> Vec<Vec<f32>> {
+            let mut bk = NativeBackend::new(tiny_spec(), Strategy::Bk, 2).unwrap();
+            bk.init(3).unwrap();
+            bk.step(&x, &y, &[], &hyper()).unwrap();
+            bk.state().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed + batch must give bitwise-equal state");
+    }
+
+    #[test]
+    fn arena_reaches_steady_state() {
+        for strat in [
+            Strategy::NonDp,
+            Strategy::Opacus,
+            Strategy::FastGradClip,
+            Strategy::GhostClip,
+            Strategy::Bk,
+            Strategy::BkMixOpt,
+        ] {
+            let (x, y) = batch_for(&tiny_spec(), 9);
+            let mut be = NativeBackend::new(tiny_spec(), strat, 2).unwrap();
+            be.init(1).unwrap();
+            be.step(&x, &y, &[], &hyper()).unwrap();
+            assert!(be.alloc_stats().fresh_allocs_last_step > 0, "cold step allocates");
+            for _ in 0..3 {
+                be.step(&x, &y, &[], &hyper()).unwrap();
+                assert_eq!(
+                    be.alloc_stats().fresh_allocs_last_step,
+                    0,
+                    "{strat:?}: steady-state step must not allocate"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let spec = tiny_spec();
+        let (x, y) = batch_for(&spec, 11);
+        let mut be = NativeBackend::new(spec, Strategy::Bk, 2).unwrap();
+        be.init(5).unwrap();
+        let l0 = be.eval_loss(&x, &y).unwrap();
+        let mut h = hyper();
+        h.lr = 0.5;
+        for _ in 0..20 {
+            be.step(&x, &y, &[], &h).unwrap();
+        }
+        let l1 = be.eval_loss(&x, &y).unwrap();
+        assert!(l1 < l0, "loss should fall on a fixed batch: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_tokens() {
+        let mut be = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        be.init(0).unwrap();
+        let bad_x = BatchX::F32(vec![0.0; 5]);
+        assert!(be.step(&bad_x, &[0; 4], &[], &hyper()).is_err());
+        let (x, _) = batch_for(&tiny_spec(), 1);
+        assert!(be.step(&x, &[0; 3], &[], &hyper()).is_err());
+        let tok = BatchX::I32(vec![0; 32]);
+        assert!(be.eval_loss(&tok, &[0; 4]).is_err());
+    }
+
+    #[test]
+    fn state_roundtrip_restores_params() {
+        let (x, y) = batch_for(&tiny_spec(), 2);
+        let mut a = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        a.init(8).unwrap();
+        a.step(&x, &y, &[], &hyper()).unwrap();
+        let snap = a.state().unwrap();
+        let la = a.eval_loss(&x, &y).unwrap();
+        let mut b = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        b.load_state(snap).unwrap();
+        let lb = b.eval_loss(&x, &y).unwrap();
+        assert_eq!(la, lb);
+        let mut c = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        assert!(c.load_state(vec![vec![0.0; 1]]).is_err());
+    }
+}

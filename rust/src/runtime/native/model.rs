@@ -1,0 +1,206 @@
+//! Native model specs: generalized-linear stacks (MLPs over flat or
+//! sequential inputs) executed entirely by the native kernels — no AOT
+//! artifacts, no manifest.
+//!
+//! A spec is a shape recipe: input width `d_in`, hidden widths, class
+//! count, and the paper's `T` (tokens per sample; 1 for plain MLPs).
+//! Sequential specs (`seq > 1`) classify every token, so per-sample
+//! gradients sum over `T` and the ghost-norm Gram path is exercised
+//! end-to-end; the mixed ghost/per-sample decision is evaluated per
+//! layer from the complexity engine on these dims.
+
+use crate::arch::{LayerDims, LayerKind};
+use crate::runtime::ModelInfo;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct NativeSpec {
+    pub name: String,
+    /// Samples per physical batch (the paper's B).
+    pub batch: usize,
+    /// Tokens per sample (the paper's T; 1 for flat inputs).
+    pub seq: usize,
+    /// Input feature width d.
+    pub d_in: usize,
+    /// Hidden layer widths (ReLU between layers).
+    pub hidden: Vec<usize>,
+    pub n_classes: usize,
+    /// "sgd" | "adam".
+    pub optimizer: String,
+    /// "abadi" | "automatic" | "flat".
+    pub clip_fn: String,
+}
+
+impl NativeSpec {
+    /// Per-layer (d, p) width pairs, input to logits.
+    pub fn layer_widths(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::with_capacity(self.hidden.len() + 1);
+        let mut d = self.d_in;
+        for &h in &self.hidden {
+            dims.push((d, h));
+            d = h;
+        }
+        dims.push((d, self.n_classes));
+        dims
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.hidden.len() + 1
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layer_widths().iter().map(|&(d, p)| d * p + p).sum()
+    }
+
+    /// Layer dims in the complexity engine's (T, d, p) convention, used
+    /// for the mixed ghost/per-sample dispatch (`ghost_preferred`).
+    pub fn arch_layers(&self) -> Vec<LayerDims> {
+        self.layer_widths()
+            .iter()
+            .enumerate()
+            .map(|(l, &(d, p))| LayerDims {
+                kind: LayerKind::Linear,
+                name: format!("fc{l}"),
+                t: self.seq as u64,
+                d: d as u64,
+                p: p as u64,
+            })
+            .collect()
+    }
+
+    /// Backend-neutral description (param order: w0, b0, w1, b1, ...).
+    pub fn info(&self) -> ModelInfo {
+        let mut param_names = Vec::new();
+        let mut param_shapes = BTreeMap::new();
+        for (l, (d, p)) in self.layer_widths().into_iter().enumerate() {
+            let wn = format!("w{l}");
+            let bn = format!("b{l}");
+            param_shapes.insert(wn.clone(), vec![d, p]);
+            param_shapes.insert(bn.clone(), vec![p]);
+            param_names.push(wn);
+            param_names.push(bn);
+        }
+        ModelInfo {
+            name: self.name.clone(),
+            kind: if self.seq > 1 { "seqmlp" } else { "mlp" }.to_string(),
+            batch: self.batch,
+            seq: self.seq,
+            d_in: self.d_in,
+            n_classes: self.n_classes,
+            optimizer: self.optimizer.clone(),
+            clip_fn: self.clip_fn.clone(),
+            param_names,
+            param_shapes,
+            n_params: self.n_params(),
+        }
+    }
+
+    /// Built-in model registry (the native analogue of `artifacts/`).
+    pub fn registry() -> Vec<NativeSpec> {
+        vec![
+            // The seed MLP config: the bench acceptance target.
+            NativeSpec {
+                name: "mlp_e2e".into(),
+                batch: 32,
+                seq: 1,
+                d_in: 128,
+                hidden: vec![256, 256],
+                n_classes: 10,
+                optimizer: "sgd".into(),
+                clip_fn: "automatic".into(),
+            },
+            // Wider variant where per-sample instantiation gets expensive
+            // (Opacus memory blows up; BK does not).
+            NativeSpec {
+                name: "mlp_wide".into(),
+                batch: 32,
+                seq: 1,
+                d_in: 512,
+                hidden: vec![1024, 1024],
+                n_classes: 10,
+                optimizer: "sgd".into(),
+                clip_fn: "automatic".into(),
+            },
+            // Sequential per-token classifier: T = 32 makes the mixed
+            // dispatch non-trivial (2T^2 = 2048 straddles the layer pd's).
+            NativeSpec {
+                name: "seq_e2e".into(),
+                batch: 16,
+                seq: 32,
+                d_in: 64,
+                hidden: vec![128, 128],
+                n_classes: 10,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+            },
+            // Larger sequence workload for benching the Gram kernels.
+            NativeSpec {
+                name: "seq_bench".into(),
+                batch: 32,
+                seq: 64,
+                d_in: 128,
+                hidden: vec![256, 256],
+                n_classes: 16,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<NativeSpec> {
+        Self::registry().into_iter().find(|s| s.name == name)
+    }
+}
+
+pub fn registry_names() -> Vec<String> {
+    NativeSpec::registry().into_iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complexity::ghost_preferred;
+
+    #[test]
+    fn registry_specs_are_consistent() {
+        for spec in NativeSpec::registry() {
+            let info = spec.info();
+            assert_eq!(info.param_names.len(), 2 * spec.n_layers());
+            let total: usize = info
+                .param_names
+                .iter()
+                .map(|n| info.param_shapes[n].iter().product::<usize>())
+                .sum();
+            assert_eq!(total, spec.n_params(), "{}", spec.name);
+            assert!(crate::runtime::native::kernels::ClipKind::parse(&spec.clip_fn).is_some());
+            assert!(spec.optimizer == "sgd" || spec.optimizer == "adam");
+        }
+    }
+
+    #[test]
+    fn mlp_e2e_matches_seed_shape() {
+        let s = NativeSpec::by_name("mlp_e2e").unwrap();
+        assert_eq!(s.batch, 32);
+        assert_eq!(s.d_in, 128);
+        assert_eq!(s.n_classes, 10);
+        assert_eq!(s.layer_widths(), vec![(128, 256), (256, 256), (256, 10)]);
+        assert_eq!(s.n_params(), 128 * 256 + 256 + 256 * 256 + 256 + 256 * 10 + 10);
+    }
+
+    #[test]
+    fn seq_e2e_mixes_routes() {
+        // The point of the seq_e2e dims: at T = 32 the wide layers prefer
+        // ghost norms and the narrow head prefers instantiation.
+        let s = NativeSpec::by_name("seq_e2e").unwrap();
+        let layers = s.arch_layers();
+        assert!(ghost_preferred(&layers[0]), "64x128 layer should ghost");
+        assert!(ghost_preferred(&layers[1]), "128x128 layer should ghost");
+        assert!(!ghost_preferred(&layers[2]), "128x10 head should instantiate");
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(NativeSpec::by_name("resnet9000").is_none());
+        assert!(registry_names().contains(&"mlp_e2e".to_string()));
+    }
+}

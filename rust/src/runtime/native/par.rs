@@ -1,0 +1,185 @@
+//! Thread fan-out for the native kernels.
+//!
+//! The environment has no rayon, so parallelism is built on
+//! `std::thread::scope`: each parallel region splits its *output* buffer
+//! into disjoint `&mut` chunks (rows of a matrix, samples of a batch) and
+//! hands one chunk per worker. Inputs are shared as `&[f32]`. This keeps
+//! every kernel data-race-free by construction — no worker ever writes
+//! memory another can see — and makes results deterministic for a fixed
+//! thread count (reductions merge per-worker partials in worker order).
+//!
+//! Spawn cost is a few microseconds per region; the kernels only fan out
+//! when the work comfortably amortizes it (see `MIN_ROWS_PER_THREAD`).
+
+/// Below this many rows per worker a parallel region runs serially.
+const MIN_ROWS_PER_THREAD: usize = 8;
+
+/// Default worker count: one per available core, capped to keep spawn
+/// overhead sane on very wide machines.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Split `out` into per-worker chunks of whole rows (`row_w` elements per
+/// row) and run `f(first_row, chunk)` on each chunk, in parallel when
+/// `rows` is large enough. `f` sees disjoint `&mut` windows of `out`.
+pub fn par_rows<F>(out: &mut [f32], rows: usize, row_w: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_w);
+    let t = threads.max(1).min(rows.max(1));
+    if t == 1 || rows < 2 * MIN_ROWS_PER_THREAD {
+        f(0, out);
+        return;
+    }
+    let rows_per = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(rows_per * row_w).enumerate() {
+            let f = &f;
+            s.spawn(move || f(ci * rows_per, chunk));
+        }
+    });
+}
+
+/// Fan a batch reduction out over workers: `out_chunks` is split by
+/// `chunk_out` rows (of width `out_w`), `scratch` provides one disjoint
+/// `scratch_w`-sized accumulator per worker. `f(first_item, out_chunk,
+/// scratch_chunk)` runs once per worker. Used by kernels whose output is
+/// per-sample (norms) or that reduce over the batch into per-worker
+/// partial buffers.
+pub fn par_batch<F>(
+    out: &mut [f32],
+    items: usize,
+    out_w: usize,
+    scratch: &mut [f32],
+    scratch_w: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), items * out_w);
+    let t = threads.max(1).min(items.max(1));
+    if t == 1 || items < 2 {
+        let sw = scratch_w.min(scratch.len());
+        f(0, items, out, &mut scratch[..sw]);
+        return;
+    }
+    debug_assert!(scratch.len() >= t * scratch_w);
+    let items_per = (items + t - 1) / t;
+    std::thread::scope(|s| {
+        let mut rest = scratch;
+        for (ci, chunk) in out.chunks_mut(items_per * out_w).enumerate() {
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(scratch_w);
+            rest = tail;
+            let f = &f;
+            let n_items = chunk.len() / out_w.max(1);
+            s.spawn(move || f(ci * items_per, n_items, chunk, mine));
+        }
+    });
+}
+
+/// Reduce over `items` with one disjoint `scratch_w`-sized accumulator
+/// per worker: `f(first_item, n_items, accumulator)` runs once per
+/// worker. The caller merges the per-worker accumulators afterwards (in
+/// worker order, keeping the reduction deterministic).
+pub fn par_reduce<F>(items: usize, scratch: &mut [f32], scratch_w: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let t = threads.max(1).min(items.max(1));
+    if t == 1 {
+        let sw = scratch_w.min(scratch.len());
+        f(0, items, &mut scratch[..sw]);
+        return;
+    }
+    debug_assert!(scratch.len() >= t * scratch_w);
+    let per = (items + t - 1) / t;
+    std::thread::scope(|s| {
+        let mut rest = scratch;
+        let mut i0 = 0;
+        while i0 < items {
+            let n = per.min(items - i0);
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(scratch_w);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(i0, n, mine));
+            i0 += n;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_rows_covers_all_rows() {
+        let rows = 103;
+        let w = 7;
+        let mut out = vec![0f32; rows * w];
+        par_rows(&mut out, rows, w, 4, |r0, chunk| {
+            for (ri, row) in chunk.chunks_mut(w).enumerate() {
+                for x in row.iter_mut() {
+                    *x = (r0 + ri) as f32;
+                }
+            }
+        });
+        for r in 0..rows {
+            for j in 0..w {
+                assert_eq!(out[r * w + j], r as f32, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_serial_small() {
+        let mut out = vec![0f32; 3 * 2];
+        par_rows(&mut out, 3, 2, 8, |r0, chunk| {
+            assert_eq!(r0, 0);
+            assert_eq!(chunk.len(), 6);
+            chunk[0] = 1.0;
+        });
+        assert_eq!(out[0], 1.0);
+    }
+
+    #[test]
+    fn par_batch_reduces_with_scratch() {
+        // Sum i..i+1 per item into out, and count items per worker in
+        // scratch slot 0 — verifies disjoint scratch distribution.
+        let items = 37;
+        let threads = 5;
+        let mut out = vec![0f32; items];
+        let mut scratch = vec![0f32; threads];
+        par_batch(&mut out, items, 1, &mut scratch, 1, threads, |i0, n, o, s| {
+            for (k, slot) in o.iter_mut().enumerate() {
+                *slot = (i0 + k) as f32;
+            }
+            s[0] = n as f32;
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+        let counted: f32 = scratch.iter().sum();
+        assert_eq!(counted, items as f32);
+    }
+
+    #[test]
+    fn par_reduce_partials_sum_to_total() {
+        // Sum of 0..items via per-worker partials.
+        let items = 101usize;
+        let threads = 4;
+        let mut scratch = vec![0f32; threads];
+        par_reduce(items, &mut scratch, 1, threads, |i0, n, acc| {
+            for i in i0..i0 + n {
+                acc[0] += i as f32;
+            }
+        });
+        let total: f32 = scratch.iter().sum();
+        assert_eq!(total, (items * (items - 1) / 2) as f32);
+    }
+}

@@ -1,0 +1,458 @@
+//! PJRT artifact executor — the original XLA-backed runtime, demoted
+//! behind the `xla-runtime` feature (the `xla` crate is not buildable
+//! offline; see DESIGN.md "Re-enabling the PJRT backend").
+//!
+//! Loads AOT artifacts (HLO text + manifest.json, written by
+//! `python/compile/aot.py`) and executes them on the PJRT CPU client:
+//!  * `<model>__init.hlo.txt`            — seed -> params
+//!  * `<model>__eval.hlo.txt`            — params, x, y -> loss
+//!  * `<model>__step_<strategy>.hlo.txt` — params, [m, v], x, y,
+//!                                         [noise...], scalars -> params',
+//!                                         [m', v'], metrics
+//!  * `<model>__clipgrad_<strategy>`     — params, x, y, R -> clipped sums
+//!  * `<model>__apply`                   — params, [m, v], grads, noise,
+//!                                         scalars -> params', [m', v']
+//! All computations are lowered with return_tuple=True; the output tuple
+//! is decomposed by the manifest's descriptors. [`PjrtBackend`] adapts
+//! this executor to the [`Backend`](super::Backend) trait.
+
+use super::manifest::{ArtifactMeta, Manifest, ModelMeta};
+use super::{AllocStats, Backend, BatchX, ModelInfo, StepHyper, StepOut};
+use crate::error::{Context, Result};
+use crate::{anyhow, bail};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A compiled-executable cache keyed by artifact file name.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile seconds (reported by the coordinator).
+    pub compile_secs: RefCell<f64>,
+}
+
+impl Runtime {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)
+            .map_err(|e| anyhow!("loading manifest from {}: {e}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.manifest.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.manifest.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact(&self, model: &str, kind: &str, strategy: Option<&str>) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.model == model && a.kind == kind && a.strategy.as_deref() == strategy)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact model={model} kind={kind} strategy={strategy:?} not found \
+                     (re-run `make artifacts`?)"
+                )
+            })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, art: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&art.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&art.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", art.file))?,
+        );
+        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(art.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the decomposed
+    /// output tuple, validated against the manifest.
+    pub fn execute(&self, art: &ArtifactMeta, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                art.file,
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(art)?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", art.file))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = tuple.to_tuple().context("decomposing result tuple")?;
+        if outs.len() != art.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, executable returned {}",
+                art.file,
+                art.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Build a f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_f32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping f32 literal")
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_i32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping i32 literal")
+}
+
+/// Scalar literals (0-d).
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Read back a f32 literal as a host vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("reading f32 literal")
+}
+
+/// Read a scalar f32 output.
+pub fn scalar_of(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("reading f32 scalar")
+}
+
+/// Backend-neutral view of a manifest model.
+pub fn model_info(meta: &ModelMeta) -> ModelInfo {
+    let spec = &meta.spec;
+    let kind = spec.opt_str("kind", "mlp").to_string();
+    // Conv specs describe images (hw, c_in); flatten for the vector
+    // data pipeline like the pre-Backend coordinator did.
+    let d_in = if kind == "conv" {
+        let hw = spec.opt_i64("hw", 32) as usize;
+        let c = spec.opt_i64("c_in", 3) as usize;
+        hw * hw * c
+    } else {
+        spec.opt_i64("d_in", 0) as usize
+    };
+    ModelInfo {
+        name: meta.name.clone(),
+        kind,
+        batch: meta.batch,
+        seq: spec.opt_i64("seq", 1) as usize,
+        d_in,
+        n_classes: spec.opt_i64("n_classes", spec.opt_i64("vocab", 10)) as usize,
+        optimizer: meta.optimizer.clone(),
+        clip_fn: meta.clip_fn.clone(),
+        param_names: meta.param_names.clone(),
+        param_shapes: meta.param_shapes.clone().into_iter().collect(),
+        n_params: meta.n_params,
+    }
+}
+
+/// [`Backend`] adapter over the artifact executor: owns the runtime,
+/// host-resident parameter/optimizer literals, and the frozen tensors.
+pub struct PjrtBackend {
+    rt: Runtime,
+    meta: ModelMeta,
+    info: ModelInfo,
+    strategy: String,
+    params: Vec<xla::Literal>,
+    frozen: Vec<xla::Literal>,
+    opt_m: Vec<xla::Literal>,
+    opt_v: Vec<xla::Literal>,
+}
+
+impl PjrtBackend {
+    pub fn load(cfg: &crate::config::TrainConfig) -> Result<Self> {
+        let rt = Runtime::load(cfg.artifacts_dir.clone())?;
+        let meta = rt.model(&cfg.model)?.clone();
+        let info = model_info(&meta);
+        Ok(Self {
+            rt,
+            meta,
+            info,
+            strategy: cfg.strategy.clone(),
+            params: Vec::new(),
+            frozen: Vec::new(),
+            opt_m: Vec::new(),
+            opt_v: Vec::new(),
+        })
+    }
+
+    fn zeros_like_params(&self) -> Result<Vec<xla::Literal>> {
+        self.meta
+            .param_names
+            .iter()
+            .map(|name| {
+                let shape = self.meta.param_shape(name).map_err(|e| anyhow!(e))?;
+                let n: usize = shape.iter().product();
+                literal_f32(&vec![0f32; n], shape)
+            })
+            .collect()
+    }
+
+    fn noise_literals(&self, noise: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        if noise.len() != self.meta.param_names.len() {
+            bail!(
+                "got {} noise tensors, expected {}",
+                noise.len(),
+                self.meta.param_names.len()
+            );
+        }
+        noise
+            .iter()
+            .zip(&self.meta.param_names)
+            .map(|(z, name)| literal_f32(z, self.meta.param_shape(name).map_err(|e| anyhow!(e))?))
+            .collect()
+    }
+
+    fn batch_literals(&self, art: &ArtifactMeta, x: &BatchX, y: &[i32])
+        -> Result<(xla::Literal, xla::Literal)> {
+        let xi = art.input_index("x").context("artifact missing x input")?;
+        let yi = art.input_index("y").context("artifact missing y input")?;
+        let xs = &art.inputs[xi].shape;
+        let ys = &art.inputs[yi].shape;
+        let xl = match x {
+            BatchX::F32(v) => literal_f32(v, xs)?,
+            BatchX::I32(v) => literal_i32(v, xs)?,
+        };
+        Ok((xl, literal_i32(y, ys)?))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn strategy(&self) -> &str {
+        &self.strategy
+    }
+
+    fn init(&mut self, seed: u64) -> Result<()> {
+        let init = self.rt.artifact(&self.meta.name, "init", None)?.clone();
+        let seed = scalar_i32(seed as i32);
+        let outs = self.rt.execute(&init, &[&seed])?;
+        let n_tr = self.meta.param_names.len();
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        self.frozen = it.collect();
+        if self.meta.is_adam() {
+            self.opt_m = self.zeros_like_params()?;
+            self.opt_v = self.zeros_like_params()?;
+        }
+        Ok(())
+    }
+
+    fn eval_loss(&mut self, x: &BatchX, y: &[i32]) -> Result<f32> {
+        let eval = self.rt.artifact(&self.meta.name, "eval", None)?.clone();
+        let (xl, yl) = self.batch_literals(&eval, x, y)?;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.extend(self.frozen.iter());
+        args.push(&xl);
+        args.push(&yl);
+        scalar_of(&self.rt.execute(&eval, &args)?[0])
+    }
+
+    fn step(&mut self, x: &BatchX, y: &[i32], noise: &[Vec<f32>], h: &StepHyper) -> Result<StepOut> {
+        let art = self
+            .rt
+            .artifact(&self.meta.name, "step", Some(&self.strategy))?
+            .clone();
+        let (xl, yl) = self.batch_literals(&art, x, y)?;
+        let noise_lits = if noise.is_empty() {
+            Vec::new()
+        } else {
+            self.noise_literals(noise)?
+        };
+        let scalars = [
+            scalar_f32(h.lr),
+            scalar_f32(h.clip),
+            scalar_f32(h.sigma_r),
+            scalar_f32(h.logical_batch),
+            scalar_f32(h.step),
+        ];
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.extend(self.frozen.iter());
+        if self.meta.is_adam() {
+            args.extend(self.opt_m.iter());
+            args.extend(self.opt_v.iter());
+        }
+        args.push(&xl);
+        args.push(&yl);
+        args.extend(noise_lits.iter());
+        args.extend(scalars.iter());
+
+        let outs = self.rt.execute(&art, &args)?;
+        let loss = scalar_of(&outs[art.output_index("metric:loss").context("loss output")?])?;
+        let mean_clip = art
+            .output_index("metric:mean_clip")
+            .map(|i| scalar_of(&outs[i]).unwrap_or(1.0))
+            .unwrap_or(1.0);
+        let n_tr = self.meta.param_names.len();
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        if self.meta.is_adam() {
+            self.opt_m = (&mut it).take(n_tr).collect();
+            self.opt_v = (&mut it).take(n_tr).collect();
+        }
+        Ok(StepOut { loss, mean_clip })
+    }
+
+    fn clipped_grads(&mut self, x: &BatchX, y: &[i32], clip: f32)
+        -> Result<(Vec<Vec<f32>>, StepOut)> {
+        let cg = self
+            .rt
+            .artifact(&self.meta.name, "clipgrad", Some(&self.strategy))?
+            .clone();
+        let (xl, yl) = self.batch_literals(&cg, x, y)?;
+        let clip_lit = scalar_f32(clip);
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.extend(self.frozen.iter());
+        args.push(&xl);
+        args.push(&yl);
+        args.push(&clip_lit);
+        let outs = self.rt.execute(&cg, &args)?;
+        let loss = scalar_of(&outs[cg.output_index("metric:loss").context("loss output")?])?;
+        let mean_clip = scalar_of(&outs[cg.output_index("metric:mean_clip").context("clip output")?])?;
+        let n_tr = self.meta.param_names.len();
+        let grads: Vec<Vec<f32>> = outs[..n_tr]
+            .iter()
+            .map(to_vec_f32)
+            .collect::<Result<_>>()?;
+        Ok((grads, StepOut { loss, mean_clip }))
+    }
+
+    fn apply_update(&mut self, grads: &[Vec<f32>], noise: &[Vec<f32>], h: &StepHyper) -> Result<()> {
+        let apply = self.rt.artifact(&self.meta.name, "apply", None)?.clone();
+        let n_tr = self.meta.param_names.len();
+        if grads.len() != n_tr {
+            bail!("apply got {} grad tensors, expected {n_tr}", grads.len());
+        }
+        let grad_lits: Vec<xla::Literal> = grads
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                literal_f32(
+                    g,
+                    self.meta
+                        .param_shape(&self.meta.param_names[i])
+                        .map_err(|e| anyhow!(e))?,
+                )
+            })
+            .collect::<Result<_>>()?;
+        let noise_lits = if noise.is_empty() {
+            self.zeros_like_params()?
+        } else {
+            self.noise_literals(noise)?
+        };
+        let scalars = [
+            scalar_f32(h.lr),
+            scalar_f32(h.sigma_r),
+            scalar_f32(h.logical_batch),
+            scalar_f32(h.step),
+        ];
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        if self.meta.is_adam() {
+            args.extend(self.opt_m.iter());
+            args.extend(self.opt_v.iter());
+        }
+        args.extend(grad_lits.iter());
+        args.extend(noise_lits.iter());
+        args.extend(scalars.iter());
+        let outs = self.rt.execute(&apply, &args)?;
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        if self.meta.is_adam() {
+            self.opt_m = (&mut it).take(n_tr).collect();
+            self.opt_v = (&mut it).take(n_tr).collect();
+        }
+        Ok(())
+    }
+
+    fn state(&self) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        for lit in self.params.iter().chain(self.opt_m.iter()).chain(self.opt_v.iter()) {
+            out.push(to_vec_f32(lit)?);
+        }
+        Ok(out)
+    }
+
+    fn load_state(&mut self, tensors: Vec<Vec<f32>>) -> Result<()> {
+        let n_tr = self.meta.param_names.len();
+        let mut lits = Vec::with_capacity(tensors.len());
+        for (i, data) in tensors.iter().enumerate() {
+            let name = &self.meta.param_names[i % n_tr];
+            lits.push(literal_f32(
+                data,
+                self.meta.param_shape(name).map_err(|e| anyhow!(e))?,
+            )?);
+        }
+        let mut it = lits.into_iter();
+        self.params = (&mut it).take(n_tr).collect();
+        if self.meta.is_adam() {
+            self.opt_m = (&mut it).take(n_tr).collect();
+            self.opt_v = (&mut it).take(n_tr).collect();
+        }
+        Ok(())
+    }
+
+    fn compile_secs(&self) -> f64 {
+        *self.rt.compile_secs.borrow()
+    }
+
+    fn alloc_stats(&self) -> AllocStats {
+        AllocStats::default()
+    }
+}

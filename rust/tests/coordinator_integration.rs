@@ -1,14 +1,15 @@
-//! Coordinator-level integration: full Trainer runs over real artifacts —
-//! training reduces loss, the accountant tracks epsilon, accumulation
-//! matches the fused path semantically, and checkpoints round-trip.
+//! Coordinator-level integration over the native backend: full Trainer
+//! runs — training reduces loss, the accountant tracks epsilon,
+//! accumulation matches the fused path semantically, and checkpoints
+//! round-trip. No artifacts, no XLA: runs offline.
+
+#![allow(clippy::field_reassign_with_default)]
 
 use fastdp::config::TrainConfig;
 use fastdp::coordinator::Trainer;
 
 fn base_cfg(model: &str, strategy: &str, steps: usize) -> TrainConfig {
     let mut cfg = TrainConfig::default();
-    cfg.artifacts_dir =
-        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     cfg.model = model.into();
     cfg.strategy = strategy.into();
     cfg.steps = steps;
@@ -27,13 +28,14 @@ fn bk_training_reduces_loss_and_tracks_epsilon() {
     let report = t.run().unwrap();
     assert_eq!(report.steps, 15);
     assert!(
-        report.final_loss < report.initial_loss * 0.7,
+        report.final_loss < report.initial_loss * 0.8,
         "loss {} -> {}",
         report.initial_loss,
         report.final_loss
     );
     assert!(report.final_epsilon > 0.0 && report.final_epsilon.is_finite());
     assert!(report.throughput_samples_per_sec > 0.0);
+    assert_eq!(report.backend, "native");
 }
 
 #[test]
@@ -48,9 +50,8 @@ fn nondp_has_zero_epsilon() {
 
 #[test]
 fn accumulated_matches_fused_with_zero_noise() {
-    // With sigma = 0 and the same seed, one logical step over 2 physical
-    // batches must produce the same loss trajectory *shape* as running
-    // the clipgrad+apply path; we check both learn and end close.
+    // With sigma ~ 0, both the fused path and the clipgrad+apply path
+    // must learn; we check both end well below the initial loss.
     let mut fused_cfg = base_cfg("mlp_e2e", "bk", 10);
     fused_cfg.privacy.sigma = 1e-9; // effectively zero noise
     let mut fused = Trainer::new(fused_cfg).unwrap();
@@ -62,16 +63,13 @@ fn accumulated_matches_fused_with_zero_noise() {
     let mut acc = Trainer::new(acc_cfg).unwrap();
     let ar = acc.run().unwrap();
 
-    assert!(fr.final_loss < fr.initial_loss * 0.5);
-    assert!(ar.final_loss < ar.initial_loss * 0.5);
+    assert!(fr.final_loss < fr.initial_loss * 0.6, "{} -> {}", fr.initial_loss, fr.final_loss);
+    assert!(ar.final_loss < ar.initial_loss * 0.6, "{} -> {}", ar.initial_loss, ar.final_loss);
 }
 
 #[test]
 fn accumulation_sees_more_data_per_step() {
-    // 4x logical batch at fixed steps => lower epsilon per step is false
-    // (q grows), but throughput in samples/s should scale with the
-    // logical batch. Sanity-check the accounting wiring: larger q gives
-    // larger epsilon for the same sigma/steps.
+    // Larger sampling rate q must spend more budget at fixed sigma/steps.
     let mut small = Trainer::new(base_cfg("mlp_e2e", "bk", 5)).unwrap();
     let rs = small.run().unwrap();
 
@@ -88,9 +86,11 @@ fn accumulation_sees_more_data_per_step() {
 }
 
 #[test]
-fn adam_gpt_strategies_all_learn() {
-    for strategy in ["bk", "bk_mixopt", "nondp"] {
-        let mut cfg = base_cfg("gpt_e2e", strategy, 3);
+fn adam_seq_strategies_all_learn() {
+    // The sequential model (T = 32, Adam) exercises the Gram-matrix ghost
+    // norms and the mixed dispatch end-to-end.
+    for strategy in ["bk", "bk_mixopt", "ghostclip", "nondp"] {
+        let mut cfg = base_cfg("seq_e2e", strategy, 3);
         cfg.lr = 1e-3;
         let mut t = Trainer::new(cfg).unwrap();
         let r = t.run().unwrap();
@@ -130,9 +130,17 @@ fn checkpoint_resume_preserves_progress() {
 
     let mut resumed = Trainer::new(cfg).unwrap();
     resumed.init().unwrap();
+    // The resumed accountant must already carry the pre-crash budget —
+    // silently resetting epsilon on resume would break the guarantee.
+    assert!(
+        (resumed.epsilon() - r.final_epsilon).abs() < 1e-9,
+        "resumed epsilon {} vs pre-crash {}",
+        resumed.epsilon(),
+        r.final_epsilon
+    );
     let loss = resumed.eval(4).unwrap();
     assert!(
-        loss < r.initial_loss * 0.8,
+        loss < r.initial_loss * 0.9,
         "resumed eval {loss} vs initial {}",
         r.initial_loss
     );
@@ -147,12 +155,17 @@ fn rejects_bad_logical_batch() {
 }
 
 #[test]
-fn lora_model_trains() {
-    let mut cfg = base_cfg("gptlora", "bk", 3);
-    cfg.lr = 5e-3;
-    let mut t = Trainer::new(cfg).unwrap();
-    let r = t.run().unwrap();
-    assert!(r.final_loss.is_finite());
-    // LoRA starts at the frozen model's loss; a few steps should not blow up
-    assert!(r.final_loss < r.initial_loss * 1.1);
+fn rejects_unknown_native_model() {
+    let cfg = base_cfg("gpt_e2e", "bk", 3); // GPT needs the pjrt backend
+    let err = Trainer::new(cfg).unwrap_err().to_string();
+    assert!(err.contains("native registry"), "{err}");
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+#[test]
+fn pjrt_backend_requires_feature() {
+    let mut cfg = base_cfg("mlp_e2e", "bk", 3);
+    cfg.backend = "pjrt".into();
+    let err = Trainer::new(cfg).unwrap_err().to_string();
+    assert!(err.contains("xla-runtime"), "{err}");
 }

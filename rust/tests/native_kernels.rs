@@ -1,0 +1,343 @@
+//! Golden + property tests for the native Book-Keeping kernels.
+//!
+//! The oracle is the naive algorithm the ghost-norm trick avoids:
+//! materialize every per-sample gradient `psg_i = a_i^T g_i` (in f64)
+//! and derive norms / clipped sums from it. Every fast route — ghost
+//! Gram norms, streaming instantiation, stored instantiation, the fused
+//! weighted contraction — must agree with the oracle, and strategies
+//! that share clip factors must agree with each other **bitwise**.
+
+use fastdp::complexity::Strategy;
+use fastdp::runtime::native::kernels;
+use fastdp::runtime::native::model::NativeSpec;
+use fastdp::runtime::native::NativeBackend;
+use fastdp::runtime::{Backend, BatchX, StepHyper};
+use fastdp::util::rng::Xoshiro256;
+
+fn randv(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+/// Oracle: per-sample gradients in f64, `(b, d, p)`.
+fn naive_psg(a: &[f32], g: &[f32], b: usize, t: usize, d: usize, p: usize) -> Vec<f64> {
+    let mut psg = vec![0f64; b * d * p];
+    for i in 0..b {
+        for tt in 0..t {
+            let row = i * t + tt;
+            for j in 0..d {
+                for q in 0..p {
+                    psg[i * d * p + j * p + q] +=
+                        a[row * d + j] as f64 * g[row * p + q] as f64;
+                }
+            }
+        }
+    }
+    psg
+}
+
+fn naive_sq_norms(psg: &[f64], b: usize, n_per: usize) -> Vec<f64> {
+    (0..b)
+        .map(|i| psg[i * n_per..(i + 1) * n_per].iter().map(|x| x * x).sum())
+        .collect()
+}
+
+fn rel_close(got: f32, want: f64, tol: f64) -> bool {
+    let denom = want.abs().max(1e-6);
+    ((got as f64 - want).abs() / denom) < tol
+}
+
+const CASES: [(usize, usize, usize, usize); 5] =
+    [(1, 1, 3, 2), (4, 1, 16, 8), (3, 5, 7, 6), (6, 9, 12, 4), (2, 16, 8, 8)];
+
+#[test]
+fn ghost_norms_match_materialized_reference() {
+    let mut rng = Xoshiro256::new(0xA0);
+    for (case, &(b, t, d, p)) in CASES.iter().enumerate() {
+        let a = randv(&mut rng, b * t * d);
+        let g = randv(&mut rng, b * t * p);
+        let want = naive_sq_norms(&naive_psg(&a, &g, b, t, d, p), b, d * p);
+
+        // ghost route
+        let mut gram_a = vec![0f32; b * t * t];
+        let mut gram_g = vec![0f32; b * t * t];
+        let mut sq = vec![0f32; b];
+        kernels::ghost_norm(&a, &g, b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, 3);
+        for i in 0..b {
+            assert!(
+                rel_close(sq[i], want[i], 1e-3),
+                "case {case} ghost sample {i}: {} vs {}",
+                sq[i],
+                want[i]
+            );
+        }
+
+        // streaming instantiation route
+        let workers = 3usize.min(b.max(1));
+        let mut scratch = vec![0f32; workers * d * p];
+        let mut sq2 = vec![0f32; b];
+        kernels::psg_norms_streaming(&a, &g, b, t, d, p, &mut scratch, &mut sq2, 3);
+        for i in 0..b {
+            assert!(
+                rel_close(sq2[i], want[i], 1e-3),
+                "case {case} stream sample {i}: {} vs {}",
+                sq2[i],
+                want[i]
+            );
+        }
+
+        // stored instantiation route
+        let mut psg = vec![0f32; b * d * p];
+        kernels::psg_instantiate(&a, &g, b, t, d, p, &mut psg, 3);
+        let mut sq3 = vec![0f32; b];
+        kernels::sq_norms_from_psg(&psg, b, d * p, &mut sq3, 3);
+        for i in 0..b {
+            assert!(
+                rel_close(sq3[i], want[i], 1e-3),
+                "case {case} stored sample {i}: {} vs {}",
+                sq3[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn clipped_sum_matches_materialized_reference() {
+    let mut rng = Xoshiro256::new(0xB1);
+    for (case, &(b, t, d, p)) in CASES.iter().enumerate() {
+        let a = randv(&mut rng, b * t * d);
+        let g = randv(&mut rng, b * t * p);
+        let c: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        let psg = naive_psg(&a, &g, b, t, d, p);
+        let mut want = vec![0f64; d * p];
+        for i in 0..b {
+            for k in 0..d * p {
+                want[k] += c[i] as f64 * psg[i * d * p + k];
+            }
+        }
+
+        // fused weighted contraction (the BK kernel)
+        let workers = 4usize.min(b.max(1));
+        let mut partials = vec![0f32; workers * d * p];
+        let mut out = vec![0f32; d * p];
+        kernels::weighted_grad(&a, &g, Some(&c), b, t, d, p, &mut partials, &mut out, 4);
+        for k in 0..d * p {
+            assert!(
+                rel_close(out[k], want[k], 2e-3),
+                "case {case} weighted_grad[{k}]: {} vs {}",
+                out[k],
+                want[k]
+            );
+        }
+
+        // weighted sum over stored psg (the MixOpt reuse path)
+        let mut psg32 = vec![0f32; b * d * p];
+        kernels::psg_instantiate(&a, &g, b, t, d, p, &mut psg32, 2);
+        let mut out2 = vec![0f32; d * p];
+        kernels::weighted_sum_psg(&psg32, &c, b, d, p, &mut out2, 2);
+        for k in 0..d * p {
+            assert!(
+                rel_close(out2[k], want[k], 2e-3),
+                "case {case} weighted_sum_psg[{k}]: {} vs {}",
+                out2[k],
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn bias_kernels_match_reference() {
+    let mut rng = Xoshiro256::new(0xC2);
+    for &(b, t, _, p) in &CASES {
+        let g = randv(&mut rng, b * t * p);
+        let c: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        // oracle
+        let mut want_norm = vec![0f64; b];
+        let mut want_sum = vec![0f64; p];
+        for i in 0..b {
+            let mut col = vec![0f64; p];
+            for tt in 0..t {
+                for q in 0..p {
+                    col[q] += g[(i * t + tt) * p + q] as f64;
+                }
+            }
+            want_norm[i] = col.iter().map(|x| x * x).sum();
+            for q in 0..p {
+                want_sum[q] += c[i] as f64 * col[q];
+            }
+        }
+        let workers = 2usize.min(b.max(1));
+        let mut scratch = vec![0f32; workers * p];
+        let mut sq = vec![0f32; b];
+        kernels::bias_sq_norms(&g, b, t, p, &mut scratch, &mut sq, 2);
+        for i in 0..b {
+            assert!(rel_close(sq[i], want_norm[i], 1e-3), "{} vs {}", sq[i], want_norm[i]);
+        }
+        let mut out = vec![0f32; p];
+        kernels::bias_grad(&g, Some(&c), b, t, p, &mut out);
+        for q in 0..p {
+            assert!(rel_close(out[q], want_sum[q], 1e-3), "{} vs {}", out[q], want_sum[q]);
+        }
+    }
+}
+
+fn spec_with_clip(clip_fn: &str, seq: usize) -> NativeSpec {
+    NativeSpec {
+        name: "prop".into(),
+        batch: 8,
+        seq,
+        d_in: 12,
+        hidden: vec![20],
+        n_classes: 5,
+        optimizer: "sgd".into(),
+        clip_fn: clip_fn.into(),
+    }
+}
+
+fn batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
+    let rows = spec.batch * spec.seq;
+    let mut rng = Xoshiro256::new(seed);
+    let x: Vec<f32> = (0..rows * spec.d_in).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<i32> = (0..rows)
+        .map(|_| rng.next_below(spec.n_classes as u64) as i32)
+        .collect();
+    (BatchX::F32(x), y)
+}
+
+fn one_step_state(spec: &NativeSpec, strat: Strategy, seed: u64, clip: f32) -> Vec<Vec<f32>> {
+    let (x, y) = batch_for(spec, seed);
+    let h = StepHyper {
+        lr: 0.1,
+        clip,
+        sigma_r: 0.0,
+        logical_batch: spec.batch as f32,
+        step: 1.0,
+    };
+    let mut be = NativeBackend::new(spec.clone(), strat, 2).unwrap();
+    be.init(17).unwrap();
+    be.step(&x, &y, &[], &h).unwrap();
+    be.state().unwrap()
+}
+
+/// Property (randomized over seeds): when clipping does not bind (Abadi
+/// factors are exactly 1.0 for every sample), BK and FastGradClip run
+/// through the same weighted-contraction kernel with identical factors
+/// and must produce **bitwise-identical** clipped gradients — asserted
+/// via the updated parameters. Covers both T = 1 and T > 1.
+#[test]
+fn prop_bk_and_fastgradclip_bitwise_when_clip_slack() {
+    for seq in [1usize, 4] {
+        let spec = spec_with_clip("abadi", seq);
+        for seed in 0..8u64 {
+            // R huge => norms << R => c_i == 1.0 exactly in both routes
+            let a = one_step_state(&spec, Strategy::Bk, seed, 1e9);
+            let b = one_step_state(&spec, Strategy::FastGradClip, seed, 1e9);
+            assert_eq!(a, b, "seq={seq} seed={seed}: states must match bitwise");
+        }
+    }
+}
+
+/// When clipping binds, the two strategies derive clip factors from
+/// different norm algorithms (ghost Grams vs instantiation), so they
+/// agree only to float tolerance — but tightly.
+#[test]
+fn prop_bk_and_fastgradclip_close_when_clip_binds() {
+    for seq in [1usize, 4] {
+        let spec = spec_with_clip("automatic", seq);
+        for seed in 0..8u64 {
+            let a = one_step_state(&spec, Strategy::Bk, seed, 1.0);
+            let b = one_step_state(&spec, Strategy::FastGradClip, seed, 1.0);
+            for (ta, tb) in a.iter().zip(b.iter()) {
+                for (va, vb) in ta.iter().zip(tb.iter()) {
+                    assert!(
+                        (va - vb).abs() <= 1e-4 * va.abs().max(1.0),
+                        "seq={seq} seed={seed}: {va} vs {vb}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Finite-difference check of the non-DP gradient: the analytic summed
+/// gradient from `clipped_grads` must match (L(w+h) - L(w-h)) / 2h.
+#[test]
+fn nondp_gradient_matches_finite_difference() {
+    let spec = NativeSpec {
+        name: "fd".into(),
+        batch: 3,
+        seq: 2,
+        d_in: 5,
+        hidden: vec![7],
+        n_classes: 4,
+        optimizer: "sgd".into(),
+        clip_fn: "abadi".into(),
+    };
+    let rows = spec.batch * spec.seq;
+    let (x, y) = batch_for(&spec, 4);
+    let mut be = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+    be.init(6).unwrap();
+    let (grads, _) = be.clipped_grads(&x, &y, 1.0).unwrap();
+    let state = be.state().unwrap();
+
+    // probe a spread of coordinates in each tensor
+    let h = 1e-2f32;
+    for (k, tensor) in state.iter().enumerate() {
+        for idx in [0, tensor.len() / 2, tensor.len() - 1] {
+            let mut plus = state.clone();
+            plus[k][idx] += h;
+            let mut minus = state.clone();
+            minus[k][idx] -= h;
+            let mut bp = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            bp.load_state(plus).unwrap();
+            let lp = bp.eval_loss(&x, &y).unwrap() * rows as f32;
+            let mut bm = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            bm.load_state(minus).unwrap();
+            let lm = bm.eval_loss(&x, &y).unwrap() * rows as f32;
+            let numeric = (lp - lm) / (2.0 * h);
+            let analytic = grads[k][idx];
+            assert!(
+                (numeric - analytic).abs() < 2e-2 * analytic.abs().max(1.0),
+                "tensor {k} idx {idx}: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+}
+
+/// All seven DP strategies leave the arena allocation-free once warm on
+/// a model that exercises both norm routes.
+#[test]
+fn all_strategies_reach_flat_memory() {
+    let spec = NativeSpec::by_name("seq_e2e").unwrap();
+    let (x, y) = batch_for(&spec, 30);
+    let h = StepHyper {
+        lr: 1e-3,
+        clip: 1.0,
+        sigma_r: 0.0,
+        logical_batch: spec.batch as f32,
+        step: 1.0,
+    };
+    for strat in [
+        Strategy::NonDp,
+        Strategy::Opacus,
+        Strategy::FastGradClip,
+        Strategy::GhostClip,
+        Strategy::MixGhostClip,
+        Strategy::Bk,
+        Strategy::BkMixGhostClip,
+        Strategy::BkMixOpt,
+    ] {
+        let mut be = NativeBackend::new(spec.clone(), strat, 2).unwrap();
+        be.init(1).unwrap();
+        be.step(&x, &y, &[], &h).unwrap();
+        for _ in 0..2 {
+            be.step(&x, &y, &[], &h).unwrap();
+            assert_eq!(
+                be.alloc_stats().fresh_allocs_last_step,
+                0,
+                "{strat:?}: steady-state step allocated"
+            );
+        }
+    }
+}
