@@ -13,7 +13,7 @@
 //! The native measurement additionally reports the arena's steady-state
 //! allocation count — 0 once warm, the flat-memory invariant.
 
-use crate::complexity::Strategy;
+use crate::complexity::{ClippingStyle, Strategy};
 use crate::data;
 use crate::error::Result;
 use crate::json::Value;
@@ -26,11 +26,13 @@ use std::time::Instant;
 
 pub const CHILD_ENV: &str = "FASTDP_BENCH_CHILD";
 
-/// Result of benchmarking one (model, strategy) pair.
+/// Result of benchmarking one (model, strategy, clipping style) triple.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
     pub model: String,
     pub strategy: String,
+    /// Clipping style ("all-layer" unless overridden via `--styles`).
+    pub style: String,
     pub batch: usize,
     pub threads: usize,
     pub mean_step_secs: f64,
@@ -46,6 +48,7 @@ impl BenchResult {
         let mut v = Value::obj();
         v.set("model", Value::from(self.model.as_str()))
             .set("strategy", Value::from(self.strategy.as_str()))
+            .set("style", Value::from(self.style.as_str()))
             .set("batch", Value::from(self.batch))
             .set("threads", Value::from(self.threads))
             .set("mean_step_secs", Value::from(self.mean_step_secs))
@@ -60,6 +63,7 @@ impl BenchResult {
         Ok(BenchResult {
             model: v.req_str("model").map_err(|e| anyhow!(e))?.to_string(),
             strategy: v.req_str("strategy").map_err(|e| anyhow!(e))?.to_string(),
+            style: v.opt_str("style", "all-layer").to_string(),
             batch: v.req_i64("batch").map_err(|e| anyhow!(e))? as usize,
             threads: v.opt_i64("threads", 1) as usize,
             mean_step_secs: v.req_f64("mean_step_secs").map_err(|e| anyhow!(e))?,
@@ -71,10 +75,12 @@ impl BenchResult {
     }
 }
 
-/// Measure one (model, strategy) native step in THIS process.
+/// Measure one (model, strategy, clipping style) native step in THIS
+/// process.
 pub fn measure_native(
     model: &str,
     strategy: &str,
+    style: &str,
     warmup: usize,
     iters: usize,
     threads: usize,
@@ -82,14 +88,22 @@ pub fn measure_native(
     let spec = NativeSpec::by_name(model)
         .ok_or_else(|| anyhow!("model '{model}' not in the native registry"))?;
     let strat = Strategy::parse(strategy).ok_or_else(|| anyhow!("unknown strategy '{strategy}'"))?;
+    let cstyle = ClippingStyle::parse(style)
+        .ok_or_else(|| anyhow!("unknown clipping style '{style}'"))?;
     let threads = if threads == 0 { par::default_threads() } else { threads };
-    let mut be = NativeBackend::new(spec.clone(), strat, threads)?;
+    let mut be = NativeBackend::with_style(spec.clone(), strat, cstyle, threads)?;
     be.init(0)?;
 
     let rows = spec.batch * spec.seq;
-    let mut ds = data::VectorDataset::new(spec.d_in, spec.n_classes, 2.0, 11);
-    let (xs, y) = ds.sample_batch(rows);
-    let x = BatchX::F32(xs);
+    let (x, y) = if spec.vocab > 0 {
+        let mut corpus = data::TokenCorpus::new(spec.vocab, spec.seq, 11);
+        let (xs, ys) = corpus.sample_batch(spec.batch);
+        (BatchX::I32(xs), ys)
+    } else {
+        let mut ds = data::VectorDataset::new(spec.d_in, spec.n_classes, 2.0, 11);
+        let (xs, ys) = ds.sample_batch(rows);
+        (BatchX::F32(xs), ys)
+    };
     let dp = strat != Strategy::NonDp;
     let noise: Vec<Vec<f32>> = if dp {
         let mut ns = crate::coordinator::noise::NoiseSource::new(5);
@@ -123,6 +137,7 @@ pub fn measure_native(
     Ok(BenchResult {
         model: model.to_string(),
         strategy: strategy.to_string(),
+        style: style.to_string(),
         batch: spec.batch,
         threads,
         mean_step_secs: s.mean(),
@@ -163,22 +178,24 @@ fn parse_child_output(spec: &str, out: std::process::Output) -> Result<BenchResu
     BenchResult::from_json(&crate::json::parse(line).map_err(|e| anyhow!("{e}"))?)
 }
 
-/// Parent side: re-exec self per (model, strategy) for RSS isolation.
-/// Falls back to in-process measurement only when the *spawn itself*
-/// fails (no exe handle, exotic sandbox) — a child that ran but broke
-/// the protocol is a hard error, because silently re-measuring in the
-/// parent would smear peak-RSS attribution across strategies.
+/// Parent side: re-exec self per (model, strategy, style) for RSS
+/// isolation. Falls back to in-process measurement only when the
+/// *spawn itself* fails (no exe handle, exotic sandbox) — a child that
+/// ran but broke the protocol is a hard error, because silently
+/// re-measuring in the parent would smear peak-RSS attribution across
+/// strategies.
 pub fn measure_native_isolated(
     model: &str,
     strategy: &str,
+    style: &str,
     warmup: usize,
     iters: usize,
     threads: usize,
 ) -> Result<BenchResult> {
-    let spec = format!("{model}:{strategy}:{warmup}:{iters}:{threads}");
+    let spec = format!("{model}:{strategy}:{warmup}:{iters}:{threads}:{style}");
     match spawn_child_raw(&spec) {
         Ok(out) => parse_child_output(&spec, out),
-        Err(_) => measure_native(model, strategy, warmup, iters, threads),
+        Err(_) => measure_native(model, strategy, style, warmup, iters, threads),
     }
 }
 
@@ -194,7 +211,10 @@ pub fn maybe_run_native_child() {
         let warmup = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
         let iters = parts.get(3).and_then(|s| s.parse().ok()).unwrap_or(10);
         let threads = parts.get(4).and_then(|s| s.parse().ok()).unwrap_or(0);
-        match measure_native(parts[0], parts[1], warmup, iters, threads) {
+        // NOTE: the style field rejoins on ':' so "group-wise:4" survives
+        // the split.
+        let style = if parts.len() > 5 { parts[5..].join(":") } else { "all-layer".to_string() };
+        match measure_native(parts[0], parts[1], &style, warmup, iters, threads) {
             Ok(r) => {
                 println!("{}", r.to_json());
                 std::process::exit(0);
@@ -207,9 +227,10 @@ pub fn maybe_run_native_child() {
     }
 }
 
-/// The `fastdp bench` subcommand: measure a strategy list on one native
-/// model, print the paper-style table, optionally write
-/// `BENCH_native_kernels.json` (machine-readable perf trajectory).
+/// The `fastdp bench` subcommand: measure a strategy list (crossed with
+/// a clipping-style list) on one native model, print the paper-style
+/// table, optionally write `BENCH_native_kernels.json`
+/// (machine-readable perf trajectory).
 pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
     let model = args.get_or("model", "mlp_e2e").to_string();
     let strategies: Vec<String> = args
@@ -218,6 +239,15 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .collect();
+    let mut styles: Vec<String> = args
+        .get_or("styles", "all-layer")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if styles.is_empty() {
+        styles.push("all-layer".to_string());
+    }
     let warmup = args.get_usize("warmup", 5);
     let iters = args.get_usize("iters", 20);
     let threads = args.get_usize("threads", 0);
@@ -225,27 +255,35 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
 
     let mut results: Vec<BenchResult> = Vec::new();
     for strat in &strategies {
-        let r = if isolate {
-            measure_native_isolated(&model, strat, warmup, iters, threads)
-        } else {
-            measure_native(&model, strat, warmup, iters, threads)
-        };
-        match r {
-            Ok(r) => results.push(r),
-            Err(e) => {
-                eprintln!("bench {model}/{strat}: {e}");
-                return 1;
+        for style in &styles {
+            // clipping styles only differ for DP strategies; bench
+            // nondp once under the default style
+            if strat == "nondp" && style != &styles[0] {
+                continue;
+            }
+            let r = if isolate {
+                measure_native_isolated(&model, strat, style, warmup, iters, threads)
+            } else {
+                measure_native(&model, strat, style, warmup, iters, threads)
+            };
+            match r {
+                Ok(r) => results.push(r),
+                Err(e) => {
+                    eprintln!("bench {model}/{strat}/{style}: {e}");
+                    return 1;
+                }
             }
         }
     }
 
     let mut t = Table::new(
         &format!("native kernel bench: {model} (warmup={warmup}, iters={iters})"),
-        &["strategy", "mean/step", "min/step", "samples/s", "peak RSS", "steady allocs"],
+        &["strategy", "style", "mean/step", "min/step", "samples/s", "peak RSS", "steady allocs"],
     );
     for r in &results {
         t.row(&[
             r.strategy.clone(),
+            r.style.clone(),
             fmt_duration(r.mean_step_secs),
             fmt_duration(r.min_step_secs),
             format!("{:.0}", r.samples_per_sec),
@@ -255,7 +293,11 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
     }
     print!("{}", t.render());
 
-    let find = |name: &str| results.iter().find(|r| r.strategy == name);
+    let find = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.strategy == name && r.style == styles[0])
+    };
     let ratio = match (find("bk"), find("nondp")) {
         (Some(bk), Some(nd)) if nd.mean_step_secs > 0.0 => {
             let ratio = bk.mean_step_secs / nd.mean_step_secs;
@@ -508,6 +550,7 @@ mod tests {
         let r = BenchResult {
             model: "m".into(),
             strategy: "bk".into(),
+            style: "layer-wise".into(),
             batch: 8,
             threads: 4,
             mean_step_secs: 0.25,
@@ -519,17 +562,25 @@ mod tests {
         let v = r.to_json();
         let r2 = BenchResult::from_json(&crate::json::parse(&v.to_string()).unwrap()).unwrap();
         assert_eq!(r2.model, "m");
+        assert_eq!(r2.style, "layer-wise");
         assert_eq!(r2.batch, 8);
         assert_eq!(r2.threads, 4);
         assert!((r2.samples_per_sec - 32.0).abs() < 1e-12);
         assert_eq!(r2.steady_allocs, 0);
+        // pre-style JSON (no "style" field) defaults to all-layer
+        let legacy = crate::json::parse(
+            r#"{"model":"m","strategy":"bk","batch":4,"mean_step_secs":0.1,
+                "min_step_secs":0.1,"samples_per_sec":40.0,"peak_rss":1.0}"#,
+        )
+        .unwrap();
+        assert_eq!(BenchResult::from_json(&legacy).unwrap().style, "all-layer");
     }
 
     #[test]
     fn measure_native_reports_steady_state() {
         // Tiny in-process measurement: BK on the seed MLP reaches a warm
         // arena (no steady-state allocations) and finite throughput.
-        let r = measure_native("mlp_e2e", "bk", 2, 2, 2).unwrap();
+        let r = measure_native("mlp_e2e", "bk", "all-layer", 2, 2, 2).unwrap();
         assert_eq!(r.steady_allocs, 0, "arena must be warm after warmup");
         assert!(r.mean_step_secs > 0.0);
         assert!(r.samples_per_sec > 0.0);
@@ -537,8 +588,21 @@ mod tests {
     }
 
     #[test]
+    fn measure_native_covers_styles_and_token_models() {
+        // layer-wise clipping on the seed MLP, and the token+LayerNorm
+        // model end-to-end — both stay allocation-free once warm.
+        let r = measure_native("mlp_e2e", "bk", "layer-wise", 2, 2, 2).unwrap();
+        assert_eq!(r.steady_allocs, 0);
+        assert_eq!(r.style, "layer-wise");
+        let r = measure_native("seq_tok_e2e", "bk", "group-wise:2", 2, 2, 2).unwrap();
+        assert_eq!(r.steady_allocs, 0, "token model arena must be warm");
+        assert!(r.samples_per_sec > 0.0);
+    }
+
+    #[test]
     fn measure_native_rejects_unknowns() {
-        assert!(measure_native("nope", "bk", 1, 1, 1).is_err());
-        assert!(measure_native("mlp_e2e", "warp", 1, 1, 1).is_err());
+        assert!(measure_native("nope", "bk", "all-layer", 1, 1, 1).is_err());
+        assert!(measure_native("mlp_e2e", "warp", "all-layer", 1, 1, 1).is_err());
+        assert!(measure_native("mlp_e2e", "bk", "per-tensor", 1, 1, 1).is_err());
     }
 }

@@ -17,7 +17,9 @@ pub mod strategy;
 
 use crate::arch::{LayerDims, LayerKind};
 
-pub use strategy::{layer_cost, Strategy, ALL_STRATEGIES};
+pub use strategy::{
+    bk_gcache_floats, clip_state_floats, layer_cost, ClippingStyle, Strategy, ALL_STRATEGIES,
+};
 
 /// Time cost (multiply-accumulate*2, matching the paper's 2BTpd counting)
 /// of one module on one layer.

@@ -59,6 +59,95 @@ impl Strategy {
     }
 }
 
+/// Per-sample clipping granularity (He et al. 2023; Bu et al. 2023 on
+/// group-wise clipping): which trainable layers share one clip factor.
+///
+/// Sensitivity bookkeeping: with `G` groups each group is clipped to
+/// `R_g = R / sqrt(G)`, so a sample's total clipped contribution has
+/// norm at most `sqrt(sum_g R_g^2) = R` — the noise multiplier and the
+/// accountant are style-independent. `AllLayer` (G = 1) is the paper's
+/// flat clipping and is bitwise-identical to the pre-style behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ClippingStyle {
+    /// One norm over all layers per sample (flat clipping; default).
+    AllLayer,
+    /// One clip factor per trainable layer.
+    LayerWise,
+    /// `k` contiguous groups of trainable layers.
+    GroupWise(usize),
+}
+
+impl ClippingStyle {
+    /// Parse `"all-layer"`, `"layer-wise"`, `"group-wise"` (2 groups),
+    /// or `"group-wise:<k>"`.
+    pub fn parse(s: &str) -> Option<ClippingStyle> {
+        match s {
+            "all-layer" => Some(ClippingStyle::AllLayer),
+            "layer-wise" => Some(ClippingStyle::LayerWise),
+            "group-wise" => Some(ClippingStyle::GroupWise(2)),
+            _ => s
+                .strip_prefix("group-wise:")?
+                .parse::<usize>()
+                .ok()
+                .filter(|&k| k >= 1)
+                .map(ClippingStyle::GroupWise),
+        }
+    }
+
+    /// Canonical display name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            ClippingStyle::AllLayer => "all-layer".to_string(),
+            ClippingStyle::LayerWise => "layer-wise".to_string(),
+            ClippingStyle::GroupWise(k) => format!("group-wise:{k}"),
+        }
+    }
+
+    /// Number of clipping groups over `n` trainable layers.
+    pub fn n_groups(&self, n: usize) -> usize {
+        match self {
+            ClippingStyle::AllLayer => 1,
+            ClippingStyle::LayerWise => n.max(1),
+            ClippingStyle::GroupWise(k) => (*k).clamp(1, n.max(1)),
+        }
+    }
+
+    /// Group id of trainable layer `i` (0-based) among `n` layers:
+    /// balanced contiguous blocks, every group non-empty.
+    pub fn group_of(&self, i: usize, n: usize) -> usize {
+        let g = self.n_groups(n);
+        if n == 0 {
+            return 0;
+        }
+        i * g / n
+    }
+}
+
+/// Clip-state bookkeeping of a style: one squared-norm accumulator and
+/// one clip factor per (group, sample) — `2 * G * B` floats.
+pub fn clip_state_floats(style: ClippingStyle, n_layers: usize, b: f64) -> f64 {
+    2.0 * style.n_groups(n_layers) as f64 * b
+}
+
+/// Peak book-kept output-gradient cache of the BK one-pass schedule
+/// under a clipping style (floats). All-layer clipping must retain
+/// every layer's `B*T*p` output-gradient cache until the last norm is
+/// in; finer styles can fuse each group's clipped sum into the backward
+/// as soon as that group's factor is known, so only the largest group's
+/// caches coexist — the efficiency lever of group-wise clipping.
+pub fn bk_gcache_floats(style: ClippingStyle, b: f64, layers: &[LayerDims]) -> f64 {
+    let n = layers.len();
+    let g = style.n_groups(n);
+    let mut per_group = vec![0.0f64; g];
+    for (i, l) in layers.iter().enumerate() {
+        per_group[style.group_of(i, n)] += b * l.t as f64 * l.p as f64;
+    }
+    match style {
+        ClippingStyle::AllLayer => per_group.iter().sum(),
+        _ => per_group.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
 /// Per-layer cost of one training step under `strategy` (Table 5).
 ///
 /// Norm layers (LayerNorm etc.) are treated uniformly: every DP
@@ -226,6 +315,58 @@ mod tests {
             assert_eq!(Strategy::parse(s.name()), Some(s));
         }
         assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn clipping_style_parse_and_groups() {
+        for style in [
+            ClippingStyle::AllLayer,
+            ClippingStyle::LayerWise,
+            ClippingStyle::GroupWise(2),
+            ClippingStyle::GroupWise(7),
+        ] {
+            assert_eq!(ClippingStyle::parse(&style.name()), Some(style));
+        }
+        assert_eq!(ClippingStyle::parse("group-wise"), Some(ClippingStyle::GroupWise(2)));
+        assert_eq!(ClippingStyle::parse("group-wise:0"), None);
+        assert_eq!(ClippingStyle::parse("per-layer"), None);
+
+        let n = 5;
+        assert_eq!(ClippingStyle::AllLayer.n_groups(n), 1);
+        assert_eq!(ClippingStyle::LayerWise.n_groups(n), n);
+        assert_eq!(ClippingStyle::GroupWise(2).n_groups(n), 2);
+        // more groups than layers clamps
+        assert_eq!(ClippingStyle::GroupWise(9).n_groups(n), n);
+
+        // contiguous, surjective, monotone partition
+        for style in [ClippingStyle::LayerWise, ClippingStyle::GroupWise(2), ClippingStyle::GroupWise(3)] {
+            let g = style.n_groups(n);
+            let ids: Vec<usize> = (0..n).map(|i| style.group_of(i, n)).collect();
+            assert!(ids.windows(2).all(|w| w[0] <= w[1]), "{ids:?}");
+            assert_eq!(ids[0], 0);
+            assert_eq!(*ids.last().unwrap(), g - 1);
+            let mut seen: Vec<usize> = ids.clone();
+            seen.dedup();
+            assert_eq!(seen.len(), g, "every group non-empty: {ids:?}");
+        }
+    }
+
+    #[test]
+    fn style_cost_reporting() {
+        let layers: Vec<LayerDims> = (0..4).map(|i| lin(8, 64, 32 << i)).collect();
+        let b = 16.0;
+        let all = bk_gcache_floats(ClippingStyle::AllLayer, b, &layers);
+        let lw = bk_gcache_floats(ClippingStyle::LayerWise, b, &layers);
+        let gw = bk_gcache_floats(ClippingStyle::GroupWise(2), b, &layers);
+        // all-layer retains every cache; layer-wise only the biggest
+        let total: f64 = layers.iter().map(|l| b * l.t as f64 * l.p as f64).sum();
+        let biggest = b * 8.0 * 256.0;
+        assert_eq!(all, total);
+        assert_eq!(lw, biggest);
+        assert!(lw <= gw && gw <= all);
+        // clip state scales with group count
+        assert_eq!(clip_state_floats(ClippingStyle::AllLayer, 4, b), 2.0 * b);
+        assert_eq!(clip_state_floats(ClippingStyle::LayerWise, 4, b), 8.0 * b);
     }
 
     #[test]

@@ -32,6 +32,9 @@ pub struct TrainConfig {
     pub artifacts_dir: PathBuf,
     pub model: String,
     pub strategy: String,
+    /// Per-sample clipping granularity: "all-layer" (flat, default),
+    /// "layer-wise", or "group-wise[:k]" (native backend only).
+    pub clipping_style: String,
     pub steps: usize,
     pub lr: f64,
     pub clip: f64,
@@ -66,6 +69,7 @@ impl Default for TrainConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             model: "mlp_e2e".to_string(),
             strategy: "bk".to_string(),
+            clipping_style: "all-layer".to_string(),
             steps: 100,
             lr: 1e-3,
             clip: 1.0,
@@ -88,6 +92,7 @@ impl TrainConfig {
         c.threads = v.opt_i64("threads", 0) as usize;
         c.model = v.opt_str("model", &c.model).to_string();
         c.strategy = v.opt_str("strategy", &c.strategy).to_string();
+        c.clipping_style = v.opt_str("clipping_style", &c.clipping_style).to_string();
         c.artifacts_dir = PathBuf::from(v.opt_str("artifacts_dir", "artifacts"));
         c.steps = v.opt_i64("steps", c.steps as i64) as usize;
         c.lr = v.opt_f64("lr", c.lr);
@@ -128,6 +133,9 @@ impl TrainConfig {
         }
         if let Some(s) = args.get("strategy") {
             self.strategy = s.to_string();
+        }
+        if let Some(s) = args.get("clipping-style") {
+            self.clipping_style = s.to_string();
         }
         if let Some(d) = args.get("artifacts-dir") {
             self.artifacts_dir = PathBuf::from(d);
@@ -171,6 +179,12 @@ impl TrainConfig {
             return Err(format!(
                 "unknown backend '{}', expected 'native' or 'pjrt'",
                 self.backend
+            ));
+        }
+        if crate::complexity::ClippingStyle::parse(&self.clipping_style).is_none() {
+            return Err(format!(
+                "unknown clipping_style '{}', expected all-layer, layer-wise, or group-wise[:k]",
+                self.clipping_style
             ));
         }
         if self.steps == 0 {
@@ -245,6 +259,22 @@ mod tests {
     fn rejects_bad_strategy() {
         let v = parse(r#"{"strategy": "warpspeed"}"#).unwrap();
         assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn clipping_style_parse_and_reject() {
+        let v = parse(r#"{"clipping_style": "group-wise:4"}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.clipping_style, "group-wise:4");
+        let v = parse(r#"{"clipping_style": "per-tensor"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let mut c = TrainConfig::default();
+        assert_eq!(c.clipping_style, "all-layer");
+        let args = crate::cli::Args::parse(
+            "train --clipping-style layer-wise".split_whitespace().map(String::from),
+        );
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.clipping_style, "layer-wise");
     }
 
     #[test]

@@ -113,6 +113,7 @@ mod tests {
             n_classes: 2,
             optimizer: "sgd".into(),
             clip_fn: "abadi".into(),
+            ..NativeSpec::default()
         }
         .info()
     }

@@ -21,7 +21,7 @@ pub mod noise;
 use crate::config::TrainConfig;
 use crate::error::{Context, Result};
 use crate::privacy::{calibrate_sigma, RdpAccountant};
-use crate::runtime::{create_backend, Backend, BatchX, ModelInfo, StepHyper};
+use crate::runtime::{create_backend, Backend, BatchX, ModelInfo, StepHyper, StepOut};
 use crate::util::stats::{peak_rss_bytes, Summary};
 use crate::{bail, data, info};
 use std::time::Instant;
@@ -32,6 +32,9 @@ pub struct StepLog {
     pub step: usize,
     pub loss: f32,
     pub mean_clip: f32,
+    /// Mean clip factor per clipping group (one entry for all-layer;
+    /// one per layer/group under layer-wise/group-wise styles).
+    pub group_clip: Vec<f32>,
     pub epsilon: f64,
     pub step_secs: f64,
 }
@@ -66,7 +69,9 @@ impl BatchSource {
     /// Build the source matching a model description.
     fn for_model(info: &ModelInfo, seed: u64) -> Result<Self> {
         match info.kind.as_str() {
-            "gpt" | "gptlora" => Ok(BatchSource::Tokens(data::TokenCorpus::new(
+            // natively executed token models (seqtok) are next-token
+            // predictors like the gpt artifacts: vocab == n_classes
+            "gpt" | "gptlora" | "seqtok" => Ok(BatchSource::Tokens(data::TokenCorpus::new(
                 info.n_classes,
                 info.seq,
                 seed,
@@ -229,7 +234,7 @@ impl Trainer {
         let accum = logical / b_phys;
         let t0 = Instant::now();
 
-        let (loss, mean_clip) = if accum == 1 {
+        let out = if accum == 1 {
             self.fused_step(logical)?
         } else {
             self.accumulated_step(accum, logical)?
@@ -248,15 +253,16 @@ impl Trainer {
 
         Ok(StepLog {
             step: self.step_no,
-            loss,
-            mean_clip,
+            loss: out.loss,
+            mean_clip: out.mean_clip,
+            group_clip: out.group_clip,
             epsilon: self.epsilon(),
             step_secs: t0.elapsed().as_secs_f64(),
         })
     }
 
     /// Fast path: one fused backend step (one physical == one logical).
-    fn fused_step(&mut self, logical: usize) -> Result<(f32, f32)> {
+    fn fused_step(&mut self, logical: usize) -> Result<StepOut> {
         let (x, y) = self.source.sample(self.info.batch, self.info.seq);
         let noise = if self.wants_noise() {
             self.noise.tensors(&self.info)
@@ -264,23 +270,30 @@ impl Trainer {
             Vec::new()
         };
         let h = self.hyper(logical);
-        let out = self.backend.step(&x, &y, &noise, &h)?;
-        Ok((out.loss, out.mean_clip))
+        self.backend.step(&x, &y, &noise, &h)
     }
 
     /// Gradient accumulation: k clipped-grad micro-steps summed
     /// host-side, then one apply with a single noise draw (DP-correct:
     /// per-sample clipping is per micro-batch, noise is per logical
     /// batch).
-    fn accumulated_step(&mut self, accum: usize, logical: usize) -> Result<(f32, f32)> {
+    fn accumulated_step(&mut self, accum: usize, logical: usize) -> Result<StepOut> {
         let mut acc_grads: Vec<Vec<f32>> = Vec::new();
         let mut loss_sum = 0.0f32;
         let mut clip_sum = 0.0f32;
+        let mut group_sum: Vec<f32> = Vec::new();
         for _ in 0..accum {
             let (x, y) = self.source.sample(self.info.batch, self.info.seq);
             let (grads, out) = self.backend.clipped_grads(&x, &y, self.cfg.clip as f32)?;
             loss_sum += out.loss;
             clip_sum += out.mean_clip;
+            if group_sum.is_empty() {
+                group_sum = out.group_clip;
+            } else {
+                for (a, g) in group_sum.iter_mut().zip(out.group_clip.iter()) {
+                    *a += *g;
+                }
+            }
             if acc_grads.is_empty() {
                 acc_grads = grads;
             } else {
@@ -298,7 +311,14 @@ impl Trainer {
         };
         let h = self.hyper(logical);
         self.backend.apply_update(&acc_grads, &noise, &h)?;
-        Ok((loss_sum / accum as f32, clip_sum / accum as f32))
+        for g in group_sum.iter_mut() {
+            *g /= accum as f32;
+        }
+        Ok(StepOut {
+            loss: loss_sum / accum as f32,
+            mean_clip: clip_sum / accum as f32,
+            group_clip: group_sum,
+        })
     }
 
     pub fn epsilon(&self) -> f64 {
@@ -359,6 +379,11 @@ impl Trainer {
                     log.epsilon,
                     logical as f64 / log.step_secs
                 );
+                if log.group_clip.len() > 1 {
+                    let per: Vec<String> =
+                        log.group_clip.iter().map(|c| format!("{c:.3}")).collect();
+                    info!("      group clip [{}]", per.join(" "));
+                }
                 report.logs.push(log);
             }
             if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {

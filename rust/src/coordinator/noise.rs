@@ -66,6 +66,7 @@ mod tests {
             n_classes: 16,
             optimizer: "sgd".into(),
             clip_fn: "abadi".into(),
+            ..NativeSpec::default()
         }
         .info()
     }

@@ -6,9 +6,11 @@
 //! The run-time stack is pure Rust and self-contained:
 //!
 //! * **runtime::native (default)** — the BK step end-to-end as fused
-//!   native kernels: forward/backward for generalized-linear models,
+//!   native kernels over a composable per-layer module system
+//!   (`runtime::native::layers`: Linear, ReLU, Embedding, LayerNorm):
 //!   ghost-norm / per-sample-instantiation norms with the paper's mixed
-//!   layerwise dispatch, the clipped weighted sum, and noisy SGD/Adam —
+//!   layerwise dispatch, all-layer / layer-wise / group-wise clipping
+//!   styles, the clipped weighted sum, and noisy SGD/Adam —
 //!   cache-blocked, thread-fanned over the batch, and allocation-free in
 //!   steady state (step-scoped buffer arena).
 //! * **runtime::pjrt (feature `xla-runtime`)** — the original AOT

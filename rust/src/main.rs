@@ -1,10 +1,14 @@
 //! fastdp CLI — launcher for DP training runs, benches and analysis.
 //!
 //! Subcommands:
-//!   train       — run DP training per a JSON config (+ CLI overrides)
-//!   bench       — time native-kernel steps per strategy (`--json` writes
+//!   train       — run DP training per a JSON config (+ CLI overrides);
+//!                 `--clipping-style all-layer|layer-wise|group-wise[:k]`
+//!                 picks the per-sample clipping granularity
+//!   bench       — time native-kernel steps per strategy (`--styles` adds
+//!                 clipping-style rows; `--json` writes
 //!                 BENCH_native_kernels.json)
-//!   complexity  — print the paper's complexity tables for a model
+//!   complexity  — print the paper's complexity tables for a model,
+//!                 including per-clipping-style cost reporting
 //!   calibrate   — solve sigma for a (epsilon, delta, q, steps) target
 //!   list        — list native models (and PJRT artifacts if present)
 //!   version
@@ -31,6 +35,11 @@ fn main() {
         Some("version") | None => {
             println!("fastdp 0.2.0 — Book-Keeping DP optimization (Bu et al., ICML 2023)");
             println!("usage: fastdp <train|bench|complexity|calibrate|list|version> [--opts]");
+            println!(
+                "       train --model <m> --strategy <s> \
+                 [--clipping-style all-layer|layer-wise|group-wise[:k]]"
+            );
+            println!("       bench [--model <m>] [--strategy a,b,...] [--styles a,b,...] [--json]");
             0
         }
         Some(other) => {
@@ -132,6 +141,43 @@ fn cmd_complexity(args: &Args) -> i32 {
         "layerwise decision: {n_ghost}/{} layers prefer ghost norm (2T^2 < pd)",
         layers.len()
     );
+
+    // clipping-style cost reporting: finer styles free each group's
+    // book-kept output-gradient cache as soon as its clip factor is
+    // known (He et al. / Bu et al. group-wise clipping)
+    use fastdp::complexity::ClippingStyle;
+    let mut styles = vec![
+        ClippingStyle::AllLayer,
+        ClippingStyle::LayerWise,
+        ClippingStyle::GroupWise(2),
+        ClippingStyle::GroupWise(4),
+    ];
+    if let Some(s) = args.get("clipping-style") {
+        match ClippingStyle::parse(s) {
+            Some(cs) => {
+                if !styles.contains(&cs) {
+                    styles.push(cs);
+                }
+            }
+            None => {
+                eprintln!("unknown clipping style '{s}'");
+                return 2;
+            }
+        }
+    }
+    let mut t = Table::new(
+        &format!("clipping styles (B={b}): BK book-kept cache + clip state, floats"),
+        &["style", "groups", "bk g-cache", "clip state"],
+    );
+    for style in &styles {
+        t.row(&[
+            style.name(),
+            style.n_groups(layers.len()).to_string(),
+            fmt_count(complexity::bk_gcache_floats(*style, b, &layers)),
+            fmt_count(complexity::clip_state_floats(*style, layers.len(), b)),
+        ]);
+    }
+    print!("{}", t.render());
     0
 }
 
@@ -188,6 +234,7 @@ fn cmd_list(args: &Args) -> i32 {
         "strategies: {}",
         ALL_STRATEGIES.iter().map(|s| s.name()).collect::<Vec<_>>().join(", ")
     );
+    println!("clipping styles: all-layer (default), layer-wise, group-wise[:k]");
 
     // PJRT artifacts, when a manifest exists on disk.
     let dir = args.get_or("artifacts-dir", "artifacts");

@@ -93,12 +93,17 @@ pub struct StepHyper {
 }
 
 /// Metrics of one step.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct StepOut {
     /// Mean per-row loss.
     pub loss: f32,
-    /// Mean per-sample clip factor (1.0 for nondp).
+    /// Mean per-sample clip factor across every clipping group
+    /// (1.0 for nondp).
     pub mean_clip: f32,
+    /// Mean clip factor per clipping group, in group order. One entry
+    /// (equal to `mean_clip`) under all-layer clipping; one per layer /
+    /// group under the layer-wise / group-wise styles.
+    pub group_clip: Vec<f32>,
 }
 
 /// Arena / allocator telemetry (native backend).
@@ -156,6 +161,12 @@ pub trait Backend {
 
 /// Construct the backend selected by the config.
 pub fn create_backend(cfg: &crate::config::TrainConfig) -> Result<Box<dyn Backend>> {
+    let style = crate::complexity::ClippingStyle::parse(&cfg.clipping_style).ok_or_else(|| {
+        anyhow!(
+            "unknown clipping_style '{}' (expected all-layer, layer-wise, or group-wise[:k])",
+            cfg.clipping_style
+        )
+    })?;
     match cfg.backend.as_str() {
         "native" => {
             let spec = native::model::NativeSpec::by_name(&cfg.model).ok_or_else(|| {
@@ -167,8 +178,17 @@ pub fn create_backend(cfg: &crate::config::TrainConfig) -> Result<Box<dyn Backen
             })?;
             let strategy = crate::complexity::Strategy::parse(&cfg.strategy)
                 .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
-            Ok(Box::new(native::NativeBackend::new(spec, strategy, cfg.threads)?))
+            Ok(Box::new(native::NativeBackend::with_style(
+                spec,
+                strategy,
+                style,
+                cfg.threads,
+            )?))
         }
+        "pjrt" if style != crate::complexity::ClippingStyle::AllLayer => bail!(
+            "clipping_style '{}' requires the native backend (pjrt artifacts are all-layer only)",
+            cfg.clipping_style
+        ),
         "pjrt" => {
             #[cfg(feature = "xla-runtime")]
             {
@@ -216,6 +236,23 @@ mod tests {
         cfg.backend = "pjrt".into();
         let err = create_backend(&cfg).unwrap_err().to_string();
         assert!(err.contains("xla-runtime"), "{err}");
+    }
+
+    #[test]
+    fn create_backend_honors_clipping_style() {
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.clipping_style = "layer-wise".into();
+        assert!(create_backend(&cfg).is_ok());
+        cfg.clipping_style = "group-wise:3".into();
+        assert!(create_backend(&cfg).is_ok());
+        cfg.clipping_style = "per-tensor".into();
+        assert!(create_backend(&cfg).is_err());
+        // pjrt artifacts only support flat clipping
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.backend = "pjrt".into();
+        cfg.clipping_style = "layer-wise".into();
+        let err = create_backend(&cfg).unwrap_err().to_string();
+        assert!(err.contains("native"), "{err}");
     }
 
     #[test]

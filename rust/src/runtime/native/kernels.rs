@@ -450,6 +450,241 @@ pub fn bias_grad(g: &[f32], c: Option<&[f32]>, b: usize, t: usize, p: usize, out
     }
 }
 
+/// LayerNorm variance epsilon (matches the PyTorch default).
+pub const LN_EPS: f32 = 1e-5;
+
+/// LayerNorm forward over the feature axis: for each of the `rows`
+/// length-`d` rows, `out = gamma * (x - mu) / sqrt(var + eps) + beta`.
+///
+/// Caches `xhat` (the normalized input, `(rows, d)`) and `inv_std`
+/// (`(rows,)`) for the backward pass. Serial: O(rows * d) is negligible
+/// next to the matmuls on either side.
+pub fn layernorm_forward(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    out: &mut [f32],
+    xhat: &mut [f32],
+    inv_std: &mut [f32],
+    rows: usize,
+    d: usize,
+) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(gamma.len(), d);
+    debug_assert_eq!(beta.len(), d);
+    debug_assert_eq!(out.len(), rows * d);
+    debug_assert_eq!(xhat.len(), rows * d);
+    debug_assert_eq!(inv_std.len(), rows);
+    for r in 0..rows {
+        let xr = &x[r * d..r * d + d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let is = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[r] = is;
+        for j in 0..d {
+            let xh = (xr[j] - mu) * is;
+            xhat[r * d + j] = xh;
+            out[r * d + j] = gamma[j] * xh + beta[j];
+        }
+    }
+}
+
+/// LayerNorm backward (data): from `g` = dL/d out, with the cached
+/// `xhat` and `inv_std`, writes `da` = dL/d x:
+/// `da = inv_std * (g*gamma - mean(g*gamma) - xhat * mean(g*gamma*xhat))`.
+pub fn layernorm_backward_data(
+    g: &[f32],
+    gamma: &[f32],
+    xhat: &[f32],
+    inv_std: &[f32],
+    da: &mut [f32],
+    rows: usize,
+    d: usize,
+) {
+    debug_assert_eq!(g.len(), rows * d);
+    debug_assert_eq!(da.len(), rows * d);
+    for r in 0..rows {
+        let gr = &g[r * d..r * d + d];
+        let xh = &xhat[r * d..r * d + d];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..d {
+            let gx = gr[j] * gamma[j];
+            m1 += gx;
+            m2 += gx * xh[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let is = inv_std[r];
+        for j in 0..d {
+            let gx = gr[j] * gamma[j];
+            da[r * d + j] = is * (gx - m1 - xh[j] * m2);
+        }
+    }
+}
+
+/// Per-sample squared norms of the LayerNorm (gamma, beta) gradients:
+/// `sq[i] += ||sum_t g_i[t,:]*xhat_i[t,:]||^2 + ||sum_t g_i[t,:]||^2`.
+/// Instantiation and ghost coincide for norm layers (params are `O(p)`);
+/// every DP strategy takes this route. `scratch >= workers * 2p`.
+pub fn ln_sq_norms(
+    g: &[f32],
+    xhat: &[f32],
+    b: usize,
+    t: usize,
+    p: usize,
+    scratch: &mut [f32],
+    sq: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(g.len(), b * t * p);
+    debug_assert_eq!(xhat.len(), b * t * p);
+    debug_assert_eq!(sq.len(), b);
+    par::par_batch(sq, b, 1, scratch, 2 * p, threads, |i0, n, sqc, scr| {
+        for k in 0..n {
+            let i = i0 + k;
+            scr.fill(0.0);
+            let (sg, sb) = scr.split_at_mut(p);
+            for tt in 0..t {
+                let row = (i * t + tt) * p;
+                let g_row = &g[row..row + p];
+                let x_row = &xhat[row..row + p];
+                for j in 0..p {
+                    sg[j] += g_row[j] * x_row[j];
+                    sb[j] += g_row[j];
+                }
+            }
+            sqc[k] += dot(sg, sg) + dot(sb, sb);
+        }
+    });
+}
+
+/// Clipped weighted LayerNorm gradient sums (`c_i = 1` when `c` is
+/// `None`): `ggamma[j] += sum_i c_i sum_t g_i[t,j]*xhat_i[t,j]` and
+/// `gbeta[j] += sum_i c_i sum_t g_i[t,j]`. Serial — `p` is tiny.
+pub fn ln_weighted_grads(
+    g: &[f32],
+    xhat: &[f32],
+    c: Option<&[f32]>,
+    b: usize,
+    t: usize,
+    p: usize,
+    ggamma: &mut [f32],
+    gbeta: &mut [f32],
+) {
+    debug_assert_eq!(ggamma.len(), p);
+    debug_assert_eq!(gbeta.len(), p);
+    for i in 0..b {
+        let ci = match c {
+            Some(cs) => cs[i],
+            None => 1.0,
+        };
+        if ci == 0.0 {
+            continue;
+        }
+        for tt in 0..t {
+            let row = (i * t + tt) * p;
+            let g_row = &g[row..row + p];
+            let x_row = &xhat[row..row + p];
+            for j in 0..p {
+                ggamma[j] += ci * g_row[j] * x_row[j];
+                gbeta[j] += ci * g_row[j];
+            }
+        }
+    }
+}
+
+/// Embedding forward: `out[r, :] = table[tokens[r], :]` for `rows` i32
+/// token ids and a `(vocab, p)` table. Token bounds are validated by the
+/// backend before the step starts.
+pub fn embedding_forward(
+    tokens: &[i32],
+    table: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    p: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(tokens.len(), rows);
+    debug_assert_eq!(out.len(), rows * p);
+    par::par_rows(out, rows, p, threads, |r0, chunk| {
+        for (ri, out_row) in chunk.chunks_mut(p).enumerate() {
+            let tok = tokens[r0 + ri] as usize;
+            out_row.copy_from_slice(&table[tok * p..tok * p + p]);
+        }
+    });
+}
+
+/// Embedding ghost norm: the per-sample embedding-gradient squared norm
+/// without forming the `(vocab, p)` gradient. Rows of `dL_i/dW` collide
+/// exactly where token ids repeat, so
+/// `||dL_i/dW||^2 = sum_{t,s} 1[tok_t == tok_s] (g_t . g_s)` — the
+/// token-equality mask playing the activation Gram's role
+/// (`ghost_preferred` is always true for embeddings). Time `O(B T^2 p)`,
+/// no scratch.
+pub fn embedding_sq_norms(
+    tokens: &[i32],
+    g: &[f32],
+    b: usize,
+    t: usize,
+    p: usize,
+    sq: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(tokens.len(), b * t);
+    debug_assert_eq!(g.len(), b * t * p);
+    debug_assert_eq!(sq.len(), b);
+    par::par_rows(sq, b, 1, threads, |i0, chunk| {
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            let i = i0 + k;
+            let mut acc = 0.0f32;
+            for t1 in 0..t {
+                let g1 = &g[(i * t + t1) * p..(i * t + t1) * p + p];
+                for t2 in t1..t {
+                    if tokens[i * t + t1] == tokens[i * t + t2] {
+                        let v = dot(g1, &g[(i * t + t2) * p..(i * t + t2) * p + p]);
+                        acc += if t1 == t2 { v } else { 2.0 * v };
+                    }
+                }
+            }
+            *slot += acc;
+        }
+    });
+}
+
+/// Clipped weighted embedding-gradient sum: scatter-add
+/// `out[tokens[i,t], :] += c_i * g[i,t,:]` (`c_i = 1` when `c` is
+/// `None`). Serial — the scatter is `O(B T p)` and rows collide.
+pub fn embedding_weighted_grad(
+    tokens: &[i32],
+    g: &[f32],
+    c: Option<&[f32]>,
+    b: usize,
+    t: usize,
+    p: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(tokens.len(), b * t);
+    debug_assert_eq!(g.len(), b * t * p);
+    for i in 0..b {
+        let ci = match c {
+            Some(cs) => cs[i],
+            None => 1.0,
+        };
+        if ci == 0.0 {
+            continue;
+        }
+        for tt in 0..t {
+            let tok = tokens[i * t + tt] as usize;
+            let g_row = &g[(i * t + tt) * p..(i * t + tt) * p + p];
+            let slot = &mut out[tok * p..tok * p + p];
+            for (o, &gv) in slot.iter_mut().zip(g_row) {
+                *o += ci * gv;
+            }
+        }
+    }
+}
+
 /// Clipping flavors (matching `ref.py` exactly).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ClipKind {
@@ -661,6 +896,165 @@ mod tests {
         assert!((c[0] - 1.0 / 2.01).abs() < 1e-6);
         assert_eq!(ClipKind::parse("automatic"), Some(ClipKind::Automatic));
         assert_eq!(ClipKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn layernorm_forward_normalizes() {
+        let mut rng = Xoshiro256::new(7);
+        let (rows, d) = (9usize, 12usize);
+        let x = randv(&mut rng, rows * d);
+        let gamma: Vec<f32> = (0..d).map(|j| 1.0 + 0.1 * j as f32).collect();
+        let beta: Vec<f32> = (0..d).map(|j| 0.01 * j as f32).collect();
+        let mut out = vec![0f32; rows * d];
+        let mut xhat = vec![0f32; rows * d];
+        let mut inv_std = vec![0f32; rows];
+        layernorm_forward(&x, &gamma, &beta, &mut out, &mut xhat, &mut inv_std, rows, d);
+        for r in 0..rows {
+            let xh = &xhat[r * d..(r + 1) * d];
+            let mean: f32 = xh.iter().sum::<f32>() / d as f32;
+            let var: f32 = xh.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5, "xhat mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "xhat var {var}");
+            for j in 0..d {
+                let want = gamma[j] * xh[j] + beta[j];
+                assert!((out[r * d + j] - want).abs() < 1e-5);
+            }
+            assert!(inv_std[r] > 0.0);
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_difference() {
+        let mut rng = Xoshiro256::new(8);
+        let (rows, d) = (3usize, 7usize);
+        let x = randv(&mut rng, rows * d);
+        let gamma: Vec<f32> = (0..d).map(|j| 0.8 + 0.05 * j as f32).collect();
+        let beta = vec![0.0f32; d];
+        let g = randv(&mut rng, rows * d);
+        let fwd = |x: &[f32]| -> Vec<f32> {
+            let mut out = vec![0f32; rows * d];
+            let mut xh = vec![0f32; rows * d];
+            let mut is = vec![0f32; rows];
+            layernorm_forward(x, &gamma, &beta, &mut out, &mut xh, &mut is, rows, d);
+            out
+        };
+        let mut out = vec![0f32; rows * d];
+        let mut xhat = vec![0f32; rows * d];
+        let mut inv_std = vec![0f32; rows];
+        layernorm_forward(&x, &gamma, &beta, &mut out, &mut xhat, &mut inv_std, rows, d);
+        let mut da = vec![0f32; rows * d];
+        layernorm_backward_data(&g, &gamma, &xhat, &inv_std, &mut da, rows, d);
+        // scalar loss L = <g, LN(x)>; dL/dx[j] must match central diffs
+        let h = 1e-3f32;
+        for idx in [0usize, rows * d / 2, rows * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let lp: f32 = fwd(&xp).iter().zip(&g).map(|(o, gv)| o * gv).sum();
+            let lm: f32 = fwd(&xm).iter().zip(&g).map(|(o, gv)| o * gv).sum();
+            let numeric = (lp - lm) / (2.0 * h);
+            assert!(
+                (numeric - da[idx]).abs() < 5e-3 * da[idx].abs().max(1.0),
+                "idx {idx}: numeric {numeric} vs analytic {}",
+                da[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn ln_norms_and_sums_match_naive() {
+        let mut rng = Xoshiro256::new(9);
+        let (b, t, p) = (5usize, 3usize, 6usize);
+        let g = randv(&mut rng, b * t * p);
+        let xhat = randv(&mut rng, b * t * p);
+        let c: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        // naive per-sample (gamma, beta) grads
+        let mut want_sq = vec![0f64; b];
+        let mut want_gg = vec![0f64; p];
+        let mut want_gb = vec![0f64; p];
+        for i in 0..b {
+            let mut sg = vec![0f64; p];
+            let mut sb = vec![0f64; p];
+            for tt in 0..t {
+                for j in 0..p {
+                    let gv = g[(i * t + tt) * p + j] as f64;
+                    sg[j] += gv * xhat[(i * t + tt) * p + j] as f64;
+                    sb[j] += gv;
+                }
+            }
+            want_sq[i] = sg.iter().map(|v| v * v).sum::<f64>() + sb.iter().map(|v| v * v).sum::<f64>();
+            for j in 0..p {
+                want_gg[j] += c[i] as f64 * sg[j];
+                want_gb[j] += c[i] as f64 * sb[j];
+            }
+        }
+        let workers = 2usize;
+        let mut scratch = vec![0f32; workers * 2 * p];
+        let mut sq = vec![0f32; b];
+        ln_sq_norms(&g, &xhat, b, t, p, &mut scratch, &mut sq, 2);
+        for i in 0..b {
+            assert!(
+                (sq[i] as f64 - want_sq[i]).abs() / want_sq[i].max(1e-6) < 1e-3,
+                "{} vs {}",
+                sq[i],
+                want_sq[i]
+            );
+        }
+        let mut gg = vec![0f32; p];
+        let mut gb = vec![0f32; p];
+        ln_weighted_grads(&g, &xhat, Some(&c), b, t, p, &mut gg, &mut gb);
+        for j in 0..p {
+            assert!((gg[j] as f64 - want_gg[j]).abs() < 1e-4, "{} vs {}", gg[j], want_gg[j]);
+            assert!((gb[j] as f64 - want_gb[j]).abs() < 1e-4, "{} vs {}", gb[j], want_gb[j]);
+        }
+    }
+
+    #[test]
+    fn embedding_kernels_match_materialized_reference() {
+        let mut rng = Xoshiro256::new(10);
+        let (b, t, vocab, p) = (4usize, 5usize, 7usize, 3usize);
+        // repeated tokens on purpose: the equality mask must fire
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.next_below(vocab as u64) as i32).collect();
+        let table = randv(&mut rng, vocab * p);
+        let g = randv(&mut rng, b * t * p);
+        let c: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+
+        // forward
+        let mut out = vec![0f32; b * t * p];
+        embedding_forward(&tokens, &table, &mut out, b * t, p, 2);
+        for r in 0..b * t {
+            let tok = tokens[r] as usize;
+            assert_eq!(&out[r * p..(r + 1) * p], &table[tok * p..(tok + 1) * p]);
+        }
+
+        // naive per-sample (vocab, p) gradient
+        let mut naive = vec![0f64; b * vocab * p];
+        for i in 0..b {
+            for tt in 0..t {
+                let tok = tokens[i * t + tt] as usize;
+                for j in 0..p {
+                    naive[i * vocab * p + tok * p + j] += g[(i * t + tt) * p + j] as f64;
+                }
+            }
+        }
+        let mut sq = vec![0f32; b];
+        embedding_sq_norms(&tokens, &g, b, t, p, &mut sq, 2);
+        for i in 0..b {
+            let want: f64 = naive[i * vocab * p..(i + 1) * vocab * p].iter().map(|v| v * v).sum();
+            assert!(
+                (sq[i] as f64 - want).abs() / want.max(1e-6) < 1e-3,
+                "sample {i}: {} vs {}",
+                sq[i],
+                want
+            );
+        }
+        let mut summed = vec![0f32; vocab * p];
+        embedding_weighted_grad(&tokens, &g, Some(&c), b, t, p, &mut summed);
+        for k in 0..vocab * p {
+            let want: f64 = (0..b).map(|i| c[i] as f64 * naive[i * vocab * p + k]).sum();
+            assert!((summed[k] as f64 - want).abs() < 1e-4, "slot {k}: {} vs {}", summed[k], want);
+        }
     }
 
     #[test]

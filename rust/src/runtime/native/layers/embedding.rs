@@ -1,0 +1,111 @@
+//! Token embedding layer: a `(vocab, dim)` lookup table consuming i32
+//! token ids. Must be the first layer of its stack (nothing to
+//! back-propagate into).
+//!
+//! The per-sample gradient has rows only at the sample's token ids, so
+//! its squared norm ghosts with a **token-equality mask** in place of
+//! the activation Gram (`ghost_preferred` is always true — per-sample
+//! instantiation would be `vocab * dim` per sample). The clipped sum
+//! is a cheap serial scatter-add, so the stored-psg route is never
+//! needed either.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+
+/// `out[r, :] = table[tokens[r], :]`.
+pub struct Embedding {
+    name: String,
+    vocab: usize,
+    dim: usize,
+}
+
+impl Embedding {
+    /// Build a `(vocab, dim)` embedding table.
+    pub fn new(name: String, vocab: usize, dim: usize) -> Self {
+        Self { name, vocab, dim }
+    }
+}
+
+impl DpLayer for Embedding {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        0
+    }
+
+    fn out_width(&self) -> usize {
+        self.dim
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        1
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![vec![self.vocab, self.dim]]
+    }
+
+    fn dims(&self, t: usize) -> Option<LayerDims> {
+        Some(LayerDims {
+            kind: LayerKind::Embedding,
+            name: self.name.clone(),
+            t: t as u64,
+            d: self.vocab as u64,
+            p: self.dim as u64,
+        })
+    }
+
+    fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], _is_head: bool) {
+        let scale = (1.0 / self.dim as f32).sqrt();
+        let mut gs = GaussianSource::from_rng(rng);
+        gs.fill_f32(&mut params[0]);
+        for v in params[0].iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        _cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        kernels::embedding_forward(x.tokens(), &params[0], out, ctx.rows(), self.dim, ctx.threads);
+    }
+
+    fn accum_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        _route: NormRoute,
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        // The token-equality ghost norm is exact, so the route decision
+        // is moot: every strategy takes this path.
+        kernels::embedding_sq_norms(x.tokens(), g_out, ctx.b, ctx.t, self.dim, sq, ctx.threads);
+    }
+
+    fn clipped_grads(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        kernels::embedding_weighted_grad(x.tokens(), g_out, c, ctx.b, ctx.t, self.dim, &mut grads[0]);
+    }
+}

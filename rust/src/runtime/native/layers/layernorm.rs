@@ -1,0 +1,160 @@
+//! LayerNorm over the feature axis with affine `(gamma, beta)`.
+//!
+//! The forward pass caches `xhat` (normalized input) and `inv_std` per
+//! row — the two tensors the backward and the per-sample (gamma, beta)
+//! gradients need. Norm layers always take the instantiation route
+//! (their per-sample grads are `O(p)`, trivially small — paper
+//! Section 2.2's "norm layers" convention).
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+use crate::util::rng::Xoshiro256;
+
+/// `out = gamma * (x - mu) / sqrt(var + eps) + beta`, per row.
+pub struct LayerNorm {
+    name: String,
+    width: usize,
+}
+
+impl LayerNorm {
+    /// Build a LayerNorm over `width` features.
+    pub fn new(name: String, width: usize) -> Self {
+        Self { name, width }
+    }
+}
+
+impl DpLayer for LayerNorm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.width
+    }
+
+    fn out_width(&self) -> usize {
+        self.width
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        2
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![vec![self.width], vec![self.width]]
+    }
+
+    fn dims(&self, t: usize) -> Option<LayerDims> {
+        Some(LayerDims {
+            kind: LayerKind::Norm,
+            name: self.name.clone(),
+            t: t as u64,
+            d: self.width as u64,
+            p: self.width as u64,
+        })
+    }
+
+    fn cache_lens(&self, ctx: Ctx) -> Vec<usize> {
+        // xhat (rows, width) + inv_std (rows,)
+        vec![ctx.rows() * self.width, ctx.rows()]
+    }
+
+    fn init(&self, _rng: Xoshiro256, params: &mut [Vec<f32>], _is_head: bool) {
+        for v in params[0].iter_mut() {
+            *v = 1.0;
+        }
+        for v in params[1].iter_mut() {
+            *v = 0.0;
+        }
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (xhat, inv_std) = cache.split_at_mut(1);
+        kernels::layernorm_forward(
+            x.feat(),
+            &params[0],
+            &params[1],
+            out,
+            &mut xhat[0],
+            &mut inv_std[0],
+            ctx.rows(),
+            self.width,
+        );
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        kernels::layernorm_backward_data(
+            g_out,
+            &params[0],
+            &cache[0],
+            &cache[1],
+            g_in,
+            ctx.rows(),
+            self.width,
+        );
+    }
+
+    fn accum_sq_norms(
+        &self,
+        _x: LayerIn<'_>,
+        g_out: &[f32],
+        _route: NormRoute,
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        kernels::ln_sq_norms(
+            g_out,
+            &cache[0],
+            ctx.b,
+            ctx.t,
+            self.width,
+            scratch.small,
+            sq,
+            ctx.threads,
+        );
+    }
+
+    fn clipped_grads(
+        &self,
+        _x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (gg, gb) = grads.split_at_mut(1);
+        kernels::ln_weighted_grads(
+            g_out,
+            &cache[0],
+            c,
+            ctx.b,
+            ctx.t,
+            self.width,
+            &mut gg[0],
+            &mut gb[0],
+        );
+    }
+}

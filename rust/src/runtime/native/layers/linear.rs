@@ -1,0 +1,205 @@
+//! Fully connected layer `(d, p)` with bias — the generalized-linear
+//! workhorse of the Book-Keeping algorithm. Supports both norm routes
+//! (ghost Grams, streamed instantiation) plus the stored-psg reuse path
+//! (Opacus / BK-MixOpt instantiation layers).
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+
+/// `out = x . W + b` over `(rows, d)` feature rows.
+pub struct Linear {
+    name: String,
+    d: usize,
+    p: usize,
+}
+
+impl Linear {
+    /// Build a `(d, p)` linear layer.
+    pub fn new(name: String, d: usize, p: usize) -> Self {
+        Self { name, d, p }
+    }
+}
+
+impl DpLayer for Linear {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.d
+    }
+
+    fn out_width(&self) -> usize {
+        self.p
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        2
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![vec![self.d, self.p], vec![self.p]]
+    }
+
+    fn dims(&self, t: usize) -> Option<LayerDims> {
+        Some(LayerDims {
+            kind: LayerKind::Linear,
+            name: self.name.clone(),
+            t: t as u64,
+            d: self.d as u64,
+            p: self.p as u64,
+        })
+    }
+
+    fn psg_len(&self) -> usize {
+        self.d * self.p
+    }
+
+    fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], is_head: bool) {
+        // He init for hidden (ReLU) layers; a damped head so initial
+        // logits are near-uniform (loss ~ ln C, like the artifacts).
+        let scale = if is_head {
+            0.05 * (1.0 / self.d as f32).sqrt()
+        } else {
+            (2.0 / self.d as f32).sqrt()
+        };
+        let mut gs = GaussianSource::from_rng(rng);
+        gs.fill_f32(&mut params[0]);
+        for v in params[0].iter_mut() {
+            *v *= scale;
+        }
+        for v in params[1].iter_mut() {
+            *v = 0.0;
+        }
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        _cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        kernels::linear_forward(
+            x.feat(),
+            &params[0],
+            Some(&params[1]),
+            out,
+            ctx.rows(),
+            self.d,
+            self.p,
+            ctx.threads,
+        );
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        kernels::backward_data(g_out, &params[0], g_in, ctx.rows(), self.d, self.p, ctx.threads);
+    }
+
+    fn accum_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        route: NormRoute,
+        _cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, ctx.t);
+        match route {
+            NormRoute::Ghost => kernels::ghost_norm(
+                x.feat(),
+                g_out,
+                b,
+                t,
+                self.d,
+                self.p,
+                scratch.gram_a,
+                scratch.gram_g,
+                sq,
+                ctx.threads,
+            ),
+            NormRoute::Inst => kernels::psg_norms_streaming(
+                x.feat(),
+                g_out,
+                b,
+                t,
+                self.d,
+                self.p,
+                scratch.stream,
+                sq,
+                ctx.threads,
+            ),
+        }
+        kernels::bias_sq_norms(g_out, b, t, self.p, scratch.small, sq, ctx.threads);
+    }
+
+    fn clipped_grads(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        _cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (gw, gb) = grads.split_at_mut(1);
+        kernels::weighted_grad(
+            x.feat(),
+            g_out,
+            c,
+            ctx.b,
+            ctx.t,
+            self.d,
+            self.p,
+            scratch.partials,
+            &mut gw[0],
+            ctx.threads,
+        );
+        kernels::bias_grad(g_out, c, ctx.b, ctx.t, self.p, &mut gb[0]);
+    }
+
+    fn psg_norms_stored(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        store: &mut [f32],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, ctx.t);
+        kernels::psg_instantiate(x.feat(), g_out, b, t, self.d, self.p, store, ctx.threads);
+        kernels::sq_norms_from_psg(store, b, self.d * self.p, sq, ctx.threads);
+        kernels::bias_sq_norms(g_out, b, t, self.p, scratch.small, sq, ctx.threads);
+    }
+
+    fn psg_weighted_sum(
+        &self,
+        store: &[f32],
+        g_out: &[f32],
+        c: &[f32],
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (gw, gb) = grads.split_at_mut(1);
+        kernels::weighted_sum_psg(store, c, ctx.b, self.d, self.p, &mut gw[0], ctx.threads);
+        kernels::bias_grad(g_out, Some(c), ctx.b, ctx.t, self.p, &mut gb[0]);
+    }
+}

@@ -1,0 +1,507 @@
+//! Composable per-layer DP modules for the native backend.
+//!
+//! The Book-Keeping algorithm is fundamentally *per-layer*: during the
+//! backward pass each trainable layer contributes a per-sample squared
+//! gradient-norm term (via the ghost-norm trick or per-sample
+//! instantiation, whichever `ghost_preferred` picks), and after the
+//! clip factors are known the clipped weighted gradient sum is
+//! assembled layer by layer from the book-kept caches. [`DpLayer`]
+//! captures exactly that contract, and [`StackRun`] threads the
+//! one-pass / two-pass BK schedules through an arbitrary layer stack —
+//! so Embedding and LayerNorm run natively next to Linear + ReLU
+//! without touching the scheduler.
+//!
+//! ## The `DpLayer` contract
+//!
+//! * **Forward** writes `(rows, out_width)` activations and fills the
+//!   layer's arena-held `cache` buffers (declared by
+//!   [`DpLayer::cache_lens`]) with whatever backward needs beyond the
+//!   input activations — e.g. LayerNorm caches `xhat` and `inv_std`.
+//! * **Norms** ([`DpLayer::accum_sq_norms`]) *accumulate* (`+=`) the
+//!   squared Frobenius norm of the layer's per-sample parameter
+//!   gradients into the caller's `sq` slice — one slot per sample of
+//!   the layer's clipping group. No layer ever sees another group's
+//!   accumulator.
+//! * **Clipped sums** ([`DpLayer::clipped_grads`]) accumulate
+//!   `sum_i c_i * dL_i/dtheta` into the caller's gradient tensors
+//!   (`c = None` means the plain non-DP gradient).
+//! * **Arena discipline**: layers never allocate. Per-step buffers come
+//!   from the caller — caches via `cache_lens`, shared scratch via
+//!   [`Scratch`] — and every kernel writes through `&mut` slices.
+//!
+//! Stateless layers (ReLU) implement only `forward`/`backward_data`;
+//! the tape skips their norm and sum hooks entirely.
+
+#![allow(clippy::too_many_arguments)]
+
+pub mod embedding;
+pub mod layernorm;
+pub mod linear;
+pub mod relu;
+
+pub use embedding::Embedding;
+pub use layernorm::LayerNorm;
+pub use linear::Linear;
+pub use relu::Relu;
+
+use super::arena::Arena;
+use super::kernels;
+use super::model::{NativeSpec, PlanOp};
+use crate::arch::LayerDims;
+use crate::bail;
+use crate::error::Result;
+use crate::util::rng::Xoshiro256;
+
+/// Per-layer norm route (the paper's mixed ghost/per-sample decision).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormRoute {
+    /// Ghost norm: Gram-based squared norms, no gradient materialized.
+    Ghost,
+    /// Per-sample instantiation (streamed or stored).
+    Inst,
+}
+
+/// Per-step dimensions and threading shared by every layer call.
+#[derive(Clone, Copy, Debug)]
+pub struct Ctx {
+    /// Samples per physical batch (the paper's B).
+    pub b: usize,
+    /// Tokens per sample (the paper's T).
+    pub t: usize,
+    /// Worker threads for the fan-out kernels.
+    pub threads: usize,
+}
+
+impl Ctx {
+    /// Activation rows per batch (`B * T`).
+    pub fn rows(&self) -> usize {
+        self.b * self.t
+    }
+
+    /// Effective batch-reduction worker count (scratch sizing).
+    pub fn workers(&self) -> usize {
+        self.threads.max(1).min(self.b.max(1))
+    }
+}
+
+/// Input to a layer: feature activations for every layer except an
+/// embedding front layer, which consumes token ids.
+#[derive(Clone, Copy)]
+pub enum LayerIn<'a> {
+    /// `(rows, in_width)` feature rows, row-major.
+    Feat(&'a [f32]),
+    /// `(rows,)` i32 token ids.
+    Tokens(&'a [i32]),
+}
+
+impl<'a> LayerIn<'a> {
+    /// Feature view. Panics on token input — only the embedding layer
+    /// accepts tokens, and it never calls this.
+    pub fn feat(&self) -> &'a [f32] {
+        match *self {
+            LayerIn::Feat(x) => x,
+            LayerIn::Tokens(_) => panic!("layer expected f32 features, got token ids"),
+        }
+    }
+
+    /// Token view. Panics on feature input.
+    pub fn tokens(&self) -> &'a [i32] {
+        match *self {
+            LayerIn::Tokens(x) => x,
+            LayerIn::Feat(_) => panic!("layer expected token ids, got f32 features"),
+        }
+    }
+}
+
+/// Shared per-step scratch, carved out of the arena by the backend and
+/// sized to the worst layer's need (see `NativeBackend` sizing). Layers
+/// may use any prefix; slices can be longer than one layer needs.
+pub struct Scratch<'a> {
+    /// Activation Gram scratch, `>= B*T*T` when any linear layer ghosts
+    /// at `T > 1` (empty otherwise).
+    pub gram_a: &'a mut [f32],
+    /// Output-gradient Gram scratch, same sizing as `gram_a`.
+    pub gram_g: &'a mut [f32],
+    /// Streaming per-sample-gradient scratch, `>= workers * max(d*p)`.
+    pub stream: &'a mut [f32],
+    /// Small per-worker scratch (bias / LayerNorm sums),
+    /// `>= workers * max(p, 2*norm_width)`.
+    pub small: &'a mut [f32],
+    /// Batch-reduction partials for the weighted contraction,
+    /// `>= workers * max(d*p)`.
+    pub partials: &'a mut [f32],
+}
+
+/// One composable DP layer: forward with caching, per-sample norm
+/// contributions, and clipped weighted gradient sums (see the module
+/// docs for the full contract).
+pub trait DpLayer: Send + Sync {
+    /// Stable display name (`fc0`, `emb`, ...).
+    fn name(&self) -> &str;
+
+    /// Input feature width (0 when consuming token ids).
+    fn in_width(&self) -> usize;
+
+    /// Output feature width.
+    fn out_width(&self) -> usize;
+
+    /// Number of trainable tensors (0 for stateless layers).
+    fn n_param_tensors(&self) -> usize;
+
+    /// Shapes of the trainable tensors, in parameter order.
+    fn param_shapes(&self) -> Vec<Vec<usize>>;
+
+    /// Complexity-engine dims for the mixed ghost/per-sample dispatch;
+    /// `None` for stateless layers.
+    fn dims(&self, t: usize) -> Option<LayerDims>;
+
+    /// Per-sample element count of a stored per-sample gradient;
+    /// 0 = the stored-psg route is unsupported for this layer.
+    fn psg_len(&self) -> usize {
+        0
+    }
+
+    /// Arena buffer lengths the forward pass fills for backward reuse.
+    fn cache_lens(&self, ctx: Ctx) -> Vec<usize> {
+        let _ = ctx;
+        Vec::new()
+    }
+
+    /// Initialize this layer's parameters from a forked rng stream.
+    /// `is_head` marks the stack's final trainable layer (damped init).
+    fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], is_head: bool) {
+        let _ = (rng, params, is_head);
+    }
+
+    /// Forward: consume `x`, write `(rows, out_width)` into `out`.
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    );
+
+    /// dL/d input from dL/d output. Never called for the first stack
+    /// layer; layers that can only sit first (embedding) keep the
+    /// default.
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        x: LayerIn<'_>,
+        out: &[f32],
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let _ = (g_out, x, out, params, cache, g_in, ctx);
+        unreachable!("{}: layer cannot back-propagate to its input", self.name());
+    }
+
+    /// Accumulate (`+=`) the per-sample squared norms of this layer's
+    /// parameter gradients into `sq` (`(B,)`, the layer's clip group).
+    fn accum_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        route: NormRoute,
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let _ = (x, g_out, route, cache, scratch, sq, ctx);
+        unreachable!("{}: stateless layer has no norm contributions", self.name());
+    }
+
+    /// Accumulate clipped weighted gradient sums into `grads` (one
+    /// tensor per `param_shapes` entry); `c = None` means the plain
+    /// (non-DP) summed gradient.
+    fn clipped_grads(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let _ = (x, g_out, c, cache, scratch, grads, ctx);
+        unreachable!("{}: stateless layer has no gradients", self.name());
+    }
+
+    /// Stored-psg norm route (layers with `psg_len() > 0` only):
+    /// materialize per-sample grads into `store` (`B * psg_len`) for
+    /// later reuse and accumulate their squared norms into `sq`.
+    fn psg_norms_stored(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        store: &mut [f32],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let _ = (x, g_out, store, scratch, sq, ctx);
+        unreachable!("{}: stored per-sample gradients unsupported", self.name());
+    }
+
+    /// Clipped weighted sum reusing the stored per-sample grads.
+    fn psg_weighted_sum(
+        &self,
+        store: &[f32],
+        g_out: &[f32],
+        c: &[f32],
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let _ = (store, g_out, c, grads, ctx);
+        unreachable!("{}: stored per-sample gradients unsupported", self.name());
+    }
+}
+
+/// Build the executable layer stack from a spec's canonical plan.
+pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
+    let mut out: Vec<Box<dyn DpLayer>> = Vec::new();
+    for (k, l) in spec.plan().into_iter().enumerate() {
+        match l.op {
+            PlanOp::Embedding { vocab, dim } => {
+                if k != 0 {
+                    bail!(
+                        "embedding layer '{}' must be the first layer of model '{}'",
+                        l.name,
+                        spec.name
+                    );
+                }
+                out.push(Box::new(Embedding::new(l.name, vocab, dim)));
+            }
+            PlanOp::Linear { d, p } => out.push(Box::new(Linear::new(l.name, d, p))),
+            PlanOp::Relu { width } => out.push(Box::new(Relu::new(l.name, width))),
+            PlanOp::LayerNorm { width } => out.push(Box::new(LayerNorm::new(l.name, width))),
+        }
+    }
+    if out.is_empty() {
+        bail!("model '{}' has an empty layer stack", spec.name);
+    }
+    Ok(out)
+}
+
+/// The tape: borrows a backend's stack + parameters and threads the
+/// Book-Keeping schedules through it. All per-step buffers come from
+/// the arena passed into each walk; the tape itself holds no state.
+pub struct StackRun<'a> {
+    /// The layer stack, front to head.
+    pub layers: &'a [Box<dyn DpLayer>],
+    /// Flattened trainable tensors, in stack order.
+    pub params: &'a [Vec<f32>],
+    /// Param-tensor offset per layer (`len = layers.len() + 1`).
+    pub offsets: &'a [usize],
+    /// Norm route per layer (meaningful for trainable layers).
+    pub routes: &'a [NormRoute],
+    /// Clipping-group id per layer (meaningful for trainable layers).
+    pub groups: &'a [usize],
+    /// Step dimensions.
+    pub ctx: Ctx,
+}
+
+impl StackRun<'_> {
+    fn params_of(&self, k: usize) -> &[Vec<f32>] {
+        &self.params[self.offsets[k]..self.offsets[k + 1]]
+    }
+
+    fn input_of<'b>(&self, k: usize, acts: &'b [Vec<f32>], input: LayerIn<'b>) -> LayerIn<'b> {
+        if k == 0 {
+            match input {
+                LayerIn::Feat(_) => LayerIn::Feat(acts[0].as_slice()),
+                tokens => tokens,
+            }
+        } else {
+            LayerIn::Feat(acts[k].as_slice())
+        }
+    }
+
+    /// Forward pass: returns `acts` (`acts[k]` = input of layer `k`,
+    /// `acts[n]` = logits; `acts[0]` is empty for token input) and the
+    /// per-layer forward caches. All buffers come from `arena`.
+    pub fn forward(
+        &self,
+        arena: &mut Arena,
+        input: LayerIn<'_>,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>) {
+        let rows = self.ctx.rows();
+        let nl = self.layers.len();
+        let mut caches: Vec<Vec<Vec<f32>>> = Vec::with_capacity(nl);
+        for l in self.layers {
+            let lens = l.cache_lens(self.ctx);
+            caches.push(lens.into_iter().map(|n| arena.take(n)).collect());
+        }
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 1);
+        match input {
+            LayerIn::Feat(x) => {
+                let mut a0 = arena.take(x.len());
+                a0.copy_from_slice(x);
+                acts.push(a0);
+            }
+            // token input: a capacity-0 placeholder, NOT an arena buffer
+            // (arena.take(0) would steal the smallest pooled buffer and
+            // cascade later takes onto mismatched capacities). The
+            // backend's give-back loop skips capacity-0 vecs.
+            LayerIn::Tokens(_) => acts.push(Vec::new()),
+        }
+        for k in 0..nl {
+            let mut out = arena.take(rows * self.layers[k].out_width());
+            let xin = self.input_of(k, &acts, input);
+            self.layers[k].forward(xin, self.params_of(k), &mut out, &mut caches[k], self.ctx);
+            acts.push(out);
+        }
+        (acts, caches)
+    }
+
+    /// Norm backward: one softmax backward walking the stack top-down,
+    /// each trainable layer accumulating its per-sample squared norms
+    /// into its clipping group's row of `sq` (`n_groups * B`, zeroed by
+    /// the caller). Layers with a `psg` store materialize per-sample
+    /// grads for reuse. With `keep_g` the book-kept output gradients of
+    /// every trainable layer are returned (the BK one-pass cache);
+    /// otherwise they are recycled as the walk descends.
+    pub fn norm_pass(
+        &self,
+        arena: &mut Arena,
+        acts: &[Vec<f32>],
+        caches: &[Vec<Vec<f32>>],
+        input: LayerIn<'_>,
+        y: &[i32],
+        scratch: &mut Scratch<'_>,
+        psg: &mut [Option<Vec<f32>>],
+        sq: &mut [f32],
+        keep_g: bool,
+    ) -> (f32, Vec<Option<Vec<f32>>>) {
+        let ctx = self.ctx;
+        let b = ctx.b;
+        let rows = ctx.rows();
+        let nl = self.layers.len();
+        let c_out = self.layers[nl - 1].out_width();
+        let mut kept: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
+        let mut g = arena.take(rows * c_out);
+        let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+        for k in (0..nl).rev() {
+            let layer = &self.layers[k];
+            let xin = self.input_of(k, acts, input);
+            if layer.n_param_tensors() > 0 {
+                let grow = &mut sq[self.groups[k] * b..(self.groups[k] + 1) * b];
+                match psg[k].as_mut() {
+                    Some(store) => layer.psg_norms_stored(xin, &g, store, scratch, grow, ctx),
+                    None => {
+                        layer.accum_sq_norms(xin, &g, self.routes[k], &caches[k], scratch, grow, ctx)
+                    }
+                }
+            }
+            if k > 0 {
+                let mut g_prev = arena.take(rows * layer.in_width());
+                layer.backward_data(
+                    &g,
+                    xin,
+                    &acts[k + 1],
+                    self.params_of(k),
+                    &caches[k],
+                    &mut g_prev,
+                    ctx,
+                );
+                let old = std::mem::replace(&mut g, g_prev);
+                if keep_g && layer.n_param_tensors() > 0 {
+                    kept[k] = Some(old);
+                } else {
+                    arena.give(old);
+                }
+            }
+        }
+        if keep_g && self.layers[0].n_param_tensors() > 0 {
+            kept[0] = Some(g);
+        } else {
+            arena.give(g);
+        }
+        (loss, kept)
+    }
+
+    /// BK one-pass clipped sums: no recompute, every trainable layer
+    /// contracts its book-kept gradient (or stored psg) against its
+    /// group's clip factors (`cfac` is `n_groups * B`).
+    pub fn clipped_from_cache(
+        &self,
+        acts: &[Vec<f32>],
+        caches: &[Vec<Vec<f32>>],
+        input: LayerIn<'_>,
+        kept: &[Option<Vec<f32>>],
+        psg: &[Option<Vec<f32>>],
+        cfac: &[f32],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+    ) {
+        let ctx = self.ctx;
+        let b = ctx.b;
+        for k in (0..self.layers.len()).rev() {
+            let layer = &self.layers[k];
+            if layer.n_param_tensors() == 0 {
+                continue;
+            }
+            let g = kept[k].as_ref().expect("book-kept output gradient");
+            let xin = self.input_of(k, acts, input);
+            let c = &cfac[self.groups[k] * b..(self.groups[k] + 1) * b];
+            let gk = &mut grads[self.offsets[k]..self.offsets[k + 1]];
+            match psg[k].as_ref() {
+                Some(store) => layer.psg_weighted_sum(store, g, c, gk, ctx),
+                None => layer.clipped_grads(xin, g, Some(c), &caches[k], scratch, gk, ctx),
+            }
+        }
+    }
+
+    /// Recompute backward with clipped sums: a fresh softmax backward
+    /// (the honest second backprop of the two-pass strategies, and the
+    /// single backward of non-DP training when `cfac` is `None`).
+    pub fn clipped_recompute(
+        &self,
+        arena: &mut Arena,
+        acts: &[Vec<f32>],
+        caches: &[Vec<Vec<f32>>],
+        input: LayerIn<'_>,
+        y: &[i32],
+        cfac: Option<&[f32]>,
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+    ) -> f32 {
+        let ctx = self.ctx;
+        let b = ctx.b;
+        let rows = ctx.rows();
+        let nl = self.layers.len();
+        let c_out = self.layers[nl - 1].out_width();
+        let mut g = arena.take(rows * c_out);
+        let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+        for k in (0..nl).rev() {
+            let layer = &self.layers[k];
+            let xin = self.input_of(k, acts, input);
+            if layer.n_param_tensors() > 0 {
+                let c = cfac.map(|cf| &cf[self.groups[k] * b..(self.groups[k] + 1) * b]);
+                let gk = &mut grads[self.offsets[k]..self.offsets[k + 1]];
+                layer.clipped_grads(xin, &g, c, &caches[k], scratch, gk, ctx);
+            }
+            if k > 0 {
+                let mut g_prev = arena.take(rows * layer.in_width());
+                layer.backward_data(
+                    &g,
+                    xin,
+                    &acts[k + 1],
+                    self.params_of(k),
+                    &caches[k],
+                    &mut g_prev,
+                    ctx,
+                );
+                arena.give(std::mem::replace(&mut g, g_prev));
+            }
+        }
+        arena.give(g);
+        loss
+    }
+}

@@ -1,0 +1,79 @@
+//! Stateless ReLU layer: `out = max(0, x)` elementwise, fused into a
+//! single pass. Contributes no norms and no gradients — the tape only
+//! routes the data gradient through it (masked by the cached
+//! *post*-activation output, exactly the legacy fused Linear+ReLU
+//! semantics, bitwise).
+
+use super::{Ctx, DpLayer, LayerIn};
+use crate::arch::LayerDims;
+
+/// Elementwise `max(0, x)`.
+pub struct Relu {
+    name: String,
+    width: usize,
+}
+
+impl Relu {
+    /// Build a ReLU over `width` features.
+    pub fn new(name: String, width: usize) -> Self {
+        Self { name, width }
+    }
+}
+
+impl DpLayer for Relu {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.width
+    }
+
+    fn out_width(&self) -> usize {
+        self.width
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        0
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        Vec::new()
+    }
+
+    fn dims(&self, _t: usize) -> Option<LayerDims> {
+        None
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        _params: &[Vec<f32>],
+        out: &mut [f32],
+        _cache: &mut [Vec<f32>],
+        _ctx: Ctx,
+    ) {
+        // single fused pass (not copy + in-place relu): bitwise-equal
+        // values, half the memory traffic on the hot path
+        for (o, &v) in out.iter_mut().zip(x.feat()) {
+            *o = if v < 0.0 { 0.0 } else { v };
+        }
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        out: &[f32],
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        g_in: &mut [f32],
+        _ctx: Ctx,
+    ) {
+        // mask by the cached *post*-activation in one pass (legacy
+        // relu_backward semantics: zero wherever out <= 0)
+        for ((gi, &go), &o) in g_in.iter_mut().zip(g_out).zip(out) {
+            *gi = if o <= 0.0 { 0.0 } else { go };
+        }
+    }
+}

@@ -1,11 +1,11 @@
 //! Native backend: the Book-Keeping DP step end-to-end in Rust.
 //!
-//! Executes generalized-linear models (see `model`) with the fused
-//! kernels in `kernels`, dispatching per layer between the ghost-norm
-//! and per-sample-instantiation routes exactly as the complexity
-//! engine's `ghost_preferred` decides. One `NativeBackend` is
-//! constructed per (model, strategy) pair — mirroring the one
-//! artifact-per-strategy layout of the PJRT path — and implements the
+//! Executes arbitrary stacks of [`layers::DpLayer`] modules (Linear,
+//! ReLU, Embedding, LayerNorm — see `model`) with the fused kernels in
+//! `kernels`, dispatching per layer between the ghost-norm and
+//! per-sample-instantiation routes exactly as the complexity engine's
+//! `ghost_preferred` decides. One `NativeBackend` is constructed per
+//! (model, strategy, clipping style) triple and implements the
 //! [`Backend`](crate::runtime::Backend) trait the coordinator drives.
 //!
 //! Strategy execution plans (paper Table 2):
@@ -21,83 +21,199 @@
 //! | `bk_mixghostclip` | 1         | per-layer min      | weighted contraction |
 //! | `bk_mixopt`       | 1         | per-layer min      | psg reused on inst layers |
 //!
+//! Orthogonally, the [`ClippingStyle`] axis controls clipping
+//! granularity: `all-layer` (one norm over every layer — the paper's
+//! flat clipping, bitwise-identical to the pre-style code), `layer-wise`
+//! (one clip factor per trainable layer), and `group-wise:<k>`
+//! (contiguous layer groups). Each of the `G` groups clips to
+//! `R / sqrt(G)`, keeping total sensitivity `R`, so sigma and the
+//! accountant are untouched.
+//!
 //! All per-step buffers come from the [`arena::Arena`]; after the first
 //! (warm-up) step the pool is saturated and steady-state heap
 //! allocation is zero — asserted by tests and reported by the bench.
 
 pub mod arena;
 pub mod kernels;
+pub mod layers;
 pub mod model;
 pub mod par;
 
+#[cfg(test)]
+pub(crate) mod reference;
+
 use self::arena::Arena;
 use self::kernels::ClipKind;
+use self::layers::{Ctx, DpLayer, LayerIn, NormRoute, Scratch, StackRun};
 use self::model::NativeSpec;
-use crate::complexity::{ghost_preferred, Strategy};
+use crate::arch::LayerKind;
+use crate::complexity::{ghost_preferred, ClippingStyle, Strategy};
 use crate::error::Result;
 use crate::runtime::{AllocStats, Backend, BatchX, ModelInfo, StepHyper, StepOut};
-use crate::util::rng::{GaussianSource, Xoshiro256};
+use crate::util::rng::Xoshiro256;
 use crate::{anyhow, bail};
 
-/// Per-layer norm route (the mixed ghost/per-sample decision).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum NormRoute {
-    Ghost,
-    Inst,
-}
-
+/// A natively executable (model, strategy, clipping style) triple.
 pub struct NativeBackend {
     spec: NativeSpec,
     info: ModelInfo,
     strategy: Strategy,
     clip_kind: ClipKind,
-    /// Norm route per layer (unused for nondp).
+    style: ClippingStyle,
+    /// The executable layer stack (from the spec's canonical plan).
+    stack: Vec<Box<dyn DpLayer>>,
+    /// Param-tensor offset per stack layer (`len = stack.len() + 1`).
+    offsets: Vec<usize>,
+    /// Norm route per stack layer (meaningful for trainable layers).
     routes: Vec<NormRoute>,
-    /// Layers whose per-sample grads are materialized and reused.
+    /// Stack layers whose per-sample grads are materialized and reused.
     store_psg: Vec<bool>,
+    /// Clipping-group id per stack layer (meaningful for trainable).
+    groups: Vec<usize>,
+    /// Number of clipping groups.
+    n_groups: usize,
     threads: usize,
-    /// Trainable tensors in order w0, b0, w1, b1, ...
+    /// Trainable tensors in stack order (w0, b0, ... / emb_w, ln0_g, ...).
     params: Vec<Vec<f32>>,
     opt_m: Vec<Vec<f32>>,
     opt_v: Vec<Vec<f32>>,
     arena: Arena,
     last_fresh: usize,
     initialized: bool,
+    // scratch sizing (computed once from the stack)
+    max_dp: usize,
+    max_small: usize,
+    need_gram: bool,
+    need_stream_two: bool,
+    need_stream_one: bool,
 }
 
 impl NativeBackend {
+    /// Build with the default `all-layer` clipping style (the paper's
+    /// flat clipping; bitwise-identical to the pre-style behavior).
     pub fn new(spec: NativeSpec, strategy: Strategy, threads: usize) -> Result<Self> {
-        let clip_kind = ClipKind::parse(&spec.clip_fn)
-            .ok_or_else(|| anyhow!("unknown clip_fn '{}' in model '{}'", spec.clip_fn, spec.name))?;
+        Self::with_style(spec, strategy, ClippingStyle::AllLayer, threads)
+    }
+
+    /// Build with an explicit clipping style.
+    pub fn with_style(
+        spec: NativeSpec,
+        strategy: Strategy,
+        style: ClippingStyle,
+        threads: usize,
+    ) -> Result<Self> {
+        let clip_kind = ClipKind::parse(&spec.clip_fn).ok_or_else(|| {
+            anyhow!(
+                "unknown clip_fn '{}' in model '{}' (expected one of: abadi, automatic, flat)",
+                spec.clip_fn,
+                spec.name
+            )
+        })?;
         if spec.optimizer != "sgd" && spec.optimizer != "adam" {
-            bail!("unknown optimizer '{}' in model '{}'", spec.optimizer, spec.name);
+            bail!(
+                "unknown optimizer '{}' in model '{}' (expected 'sgd' or 'adam')",
+                spec.optimizer,
+                spec.name
+            );
         }
         if spec.batch == 0 || spec.seq == 0 || spec.d_in == 0 || spec.n_classes == 0 {
             bail!("model '{}' has a zero dimension", spec.name);
         }
-        let layers = spec.arch_layers();
-        let routes: Vec<NormRoute> = layers
+        if spec.vocab > 0 && spec.vocab != spec.n_classes {
+            bail!(
+                "token model '{}' must be next-token (vocab = {}, n_classes = {})",
+                spec.name,
+                spec.vocab,
+                spec.n_classes
+            );
+        }
+        let stack = layers::build_stack(&spec)?;
+        let t = spec.seq;
+        let routes: Vec<NormRoute> = stack
             .iter()
-            .map(|l| match strategy {
-                Strategy::Opacus | Strategy::FastGradClip => NormRoute::Inst,
-                Strategy::GhostClip | Strategy::Bk | Strategy::NonDp => NormRoute::Ghost,
-                Strategy::MixGhostClip | Strategy::BkMixGhostClip | Strategy::BkMixOpt => {
-                    if ghost_preferred(l) {
-                        NormRoute::Ghost
-                    } else {
-                        NormRoute::Inst
+            .map(|l| match l.dims(t) {
+                None => NormRoute::Ghost, // stateless: never consulted
+                Some(d) => match d.kind {
+                    // embeddings ghost via the token-equality mask
+                    // (instantiation would be vocab*dim per sample);
+                    // norm layers instantiate their O(p) grads directly.
+                    LayerKind::Embedding => NormRoute::Ghost,
+                    LayerKind::Norm => NormRoute::Inst,
+                    _ => match strategy {
+                        Strategy::Opacus | Strategy::FastGradClip => NormRoute::Inst,
+                        Strategy::GhostClip | Strategy::Bk | Strategy::NonDp => NormRoute::Ghost,
+                        Strategy::MixGhostClip | Strategy::BkMixGhostClip | Strategy::BkMixOpt => {
+                            if ghost_preferred(&d) {
+                                NormRoute::Ghost
+                            } else {
+                                NormRoute::Inst
+                            }
+                        }
+                    },
+                },
+            })
+            .collect();
+        let store_psg: Vec<bool> = stack
+            .iter()
+            .zip(&routes)
+            .map(|(l, r)| {
+                l.psg_len() > 0
+                    && match strategy {
+                        Strategy::Opacus => true,
+                        Strategy::BkMixOpt => *r == NormRoute::Inst,
+                        _ => false,
+                    }
+            })
+            .collect();
+
+        // clipping groups over trainable layers, in stack order
+        let n_param_layers = stack.iter().filter(|l| l.n_param_tensors() > 0).count();
+        let n_groups = style.n_groups(n_param_layers);
+        let mut groups = vec![0usize; stack.len()];
+        let mut pl = 0usize;
+        for (k, l) in stack.iter().enumerate() {
+            if l.n_param_tensors() > 0 {
+                groups[k] = style.group_of(pl, n_param_layers);
+                pl += 1;
+            }
+        }
+
+        // param-tensor offsets per stack layer
+        let mut offsets = Vec::with_capacity(stack.len() + 1);
+        offsets.push(0usize);
+        for l in &stack {
+            offsets.push(offsets.last().unwrap() + l.n_param_tensors());
+        }
+
+        // shared scratch sizing
+        let mut max_dp = 1usize;
+        let mut max_small = 1usize;
+        let mut need_gram = false;
+        let mut need_stream_two = false;
+        let mut need_stream_one = false;
+        for (k, l) in stack.iter().enumerate() {
+            if let Some(d) = l.dims(t) {
+                match d.kind {
+                    LayerKind::Norm => max_small = max_small.max(2 * d.p as usize),
+                    LayerKind::Embedding => {}
+                    _ => {
+                        let dp = (d.d * d.p) as usize;
+                        max_dp = max_dp.max(dp);
+                        max_small = max_small.max(d.p as usize);
+                        if routes[k] == NormRoute::Ghost && t > 1 {
+                            need_gram = true;
+                        }
+                        if routes[k] == NormRoute::Inst {
+                            need_stream_two = true;
+                            if !store_psg[k] {
+                                need_stream_one = true;
+                            }
+                        }
                     }
                 }
-            })
-            .collect();
-        let store_psg: Vec<bool> = routes
-            .iter()
-            .map(|r| match strategy {
-                Strategy::Opacus => true,
-                Strategy::BkMixOpt => *r == NormRoute::Inst,
-                _ => false,
-            })
-            .collect();
+            }
+        }
+
         let threads = if threads == 0 { par::default_threads() } else { threads };
         let info = spec.info();
         let zeros = || -> Vec<Vec<f32>> {
@@ -112,13 +228,19 @@ impl NativeBackend {
         } else {
             (Vec::new(), Vec::new())
         };
+        debug_assert_eq!(params.len(), *offsets.last().unwrap());
         Ok(Self {
             spec,
             info,
             strategy,
             clip_kind,
+            style,
+            stack,
+            offsets,
             routes,
             store_psg,
+            groups,
+            n_groups,
             threads,
             params,
             opt_m,
@@ -126,11 +248,27 @@ impl NativeBackend {
             arena: Arena::new(),
             last_fresh: 0,
             initialized: false,
+            max_dp,
+            max_small,
+            need_gram,
+            need_stream_two,
+            need_stream_one,
         })
     }
 
+    /// The execution strategy.
     pub fn strategy_enum(&self) -> Strategy {
         self.strategy
+    }
+
+    /// The clipping style.
+    pub fn clipping_style(&self) -> ClippingStyle {
+        self.style
+    }
+
+    /// Number of clipping groups (1 for all-layer).
+    pub fn n_clip_groups(&self) -> usize {
+        self.n_groups
     }
 
     fn two_pass(&self) -> bool {
@@ -144,34 +282,55 @@ impl NativeBackend {
         self.spec.batch * self.spec.seq
     }
 
-    fn max_dp(&self) -> usize {
-        self.spec.layer_widths().iter().map(|&(d, p)| d * p).max().unwrap_or(1)
-    }
-
-    fn max_p(&self) -> usize {
-        self.spec.layer_widths().iter().map(|&(_, p)| p).max().unwrap_or(1)
-    }
-
-    fn features_of<'a>(&self, x: &'a BatchX) -> Result<&'a [f32]> {
-        match x {
-            BatchX::F32(v) => Ok(v.as_slice()),
-            BatchX::I32(_) => {
-                bail!("native backend takes f32 features (token inputs need the pjrt backend)")
-            }
+    fn ctx(&self) -> Ctx {
+        Ctx {
+            b: self.spec.batch,
+            t: self.spec.seq,
+            threads: self.threads,
         }
     }
 
-    fn check_batch(&self, x: &[f32], y: &[i32]) -> Result<()> {
+    fn check_batch(&self, x: &BatchX, y: &[i32]) -> Result<()> {
         let rows = self.rows();
-        if x.len() != rows * self.spec.d_in {
-            bail!(
-                "x has {} elements, expected {} (B*T*d = {}*{}*{})",
-                x.len(),
-                rows * self.spec.d_in,
-                self.spec.batch,
-                self.spec.seq,
-                self.spec.d_in
-            );
+        match (x, self.spec.vocab) {
+            (BatchX::F32(v), 0) => {
+                if v.len() != rows * self.spec.d_in {
+                    bail!(
+                        "x has {} elements, expected {} (B*T*d = {}*{}*{})",
+                        v.len(),
+                        rows * self.spec.d_in,
+                        self.spec.batch,
+                        self.spec.seq,
+                        self.spec.d_in
+                    );
+                }
+            }
+            (BatchX::I32(toks), vocab) if vocab > 0 => {
+                if toks.len() != rows {
+                    bail!(
+                        "x has {} token ids, expected {} (B*T = {}*{})",
+                        toks.len(),
+                        rows,
+                        self.spec.batch,
+                        self.spec.seq
+                    );
+                }
+                if let Some(&bad) = toks.iter().find(|&&tk| tk < 0 || tk as usize >= vocab) {
+                    bail!(
+                        "token id {bad} out of range for vocab {vocab} in model '{}'",
+                        self.spec.name
+                    );
+                }
+            }
+            (BatchX::I32(_), 0) => bail!(
+                "model '{}' takes f32 features, got token ids (token inputs need a vocab > 0 \
+                 embedding model or the pjrt backend)",
+                self.spec.name
+            ),
+            (BatchX::F32(_), _) => bail!(
+                "token model '{}' takes i32 token ids, got f32 features",
+                self.spec.name
+            ),
         }
         if y.len() != rows {
             bail!("y has {} labels, expected {}", y.len(), rows);
@@ -182,44 +341,38 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// Forward pass into arena-held activations; `acts[l]` is the input
-    /// of layer `l`, `acts[n_layers]` the logits.
-    fn forward(&mut self, x: &[f32]) -> Vec<Vec<f32>> {
-        let rows = self.rows();
-        let dims = self.spec.layer_widths();
-        let nl = dims.len();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 1);
-        let mut a0 = self.arena.take(rows * dims[0].0);
-        a0.copy_from_slice(x);
-        acts.push(a0);
-        for &(_, p) in &dims {
-            acts.push(self.arena.take(rows * p));
+    fn layer_input<'a>(&self, x: &'a BatchX) -> LayerIn<'a> {
+        match x {
+            BatchX::F32(v) => LayerIn::Feat(v.as_slice()),
+            BatchX::I32(v) => LayerIn::Tokens(v.as_slice()),
         }
-        for (l, &(d, p)) in dims.iter().enumerate() {
-            let (head, tail) = acts.split_at_mut(l + 1);
-            kernels::linear_forward(
-                &head[l],
-                &self.params[2 * l],
-                Some(&self.params[2 * l + 1]),
-                &mut tail[0],
-                rows,
-                d,
-                p,
-                self.threads,
-            );
-            if l + 1 < nl {
-                kernels::relu_forward(&mut tail[0]);
-            }
-        }
-        acts
     }
 
-    /// Compute per-tensor gradient sums into `grads` (2 per layer,
-    /// zero-initialized by the caller): the plain gradient for nondp,
-    /// the clipped-per-sample sum for every DP strategy.
+    /// Per-group clip factors from the grouped squared norms. With `G`
+    /// groups each group clips to `R / sqrt(G)` (total sensitivity `R`).
+    fn grouped_clip_factors(&self, sq: &[f32], clip: f32, cfac: &mut [f32]) {
+        let b = self.spec.batch;
+        let rg = if self.n_groups == 1 {
+            clip
+        } else {
+            clip / (self.n_groups as f32).sqrt()
+        };
+        for gi in 0..self.n_groups {
+            kernels::clip_factors(
+                &sq[gi * b..(gi + 1) * b],
+                rg,
+                self.clip_kind,
+                &mut cfac[gi * b..(gi + 1) * b],
+            );
+        }
+    }
+
+    /// Compute per-tensor gradient sums into `grads` (one per trainable
+    /// tensor, zero-initialized by the caller): the plain gradient for
+    /// nondp, the clipped-per-sample sum for every DP strategy.
     fn compute_grads(
         &mut self,
-        x: &[f32],
+        x: &BatchX,
         y: &[i32],
         clip: f32,
         grads: &mut [Vec<f32>],
@@ -228,272 +381,164 @@ impl NativeBackend {
         let b = self.spec.batch;
         let t = self.spec.seq;
         let rows = self.rows();
-        let dims = self.spec.layer_widths();
-        let nl = dims.len();
-        let c_out = dims[nl - 1].1;
-        debug_assert_eq!(grads.len(), 2 * nl);
-        let threads = self.threads;
-        let workers = threads.max(1).min(b.max(1));
+        let nl = self.stack.len();
+        let workers = self.ctx().workers();
+        debug_assert_eq!(grads.len(), self.params.len());
+        let input = self.layer_input(x);
+        // field-disjoint borrows: the tape reads the stack/params while
+        // the arena hands out step buffers
+        let run = StackRun {
+            layers: &self.stack,
+            params: &self.params,
+            offsets: &self.offsets,
+            routes: &self.routes,
+            groups: &self.groups,
+            ctx: self.ctx(),
+        };
 
-        let mut acts = self.forward(x);
+        let (mut acts, mut caches) = run.forward(&mut self.arena, input);
 
-        let out = if self.strategy == Strategy::NonDp {
+        let (loss, mean_clip, group_clip) = if self.strategy == Strategy::NonDp {
             // -- single backward, plain summed gradients ---------------
-            let mut g = self.arena.take(rows * c_out);
-            let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
-            let mut partials = self.arena.take(workers * self.max_dp());
-            for l in (0..nl).rev() {
-                let (d, p) = dims[l];
-                kernels::weighted_grad(
-                    &acts[l], &g, None, b, t, d, p, &mut partials, &mut grads[2 * l], threads,
-                );
-                kernels::bias_grad(&g, None, b, t, p, &mut grads[2 * l + 1]);
-                if l > 0 {
-                    let mut g_prev = self.arena.take(rows * d);
-                    kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
-                    kernels::relu_backward(&mut g_prev, &acts[l]);
-                    self.arena.give(std::mem::replace(&mut g, g_prev));
-                }
-            }
-            self.arena.give(g);
+            let mut small = self.arena.take(workers * self.max_small);
+            let mut partials = self.arena.take(workers * self.max_dp);
+            let mut none_a: Vec<f32> = Vec::new();
+            let mut none_g: Vec<f32> = Vec::new();
+            let mut none_s: Vec<f32> = Vec::new();
+            let loss = {
+                let mut scratch = Scratch {
+                    gram_a: &mut none_a[..],
+                    gram_g: &mut none_g[..],
+                    stream: &mut none_s[..],
+                    small: &mut small[..],
+                    partials: &mut partials[..],
+                };
+                run.clipped_recompute(
+                    &mut self.arena,
+                    &acts,
+                    &caches,
+                    input,
+                    y,
+                    None,
+                    &mut scratch,
+                    grads,
+                )
+            };
             self.arena.give(partials);
-            StepOut {
-                loss: loss / rows as f32,
-                mean_clip: 1.0,
-            }
-        } else if self.two_pass() {
-            self.grads_two_pass(&acts, y, clip, grads)?
+            self.arena.give(small);
+            (loss, 1.0, vec![1.0])
         } else {
-            self.grads_one_pass(&acts, y, clip, grads)?
-        };
-
-        while let Some(a) = acts.pop() {
-            self.arena.give(a);
-        }
-        Ok(out)
-    }
-
-    /// GhostClip / FastGradClip / MixGhostClip: norm pass + a second
-    /// backward that re-derives the output gradients for the clipped
-    /// contraction (the honest 2-backprop cost of Table 2).
-    fn grads_two_pass(
-        &mut self,
-        acts: &[Vec<f32>],
-        y: &[i32],
-        clip: f32,
-        grads: &mut [Vec<f32>],
-    ) -> Result<StepOut> {
-        let b = self.spec.batch;
-        let t = self.spec.seq;
-        let rows = self.rows();
-        let dims = self.spec.layer_widths();
-        let nl = dims.len();
-        let c_out = dims[nl - 1].1;
-        let threads = self.threads;
-        let workers = threads.max(1).min(b.max(1));
-
-        let need_gram = t > 1 && self.routes.iter().any(|r| *r == NormRoute::Ghost);
-        let need_stream = self.routes.iter().any(|r| *r == NormRoute::Inst);
-        let mut gram_a = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
-        let mut gram_g = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
-        let mut stream = if need_stream {
-            self.arena.take(workers * self.max_dp())
-        } else {
-            Vec::new()
-        };
-        let mut bias_scratch = self.arena.take(workers * self.max_p());
-        let mut sq = self.arena.take(b);
-
-        // ---- pass 1: norms ------------------------------------------
-        let mut g = self.arena.take(rows * c_out);
-        let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
-        for l in (0..nl).rev() {
-            let (d, p) = dims[l];
-            match self.routes[l] {
-                NormRoute::Ghost => kernels::ghost_norm(
-                    &acts[l], &g, b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads,
-                ),
-                NormRoute::Inst => kernels::psg_norms_streaming(
-                    &acts[l], &g, b, t, d, p, &mut stream, &mut sq, threads,
-                ),
-            }
-            kernels::bias_sq_norms(&g, b, t, p, &mut bias_scratch, &mut sq, threads);
-            if l > 0 {
-                let mut g_prev = self.arena.take(rows * d);
-                kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
-                kernels::relu_backward(&mut g_prev, &acts[l]);
-                self.arena.give(std::mem::replace(&mut g, g_prev));
-            }
-        }
-        self.arena.give(g);
-
-        let mut cfac = self.arena.take(b);
-        kernels::clip_factors(&sq, clip, self.clip_kind, &mut cfac);
-        let mean_clip = cfac.iter().sum::<f32>() / b as f32;
-
-        // ---- pass 2: re-backpropagate + clipped contraction ----------
-        let mut partials = self.arena.take(workers * self.max_dp());
-        let mut g = self.arena.take(rows * c_out);
-        kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
-        for l in (0..nl).rev() {
-            let (d, p) = dims[l];
-            kernels::weighted_grad(
-                &acts[l],
-                &g,
-                Some(&cfac),
-                b,
-                t,
-                d,
-                p,
-                &mut partials,
-                &mut grads[2 * l],
-                threads,
-            );
-            kernels::bias_grad(&g, Some(&cfac), b, t, p, &mut grads[2 * l + 1]);
-            if l > 0 {
-                let mut g_prev = self.arena.take(rows * d);
-                kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
-                kernels::relu_backward(&mut g_prev, &acts[l]);
-                self.arena.give(std::mem::replace(&mut g, g_prev));
-            }
-        }
-        self.arena.give(g);
-        self.arena.give(partials);
-        self.arena.give(cfac);
-        self.arena.give(sq);
-        self.arena.give(bias_scratch);
-        if need_stream {
-            self.arena.give(stream);
-        }
-        if need_gram {
-            self.arena.give(gram_g);
-            self.arena.give(gram_a);
-        }
-        Ok(StepOut {
-            loss: loss / rows as f32,
-            mean_clip,
-        })
-    }
-
-    /// Opacus / BK / BK-MixGhostClip / BK-MixOpt: one backward with the
-    /// output gradients book-kept per layer; norms inline; the clipped
-    /// sum reuses the caches (and, for Opacus / MixOpt-inst layers, the
-    /// materialized per-sample grads) — no second backprop.
-    fn grads_one_pass(
-        &mut self,
-        acts: &[Vec<f32>],
-        y: &[i32],
-        clip: f32,
-        grads: &mut [Vec<f32>],
-    ) -> Result<StepOut> {
-        let b = self.spec.batch;
-        let t = self.spec.seq;
-        let rows = self.rows();
-        let dims = self.spec.layer_widths();
-        let nl = dims.len();
-        let c_out = dims[nl - 1].1;
-        let threads = self.threads;
-        let workers = threads.max(1).min(b.max(1));
-
-        let need_gram = t > 1 && self.routes.iter().any(|r| *r == NormRoute::Ghost);
-        let need_stream = self
-            .routes
-            .iter()
-            .zip(&self.store_psg)
-            .any(|(r, s)| *r == NormRoute::Inst && !s);
-        let mut gram_a = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
-        let mut gram_g = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
-        let mut stream = if need_stream {
-            self.arena.take(workers * self.max_dp())
-        } else {
-            Vec::new()
-        };
-        let mut bias_scratch = self.arena.take(workers * self.max_p());
-        let mut sq = self.arena.take(b);
-        let mut psg: Vec<Option<Vec<f32>>> = Vec::with_capacity(nl);
-        for l in 0..nl {
-            let (d, p) = dims[l];
-            if self.store_psg[l] {
-                psg.push(Some(self.arena.take(b * d * p)));
+            let two = self.two_pass();
+            let need_stream = if two { self.need_stream_two } else { self.need_stream_one };
+            let mut gram_a = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+            let mut gram_g = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+            let mut stream = if need_stream {
+                self.arena.take(workers * self.max_dp)
             } else {
-                psg.push(None);
+                Vec::new()
+            };
+            let mut small = self.arena.take(workers * self.max_small);
+            let mut partials = self.arena.take(workers * self.max_dp);
+            let mut sq = self.arena.take(self.n_groups * b);
+            let mut psg: Vec<Option<Vec<f32>>> = Vec::with_capacity(nl);
+            for k in 0..nl {
+                if !two && self.store_psg[k] {
+                    let n = b * self.stack[k].psg_len();
+                    psg.push(Some(self.arena.take(n)));
+                } else {
+                    psg.push(None);
+                }
             }
-        }
 
-        // ---- single backward: cache g, norms inline ------------------
-        let mut gcache: Vec<Vec<f32>> = dims.iter().map(|&(_, p)| self.arena.take(rows * p)).collect();
-        let loss = {
-            let top = &mut gcache[nl - 1];
-            kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(top))
+            // ---- pass 1: norms (book-keeping g for one-pass) ---------
+            let (loss, kept) = {
+                let mut scratch = Scratch {
+                    gram_a: &mut gram_a[..],
+                    gram_g: &mut gram_g[..],
+                    stream: &mut stream[..],
+                    small: &mut small[..],
+                    partials: &mut partials[..],
+                };
+                run.norm_pass(
+                    &mut self.arena,
+                    &acts,
+                    &caches,
+                    input,
+                    y,
+                    &mut scratch,
+                    &mut psg,
+                    &mut sq,
+                    !two,
+                )
+            };
+
+            let mut cfac = self.arena.take(self.n_groups * b);
+            self.grouped_clip_factors(&sq, clip, &mut cfac);
+            let mean_clip = cfac.iter().sum::<f32>() / (self.n_groups * b) as f32;
+            let group_clip: Vec<f32> = (0..self.n_groups)
+                .map(|gi| cfac[gi * b..(gi + 1) * b].iter().sum::<f32>() / b as f32)
+                .collect();
+
+            // ---- pass 2: clipped sums (cached or recomputed) ---------
+            {
+                let mut scratch = Scratch {
+                    gram_a: &mut gram_a[..],
+                    gram_g: &mut gram_g[..],
+                    stream: &mut stream[..],
+                    small: &mut small[..],
+                    partials: &mut partials[..],
+                };
+                if two {
+                    run.clipped_recompute(
+                        &mut self.arena,
+                        &acts,
+                        &caches,
+                        input,
+                        y,
+                        Some(&cfac),
+                        &mut scratch,
+                        grads,
+                    );
+                } else {
+                    run.clipped_from_cache(
+                        &acts, &caches, input, &kept, &psg, &cfac, &mut scratch, grads,
+                    );
+                }
+            }
+
+            for buf in kept.into_iter().flatten() {
+                self.arena.give(buf);
+            }
+            for buf in psg.into_iter().flatten() {
+                self.arena.give(buf);
+            }
+            self.arena.give(cfac);
+            self.arena.give(sq);
+            self.arena.give(partials);
+            self.arena.give(small);
+            if need_stream {
+                self.arena.give(stream);
+            }
+            if self.need_gram {
+                self.arena.give(gram_g);
+                self.arena.give(gram_a);
+            }
+            (loss, mean_clip, group_clip)
         };
-        for l in (0..nl).rev() {
-            let (d, p) = dims[l];
-            match (self.routes[l], psg[l].as_mut()) {
-                (NormRoute::Inst, Some(store)) => {
-                    kernels::psg_instantiate(&acts[l], &gcache[l], b, t, d, p, store, threads);
-                    kernels::sq_norms_from_psg(store, b, d * p, &mut sq, threads);
-                }
-                (NormRoute::Inst, None) => kernels::psg_norms_streaming(
-                    &acts[l], &gcache[l], b, t, d, p, &mut stream, &mut sq, threads,
-                ),
-                (NormRoute::Ghost, _) => kernels::ghost_norm(
-                    &acts[l], &gcache[l], b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads,
-                ),
-            }
-            kernels::bias_sq_norms(&gcache[l], b, t, p, &mut bias_scratch, &mut sq, threads);
-            if l > 0 {
-                let (lo, hi) = gcache.split_at_mut(l);
-                kernels::backward_data(&hi[0], &self.params[2 * l], &mut lo[l - 1], rows, d, p, threads);
-                kernels::relu_backward(&mut lo[l - 1], &acts[l]);
-            }
-        }
 
-        let mut cfac = self.arena.take(b);
-        kernels::clip_factors(&sq, clip, self.clip_kind, &mut cfac);
-        let mean_clip = cfac.iter().sum::<f32>() / b as f32;
-
-        // ---- book-kept clipped sums (no recompute) -------------------
-        let mut partials = self.arena.take(workers * self.max_dp());
-        for l in (0..nl).rev() {
-            let (d, p) = dims[l];
-            match &psg[l] {
-                Some(store) => {
-                    kernels::weighted_sum_psg(store, &cfac, b, d, p, &mut grads[2 * l], threads)
-                }
-                None => kernels::weighted_grad(
-                    &acts[l],
-                    &gcache[l],
-                    Some(&cfac),
-                    b,
-                    t,
-                    d,
-                    p,
-                    &mut partials,
-                    &mut grads[2 * l],
-                    threads,
-                ),
+        for c in caches.drain(..) {
+            self.arena.give_all(c);
+        }
+        while let Some(a) = acts.pop() {
+            // the token-input placeholder act is not an arena buffer
+            if a.capacity() > 0 {
+                self.arena.give(a);
             }
-            kernels::bias_grad(&gcache[l], Some(&cfac), b, t, p, &mut grads[2 * l + 1]);
-        }
-
-        self.arena.give(partials);
-        self.arena.give(cfac);
-        self.arena.give_all(gcache);
-        for slot in psg.into_iter().flatten() {
-            self.arena.give(slot);
-        }
-        self.arena.give(sq);
-        self.arena.give(bias_scratch);
-        if need_stream {
-            self.arena.give(stream);
-        }
-        if need_gram {
-            self.arena.give(gram_g);
-            self.arena.give(gram_a);
         }
         Ok(StepOut {
             loss: loss / rows as f32,
             mean_clip,
+            group_clip,
         })
     }
 
@@ -556,25 +601,23 @@ impl Backend for NativeBackend {
 
     fn init(&mut self, seed: u64) -> Result<()> {
         let root = Xoshiro256::new(seed ^ 0x1A17_F00D);
-        let dims = self.spec.layer_widths();
-        let nl = dims.len();
-        for (l, &(d, p)) in dims.iter().enumerate() {
-            // He init for hidden (ReLU) layers; a damped head so initial
-            // logits are near-uniform (loss ~ ln C, like the artifacts).
-            let scale = if l + 1 < nl {
-                (2.0 / d as f32).sqrt()
-            } else {
-                0.05 * (1.0 / d as f32).sqrt()
-            };
-            let mut gs = GaussianSource::from_rng(root.fork(l as u64 + 1));
-            let w = &mut self.params[2 * l];
-            gs.fill_f32(w);
-            for v in w.iter_mut() {
-                *v *= scale;
+        let head_k = self
+            .stack
+            .iter()
+            .rposition(|l| l.n_param_tensors() > 0)
+            .expect("stack has a trainable layer");
+        let mut pl = 0u64;
+        for (k, layer) in self.stack.iter().enumerate() {
+            let np = layer.n_param_tensors();
+            if np == 0 {
+                continue;
             }
-            for v in self.params[2 * l + 1].iter_mut() {
-                *v = 0.0;
-            }
+            // one forked stream per trainable layer, in stack order
+            // (identical to the legacy per-linear-layer forks for MLPs)
+            let rng = root.fork(pl + 1);
+            pl += 1;
+            let off = self.offsets[k];
+            layer.init(rng, &mut self.params[off..off + np], k == head_k);
         }
         for t in self.opt_m.iter_mut().chain(self.opt_v.iter_mut()) {
             for v in t.iter_mut() {
@@ -586,21 +629,33 @@ impl Backend for NativeBackend {
     }
 
     fn eval_loss(&mut self, x: &BatchX, y: &[i32]) -> Result<f32> {
-        let x = self.features_of(x)?;
         self.check_batch(x, y)?;
         let rows = self.rows();
-        let dims = self.spec.layer_widths();
-        let nl = dims.len();
-        let mut acts = self.forward(x);
-        let loss = kernels::softmax_xent(&acts[nl], y, rows, dims[nl - 1].1, None);
+        let nl = self.stack.len();
+        let c_out = self.stack[nl - 1].out_width();
+        let input = self.layer_input(x);
+        let run = StackRun {
+            layers: &self.stack,
+            params: &self.params,
+            offsets: &self.offsets,
+            routes: &self.routes,
+            groups: &self.groups,
+            ctx: self.ctx(),
+        };
+        let (mut acts, mut caches) = run.forward(&mut self.arena, input);
+        let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, None);
+        for c in caches.drain(..) {
+            self.arena.give_all(c);
+        }
         while let Some(a) = acts.pop() {
-            self.arena.give(a);
+            if a.capacity() > 0 {
+                self.arena.give(a);
+            }
         }
         Ok(loss / rows as f32)
     }
 
     fn step(&mut self, x: &BatchX, y: &[i32], noise: &[Vec<f32>], h: &StepHyper) -> Result<StepOut> {
-        let x = self.features_of(x)?;
         self.arena.begin_step();
         let mut grads = self.take_grad_bufs();
         let out = self.compute_grads(x, y, h.clip, &mut grads);
@@ -617,7 +672,6 @@ impl Backend for NativeBackend {
     }
 
     fn clipped_grads(&mut self, x: &BatchX, y: &[i32], clip: f32) -> Result<(Vec<Vec<f32>>, StepOut)> {
-        let x = self.features_of(x)?;
         self.arena.begin_step();
         // The gradient sums are handed to the caller (host-side
         // accumulation), so they are plain Vecs rather than arena
@@ -696,17 +750,38 @@ mod tests {
             n_classes: 3,
             optimizer: "sgd".into(),
             clip_fn: "automatic".into(),
+            ..NativeSpec::default()
+        }
+    }
+
+    fn tiny_tok_spec() -> NativeSpec {
+        NativeSpec {
+            name: "tiny_tok".into(),
+            batch: 4,
+            seq: 5,
+            d_in: 6,
+            hidden: vec![9],
+            n_classes: 11,
+            optimizer: "sgd".into(),
+            clip_fn: "automatic".into(),
+            vocab: 11,
+            layernorm: true,
+            ..NativeSpec::default()
         }
     }
 
     fn batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
         let rows = spec.batch * spec.seq;
         let mut rng = Xoshiro256::new(seed);
-        let x: Vec<f32> = (0..rows * spec.d_in).map(|_| rng.next_f32() - 0.5).collect();
+        let x = if spec.vocab > 0 {
+            BatchX::I32((0..rows).map(|_| rng.next_below(spec.vocab as u64) as i32).collect())
+        } else {
+            BatchX::F32((0..rows * spec.d_in).map(|_| rng.next_f32() - 0.5).collect())
+        };
         let y: Vec<i32> = (0..rows)
             .map(|_| rng.next_below(spec.n_classes as u64) as i32)
             .collect();
-        (BatchX::F32(x), y)
+        (x, y)
     }
 
     fn hyper() -> StepHyper {
@@ -735,26 +810,36 @@ mod tests {
 
     #[test]
     fn arena_reaches_steady_state() {
-        for strat in [
-            Strategy::NonDp,
-            Strategy::Opacus,
-            Strategy::FastGradClip,
-            Strategy::GhostClip,
-            Strategy::Bk,
-            Strategy::BkMixOpt,
-        ] {
-            let (x, y) = batch_for(&tiny_spec(), 9);
-            let mut be = NativeBackend::new(tiny_spec(), strat, 2).unwrap();
-            be.init(1).unwrap();
-            be.step(&x, &y, &[], &hyper()).unwrap();
-            assert!(be.alloc_stats().fresh_allocs_last_step > 0, "cold step allocates");
-            for _ in 0..3 {
-                be.step(&x, &y, &[], &hyper()).unwrap();
-                assert_eq!(
-                    be.alloc_stats().fresh_allocs_last_step,
-                    0,
-                    "{strat:?}: steady-state step must not allocate"
-                );
+        for spec in [tiny_spec(), tiny_tok_spec()] {
+            for strat in [
+                Strategy::NonDp,
+                Strategy::Opacus,
+                Strategy::FastGradClip,
+                Strategy::GhostClip,
+                Strategy::Bk,
+                Strategy::BkMixOpt,
+            ] {
+                for style in [
+                    ClippingStyle::AllLayer,
+                    ClippingStyle::LayerWise,
+                    ClippingStyle::GroupWise(2),
+                ] {
+                    let (x, y) = batch_for(&spec, 9);
+                    let mut be =
+                        NativeBackend::with_style(spec.clone(), strat, style, 2).unwrap();
+                    be.init(1).unwrap();
+                    be.step(&x, &y, &[], &hyper()).unwrap();
+                    assert!(be.alloc_stats().fresh_allocs_last_step > 0, "cold step allocates");
+                    for _ in 0..3 {
+                        be.step(&x, &y, &[], &hyper()).unwrap();
+                        assert_eq!(
+                            be.alloc_stats().fresh_allocs_last_step,
+                            0,
+                            "{}/{strat:?}/{style:?}: steady-state step must not allocate",
+                            spec.name
+                        );
+                    }
+                }
             }
         }
     }
@@ -776,6 +861,31 @@ mod tests {
     }
 
     #[test]
+    fn token_model_trains_all_styles() {
+        let spec = tiny_tok_spec();
+        for style in [
+            ClippingStyle::AllLayer,
+            ClippingStyle::LayerWise,
+            ClippingStyle::GroupWise(2),
+        ] {
+            let (x, y) = batch_for(&spec, 13);
+            let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+            be.init(5).unwrap();
+            let l0 = be.eval_loss(&x, &y).unwrap();
+            let mut h = hyper();
+            h.lr = 0.5;
+            let mut out = StepOut::default();
+            for _ in 0..25 {
+                out = be.step(&x, &y, &[], &h).unwrap();
+            }
+            let l1 = be.eval_loss(&x, &y).unwrap();
+            assert!(l1 < l0, "{style:?}: loss should fall: {l0} -> {l1}");
+            assert_eq!(out.group_clip.len(), be.n_clip_groups());
+            assert!(out.group_clip.iter().all(|c| c.is_finite() && *c > 0.0));
+        }
+    }
+
+    #[test]
     fn rejects_bad_shapes_and_tokens() {
         let mut be = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
         be.init(0).unwrap();
@@ -785,6 +895,32 @@ mod tests {
         assert!(be.step(&x, &[0; 3], &[], &hyper()).is_err());
         let tok = BatchX::I32(vec![0; 32]);
         assert!(be.eval_loss(&tok, &[0; 4]).is_err());
+
+        // token models reject features and out-of-range ids
+        let mut tb = NativeBackend::new(tiny_tok_spec(), Strategy::Bk, 1).unwrap();
+        tb.init(0).unwrap();
+        let feats = BatchX::F32(vec![0.0; 4 * 5 * 6]);
+        assert!(tb.eval_loss(&feats, &[0; 20]).is_err());
+        let big = BatchX::I32(vec![99; 20]);
+        let err = tb.eval_loss(&big, &[0; 20]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn new_splits_clip_and_optimizer_errors() {
+        let mut s = tiny_spec();
+        s.clip_fn = "quantum".into();
+        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        assert!(err.contains("unknown clip_fn 'quantum'"), "{err}");
+        assert!(err.contains("abadi"), "lists the valid clip_fns: {err}");
+        assert!(!err.contains("optimizer"), "clip error must not mention optimizers: {err}");
+
+        let mut s = tiny_spec();
+        s.optimizer = "lion".into();
+        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        assert!(err.contains("unknown optimizer 'lion'"), "{err}");
+        assert!(err.contains("sgd"), "lists the valid optimizers: {err}");
+        assert!(!err.contains("clip_fn"), "optimizer error must not mention clip_fn: {err}");
     }
 
     #[test]
@@ -801,5 +937,43 @@ mod tests {
         assert_eq!(la, lb);
         let mut c = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
         assert!(c.load_state(vec![vec![0.0; 1]]).is_err());
+    }
+
+    #[test]
+    fn group_wise_one_group_is_all_layer_bitwise() {
+        // group-wise:1 must be exactly flat clipping (R_1 = R).
+        for spec in [tiny_spec(), tiny_tok_spec()] {
+            let (x, y) = batch_for(&spec, 21);
+            let run = |style: ClippingStyle| -> Vec<Vec<f32>> {
+                let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+                be.init(4).unwrap();
+                be.step(&x, &y, &[], &hyper()).unwrap();
+                be.state().unwrap()
+            };
+            assert_eq!(
+                run(ClippingStyle::AllLayer),
+                run(ClippingStyle::GroupWise(1)),
+                "{}: group-wise:1 must match all-layer bitwise",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn layer_wise_is_group_wise_n_bitwise() {
+        let spec = tiny_tok_spec();
+        let n_param_layers = spec.plan().iter().filter(|l| !l.param_names.is_empty()).count();
+        let (x, y) = batch_for(&spec, 22);
+        let run = |style: ClippingStyle| -> Vec<Vec<f32>> {
+            let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+            be.init(4).unwrap();
+            be.step(&x, &y, &[], &hyper()).unwrap();
+            be.state().unwrap()
+        };
+        assert_eq!(
+            run(ClippingStyle::LayerWise),
+            run(ClippingStyle::GroupWise(n_param_layers)),
+            "layer-wise must equal group-wise:{n_param_layers} bitwise"
+        );
     }
 }

@@ -1,88 +1,260 @@
-//! Native model specs: generalized-linear stacks (MLPs over flat or
-//! sequential inputs) executed entirely by the native kernels — no AOT
-//! artifacts, no manifest.
+//! Native model specs: layer stacks executed entirely by the native
+//! kernels — no AOT artifacts, no manifest.
 //!
-//! A spec is a shape recipe: input width `d_in`, hidden widths, class
-//! count, and the paper's `T` (tokens per sample; 1 for plain MLPs).
-//! Sequential specs (`seq > 1`) classify every token, so per-sample
-//! gradients sum over `T` and the ghost-norm Gram path is exercised
-//! end-to-end; the mixed ghost/per-sample decision is evaluated per
-//! layer from the complexity engine on these dims.
+//! A spec is a shape recipe: input width `d_in` (the embedding dimension
+//! for token models), hidden widths, class count, and the paper's `T`
+//! (tokens per sample; 1 for plain MLPs). `vocab > 0` prepends an
+//! `Embedding(vocab, d_in)` front layer consuming i32 token ids, and
+//! `layernorm` inserts a LayerNorm after the embedding and after every
+//! hidden linear layer.
+//!
+//! Every shape-derived view — [`NativeSpec::layer_widths`],
+//! [`NativeSpec::n_params`], [`NativeSpec::arch_layers`],
+//! [`NativeSpec::info`], and the executable layer stack built by
+//! [`super::layers::build_stack`] — derives from the **one** canonical
+//! iterator [`NativeSpec::plan`], so a new layer kind cannot drift
+//! between the parameter census, the complexity dims, and the runtime.
 
 use crate::arch::{LayerDims, LayerKind};
 use crate::runtime::ModelInfo;
 use std::collections::BTreeMap;
 
+/// One operation in a native layer stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanOp {
+    /// Token embedding lookup: a `(vocab, dim)` table consuming i32 ids.
+    Embedding {
+        /// Vocabulary size (token ids are `0..vocab`).
+        vocab: usize,
+        /// Embedding dimension.
+        dim: usize,
+    },
+    /// Fully connected `(d, p)` with bias.
+    Linear {
+        /// Input feature width.
+        d: usize,
+        /// Output feature width.
+        p: usize,
+    },
+    /// Elementwise `max(0, x)`.
+    Relu {
+        /// Feature width (unchanged by the op).
+        width: usize,
+    },
+    /// LayerNorm over the feature axis with affine `(gamma, beta)`.
+    LayerNorm {
+        /// Normalized feature width.
+        width: usize,
+    },
+}
+
+/// One planned layer: the op plus its display / parameter names.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlannedLayer {
+    /// Display name (`fc0`, `emb`, `ln1`, ...).
+    pub name: String,
+    /// The operation.
+    pub op: PlanOp,
+    /// Names of this layer's trainable tensors, in parameter order.
+    pub param_names: Vec<String>,
+}
+
+impl PlannedLayer {
+    /// Output feature width of the op.
+    pub fn out_width(&self) -> usize {
+        match self.op {
+            PlanOp::Embedding { dim, .. } => dim,
+            PlanOp::Linear { p, .. } => p,
+            PlanOp::Relu { width } | PlanOp::LayerNorm { width } => width,
+        }
+    }
+
+    /// Shapes of the trainable tensors, matching `param_names` order.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        match self.op {
+            PlanOp::Embedding { vocab, dim } => vec![vec![vocab, dim]],
+            PlanOp::Linear { d, p } => vec![vec![d, p], vec![p]],
+            PlanOp::Relu { .. } => Vec::new(),
+            PlanOp::LayerNorm { width } => vec![vec![width], vec![width]],
+        }
+    }
+
+    /// Complexity-engine dims (`None` for stateless ops), in the
+    /// paper's (T, d, p) convention at sequence length `t`.
+    pub fn dims(&self, t: usize) -> Option<LayerDims> {
+        let (kind, d, p) = match self.op {
+            PlanOp::Embedding { vocab, dim } => (LayerKind::Embedding, vocab, dim),
+            PlanOp::Linear { d, p } => (LayerKind::Linear, d, p),
+            PlanOp::Relu { .. } => return None,
+            PlanOp::LayerNorm { width } => (LayerKind::Norm, width, width),
+        };
+        Some(LayerDims {
+            kind,
+            name: self.name.clone(),
+            t: t as u64,
+            d: d as u64,
+            p: p as u64,
+        })
+    }
+}
+
+/// Shape recipe for a natively executable model.
 #[derive(Clone, Debug)]
 pub struct NativeSpec {
+    /// Registry name.
     pub name: String,
     /// Samples per physical batch (the paper's B).
     pub batch: usize,
     /// Tokens per sample (the paper's T; 1 for flat inputs).
     pub seq: usize,
-    /// Input feature width d.
+    /// Input feature width d (the embedding dimension when `vocab > 0`).
     pub d_in: usize,
     /// Hidden layer widths (ReLU between layers).
     pub hidden: Vec<usize>,
+    /// Output classes (must equal `vocab` for token models: the native
+    /// sequence pipeline is next-token prediction).
     pub n_classes: usize,
     /// "sgd" | "adam".
     pub optimizer: String,
     /// "abadi" | "automatic" | "flat".
     pub clip_fn: String,
+    /// Vocabulary size; `> 0` prepends `Embedding(vocab, d_in)` and the
+    /// model consumes i32 token ids instead of f32 features.
+    pub vocab: usize,
+    /// Insert LayerNorm after the embedding and each hidden linear.
+    pub layernorm: bool,
+}
+
+impl Default for NativeSpec {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            batch: 1,
+            seq: 1,
+            d_in: 1,
+            hidden: Vec::new(),
+            n_classes: 2,
+            optimizer: "sgd".into(),
+            clip_fn: "automatic".into(),
+            vocab: 0,
+            layernorm: false,
+        }
+    }
 }
 
 impl NativeSpec {
-    /// Per-layer (d, p) width pairs, input to logits.
-    pub fn layer_widths(&self) -> Vec<(usize, usize)> {
-        let mut dims = Vec::with_capacity(self.hidden.len() + 1);
+    /// The canonical layer walk: every other shape view derives from
+    /// this one iterator, so layer kinds cannot drift between views.
+    pub fn plan(&self) -> Vec<PlannedLayer> {
+        let mut out = Vec::new();
         let mut d = self.d_in;
+        let mut fc = 0usize;
+        let mut ln = 0usize;
+        let push_ln = |out: &mut Vec<PlannedLayer>, ln: &mut usize, width: usize| {
+            out.push(PlannedLayer {
+                name: format!("ln{ln}"),
+                op: PlanOp::LayerNorm { width },
+                param_names: vec![format!("ln{ln}_g"), format!("ln{ln}_b")],
+            });
+            *ln += 1;
+        };
+        if self.vocab > 0 {
+            out.push(PlannedLayer {
+                name: "emb".into(),
+                op: PlanOp::Embedding {
+                    vocab: self.vocab,
+                    dim: self.d_in,
+                },
+                param_names: vec!["emb_w".into()],
+            });
+            if self.layernorm {
+                push_ln(&mut out, &mut ln, d);
+            }
+        }
         for &h in &self.hidden {
-            dims.push((d, h));
+            out.push(PlannedLayer {
+                name: format!("fc{fc}"),
+                op: PlanOp::Linear { d, p: h },
+                param_names: vec![format!("w{fc}"), format!("b{fc}")],
+            });
+            fc += 1;
+            if self.layernorm {
+                push_ln(&mut out, &mut ln, h);
+            }
+            out.push(PlannedLayer {
+                name: format!("relu{}", fc - 1),
+                op: PlanOp::Relu { width: h },
+                param_names: Vec::new(),
+            });
             d = h;
         }
-        dims.push((d, self.n_classes));
-        dims
+        out.push(PlannedLayer {
+            name: format!("fc{fc}"),
+            op: PlanOp::Linear {
+                d,
+                p: self.n_classes,
+            },
+            param_names: vec![format!("w{fc}"), format!("b{fc}")],
+        });
+        out
     }
 
-    pub fn n_layers(&self) -> usize {
-        self.hidden.len() + 1
-    }
-
-    pub fn n_params(&self) -> usize {
-        self.layer_widths().iter().map(|&(d, p)| d * p + p).sum()
-    }
-
-    /// Layer dims in the complexity engine's (T, d, p) convention, used
-    /// for the mixed ghost/per-sample dispatch (`ghost_preferred`).
-    pub fn arch_layers(&self) -> Vec<LayerDims> {
-        self.layer_widths()
+    /// Per-linear-layer (d, p) width pairs, input to logits (derived
+    /// view over [`NativeSpec::plan`]; linear layers only).
+    pub fn layer_widths(&self) -> Vec<(usize, usize)> {
+        self.plan()
             .iter()
-            .enumerate()
-            .map(|(l, &(d, p))| LayerDims {
-                kind: LayerKind::Linear,
-                name: format!("fc{l}"),
-                t: self.seq as u64,
-                d: d as u64,
-                p: p as u64,
+            .filter_map(|l| match l.op {
+                PlanOp::Linear { d, p } => Some((d, p)),
+                _ => None,
             })
             .collect()
     }
 
-    /// Backend-neutral description (param order: w0, b0, w1, b1, ...).
+    /// Number of linear layers.
+    pub fn n_layers(&self) -> usize {
+        self.layer_widths().len()
+    }
+
+    /// Total trainable parameter count, over every layer kind.
+    pub fn n_params(&self) -> usize {
+        self.plan()
+            .iter()
+            .flat_map(|l| l.param_shapes())
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Trainable-layer dims in the complexity engine's (T, d, p)
+    /// convention, used for the mixed ghost/per-sample dispatch
+    /// (`ghost_preferred`) and cost reporting.
+    pub fn arch_layers(&self) -> Vec<LayerDims> {
+        self.plan()
+            .iter()
+            .filter_map(|l| l.dims(self.seq))
+            .collect()
+    }
+
+    /// Backend-neutral description (params in stack order: w0, b0, ...).
     pub fn info(&self) -> ModelInfo {
         let mut param_names = Vec::new();
         let mut param_shapes = BTreeMap::new();
-        for (l, (d, p)) in self.layer_widths().into_iter().enumerate() {
-            let wn = format!("w{l}");
-            let bn = format!("b{l}");
-            param_shapes.insert(wn.clone(), vec![d, p]);
-            param_shapes.insert(bn.clone(), vec![p]);
-            param_names.push(wn);
-            param_names.push(bn);
+        for layer in self.plan() {
+            for (name, shape) in layer.param_names.iter().zip(layer.param_shapes()) {
+                param_shapes.insert(name.clone(), shape);
+                param_names.push(name.clone());
+            }
         }
+        let kind = if self.vocab > 0 {
+            "seqtok"
+        } else if self.seq > 1 {
+            "seqmlp"
+        } else {
+            "mlp"
+        };
         ModelInfo {
             name: self.name.clone(),
-            kind: if self.seq > 1 { "seqmlp" } else { "mlp" }.to_string(),
+            kind: kind.to_string(),
             batch: self.batch,
             seq: self.seq,
             d_in: self.d_in,
@@ -108,6 +280,7 @@ impl NativeSpec {
                 n_classes: 10,
                 optimizer: "sgd".into(),
                 clip_fn: "automatic".into(),
+                ..NativeSpec::default()
             },
             // Wider variant where per-sample instantiation gets expensive
             // (Opacus memory blows up; BK does not).
@@ -120,6 +293,22 @@ impl NativeSpec {
                 n_classes: 10,
                 optimizer: "sgd".into(),
                 clip_fn: "automatic".into(),
+                ..NativeSpec::default()
+            },
+            // MLP with LayerNorm after each hidden linear: exercises the
+            // norm-layer DP path (instantiated per-sample grads) on the
+            // flat-vector pipeline.
+            NativeSpec {
+                name: "mlp_ln".into(),
+                batch: 32,
+                seq: 1,
+                d_in: 64,
+                hidden: vec![128, 128],
+                n_classes: 10,
+                optimizer: "sgd".into(),
+                clip_fn: "automatic".into(),
+                layernorm: true,
+                ..NativeSpec::default()
             },
             // Sequential per-token classifier: T = 32 makes the mixed
             // dispatch non-trivial (2T^2 = 2048 straddles the layer pd's).
@@ -132,6 +321,7 @@ impl NativeSpec {
                 n_classes: 10,
                 optimizer: "adam".into(),
                 clip_fn: "automatic".into(),
+                ..NativeSpec::default()
             },
             // Larger sequence workload for benching the Gram kernels.
             NativeSpec {
@@ -143,15 +333,49 @@ impl NativeSpec {
                 n_classes: 16,
                 optimizer: "adam".into(),
                 clip_fn: "automatic".into(),
+                ..NativeSpec::default()
+            },
+            // Token sequence model: Embedding -> LayerNorm -> MLP head,
+            // next-token prediction over a 64-token vocabulary. The
+            // embedding exercises the token-equality ghost norm and the
+            // LayerNorms the norm-layer route, all natively.
+            NativeSpec {
+                name: "seq_tok_e2e".into(),
+                batch: 16,
+                seq: 16,
+                d_in: 32,
+                hidden: vec![64],
+                n_classes: 64,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 64,
+                layernorm: true,
+                ..NativeSpec::default()
+            },
+            // Bigger token workload for benching the embedding + LN path.
+            NativeSpec {
+                name: "seq_tok_bench".into(),
+                batch: 16,
+                seq: 32,
+                d_in: 64,
+                hidden: vec![128, 128],
+                n_classes: 128,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 128,
+                layernorm: true,
+                ..NativeSpec::default()
             },
         ]
     }
 
+    /// Look a registry model up by name.
     pub fn by_name(name: &str) -> Option<NativeSpec> {
         Self::registry().into_iter().find(|s| s.name == name)
     }
 }
 
+/// Names of every registry model.
 pub fn registry_names() -> Vec<String> {
     NativeSpec::registry().into_iter().map(|s| s.name).collect()
 }
@@ -165,15 +389,28 @@ mod tests {
     fn registry_specs_are_consistent() {
         for spec in NativeSpec::registry() {
             let info = spec.info();
-            assert_eq!(info.param_names.len(), 2 * spec.n_layers());
+            // every view agrees with the canonical plan
+            let plan = spec.plan();
+            let planned_tensors: usize = plan.iter().map(|l| l.param_names.len()).sum();
+            assert_eq!(info.param_names.len(), planned_tensors, "{}", spec.name);
             let total: usize = info
                 .param_names
                 .iter()
                 .map(|n| info.param_shapes[n].iter().product::<usize>())
                 .sum();
             assert_eq!(total, spec.n_params(), "{}", spec.name);
+            assert_eq!(spec.arch_layers().len(), plan.iter().filter(|l| l.dims(1).is_some()).count());
             assert!(crate::runtime::native::kernels::ClipKind::parse(&spec.clip_fn).is_some());
             assert!(spec.optimizer == "sgd" || spec.optimizer == "adam");
+            if spec.vocab > 0 {
+                assert_eq!(spec.vocab, spec.n_classes, "{}: token models are next-token", spec.name);
+                assert!(matches!(plan[0].op, PlanOp::Embedding { .. }));
+            }
+            // param names are unique
+            let mut names = info.param_names.clone();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), info.param_names.len(), "{}", spec.name);
         }
     }
 
@@ -185,6 +422,11 @@ mod tests {
         assert_eq!(s.n_classes, 10);
         assert_eq!(s.layer_widths(), vec![(128, 256), (256, 256), (256, 10)]);
         assert_eq!(s.n_params(), 128 * 256 + 256 + 256 * 256 + 256 + 256 * 10 + 10);
+        // legacy parameter naming is preserved for MLP stacks
+        assert_eq!(
+            s.info().param_names,
+            vec!["w0", "b0", "w1", "b1", "w2", "b2"]
+        );
     }
 
     #[test]
@@ -199,8 +441,53 @@ mod tests {
     }
 
     #[test]
+    fn token_plan_has_embedding_and_norms() {
+        let s = NativeSpec::by_name("seq_tok_e2e").unwrap();
+        let plan = s.plan();
+        assert!(matches!(plan[0].op, PlanOp::Embedding { vocab: 64, dim: 32 }));
+        assert!(matches!(plan[1].op, PlanOp::LayerNorm { width: 32 }));
+        assert!(matches!(plan[2].op, PlanOp::Linear { d: 32, p: 64 }));
+        assert!(matches!(plan[3].op, PlanOp::LayerNorm { width: 64 }));
+        assert!(matches!(plan[4].op, PlanOp::Relu { width: 64 }));
+        assert!(matches!(plan[5].op, PlanOp::Linear { d: 64, p: 64 }));
+        assert_eq!(plan.len(), 6);
+        // params: emb 64*32 + ln0 2*32 + fc0 32*64+64 + ln1 2*64 + fc1 64*64+64
+        assert_eq!(
+            s.n_params(),
+            64 * 32 + 2 * 32 + (32 * 64 + 64) + 2 * 64 + (64 * 64 + 64)
+        );
+        // embedding always prefers ghost; norm layers always instantiate
+        let arch = s.arch_layers();
+        assert!(ghost_preferred(&arch[0]), "embedding ghosts");
+        assert!(!ghost_preferred(&arch[1]), "layernorm instantiates");
+        let info = s.info();
+        assert_eq!(info.kind, "seqtok");
+        assert_eq!(
+            info.param_names,
+            vec!["emb_w", "ln0_g", "ln0_b", "w0", "b0", "ln1_g", "ln1_b", "w1", "b1"]
+        );
+    }
+
+    #[test]
+    fn derived_views_agree_with_plan() {
+        // layer_widths / n_layers / arch_layers / info all re-derive from
+        // plan(): spot-check consistency on an LN model.
+        let s = NativeSpec::by_name("mlp_ln").unwrap();
+        assert_eq!(s.layer_widths(), vec![(64, 128), (128, 128), (128, 10)]);
+        assert_eq!(s.n_layers(), 3);
+        // 3 linear + 2 layernorm trainable layers
+        assert_eq!(s.arch_layers().len(), 5);
+        assert_eq!(
+            s.n_params(),
+            (64 * 128 + 128) + 2 * 128 + (128 * 128 + 128) + 2 * 128 + (128 * 10 + 10)
+        );
+        assert_eq!(s.info().n_params, s.n_params());
+    }
+
+    #[test]
     fn unknown_model_is_none() {
         assert!(NativeSpec::by_name("resnet9000").is_none());
         assert!(registry_names().contains(&"mlp_e2e".to_string()));
+        assert!(registry_names().contains(&"seq_tok_e2e".to_string()));
     }
 }

@@ -1,0 +1,520 @@
+//! Test-only reference: the pre-refactor monolithic Linear+ReLU
+//! Book-Keeping step, kept verbatim so the composable [`super::layers`]
+//! tape can be pinned **bitwise** against it (`clipping_style =
+//! all-layer` must reproduce the monolithic path exactly — same kernel
+//! calls, same float-op order). Compiled under `cfg(test)` only.
+
+use super::arena::Arena;
+use super::kernels::{self, ClipKind};
+use super::layers::NormRoute;
+use super::model::NativeSpec;
+use crate::complexity::{ghost_preferred, Strategy};
+use crate::runtime::StepHyper;
+use crate::util::rng::{GaussianSource, Xoshiro256};
+
+/// The legacy monolithic backend (MLP stacks only: `vocab == 0`,
+/// `layernorm == false`).
+pub(crate) struct ReferenceBackend {
+    spec: NativeSpec,
+    strategy: Strategy,
+    clip_kind: ClipKind,
+    routes: Vec<NormRoute>,
+    store_psg: Vec<bool>,
+    threads: usize,
+    params: Vec<Vec<f32>>,
+    opt_m: Vec<Vec<f32>>,
+    opt_v: Vec<Vec<f32>>,
+    arena: Arena,
+}
+
+impl ReferenceBackend {
+    pub fn new(spec: NativeSpec, strategy: Strategy, threads: usize) -> Self {
+        assert_eq!(spec.vocab, 0, "reference path is Linear+ReLU only");
+        assert!(!spec.layernorm, "reference path is Linear+ReLU only");
+        let clip_kind = ClipKind::parse(&spec.clip_fn).unwrap();
+        let layers = spec.arch_layers();
+        let routes: Vec<NormRoute> = layers
+            .iter()
+            .map(|l| match strategy {
+                Strategy::Opacus | Strategy::FastGradClip => NormRoute::Inst,
+                Strategy::GhostClip | Strategy::Bk | Strategy::NonDp => NormRoute::Ghost,
+                Strategy::MixGhostClip | Strategy::BkMixGhostClip | Strategy::BkMixOpt => {
+                    if ghost_preferred(l) {
+                        NormRoute::Ghost
+                    } else {
+                        NormRoute::Inst
+                    }
+                }
+            })
+            .collect();
+        let store_psg: Vec<bool> = routes
+            .iter()
+            .map(|r| match strategy {
+                Strategy::Opacus => true,
+                Strategy::BkMixOpt => *r == NormRoute::Inst,
+                _ => false,
+            })
+            .collect();
+        let info = spec.info();
+        let zeros = || -> Vec<Vec<f32>> {
+            info.param_names
+                .iter()
+                .map(|n| vec![0.0; info.param_shapes[n].iter().product()])
+                .collect()
+        };
+        let params = zeros();
+        let (opt_m, opt_v) = if info.is_adam() { (zeros(), zeros()) } else { (Vec::new(), Vec::new()) };
+        Self {
+            spec,
+            strategy,
+            clip_kind,
+            routes,
+            store_psg,
+            threads,
+            params,
+            opt_m,
+            opt_v,
+            arena: Arena::new(),
+        }
+    }
+
+    pub fn init(&mut self, seed: u64) {
+        let root = Xoshiro256::new(seed ^ 0x1A17_F00D);
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        for (l, &(d, _)) in dims.iter().enumerate() {
+            let scale = if l + 1 < nl {
+                (2.0 / d as f32).sqrt()
+            } else {
+                0.05 * (1.0 / d as f32).sqrt()
+            };
+            let mut gs = GaussianSource::from_rng(root.fork(l as u64 + 1));
+            let w = &mut self.params[2 * l];
+            gs.fill_f32(w);
+            for v in w.iter_mut() {
+                *v *= scale;
+            }
+            for v in self.params[2 * l + 1].iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+
+    pub fn state(&self) -> Vec<Vec<f32>> {
+        let mut out = self.params.clone();
+        out.extend(self.opt_m.iter().cloned());
+        out.extend(self.opt_v.iter().cloned());
+        out
+    }
+
+    fn rows(&self) -> usize {
+        self.spec.batch * self.spec.seq
+    }
+
+    fn max_dp(&self) -> usize {
+        self.spec.layer_widths().iter().map(|&(d, p)| d * p).max().unwrap_or(1)
+    }
+
+    fn max_p(&self) -> usize {
+        self.spec.layer_widths().iter().map(|&(_, p)| p).max().unwrap_or(1)
+    }
+
+    fn two_pass(&self) -> bool {
+        matches!(
+            self.strategy,
+            Strategy::FastGradClip | Strategy::GhostClip | Strategy::MixGhostClip
+        )
+    }
+
+    fn forward(&mut self, x: &[f32]) -> Vec<Vec<f32>> {
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 1);
+        let mut a0 = self.arena.take(rows * dims[0].0);
+        a0.copy_from_slice(x);
+        acts.push(a0);
+        for &(_, p) in &dims {
+            acts.push(self.arena.take(rows * p));
+        }
+        for (l, &(d, p)) in dims.iter().enumerate() {
+            let (head, tail) = acts.split_at_mut(l + 1);
+            kernels::linear_forward(
+                &head[l],
+                &self.params[2 * l],
+                Some(&self.params[2 * l + 1]),
+                &mut tail[0],
+                rows,
+                d,
+                p,
+                self.threads,
+            );
+            if l + 1 < nl {
+                kernels::relu_forward(&mut tail[0]);
+            }
+        }
+        acts
+    }
+
+    /// One full legacy step (compute clipped grads + optimizer update);
+    /// returns (mean loss, mean clip factor).
+    pub fn step(&mut self, x: &[f32], y: &[i32], noise: &[Vec<f32>], h: &StepHyper) -> (f32, f32) {
+        self.arena.begin_step();
+        let sizes: Vec<usize> = self.params.iter().map(Vec::len).collect();
+        let mut grads: Vec<Vec<f32>> = sizes.into_iter().map(|n| self.arena.take(n)).collect();
+        let rows = self.rows();
+        let b = self.spec.batch;
+        let t = self.spec.seq;
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let c_out = dims[nl - 1].1;
+        let threads = self.threads;
+        let workers = threads.max(1).min(b.max(1));
+
+        let mut acts = self.forward(x);
+
+        let (loss, mean_clip) = if self.strategy == Strategy::NonDp {
+            let mut g = self.arena.take(rows * c_out);
+            let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+            let mut partials = self.arena.take(workers * self.max_dp());
+            for l in (0..nl).rev() {
+                let (d, p) = dims[l];
+                kernels::weighted_grad(
+                    &acts[l], &g, None, b, t, d, p, &mut partials, &mut grads[2 * l], threads,
+                );
+                kernels::bias_grad(&g, None, b, t, p, &mut grads[2 * l + 1]);
+                if l > 0 {
+                    let mut g_prev = self.arena.take(rows * d);
+                    kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
+                    kernels::relu_backward(&mut g_prev, &acts[l]);
+                    self.arena.give(std::mem::replace(&mut g, g_prev));
+                }
+            }
+            self.arena.give(g);
+            self.arena.give(partials);
+            (loss, 1.0)
+        } else if self.two_pass() {
+            self.grads_two_pass(&acts, y, h.clip, &mut grads)
+        } else {
+            self.grads_one_pass(&acts, y, h.clip, &mut grads)
+        };
+
+        while let Some(a) = acts.pop() {
+            self.arena.give(a);
+        }
+
+        // optimizer update (identical kernels)
+        let adam = self.spec.optimizer == "adam";
+        for k in 0..self.params.len() {
+            let z = if noise.is_empty() { None } else { Some(noise[k].as_slice()) };
+            if adam {
+                kernels::adam_update(
+                    &mut self.params[k],
+                    &mut self.opt_m[k],
+                    &mut self.opt_v[k],
+                    &grads[k],
+                    z,
+                    h.lr,
+                    h.sigma_r,
+                    h.logical_batch,
+                    h.step,
+                );
+            } else {
+                kernels::sgd_update(&mut self.params[k], &grads[k], z, h.lr, h.sigma_r, h.logical_batch);
+            }
+        }
+        self.arena.give_all(grads);
+        (loss / rows as f32, mean_clip)
+    }
+
+    fn grads_two_pass(
+        &mut self,
+        acts: &[Vec<f32>],
+        y: &[i32],
+        clip: f32,
+        grads: &mut [Vec<f32>],
+    ) -> (f32, f32) {
+        let b = self.spec.batch;
+        let t = self.spec.seq;
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let c_out = dims[nl - 1].1;
+        let threads = self.threads;
+        let workers = threads.max(1).min(b.max(1));
+
+        let need_gram = t > 1 && self.routes.iter().any(|r| *r == NormRoute::Ghost);
+        let need_stream = self.routes.iter().any(|r| *r == NormRoute::Inst);
+        let mut gram_a = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut gram_g = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut stream = if need_stream {
+            self.arena.take(workers * self.max_dp())
+        } else {
+            Vec::new()
+        };
+        let mut bias_scratch = self.arena.take(workers * self.max_p());
+        let mut sq = self.arena.take(b);
+
+        let mut g = self.arena.take(rows * c_out);
+        let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            match self.routes[l] {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    &acts[l], &g, b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    &acts[l], &g, b, t, d, p, &mut stream, &mut sq, threads,
+                ),
+            }
+            kernels::bias_sq_norms(&g, b, t, p, &mut bias_scratch, &mut sq, threads);
+            if l > 0 {
+                let mut g_prev = self.arena.take(rows * d);
+                kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
+                kernels::relu_backward(&mut g_prev, &acts[l]);
+                self.arena.give(std::mem::replace(&mut g, g_prev));
+            }
+        }
+        self.arena.give(g);
+
+        let mut cfac = self.arena.take(b);
+        kernels::clip_factors(&sq, clip, self.clip_kind, &mut cfac);
+        let mean_clip = cfac.iter().sum::<f32>() / b as f32;
+
+        let mut partials = self.arena.take(workers * self.max_dp());
+        let mut g = self.arena.take(rows * c_out);
+        kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            kernels::weighted_grad(
+                &acts[l],
+                &g,
+                Some(&cfac),
+                b,
+                t,
+                d,
+                p,
+                &mut partials,
+                &mut grads[2 * l],
+                threads,
+            );
+            kernels::bias_grad(&g, Some(&cfac), b, t, p, &mut grads[2 * l + 1]);
+            if l > 0 {
+                let mut g_prev = self.arena.take(rows * d);
+                kernels::backward_data(&g, &self.params[2 * l], &mut g_prev, rows, d, p, threads);
+                kernels::relu_backward(&mut g_prev, &acts[l]);
+                self.arena.give(std::mem::replace(&mut g, g_prev));
+            }
+        }
+        self.arena.give(g);
+        self.arena.give(partials);
+        self.arena.give(cfac);
+        self.arena.give(sq);
+        self.arena.give(bias_scratch);
+        if need_stream {
+            self.arena.give(stream);
+        }
+        if need_gram {
+            self.arena.give(gram_g);
+            self.arena.give(gram_a);
+        }
+        (loss, mean_clip)
+    }
+
+    fn grads_one_pass(
+        &mut self,
+        acts: &[Vec<f32>],
+        y: &[i32],
+        clip: f32,
+        grads: &mut [Vec<f32>],
+    ) -> (f32, f32) {
+        let b = self.spec.batch;
+        let t = self.spec.seq;
+        let rows = self.rows();
+        let dims = self.spec.layer_widths();
+        let nl = dims.len();
+        let c_out = dims[nl - 1].1;
+        let threads = self.threads;
+        let workers = threads.max(1).min(b.max(1));
+
+        let need_gram = t > 1 && self.routes.iter().any(|r| *r == NormRoute::Ghost);
+        let need_stream = self
+            .routes
+            .iter()
+            .zip(&self.store_psg)
+            .any(|(r, s)| *r == NormRoute::Inst && !s);
+        let mut gram_a = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut gram_g = if need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut stream = if need_stream {
+            self.arena.take(workers * self.max_dp())
+        } else {
+            Vec::new()
+        };
+        let mut bias_scratch = self.arena.take(workers * self.max_p());
+        let mut sq = self.arena.take(b);
+        let mut psg: Vec<Option<Vec<f32>>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let (d, p) = dims[l];
+            if self.store_psg[l] {
+                psg.push(Some(self.arena.take(b * d * p)));
+            } else {
+                psg.push(None);
+            }
+        }
+
+        let mut gcache: Vec<Vec<f32>> = dims.iter().map(|&(_, p)| self.arena.take(rows * p)).collect();
+        let loss = {
+            let top = &mut gcache[nl - 1];
+            kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(top))
+        };
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            match (self.routes[l], psg[l].as_mut()) {
+                (NormRoute::Inst, Some(store)) => {
+                    kernels::psg_instantiate(&acts[l], &gcache[l], b, t, d, p, store, threads);
+                    kernels::sq_norms_from_psg(store, b, d * p, &mut sq, threads);
+                }
+                (NormRoute::Inst, None) => kernels::psg_norms_streaming(
+                    &acts[l], &gcache[l], b, t, d, p, &mut stream, &mut sq, threads,
+                ),
+                (NormRoute::Ghost, _) => kernels::ghost_norm(
+                    &acts[l], &gcache[l], b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads,
+                ),
+            }
+            kernels::bias_sq_norms(&gcache[l], b, t, p, &mut bias_scratch, &mut sq, threads);
+            if l > 0 {
+                let (lo, hi) = gcache.split_at_mut(l);
+                kernels::backward_data(&hi[0], &self.params[2 * l], &mut lo[l - 1], rows, d, p, threads);
+                kernels::relu_backward(&mut lo[l - 1], &acts[l]);
+            }
+        }
+
+        let mut cfac = self.arena.take(b);
+        kernels::clip_factors(&sq, clip, self.clip_kind, &mut cfac);
+        let mean_clip = cfac.iter().sum::<f32>() / b as f32;
+
+        let mut partials = self.arena.take(workers * self.max_dp());
+        for l in (0..nl).rev() {
+            let (d, p) = dims[l];
+            match &psg[l] {
+                Some(store) => {
+                    kernels::weighted_sum_psg(store, &cfac, b, d, p, &mut grads[2 * l], threads)
+                }
+                None => kernels::weighted_grad(
+                    &acts[l],
+                    &gcache[l],
+                    Some(&cfac),
+                    b,
+                    t,
+                    d,
+                    p,
+                    &mut partials,
+                    &mut grads[2 * l],
+                    threads,
+                ),
+            }
+            kernels::bias_grad(&gcache[l], Some(&cfac), b, t, p, &mut grads[2 * l + 1]);
+        }
+
+        self.arena.give(partials);
+        self.arena.give(cfac);
+        self.arena.give_all(gcache);
+        for slot in psg.into_iter().flatten() {
+            self.arena.give(slot);
+        }
+        self.arena.give(sq);
+        self.arena.give(bias_scratch);
+        if need_stream {
+            self.arena.give(stream);
+        }
+        if need_gram {
+            self.arena.give(gram_g);
+            self.arena.give(gram_a);
+        }
+        (loss, mean_clip)
+    }
+}
+
+// ---- golden tests: tape(all-layer) == monolith, bitwise ----------------
+
+#[cfg(test)]
+mod golden {
+    use super::super::NativeBackend;
+    use super::*;
+    use crate::runtime::{Backend, BatchX};
+
+    fn batch_for(spec: &NativeSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let rows = spec.batch * spec.seq;
+        let mut rng = Xoshiro256::new(seed);
+        let x: Vec<f32> = (0..rows * spec.d_in).map(|_| rng.next_f32() - 0.5).collect();
+        let y: Vec<i32> = (0..rows)
+            .map(|_| rng.next_below(spec.n_classes as u64) as i32)
+            .collect();
+        (x, y)
+    }
+
+    fn noise_for(spec: &NativeSpec, seed: u64) -> Vec<Vec<f32>> {
+        let info = spec.info();
+        let mut ns = crate::coordinator::noise::NoiseSource::new(seed);
+        ns.tensors(&info)
+    }
+
+    /// The acceptance gate of the refactor: a seeded step through the
+    /// composable DpLayer tape under `all-layer` clipping is
+    /// bitwise-identical to the pre-refactor monolithic path — same
+    /// init, same loss bits, same mean clip bits, same updated state —
+    /// for every strategy, on both golden models.
+    #[test]
+    fn tape_matches_monolith_bitwise() {
+        for model in ["mlp_e2e", "seq_e2e"] {
+            let spec = NativeSpec::by_name(model).unwrap();
+            let (x, y) = batch_for(&spec, 41);
+            let noise = noise_for(&spec, 99);
+            let h = StepHyper {
+                lr: 0.05,
+                clip: 1.0,
+                sigma_r: 0.5,
+                logical_batch: spec.batch as f32,
+                step: 1.0,
+            };
+            for strat in [
+                Strategy::NonDp,
+                Strategy::Opacus,
+                Strategy::FastGradClip,
+                Strategy::GhostClip,
+                Strategy::MixGhostClip,
+                Strategy::Bk,
+                Strategy::BkMixGhostClip,
+                Strategy::BkMixOpt,
+            ] {
+                let threads = 3;
+                let nondp = strat == Strategy::NonDp;
+                let noise_s: &[Vec<f32>] = if nondp { &[] } else { &noise };
+                let hs = StepHyper {
+                    sigma_r: if nondp { 0.0 } else { h.sigma_r },
+                    ..h
+                };
+
+                let mut new = NativeBackend::new(spec.clone(), strat, threads).unwrap();
+                new.init(17).unwrap();
+                let mut old = ReferenceBackend::new(spec.clone(), strat, threads);
+                old.init(17);
+                assert_eq!(new.state().unwrap(), old.state(), "{model}/{strat:?}: init differs");
+
+                let out = new.step(&BatchX::F32(x.clone()), &y, noise_s, &hs).unwrap();
+                let (old_loss, old_clip) = old.step(&x, &y, noise_s, &hs);
+                assert_eq!(out.loss.to_bits(), old_loss.to_bits(), "{model}/{strat:?}: loss bits");
+                assert_eq!(
+                    out.mean_clip.to_bits(),
+                    old_clip.to_bits(),
+                    "{model}/{strat:?}: mean_clip bits"
+                );
+                assert_eq!(
+                    new.state().unwrap(),
+                    old.state(),
+                    "{model}/{strat:?}: post-step state must be bitwise identical"
+                );
+            }
+        }
+    }
+}

@@ -347,7 +347,11 @@ impl Backend for PjrtBackend {
             self.opt_m = (&mut it).take(n_tr).collect();
             self.opt_v = (&mut it).take(n_tr).collect();
         }
-        Ok(StepOut { loss, mean_clip })
+        Ok(StepOut {
+            loss,
+            mean_clip,
+            group_clip: vec![mean_clip],
+        })
     }
 
     fn clipped_grads(&mut self, x: &BatchX, y: &[i32], clip: f32)
@@ -371,7 +375,14 @@ impl Backend for PjrtBackend {
             .iter()
             .map(to_vec_f32)
             .collect::<Result<_>>()?;
-        Ok((grads, StepOut { loss, mean_clip }))
+        Ok((
+            grads,
+            StepOut {
+                loss,
+                mean_clip,
+                group_clip: vec![mean_clip],
+            },
+        ))
     }
 
     fn apply_update(&mut self, grads: &[Vec<f32>], noise: &[Vec<f32>], h: &StepHyper) -> Result<()> {

@@ -104,6 +104,58 @@ fn adam_seq_strategies_all_learn() {
 }
 
 #[test]
+fn token_sequence_model_trains_natively_all_styles() {
+    // The acceptance case of the DpLayer refactor: an Embedding +
+    // Linear + LayerNorm stack trains end-to-end under --backend native
+    // with every clipping style (next-token over the Markov corpus).
+    for style in ["all-layer", "layer-wise", "group-wise:2"] {
+        let mut cfg = base_cfg("seq_tok_e2e", "bk", 20);
+        cfg.lr = 1e-2;
+        cfg.clipping_style = style.into();
+        cfg.log_every = 5;
+        let mut t = Trainer::new(cfg).unwrap();
+        let r = t.run().unwrap();
+        assert_eq!(r.backend, "native");
+        assert!(
+            r.final_loss.is_finite() && r.final_loss < r.initial_loss,
+            "{style}: {} -> {}",
+            r.initial_loss,
+            r.final_loss
+        );
+        // the logged group means match the configured granularity
+        let want_groups = match style {
+            "all-layer" => 1,
+            "group-wise:2" => 2,
+            // seq_tok_e2e: emb + ln0 + fc0 + ln1 + fc1 trainable layers
+            _ => 5,
+        };
+        let log = r.logs.last().expect("logged step");
+        assert_eq!(log.group_clip.len(), want_groups, "{style}");
+        assert!(log.group_clip.iter().all(|c| c.is_finite() && *c > 0.0));
+    }
+}
+
+#[test]
+fn clipping_style_works_through_accumulation() {
+    let mut cfg = base_cfg("mlp_e2e", "bk", 4);
+    cfg.clipping_style = "layer-wise".into();
+    cfg.logical_batch = 64; // 2 micro-batches per logical step
+    cfg.log_every = 2;
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.final_loss.is_finite() && r.final_loss < r.initial_loss);
+    let log = r.logs.last().expect("logged step");
+    assert_eq!(log.group_clip.len(), 3, "mlp_e2e has 3 trainable layers");
+}
+
+#[test]
+fn rejects_unknown_clipping_style() {
+    let mut cfg = base_cfg("mlp_e2e", "bk", 3);
+    cfg.clipping_style = "per-tensor".into();
+    assert!(cfg.validate().is_err());
+}
+
+#[test]
 fn strict_budget_stops_training() {
     let mut cfg = base_cfg("mlp_e2e", "bk", 500);
     cfg.privacy.sigma = 0.4; // noisy => epsilon grows fast

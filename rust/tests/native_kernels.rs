@@ -192,6 +192,7 @@ fn spec_with_clip(clip_fn: &str, seq: usize) -> NativeSpec {
         n_classes: 5,
         optimizer: "sgd".into(),
         clip_fn: clip_fn.into(),
+        ..NativeSpec::default()
     }
 }
 
@@ -273,6 +274,7 @@ fn nondp_gradient_matches_finite_difference() {
         n_classes: 4,
         optimizer: "sgd".into(),
         clip_fn: "abadi".into(),
+        ..NativeSpec::default()
     };
     let rows = spec.batch * spec.seq;
     let (x, y) = batch_for(&spec, 4);

@@ -28,7 +28,8 @@ fn noise_for(be: &NativeBackend, seed: u64) -> Vec<Vec<f32>> {
 #[test]
 fn registry_lists_models_and_strategies() {
     let names = fastdp::runtime::native::model::registry_names();
-    for m in ["mlp_e2e", "mlp_wide", "seq_e2e", "seq_bench"] {
+    for m in ["mlp_e2e", "mlp_wide", "mlp_ln", "seq_e2e", "seq_bench", "seq_tok_e2e", "seq_tok_bench"]
+    {
         assert!(names.iter().any(|n| n == m), "missing native model {m}");
     }
     for s in ["nondp", "opacus", "ghostclip", "bk", "bk_mixopt"] {
@@ -89,7 +90,36 @@ fn sgd_seq_spec() -> NativeSpec {
         n_classes: 10,
         optimizer: "sgd".into(),
         clip_fn: "automatic".into(),
+        ..NativeSpec::default()
     }
+}
+
+/// A small token model (Embedding -> LayerNorm -> Linear stack) with
+/// SGD, so cross-strategy comparisons stay linear in rounding noise.
+fn sgd_tok_spec() -> NativeSpec {
+    NativeSpec {
+        name: "sgd_tok".into(),
+        batch: 8,
+        seq: 12,
+        d_in: 16,
+        hidden: vec![24],
+        n_classes: 20,
+        optimizer: "sgd".into(),
+        clip_fn: "automatic".into(),
+        vocab: 20,
+        layernorm: true,
+        ..NativeSpec::default()
+    }
+}
+
+fn token_batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
+    let rows = spec.batch * spec.seq;
+    let mut rng = Xoshiro256::new(seed);
+    let x: Vec<i32> = (0..rows).map(|_| rng.next_below(spec.vocab as u64) as i32).collect();
+    let y: Vec<i32> = (0..rows)
+        .map(|_| rng.next_below(spec.n_classes as u64) as i32)
+        .collect();
+    (BatchX::I32(x), y)
 }
 
 #[test]
@@ -173,6 +203,103 @@ fn ghost_and_inst_routes_cover_seq_model() {
             assert!(
                 (va - vb).abs() / va.abs().max(1e-3) < 5e-3,
                 "bk vs bk_mixopt: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dp_strategies_agree_on_token_model() {
+    // Embedding + LayerNorm layers through every strategy family: the
+    // clipped private gradient must match across implementations (the
+    // token-equality ghost norm is exact, so agreement is tight).
+    let spec = sgd_tok_spec();
+    let (x, y) = token_batch_for(&spec, 31);
+    let h = StepHyper {
+        lr: 1e-2,
+        clip: 1.0,
+        sigma_r: 0.0,
+        logical_batch: spec.batch as f32,
+        step: 1.0,
+    };
+    let strategies = [
+        Strategy::Opacus,
+        Strategy::FastGradClip,
+        Strategy::GhostClip,
+        Strategy::Bk,
+        Strategy::BkMixOpt,
+    ];
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for strat in strategies {
+        let mut be = NativeBackend::new(spec.clone(), strat, 0).unwrap();
+        be.init(3).unwrap();
+        be.step(&x, &y, &[], &h).unwrap();
+        let state = be.state().unwrap();
+        match &reference {
+            None => reference = Some(state),
+            Some(r) => {
+                for (i, (a, b)) in r.iter().zip(state.iter()).enumerate() {
+                    let max_rel = a
+                        .iter()
+                        .zip(b.iter())
+                        .map(|(x, y)| (x - y).abs() / (x.abs().max(y.abs()).max(1e-3)))
+                        .fold(0f32, f32::max);
+                    assert!(
+                        max_rel < 5e-3,
+                        "strategy {strat:?} diverges on tensor {i}: rel {max_rel}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn token_model_gradient_matches_finite_difference() {
+    // Finite-difference check of the Embedding and LayerNorm backward
+    // through the full stack: the analytic summed gradient from
+    // clipped_grads (nondp: c = 1) must match central differences of
+    // the summed loss for every tensor, including emb_w / ln*_g / ln*_b.
+    let spec = NativeSpec {
+        name: "fd_tok".into(),
+        batch: 3,
+        seq: 4,
+        d_in: 5,
+        hidden: vec![6],
+        n_classes: 7,
+        optimizer: "sgd".into(),
+        clip_fn: "abadi".into(),
+        vocab: 7,
+        layernorm: true,
+        ..NativeSpec::default()
+    };
+    let rows = spec.batch * spec.seq;
+    let (x, y) = token_batch_for(&spec, 4);
+    let mut be = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+    be.init(6).unwrap();
+    let (grads, _) = be.clipped_grads(&x, &y, 1.0).unwrap();
+    let state = be.state().unwrap();
+    let names = be.info().param_names.clone();
+
+    let h = 1e-2f32;
+    for (k, tensor) in state.iter().enumerate() {
+        for idx in [0, tensor.len() / 2, tensor.len() - 1] {
+            let mut plus = state.clone();
+            plus[k][idx] += h;
+            let mut minus = state.clone();
+            minus[k][idx] -= h;
+            let mut bp = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            bp.load_state(plus).unwrap();
+            let lp = bp.eval_loss(&x, &y).unwrap() * rows as f32;
+            let mut bm = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            bm.load_state(minus).unwrap();
+            let lm = bm.eval_loss(&x, &y).unwrap() * rows as f32;
+            let numeric = (lp - lm) / (2.0 * h);
+            let analytic = grads[k][idx];
+            assert!(
+                (numeric - analytic).abs() < 2e-2 * analytic.abs().max(1.0),
+                "{} idx {idx}: numeric {numeric} vs analytic {analytic}",
+                names[k]
             );
         }
     }
