@@ -1,15 +1,16 @@
-//! End-to-end driver: train the sequential per-token classifier
-//! (T = 32, the native stand-in for the paper's language workloads) with
+//! End-to-end driver: train the native GPT-nano transformer (causal
+//! self-attention, pre-LN residual blocks, next-token loss) with
 //! DP-Adam under BK, log the loss curve + privacy trajectory, and
 //! compare against the non-private run.
 //!
-//!   cargo run --release --example train_gpt_e2e -- [--steps 300] [--strategy bk_mixopt]
+//!   cargo run --release --example train_gpt_e2e -- [--steps 300] [--strategy bk_mixopt] [--model gpt_nano_e2e]
 //!
 //! The paper's full-size target (GPT2-large, 774M) exists analytically
 //! in the complexity engine; this driver exercises the whole native
-//! stack (ghost-norm Grams, mixed dispatch, DP-Adam, accountant) at a
-//! single-machine-feasible scale. The true GPT artifact path lives
-//! behind the `xla-runtime` feature (see DESIGN.md).
+//! stack (attention ghost-norm Grams, residual tape, mixed dispatch,
+//! DP-Adam, accountant) at a single-machine-feasible scale. The
+//! full-size GPT artifact path lives behind the `xla-runtime` feature
+//! (see DESIGN.md).
 
 #![allow(clippy::field_reassign_with_default)]
 
@@ -18,9 +19,14 @@ use fastdp::config::TrainConfig;
 use fastdp::coordinator::Trainer;
 use fastdp::util::table::Table;
 
-fn run(strategy: &str, steps: usize, seed: u64) -> fastdp::error::Result<fastdp::coordinator::TrainReport> {
+fn run(
+    model: &str,
+    strategy: &str,
+    steps: usize,
+    seed: u64,
+) -> fastdp::error::Result<fastdp::coordinator::TrainReport> {
     let mut cfg = TrainConfig::default();
-    cfg.model = "seq_e2e".into();
+    cfg.model = model.into();
     cfg.strategy = strategy.into();
     cfg.steps = steps;
     cfg.lr = if strategy == "nondp" { 1e-3 } else { 2e-3 };
@@ -38,14 +44,15 @@ fn main() -> fastdp::error::Result<()> {
     let args = Args::from_env();
     let steps = args.get_usize("steps", 300);
     let strategy = args.get_or("strategy", "bk_mixopt").to_string();
+    let model = args.get_or("model", "gpt_nano_e2e").to_string();
 
     println!("== DP run ({strategy}) ==");
-    let dp = run(&strategy, steps, 42)?;
+    let dp = run(&model, &strategy, steps, 42)?;
     println!("\n== non-private reference ==");
-    let ndp = run("nondp", steps, 42)?;
+    let ndp = run(&model, "nondp", steps, 42)?;
 
     let mut t = Table::new(
-        "end-to-end sequence classifier (native backend, T = 32)",
+        &format!("end-to-end GPT-style transformer ({model}, native backend)"),
         &["run", "loss start", "loss end", "eps(1e-5)", "samples/s", "ms/step"],
     );
     for r in [&dp, &ndp] {

@@ -21,6 +21,13 @@ pub enum LayerKind {
     Conv,
     Embedding,
     Norm,
+    /// Causal multi-head self-attention. Dims convention: `d` = model
+    /// width, `p` = head count, `t` = sequence length. The complexity
+    /// engine decomposes it into its two generalized-linear sublayers
+    /// (fused QKV `d -> 3d`, output projection `d -> d`) plus the
+    /// parameter-free softmax core — see
+    /// [`crate::complexity::attention_sublayers`].
+    Attention,
 }
 
 #[derive(Clone, Debug)]
@@ -36,6 +43,8 @@ impl LayerDims {
     pub fn weight_params(&self) -> u64 {
         match self.kind {
             LayerKind::Norm => 0,
+            // QKV (d, 3d) + output projection (d, d); p is the head count
+            LayerKind::Attention => 4 * self.d * self.d,
             _ => self.d * self.p,
         }
     }
@@ -111,6 +120,20 @@ impl Arch {
         self
     }
 
+    /// Causal self-attention over model width `d` with `heads` heads
+    /// (fused QKV + output projection, 4 d^2 weights + 4 d biases).
+    pub fn attention(&mut self, name: &str, t: u64, d: u64, heads: u64) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::Attention,
+            name: name.into(),
+            t,
+            d,
+            p: heads,
+        });
+        self.gl_bias += 4 * d;
+        self
+    }
+
     pub fn norm(&mut self, name: &str, t: u64, dim: u64) -> &mut Self {
         self.layers.push(LayerDims {
             kind: LayerKind::Norm,
@@ -159,5 +182,15 @@ mod tests {
         assert_eq!(a.other_params, 40);
         assert_eq!(a.gl_layers().count(), 3);
         assert!(a.bk_applicable_fraction() > 0.95);
+    }
+
+    #[test]
+    fn attention_builder_counts() {
+        let mut a = Arch::new("tfm");
+        a.attention("attn", 16, 32, 4);
+        // fused QKV (32, 96) + out proj (32, 32) weights, 96 + 32 biases
+        assert_eq!(a.gl_weight_params(), 4 * 32 * 32);
+        assert_eq!(a.gl_bias, 4 * 32);
+        assert_eq!(a.gl_layers().count(), 1);
     }
 }

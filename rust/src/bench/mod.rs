@@ -34,6 +34,11 @@ pub struct BenchResult {
     /// Clipping style ("all-layer" unless overridden via `--styles`).
     pub style: String,
     pub batch: usize,
+    /// Tokens per sample (the paper's T) — disambiguates transformer
+    /// rows whose cost is quadratic in T.
+    pub seq_len: usize,
+    /// Attention heads (0 for models without attention layers).
+    pub heads: usize,
     pub threads: usize,
     pub mean_step_secs: f64,
     pub min_step_secs: f64,
@@ -50,6 +55,8 @@ impl BenchResult {
             .set("strategy", Value::from(self.strategy.as_str()))
             .set("style", Value::from(self.style.as_str()))
             .set("batch", Value::from(self.batch))
+            .set("seq_len", Value::from(self.seq_len))
+            .set("heads", Value::from(self.heads))
             .set("threads", Value::from(self.threads))
             .set("mean_step_secs", Value::from(self.mean_step_secs))
             .set("min_step_secs", Value::from(self.min_step_secs))
@@ -65,6 +72,9 @@ impl BenchResult {
             strategy: v.req_str("strategy").map_err(|e| anyhow!(e))?.to_string(),
             style: v.opt_str("style", "all-layer").to_string(),
             batch: v.req_i64("batch").map_err(|e| anyhow!(e))? as usize,
+            // pre-attention JSON (no seq_len/heads) defaults to T = 1, no heads
+            seq_len: v.opt_i64("seq_len", 1) as usize,
+            heads: v.opt_i64("heads", 0) as usize,
             threads: v.opt_i64("threads", 1) as usize,
             mean_step_secs: v.req_f64("mean_step_secs").map_err(|e| anyhow!(e))?,
             min_step_secs: v.req_f64("min_step_secs").map_err(|e| anyhow!(e))?,
@@ -139,6 +149,8 @@ pub fn measure_native(
         strategy: strategy.to_string(),
         style: style.to_string(),
         batch: spec.batch,
+        seq_len: spec.seq,
+        heads: spec.attn_heads,
         threads,
         mean_step_secs: s.mean(),
         min_step_secs: s.min(),
@@ -352,6 +364,7 @@ pub fn layers_of(meta: &crate::runtime::ModelMeta) -> Vec<crate::arch::LayerDims
                 "conv2d" => crate::arch::LayerKind::Conv,
                 "embedding" => crate::arch::LayerKind::Embedding,
                 "layernorm" => crate::arch::LayerKind::Norm,
+                "attention" => crate::arch::LayerKind::Attention,
                 _ => crate::arch::LayerKind::Linear,
             },
             name: l.name.clone(),
@@ -500,7 +513,10 @@ pub fn measure_step(
     Ok(BenchResult {
         model: model.to_string(),
         strategy: strategy.to_string(),
+        style: "all-layer".to_string(),
         batch: b,
+        seq_len: meta.spec.opt_i64("seq", 1) as usize,
+        heads: meta.spec.opt_i64("heads", 0) as usize,
         threads: 1,
         mean_step_secs: s.mean(),
         min_step_secs: s.min(),
@@ -552,6 +568,8 @@ mod tests {
             strategy: "bk".into(),
             style: "layer-wise".into(),
             batch: 8,
+            seq_len: 32,
+            heads: 4,
             threads: 4,
             mean_step_secs: 0.25,
             min_step_secs: 0.2,
@@ -564,16 +582,21 @@ mod tests {
         assert_eq!(r2.model, "m");
         assert_eq!(r2.style, "layer-wise");
         assert_eq!(r2.batch, 8);
+        assert_eq!(r2.seq_len, 32);
+        assert_eq!(r2.heads, 4);
         assert_eq!(r2.threads, 4);
         assert!((r2.samples_per_sec - 32.0).abs() < 1e-12);
         assert_eq!(r2.steady_allocs, 0);
-        // pre-style JSON (no "style" field) defaults to all-layer
+        // pre-style/pre-attention JSON defaults: all-layer, T = 1, no heads
         let legacy = crate::json::parse(
             r#"{"model":"m","strategy":"bk","batch":4,"mean_step_secs":0.1,
                 "min_step_secs":0.1,"samples_per_sec":40.0,"peak_rss":1.0}"#,
         )
         .unwrap();
-        assert_eq!(BenchResult::from_json(&legacy).unwrap().style, "all-layer");
+        let lr = BenchResult::from_json(&legacy).unwrap();
+        assert_eq!(lr.style, "all-layer");
+        assert_eq!(lr.seq_len, 1);
+        assert_eq!(lr.heads, 0);
     }
 
     #[test]
@@ -597,6 +620,19 @@ mod tests {
         let r = measure_native("seq_tok_e2e", "bk", "group-wise:2", 2, 2, 2).unwrap();
         assert_eq!(r.steady_allocs, 0, "token model arena must be warm");
         assert!(r.samples_per_sec > 0.0);
+    }
+
+    #[test]
+    fn measure_native_reports_transformer_dims() {
+        // gpt_nano rows must carry seq_len + heads so transformer rows
+        // in BENCH_native_kernels.json are unambiguous.
+        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 2, 2).unwrap();
+        assert_eq!(r.seq_len, 16);
+        assert_eq!(r.heads, 4);
+        assert_eq!(r.steady_allocs, 0, "gpt arena must be warm after warmup");
+        let v = r.to_json().to_string();
+        assert!(v.contains("seq_len"), "{v}");
+        assert!(v.contains("heads"), "{v}");
     }
 
     #[test]

@@ -33,9 +33,36 @@ pub enum Module {
     WeightedSum,
 }
 
+/// The two generalized-linear sublayers of a causal self-attention
+/// layer (`LayerKind::Attention`, dims d = model width, p = heads): the
+/// fused QKV projection `d -> 3d` and the output projection `d -> d`.
+/// Module formulas sum over them; the parameter-free softmax core is
+/// costed separately in [`strategy::layer_cost`].
+pub fn attention_sublayers(l: &LayerDims) -> [LayerDims; 2] {
+    [
+        LayerDims {
+            kind: LayerKind::Linear,
+            name: format!("{}.qkv", l.name),
+            t: l.t,
+            d: l.d,
+            p: 3 * l.d,
+        },
+        LayerDims {
+            kind: LayerKind::Linear,
+            name: format!("{}.out", l.name),
+            t: l.t,
+            d: l.d,
+            p: l.d,
+        },
+    ]
+}
+
 /// f64 everywhere: counts overflow u64 at ImageNet scale (2BT^2 with
 /// T = 224^2 and B = 100 is ~5e14 per layer).
 pub fn module_time(m: Module, b: f64, l: &LayerDims) -> f64 {
+    if l.kind == LayerKind::Attention {
+        return attention_sublayers(l).iter().map(|s| module_time(m, b, s)).sum();
+    }
     let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
     match m {
         Module::Forward | Module::OutputGrad | Module::ParamGrad | Module::PsgInstantiation => {
@@ -52,6 +79,9 @@ pub fn module_time(m: Module, b: f64, l: &LayerDims) -> f64 {
 }
 
 pub fn module_space(m: Module, b: f64, l: &LayerDims) -> f64 {
+    if l.kind == LayerKind::Attention {
+        return attention_sublayers(l).iter().map(|s| module_space(m, b, s)).sum();
+    }
     let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
     match m {
         Module::Forward => p * d + b * t * d,
@@ -70,6 +100,11 @@ pub fn ghost_preferred(l: &LayerDims) -> bool {
     match l.kind {
         LayerKind::Embedding => true,
         LayerKind::Norm => false,
+        // one route for the whole attention layer; the narrower output
+        // projection (pd = d^2) decides, so instantiation is never
+        // picked while a sublayer would still prefer ghost by a wide
+        // margin (the QKV sublayer's pd is only 3x larger)
+        LayerKind::Attention => 2.0 * (l.t as f64) * (l.t as f64) < (l.d as f64) * (l.d as f64),
         _ => 2.0 * (l.t as f64) * (l.t as f64) < (l.p as f64) * (l.d as f64),
     }
 }
@@ -127,10 +162,24 @@ impl ModelCost {
 /// Activation/weight space shared by every implementation (Table 8:
 /// sum_l pd + B sum_l T(3d + p); the B-independent pd term is the weights).
 pub fn base_space(b: f64, layers: &[LayerDims]) -> f64 {
-    let weights: f64 = layers.iter().map(|l| (l.p * l.d) as f64).sum();
+    let weights: f64 = layers
+        .iter()
+        .map(|l| match l.kind {
+            LayerKind::Attention => 4.0 * (l.d * l.d) as f64,
+            _ => (l.p * l.d) as f64,
+        })
+        .sum();
     let acts: f64 = layers
         .iter()
-        .map(|l| b * (l.t as f64) * (3.0 * l.d as f64 + l.p as f64))
+        .map(|l| {
+            let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
+            match l.kind {
+                // qkv (3d) + ao (d) activations plus the B*H*T^2
+                // softmax cache every implementation keeps
+                LayerKind::Attention => b * t * (3.0 * d + d) + b * p * t * t,
+                _ => b * t * (3.0 * d + p),
+            }
+        })
         .sum();
     weights + acts
 }
@@ -208,6 +257,44 @@ mod tests {
             assert!(m <= norm_space_ghost(8.0, &l));
             assert!(m <= norm_space_inst(8.0, &l));
         }
+    }
+
+    #[test]
+    fn attention_modules_sum_over_projections() {
+        let l = LayerDims {
+            kind: LayerKind::Attention,
+            name: "attn".into(),
+            t: 16,
+            d: 32,
+            p: 4, // heads
+        };
+        let b = 4.0;
+        // forward time: QKV 2BTd(3d) + out 2BTdd = 8BTd^2
+        assert_eq!(
+            module_time(Module::Forward, b, &l),
+            8.0 * b * 16.0 * 32.0 * 32.0
+        );
+        // ghost norm: 2BT^2(d + 3d) + 2BT^2(d + d) = 12 BT^2 d
+        assert_eq!(
+            module_time(Module::GhostNorm, b, &l),
+            12.0 * b * 256.0 * 32.0
+        );
+        // per-sample instantiation space: B(3d^2 + d^2)
+        assert_eq!(
+            module_space(Module::PsgInstantiation, b, &l),
+            4.0 * b * 32.0 * 32.0
+        );
+        // short sequences ghost (2T^2 = 512 < d^2 = 1024), long don't
+        assert!(ghost_preferred(&l));
+        let mut long = l.clone();
+        long.t = 64;
+        assert!(!ghost_preferred(&long));
+        // base space counts 4d^2 weights + qkv/ao acts + the probs cache
+        let base = base_space(b, std::slice::from_ref(&l));
+        assert_eq!(
+            base,
+            4.0 * 1024.0 + b * 16.0 * 4.0 * 32.0 + b * 4.0 * 256.0
+        );
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Strategy composition — Table 2 / Table 5 of the paper, encoded as
 //! module sums with the layerwise mixed decision for hybrids.
 
-use super::{ghost_preferred, module_space, module_time, Cost, Module};
+use super::{attention_sublayers, ghost_preferred, module_space, module_time, Cost, Module};
 use crate::arch::{LayerDims, LayerKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -140,7 +140,14 @@ pub fn bk_gcache_floats(style: ClippingStyle, b: f64, layers: &[LayerDims]) -> f
     let g = style.n_groups(n);
     let mut per_group = vec![0.0f64; g];
     for (i, l) in layers.iter().enumerate() {
-        per_group[style.group_of(i, n)] += b * l.t as f64 * l.p as f64;
+        // the book-kept cache is the layer's output gradient, B*T*width;
+        // for attention the output width is the model width d (p encodes
+        // the head count)
+        let width = match l.kind {
+            LayerKind::Attention => l.d as f64,
+            _ => l.p as f64,
+        };
+        per_group[style.group_of(i, n)] += b * l.t as f64 * width;
     }
     match style {
         ClippingStyle::AllLayer => per_group.iter().sum(),
@@ -155,6 +162,20 @@ pub fn bk_gcache_floats(style: ClippingStyle, b: f64, layers: &[LayerDims]) -> f
 /// is the standard 6BTp and their overhead Bp — negligible next to
 /// generalized linear layers, but included for honesty.
 pub fn layer_cost(strategy: Strategy, b: f64, l: &LayerDims) -> Cost {
+    if l.kind == LayerKind::Attention {
+        // Attention = two generalized-linear sublayers (fused QKV
+        // d -> 3d, output projection d -> d) costed per strategy, plus
+        // the parameter-free causal-softmax core: 4BT^2 d per forward
+        // (scores + probs @ v, with H*hd = d head-independent) and
+        // ~8BT^2 d per backward recompute (g_v, the two g_prob dot
+        // sweeps, g_q, g_k), once per backprop of the strategy.
+        let [qkv, out] = attention_sublayers(l);
+        let mut c = layer_cost(strategy, b, &qkv);
+        c.add(layer_cost(strategy, b, &out));
+        let (t, d) = (l.t as f64, l.d as f64);
+        c.time += 4.0 * b * t * t * d + 8.0 * b * t * t * d * strategy.backprops() as f64;
+        return c;
+    }
     if l.kind == LayerKind::Norm {
         let t = module_time(Module::Forward, b, l) / (l.d as f64).max(1.0) * 3.0;
         let over = if strategy == Strategy::NonDp {
@@ -367,6 +388,53 @@ mod tests {
         // clip state scales with group count
         assert_eq!(clip_state_floats(ClippingStyle::AllLayer, 4, b), 2.0 * b);
         assert_eq!(clip_state_floats(ClippingStyle::LayerWise, 4, b), 8.0 * b);
+    }
+
+    #[test]
+    fn attention_cost_decomposes_into_sublayers_plus_core() {
+        let l = LayerDims {
+            kind: LayerKind::Attention,
+            name: "attn".into(),
+            t: 64,
+            d: 256,
+            p: 8, // heads
+        };
+        let b = 16.0;
+        let [qkv, out] = super::attention_sublayers(&l);
+        assert_eq!((qkv.d, qkv.p), (256, 768));
+        assert_eq!((out.d, out.p), (256, 256));
+        for s in ALL_STRATEGIES {
+            let c = layer_cost(s, b, &l);
+            let sub = layer_cost(s, b, &qkv).time + layer_cost(s, b, &out).time;
+            let (t, d) = (64f64, 256f64);
+            let core = 4.0 * b * t * t * d + 8.0 * b * t * t * d * s.backprops() as f64;
+            assert_eq!(c.time, sub + core, "{s:?}");
+            // DP space overhead comes only from the projections
+            assert_eq!(
+                c.space_overhead,
+                layer_cost(s, b, &qkv).space_overhead + layer_cost(s, b, &out).space_overhead,
+                "{s:?}"
+            );
+        }
+        // BK on attention stays near non-DP, the headline 1.0x-ish claim
+        let ratio = layer_cost(Strategy::Bk, b, &l).time / layer_cost(Strategy::NonDp, b, &l).time;
+        assert!(ratio < 1.15, "bk/nondp attention time ratio {ratio}");
+    }
+
+    #[test]
+    fn attention_gcache_uses_model_width() {
+        let attn = LayerDims {
+            kind: LayerKind::Attention,
+            name: "attn".into(),
+            t: 8,
+            d: 32,
+            p: 4,
+        };
+        // book-kept output gradient of attention is B*T*d, not B*T*heads
+        assert_eq!(
+            bk_gcache_floats(ClippingStyle::AllLayer, 2.0, &[attn]),
+            2.0 * 8.0 * 32.0
+        );
     }
 
     #[test]

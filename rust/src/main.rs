@@ -99,14 +99,29 @@ fn cmd_complexity(args: &Args) -> i32 {
     let model = args.get_or("model", "resnet18");
     let img = args.get_usize("image", 224) as u64;
     let seq = args.get_usize("seq", 256) as u64;
-    let b = args.get_f64("batch", 100.0);
     let arch = fastdp::arch::catalog::vision_model(model, img)
         .or_else(|| fastdp::arch::catalog::language_model(model, seq));
-    let Some(arch) = arch else {
-        eprintln!("unknown model '{model}' (try resnet18, vit_base, gpt2, roberta-base, ...)");
-        return 2;
+    // catalog first, then the native registry (gpt_nano_*, mlp_*, ...),
+    // so the complexity report covers the natively executable
+    // transformers with their attention terms
+    let (layers, default_b): (Vec<_>, f64) = match (&arch, NativeSpec::by_name(model)) {
+        (Some(arch), _) => (arch.gl_layers().cloned().collect(), 100.0),
+        (None, Some(spec)) => (
+            spec.arch_layers()
+                .into_iter()
+                .filter(|l| l.kind != fastdp::arch::LayerKind::Norm)
+                .collect(),
+            spec.batch as f64,
+        ),
+        (None, None) => {
+            eprintln!(
+                "unknown model '{model}' (try resnet18, vit_base, gpt2, roberta-base, \
+                 or a native registry model like gpt_nano_e2e)"
+            );
+            return 2;
+        }
     };
-    let layers: Vec<_> = arch.gl_layers().cloned().collect();
+    let b = args.get_f64("batch", default_b);
     let mut t = Table::new(
         &format!("{model}: per-strategy complexity (B={b})"),
         &["strategy", "time", "time-vs-nondp", "space", "space-vs-nondp"],
@@ -138,7 +153,8 @@ fn cmd_complexity(args: &Args) -> i32 {
     );
     let n_ghost = layers.iter().filter(|l| complexity::ghost_preferred(l)).count();
     println!(
-        "layerwise decision: {n_ghost}/{} layers prefer ghost norm (2T^2 < pd)",
+        "layerwise decision: {n_ghost}/{} layers prefer ghost norm \
+         (2T^2 < pd; attention: 2T^2 < d^2)",
         layers.len()
     );
 

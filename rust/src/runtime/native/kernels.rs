@@ -685,6 +685,177 @@ pub fn embedding_weighted_grad(
     }
 }
 
+/// Causal multi-head attention forward from the fused QKV activations.
+///
+/// `qkv` is `(rows, 3d)` laid out `[q | k | v]` per row; `heads` splits
+/// the model width `d` into `hd = d / heads` head slices. For each
+/// sample and head, `scores[t1, t2] = (q_t1 · k_t2) / sqrt(hd)` over
+/// the causal prefix `t2 <= t1`, `probs` is the row softmax with the
+/// strict upper triangle zeroed (`(b, heads, t, t)`, cached for the
+/// backward pass), and `ao[t1] = sum_{t2<=t1} probs[t1,t2] v_t2` with
+/// the heads concatenated back to width `d`.
+///
+/// Time `O(B T^2 d)` per pass (scores + apply); the probs cache is the
+/// only extra state, `B*H*T^2` — the non-DP activation cost, shared by
+/// every strategy. Threaded over the batch; no scratch.
+pub fn attention_forward(
+    qkv: &[f32],
+    probs: &mut [f32],
+    ao: &mut [f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+    threads: usize,
+) {
+    let hd = d / heads;
+    debug_assert_eq!(hd * heads, d, "heads must divide d");
+    debug_assert_eq!(qkv.len(), b * t * 3 * d);
+    debug_assert_eq!(probs.len(), b * heads * t * t);
+    debug_assert_eq!(ao.len(), b * t * d);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let w3 = 3 * d;
+    // pass 1: causal softmax probabilities
+    par::par_rows(probs, b, heads * t * t, threads, |i0, chunk| {
+        for (k, pb) in chunk.chunks_mut(heads * t * t).enumerate() {
+            let i = i0 + k;
+            for h in 0..heads {
+                let ph = &mut pb[h * t * t..(h + 1) * t * t];
+                for t1 in 0..t {
+                    let q = &qkv[(i * t + t1) * w3 + h * hd..][..hd];
+                    let row = &mut ph[t1 * t..t1 * t + t];
+                    let mut m = f32::NEG_INFINITY;
+                    for (t2, slot) in row.iter_mut().enumerate().take(t1 + 1) {
+                        let kk = &qkv[(i * t + t2) * w3 + d + h * hd..][..hd];
+                        let s = scale * dot(q, kk);
+                        *slot = s;
+                        if s > m {
+                            m = s;
+                        }
+                    }
+                    let mut z = 0.0f32;
+                    for slot in row.iter_mut().take(t1 + 1) {
+                        let e = (*slot - m).exp();
+                        *slot = e;
+                        z += e;
+                    }
+                    let inv = 1.0 / z;
+                    for (t2, slot) in row.iter_mut().enumerate() {
+                        if t2 <= t1 {
+                            *slot *= inv;
+                        } else {
+                            *slot = 0.0; // causal mask
+                        }
+                    }
+                }
+            }
+        }
+    });
+    // pass 2: ao = probs @ v, heads re-concatenated
+    par::par_rows(ao, b, t * d, threads, |i0, chunk| {
+        for (k, av) in chunk.chunks_mut(t * d).enumerate() {
+            let i = i0 + k;
+            av.fill(0.0);
+            for h in 0..heads {
+                let ph = &probs[(i * heads + h) * t * t..][..t * t];
+                for t1 in 0..t {
+                    for t2 in 0..=t1 {
+                        let p = ph[t1 * t + t2];
+                        if p != 0.0 {
+                            let v = &qkv[(i * t + t2) * w3 + 2 * d + h * hd..][..hd];
+                            let out = &mut av[t1 * d + h * hd..t1 * d + h * hd + hd];
+                            for (o, &vv) in out.iter_mut().zip(v) {
+                                *o += p * vv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Backward of the causal attention core: from `g_ao = dL/d ao` and the
+/// cached `qkv` + `probs`, writes `g_qkv = dL/d qkv` — the gradient
+/// flowing into the fused QKV projection. The softmax backward is
+/// *recomputed* from the cached probabilities (per row:
+/// `g_score = p * (g_prob - sum_s p_s g_prob_s) / sqrt(hd)`), so
+/// nothing per-sample is stored beyond the forward caches; the
+/// `g_prob = g_ao · v` dots are evaluated twice (once for the row sum,
+/// once for the scores) to keep the kernel scratch-free. Time
+/// `O(B T^2 d)`; threaded over the batch.
+pub fn attention_backward(
+    qkv: &[f32],
+    probs: &[f32],
+    g_ao: &[f32],
+    g_qkv: &mut [f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+    threads: usize,
+) {
+    let hd = d / heads;
+    debug_assert_eq!(hd * heads, d, "heads must divide d");
+    debug_assert_eq!(qkv.len(), b * t * 3 * d);
+    debug_assert_eq!(probs.len(), b * heads * t * t);
+    debug_assert_eq!(g_ao.len(), b * t * d);
+    debug_assert_eq!(g_qkv.len(), b * t * 3 * d);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let w3 = 3 * d;
+    par::par_rows(g_qkv, b, t * w3, threads, |i0, chunk| {
+        for (k, gq) in chunk.chunks_mut(t * w3).enumerate() {
+            let i = i0 + k;
+            gq.fill(0.0);
+            for h in 0..heads {
+                let ph = &probs[(i * heads + h) * t * t..][..t * t];
+                for t1 in 0..t {
+                    let ga = &g_ao[(i * t + t1) * d + h * hd..][..hd];
+                    let mut dotsum = 0.0f32;
+                    for t2 in 0..=t1 {
+                        let p = ph[t1 * t + t2];
+                        if p != 0.0 {
+                            let v = &qkv[(i * t + t2) * w3 + 2 * d + h * hd..][..hd];
+                            dotsum += p * dot(ga, v);
+                        }
+                    }
+                    for t2 in 0..=t1 {
+                        let p = ph[t1 * t + t2];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let v = &qkv[(i * t + t2) * w3 + 2 * d + h * hd..][..hd];
+                        let gs = p * (dot(ga, v) - dotsum) * scale;
+                        // dL/d v_t2 += p * g_ao_t1
+                        {
+                            let gv = &mut gq[t2 * w3 + 2 * d + h * hd..t2 * w3 + 2 * d + h * hd + hd];
+                            for (o, &gav) in gv.iter_mut().zip(ga) {
+                                *o += p * gav;
+                            }
+                        }
+                        // dL/d q_t1 += gs * k_t2
+                        {
+                            let kk = &qkv[(i * t + t2) * w3 + d + h * hd..][..hd];
+                            let gq1 = &mut gq[t1 * w3 + h * hd..t1 * w3 + h * hd + hd];
+                            for (o, &kv) in gq1.iter_mut().zip(kk) {
+                                *o += gs * kv;
+                            }
+                        }
+                        // dL/d k_t2 += gs * q_t1
+                        {
+                            let q = &qkv[(i * t + t1) * w3 + h * hd..][..hd];
+                            let gk = &mut gq[t2 * w3 + d + h * hd..t2 * w3 + d + h * hd + hd];
+                            for (o, &qv) in gk.iter_mut().zip(q) {
+                                *o += gs * qv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// Clipping flavors (matching `ref.py` exactly).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ClipKind {
@@ -1054,6 +1225,75 @@ mod tests {
         for k in 0..vocab * p {
             let want: f64 = (0..b).map(|i| c[i] as f64 * naive[i * vocab * p + k]).sum();
             assert!((summed[k] as f64 - want).abs() < 1e-4, "slot {k}: {} vs {}", summed[k], want);
+        }
+    }
+
+    #[test]
+    fn attention_forward_is_causal_and_normalized() {
+        let mut rng = Xoshiro256::new(21);
+        let (b, t, d, heads) = (3usize, 5usize, 6usize, 2usize);
+        let qkv = randv(&mut rng, b * t * 3 * d);
+        let mut probs = vec![0f32; b * heads * t * t];
+        let mut ao = vec![0f32; b * t * d];
+        attention_forward(&qkv, &mut probs, &mut ao, b, t, d, heads, 2);
+        for i in 0..b {
+            for h in 0..heads {
+                let ph = &probs[(i * heads + h) * t * t..][..t * t];
+                for t1 in 0..t {
+                    let row = &ph[t1 * t..(t1 + 1) * t];
+                    let s: f32 = row[..=t1].iter().sum();
+                    assert!((s - 1.0).abs() < 1e-5, "row {t1} sums to {s}");
+                    assert!(row[..=t1].iter().all(|&p| p > 0.0));
+                    assert!(row[t1 + 1..].iter().all(|&p| p == 0.0), "causal mask leak");
+                }
+            }
+        }
+        // t = 1 degenerates to ao == v (prob 1 on the only token)
+        let qkv1 = randv(&mut rng, b * 3 * d);
+        let mut p1 = vec![0f32; b * heads];
+        let mut ao1 = vec![0f32; b * d];
+        attention_forward(&qkv1, &mut p1, &mut ao1, b, 1, d, heads, 1);
+        assert!(p1.iter().all(|&p| (p - 1.0).abs() < 1e-6));
+        for r in 0..b {
+            for j in 0..d {
+                assert!((ao1[r * d + j] - qkv1[r * 3 * d + 2 * d + j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_backward_matches_finite_difference() {
+        // scalar loss L = <g_ao, attention(qkv)>: dL/d qkv must match
+        // central differences through the causal softmax.
+        let mut rng = Xoshiro256::new(22);
+        let (b, t, d, heads) = (2usize, 4usize, 4usize, 2usize);
+        let qkv = randv(&mut rng, b * t * 3 * d);
+        let g_ao = randv(&mut rng, b * t * d);
+        let fwd = |qkv: &[f32]| -> Vec<f32> {
+            let mut probs = vec![0f32; b * heads * t * t];
+            let mut ao = vec![0f32; b * t * d];
+            attention_forward(qkv, &mut probs, &mut ao, b, t, d, heads, 1);
+            ao
+        };
+        let mut probs = vec![0f32; b * heads * t * t];
+        let mut ao = vec![0f32; b * t * d];
+        attention_forward(&qkv, &mut probs, &mut ao, b, t, d, heads, 1);
+        let mut g_qkv = vec![0f32; b * t * 3 * d];
+        attention_backward(&qkv, &probs, &g_ao, &mut g_qkv, b, t, d, heads, 1);
+        let h = 1e-2f32;
+        for idx in (0..qkv.len()).step_by(7) {
+            let mut qp = qkv.clone();
+            qp[idx] += h;
+            let mut qm = qkv.clone();
+            qm[idx] -= h;
+            let lp: f32 = fwd(&qp).iter().zip(&g_ao).map(|(o, g)| o * g).sum();
+            let lm: f32 = fwd(&qm).iter().zip(&g_ao).map(|(o, g)| o * g).sum();
+            let numeric = (lp - lm) / (2.0 * h);
+            assert!(
+                (numeric - g_qkv[idx]).abs() < 2e-2 * g_qkv[idx].abs().max(0.5),
+                "qkv[{idx}]: numeric {numeric} vs analytic {}",
+                g_qkv[idx]
+            );
         }
     }
 

@@ -1,0 +1,335 @@
+//! Causal multi-head self-attention: the transformer's core as one
+//! composable [`DpLayer`].
+//!
+//! The layer is a composite of three stages —
+//!
+//! ```text
+//! x (rows, d) --W_qkv-> qkv (rows, 3d) --softmax core-> ao (rows, d) --W_o-> out (rows, d)
+//! ```
+//!
+//! — where only the fused QKV projection `(d, 3d)` and the output
+//! projection `(d, d)` carry parameters, and both are *generalized
+//! linear* in the paper's sense: their per-sample gradients are
+//! `x_i^T g_qkv_i` and `ao_i^T g_out_i`, so their ghost norms come from
+//! the very same `{B, T, T}` Gram kernels the plain `Linear` layer uses.
+//! The softmax core is parameter-free; its backward is **recomputed**
+//! from the cached attention probabilities whenever a walk needs the
+//! internal gradients (`g_ao`, `g_qkv`), rather than stored per sample —
+//! recompute costs `O(B T^2 d)` time per walk while storing softmax
+//! gradients would add `B*H*T^2` state per backward stage (see
+//! DESIGN.md, "Causal self-attention").
+//!
+//! Forward caches (in [`DpLayer::cache_lens`] order): `qkv` (rows, 3d),
+//! `probs` (B, H, T, T — the causal softmax weights), and `ao`
+//! (rows, d — the input of the output projection). The recompute
+//! scratch `[g_ao | g_qkv]` lives in [`Scratch::attn`].
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+
+/// `out = CausalMHA(x)` with a fused QKV projection and an output
+/// projection; `heads` must divide the model width `d`.
+pub struct Attention {
+    name: String,
+    d: usize,
+    heads: usize,
+}
+
+impl Attention {
+    /// Build a causal self-attention layer over width `d` with `heads`
+    /// heads (`d % heads == 0`, validated by `build_stack`).
+    pub fn new(name: String, d: usize, heads: usize) -> Self {
+        debug_assert!(heads > 0 && d % heads == 0);
+        Self { name, d, heads }
+    }
+
+    /// Number of attention heads.
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    /// Recompute the internal backward chain
+    /// `g_out -> g_ao -> (softmax backward) -> g_qkv` from the forward
+    /// caches into the `attn` scratch (`[g_ao | g_qkv]` layout).
+    /// Returns views of the two freshly written slices.
+    fn recompute_core<'s>(
+        &self,
+        g_out: &[f32],
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        attn: &'s mut [f32],
+        ctx: Ctx,
+    ) -> (&'s [f32], &'s [f32]) {
+        let rows = ctx.rows();
+        let dm = self.d;
+        let (g_ao, rest) = attn.split_at_mut(rows * dm);
+        let (g_qkv, _) = rest.split_at_mut(rows * 3 * dm);
+        kernels::backward_data(g_out, &params[2], g_ao, rows, dm, dm, ctx.threads);
+        kernels::attention_backward(
+            &cache[0], &cache[1], g_ao, g_qkv, ctx.b, ctx.t, dm, self.heads, ctx.threads,
+        );
+        (&*g_ao, &*g_qkv)
+    }
+}
+
+impl DpLayer for Attention {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.d
+    }
+
+    fn out_width(&self) -> usize {
+        self.d
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        4
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![
+            vec![self.d, 3 * self.d],
+            vec![3 * self.d],
+            vec![self.d, self.d],
+            vec![self.d],
+        ]
+    }
+
+    fn dims(&self, t: usize) -> Option<LayerDims> {
+        // Attention dims convention: d = model width, p = head count
+        // (the complexity engine decomposes into the two generalized
+        // linear sublayers; see `complexity::attention_sublayers`).
+        Some(LayerDims {
+            kind: LayerKind::Attention,
+            name: self.name.clone(),
+            t: t as u64,
+            d: self.d as u64,
+            p: self.heads as u64,
+        })
+    }
+
+    fn cache_lens(&self, ctx: Ctx) -> Vec<usize> {
+        // qkv (rows, 3d) + probs (B, H, T, T) + ao (rows, d)
+        vec![
+            ctx.rows() * 3 * self.d,
+            ctx.b * self.heads * ctx.t * ctx.t,
+            ctx.rows() * self.d,
+        ]
+    }
+
+    fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], _is_head: bool) {
+        // GPT-style N(0, 1/d) for both projections, zero biases.
+        let scale = (1.0 / self.d as f32).sqrt();
+        let mut gs = GaussianSource::from_rng(rng);
+        gs.fill_f32(&mut params[0]);
+        for v in params[0].iter_mut() {
+            *v *= scale;
+        }
+        for v in params[1].iter_mut() {
+            *v = 0.0;
+        }
+        gs.fill_f32(&mut params[2]);
+        for v in params[2].iter_mut() {
+            *v *= scale;
+        }
+        for v in params[3].iter_mut() {
+            *v = 0.0;
+        }
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let rows = ctx.rows();
+        let (qkv_c, rest) = cache.split_at_mut(1);
+        let (probs_c, ao_c) = rest.split_at_mut(1);
+        kernels::linear_forward(
+            x.feat(),
+            &params[0],
+            Some(&params[1]),
+            &mut qkv_c[0],
+            rows,
+            self.d,
+            3 * self.d,
+            ctx.threads,
+        );
+        kernels::attention_forward(
+            &qkv_c[0],
+            &mut probs_c[0],
+            &mut ao_c[0],
+            ctx.b,
+            ctx.t,
+            self.d,
+            self.heads,
+            ctx.threads,
+        );
+        kernels::linear_forward(
+            &ao_c[0],
+            &params[2],
+            Some(&params[3]),
+            out,
+            rows,
+            self.d,
+            self.d,
+            ctx.threads,
+        );
+    }
+
+    fn backward_data(
+        &self,
+        _g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        // Tape invariant: attention always has parameters, so every walk
+        // calls this layer's `accum_sq_norms` or `clipped_grads` with
+        // the *same* output gradient immediately before `backward_data`
+        // (see `StackRun::norm_pass` / `clipped_recompute`). That call
+        // left `[g_ao | g_qkv]` for this layer in `Scratch::attn`, so
+        // the O(B T^2 d) softmax backward is NOT run a second time here
+        // — only the final projection through W_qkv remains. The
+        // differential harness and the full-stack FD tests pin this
+        // invariant; breaking the call order produces garbage gradients
+        // they catch immediately.
+        let rows = ctx.rows();
+        let dm = self.d;
+        let g_qkv = &scratch.attn[rows * dm..rows * 4 * dm];
+        kernels::backward_data(g_qkv, &params[0], g_in, rows, dm, 3 * dm, ctx.threads);
+    }
+
+    fn accum_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        route: NormRoute,
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, ctx.t);
+        let dm = self.d;
+        // recompute the internal gradients from the forward caches
+        // (backward_data reuses them — see the invariant there)
+        let (_g_ao, g_qkv) = self.recompute_core(g_out, params, cache, scratch.attn, ctx);
+        // both projections are generalized linear: the same ghost /
+        // streamed-instantiation dispatch as `Linear`
+        match route {
+            NormRoute::Ghost => {
+                kernels::ghost_norm(
+                    x.feat(),
+                    g_qkv,
+                    b,
+                    t,
+                    dm,
+                    3 * dm,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                );
+                kernels::ghost_norm(
+                    &cache[2],
+                    g_out,
+                    b,
+                    t,
+                    dm,
+                    dm,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                );
+            }
+            NormRoute::Inst => {
+                kernels::psg_norms_streaming(
+                    x.feat(),
+                    g_qkv,
+                    b,
+                    t,
+                    dm,
+                    3 * dm,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                );
+                kernels::psg_norms_streaming(
+                    &cache[2],
+                    g_out,
+                    b,
+                    t,
+                    dm,
+                    dm,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                );
+            }
+        }
+        kernels::bias_sq_norms(g_qkv, b, t, 3 * dm, scratch.small, sq, ctx.threads);
+        kernels::bias_sq_norms(g_out, b, t, dm, scratch.small, sq, ctx.threads);
+    }
+
+    fn clipped_grads(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, ctx.t);
+        let dm = self.d;
+        let (_g_ao, g_qkv) = self.recompute_core(g_out, params, cache, scratch.attn, ctx);
+        let [gw_qkv, gb_qkv, gw_o, gb_o] = grads else {
+            unreachable!("{}: attention has exactly 4 param tensors", self.name);
+        };
+        kernels::weighted_grad(
+            x.feat(),
+            g_qkv,
+            c,
+            b,
+            t,
+            dm,
+            3 * dm,
+            scratch.partials,
+            gw_qkv,
+            ctx.threads,
+        );
+        kernels::bias_grad(g_qkv, c, b, t, 3 * dm, gb_qkv);
+        kernels::weighted_grad(
+            &cache[2],
+            g_out,
+            c,
+            b,
+            t,
+            dm,
+            dm,
+            scratch.partials,
+            gw_o,
+            ctx.threads,
+        );
+        kernels::bias_grad(g_out, c, b, t, dm, gb_o);
+    }
+}

@@ -86,6 +86,7 @@ impl DpLayer for Embedding {
         x: LayerIn<'_>,
         g_out: &[f32],
         _route: NormRoute,
+        _params: &[Vec<f32>],
         _cache: &[Vec<f32>],
         _scratch: &mut Scratch<'_>,
         sq: &mut [f32],
@@ -101,6 +102,7 @@ impl DpLayer for Embedding {
         x: LayerIn<'_>,
         g_out: &[f32],
         c: Option<&[f32]>,
+        _params: &[Vec<f32>],
         _cache: &[Vec<f32>],
         _scratch: &mut Scratch<'_>,
         grads: &mut [Vec<f32>],

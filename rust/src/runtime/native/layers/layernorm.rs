@@ -99,6 +99,7 @@ impl DpLayer for LayerNorm {
         _out: &[f32],
         params: &[Vec<f32>],
         cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
         g_in: &mut [f32],
         ctx: Ctx,
     ) {
@@ -118,6 +119,7 @@ impl DpLayer for LayerNorm {
         _x: LayerIn<'_>,
         g_out: &[f32],
         _route: NormRoute,
+        _params: &[Vec<f32>],
         cache: &[Vec<f32>],
         scratch: &mut Scratch<'_>,
         sq: &mut [f32],
@@ -140,6 +142,7 @@ impl DpLayer for LayerNorm {
         _x: LayerIn<'_>,
         g_out: &[f32],
         c: Option<&[f32]>,
+        _params: &[Vec<f32>],
         cache: &[Vec<f32>],
         _scratch: &mut Scratch<'_>,
         grads: &mut [Vec<f32>],

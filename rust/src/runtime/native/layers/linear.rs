@@ -104,6 +104,7 @@ impl DpLayer for Linear {
         _out: &[f32],
         params: &[Vec<f32>],
         _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
         g_in: &mut [f32],
         ctx: Ctx,
     ) {
@@ -115,6 +116,7 @@ impl DpLayer for Linear {
         x: LayerIn<'_>,
         g_out: &[f32],
         route: NormRoute,
+        _params: &[Vec<f32>],
         _cache: &[Vec<f32>],
         scratch: &mut Scratch<'_>,
         sq: &mut [f32],
@@ -154,6 +156,7 @@ impl DpLayer for Linear {
         x: LayerIn<'_>,
         g_out: &[f32],
         c: Option<&[f32]>,
+        _params: &[Vec<f32>],
         _cache: &[Vec<f32>],
         scratch: &mut Scratch<'_>,
         grads: &mut [Vec<f32>],

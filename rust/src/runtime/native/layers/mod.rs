@@ -8,8 +8,9 @@
 //! assembled layer by layer from the book-kept caches. [`DpLayer`]
 //! captures exactly that contract, and [`StackRun`] threads the
 //! one-pass / two-pass BK schedules through an arbitrary layer stack —
-//! so Embedding and LayerNorm run natively next to Linear + ReLU
-//! without touching the scheduler.
+//! so Embedding, LayerNorm, and causal self-[`Attention`] (including
+//! transformer residual skips, see [`StackRun::residuals`]) run
+//! natively next to Linear + ReLU without touching the scheduler.
 //!
 //! ## The `DpLayer` contract
 //!
@@ -34,11 +35,13 @@
 
 #![allow(clippy::too_many_arguments)]
 
+pub mod attention;
 pub mod embedding;
 pub mod layernorm;
 pub mod linear;
 pub mod relu;
 
+pub use attention::Attention;
 pub use embedding::Embedding;
 pub use layernorm::LayerNorm;
 pub use linear::Linear;
@@ -130,6 +133,10 @@ pub struct Scratch<'a> {
     /// Batch-reduction partials for the weighted contraction,
     /// `>= workers * max(d*p)`.
     pub partials: &'a mut [f32],
+    /// Attention backward scratch, `>= B*T * 4*d_model` for the widest
+    /// attention layer (the recomputed `[g_ao | g_qkv]` pair); empty
+    /// when the stack has no attention layers.
+    pub attn: &'a mut [f32],
 }
 
 /// One composable DP layer: forward with caching, per-sample norm
@@ -185,7 +192,8 @@ pub trait DpLayer: Send + Sync {
 
     /// dL/d input from dL/d output. Never called for the first stack
     /// layer; layers that can only sit first (embedding) keep the
-    /// default.
+    /// default. Composite layers (attention) use `scratch` for their
+    /// recomputed internal gradients.
     fn backward_data(
         &self,
         g_out: &[f32],
@@ -193,26 +201,30 @@ pub trait DpLayer: Send + Sync {
         out: &[f32],
         params: &[Vec<f32>],
         cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
         g_in: &mut [f32],
         ctx: Ctx,
     ) {
-        let _ = (g_out, x, out, params, cache, g_in, ctx);
+        let _ = (g_out, x, out, params, cache, scratch, g_in, ctx);
         unreachable!("{}: layer cannot back-propagate to its input", self.name());
     }
 
     /// Accumulate (`+=`) the per-sample squared norms of this layer's
     /// parameter gradients into `sq` (`(B,)`, the layer's clip group).
+    /// `params` lets composite layers (attention) recompute internal
+    /// output gradients from the caches.
     fn accum_sq_norms(
         &self,
         x: LayerIn<'_>,
         g_out: &[f32],
         route: NormRoute,
+        params: &[Vec<f32>],
         cache: &[Vec<f32>],
         scratch: &mut Scratch<'_>,
         sq: &mut [f32],
         ctx: Ctx,
     ) {
-        let _ = (x, g_out, route, cache, scratch, sq, ctx);
+        let _ = (x, g_out, route, params, cache, scratch, sq, ctx);
         unreachable!("{}: stateless layer has no norm contributions", self.name());
     }
 
@@ -224,12 +236,13 @@ pub trait DpLayer: Send + Sync {
         x: LayerIn<'_>,
         g_out: &[f32],
         c: Option<&[f32]>,
+        params: &[Vec<f32>],
         cache: &[Vec<f32>],
         scratch: &mut Scratch<'_>,
         grads: &mut [Vec<f32>],
         ctx: Ctx,
     ) {
-        let _ = (x, g_out, c, cache, scratch, grads, ctx);
+        let _ = (x, g_out, c, params, cache, scratch, grads, ctx);
         unreachable!("{}: stateless layer has no gradients", self.name());
     }
 
@@ -281,10 +294,35 @@ pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
             PlanOp::Linear { d, p } => out.push(Box::new(Linear::new(l.name, d, p))),
             PlanOp::Relu { width } => out.push(Box::new(Relu::new(l.name, width))),
             PlanOp::LayerNorm { width } => out.push(Box::new(LayerNorm::new(l.name, width))),
+            PlanOp::Attention { d, heads } => {
+                if heads == 0 || d % heads != 0 {
+                    bail!(
+                        "attention layer '{}' of model '{}': heads {} must divide width {}",
+                        l.name,
+                        spec.name,
+                        heads,
+                        d
+                    );
+                }
+                out.push(Box::new(Attention::new(l.name, d, heads)));
+            }
         }
     }
     if out.is_empty() {
         bail!("model '{}' has an empty layer stack", spec.name);
+    }
+    // residual skips must point at an earlier layer of matching width
+    // (and never at a token input, which has no feature activation)
+    for (k, l) in spec.plan().iter().enumerate() {
+        if let Some(r) = l.residual {
+            if r > k || (r == 0 && spec.vocab > 0) || out[r].in_width() != out[k].out_width() {
+                bail!(
+                    "layer '{}' of model '{}' has an invalid residual source {r}",
+                    l.name,
+                    spec.name
+                );
+            }
+        }
     }
     Ok(out)
 }
@@ -303,6 +341,12 @@ pub struct StackRun<'a> {
     pub routes: &'a [NormRoute],
     /// Clipping-group id per layer (meaningful for trainable layers).
     pub groups: &'a [usize],
+    /// Residual skip per layer: `residuals[k] = Some(r)` adds the input
+    /// activation of layer `r` to layer `k`'s output
+    /// (`acts[k+1] = layer_k(acts[k]) + acts[r]`, the transformer
+    /// pre-LN skip). The backward walks mirror it by routing the output
+    /// gradient of layer `k` straight to level `r` as well.
+    pub residuals: &'a [Option<usize>],
     /// Step dimensions.
     pub ctx: Ctx,
 }
@@ -355,9 +399,60 @@ impl StackRun<'_> {
             let mut out = arena.take(rows * self.layers[k].out_width());
             let xin = self.input_of(k, &acts, input);
             self.layers[k].forward(xin, self.params_of(k), &mut out, &mut caches[k], self.ctx);
+            if let Some(r) = self.residuals[k] {
+                let src = &acts[r];
+                debug_assert_eq!(src.len(), out.len(), "residual width mismatch");
+                for (o, &s) in out.iter_mut().zip(src.iter()) {
+                    *o += s;
+                }
+            }
             acts.push(out);
         }
         (acts, caches)
+    }
+
+    /// Stash the skip half of a residual during a backward walk: layer
+    /// `k`'s output gradient also flows straight to level `r`
+    /// (`pending[r]`), to be merged once the walk computes the
+    /// through-path gradient at that level.
+    fn stash_residual(
+        &self,
+        arena: &mut Arena,
+        pending: &mut [Option<Vec<f32>>],
+        k: usize,
+        g: &[f32],
+    ) {
+        if let Some(r) = self.residuals[k] {
+            match pending[r].as_mut() {
+                Some(p) => {
+                    for (pv, &gv) in p.iter_mut().zip(g) {
+                        *pv += gv;
+                    }
+                }
+                None => {
+                    let mut copy = arena.take(g.len());
+                    copy.copy_from_slice(g);
+                    pending[r] = Some(copy);
+                }
+            }
+        }
+    }
+
+    /// Merge a pending skip gradient into the freshly computed
+    /// through-path gradient at its level.
+    fn merge_residual(
+        &self,
+        arena: &mut Arena,
+        pending: &mut [Option<Vec<f32>>],
+        level: usize,
+        g: &mut [f32],
+    ) {
+        if let Some(p) = pending[level].take() {
+            for (gv, &pv) in g.iter_mut().zip(p.iter()) {
+                *gv += pv;
+            }
+            arena.give(p);
+        }
     }
 
     /// Norm backward: one softmax backward walking the stack top-down,
@@ -385,18 +480,27 @@ impl StackRun<'_> {
         let nl = self.layers.len();
         let c_out = self.layers[nl - 1].out_width();
         let mut kept: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
+        let mut pending: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
         let mut g = arena.take(rows * c_out);
         let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
         for k in (0..nl).rev() {
             let layer = &self.layers[k];
             let xin = self.input_of(k, acts, input);
+            self.stash_residual(arena, &mut pending, k, &g);
             if layer.n_param_tensors() > 0 {
                 let grow = &mut sq[self.groups[k] * b..(self.groups[k] + 1) * b];
                 match psg[k].as_mut() {
                     Some(store) => layer.psg_norms_stored(xin, &g, store, scratch, grow, ctx),
-                    None => {
-                        layer.accum_sq_norms(xin, &g, self.routes[k], &caches[k], scratch, grow, ctx)
-                    }
+                    None => layer.accum_sq_norms(
+                        xin,
+                        &g,
+                        self.routes[k],
+                        self.params_of(k),
+                        &caches[k],
+                        scratch,
+                        grow,
+                        ctx,
+                    ),
                 }
             }
             if k > 0 {
@@ -407,9 +511,11 @@ impl StackRun<'_> {
                     &acts[k + 1],
                     self.params_of(k),
                     &caches[k],
+                    scratch,
                     &mut g_prev,
                     ctx,
                 );
+                self.merge_residual(arena, &mut pending, k, &mut g_prev);
                 let old = std::mem::replace(&mut g, g_prev);
                 if keep_g && layer.n_param_tensors() > 0 {
                     kept[k] = Some(old);
@@ -422,6 +528,9 @@ impl StackRun<'_> {
             kept[0] = Some(g);
         } else {
             arena.give(g);
+        }
+        for p in pending.into_iter().flatten() {
+            arena.give(p);
         }
         (loss, kept)
     }
@@ -453,7 +562,16 @@ impl StackRun<'_> {
             let gk = &mut grads[self.offsets[k]..self.offsets[k + 1]];
             match psg[k].as_ref() {
                 Some(store) => layer.psg_weighted_sum(store, g, c, gk, ctx),
-                None => layer.clipped_grads(xin, g, Some(c), &caches[k], scratch, gk, ctx),
+                None => layer.clipped_grads(
+                    xin,
+                    g,
+                    Some(c),
+                    self.params_of(k),
+                    &caches[k],
+                    scratch,
+                    gk,
+                    ctx,
+                ),
             }
         }
     }
@@ -477,15 +595,17 @@ impl StackRun<'_> {
         let rows = ctx.rows();
         let nl = self.layers.len();
         let c_out = self.layers[nl - 1].out_width();
+        let mut pending: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
         let mut g = arena.take(rows * c_out);
         let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
         for k in (0..nl).rev() {
             let layer = &self.layers[k];
             let xin = self.input_of(k, acts, input);
+            self.stash_residual(arena, &mut pending, k, &g);
             if layer.n_param_tensors() > 0 {
                 let c = cfac.map(|cf| &cf[self.groups[k] * b..(self.groups[k] + 1) * b]);
                 let gk = &mut grads[self.offsets[k]..self.offsets[k + 1]];
-                layer.clipped_grads(xin, &g, c, &caches[k], scratch, gk, ctx);
+                layer.clipped_grads(xin, &g, c, self.params_of(k), &caches[k], scratch, gk, ctx);
             }
             if k > 0 {
                 let mut g_prev = arena.take(rows * layer.in_width());
@@ -495,13 +615,18 @@ impl StackRun<'_> {
                     &acts[k + 1],
                     self.params_of(k),
                     &caches[k],
+                    scratch,
                     &mut g_prev,
                     ctx,
                 );
+                self.merge_residual(arena, &mut pending, k, &mut g_prev);
                 arena.give(std::mem::replace(&mut g, g_prev));
             }
         }
         arena.give(g);
+        for p in pending.into_iter().flatten() {
+            arena.give(p);
+        }
         loss
     }
 }

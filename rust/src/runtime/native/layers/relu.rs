@@ -4,7 +4,7 @@
 //! *post*-activation output, exactly the legacy fused Linear+ReLU
 //! semantics, bitwise).
 
-use super::{Ctx, DpLayer, LayerIn};
+use super::{Ctx, DpLayer, LayerIn, Scratch};
 use crate::arch::LayerDims;
 
 /// Elementwise `max(0, x)`.
@@ -67,6 +67,7 @@ impl DpLayer for Relu {
         out: &[f32],
         _params: &[Vec<f32>],
         _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
         g_in: &mut [f32],
         _ctx: Ctx,
     ) {

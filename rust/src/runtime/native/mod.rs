@@ -70,6 +70,9 @@ pub struct NativeBackend {
     store_psg: Vec<bool>,
     /// Clipping-group id per stack layer (meaningful for trainable).
     groups: Vec<usize>,
+    /// Residual skip per stack layer (`Some(r)` adds layer `r`'s input
+    /// activation to layer `k`'s output; transformer blocks).
+    residuals: Vec<Option<usize>>,
     /// Number of clipping groups.
     n_groups: usize,
     threads: usize,
@@ -83,6 +86,9 @@ pub struct NativeBackend {
     // scratch sizing (computed once from the stack)
     max_dp: usize,
     max_small: usize,
+    /// Attention recompute scratch (`[g_ao | g_qkv]`): `B*T * 4*d` of
+    /// the widest attention layer, 0 when the stack has none.
+    max_attn: usize,
     need_gram: bool,
     need_stream_two: bool,
     need_stream_one: bool,
@@ -127,7 +133,27 @@ impl NativeBackend {
                 spec.n_classes
             );
         }
+        if spec.blocks > 0 {
+            if spec.vocab == 0 {
+                bail!(
+                    "transformer model '{}' requires vocab > 0 (token input)",
+                    spec.name
+                );
+            }
+            if spec.attn_heads == 0 || spec.d_in % spec.attn_heads != 0 {
+                bail!(
+                    "model '{}': attn_heads {} must divide d_in {}",
+                    spec.name,
+                    spec.attn_heads,
+                    spec.d_in
+                );
+            }
+            if spec.ff == 0 {
+                bail!("transformer model '{}' needs ff > 0", spec.name);
+            }
+        }
         let stack = layers::build_stack(&spec)?;
+        let residuals: Vec<Option<usize>> = spec.plan().iter().map(|l| l.residual).collect();
         let t = spec.seq;
         let routes: Vec<NormRoute> = stack
             .iter()
@@ -188,6 +214,7 @@ impl NativeBackend {
         // shared scratch sizing
         let mut max_dp = 1usize;
         let mut max_small = 1usize;
+        let mut max_attn = 0usize;
         let mut need_gram = false;
         let mut need_stream_two = false;
         let mut need_stream_one = false;
@@ -196,6 +223,22 @@ impl NativeBackend {
                 match d.kind {
                     LayerKind::Norm => max_small = max_small.max(2 * d.p as usize),
                     LayerKind::Embedding => {}
+                    LayerKind::Attention => {
+                        // p encodes the head count; the widest projection
+                        // is the fused QKV (d, 3d), and the recompute
+                        // scratch holds [g_ao | g_qkv] = rows * 4d
+                        let dm = d.d as usize;
+                        max_dp = max_dp.max(dm * 3 * dm);
+                        max_small = max_small.max(3 * dm);
+                        max_attn = max_attn.max(spec.batch * spec.seq * 4 * dm);
+                        if routes[k] == NormRoute::Ghost && t > 1 {
+                            need_gram = true;
+                        }
+                        if routes[k] == NormRoute::Inst {
+                            need_stream_two = true;
+                            need_stream_one = true;
+                        }
+                    }
                     _ => {
                         let dp = (d.d * d.p) as usize;
                         max_dp = max_dp.max(dp);
@@ -240,6 +283,7 @@ impl NativeBackend {
             routes,
             store_psg,
             groups,
+            residuals,
             n_groups,
             threads,
             params,
@@ -250,6 +294,7 @@ impl NativeBackend {
             initialized: false,
             max_dp,
             max_small,
+            max_attn,
             need_gram,
             need_stream_two,
             need_stream_one,
@@ -393,10 +438,17 @@ impl NativeBackend {
             offsets: &self.offsets,
             routes: &self.routes,
             groups: &self.groups,
+            residuals: &self.residuals,
             ctx: self.ctx(),
         };
 
         let (mut acts, mut caches) = run.forward(&mut self.arena, input);
+        // attention recompute scratch, shared by every backward walk
+        let mut attn_buf = if self.max_attn > 0 {
+            self.arena.take(self.max_attn)
+        } else {
+            Vec::new()
+        };
 
         let (loss, mean_clip, group_clip) = if self.strategy == Strategy::NonDp {
             // -- single backward, plain summed gradients ---------------
@@ -412,6 +464,7 @@ impl NativeBackend {
                     stream: &mut none_s[..],
                     small: &mut small[..],
                     partials: &mut partials[..],
+                    attn: &mut attn_buf[..],
                 };
                 run.clipped_recompute(
                     &mut self.arena,
@@ -458,6 +511,7 @@ impl NativeBackend {
                     stream: &mut stream[..],
                     small: &mut small[..],
                     partials: &mut partials[..],
+                    attn: &mut attn_buf[..],
                 };
                 run.norm_pass(
                     &mut self.arena,
@@ -487,6 +541,7 @@ impl NativeBackend {
                     stream: &mut stream[..],
                     small: &mut small[..],
                     partials: &mut partials[..],
+                    attn: &mut attn_buf[..],
                 };
                 if two {
                     run.clipped_recompute(
@@ -526,6 +581,9 @@ impl NativeBackend {
             (loss, mean_clip, group_clip)
         };
 
+        if self.max_attn > 0 {
+            self.arena.give(attn_buf);
+        }
         for c in caches.drain(..) {
             self.arena.give_all(c);
         }
@@ -588,6 +646,116 @@ impl NativeBackend {
         let sizes: Vec<usize> = self.params.iter().map(Vec::len).collect();
         sizes.into_iter().map(|n| self.arena.take(n)).collect()
     }
+
+    /// Clipping-group id of every trainable tensor, in state order
+    /// (the differential test harness maps oracle gradients to groups
+    /// with this).
+    pub fn tensor_groups(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for (k, l) in self.stack.iter().enumerate() {
+            for _ in 0..l.n_param_tensors() {
+                out.push(self.groups[k]);
+            }
+        }
+        out
+    }
+
+    /// Per-sample squared gradient norms, one `(B,)` row per clipping
+    /// group (group-major, `n_groups * B` total) — the quantities the
+    /// clip factors derive from, computed by a single norm pass exactly
+    /// as the configured (strategy, style) would. Diagnostic / test
+    /// surface; rejects `nondp` (which never computes norms).
+    ///
+    /// NOTE: the scratch/arena choreography below mirrors
+    /// `compute_grads` — when the scratch set changes (as `attn` did),
+    /// both sites must be updated in lockstep.
+    pub fn per_sample_sq_norms(&mut self, x: &BatchX, y: &[i32]) -> Result<Vec<f32>> {
+        if self.strategy == Strategy::NonDp {
+            bail!("nondp computes no per-sample norms");
+        }
+        self.check_batch(x, y)?;
+        self.arena.begin_step();
+        let b = self.spec.batch;
+        let t = self.spec.seq;
+        let nl = self.stack.len();
+        let workers = self.ctx().workers();
+        let input = self.layer_input(x);
+        let run = StackRun {
+            layers: &self.stack,
+            params: &self.params,
+            offsets: &self.offsets,
+            routes: &self.routes,
+            groups: &self.groups,
+            residuals: &self.residuals,
+            ctx: self.ctx(),
+        };
+        let (mut acts, mut caches) = run.forward(&mut self.arena, input);
+        let mut attn_buf = if self.max_attn > 0 {
+            self.arena.take(self.max_attn)
+        } else {
+            Vec::new()
+        };
+        let mut gram_a = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut gram_g = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let need_stream = self.need_stream_two;
+        let mut stream = if need_stream {
+            self.arena.take(workers * self.max_dp)
+        } else {
+            Vec::new()
+        };
+        let mut small = self.arena.take(workers * self.max_small);
+        let mut partials = self.arena.take(workers * self.max_dp);
+        let mut sq = self.arena.take(self.n_groups * b);
+        // no stored-psg reuse on this path: every layer takes its
+        // accum_sq_norms route (stored and streamed norms agree bitwise)
+        let mut psg: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
+        {
+            let mut scratch = Scratch {
+                gram_a: &mut gram_a[..],
+                gram_g: &mut gram_g[..],
+                stream: &mut stream[..],
+                small: &mut small[..],
+                partials: &mut partials[..],
+                attn: &mut attn_buf[..],
+            };
+            let (_loss, kept) = run.norm_pass(
+                &mut self.arena,
+                &acts,
+                &caches,
+                input,
+                y,
+                &mut scratch,
+                &mut psg,
+                &mut sq,
+                false,
+            );
+            debug_assert!(kept.iter().all(Option::is_none));
+        }
+        let out = sq.clone();
+        self.arena.give(sq);
+        self.arena.give(partials);
+        self.arena.give(small);
+        if need_stream {
+            self.arena.give(stream);
+        }
+        if self.need_gram {
+            self.arena.give(gram_g);
+            self.arena.give(gram_a);
+        }
+        if self.max_attn > 0 {
+            self.arena.give(attn_buf);
+        }
+        for c in caches.drain(..) {
+            self.arena.give_all(c);
+        }
+        while let Some(a) = acts.pop() {
+            if a.capacity() > 0 {
+                self.arena.give(a);
+            }
+        }
+        debug_assert_eq!(self.arena.outstanding(), 0, "arena leak in norm pass");
+        Ok(out)
+    }
 }
 
 impl Backend for NativeBackend {
@@ -640,6 +808,7 @@ impl Backend for NativeBackend {
             offsets: &self.offsets,
             routes: &self.routes,
             groups: &self.groups,
+            residuals: &self.residuals,
             ctx: self.ctx(),
         };
         let (mut acts, mut caches) = run.forward(&mut self.arena, input);
@@ -770,6 +939,24 @@ mod tests {
         }
     }
 
+    fn tiny_gpt_spec() -> NativeSpec {
+        NativeSpec {
+            name: "tiny_gpt".into(),
+            batch: 3,
+            seq: 5,
+            d_in: 8,
+            hidden: Vec::new(),
+            n_classes: 11,
+            optimizer: "sgd".into(),
+            clip_fn: "automatic".into(),
+            vocab: 11,
+            blocks: 1,
+            attn_heads: 2,
+            ff: 12,
+            ..NativeSpec::default()
+        }
+    }
+
     fn batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
         let rows = spec.batch * spec.seq;
         let mut rng = Xoshiro256::new(seed);
@@ -810,7 +997,7 @@ mod tests {
 
     #[test]
     fn arena_reaches_steady_state() {
-        for spec in [tiny_spec(), tiny_tok_spec()] {
+        for spec in [tiny_spec(), tiny_tok_spec(), tiny_gpt_spec()] {
             for strat in [
                 Strategy::NonDp,
                 Strategy::Opacus,
@@ -886,6 +1073,47 @@ mod tests {
     }
 
     #[test]
+    fn gpt_stack_trains_and_reports_norms() {
+        // The transformer path end-to-end: loss falls on a fixed batch,
+        // and per-sample norms are positive/finite per clipping group.
+        let spec = tiny_gpt_spec();
+        let (x, y) = batch_for(&spec, 17);
+        let mut be =
+            NativeBackend::with_style(spec.clone(), Strategy::Bk, ClippingStyle::LayerWise, 2)
+                .unwrap();
+        be.init(5).unwrap();
+        let sq = be.per_sample_sq_norms(&x, &y).unwrap();
+        assert_eq!(sq.len(), be.n_clip_groups() * spec.batch);
+        assert!(sq.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert_eq!(be.tensor_groups().len(), be.info().param_names.len());
+        let l0 = be.eval_loss(&x, &y).unwrap();
+        assert!((l0 - (spec.n_classes as f32).ln()).abs() < 1.0, "init loss {l0}");
+        let mut h = hyper();
+        h.lr = 0.2;
+        for _ in 0..40 {
+            be.step(&x, &y, &[], &h).unwrap();
+        }
+        let l1 = be.eval_loss(&x, &y).unwrap();
+        assert!(l1 < l0, "gpt loss should fall on a fixed batch: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn transformer_spec_validation() {
+        let mut s = tiny_gpt_spec();
+        s.attn_heads = 3; // does not divide d_in = 8
+        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        assert!(err.contains("attn_heads"), "{err}");
+        let mut s = tiny_gpt_spec();
+        s.vocab = 0;
+        s.n_classes = 11;
+        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        assert!(err.contains("vocab"), "{err}");
+        let mut s = tiny_gpt_spec();
+        s.ff = 0;
+        assert!(NativeBackend::new(s, Strategy::Bk, 1).is_err());
+    }
+
+    #[test]
     fn rejects_bad_shapes_and_tokens() {
         let mut be = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
         be.init(0).unwrap();
@@ -942,7 +1170,7 @@ mod tests {
     #[test]
     fn group_wise_one_group_is_all_layer_bitwise() {
         // group-wise:1 must be exactly flat clipping (R_1 = R).
-        for spec in [tiny_spec(), tiny_tok_spec()] {
+        for spec in [tiny_spec(), tiny_tok_spec(), tiny_gpt_spec()] {
             let (x, y) = batch_for(&spec, 21);
             let run = |style: ClippingStyle| -> Vec<Vec<f32>> {
                 let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();

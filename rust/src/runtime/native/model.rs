@@ -46,6 +46,14 @@ pub enum PlanOp {
         /// Normalized feature width.
         width: usize,
     },
+    /// Causal multi-head self-attention over width `d` (fused QKV
+    /// projection + output projection; `heads` must divide `d`).
+    Attention {
+        /// Model width (input and output feature width).
+        d: usize,
+        /// Attention head count.
+        heads: usize,
+    },
 }
 
 /// One planned layer: the op plus its display / parameter names.
@@ -57,6 +65,9 @@ pub struct PlannedLayer {
     pub op: PlanOp,
     /// Names of this layer's trainable tensors, in parameter order.
     pub param_names: Vec<String>,
+    /// Residual skip: `Some(r)` adds the *input* activation of plan
+    /// layer `r` to this layer's output (the transformer pre-LN skip).
+    pub residual: Option<usize>,
 }
 
 impl PlannedLayer {
@@ -66,6 +77,7 @@ impl PlannedLayer {
             PlanOp::Embedding { dim, .. } => dim,
             PlanOp::Linear { p, .. } => p,
             PlanOp::Relu { width } | PlanOp::LayerNorm { width } => width,
+            PlanOp::Attention { d, .. } => d,
         }
     }
 
@@ -76,17 +88,23 @@ impl PlannedLayer {
             PlanOp::Linear { d, p } => vec![vec![d, p], vec![p]],
             PlanOp::Relu { .. } => Vec::new(),
             PlanOp::LayerNorm { width } => vec![vec![width], vec![width]],
+            PlanOp::Attention { d, .. } => {
+                vec![vec![d, 3 * d], vec![3 * d], vec![d, d], vec![d]]
+            }
         }
     }
 
     /// Complexity-engine dims (`None` for stateless ops), in the
-    /// paper's (T, d, p) convention at sequence length `t`.
+    /// paper's (T, d, p) convention at sequence length `t`. Attention
+    /// encodes d = model width and p = head count (see
+    /// `complexity::attention_sublayers`).
     pub fn dims(&self, t: usize) -> Option<LayerDims> {
         let (kind, d, p) = match self.op {
             PlanOp::Embedding { vocab, dim } => (LayerKind::Embedding, vocab, dim),
             PlanOp::Linear { d, p } => (LayerKind::Linear, d, p),
             PlanOp::Relu { .. } => return None,
             PlanOp::LayerNorm { width } => (LayerKind::Norm, width, width),
+            PlanOp::Attention { d, heads } => (LayerKind::Attention, d, heads),
         };
         Some(LayerDims {
             kind,
@@ -123,6 +141,16 @@ pub struct NativeSpec {
     pub vocab: usize,
     /// Insert LayerNorm after the embedding and each hidden linear.
     pub layernorm: bool,
+    /// Transformer block count. `> 0` switches the plan to a GPT-style
+    /// stack — Embedding, `blocks` pre-LN blocks (causal self-attention
+    /// + MLP, both with residual adds), final LayerNorm, vocab head —
+    /// and `hidden` / `layernorm` are ignored (`ff` is the block MLP
+    /// width, `attn_heads` the head count; requires `vocab > 0`).
+    pub blocks: usize,
+    /// Attention heads per block (must divide `d_in`).
+    pub attn_heads: usize,
+    /// Feed-forward width of the block MLP.
+    pub ff: usize,
 }
 
 impl Default for NativeSpec {
@@ -138,6 +166,9 @@ impl Default for NativeSpec {
             clip_fn: "automatic".into(),
             vocab: 0,
             layernorm: false,
+            blocks: 0,
+            attn_heads: 0,
+            ff: 0,
         }
     }
 }
@@ -146,6 +177,9 @@ impl NativeSpec {
     /// The canonical layer walk: every other shape view derives from
     /// this one iterator, so layer kinds cannot drift between views.
     pub fn plan(&self) -> Vec<PlannedLayer> {
+        if self.blocks > 0 {
+            return self.transformer_plan();
+        }
         let mut out = Vec::new();
         let mut d = self.d_in;
         let mut fc = 0usize;
@@ -155,6 +189,7 @@ impl NativeSpec {
                 name: format!("ln{ln}"),
                 op: PlanOp::LayerNorm { width },
                 param_names: vec![format!("ln{ln}_g"), format!("ln{ln}_b")],
+                residual: None,
             });
             *ln += 1;
         };
@@ -166,6 +201,7 @@ impl NativeSpec {
                     dim: self.d_in,
                 },
                 param_names: vec!["emb_w".into()],
+                residual: None,
             });
             if self.layernorm {
                 push_ln(&mut out, &mut ln, d);
@@ -176,6 +212,7 @@ impl NativeSpec {
                 name: format!("fc{fc}"),
                 op: PlanOp::Linear { d, p: h },
                 param_names: vec![format!("w{fc}"), format!("b{fc}")],
+                residual: None,
             });
             fc += 1;
             if self.layernorm {
@@ -185,6 +222,7 @@ impl NativeSpec {
                 name: format!("relu{}", fc - 1),
                 op: PlanOp::Relu { width: h },
                 param_names: Vec::new(),
+                residual: None,
             });
             d = h;
         }
@@ -195,6 +233,95 @@ impl NativeSpec {
                 p: self.n_classes,
             },
             param_names: vec![format!("w{fc}"), format!("b{fc}")],
+            residual: None,
+        });
+        out
+    }
+
+    /// GPT-style pre-LN transformer plan:
+    ///
+    /// ```text
+    /// Embedding -> [ LN -> Attention (+x) -> LN -> Linear -> ReLU -> Linear (+x) ] * blocks
+    ///           -> LN -> Linear(d, vocab)   (next-token head)
+    /// ```
+    ///
+    /// Each `residual` marker names the plan position whose *input*
+    /// activation is added to the layer's output — the block input for
+    /// the attention skip, the attention output for the MLP skip.
+    fn transformer_plan(&self) -> Vec<PlannedLayer> {
+        let d = self.d_in;
+        let mut out = Vec::new();
+        out.push(PlannedLayer {
+            name: "emb".into(),
+            op: PlanOp::Embedding {
+                vocab: self.vocab,
+                dim: d,
+            },
+            param_names: vec!["emb_w".into()],
+            residual: None,
+        });
+        for bi in 0..self.blocks {
+            let block_in = out.len();
+            out.push(PlannedLayer {
+                name: format!("b{bi}_ln1"),
+                op: PlanOp::LayerNorm { width: d },
+                param_names: vec![format!("b{bi}_ln1_g"), format!("b{bi}_ln1_b")],
+                residual: None,
+            });
+            out.push(PlannedLayer {
+                name: format!("b{bi}_attn"),
+                op: PlanOp::Attention {
+                    d,
+                    heads: self.attn_heads,
+                },
+                param_names: vec![
+                    format!("b{bi}_attn_wqkv"),
+                    format!("b{bi}_attn_bqkv"),
+                    format!("b{bi}_attn_wo"),
+                    format!("b{bi}_attn_bo"),
+                ],
+                residual: Some(block_in),
+            });
+            let mlp_in = out.len();
+            out.push(PlannedLayer {
+                name: format!("b{bi}_ln2"),
+                op: PlanOp::LayerNorm { width: d },
+                param_names: vec![format!("b{bi}_ln2_g"), format!("b{bi}_ln2_b")],
+                residual: None,
+            });
+            out.push(PlannedLayer {
+                name: format!("b{bi}_fc1"),
+                op: PlanOp::Linear { d, p: self.ff },
+                param_names: vec![format!("b{bi}_w1"), format!("b{bi}_b1")],
+                residual: None,
+            });
+            out.push(PlannedLayer {
+                name: format!("b{bi}_relu"),
+                op: PlanOp::Relu { width: self.ff },
+                param_names: Vec::new(),
+                residual: None,
+            });
+            out.push(PlannedLayer {
+                name: format!("b{bi}_fc2"),
+                op: PlanOp::Linear { d: self.ff, p: d },
+                param_names: vec![format!("b{bi}_w2"), format!("b{bi}_b2")],
+                residual: Some(mlp_in),
+            });
+        }
+        out.push(PlannedLayer {
+            name: "lnf".into(),
+            op: PlanOp::LayerNorm { width: d },
+            param_names: vec!["lnf_g".into(), "lnf_b".into()],
+            residual: None,
+        });
+        out.push(PlannedLayer {
+            name: "head".into(),
+            op: PlanOp::Linear {
+                d,
+                p: self.n_classes,
+            },
+            param_names: vec!["head_w".into(), "head_b".into()],
+            residual: None,
         });
         out
     }
@@ -245,7 +372,11 @@ impl NativeSpec {
                 param_names.push(name.clone());
             }
         }
-        let kind = if self.vocab > 0 {
+        let kind = if self.blocks > 0 {
+            // GPT-style transformer: same next-token Markov-corpus
+            // pipeline the pjrt gpt artifacts use
+            "gpt"
+        } else if self.vocab > 0 {
             "seqtok"
         } else if self.seq > 1 {
             "seqmlp"
@@ -364,6 +495,43 @@ impl NativeSpec {
                 clip_fn: "automatic".into(),
                 vocab: 128,
                 layernorm: true,
+                ..NativeSpec::default()
+            },
+            // GPT-nano: a real causal-attention transformer (the paper's
+            // actual experimental subject, scaled to the CPU testbed) —
+            // Embedding -> 2 pre-LN blocks -> LN -> vocab head,
+            // next-token over the Markov corpus, entirely native.
+            NativeSpec {
+                name: "gpt_nano_e2e".into(),
+                batch: 8,
+                seq: 16,
+                d_in: 32,
+                hidden: Vec::new(),
+                n_classes: 64,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 64,
+                blocks: 2,
+                attn_heads: 4,
+                ff: 64,
+                ..NativeSpec::default()
+            },
+            // Bigger transformer workload for benching the attention
+            // kernels (T = 32 keeps the ghost/instantiation dispatch
+            // non-trivial: 2T^2 = 2048 vs d^2 = 4096).
+            NativeSpec {
+                name: "gpt_nano_bench".into(),
+                batch: 16,
+                seq: 32,
+                d_in: 64,
+                hidden: Vec::new(),
+                n_classes: 128,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 128,
+                blocks: 2,
+                attn_heads: 4,
+                ff: 128,
                 ..NativeSpec::default()
             },
         ]
@@ -489,5 +657,62 @@ mod tests {
         assert!(NativeSpec::by_name("resnet9000").is_none());
         assert!(registry_names().contains(&"mlp_e2e".to_string()));
         assert!(registry_names().contains(&"seq_tok_e2e".to_string()));
+        assert!(registry_names().contains(&"gpt_nano_e2e".to_string()));
+        assert!(registry_names().contains(&"gpt_nano_bench".to_string()));
+    }
+
+    #[test]
+    fn transformer_plan_shape_and_residuals() {
+        let s = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        let plan = s.plan();
+        // emb + 2 * (ln, attn, ln, fc, relu, fc) + lnf + head
+        assert_eq!(plan.len(), 1 + 2 * 6 + 2);
+        assert!(matches!(plan[0].op, PlanOp::Embedding { vocab: 64, dim: 32 }));
+        assert!(matches!(plan[1].op, PlanOp::LayerNorm { width: 32 }));
+        assert!(matches!(plan[2].op, PlanOp::Attention { d: 32, heads: 4 }));
+        assert!(matches!(plan[3].op, PlanOp::LayerNorm { width: 32 }));
+        assert!(matches!(plan[4].op, PlanOp::Linear { d: 32, p: 64 }));
+        assert!(matches!(plan[5].op, PlanOp::Relu { width: 64 }));
+        assert!(matches!(plan[6].op, PlanOp::Linear { d: 64, p: 32 }));
+        // residual markers: attention adds the block input, the MLP tail
+        // adds the attention output; everything else is skip-free
+        assert_eq!(plan[2].residual, Some(1), "attn skip from the block input");
+        assert_eq!(plan[6].residual, Some(3), "mlp skip from the attn output");
+        assert_eq!(plan[8].residual, Some(7), "block 1 attn skip");
+        assert_eq!(plan[12].residual, Some(9), "block 1 mlp skip");
+        assert!(plan
+            .iter()
+            .enumerate()
+            .all(|(k, l)| l.residual.is_none() || [2, 6, 8, 12].contains(&k)));
+        // head maps to the vocab; final LN precedes it
+        assert!(matches!(plan[13].op, PlanOp::LayerNorm { width: 32 }));
+        assert!(matches!(plan[14].op, PlanOp::Linear { d: 32, p: 64 }));
+        assert_eq!(s.info().kind, "gpt");
+        // params: emb 64*32 + per block (2*32 ln + attn (32*96+96+32*32+32)
+        // + 2*32 ln + fc1 32*64+64 + fc2 64*32+32) + lnf 2*32 + head 32*64+64
+        let attn = 32 * 96 + 96 + 32 * 32 + 32;
+        let block = 2 * 32 + attn + 2 * 32 + (32 * 64 + 64) + (64 * 32 + 32);
+        assert_eq!(s.n_params(), 64 * 32 + 2 * block + 2 * 32 + (32 * 64 + 64));
+    }
+
+    #[test]
+    fn attention_dims_and_routes() {
+        let s = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        let arch = s.arch_layers();
+        // emb + 2 * (ln, attn, ln, fc1, fc2) + lnf + head trainables
+        assert_eq!(arch.len(), 1 + 2 * 5 + 2);
+        let attn = arch.iter().find(|l| l.kind == LayerKind::Attention).unwrap();
+        assert_eq!((attn.t, attn.d, attn.p), (16, 32, 4));
+        // at T = 16, 2T^2 = 512 < d^2 = 1024: attention ghosts
+        assert!(ghost_preferred(attn));
+        // gpt_nano_bench: 2T^2 = 2048 vs d^2 = 4096 still ghosts, but
+        // barely — the dispatch threshold is live on the bench model
+        let b = NativeSpec::by_name("gpt_nano_bench").unwrap();
+        let attn_b = b
+            .arch_layers()
+            .into_iter()
+            .find(|l| l.kind == LayerKind::Attention)
+            .unwrap();
+        assert!(ghost_preferred(&attn_b));
     }
 }

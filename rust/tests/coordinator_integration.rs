@@ -136,6 +136,41 @@ fn token_sequence_model_trains_natively_all_styles() {
 }
 
 #[test]
+fn gpt_nano_trains_natively_with_epsilon_accounting() {
+    // The transformer acceptance path: `fastdp train --model
+    // gpt_nano_e2e --backend native` runs a full DP step loop offline
+    // with finite loss and a growing epsilon ledger, through causal
+    // attention and the residual tape.
+    let mut cfg = base_cfg("gpt_nano_e2e", "bk", 20);
+    cfg.lr = 1e-2; // Adam
+    cfg.log_every = 5;
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    assert_eq!(r.backend, "native");
+    assert_eq!(r.steps, 20);
+    assert!(r.initial_loss.is_finite() && r.final_loss.is_finite());
+    assert!(
+        r.final_loss < r.initial_loss,
+        "gpt_nano loss should fall: {} -> {}",
+        r.initial_loss,
+        r.final_loss
+    );
+    assert!(r.final_epsilon > 0.0 && r.final_epsilon.is_finite());
+    // clipping-style variant: layer-wise clip factors per trainable layer
+    let mut cfg = base_cfg("gpt_nano_e2e", "bk_mixopt", 5);
+    cfg.lr = 1e-2;
+    cfg.clipping_style = "layer-wise".into();
+    cfg.log_every = 5;
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.final_loss.is_finite());
+    let log = r.logs.last().expect("logged step");
+    // emb + 2*(ln,attn,ln,fc1,fc2) + lnf + head = 13 trainable layers
+    assert_eq!(log.group_clip.len(), 13);
+    assert!(log.group_clip.iter().all(|c| c.is_finite() && *c > 0.0));
+}
+
+#[test]
 fn clipping_style_works_through_accumulation() {
     let mut cfg = base_cfg("mlp_e2e", "bk", 4);
     cfg.clipping_style = "layer-wise".into();

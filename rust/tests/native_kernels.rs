@@ -307,6 +307,84 @@ fn nondp_gradient_matches_finite_difference() {
     }
 }
 
+fn token_batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
+    let rows = spec.batch * spec.seq;
+    let mut rng = Xoshiro256::new(seed);
+    let x: Vec<i32> = (0..rows).map(|_| rng.next_below(spec.vocab as u64) as i32).collect();
+    let y: Vec<i32> = (0..rows)
+        .map(|_| rng.next_below(spec.n_classes as u64) as i32)
+        .collect();
+    (BatchX::I32(x), y)
+}
+
+/// Central-difference check of every parameter tensor of a transformer
+/// spec: the analytic summed gradient (nondp `clipped_grads`, c = 1)
+/// must match `(L(w+h) - L(w-h)) / 2h` of the summed loss — through the
+/// causal softmax, the residual adds, and both projections.
+fn fd_check_spec(spec: &NativeSpec, seed: u64) {
+    let rows = spec.batch * spec.seq;
+    let (x, y) = token_batch_for(spec, seed);
+    let mut be = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+    be.init(6).unwrap();
+    let (grads, _) = be.clipped_grads(&x, &y, 1.0).unwrap();
+    let state = be.state().unwrap();
+    let names = be.info().param_names.clone();
+    let n_tr = names.len();
+
+    let h = 1e-2f32;
+    for (k, tensor) in state.iter().enumerate().take(n_tr) {
+        for idx in [0, tensor.len() / 2, tensor.len() - 1] {
+            let mut plus = state.clone();
+            plus[k][idx] += h;
+            let mut minus = state.clone();
+            minus[k][idx] -= h;
+            let mut bp = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            bp.load_state(plus).unwrap();
+            let lp = bp.eval_loss(&x, &y).unwrap() * rows as f32;
+            let mut bm = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            bm.load_state(minus).unwrap();
+            let lm = bm.eval_loss(&x, &y).unwrap() * rows as f32;
+            let numeric = (lp - lm) / (2.0 * h);
+            let analytic = grads[k][idx];
+            assert!(
+                (numeric - analytic).abs() < 2e-2 * analytic.abs().max(1.0),
+                "{} idx {idx}: numeric {numeric} vs analytic {analytic}",
+                names[k]
+            );
+        }
+    }
+}
+
+/// One-block transformer FD check, small enough for the default job.
+#[test]
+fn attention_stack_gradient_matches_finite_difference() {
+    let spec = NativeSpec {
+        name: "fd_attn".into(),
+        batch: 2,
+        seq: 4,
+        d_in: 8,
+        hidden: Vec::new(),
+        n_classes: 11,
+        optimizer: "sgd".into(),
+        clip_fn: "abadi".into(),
+        vocab: 11,
+        blocks: 1,
+        attn_heads: 2,
+        ff: 12,
+        ..NativeSpec::default()
+    };
+    fd_check_spec(&spec, 4);
+}
+
+/// The full registry transformer, every tensor of both blocks — slow,
+/// runs in the `--ignored` CI job.
+#[test]
+#[ignore = "slow: full gpt_nano_e2e finite-difference sweep; run with --ignored"]
+fn gpt_nano_e2e_gradient_matches_finite_difference() {
+    let spec = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+    fd_check_spec(&spec, 9);
+}
+
 /// All seven DP strategies leave the arena allocation-free once warm on
 /// a model that exercises both norm routes.
 #[test]
