@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Generate golden reference values for the tied embedding+head ghost
+cross-term kernel (rust/tests/tied_golden.rs).
+
+When the vocab head is tied to the embedding table (lm_head = wte^T,
+the GPT-2 convention), a sample's gradient with respect to the shared
+(vocab, d) tensor is the sum of two contributions:
+
+  G_i = G_emb_i + G_head_i
+  G_emb_i[v, j]  = sum_t 1[tok_i[t] = v] * g_emb_i[t, j]
+  G_head_i[v, j] = sum_t g_head_i[t, v] * x_head_i[t, j]
+
+so the per-sample squared norm the clip factors need is
+
+  ||G_i||^2 = ||G_emb_i||^2 + ||G_head_i||^2 + 2 <G_emb_i, G_head_i>
+
+and the cross term contracts WITHOUT materializing either (vocab, d)
+gradient:
+
+  <G_emb_i, G_head_i>
+    = sum_{t1, t2} g_head_i[t2, tok_i[t1]] * (g_emb_i[t1, :] . x_head_i[t2, :])
+
+— a third Gram-structured O(T^2 d) sweep next to the embedding's
+token-equality ghost norm and the head's activation/gradient Grams.
+
+This script (a) builds a real tiny tied model (embedding -> tanh ->
+transposed-embedding head -> softmax-xent), (b) validates its combined
+gradient against central finite differences, (c) validates the
+decomposition identity against materialized f64 per-sample gradients,
+and only then (d) emits the constants, so the committed goldens pin a
+*checked* derivation.
+"""
+
+import numpy as np
+
+
+def softmax_xent_grad(logits, y):
+    """Summed-loss softmax cross-entropy and its gradient, row-wise."""
+    m = logits.max(axis=-1, keepdims=True)
+    e = np.exp(logits - m)
+    p = e / e.sum(axis=-1, keepdims=True)
+    rows = logits.shape[0]
+    loss = float(-np.log(p[np.arange(rows), y]).sum())
+    g = p.copy()
+    g[np.arange(rows), y] -= 1.0
+    return loss, g
+
+
+def forward(w, tokens, y, b, t, d, vocab):
+    """Tiny tied model: e = W[tok]; h = tanh(e); logits = h @ W^T."""
+    e = w[tokens]  # (rows, d)
+    h = np.tanh(e)
+    logits = h @ w.T  # (rows, vocab)
+    loss, g_logits = softmax_xent_grad(logits, y)
+    # backprop to the embedding output: through the head, then tanh
+    g_h = g_logits @ w  # (rows, d)
+    g_emb = g_h * (1.0 - h * h)
+    return loss, h, g_logits, g_emb
+
+
+def per_sample_grads(w, tokens, g_logits, g_emb, b, t, d, vocab):
+    """Materialize G_emb_i, G_head_i, and the combined G_i in f64."""
+    gs_emb = np.zeros((b, vocab, d))
+    gs_head = np.zeros((b, vocab, d))
+    for i in range(b):
+        for tt in range(t):
+            r = i * t + tt
+            gs_emb[i, tokens[r]] += g_emb[r]
+        gs_head[i] = g_logits[i * t : (i + 1) * t].T @ np.tanh(w[tokens[i * t : (i + 1) * t]])
+    return gs_emb, gs_head
+
+
+def cross_formula(tokens, g_emb, x_head, g_head, b, t, d):
+    """The O(T^2 d) contraction the Rust kernel implements."""
+    out = np.zeros(b)
+    for i in range(b):
+        acc = 0.0
+        for t1 in range(t):
+            for t2 in range(t):
+                tok = tokens[i * t + t1]
+                acc += g_head[i * t + t2, tok] * float(
+                    np.dot(g_emb[i * t + t1], x_head[i * t + t2])
+                )
+        out[i] = acc
+    return out
+
+
+def fd_check(w, tokens, y, b, t, d, vocab):
+    """Central differences of the summed loss vs the analytic combined
+    gradient sum_i (G_emb_i + G_head_i)."""
+    _, h, g_logits, g_emb = forward(w, tokens, y, b, t, d, vocab)
+    gs_emb, gs_head = per_sample_grads(w, tokens, g_logits, g_emb, b, t, d, vocab)
+    analytic = (gs_emb + gs_head).sum(axis=0)
+    step = 1e-6
+    worst = 0.0
+    for idx in np.ndindex(w.shape):
+        wp = w.copy()
+        wp[idx] += step
+        wm = w.copy()
+        wm[idx] -= step
+        lp = forward(wp, tokens, y, b, t, d, vocab)[0]
+        lm = forward(wm, tokens, y, b, t, d, vocab)[0]
+        num = (lp - lm) / (2 * step)
+        worst = max(worst, abs(num - analytic[idx]) / max(abs(num), 1e-6))
+    return worst
+
+
+def fmt(name, arr, ty="f32"):
+    flat = np.asarray(arr).ravel()
+    if ty == "i32":
+        body = ",\n    ".join(
+            ", ".join(str(int(v)) for v in flat[i : i + 12]) for i in range(0, len(flat), 12)
+        )
+    else:
+        body = ",\n    ".join(
+            ", ".join(f"{v:.8}" for v in flat[i : i + 6]) for i in range(0, len(flat), 6)
+        )
+    return f"pub const {name}: [{ty}; {len(flat)}] = [\n    {body},\n];\n"
+
+
+def main():
+    rng = np.random.default_rng(20230713)  # the BK paper's ICML vintage
+    b, t, d, vocab = 3, 4, 5, 7
+    rows = b * t
+    w = rng.standard_normal((vocab, d)) * 0.6
+    # sample tokens from a narrow band so the equality mask fires often
+    tokens = rng.integers(0, 4, size=rows).astype(np.int64)
+    y = rng.integers(0, vocab, size=rows).astype(np.int64)
+
+    worst = fd_check(w, tokens, y, b, t, d, vocab)
+    assert worst < 1e-4, f"combined tied gradient fails FD: {worst}"
+
+    _, h, g_logits, g_emb = forward(w, tokens, y, b, t, d, vocab)
+    gs_emb, gs_head = per_sample_grads(w, tokens, g_logits, g_emb, b, t, d, vocab)
+
+    emb_sq = np.array([(g * g).sum() for g in gs_emb])
+    head_sq = np.array([(g * g).sum() for g in gs_head])
+    combined_sq = np.array([(g * g).sum() for g in (gs_emb + gs_head)])
+    cross = cross_formula(tokens, g_emb, h, g_logits, b, t, d)
+
+    # identity check: the O(T^2 d) formula equals the materialized cross
+    ident = np.abs(emb_sq + head_sq + 2 * cross - combined_sq)
+    assert ident.max() < 1e-9 * max(combined_sq.max(), 1.0), f"identity fails: {ident}"
+
+    print(f"// FD check of the combined tied gradient: worst rel err {worst:.2e}")
+    print("// Generated by python/tools/gen_tied_golden.py — do not edit.")
+    print(f"pub const B: usize = {b};")
+    print(f"pub const T: usize = {t};")
+    print(f"pub const D: usize = {d};")
+    print(f"pub const VOCAB: usize = {vocab};")
+    print(fmt("TOKENS", tokens, "i32"))
+    print(fmt("G_EMB", g_emb))
+    print(fmt("X_HEAD", h))
+    print(fmt("G_HEAD", g_logits))
+    print(fmt("CROSS2", 2 * cross))
+    print(fmt("EMB_SQ", emb_sq))
+    print(fmt("HEAD_SQ", head_sq))
+    print(fmt("COMBINED_SQ", combined_sq))
+
+
+if __name__ == "__main__":
+    main()

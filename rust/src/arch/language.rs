@@ -19,7 +19,11 @@ pub fn gpt2(name: &str, t: u64, dm: u64, depth: u64) -> Arch {
         a.linear(&format!("h{i}.mlp.c_proj"), t, 4 * dm, dm, true);
     }
     a.norm("ln_f", t, dm);
-    // lm_head is tied to wte — not counted twice.
+    // lm_head is tied to wte: a TiedLinear layer carries the head's
+    // full forward/backward/ghost-norm compute but zero new parameters
+    // (the native registry's tied gpt models follow the same accounting;
+    // see runtime::native::model::NativeSpec::arch).
+    a.tied_linear("lm_head", t, dm, vocab);
     a
 }
 
@@ -159,6 +163,20 @@ mod tests {
             "t5-base params {total}"
         );
         assert_eq!(a.gl_bias, 0);
+    }
+
+    #[test]
+    fn gpt2_lm_head_is_tied_and_param_free() {
+        // The tied head is an explicit layer (its ghost-norm and
+        // backward costs are real) but contributes zero parameters —
+        // the same accounting the native tied gpt models use.
+        let a = gpt2("gpt2", 100, 768, 12);
+        let head = a.layers.last().unwrap();
+        assert_eq!(head.kind, super::super::LayerKind::TiedLinear);
+        assert_eq!((head.d, head.p), (768, 50257));
+        assert_eq!(head.weight_params(), 0);
+        // and it participates in the complexity tables as a GL layer
+        assert!(a.gl_layers().any(|l| l.name == "lm_head"));
     }
 
     #[test]

@@ -28,6 +28,13 @@ pub enum LayerKind {
     /// parameter-free softmax core — see
     /// [`crate::complexity::attention_sublayers`].
     Attention,
+    /// A `(d, p)` linear whose weight is a *view* of another layer's
+    /// tensor (the GPT-2 `lm_head = wte^T` tie): compute and activation
+    /// costs are exactly a bias-free Linear's, but its weights are
+    /// counted at the owning layer (`weight_params() == 0`) and its
+    /// per-sample norm needs the tied ghost cross term on top of its own
+    /// Grams (see `complexity::module_time`).
+    TiedLinear,
 }
 
 #[derive(Clone, Debug)]
@@ -45,6 +52,8 @@ impl LayerDims {
             LayerKind::Norm => 0,
             // QKV (d, 3d) + output projection (d, d); p is the head count
             LayerKind::Attention => 4 * self.d * self.d,
+            // the weight is an alias of another layer's tensor
+            LayerKind::TiedLinear => 0,
             _ => self.d * self.p,
         }
     }
@@ -134,6 +143,21 @@ impl Arch {
         self
     }
 
+    /// A `(d, p)` head tied to an earlier layer's `(p, d)` tensor
+    /// (GPT-2 `lm_head = wte^T`): full generalized-linear compute, zero
+    /// *new* parameters and no bias — the weights stay counted at the
+    /// owning embedding.
+    pub fn tied_linear(&mut self, name: &str, t: u64, d: u64, p: u64) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::TiedLinear,
+            name: name.into(),
+            t,
+            d,
+            p,
+        });
+        self
+    }
+
     pub fn norm(&mut self, name: &str, t: u64, dim: u64) -> &mut Self {
         self.layers.push(LayerDims {
             kind: LayerKind::Norm,
@@ -192,5 +216,17 @@ mod tests {
         assert_eq!(a.gl_weight_params(), 4 * 32 * 32);
         assert_eq!(a.gl_bias, 4 * 32);
         assert_eq!(a.gl_layers().count(), 1);
+    }
+
+    #[test]
+    fn tied_linear_adds_no_params_but_is_a_gl_layer() {
+        let mut a = Arch::new("tied");
+        a.embedding("wte", 16, 100, 32).tied_linear("lm_head", 16, 32, 100);
+        // the head's weights are the embedding's — counted once
+        assert_eq!(a.gl_weight_params(), 100 * 32);
+        assert_eq!(a.gl_bias, 0);
+        // but it is a real generalized-linear layer for compute costs
+        assert_eq!(a.gl_layers().count(), 2);
+        assert_eq!(a.layers[1].weight_params(), 0);
     }
 }

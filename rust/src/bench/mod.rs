@@ -39,6 +39,9 @@ pub struct BenchResult {
     pub seq_len: usize,
     /// Attention heads (0 for models without attention layers).
     pub heads: usize,
+    /// Vocab head tied to the embedding (`lm_head = wte^T`); rows from
+    /// JSON written before the field existed parse as untied.
+    pub tied: bool,
     pub threads: usize,
     pub mean_step_secs: f64,
     pub min_step_secs: f64,
@@ -57,6 +60,7 @@ impl BenchResult {
             .set("batch", Value::from(self.batch))
             .set("seq_len", Value::from(self.seq_len))
             .set("heads", Value::from(self.heads))
+            .set("tied", Value::from(self.tied))
             .set("threads", Value::from(self.threads))
             .set("mean_step_secs", Value::from(self.mean_step_secs))
             .set("min_step_secs", Value::from(self.min_step_secs))
@@ -75,6 +79,8 @@ impl BenchResult {
             // pre-attention JSON (no seq_len/heads) defaults to T = 1, no heads
             seq_len: v.opt_i64("seq_len", 1) as usize,
             heads: v.opt_i64("heads", 0) as usize,
+            // pre-tying JSON (no tied field) defaults to untied
+            tied: v.opt_bool("tied", false),
             threads: v.opt_i64("threads", 1) as usize,
             mean_step_secs: v.req_f64("mean_step_secs").map_err(|e| anyhow!(e))?,
             min_step_secs: v.req_f64("min_step_secs").map_err(|e| anyhow!(e))?,
@@ -151,6 +157,7 @@ pub fn measure_native(
         batch: spec.batch,
         seq_len: spec.seq,
         heads: spec.attn_heads,
+        tied: spec.tied,
         threads,
         mean_step_secs: s.mean(),
         min_step_secs: s.min(),
@@ -517,6 +524,7 @@ pub fn measure_step(
         batch: b,
         seq_len: meta.spec.opt_i64("seq", 1) as usize,
         heads: meta.spec.opt_i64("heads", 0) as usize,
+        tied: meta.spec.opt_bool("tied", false),
         threads: 1,
         mean_step_secs: s.mean(),
         min_step_secs: s.min(),
@@ -570,6 +578,7 @@ mod tests {
             batch: 8,
             seq_len: 32,
             heads: 4,
+            tied: true,
             threads: 4,
             mean_step_secs: 0.25,
             min_step_secs: 0.2,
@@ -584,10 +593,12 @@ mod tests {
         assert_eq!(r2.batch, 8);
         assert_eq!(r2.seq_len, 32);
         assert_eq!(r2.heads, 4);
+        assert!(r2.tied, "tied flag must round-trip");
         assert_eq!(r2.threads, 4);
         assert!((r2.samples_per_sec - 32.0).abs() < 1e-12);
         assert_eq!(r2.steady_allocs, 0);
-        // pre-style/pre-attention JSON defaults: all-layer, T = 1, no heads
+        // pre-style/pre-attention/pre-tying JSON defaults: all-layer,
+        // T = 1, no heads, untied
         let legacy = crate::json::parse(
             r#"{"model":"m","strategy":"bk","batch":4,"mean_step_secs":0.1,
                 "min_step_secs":0.1,"samples_per_sec":40.0,"peak_rss":1.0}"#,
@@ -597,6 +608,15 @@ mod tests {
         assert_eq!(lr.style, "all-layer");
         assert_eq!(lr.seq_len, 1);
         assert_eq!(lr.heads, 0);
+        assert!(!lr.tied, "legacy rows default to untied");
+        // a row with seq/heads but no tied field (PR 3 era) is untied too
+        let pr3 = crate::json::parse(
+            r#"{"model":"m","strategy":"bk","batch":4,"seq_len":16,"heads":4,
+                "mean_step_secs":0.1,"min_step_secs":0.1,"samples_per_sec":40.0,
+                "peak_rss":1.0}"#,
+        )
+        .unwrap();
+        assert!(!BenchResult::from_json(&pr3).unwrap().tied);
     }
 
     #[test]
@@ -633,6 +653,22 @@ mod tests {
         let v = r.to_json().to_string();
         assert!(v.contains("seq_len"), "{v}");
         assert!(v.contains("heads"), "{v}");
+    }
+
+    #[test]
+    fn measure_native_covers_tied_models() {
+        // the tied gpt model benches end-to-end (cross-term kernel in
+        // the norm pass) and stays allocation-free once warm
+        let r = measure_native("gpt_nano_tied_e2e", "bk", "all-layer", 1, 2, 2).unwrap();
+        assert!(r.tied, "registry tied model must report tied");
+        assert_eq!(r.seq_len, 16);
+        assert_eq!(r.heads, 4);
+        assert_eq!(r.steady_allocs, 0, "tied gpt arena must be warm after warmup");
+        let v = r.to_json().to_string();
+        assert!(v.contains("\"tied\":true"), "{v}");
+        // untied sibling reports untied
+        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 1, 2).unwrap();
+        assert!(!r.tied);
     }
 
     #[test]

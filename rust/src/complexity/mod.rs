@@ -72,6 +72,9 @@ pub fn module_time(m: Module, b: f64, l: &LayerDims) -> f64 {
             // embedding ghost norm has no activation Gram (token equality
             // mask): 2BT^2 p + BT^2
             LayerKind::Embedding => 2.0 * b * t * t * p + b * t * t,
+            // tied head: its own Grams plus the O(T^2 d) ghost cross
+            // term against the owning embedding (2<G_emb, G_head>)
+            LayerKind::TiedLinear => 2.0 * b * t * t * (p + d) + 2.0 * b * t * t * d,
             _ => 2.0 * b * t * t * (p + d),
         },
         Module::WeightedSum => 2.0 * b * p * d,
@@ -166,6 +169,9 @@ pub fn base_space(b: f64, layers: &[LayerDims]) -> f64 {
         .iter()
         .map(|l| match l.kind {
             LayerKind::Attention => 4.0 * (l.d * l.d) as f64,
+            // keyed on canonical tensors: a tied head's weight slab is
+            // the owning embedding's, already counted there
+            LayerKind::TiedLinear => 0.0,
             _ => (l.p * l.d) as f64,
         })
         .sum();
@@ -295,6 +301,36 @@ mod tests {
             base,
             4.0 * 1024.0 + b * 16.0 * 4.0 * 32.0 + b * 4.0 * 256.0
         );
+    }
+
+    #[test]
+    fn tied_linear_counts_weights_once_but_costs_like_linear() {
+        let tied = LayerDims {
+            kind: LayerKind::TiedLinear,
+            name: "lm_head".into(),
+            t: 16,
+            d: 32,
+            p: 64, // vocab
+        };
+        let mut plain = tied.clone();
+        plain.kind = LayerKind::Linear;
+        let b = 4.0;
+        // identical forward/psg/weighted-sum costs...
+        for m in [Module::Forward, Module::OutputGrad, Module::ParamGrad,
+                  Module::PsgInstantiation, Module::WeightedSum] {
+            assert_eq!(module_time(m, b, &tied), module_time(m, b, &plain));
+            assert_eq!(module_space(m, b, &tied), module_space(m, b, &plain));
+        }
+        // ...plus the 2BT^2 d ghost cross term against the embedding
+        assert_eq!(
+            module_time(Module::GhostNorm, b, &tied),
+            module_time(Module::GhostNorm, b, &plain) + 2.0 * b * 256.0 * 32.0
+        );
+        assert_eq!(ghost_preferred(&tied), ghost_preferred(&plain));
+        // base space: the weight slab is the embedding's, counted once
+        let base_tied = base_space(b, std::slice::from_ref(&tied));
+        let base_plain = base_space(b, std::slice::from_ref(&plain));
+        assert_eq!(base_plain - base_tied, (32 * 64) as f64);
     }
 
     #[test]

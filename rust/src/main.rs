@@ -104,7 +104,8 @@ fn cmd_complexity(args: &Args) -> i32 {
     // catalog first, then the native registry (gpt_nano_*, mlp_*, ...),
     // so the complexity report covers the natively executable
     // transformers with their attention terms
-    let (layers, default_b): (Vec<_>, f64) = match (&arch, NativeSpec::by_name(model)) {
+    let native_spec = NativeSpec::by_name(model);
+    let (layers, default_b): (Vec<_>, f64) = match (&arch, &native_spec) {
         (Some(arch), _) => (arch.gl_layers().cloned().collect(), 100.0),
         (None, Some(spec)) => (
             spec.arch_layers()
@@ -121,6 +122,27 @@ fn cmd_complexity(args: &Args) -> i32 {
             return 2;
         }
     };
+    // Native models: the complexity-side parameter census (canonical
+    // tensors — tied heads counted once) must agree with the spec the
+    // tape executes. A mismatch means the g-cache / sensitivity /
+    // noise accounting is wrong for this model, so fail loudly — the CI
+    // smoke step runs this over the whole registry.
+    if let Some(spec) = &native_spec {
+        let arch_total = spec.arch().total_params() as usize;
+        if arch_total != spec.n_params() {
+            eprintln!(
+                "param census mismatch for '{model}': arch counts {arch_total}, \
+                 native spec counts {} — canonical-tensor accounting has drifted",
+                spec.n_params()
+            );
+            return 1;
+        }
+        println!(
+            "params: {} canonical floats{} (arch census and native spec agree)",
+            fmt_count(spec.n_params() as f64),
+            if spec.tied { ", vocab head tied to the embedding" } else { "" },
+        );
+    }
     let b = args.get_f64("batch", default_b);
     let mut t = Table::new(
         &format!("{model}: per-strategy complexity (B={b})"),
@@ -222,6 +244,14 @@ fn cmd_calibrate(args: &Args) -> i32 {
 }
 
 fn cmd_list(args: &Args) -> i32 {
+    // `--names`: bare registry names, one per line — scripting surface
+    // for the CI complexity smoke loop.
+    if args.has_flag("names") {
+        for name in fastdp::runtime::native::model::registry_names() {
+            println!("{name}");
+        }
+        return 0;
+    }
     // Native registry (always available).
     let mut t = Table::new(
         "native models (backend=native, no artifacts needed)",
@@ -236,7 +266,7 @@ fn cmd_list(args: &Args) -> i32 {
             .collect();
         t.row(&[
             spec.name.clone(),
-            info.kind.clone(),
+            if spec.tied { format!("{} tied", info.kind) } else { info.kind.clone() },
             spec.batch.to_string(),
             spec.seq.to_string(),
             dims.join("-"),

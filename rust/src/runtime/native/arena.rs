@@ -35,7 +35,18 @@ impl Arena {
     /// Check a zeroed buffer of exactly `len` elements out of the pool.
     ///
     /// Best-fit over pooled capacities; a miss allocates fresh (counted).
+    ///
+    /// `take(0)` returns a non-pooled empty vec and touches no
+    /// accounting: best-fit would otherwise hand out the *smallest
+    /// pooled buffer* for a zero-length request, cascading every later
+    /// take in the step onto mismatched capacities (the pooled-buffer
+    /// steal trap the token-input placeholder in `layers::StackRun::
+    /// forward` used to have to dodge by hand). [`Arena::give`]
+    /// symmetrically ignores capacity-0 buffers.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
         self.outstanding += 1;
         let mut best: Option<usize> = None;
         for (i, b) in self.free.iter().enumerate() {
@@ -64,8 +75,13 @@ impl Arena {
         }
     }
 
-    /// Return a buffer to the pool.
+    /// Return a buffer to the pool. Capacity-0 buffers (placeholders
+    /// and `take(0)` results) are dropped, not pooled — they were never
+    /// counted as outstanding.
     pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
         self.outstanding = self.outstanding.saturating_sub(1);
         self.free.push(buf);
     }
@@ -132,6 +148,28 @@ mod tests {
         assert_eq!(y.len(), 8);
         assert!(y.iter().all(|&v| v == 0.0), "reused buffer must be zeroed");
         a.give(y);
+    }
+
+    #[test]
+    fn take_zero_is_a_non_pooled_noop() {
+        // The pooled-buffer steal trap: take(0) must NOT best-fit the
+        // smallest pooled buffer (that would cascade later takes onto
+        // mismatched capacities), and give()-ing the empty result must
+        // not corrupt the accounting.
+        let mut a = Arena::new();
+        let small = a.take(8);
+        a.give(small);
+        a.begin_step();
+        let z = a.take(0);
+        assert_eq!(z.capacity(), 0, "take(0) must not steal a pooled buffer");
+        assert_eq!(a.fresh_allocs(), 0);
+        assert_eq!(a.outstanding(), 0, "take(0) is not outstanding");
+        a.give(z);
+        assert_eq!(a.outstanding(), 0, "give(empty) must not underflow accounting");
+        // the pooled 8-cap buffer is still there for a real request
+        let again = a.take(4);
+        assert_eq!(a.fresh_allocs(), 0, "pool must still serve the real take");
+        a.give(again);
     }
 
     #[test]

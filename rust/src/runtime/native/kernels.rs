@@ -685,6 +685,59 @@ pub fn embedding_weighted_grad(
     }
 }
 
+/// Ghost cross term for a tied embedding + transposed vocab head
+/// (`lm_head = wte^T`, the GPT-2 tie). A sample's gradient with respect
+/// to the shared `(vocab, d)` tensor is `G_i = G_emb_i + G_head_i`, so
+/// its squared norm needs `2 <G_emb_i, G_head_i>` on top of the two
+/// layers' own ghost norms. Expanding both gradients,
+///
+/// ```text
+/// <G_emb_i, G_head_i>
+///   = sum_{t1,t2} g_head_i[t2, tok_i[t1]] * (g_emb_i[t1,:] . x_head_i[t2,:])
+/// ```
+///
+/// — a third Gram-structured contraction next to the embedding's
+/// token-equality mask and the head's activation/gradient Grams, in
+/// `O(B T^2 d)` time with **no** `(vocab, d)` gradient materialized and
+/// no scratch. `sq[i] += 2 * cross_i`. Pinned to the FD-verified numpy
+/// golden in `tests/tied_golden.rs` (`python/tools/gen_tied_golden.py`).
+pub fn tied_cross_sq_norms(
+    tokens: &[i32],
+    g_emb: &[f32],
+    x_head: &[f32],
+    g_head: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    vocab: usize,
+    sq: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(tokens.len(), b * t);
+    debug_assert_eq!(g_emb.len(), b * t * d);
+    debug_assert_eq!(x_head.len(), b * t * d);
+    debug_assert_eq!(g_head.len(), b * t * vocab);
+    debug_assert_eq!(sq.len(), b);
+    par::par_rows(sq, b, 1, threads, |i0, chunk| {
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            let i = i0 + k;
+            let mut acc = 0.0f32;
+            for t1 in 0..t {
+                let tok = tokens[i * t + t1] as usize;
+                debug_assert!(tok < vocab);
+                let ge = &g_emb[(i * t + t1) * d..(i * t + t1) * d + d];
+                for t2 in 0..t {
+                    let gh = g_head[(i * t + t2) * vocab + tok];
+                    if gh != 0.0 {
+                        acc += gh * dot(ge, &x_head[(i * t + t2) * d..(i * t + t2) * d + d]);
+                    }
+                }
+            }
+            *slot += 2.0 * acc;
+        }
+    });
+}
+
 /// Causal multi-head attention forward from the fused QKV activations.
 ///
 /// `qkv` is `(rows, 3d)` laid out `[q | k | v]` per row; `heads` splits
@@ -1225,6 +1278,53 @@ mod tests {
         for k in 0..vocab * p {
             let want: f64 = (0..b).map(|i| c[i] as f64 * naive[i * vocab * p + k]).sum();
             assert!((summed[k] as f64 - want).abs() < 1e-4, "slot {k}: {} vs {}", summed[k], want);
+        }
+    }
+
+    #[test]
+    fn tied_cross_term_matches_materialized_reference() {
+        let mut rng = Xoshiro256::new(14);
+        let (b, t, vocab, d) = (4usize, 5usize, 6usize, 3usize);
+        // narrow token band: the head column lookup must hit repeats
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.next_below(4) as i32).collect();
+        let g_emb = randv(&mut rng, b * t * d);
+        let x_head = randv(&mut rng, b * t * d);
+        let g_head = randv(&mut rng, b * t * vocab);
+
+        // materialize G_emb_i and G_head_i in f64, take the inner product
+        let mut want = vec![0f64; b];
+        for i in 0..b {
+            let mut ge = vec![0f64; vocab * d];
+            let mut gh = vec![0f64; vocab * d];
+            for tt in 0..t {
+                let r = i * t + tt;
+                let tok = tokens[r] as usize;
+                for j in 0..d {
+                    ge[tok * d + j] += g_emb[r * d + j] as f64;
+                }
+                for v in 0..vocab {
+                    for j in 0..d {
+                        gh[v * d + j] += g_head[r * vocab + v] as f64 * x_head[r * d + j] as f64;
+                    }
+                }
+            }
+            want[i] = 2.0 * ge.iter().zip(&gh).map(|(a, b)| a * b).sum::<f64>();
+        }
+
+        let mut sq = vec![0f32; b];
+        tied_cross_sq_norms(&tokens, &g_emb, &x_head, &g_head, b, t, d, vocab, &mut sq, 2);
+        for i in 0..b {
+            assert!(
+                (sq[i] as f64 - want[i]).abs() < 1e-3 * want[i].abs().max(1e-3),
+                "sample {i}: {} vs {}",
+                sq[i],
+                want[i]
+            );
+        }
+        // accumulation contract: a second call adds the same amount
+        tied_cross_sq_norms(&tokens, &g_emb, &x_head, &g_head, b, t, d, vocab, &mut sq, 2);
+        for i in 0..b {
+            assert!((sq[i] as f64 - 2.0 * want[i]).abs() < 2e-3 * want[i].abs().max(1e-3));
         }
     }
 

@@ -110,4 +110,32 @@ impl DpLayer for Embedding {
     ) {
         kernels::embedding_weighted_grad(x.tokens(), g_out, c, ctx.b, ctx.t, self.dim, &mut grads[0]);
     }
+
+    /// Tied-head cross term (the table is shared with a transposed
+    /// `TiedLinear` vocab head): `sq[i] += 2 <G_emb_i, G_head_i>`,
+    /// contracted in O(T^2 d) without materializing either `(vocab, d)`
+    /// gradient — the third Gram next to the token-equality mask and
+    /// the head's activation/gradient Grams.
+    fn accum_tied_cross_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_own: &[f32],
+        alias_x: &[f32],
+        alias_g: &[f32],
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        kernels::tied_cross_sq_norms(
+            x.tokens(),
+            g_own,
+            alias_x,
+            alias_g,
+            ctx.b,
+            ctx.t,
+            self.dim,
+            self.vocab,
+            sq,
+            ctx.threads,
+        );
+    }
 }

@@ -11,6 +11,13 @@
 //! so Embedding, LayerNorm, and causal self-[`Attention`] (including
 //! transformer residual skips, see [`StackRun::residuals`]) run
 //! natively next to Linear + ReLU without touching the scheduler.
+//! Shared tensors (the GPT-2 `lm_head = wte^T` tie, [`TiedLinear`]) are
+//! expressed through canonical-tensor slot indirection
+//! ([`StackRun::slots`]) plus a norm-walk cross term
+//! ([`StackRun::alias_of`]): aliasing layers accumulate their clipped
+//! sums into the owner's gradient, and the owner adds
+//! `2<G_own, G_alias>` so the clip factors see the true
+//! `||G_own + G_alias||^2` sensitivity of the shared tensor.
 //!
 //! ## The `DpLayer` contract
 //!
@@ -40,12 +47,14 @@ pub mod embedding;
 pub mod layernorm;
 pub mod linear;
 pub mod relu;
+pub mod tied_linear;
 
 pub use attention::Attention;
 pub use embedding::Embedding;
 pub use layernorm::LayerNorm;
 pub use linear::Linear;
 pub use relu::Relu;
+pub use tied_linear::TiedLinear;
 
 use super::arena::Arena;
 use super::kernels;
@@ -274,6 +283,28 @@ pub trait DpLayer: Send + Sync {
         let _ = (store, g_out, c, grads, ctx);
         unreachable!("{}: stored per-sample gradients unsupported", self.name());
     }
+
+    /// Shared-parameter norm cross term, called on the **owner** of a
+    /// canonical tensor when another layer aliases it (`StackRun::
+    /// alias_of`): accumulate `2 <G_own_i, G_alias_i>` per sample into
+    /// `sq`, on top of the two layers' individual squared norms —
+    /// together they form `||G_own_i + G_alias_i||^2`, the true
+    /// sensitivity of the shared tensor. `alias_x` / `alias_g` are the
+    /// aliasing layer's input activations and output gradient (the tape
+    /// stashes `alias_g` while walking down). Only owners of aliased
+    /// tensors implement this (Embedding, for the tied vocab head).
+    fn accum_tied_cross_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_own: &[f32],
+        alias_x: &[f32],
+        alias_g: &[f32],
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let _ = (x, g_own, alias_x, alias_g, sq, ctx);
+        unreachable!("{}: layer does not own an aliased tensor", self.name());
+    }
 }
 
 /// Build the executable layer stack from a spec's canonical plan.
@@ -292,6 +323,16 @@ pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
                 out.push(Box::new(Embedding::new(l.name, vocab, dim)));
             }
             PlanOp::Linear { d, p } => out.push(Box::new(Linear::new(l.name, d, p))),
+            PlanOp::TiedLinear { d, p } => {
+                if k == 0 {
+                    bail!(
+                        "tied head '{}' of model '{}' cannot be the first layer",
+                        l.name,
+                        spec.name
+                    );
+                }
+                out.push(Box::new(TiedLinear::new(l.name, d, p)));
+            }
             PlanOp::Relu { width } => out.push(Box::new(Relu::new(l.name, width))),
             PlanOp::LayerNorm { width } => out.push(Box::new(LayerNorm::new(l.name, width))),
             PlanOp::Attention { d, heads } => {
@@ -333,10 +374,21 @@ pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
 pub struct StackRun<'a> {
     /// The layer stack, front to head.
     pub layers: &'a [Box<dyn DpLayer>],
-    /// Flattened trainable tensors, in stack order.
+    /// Canonical trainable tensors (each stored exactly once, even when
+    /// several layers view it).
     pub params: &'a [Vec<f32>],
-    /// Param-tensor offset per layer (`len = layers.len() + 1`).
-    pub offsets: &'a [usize],
+    /// Canonical-tensor slot range per layer: layer `k` reads/writes
+    /// `params[slots[k].0..slots[k].1]` (and the matching `grads`
+    /// range). Owners get their own range; an aliasing layer (the tied
+    /// vocab head) points back at the owner's tensor, so clipped sums
+    /// from every aliasing layer accumulate into the one canonical
+    /// gradient.
+    pub slots: &'a [(usize, usize)],
+    /// Shared-parameter links: `alias_of[k] = Some(j)` means layer `k`
+    /// views tensors owned by the earlier layer `j`. The norm walk
+    /// stashes `k`'s output gradient and has `j` add the ghost cross
+    /// term `2 <G_j, G_k>` to the group's per-sample squared norms.
+    pub alias_of: &'a [Option<usize>],
     /// Norm route per layer (meaningful for trainable layers).
     pub routes: &'a [NormRoute],
     /// Clipping-group id per layer (meaningful for trainable layers).
@@ -353,7 +405,7 @@ pub struct StackRun<'a> {
 
 impl StackRun<'_> {
     fn params_of(&self, k: usize) -> &[Vec<f32>] {
-        &self.params[self.offsets[k]..self.offsets[k + 1]]
+        &self.params[self.slots[k].0..self.slots[k].1]
     }
 
     fn input_of<'b>(&self, k: usize, acts: &'b [Vec<f32>], input: LayerIn<'b>) -> LayerIn<'b> {
@@ -389,10 +441,10 @@ impl StackRun<'_> {
                 a0.copy_from_slice(x);
                 acts.push(a0);
             }
-            // token input: a capacity-0 placeholder, NOT an arena buffer
-            // (arena.take(0) would steal the smallest pooled buffer and
-            // cascade later takes onto mismatched capacities). The
-            // backend's give-back loop skips capacity-0 vecs.
+            // token input: a capacity-0 placeholder. `Arena::take(0)`
+            // now returns exactly this non-pooled empty vec (it used to
+            // steal the smallest pooled buffer — see the arena tests),
+            // and the backend's give-back loop skips capacity-0 vecs.
             LayerIn::Tokens(_) => acts.push(Vec::new()),
         }
         for k in 0..nl {
@@ -462,6 +514,12 @@ impl StackRun<'_> {
     /// grads for reuse. With `keep_g` the book-kept output gradients of
     /// every trainable layer are returned (the BK one-pass cache);
     /// otherwise they are recycled as the walk descends.
+    ///
+    /// Shared tensors: when layer `k` aliases layer `j` (`alias_of`),
+    /// the walk stashes a copy of `k`'s output gradient on the way down
+    /// and, right after `j`'s own norm contribution, has `j` accumulate
+    /// the ghost cross term `2 <G_j_i, G_k_i>` into the same group row —
+    /// completing `||G_j_i + G_k_i||^2` for the canonical tensor.
     pub fn norm_pass(
         &self,
         arena: &mut Arena,
@@ -481,16 +539,27 @@ impl StackRun<'_> {
         let c_out = self.layers[nl - 1].out_width();
         let mut kept: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
         let mut pending: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
+        // stashed (alias layer index, its output gradient) per owner,
+        // consumed when the walk reaches the owner
+        let mut cross: Vec<Option<(usize, Vec<f32>)>> = (0..nl).map(|_| None).collect();
         let mut g = arena.take(rows * c_out);
         let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
         for k in (0..nl).rev() {
             let layer = &self.layers[k];
             let xin = self.input_of(k, acts, input);
             self.stash_residual(arena, &mut pending, k, &g);
+            if let Some(owner) = self.alias_of[k] {
+                debug_assert!(owner < k, "alias must point at an earlier layer");
+                let mut copy = arena.take(g.len());
+                copy.copy_from_slice(&g);
+                cross[owner] = Some((k, copy));
+            }
             if layer.n_param_tensors() > 0 {
-                let grow = &mut sq[self.groups[k] * b..(self.groups[k] + 1) * b];
+                let gr = self.groups[k] * b..(self.groups[k] + 1) * b;
                 match psg[k].as_mut() {
-                    Some(store) => layer.psg_norms_stored(xin, &g, store, scratch, grow, ctx),
+                    Some(store) => {
+                        layer.psg_norms_stored(xin, &g, store, scratch, &mut sq[gr.clone()], ctx)
+                    }
                     None => layer.accum_sq_norms(
                         xin,
                         &g,
@@ -498,9 +567,16 @@ impl StackRun<'_> {
                         self.params_of(k),
                         &caches[k],
                         scratch,
-                        grow,
+                        &mut sq[gr.clone()],
                         ctx,
                     ),
+                }
+                if let Some((ak, ag)) = cross[k].take() {
+                    // the aliasing layer shares this layer's clip group
+                    // (enforced at backend build), so the cross term
+                    // lands in the same accumulator row
+                    layer.accum_tied_cross_sq_norms(xin, &g, &acts[ak], &ag, &mut sq[gr], ctx);
+                    arena.give(ag);
                 }
             }
             if k > 0 {
@@ -532,6 +608,9 @@ impl StackRun<'_> {
         for p in pending.into_iter().flatten() {
             arena.give(p);
         }
+        for (_, ag) in cross.into_iter().flatten() {
+            arena.give(ag);
+        }
         (loss, kept)
     }
 
@@ -559,7 +638,9 @@ impl StackRun<'_> {
             let g = kept[k].as_ref().expect("book-kept output gradient");
             let xin = self.input_of(k, acts, input);
             let c = &cfac[self.groups[k] * b..(self.groups[k] + 1) * b];
-            let gk = &mut grads[self.offsets[k]..self.offsets[k + 1]];
+            // aliasing layers resolve to the owner's grad tensor, so the
+            // shared tensor's clipped sum accumulates both contributions
+            let gk = &mut grads[self.slots[k].0..self.slots[k].1];
             match psg[k].as_ref() {
                 Some(store) => layer.psg_weighted_sum(store, g, c, gk, ctx),
                 None => layer.clipped_grads(
@@ -604,7 +685,7 @@ impl StackRun<'_> {
             self.stash_residual(arena, &mut pending, k, &g);
             if layer.n_param_tensors() > 0 {
                 let c = cfac.map(|cf| &cf[self.groups[k] * b..(self.groups[k] + 1) * b]);
-                let gk = &mut grads[self.offsets[k]..self.offsets[k + 1]];
+                let gk = &mut grads[self.slots[k].0..self.slots[k].1];
                 layer.clipped_grads(xin, &g, c, self.params_of(k), &caches[k], scratch, gk, ctx);
             }
             if k > 0 {

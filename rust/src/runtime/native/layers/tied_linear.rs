@@ -1,0 +1,193 @@
+//! Vocab head tied to the embedding table: `out = x · W^T` where `W` is
+//! the **owning embedding's** `(vocab, d)` tensor (the GPT-2
+//! `lm_head = wte^T` convention), no bias.
+//!
+//! The layer holds no tensor of its own — its single param slot is a
+//! canonical-tensor alias resolved by the backend's parameter-slot
+//! indirection (see `NativeBackend::with_style`), so `params[0]` here
+//! *is* the embedding table. Both norm routes work off the same
+//! generalized-linear structure as [`super::Linear`], with the roles of
+//! `a`/`g` swapped in the weighted sum so the clipped gradient lands in
+//! the canonical `(vocab, d)` orientation — accumulated (`+=`) into the
+//! very tensor-slot the embedding's scatter-add fills, which is exactly
+//! how the combined `G_emb + G_head` gradient of a shared tensor is
+//! assembled. The `2<G_emb, G_head>` norm cross term is the *owner's*
+//! job ([`super::DpLayer::accum_tied_cross_sq_norms`] on `Embedding`),
+//! driven by the tape.
+//!
+//! The stored-psg route is deliberately unsupported (`psg_len() == 0`):
+//! `psg_instantiate` materializes `a^T g` in `(d, vocab)` order, the
+//! transpose of the canonical tensor, so reusing it for the weighted
+//! sum would need a transposing kernel for a path the mixed dispatch
+//! essentially never picks for a `d x vocab` head.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+
+/// `out[r, v] = x[r, :] · table[v, :]` over a `(vocab, d)` alias tensor.
+pub struct TiedLinear {
+    name: String,
+    d: usize,
+    vocab: usize,
+}
+
+impl TiedLinear {
+    /// Build a `d -> vocab` head viewing a `(vocab, d)` canonical tensor.
+    pub fn new(name: String, d: usize, vocab: usize) -> Self {
+        Self { name, d, vocab }
+    }
+}
+
+impl DpLayer for TiedLinear {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.d
+    }
+
+    fn out_width(&self) -> usize {
+        self.vocab
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        1
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        // the canonical (owner's) shape, not the transposed view
+        vec![vec![self.vocab, self.d]]
+    }
+
+    fn dims(&self, t: usize) -> Option<LayerDims> {
+        Some(LayerDims {
+            kind: LayerKind::TiedLinear,
+            name: self.name.clone(),
+            t: t as u64,
+            d: self.d as u64,
+            p: self.vocab as u64,
+        })
+    }
+
+    // init: intentionally the default no-op — the owning embedding
+    // initializes the shared tensor.
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        _cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        // out[r, v] = x[r, :] · W[v, :] — exactly the backward_data
+        // contraction with (d, p) read as (vocab, d_in)
+        kernels::backward_data(
+            x.feat(),
+            &params[0],
+            out,
+            ctx.rows(),
+            self.vocab,
+            self.d,
+            ctx.threads,
+        );
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        // dL/dx = g · W, a plain forward matmul through (vocab, d)
+        kernels::linear_forward(
+            g_out,
+            &params[0],
+            None,
+            g_in,
+            ctx.rows(),
+            self.vocab,
+            self.d,
+            ctx.threads,
+        );
+    }
+
+    fn accum_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        route: NormRoute,
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        // ||G_head_i||^2 = sum_{t,s} (x_t·x_s)(g_t·g_s): the transpose
+        // shares its Frobenius norm, so both routes are verbatim Linear
+        let (b, t) = (ctx.b, ctx.t);
+        match route {
+            NormRoute::Ghost => kernels::ghost_norm(
+                x.feat(),
+                g_out,
+                b,
+                t,
+                self.d,
+                self.vocab,
+                scratch.gram_a,
+                scratch.gram_g,
+                sq,
+                ctx.threads,
+            ),
+            NormRoute::Inst => kernels::psg_norms_streaming(
+                x.feat(),
+                g_out,
+                b,
+                t,
+                self.d,
+                self.vocab,
+                scratch.stream,
+                sq,
+                ctx.threads,
+            ),
+        }
+    }
+
+    fn clipped_grads(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        // grads[0] is the canonical (vocab, d) tensor's accumulator:
+        // out[v, j] += sum_i c_i sum_t g_i[t, v] x_i[t, j] — weighted_grad
+        // with the a/g roles swapped lands the transposed-view gradient
+        // in canonical orientation directly.
+        kernels::weighted_grad(
+            g_out,
+            x.feat(),
+            c,
+            ctx.b,
+            ctx.t,
+            self.vocab,
+            self.d,
+            scratch.partials,
+            &mut grads[0],
+            ctx.threads,
+        );
+    }
+}

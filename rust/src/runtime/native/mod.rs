@@ -62,8 +62,14 @@ pub struct NativeBackend {
     style: ClippingStyle,
     /// The executable layer stack (from the spec's canonical plan).
     stack: Vec<Box<dyn DpLayer>>,
-    /// Param-tensor offset per stack layer (`len = stack.len() + 1`).
-    offsets: Vec<usize>,
+    /// Canonical-tensor slot range per stack layer: layer `k` views
+    /// `params[slots[k].0..slots[k].1]`. Owners mint fresh consecutive
+    /// slots; an aliasing layer (tied head) points at the owner's.
+    slots: Vec<(usize, usize)>,
+    /// Shared-parameter links: `alias_of[k] = Some(j)` means layer `k`
+    /// views tensors owned by earlier layer `j` (the tied vocab head
+    /// viewing the embedding table).
+    alias_of: Vec<Option<usize>>,
     /// Norm route per stack layer (meaningful for trainable layers).
     routes: Vec<NormRoute>,
     /// Stack layers whose per-sample grads are materialized and reused.
@@ -151,6 +157,12 @@ impl NativeBackend {
             if spec.ff == 0 {
                 bail!("transformer model '{}' needs ff > 0", spec.name);
             }
+        } else if spec.tied {
+            bail!(
+                "model '{}': tied = true requires a transformer plan (blocks > 0) — \
+                 only the GPT-style vocab head can alias the embedding table",
+                spec.name
+            );
         }
         let stack = layers::build_stack(&spec)?;
         let residuals: Vec<Option<usize>> = spec.plan().iter().map(|l| l.residual).collect();
@@ -192,23 +204,112 @@ impl NativeBackend {
             })
             .collect();
 
-        // clipping groups over trainable layers, in stack order
-        let n_param_layers = stack.iter().filter(|l| l.n_param_tensors() > 0).count();
+        // ---- canonical parameter-slot indirection ---------------------
+        // Tensors are identified by plan name; a repeated name aliases
+        // the earlier (owning) tensor, so two layers view one canonical
+        // slot — the tied vocab head viewing the embedding table. Each
+        // layer's view must be one contiguous canonical range.
+        let plan = spec.plan();
+        let mut canon_names: Vec<String> = Vec::new();
+        let mut canon_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut owner_layer: Vec<usize> = Vec::new();
+        let mut slots: Vec<(usize, usize)> = Vec::with_capacity(stack.len());
+        let mut alias_of: Vec<Option<usize>> = vec![None; stack.len()];
+        for (k, l) in plan.iter().enumerate() {
+            let shapes = l.param_shapes();
+            if l.param_names.is_empty() {
+                let n = canon_names.len();
+                slots.push((n, n));
+                continue;
+            }
+            let ids: Vec<Option<usize>> = l
+                .param_names
+                .iter()
+                .map(|n| canon_names.iter().position(|c| c == n))
+                .collect();
+            if ids.iter().all(Option::is_none) {
+                // owner: mint fresh consecutive canonical slots
+                let start = canon_names.len();
+                for (name, shape) in l.param_names.iter().zip(&shapes) {
+                    canon_names.push(name.clone());
+                    canon_shapes.push(shape.clone());
+                    owner_layer.push(k);
+                }
+                slots.push((start, canon_names.len()));
+            } else if ids.iter().all(Option::is_some) {
+                // alias: every tensor must resolve to an existing slot,
+                // contiguously, all owned by one earlier layer, with the
+                // canonical shapes
+                let ids: Vec<usize> = ids.into_iter().flatten().collect();
+                let start = ids[0];
+                if !ids.iter().enumerate().all(|(i, &id)| id == start + i) {
+                    bail!(
+                        "layer '{}' of model '{}' aliases a non-contiguous tensor range",
+                        l.name,
+                        spec.name
+                    );
+                }
+                let own = owner_layer[start];
+                if !ids.iter().all(|&id| owner_layer[id] == own) {
+                    bail!(
+                        "layer '{}' of model '{}' aliases tensors of several layers",
+                        l.name,
+                        spec.name
+                    );
+                }
+                for (&id, shape) in ids.iter().zip(&shapes) {
+                    if &canon_shapes[id] != shape {
+                        bail!(
+                            "layer '{}' of model '{}' aliases '{}' with shape {:?}, owner has {:?}",
+                            l.name,
+                            spec.name,
+                            canon_names[id],
+                            shape,
+                            canon_shapes[id]
+                        );
+                    }
+                }
+                if alias_of.iter().any(|a| *a == Some(own)) {
+                    bail!(
+                        "model '{}': tensor of layer {own} is aliased more than once \
+                         (the norm walk stashes one cross-term gradient per owner)",
+                        spec.name
+                    );
+                }
+                alias_of[k] = Some(own);
+                slots.push((start, start + ids.len()));
+            } else {
+                bail!(
+                    "layer '{}' of model '{}' mixes owned and aliased tensors",
+                    l.name,
+                    spec.name
+                );
+            }
+        }
+
+        // clipping groups over *owner* trainable layers, in stack order;
+        // aliasing layers inherit the owner's group — tied tensors must
+        // land in one group or the per-group R/sqrt(G) sensitivity
+        // argument breaks (splitting ||G_emb + G_head|| across groups
+        // would double-charge the shared tensor).
+        let n_param_layers = stack
+            .iter()
+            .enumerate()
+            .filter(|(k, l)| l.n_param_tensors() > 0 && alias_of[*k].is_none())
+            .count();
         let n_groups = style.n_groups(n_param_layers);
         let mut groups = vec![0usize; stack.len()];
         let mut pl = 0usize;
         for (k, l) in stack.iter().enumerate() {
-            if l.n_param_tensors() > 0 {
+            if l.n_param_tensors() > 0 && alias_of[k].is_none() {
                 groups[k] = style.group_of(pl, n_param_layers);
                 pl += 1;
             }
         }
-
-        // param-tensor offsets per stack layer
-        let mut offsets = Vec::with_capacity(stack.len() + 1);
-        offsets.push(0usize);
-        for l in &stack {
-            offsets.push(offsets.last().unwrap() + l.n_param_tensors());
+        for k in 0..stack.len() {
+            if let Some(j) = alias_of[k] {
+                groups[k] = groups[j];
+            }
         }
 
         // shared scratch sizing
@@ -271,7 +372,7 @@ impl NativeBackend {
         } else {
             (Vec::new(), Vec::new())
         };
-        debug_assert_eq!(params.len(), *offsets.last().unwrap());
+        debug_assert_eq!(params.len(), canon_names.len());
         Ok(Self {
             spec,
             info,
@@ -279,7 +380,8 @@ impl NativeBackend {
             clip_kind,
             style,
             stack,
-            offsets,
+            slots,
+            alias_of,
             routes,
             store_psg,
             groups,
@@ -435,7 +537,8 @@ impl NativeBackend {
         let run = StackRun {
             layers: &self.stack,
             params: &self.params,
-            offsets: &self.offsets,
+            slots: &self.slots,
+            alias_of: &self.alias_of,
             routes: &self.routes,
             groups: &self.groups,
             residuals: &self.residuals,
@@ -651,10 +754,16 @@ impl NativeBackend {
     /// (the differential test harness maps oracle gradients to groups
     /// with this).
     pub fn tensor_groups(&self) -> Vec<usize> {
-        let mut out = Vec::with_capacity(self.params.len());
+        // canonical tensors only: an aliasing layer shares its owner's
+        // slots (and, by construction, its clipping group)
+        let mut out = vec![0usize; self.params.len()];
         for (k, l) in self.stack.iter().enumerate() {
-            for _ in 0..l.n_param_tensors() {
-                out.push(self.groups[k]);
+            if l.n_param_tensors() == 0 || self.alias_of[k].is_some() {
+                continue;
+            }
+            let (s, e) = self.slots[k];
+            for slot in out.iter_mut().take(e).skip(s) {
+                *slot = self.groups[k];
             }
         }
         out
@@ -683,7 +792,8 @@ impl NativeBackend {
         let run = StackRun {
             layers: &self.stack,
             params: &self.params,
-            offsets: &self.offsets,
+            slots: &self.slots,
+            alias_of: &self.alias_of,
             routes: &self.routes,
             groups: &self.groups,
             residuals: &self.residuals,
@@ -781,11 +891,14 @@ impl Backend for NativeBackend {
                 continue;
             }
             // one forked stream per trainable layer, in stack order
-            // (identical to the legacy per-linear-layer forks for MLPs)
+            // (identical to the legacy per-linear-layer forks for MLPs;
+            // aliasing layers draw a fork too but their init is a no-op
+            // — the owner initializes the shared tensor)
             let rng = root.fork(pl + 1);
             pl += 1;
-            let off = self.offsets[k];
-            layer.init(rng, &mut self.params[off..off + np], k == head_k);
+            let (s, e) = self.slots[k];
+            debug_assert_eq!(e - s, np);
+            layer.init(rng, &mut self.params[s..e], k == head_k);
         }
         for t in self.opt_m.iter_mut().chain(self.opt_v.iter_mut()) {
             for v in t.iter_mut() {
@@ -805,7 +918,8 @@ impl Backend for NativeBackend {
         let run = StackRun {
             layers: &self.stack,
             params: &self.params,
-            offsets: &self.offsets,
+            slots: &self.slots,
+            alias_of: &self.alias_of,
             routes: &self.routes,
             groups: &self.groups,
             residuals: &self.residuals,
@@ -957,6 +1071,13 @@ mod tests {
         }
     }
 
+    fn tiny_tied_gpt_spec() -> NativeSpec {
+        NativeSpec {
+            tied: true,
+            ..tiny_gpt_spec()
+        }
+    }
+
     fn batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
         let rows = spec.batch * spec.seq;
         let mut rng = Xoshiro256::new(seed);
@@ -997,7 +1118,7 @@ mod tests {
 
     #[test]
     fn arena_reaches_steady_state() {
-        for spec in [tiny_spec(), tiny_tok_spec(), tiny_gpt_spec()] {
+        for spec in [tiny_spec(), tiny_tok_spec(), tiny_gpt_spec(), tiny_tied_gpt_spec()] {
             for strat in [
                 Strategy::NonDp,
                 Strategy::Opacus,
@@ -1111,6 +1232,137 @@ mod tests {
         let mut s = tiny_gpt_spec();
         s.ff = 0;
         assert!(NativeBackend::new(s, Strategy::Bk, 1).is_err());
+        // tying is a transformer-head property: no blocks, no tie
+        let mut s = tiny_tok_spec();
+        s.tied = true;
+        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        assert!(err.contains("tied"), "{err}");
+    }
+
+    #[test]
+    fn every_registry_model_builds_with_consistent_census() {
+        for spec in NativeSpec::registry() {
+            let be = NativeBackend::new(spec.clone(), Strategy::Bk, 1).unwrap();
+            assert_eq!(be.info().n_params, spec.n_params(), "{}", spec.name);
+            assert_eq!(
+                be.tensor_groups().len(),
+                be.info().param_names.len(),
+                "{}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn tied_gpt_shares_one_canonical_tensor() {
+        let spec = tiny_tied_gpt_spec();
+        let be = NativeBackend::with_style(
+            spec.clone(),
+            Strategy::Bk,
+            ClippingStyle::LayerWise,
+            2,
+        )
+        .unwrap();
+        let untied = NativeBackend::with_style(
+            tiny_gpt_spec(),
+            Strategy::Bk,
+            ClippingStyle::LayerWise,
+            2,
+        )
+        .unwrap();
+        // one tensor fewer than untied (head_w + head_b collapse into
+        // emb_w), and the state census follows the canonical tensors
+        assert_eq!(
+            be.info().param_names.len() + 2,
+            untied.info().param_names.len()
+        );
+        assert_eq!(be.info().n_params, spec.n_params());
+        assert_eq!(be.tensor_groups().len(), be.info().param_names.len());
+        // layer-wise groups count *owner* layers only: the tied head
+        // inherits the embedding's group instead of minting its own
+        assert_eq!(be.n_clip_groups() + 1, untied.n_clip_groups());
+        // the shared tensor's group id equals the embedding's (group 0)
+        assert_eq!(be.tensor_groups()[0], 0);
+    }
+
+    #[test]
+    fn tied_gpt_trains_and_norms_include_cross_term() {
+        let spec = tiny_tied_gpt_spec();
+        let (x, y) = batch_for(&spec, 23);
+        let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+        be.init(5).unwrap();
+        let sq = be.per_sample_sq_norms(&x, &y).unwrap();
+        assert_eq!(sq.len(), spec.batch);
+        assert!(sq.iter().all(|v| v.is_finite() && *v >= 0.0));
+        // the cross term is live: zeroing it (an untied backend run on
+        // the same tied parameter values would omit it) must change the
+        // norms — here we just check training works end-to-end
+        let l0 = be.eval_loss(&x, &y).unwrap();
+        let mut h = hyper();
+        h.lr = 0.2;
+        for _ in 0..40 {
+            be.step(&x, &y, &[], &h).unwrap();
+        }
+        let l1 = be.eval_loss(&x, &y).unwrap();
+        assert!(l1 < l0, "tied gpt loss should fall on a fixed batch: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn tied_norms_differ_from_an_untied_twin() {
+        // Run the tied backend against an untied twin that *loads the
+        // tied parameters* (head_w := emb_w^T, head_b := 0). Both
+        // compute the identical forward, but the tied norms carry the
+        // `2<G_emb, G_head>` cross term (and no head-bias term), so the
+        // per-sample norms must differ — proving the shared-tensor
+        // sensitivity is not just the sum of the two layers' norms.
+        // (The exact decomposition identity is pinned by the FD golden
+        // in tests/tied_golden.rs and the differential harness oracle.)
+        let tied_spec = tiny_tied_gpt_spec();
+        let (x, y) = batch_for(&tied_spec, 29);
+        let mut tb = NativeBackend::new(tied_spec.clone(), Strategy::Bk, 2).unwrap();
+        tb.init(7).unwrap();
+        let tied_params = tb.state().unwrap();
+
+        // untied twin with head_w = emb_w^T, head_b = 0
+        let untied_spec = tiny_gpt_spec();
+        let mut ub = NativeBackend::new(untied_spec.clone(), Strategy::Bk, 2).unwrap();
+        let names = untied_spec.info().param_names;
+        let emb_w = tied_params[0].clone();
+        let (vocab, d) = (untied_spec.vocab, untied_spec.d_in);
+        let mut head_w = vec![0.0f32; d * vocab];
+        for v in 0..vocab {
+            for j in 0..d {
+                head_w[j * vocab + v] = emb_w[v * d + j];
+            }
+        }
+        let mut untied_params = Vec::new();
+        let mut it = tied_params.iter();
+        for name in &names {
+            match name.as_str() {
+                "head_w" => untied_params.push(head_w.clone()),
+                "head_b" => untied_params.push(vec![0.0f32; vocab]),
+                _ => untied_params.push(it.next().unwrap().clone()),
+            }
+        }
+        ub.load_state(untied_params).unwrap();
+
+        let sq_tied = tb.per_sample_sq_norms(&x, &y).unwrap();
+        let sq_untied = ub.per_sample_sq_norms(&x, &y).unwrap();
+        // same forward function => same losses
+        let lt = tb.eval_loss(&x, &y).unwrap();
+        let lu = ub.eval_loss(&x, &y).unwrap();
+        assert!((lt - lu).abs() < 1e-5, "tied and tied-by-hand forwards differ: {lt} vs {lu}");
+        // the tied norm differs from the untied sum by exactly the
+        // cross term; it must be non-trivial for at least one sample
+        let mut any_cross = false;
+        for i in 0..tied_spec.batch {
+            let diff = sq_tied[i] - sq_untied[i];
+            assert!(diff.is_finite());
+            if diff.abs() > 1e-4 * sq_tied[i].abs().max(1e-3) {
+                any_cross = true;
+            }
+        }
+        assert!(any_cross, "cross term never fired: {sq_tied:?} vs {sq_untied:?}");
     }
 
     #[test]
@@ -1169,8 +1421,9 @@ mod tests {
 
     #[test]
     fn group_wise_one_group_is_all_layer_bitwise() {
-        // group-wise:1 must be exactly flat clipping (R_1 = R).
-        for spec in [tiny_spec(), tiny_tok_spec(), tiny_gpt_spec()] {
+        // group-wise:1 must be exactly flat clipping (R_1 = R) — with
+        // tying too: the shared tensor's combined norm feeds one factor.
+        for spec in [tiny_spec(), tiny_tok_spec(), tiny_gpt_spec(), tiny_tied_gpt_spec()] {
             let (x, y) = batch_for(&spec, 21);
             let run = |style: ClippingStyle| -> Vec<Vec<f32>> {
                 let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();

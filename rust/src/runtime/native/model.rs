@@ -54,6 +54,17 @@ pub enum PlanOp {
         /// Attention head count.
         heads: usize,
     },
+    /// Vocab head tied to the embedding table: `out = x · W^T` with `W`
+    /// the front embedding's `(p, d)` tensor (GPT-2 `lm_head = wte^T`),
+    /// no bias. Declared by repeating the owner's tensor name in
+    /// `param_names` — the backend resolves the alias to one canonical
+    /// tensor slot.
+    TiedLinear {
+        /// Input feature width (the embedding dimension).
+        d: usize,
+        /// Output width = vocabulary size.
+        p: usize,
+    },
 }
 
 /// One planned layer: the op plus its display / parameter names.
@@ -78,10 +89,13 @@ impl PlannedLayer {
             PlanOp::Linear { p, .. } => p,
             PlanOp::Relu { width } | PlanOp::LayerNorm { width } => width,
             PlanOp::Attention { d, .. } => d,
+            PlanOp::TiedLinear { p, .. } => p,
         }
     }
 
     /// Shapes of the trainable tensors, matching `param_names` order.
+    /// For an aliasing layer (`TiedLinear`) this is the **canonical**
+    /// (owner's) shape, so name-keyed shape maps stay consistent.
     pub fn param_shapes(&self) -> Vec<Vec<usize>> {
         match self.op {
             PlanOp::Embedding { vocab, dim } => vec![vec![vocab, dim]],
@@ -91,6 +105,7 @@ impl PlannedLayer {
             PlanOp::Attention { d, .. } => {
                 vec![vec![d, 3 * d], vec![3 * d], vec![d, d], vec![d]]
             }
+            PlanOp::TiedLinear { d, p } => vec![vec![p, d]],
         }
     }
 
@@ -105,6 +120,7 @@ impl PlannedLayer {
             PlanOp::Relu { .. } => return None,
             PlanOp::LayerNorm { width } => (LayerKind::Norm, width, width),
             PlanOp::Attention { d, heads } => (LayerKind::Attention, d, heads),
+            PlanOp::TiedLinear { d, p } => (LayerKind::TiedLinear, d, p),
         };
         Some(LayerDims {
             kind,
@@ -151,6 +167,12 @@ pub struct NativeSpec {
     pub attn_heads: usize,
     /// Feed-forward width of the block MLP.
     pub ff: usize,
+    /// Tie the vocab head to the embedding table (`lm_head = wte^T`,
+    /// the GPT-2 convention). Transformer plans only (`blocks > 0`):
+    /// the head becomes a bias-free [`PlanOp::TiedLinear`] viewing the
+    /// `(vocab, d_in)` embedding tensor, the shared tensor is counted
+    /// once, and its per-sample norm includes the ghost cross term.
+    pub tied: bool,
 }
 
 impl Default for NativeSpec {
@@ -169,6 +191,7 @@ impl Default for NativeSpec {
             blocks: 0,
             attn_heads: 0,
             ff: 0,
+            tied: false,
         }
     }
 }
@@ -314,15 +337,29 @@ impl NativeSpec {
             param_names: vec!["lnf_g".into(), "lnf_b".into()],
             residual: None,
         });
-        out.push(PlannedLayer {
-            name: "head".into(),
-            op: PlanOp::Linear {
-                d,
-                p: self.n_classes,
-            },
-            param_names: vec!["head_w".into(), "head_b".into()],
-            residual: None,
-        });
+        if self.tied {
+            // the head aliases the embedding tensor: same param name,
+            // canonical (vocab, d) shape, no bias
+            out.push(PlannedLayer {
+                name: "head".into(),
+                op: PlanOp::TiedLinear {
+                    d,
+                    p: self.n_classes,
+                },
+                param_names: vec!["emb_w".into()],
+                residual: None,
+            });
+        } else {
+            out.push(PlannedLayer {
+                name: "head".into(),
+                op: PlanOp::Linear {
+                    d,
+                    p: self.n_classes,
+                },
+                param_names: vec!["head_w".into(), "head_b".into()],
+                residual: None,
+            });
+        }
         out
     }
 
@@ -343,13 +380,21 @@ impl NativeSpec {
         self.layer_widths().len()
     }
 
-    /// Total trainable parameter count, over every layer kind.
+    /// Total trainable parameter count, over every layer kind. Keyed on
+    /// **canonical** tensors: a name repeated by an aliasing layer (the
+    /// tied vocab head) is counted once.
     pub fn n_params(&self) -> usize {
-        self.plan()
-            .iter()
-            .flat_map(|l| l.param_shapes())
-            .map(|s| s.iter().product::<usize>())
-            .sum()
+        let mut seen: Vec<String> = Vec::new();
+        let mut total = 0usize;
+        for l in self.plan() {
+            for (name, shape) in l.param_names.iter().zip(l.param_shapes()) {
+                if !seen.iter().any(|s| s == name) {
+                    seen.push(name.clone());
+                    total += shape.iter().product::<usize>();
+                }
+            }
+        }
+        total
     }
 
     /// Trainable-layer dims in the complexity engine's (T, d, p)
@@ -362,12 +407,57 @@ impl NativeSpec {
             .collect()
     }
 
+    /// The complexity-side census of this spec: an [`crate::arch::Arch`]
+    /// mirroring the plan layer by layer, with the same conventions
+    /// `arch::language` uses for the real model zoo (notably the GPT-2
+    /// tied head: a `TiedLinear` carries the head's compute but zero new
+    /// parameters). `arch().total_params()` must equal
+    /// [`NativeSpec::n_params`] for every registry model — untied heads
+    /// are counted honestly on both sides, tied heads once —
+    /// which `fastdp complexity` and the registry tests enforce.
+    pub fn arch(&self) -> crate::arch::Arch {
+        let t = self.seq as u64;
+        let mut a = crate::arch::Arch::new(&self.name);
+        for l in self.plan() {
+            match l.op {
+                PlanOp::Embedding { vocab, dim } => {
+                    a.embedding(&l.name, t, vocab as u64, dim as u64);
+                }
+                PlanOp::Linear { d, p } => {
+                    a.linear(&l.name, t, d as u64, p as u64, true);
+                }
+                PlanOp::Relu { .. } => {}
+                PlanOp::LayerNorm { width } => {
+                    a.norm(&l.name, t, width as u64);
+                }
+                PlanOp::Attention { d, heads } => {
+                    a.attention(&l.name, t, d as u64, heads as u64);
+                }
+                PlanOp::TiedLinear { d, p } => {
+                    a.tied_linear(&l.name, t, d as u64, p as u64);
+                }
+            }
+        }
+        a
+    }
+
     /// Backend-neutral description (params in stack order: w0, b0, ...).
+    /// Canonical tensors only: an aliased name (tied head) appears once,
+    /// at its owner's position — state, noise, and checkpoints all key
+    /// off this census.
     pub fn info(&self) -> ModelInfo {
-        let mut param_names = Vec::new();
+        let mut param_names: Vec<String> = Vec::new();
         let mut param_shapes = BTreeMap::new();
         for layer in self.plan() {
             for (name, shape) in layer.param_names.iter().zip(layer.param_shapes()) {
+                if param_names.iter().any(|n| n == name) {
+                    debug_assert_eq!(
+                        param_shapes.get(name),
+                        Some(&shape),
+                        "alias '{name}' must view the owner's shape"
+                    );
+                    continue;
+                }
                 param_shapes.insert(name.clone(), shape);
                 param_names.push(name.clone());
             }
@@ -534,6 +624,45 @@ impl NativeSpec {
                 ff: 128,
                 ..NativeSpec::default()
             },
+            // Weight-tied gpt_nano (lm_head = wte^T, the real GPT-2
+            // convention): the head is a TiedLinear view of the
+            // embedding, the shared tensor is clipped as one unit with
+            // the ghost cross term, and the model has vocab*d fewer
+            // parameters than its untied sibling.
+            NativeSpec {
+                name: "gpt_nano_tied_e2e".into(),
+                batch: 8,
+                seq: 16,
+                d_in: 32,
+                hidden: Vec::new(),
+                n_classes: 64,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 64,
+                blocks: 2,
+                attn_heads: 4,
+                ff: 64,
+                tied: true,
+                ..NativeSpec::default()
+            },
+            // Tied bench workload: same dims as gpt_nano_bench, tied
+            // head — benches the cross-term kernel next to the Grams.
+            NativeSpec {
+                name: "gpt_nano_tied_bench".into(),
+                batch: 16,
+                seq: 32,
+                d_in: 64,
+                hidden: Vec::new(),
+                n_classes: 128,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 128,
+                blocks: 2,
+                attn_heads: 4,
+                ff: 128,
+                tied: true,
+                ..NativeSpec::default()
+            },
         ]
     }
 
@@ -557,10 +686,18 @@ mod tests {
     fn registry_specs_are_consistent() {
         for spec in NativeSpec::registry() {
             let info = spec.info();
-            // every view agrees with the canonical plan
+            // every view agrees with the canonical plan; repeated names
+            // (tied aliases) collapse to one canonical tensor
             let plan = spec.plan();
-            let planned_tensors: usize = plan.iter().map(|l| l.param_names.len()).sum();
-            assert_eq!(info.param_names.len(), planned_tensors, "{}", spec.name);
+            let mut canonical: Vec<&String> = Vec::new();
+            for l in &plan {
+                for n in &l.param_names {
+                    if !canonical.contains(&n) {
+                        canonical.push(n);
+                    }
+                }
+            }
+            assert_eq!(info.param_names.len(), canonical.len(), "{}", spec.name);
             let total: usize = info
                 .param_names
                 .iter()
@@ -574,11 +711,50 @@ mod tests {
                 assert_eq!(spec.vocab, spec.n_classes, "{}: token models are next-token", spec.name);
                 assert!(matches!(plan[0].op, PlanOp::Embedding { .. }));
             }
-            // param names are unique
+            // a repeated name is only legal on an aliasing (tied) layer
+            for l in &plan {
+                if !matches!(l.op, PlanOp::TiedLinear { .. }) {
+                    continue;
+                }
+                for n in &l.param_names {
+                    assert!(
+                        plan.iter()
+                            .take_while(|o| !std::ptr::eq(*o, l))
+                            .any(|o| o.param_names.contains(n)),
+                        "{}: tied layer '{}' must alias an earlier tensor",
+                        spec.name,
+                        l.name
+                    );
+                }
+            }
+            // param names are unique per canonical tensor
             let mut names = info.param_names.clone();
             names.sort();
             names.dedup();
             assert_eq!(names.len(), info.param_names.len(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn registry_param_census_matches_arch() {
+        // The bug this pins: `arch/language.rs` counts the GPT-2 tied
+        // head once while the native registry used to build an untied
+        // head and count it — so `fastdp complexity` and the native tape
+        // disagreed on parameter totals. Both sides now key on canonical
+        // tensors: the arch census must equal the spec census for every
+        // registry model (untied heads counted honestly on both sides,
+        // tied heads once).
+        for spec in NativeSpec::registry() {
+            let arch_total = spec.arch().total_params() as usize;
+            assert_eq!(
+                arch_total,
+                spec.n_params(),
+                "{}: arch census {} != spec n_params {}",
+                spec.name,
+                arch_total,
+                spec.n_params()
+            );
+            assert_eq!(spec.info().n_params, spec.n_params(), "{}", spec.name);
         }
     }
 
@@ -659,6 +835,8 @@ mod tests {
         assert!(registry_names().contains(&"seq_tok_e2e".to_string()));
         assert!(registry_names().contains(&"gpt_nano_e2e".to_string()));
         assert!(registry_names().contains(&"gpt_nano_bench".to_string()));
+        assert!(registry_names().contains(&"gpt_nano_tied_e2e".to_string()));
+        assert!(registry_names().contains(&"gpt_nano_tied_bench".to_string()));
     }
 
     #[test]
@@ -693,6 +871,33 @@ mod tests {
         let attn = 32 * 96 + 96 + 32 * 32 + 32;
         let block = 2 * 32 + attn + 2 * 32 + (32 * 64 + 64) + (64 * 32 + 32);
         assert_eq!(s.n_params(), 64 * 32 + 2 * block + 2 * 32 + (32 * 64 + 64));
+    }
+
+    #[test]
+    fn tied_plan_aliases_the_embedding() {
+        let tied = NativeSpec::by_name("gpt_nano_tied_e2e").unwrap();
+        let untied = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        let plan = tied.plan();
+        // same stack shape; only the head op differs
+        assert_eq!(plan.len(), untied.plan().len());
+        let head = plan.last().unwrap();
+        assert!(matches!(head.op, PlanOp::TiedLinear { d: 32, p: 64 }));
+        assert_eq!(head.param_names, vec!["emb_w".to_string()]);
+        // canonical shape (vocab, d) — the owner's orientation
+        assert_eq!(head.param_shapes(), vec![vec![64, 32]]);
+        // tied model is exactly head_w + head_b lighter
+        assert_eq!(untied.n_params() - tied.n_params(), 32 * 64 + 64);
+        // info lists emb_w once, and no head_w/head_b
+        let info = tied.info();
+        assert_eq!(info.param_names.iter().filter(|n| *n == "emb_w").count(), 1);
+        assert!(!info.param_names.iter().any(|n| n == "head_w" || n == "head_b"));
+        assert_eq!(info.n_params, tied.n_params());
+        // the head is a TiedLinear in the complexity dims with the
+        // in/out convention (d = model width, p = vocab)
+        let arch = tied.arch_layers();
+        let head_dims = arch.last().unwrap();
+        assert_eq!(head_dims.kind, LayerKind::TiedLinear);
+        assert_eq!((head_dims.d, head_dims.p), (32, 64));
     }
 
     #[test]

@@ -171,6 +171,40 @@ fn gpt_nano_trains_natively_with_epsilon_accounting() {
 }
 
 #[test]
+fn tied_gpt_nano_trains_natively_end_to_end() {
+    // The weight-tied acceptance path: `fastdp train --model
+    // gpt_nano_tied_e2e --backend native` — the vocab head is a shared
+    // view of the embedding table, clipped as one unit (own ghost norms
+    // + the O(T^2 d) cross term), with the epsilon ledger intact.
+    let mut cfg = base_cfg("gpt_nano_tied_e2e", "bk", 20);
+    cfg.lr = 1e-2; // Adam
+    cfg.log_every = 5;
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    assert_eq!(r.backend, "native");
+    assert_eq!(r.steps, 20);
+    assert!(
+        r.final_loss.is_finite() && r.final_loss < r.initial_loss,
+        "tied gpt_nano loss should fall: {} -> {}",
+        r.initial_loss,
+        r.final_loss
+    );
+    assert!(r.final_epsilon > 0.0 && r.final_epsilon.is_finite());
+    // layer-wise: groups follow canonical tensors, so the tied model
+    // has one group fewer than untied gpt_nano_e2e (12, not 13)
+    let mut cfg = base_cfg("gpt_nano_tied_e2e", "bk", 5);
+    cfg.lr = 1e-2;
+    cfg.clipping_style = "layer-wise".into();
+    cfg.log_every = 5;
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.final_loss.is_finite());
+    let log = r.logs.last().expect("logged step");
+    assert_eq!(log.group_clip.len(), 12, "tied head shares the embedding's group");
+    assert!(log.group_clip.iter().all(|c| c.is_finite() && *c > 0.0));
+}
+
+#[test]
 fn clipping_style_works_through_accumulation() {
     let mut cfg = base_cfg("mlp_e2e", "bk", 4);
     cfg.clipping_style = "layer-wise".into();

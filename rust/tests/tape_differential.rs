@@ -2,7 +2,8 @@
 //!
 //! Generates randomized layer stacks — depth, widths, layer kinds
 //! (plain MLP, token models with Embedding/LayerNorm, GPT-style
-//! transformer blocks with causal attention), sequence length T,
+//! transformer blocks with causal attention, half of them with the
+//! vocab head weight-tied to the embedding), sequence length T,
 //! clipping style, and strategy all drawn from a seeded RNG — and
 //! asserts that the tape's per-sample squared gradient norms
 //! ([`NativeBackend::per_sample_sq_norms`], the ghost-norm /
@@ -58,7 +59,10 @@ fn random_case(rng: &mut Xoshiro256, idx: usize) -> Case {
     let batch = below(rng, 2, 4);
     let spec = match idx % 3 {
         2 => {
-            // GPT-style: 1-2 blocks of causal attention + MLP
+            // GPT-style: 1-2 blocks of causal attention + MLP; every
+            // other transformer ties the vocab head to the embedding
+            // (lm_head = wte^T) so the shared-tensor norm — own Grams
+            // plus the ghost cross term — is swept against the oracle
             let heads = below(rng, 1, 2);
             let d = heads * below(rng, 2, 4);
             let vocab = below(rng, 5, 12);
@@ -75,6 +79,7 @@ fn random_case(rng: &mut Xoshiro256, idx: usize) -> Case {
                 blocks: below(rng, 1, 2),
                 attn_heads: heads,
                 ff: below(rng, 3, 8),
+                tied: (idx / 3) % 2 == 0,
                 ..NativeSpec::default()
             }
         }
@@ -233,6 +238,12 @@ fn shrink_candidates(c: &Case) -> Vec<Case> {
         s.seq /= 2;
         push(s, c.strategy, c.style);
     }
+    if c.spec.tied {
+        // untie first: isolates cross-term / slot-indirection failures
+        let mut s = c.spec.clone();
+        s.tied = false;
+        push(s, c.strategy, c.style);
+    }
     if c.spec.blocks > 1 {
         let mut s = c.spec.clone();
         s.blocks -= 1;
@@ -244,6 +255,7 @@ fn shrink_candidates(c: &Case) -> Vec<Case> {
         s.attn_heads = 0;
         s.ff = 0;
         s.hidden = vec![4];
+        s.tied = false;
         push(s, c.strategy, c.style);
     }
     if c.spec.attn_heads > 1 {
@@ -323,7 +335,9 @@ fn run_stacks(n: usize) {
         eprintln!(
             "stack {idx:>3} ok in {:>8.2?}  ({} B={} T={} blocks={} {:?} {})",
             t0.elapsed(),
-            if case.spec.blocks > 0 {
+            if case.spec.tied {
+                "gpt-tied"
+            } else if case.spec.blocks > 0 {
                 "gpt"
             } else if case.spec.vocab > 0 {
                 "tok"
