@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Oracle for the fused BK g-cache peak + generator for ci/bench_baseline.json.
+
+Replicates, independently of the Rust code, the walk simulation in
+`complexity::bk_gcache_floats` (fused group-wise schedule) and the
+legacy hold-everything sum (`bk_gcache_floats_unfused`), evaluates both
+on the registry models the bench-regression CI job pins, and writes the
+committed baseline the `fastdp bench-check` subcommand compares against.
+
+The measured gauge in `StackRun::fused_pass` counts the same quantity
+(frontier gradient + book-kept per-layer output gradients, tied-alias
+cache included; residual skip copies excluded), so for the pinned models
+measured == predicted exactly and the baseline pins the measured values.
+
+Run from the repo root:  python3 python/tools/gen_gcache_baseline.py
+"""
+
+import json
+import sys
+
+# (kind, t, d, p) per trainable layer, plan order. Kinds: L=linear,
+# N=layernorm, E=embedding, A=attention, T=tied head.
+def gpt_layers(t, d, vocab, ff, blocks, tied):
+    out = [("E", t, vocab, d)]
+    for _ in range(blocks):
+        out += [
+            ("N", t, d, d),
+            ("A", t, d, 4),
+            ("N", t, d, d),
+            ("L", t, d, ff),
+            ("L", t, ff, d),
+        ]
+    out.append(("N", t, d, d))
+    out.append(("T" if tied else "L", t, d, vocab))
+    return out
+
+
+MODELS = {
+    "mlp_ln": (
+        32,
+        [("L", 1, 64, 128), ("N", 1, 128, 128), ("L", 1, 128, 128), ("N", 1, 128, 128), ("L", 1, 128, 10)],
+    ),
+    "seq_tok_e2e": (
+        16,
+        [("E", 16, 64, 32), ("N", 16, 32, 32), ("L", 16, 32, 64), ("N", 16, 64, 64), ("L", 16, 64, 64)],
+    ),
+    "gpt_nano_e2e": (8, gpt_layers(16, 32, 64, 64, 2, False)),
+    "gpt_nano_tied_e2e": (8, gpt_layers(16, 32, 64, 64, 2, True)),
+    # bench workloads (README table only, not in the CI baseline)
+    "gpt_nano_bench": (16, gpt_layers(32, 64, 128, 128, 2, False)),
+    "gpt_nano_tied_bench": (16, gpt_layers(32, 64, 128, 128, 2, True)),
+}
+
+
+def out_width(l):
+    kind, _, d, p = l
+    return d if kind == "A" else p
+
+
+def in_width(l):
+    kind, _, d, _ = l
+    return 0 if kind == "E" else d
+
+
+def n_groups(style, n):
+    if style == "all-layer":
+        return 1
+    if style == "layer-wise":
+        return max(n, 1)
+    k = int(style.split(":")[1])
+    return max(1, min(k, max(n, 1)))
+
+
+def group_of(style, i, n):
+    return i * n_groups(style, n) // n
+
+
+def assign_groups(style, layers):
+    owners = [i for i, l in enumerate(layers) if l[0] != "T"]
+    groups = [0] * len(layers)
+    for oi, i in enumerate(owners):
+        groups[i] = group_of(style, oi, len(owners))
+    emb = next((i for i, l in enumerate(layers) if l[0] == "E"), None)
+    for i, l in enumerate(layers):
+        if l[0] == "T":
+            groups[i] = groups[emb] if emb is not None else 0
+    return groups, len(owners)
+
+
+def fused_peak(style, b, layers):
+    n = len(layers)
+    groups, n_own = assign_groups(style, layers)
+    fin = {}
+    for gi in range(n_groups(style, n_own)):
+        fin[gi] = min(i for i in range(n) if groups[i] == gi)
+    kept = [0.0] * n_groups(style, n_own)
+    kept_total = 0.0
+    last = layers[-1]
+    peak = b * last[1] * out_width(last)
+    for i in reversed(range(n)):
+        l = layers[i]
+        cache = b * l[1] * out_width(l)
+        kept[groups[i]] += cache
+        kept_total += cache
+        frontier = b * l[1] * in_width(l) if i > 0 else 0.0
+        peak = max(peak, kept_total + frontier)
+        if fin[groups[i]] == i:
+            kept_total -= kept[groups[i]]
+            kept[groups[i]] = 0.0
+    return peak
+
+
+def unfused_peak(b, layers):
+    return sum(b * l[1] * out_width(l) for l in layers)
+
+
+STYLES = ["all-layer", "layer-wise", "group-wise:2"]
+BASELINE_MODELS = ["mlp_ln", "seq_tok_e2e", "gpt_nano_e2e", "gpt_nano_tied_e2e"]
+
+
+def main():
+    rows = []
+    print(f"{'model':22} {'style':14} {'fused':>10} {'legacy':>10} {'saved':>7}")
+    for name, (b, layers) in MODELS.items():
+        legacy = unfused_peak(b, layers)
+        for style in STYLES:
+            fused = fused_peak(style, b, layers)
+            print(
+                f"{name:22} {style:14} {fused:10.0f} {legacy:10.0f} "
+                f"{100.0 * (1.0 - fused / legacy):6.1f}%"
+            )
+            if name in BASELINE_MODELS:
+                rows.append(
+                    {
+                        "model": name,
+                        "strategy": "bk",
+                        "style": style,
+                        "batch": b,
+                        "seq_len": layers[0][1],
+                        "heads": 4 if any(l[0] == "A" for l in layers) else 0,
+                        "tied": any(l[0] == "T" for l in layers),
+                        "threads": 0,
+                        # times are deliberately unpinned (0.0): CI machines
+                        # vary; bench-check skips the time band for 0 rows
+                        "mean_step_secs": 0.0,
+                        "min_step_secs": 0.0,
+                        "samples_per_sec": 0.0,
+                        "peak_rss": 0.0,
+                        "steady_allocs": 0,
+                        "peak_gcache_floats_measured": int(fused),
+                        "peak_gcache_floats_predicted": fused,
+                        "peak_gcache_floats_unfused": legacy,
+                        "arena_peak_floats": 0,
+                    }
+                )
+    baseline = {
+        "note": (
+            "bench-regression baseline: floats-held values are exact pins "
+            "(generated by python/tools/gen_gcache_baseline.py); "
+            "mean_step_secs 0.0 = time band unpinned for this row"
+        ),
+        "results": rows,
+    }
+    out = "ci/bench_baseline.json"
+    with open(out, "w") as f:
+        json.dump(baseline, f, indent=2)
+        f.write("\n")
+    print(f"\nwrote {out} ({len(rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,7 @@ use crate::error::Result;
 use crate::json::Value;
 use crate::runtime::native::{model::NativeSpec, par, NativeBackend};
 use crate::runtime::{Backend, BatchX, StepHyper};
-use crate::util::stats::{fmt_bytes, fmt_duration, peak_rss_bytes, Summary};
+use crate::util::stats::{fmt_bytes, fmt_count, fmt_duration, peak_rss_bytes, Summary};
 use crate::util::table::Table;
 use crate::{anyhow, bail};
 use std::time::Instant;
@@ -49,6 +49,18 @@ pub struct BenchResult {
     pub peak_rss: u64,
     /// Arena pool misses in the last warm step (0 = flat memory).
     pub steady_allocs: usize,
+    /// Measured peak g-cache floats of the fused BK walk (frontier +
+    /// live book-kept output gradients); 0 for two-pass / nondp rows.
+    pub peak_gcache_floats_measured: usize,
+    /// `complexity::bk_gcache_floats` prediction for the same
+    /// (model, style) — the fused-schedule walk simulation. Must match
+    /// the measured value (the bench-regression CI gate enforces it).
+    pub peak_gcache_floats_predicted: f64,
+    /// Legacy hold-everything peak (`bk_gcache_floats_unfused`) — the
+    /// baseline the fused saving is reported against.
+    pub peak_gcache_floats_unfused: f64,
+    /// Arena high-water mark (floats checked out) of the last step.
+    pub arena_peak_floats: usize,
 }
 
 impl BenchResult {
@@ -66,7 +78,20 @@ impl BenchResult {
             .set("min_step_secs", Value::from(self.min_step_secs))
             .set("samples_per_sec", Value::from(self.samples_per_sec))
             .set("peak_rss", Value::from(self.peak_rss as f64))
-            .set("steady_allocs", Value::from(self.steady_allocs));
+            .set("steady_allocs", Value::from(self.steady_allocs))
+            .set(
+                "peak_gcache_floats_measured",
+                Value::from(self.peak_gcache_floats_measured),
+            )
+            .set(
+                "peak_gcache_floats_predicted",
+                Value::from(self.peak_gcache_floats_predicted),
+            )
+            .set(
+                "peak_gcache_floats_unfused",
+                Value::from(self.peak_gcache_floats_unfused),
+            )
+            .set("arena_peak_floats", Value::from(self.arena_peak_floats));
         v
     }
 
@@ -87,6 +112,11 @@ impl BenchResult {
             samples_per_sec: v.req_f64("samples_per_sec").map_err(|e| anyhow!(e))?,
             peak_rss: v.req_f64("peak_rss").map_err(|e| anyhow!(e))? as u64,
             steady_allocs: v.opt_i64("steady_allocs", 0) as usize,
+            // pre-fusion JSON (no peak fields) defaults to 0 = unmeasured
+            peak_gcache_floats_measured: v.opt_i64("peak_gcache_floats_measured", 0) as usize,
+            peak_gcache_floats_predicted: v.opt_f64("peak_gcache_floats_predicted", 0.0),
+            peak_gcache_floats_unfused: v.opt_f64("peak_gcache_floats_unfused", 0.0),
+            arena_peak_floats: v.opt_i64("arena_peak_floats", 0) as usize,
         })
     }
 }
@@ -149,7 +179,20 @@ pub fn measure_native(
     }
     // Read after the timed loop: even with warmup == 1 (the cold step),
     // the last timed iteration ran against a saturated arena pool.
-    let steady_allocs = be.alloc_stats().fresh_allocs_last_step;
+    let stats = be.alloc_stats();
+    let steady_allocs = stats.fresh_allocs_last_step;
+    // g-cache accounting: measured by the fused walk's gauge, predicted
+    // by the complexity engine's walk simulation over the same layers —
+    // only the one-pass DP strategies book-keep output gradients
+    let (predicted, unfused) = if strat != Strategy::NonDp && strat.backprops() == 1 {
+        let layers = spec.arch_layers();
+        (
+            crate::complexity::bk_gcache_floats(cstyle, spec.batch as f64, &layers),
+            crate::complexity::bk_gcache_floats_unfused(spec.batch as f64, &layers),
+        )
+    } else {
+        (0.0, 0.0)
+    };
     Ok(BenchResult {
         model: model.to_string(),
         strategy: strategy.to_string(),
@@ -164,6 +207,10 @@ pub fn measure_native(
         samples_per_sec: spec.batch as f64 / s.mean(),
         peak_rss: peak_rss_bytes(),
         steady_allocs,
+        peak_gcache_floats_measured: stats.peak_gcache_floats,
+        peak_gcache_floats_predicted: predicted,
+        peak_gcache_floats_unfused: unfused,
+        arena_peak_floats: stats.arena_peak_floats,
     })
 }
 
@@ -297,7 +344,16 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
 
     let mut t = Table::new(
         &format!("native kernel bench: {model} (warmup={warmup}, iters={iters})"),
-        &["strategy", "style", "mean/step", "min/step", "samples/s", "peak RSS", "steady allocs"],
+        &[
+            "strategy",
+            "style",
+            "mean/step",
+            "min/step",
+            "samples/s",
+            "peak RSS",
+            "g-cache peak",
+            "steady allocs",
+        ],
     );
     for r in &results {
         t.row(&[
@@ -307,6 +363,11 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
             fmt_duration(r.min_step_secs),
             format!("{:.0}", r.samples_per_sec),
             fmt_bytes(r.peak_rss as f64),
+            if r.peak_gcache_floats_measured > 0 {
+                fmt_count(r.peak_gcache_floats_measured as f64)
+            } else {
+                "-".to_string()
+            },
             r.steady_allocs.to_string(),
         ]);
     }
@@ -360,6 +421,226 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
         }
     }
     0
+}
+
+// ---- bench-regression gate (`fastdp bench-check`) ------------------------
+
+/// One baseline-vs-current comparison verdict.
+#[derive(Clone, Debug)]
+pub struct CheckRow {
+    pub key: String,
+    /// Human-readable failure reasons; empty = the row passed.
+    pub failures: Vec<String>,
+    pub fused: usize,
+    pub unfused: f64,
+    pub time_secs: f64,
+    pub baseline_time_secs: f64,
+}
+
+/// Compare current bench rows against a committed baseline.
+///
+/// Contract (the CI `bench-regression` job enforces it per PR):
+/// * every baseline (model, strategy, style) row must be present;
+/// * `steady_allocs` must be 0 (flat memory once warm);
+/// * `peak_gcache_floats_measured` must equal the baseline **exactly**
+///   — floats held are deterministic, so any drift is a real schedule
+///   regression;
+/// * measured must agree with the row's own complexity prediction to
+///   within 1% (they are exact in practice; the band absorbs f64
+///   rounding of the prediction);
+/// * `mean_step_secs` must stay within `(1 + time_tolerance) *`
+///   baseline when the baseline pins a time (> 0; the committed
+///   baseline leaves times at 0 = unpinned, because CI machines vary —
+///   the band exists for locally regenerated baselines);
+/// * symmetrically, a current one-pass DP row absent from the baseline
+///   fails — growing the CI matrix requires regenerating the baseline
+///   so the new rows are actually pinned.
+pub fn check_against_baseline(
+    current: &[BenchResult],
+    baseline: &[BenchResult],
+    time_tolerance: f64,
+) -> Vec<CheckRow> {
+    let mut out = Vec::new();
+    for base in baseline {
+        let key = format!("{}/{}/{}", base.model, base.strategy, base.style);
+        let cur = current.iter().find(|r| {
+            r.model == base.model && r.strategy == base.strategy && r.style == base.style
+        });
+        let mut failures = Vec::new();
+        let Some(cur) = cur else {
+            out.push(CheckRow {
+                key,
+                failures: vec!["row missing from the current bench output".into()],
+                fused: 0,
+                unfused: base.peak_gcache_floats_unfused,
+                time_secs: 0.0,
+                baseline_time_secs: base.mean_step_secs,
+            });
+            continue;
+        };
+        if cur.steady_allocs != 0 {
+            failures.push(format!(
+                "steady-state allocations regressed: {} per step (expected 0)",
+                cur.steady_allocs
+            ));
+        }
+        if cur.peak_gcache_floats_measured != base.peak_gcache_floats_measured {
+            failures.push(format!(
+                "peak g-cache floats changed: measured {} vs baseline {} (exact pin)",
+                cur.peak_gcache_floats_measured, base.peak_gcache_floats_measured
+            ));
+        }
+        let predicted = cur.peak_gcache_floats_predicted;
+        if predicted > 0.0 {
+            let diff = (cur.peak_gcache_floats_measured as f64 - predicted).abs();
+            if diff > 0.01 * predicted {
+                failures.push(format!(
+                    "measured g-cache peak {} is >1% off its own prediction {:.0}",
+                    cur.peak_gcache_floats_measured, predicted
+                ));
+            }
+        }
+        if base.mean_step_secs > 0.0
+            && cur.mean_step_secs > base.mean_step_secs * (1.0 + time_tolerance)
+        {
+            failures.push(format!(
+                "step time regressed: {:.2}ms vs baseline {:.2}ms (+{:.0}% band)",
+                cur.mean_step_secs * 1e3,
+                base.mean_step_secs * 1e3,
+                time_tolerance * 100.0
+            ));
+        }
+        out.push(CheckRow {
+            key,
+            failures,
+            fused: cur.peak_gcache_floats_measured,
+            unfused: cur.peak_gcache_floats_unfused,
+            time_secs: cur.mean_step_secs,
+            baseline_time_secs: base.mean_step_secs,
+        });
+    }
+    // Symmetric guard: a current row with no baseline counterpart means
+    // the CI matrix grew without regenerating the baseline — that row's
+    // floats-held pin would otherwise never be checked, so it fails too
+    // (DP one-pass rows only; nondp/two-pass rows carry no g-cache pin).
+    for cur in current {
+        let known = baseline.iter().any(|b| {
+            b.model == cur.model && b.strategy == cur.strategy && b.style == cur.style
+        });
+        if !known && cur.peak_gcache_floats_measured > 0 {
+            out.push(CheckRow {
+                key: format!("{}/{}/{}", cur.model, cur.strategy, cur.style),
+                failures: vec![
+                    "row not pinned in the baseline — regenerate it \
+                     (python3 python/tools/gen_gcache_baseline.py)"
+                        .into(),
+                ],
+                fused: cur.peak_gcache_floats_measured,
+                unfused: cur.peak_gcache_floats_unfused,
+                time_secs: cur.mean_step_secs,
+                baseline_time_secs: 0.0,
+            });
+        }
+    }
+    out
+}
+
+/// Render the comparison as a markdown savings table (goes to the CI
+/// step summary, so the memory win is visible per PR).
+pub fn check_summary_markdown(rows: &[CheckRow]) -> String {
+    let mut s = String::from(
+        "### bench regression gate: fused g-cache peaks vs baseline\n\n\
+         | model/strategy/style | fused peak (floats) | legacy (unfused) | saved | mean/step | status |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let saved = if r.unfused > 0.0 {
+            format!("{:.1}%", 100.0 * (1.0 - r.fused as f64 / r.unfused))
+        } else {
+            "-".to_string()
+        };
+        s.push_str(&format!(
+            "| {} | {} | {:.0} | {} | {} | {} |\n",
+            r.key,
+            r.fused,
+            r.unfused,
+            saved,
+            if r.time_secs > 0.0 {
+                fmt_duration(r.time_secs)
+            } else {
+                "-".to_string()
+            },
+            if r.failures.is_empty() {
+                "ok".to_string()
+            } else {
+                format!("FAIL: {}", r.failures.join("; "))
+            },
+        ));
+    }
+    s
+}
+
+fn load_results(path: &str) -> Result<Vec<BenchResult>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read bench JSON '{path}': {e}"))?;
+    let v = crate::json::parse(&text).map_err(|e| anyhow!("bad JSON in '{path}': {e}"))?;
+    let rows = v.req_arr("results").map_err(|e| anyhow!("{path}: {e}"))?;
+    rows.iter().map(BenchResult::from_json).collect()
+}
+
+/// The `fastdp bench-check` subcommand: compare current bench JSON
+/// (comma-separated list of files, results concatenated) against the
+/// committed baseline; exit non-zero on any regression.
+pub fn run_bench_check(args: &crate::cli::Args) -> i32 {
+    let current_paths = args.get_or("current", "BENCH_native_kernels.json").to_string();
+    let baseline_path = args.get_or("baseline", "ci/bench_baseline.json").to_string();
+    let tol = args.get_f64("time-tolerance", 1.0);
+    let mut current: Vec<BenchResult> = Vec::new();
+    for path in current_paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        match load_results(path) {
+            Ok(mut rows) => current.append(&mut rows),
+            Err(e) => {
+                eprintln!("bench-check: {e}");
+                return 2;
+            }
+        }
+    }
+    let baseline = match load_results(&baseline_path) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("bench-check: {e}");
+            return 2;
+        }
+    };
+    if baseline.is_empty() {
+        eprintln!("bench-check: baseline '{baseline_path}' has no rows");
+        return 2;
+    }
+    let rows = check_against_baseline(&current, &baseline, tol);
+    let md = check_summary_markdown(&rows);
+    match args.get("summary") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &md) {
+                eprintln!("bench-check: cannot write summary '{path}': {e}");
+                return 2;
+            }
+            print!("{md}");
+        }
+        None => print!("{md}"),
+    }
+    let failed: Vec<&CheckRow> = rows.iter().filter(|r| !r.failures.is_empty()).collect();
+    if failed.is_empty() {
+        println!(
+            "\nbench-check: {} row(s) ok against {baseline_path}",
+            rows.len()
+        );
+        0
+    } else {
+        for r in &failed {
+            eprintln!("bench-check FAIL {}: {}", r.key, r.failures.join("; "));
+        }
+        1
+    }
 }
 
 /// Convert manifest layer metadata to complexity-engine layer dims.
@@ -531,6 +812,11 @@ pub fn measure_step(
         samples_per_sec: b as f64 / s.mean(),
         peak_rss: peak_rss_bytes(),
         steady_allocs: 0,
+        // the PJRT runtime has no arena / fused-walk gauge
+        peak_gcache_floats_measured: 0,
+        peak_gcache_floats_predicted: 0.0,
+        peak_gcache_floats_unfused: 0.0,
+        arena_peak_floats: 0,
     })
 }
 
@@ -569,9 +855,8 @@ pub fn maybe_run_child() {
 mod tests {
     use super::*;
 
-    #[test]
-    fn bench_result_json_roundtrip() {
-        let r = BenchResult {
+    fn sample_result() -> BenchResult {
+        BenchResult {
             model: "m".into(),
             strategy: "bk".into(),
             style: "layer-wise".into(),
@@ -585,7 +870,16 @@ mod tests {
             samples_per_sec: 32.0,
             peak_rss: 1024,
             steady_allocs: 0,
-        };
+            peak_gcache_floats_measured: 4096,
+            peak_gcache_floats_predicted: 4096.0,
+            peak_gcache_floats_unfused: 8192.0,
+            arena_peak_floats: 50_000,
+        }
+    }
+
+    #[test]
+    fn bench_result_json_roundtrip() {
+        let r = sample_result();
         let v = r.to_json();
         let r2 = BenchResult::from_json(&crate::json::parse(&v.to_string()).unwrap()).unwrap();
         assert_eq!(r2.model, "m");
@@ -597,6 +891,10 @@ mod tests {
         assert_eq!(r2.threads, 4);
         assert!((r2.samples_per_sec - 32.0).abs() < 1e-12);
         assert_eq!(r2.steady_allocs, 0);
+        assert_eq!(r2.peak_gcache_floats_measured, 4096);
+        assert_eq!(r2.peak_gcache_floats_predicted, 4096.0);
+        assert_eq!(r2.peak_gcache_floats_unfused, 8192.0);
+        assert_eq!(r2.arena_peak_floats, 50_000);
         // pre-style/pre-attention/pre-tying JSON defaults: all-layer,
         // T = 1, no heads, untied
         let legacy = crate::json::parse(
@@ -609,6 +907,9 @@ mod tests {
         assert_eq!(lr.seq_len, 1);
         assert_eq!(lr.heads, 0);
         assert!(!lr.tied, "legacy rows default to untied");
+        assert_eq!(lr.peak_gcache_floats_measured, 0, "pre-fusion rows parse as unmeasured");
+        assert_eq!(lr.peak_gcache_floats_unfused, 0.0);
+        assert_eq!(lr.arena_peak_floats, 0);
         // a row with seq/heads but no tied field (PR 3 era) is untied too
         let pr3 = crate::json::parse(
             r#"{"model":"m","strategy":"bk","batch":4,"seq_len":16,"heads":4,
@@ -669,6 +970,116 @@ mod tests {
         // untied sibling reports untied
         let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 1, 2).unwrap();
         assert!(!r.tied);
+    }
+
+    #[test]
+    fn measure_native_reports_gcache_peaks() {
+        // One-pass DP rows carry the fused g-cache gauge, and the
+        // measured value equals the complexity-engine prediction (walk
+        // simulation) exactly; nondp rows are unmeasured by definition.
+        let r = measure_native("mlp_ln", "bk", "group-wise:2", 2, 2, 2).unwrap();
+        assert!(r.peak_gcache_floats_measured > 0);
+        assert_eq!(r.peak_gcache_floats_measured as f64, r.peak_gcache_floats_predicted);
+        assert!(r.peak_gcache_floats_unfused > r.peak_gcache_floats_predicted);
+        assert!(r.arena_peak_floats >= r.peak_gcache_floats_measured);
+        let nd = measure_native("mlp_ln", "nondp", "all-layer", 1, 1, 2).unwrap();
+        assert_eq!(nd.peak_gcache_floats_measured, 0);
+        assert_eq!(nd.peak_gcache_floats_predicted, 0.0);
+    }
+
+    #[test]
+    fn bench_check_passes_and_fails_correctly() {
+        let base = sample_result();
+        let mut cur = base.clone();
+        // clean pass
+        let rows = check_against_baseline(
+            std::slice::from_ref(&cur),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].failures.is_empty(), "{:?}", rows[0].failures);
+        let md = check_summary_markdown(&rows);
+        assert!(md.contains("m/bk/layer-wise"), "{md}");
+        assert!(md.contains("50.0%"), "savings column: {md}");
+        assert!(md.contains("| ok |"), "{md}");
+
+        // injected floats-held regression: exact pin must fail
+        let mut perturbed = base.clone();
+        perturbed.peak_gcache_floats_measured += 1;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&cur),
+            std::slice::from_ref(&perturbed),
+            0.5,
+        );
+        assert_eq!(rows[0].failures.len(), 1, "{:?}", rows[0].failures);
+        assert!(rows[0].failures[0].contains("peak g-cache floats changed"));
+        assert!(check_summary_markdown(&rows).contains("FAIL"));
+
+        // measured drifting >1% off its own prediction fails
+        let mut drifted = base.clone();
+        drifted.peak_gcache_floats_measured = 5000;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&drifted),
+            std::slice::from_ref(&drifted),
+            0.5,
+        );
+        assert!(rows[0].failures.iter().any(|f| f.contains("off its own prediction")));
+
+        // time regression beyond the band fails only when the baseline
+        // pins a time; unpinned (0.0) baselines skip the band
+        cur.mean_step_secs = base.mean_step_secs * 2.0;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&cur),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        assert!(rows[0].failures.iter().any(|f| f.contains("step time regressed")));
+        let mut unpinned = base.clone();
+        unpinned.mean_step_secs = 0.0;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&cur),
+            std::slice::from_ref(&unpinned),
+            0.5,
+        );
+        assert!(rows[0].failures.is_empty(), "{:?}", rows[0].failures);
+
+        // steady-state allocations must stay flat
+        let mut leaky = base.clone();
+        leaky.steady_allocs = 3;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&leaky),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        assert!(rows[0].failures.iter().any(|f| f.contains("steady-state allocations")));
+
+        // a baseline row missing from the current output fails
+        let rows = check_against_baseline(&[], std::slice::from_ref(&base), 0.5);
+        assert!(rows[0].failures.iter().any(|f| f.contains("missing")));
+
+        // ...and so does a measured current row the baseline never
+        // pinned (grown CI matrix without a regenerated baseline);
+        // unmeasured rows (nondp/two-pass, gauge 0) stay exempt
+        let mut unpinned_cur = base.clone();
+        unpinned_cur.style = "group-wise:7".into();
+        let rows = check_against_baseline(
+            std::slice::from_ref(&unpinned_cur),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert!(rows[1].failures.iter().any(|f| f.contains("not pinned")), "{rows:?}");
+        let mut nondp_cur = base.clone();
+        nondp_cur.strategy = "nondp".into();
+        nondp_cur.peak_gcache_floats_measured = 0;
+        nondp_cur.peak_gcache_floats_predicted = 0.0;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&nondp_cur),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        assert_eq!(rows.len(), 1, "unmeasured extra rows are not flagged: {rows:?}");
     }
 
     #[test]

@@ -18,7 +18,8 @@ pub mod strategy;
 use crate::arch::{LayerDims, LayerKind};
 
 pub use strategy::{
-    bk_gcache_floats, clip_state_floats, layer_cost, ClippingStyle, Strategy, ALL_STRATEGIES,
+    bk_gcache_floats, bk_gcache_floats_unfused, clip_state_floats, layer_cost, ClippingStyle,
+    Strategy, ALL_STRATEGIES,
 };
 
 /// Time cost (multiply-accumulate*2, matching the paper's 2BTpd counting)

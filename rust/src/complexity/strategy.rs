@@ -129,30 +129,101 @@ pub fn clip_state_floats(style: ClippingStyle, n_layers: usize, b: f64) -> f64 {
     2.0 * style.n_groups(n_layers) as f64 * b
 }
 
-/// Peak book-kept output-gradient cache of the BK one-pass schedule
-/// under a clipping style (floats). All-layer clipping must retain
-/// every layer's `B*T*p` output-gradient cache until the last norm is
-/// in; finer styles can fuse each group's clipped sum into the backward
-/// as soon as that group's factor is known, so only the largest group's
-/// caches coexist — the efficiency lever of group-wise clipping.
+/// Book-kept output-gradient width of a layer (floats per activation
+/// row): attention book-keeps `dL/d out` at the model width `d` (its
+/// `p` encodes the head count); every other kind at `p`.
+fn gcache_width(l: &LayerDims) -> f64 {
+    match l.kind {
+        LayerKind::Attention => l.d as f64,
+        _ => l.p as f64,
+    }
+}
+
+/// Frontier-gradient width below a layer (`dL/d input` rows): `d` for
+/// every feature-consuming kind; 0 for an embedding (token input,
+/// nothing to back-propagate into).
+fn frontier_width(l: &LayerDims) -> f64 {
+    match l.kind {
+        LayerKind::Embedding => 0.0,
+        _ => l.d as f64,
+    }
+}
+
+/// Peak g-cache floats of the **legacy unfused** one-pass schedule:
+/// every trainable layer's `B*T*width` book-kept output gradient is
+/// stashed until the clipped-sum sweep at the end of the walk, so the
+/// peak is the plain sum regardless of clipping style. Kept as the
+/// baseline the fused schedule ([`bk_gcache_floats`]) is measured
+/// against (`fastdp complexity` prints both; CI diffs them per model).
+pub fn bk_gcache_floats_unfused(b: f64, layers: &[LayerDims]) -> f64 {
+    layers.iter().map(|l| b * l.t as f64 * gcache_width(l)).sum()
+}
+
+/// Peak g-cache floats of the **fused** BK one-pass schedule under a
+/// clipping style: a group's clip factor is finalized — and its
+/// members' book-kept caches released — the moment the backward walk
+/// crosses the group boundary, so the peak is the maximum over walk
+/// positions of (live book-kept caches of unfinalized groups) + (the
+/// propagating frontier gradient), not the sum over all layers.
+///
+/// This simulates the exact walk `StackRun::fused_pass` runs, over the
+/// trainable layers in plan order: groups are balanced contiguous
+/// blocks over *owner* layers; a `TiedLinear` head aliases the
+/// embedding and inherits its group, so its cache stays live until the
+/// shared group finalizes at the bottom of the walk. The native
+/// backend's measured gauge (`AllocStats::peak_gcache_floats`) counts
+/// the same quantity, and the fused-schedule tests pin measured ==
+/// predicted on the registry models.
 pub fn bk_gcache_floats(style: ClippingStyle, b: f64, layers: &[LayerDims]) -> f64 {
     let n = layers.len();
-    let g = style.n_groups(n);
-    let mut per_group = vec![0.0f64; g];
+    if n == 0 {
+        return 0.0;
+    }
+    // group ids: owners positionally; a tied head inherits the group of
+    // the embedding whose tensor it views
+    let n_own = layers.iter().filter(|l| l.kind != LayerKind::TiedLinear).count();
+    let mut groups = vec![0usize; n];
+    let mut oi = 0usize;
     for (i, l) in layers.iter().enumerate() {
-        // the book-kept cache is the layer's output gradient, B*T*width;
-        // for attention the output width is the model width d (p encodes
-        // the head count)
-        let width = match l.kind {
-            LayerKind::Attention => l.d as f64,
-            _ => l.p as f64,
-        };
-        per_group[style.group_of(i, n)] += b * l.t as f64 * width;
+        if l.kind != LayerKind::TiedLinear {
+            groups[i] = style.group_of(oi, n_own);
+            oi += 1;
+        }
     }
-    match style {
-        ClippingStyle::AllLayer => per_group.iter().sum(),
-        _ => per_group.iter().cloned().fold(0.0, f64::max),
+    let emb_group = layers
+        .iter()
+        .position(|l| l.kind == LayerKind::Embedding)
+        .map(|e| groups[e])
+        .unwrap_or(0);
+    for (i, l) in layers.iter().enumerate() {
+        if l.kind == LayerKind::TiedLinear {
+            groups[i] = emb_group;
+        }
     }
+    // each group finalizes at its lowest-index member
+    let g = style.n_groups(n_own);
+    let finalize_at: Vec<usize> = (0..g)
+        .map(|gi| (0..n).find(|&i| groups[i] == gi).expect("non-empty group"))
+        .collect();
+    // walk top-down: keep each cache, advance the frontier, release at
+    // group boundaries — mirroring StackRun::fused_pass's gauge
+    let mut kept = vec![0.0f64; g];
+    let mut kept_total = 0.0f64;
+    let last = &layers[n - 1];
+    let mut peak = b * last.t as f64 * gcache_width(last);
+    for i in (0..n).rev() {
+        let l = &layers[i];
+        let cache = b * l.t as f64 * gcache_width(l);
+        kept[groups[i]] += cache;
+        kept_total += cache;
+        let frontier = if i > 0 { b * l.t as f64 * frontier_width(l) } else { 0.0 };
+        peak = peak.max(kept_total + frontier);
+        if finalize_at[groups[i]] == i {
+            kept_total -= kept[groups[i]];
+            kept[groups[i]] = 0.0;
+        }
+    }
+    peak
 }
 
 /// Per-layer cost of one training step under `strategy` (Table 5).
@@ -374,20 +445,66 @@ mod tests {
 
     #[test]
     fn style_cost_reporting() {
+        // Stack: (d=64, p=32/64/128/256), b=16, t=8 => rows = 128.
+        // Walk-simulated fused peaks (kept caches of unfinalized groups
+        // + the propagating frontier at every step), worked by hand:
+        //   all-layer:  max at i=1: 128*(256+128+64) + 128*64 = 65536
+        //   layer-wise: max at i=3: 128*256 + 128*64          = 40960
+        //   group-wise:2 (groups {0,1}{2,3}): max at i=2:
+        //               128*(256+128) + 128*64                = 57344
         let layers: Vec<LayerDims> = (0..4).map(|i| lin(8, 64, 32 << i)).collect();
         let b = 16.0;
         let all = bk_gcache_floats(ClippingStyle::AllLayer, b, &layers);
         let lw = bk_gcache_floats(ClippingStyle::LayerWise, b, &layers);
         let gw = bk_gcache_floats(ClippingStyle::GroupWise(2), b, &layers);
-        // all-layer retains every cache; layer-wise only the biggest
-        let total: f64 = layers.iter().map(|l| b * l.t as f64 * l.p as f64).sum();
-        let biggest = b * 8.0 * 256.0;
-        assert_eq!(all, total);
-        assert_eq!(lw, biggest);
+        assert_eq!(all, 65536.0);
+        assert_eq!(lw, 40960.0);
+        assert_eq!(gw, 57344.0);
+        // finer styles release earlier, never later
         assert!(lw <= gw && gw <= all);
+        // the legacy unfused schedule holds every cache to the end,
+        // style-independent: the plain sum
+        let total: f64 = layers.iter().map(|l| b * l.t as f64 * l.p as f64).sum();
+        assert_eq!(bk_gcache_floats_unfused(b, &layers), total);
+        assert_eq!(total, 61440.0);
+        // every fused peak is bounded by legacy + the widest frontier
+        assert!(all <= total + b * 8.0 * 64.0);
         // clip state scales with group count
         assert_eq!(clip_state_floats(ClippingStyle::AllLayer, 4, b), 2.0 * b);
         assert_eq!(clip_state_floats(ClippingStyle::LayerWise, 4, b), 8.0 * b);
+    }
+
+    #[test]
+    fn gcache_simulation_handles_tied_heads() {
+        // Embedding (vocab=7, dim=4) -> Linear (4,4) -> TiedLinear
+        // (d=4, p=7), b=1, t=2. Layer-wise: 2 owner groups; the tied
+        // head inherits the embedding's group 0, so its 2*7=14-float
+        // cache stays live to the bottom of the walk:
+        //   i=2 tied(g0): kept 14, frontier 8  -> 22
+        //   i=1 lin(g1):  kept 22, frontier 8  -> 30, g1 releases 8
+        //   i=0 emb(g0):  kept 22, frontier 0  -> 22
+        let mk = |kind, d: u64, p: u64| LayerDims {
+            kind,
+            name: "l".into(),
+            t: 2,
+            d,
+            p,
+        };
+        let layers = vec![
+            mk(LayerKind::Embedding, 7, 4),
+            mk(LayerKind::Linear, 4, 4),
+            mk(LayerKind::TiedLinear, 4, 7),
+        ];
+        let lw = bk_gcache_floats(ClippingStyle::LayerWise, 1.0, &layers);
+        assert_eq!(lw, 30.0);
+        let all = bk_gcache_floats(ClippingStyle::AllLayer, 1.0, &layers);
+        assert_eq!(all, 30.0);
+        assert_eq!(bk_gcache_floats_unfused(1.0, &layers), 30.0);
+        assert!(lw <= all);
+        // layer-wise groups count owners only: with the tied head in
+        // the embedding's group the walk still drains to zero (the
+        // asserts inside the simulation would panic otherwise)
+        assert!(bk_gcache_floats(ClippingStyle::GroupWise(2), 1.0, &layers) <= all);
     }
 
     #[test]
@@ -431,8 +548,14 @@ mod tests {
             p: 4,
         };
         // book-kept output gradient of attention is B*T*d, not B*T*heads
+        // (single layer: the frontier is 0 at the bottom of the walk,
+        // so fused peak == the one cache == legacy)
         assert_eq!(
-            bk_gcache_floats(ClippingStyle::AllLayer, 2.0, &[attn]),
+            bk_gcache_floats(ClippingStyle::AllLayer, 2.0, std::slice::from_ref(&attn)),
+            2.0 * 8.0 * 32.0
+        );
+        assert_eq!(
+            bk_gcache_floats_unfused(2.0, std::slice::from_ref(&attn)),
             2.0 * 8.0 * 32.0
         );
     }

@@ -6,9 +6,15 @@
 //!                 picks the per-sample clipping granularity
 //!   bench       — time native-kernel steps per strategy (`--styles` adds
 //!                 clipping-style rows; `--json` writes
-//!                 BENCH_native_kernels.json)
+//!                 BENCH_native_kernels.json with measured fused
+//!                 g-cache peaks)
+//!   bench-check — compare bench JSON against a committed baseline
+//!                 (ci/bench_baseline.json): exact on floats held,
+//!                 banded on time; exit non-zero on regression
 //!   complexity  — print the paper's complexity tables for a model,
 //!                 including per-clipping-style cost reporting
+//!                 (`--gcache-md` emits the fused-vs-legacy g-cache
+//!                 markdown rows for the CI step summary)
 //!   calibrate   — solve sigma for a (epsilon, delta, q, steps) target
 //!   list        — list native models (and PJRT artifacts if present)
 //!   version
@@ -29,17 +35,24 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("bench") => fastdp::bench::run_native_bench(&args),
+        Some("bench-check") => fastdp::bench::run_bench_check(&args),
         Some("complexity") => cmd_complexity(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("list") => cmd_list(&args),
         Some("version") | None => {
             println!("fastdp 0.2.0 — Book-Keeping DP optimization (Bu et al., ICML 2023)");
-            println!("usage: fastdp <train|bench|complexity|calibrate|list|version> [--opts]");
+            println!(
+                "usage: fastdp <train|bench|bench-check|complexity|calibrate|list|version> [--opts]"
+            );
             println!(
                 "       train --model <m> --strategy <s> \
                  [--clipping-style all-layer|layer-wise|group-wise[:k]]"
             );
             println!("       bench [--model <m>] [--strategy a,b,...] [--styles a,b,...] [--json]");
+            println!(
+                "       bench-check [--current a.json,b.json] [--baseline ci/bench_baseline.json] \
+                 [--time-tolerance 1.0] [--summary out.md]"
+            );
             0
         }
         Some(other) => {
@@ -144,6 +157,37 @@ fn cmd_complexity(args: &Args) -> i32 {
         );
     }
     let b = args.get_f64("batch", default_b);
+    // g-cache reporting walks the FULL trainable stack (LayerNorm
+    // output gradients are book-kept too, so their caches count); the
+    // per-strategy table keeps the generalized-linear view above.
+    let gcache_layers = match &native_spec {
+        Some(spec) if arch.is_none() => spec.arch_layers(),
+        _ => layers.clone(),
+    };
+    use fastdp::complexity::ClippingStyle;
+    let gcache_styles = [
+        ClippingStyle::AllLayer,
+        ClippingStyle::LayerWise,
+        ClippingStyle::GroupWise(2),
+        ClippingStyle::GroupWise(4),
+    ];
+    // `--gcache-md`: emit only the fused-vs-legacy markdown rows (the
+    // CI registry loop appends them to $GITHUB_STEP_SUMMARY; the table
+    // header lives in ci.yml so the rows concatenate across models)
+    if args.has_flag("gcache-md") {
+        let legacy = complexity::bk_gcache_floats_unfused(b, &gcache_layers);
+        for style in gcache_styles {
+            let fused = complexity::bk_gcache_floats(style, b, &gcache_layers);
+            println!(
+                "| {model} | {} | {} | {} | {:.1}% |",
+                style.name(),
+                fmt_count(fused),
+                fmt_count(legacy),
+                if legacy > 0.0 { 100.0 * (1.0 - fused / legacy) } else { 0.0 },
+            );
+        }
+        return 0;
+    }
     let mut t = Table::new(
         &format!("{model}: per-strategy complexity (B={b})"),
         &["strategy", "time", "time-vs-nondp", "space", "space-vs-nondp"],
@@ -180,16 +224,12 @@ fn cmd_complexity(args: &Args) -> i32 {
         layers.len()
     );
 
-    // clipping-style cost reporting: finer styles free each group's
-    // book-kept output-gradient cache as soon as its clip factor is
-    // known (He et al. / Bu et al. group-wise clipping)
-    use fastdp::complexity::ClippingStyle;
-    let mut styles = vec![
-        ClippingStyle::AllLayer,
-        ClippingStyle::LayerWise,
-        ClippingStyle::GroupWise(2),
-        ClippingStyle::GroupWise(4),
-    ];
+    // clipping-style cost reporting: the fused schedule frees each
+    // group's book-kept output-gradient cache at its group boundary
+    // (He et al. / Bu et al. group-wise clipping); the legacy column is
+    // the pre-fusion hold-everything peak the saving is measured
+    // against
+    let mut styles = gcache_styles.to_vec();
     if let Some(s) = args.get("clipping-style") {
         match ClippingStyle::parse(s) {
             Some(cs) => {
@@ -203,16 +243,28 @@ fn cmd_complexity(args: &Args) -> i32 {
             }
         }
     }
+    let legacy = complexity::bk_gcache_floats_unfused(b, &gcache_layers);
+    let n_own = gcache_layers
+        .iter()
+        .filter(|l| l.kind != fastdp::arch::LayerKind::TiedLinear)
+        .count();
     let mut t = Table::new(
-        &format!("clipping styles (B={b}): BK book-kept cache + clip state, floats"),
-        &["style", "groups", "bk g-cache", "clip state"],
+        &format!("clipping styles (B={b}): fused BK g-cache peak vs legacy, + clip state (floats)"),
+        &["style", "groups", "g-cache (fused)", "g-cache (legacy)", "saved", "clip state"],
     );
     for style in &styles {
+        let fused = complexity::bk_gcache_floats(*style, b, &gcache_layers);
         t.row(&[
             style.name(),
-            style.n_groups(layers.len()).to_string(),
-            fmt_count(complexity::bk_gcache_floats(*style, b, &layers)),
-            fmt_count(complexity::clip_state_floats(*style, layers.len(), b)),
+            style.n_groups(n_own).to_string(),
+            fmt_count(fused),
+            fmt_count(legacy),
+            if legacy > 0.0 {
+                format!("{:.1}%", 100.0 * (1.0 - fused / legacy))
+            } else {
+                "-".into()
+            },
+            fmt_count(complexity::clip_state_floats(*style, n_own, b)),
         ]);
     }
     print!("{}", t.render());

@@ -114,6 +114,16 @@ pub struct AllocStats {
     pub fresh_allocs_last_step: usize,
     /// Total bytes ever handed out by the arena.
     pub arena_bytes: usize,
+    /// High-water mark of arena floats checked out during the last
+    /// step — the measured peak working set of the buffer schedule
+    /// (lifetimes, not just sizes: the fused group-wise walk lowers
+    /// this without changing the buffer set).
+    pub arena_peak_floats: usize,
+    /// Peak g-cache floats of the last fused BK walk (frontier
+    /// gradient + live book-kept output gradients); 0 for two-pass /
+    /// nondp / the unfused diagnostic schedule. Comparable to
+    /// `complexity::bk_gcache_floats`.
+    pub peak_gcache_floats: usize,
 }
 
 /// One trainable (model, strategy) pair the coordinator can drive.

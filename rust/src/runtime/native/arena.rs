@@ -9,6 +9,13 @@
 //! overhead" claim becomes an assertable invariant instead of a hope.
 //! [`Arena::fresh_allocs`] reports how many pool misses the current step
 //! incurred; the bench harness and tests assert it is 0 once warm.
+//!
+//! The arena also keeps a per-step **high-water mark** of checked-out
+//! floats ([`Arena::peak_outstanding_elems`]): two schedules that check
+//! out the same buffer *set* but with different lifetimes (the fused
+//! vs. unfused group-wise clipped-sum walk) differ exactly in this
+//! number, so the memory saving of early g-cache release is measured,
+//! not just predicted by the complexity engine.
 
 /// A recycling pool of `Vec<f32>` buffers.
 #[derive(Debug, Default)]
@@ -20,6 +27,10 @@ pub struct Arena {
     total_elems: usize,
     /// Buffers currently checked out (sanity/leak accounting).
     outstanding: usize,
+    /// Floats currently checked out (sum of requested lengths).
+    out_elems: usize,
+    /// High-water mark of `out_elems` since `begin_step`.
+    peak_elems: usize,
 }
 
 impl Arena {
@@ -27,9 +38,11 @@ impl Arena {
         Self::default()
     }
 
-    /// Mark the start of a step: resets the per-step miss counter.
+    /// Mark the start of a step: resets the per-step miss counter and
+    /// the checked-out-floats high-water mark.
     pub fn begin_step(&mut self) {
         self.fresh = 0;
+        self.peak_elems = self.out_elems;
     }
 
     /// Check a zeroed buffer of exactly `len` elements out of the pool.
@@ -48,6 +61,8 @@ impl Arena {
             return Vec::new();
         }
         self.outstanding += 1;
+        self.out_elems += len;
+        self.peak_elems = self.peak_elems.max(self.out_elems);
         let mut best: Option<usize> = None;
         for (i, b) in self.free.iter().enumerate() {
             if b.capacity() >= len {
@@ -83,6 +98,7 @@ impl Arena {
             return;
         }
         self.outstanding = self.outstanding.saturating_sub(1);
+        self.out_elems = self.out_elems.saturating_sub(buf.len());
         self.free.push(buf);
     }
 
@@ -106,6 +122,17 @@ impl Arena {
     /// Buffers currently checked out.
     pub fn outstanding(&self) -> usize {
         self.outstanding
+    }
+
+    /// Floats currently checked out (sum of requested lengths).
+    pub fn outstanding_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    /// High-water mark of checked-out floats since `begin_step` — the
+    /// measured peak working set of the step's buffer schedule.
+    pub fn peak_outstanding_elems(&self) -> usize {
+        self.peak_elems
     }
 }
 
@@ -170,6 +197,34 @@ mod tests {
         let again = a.take(4);
         assert_eq!(a.fresh_allocs(), 0, "pool must still serve the real take");
         a.give(again);
+    }
+
+    #[test]
+    fn high_water_mark_tracks_lifetimes_not_just_sizes() {
+        // Two schedules over the same buffer set: holding both buffers
+        // at once peaks at 96; releasing the first before taking the
+        // second peaks at 64 — exactly the fused-vs-unfused g-cache
+        // distinction the backend reports per step.
+        let mut a = Arena::new();
+        a.begin_step();
+        let x = a.take(64);
+        let y = a.take(32);
+        assert_eq!(a.outstanding_elems(), 96);
+        a.give(x);
+        a.give(y);
+        assert_eq!(a.peak_outstanding_elems(), 96);
+        assert_eq!(a.outstanding_elems(), 0);
+
+        a.begin_step();
+        let x = a.take(64);
+        a.give(x);
+        let y = a.take(32);
+        a.give(y);
+        assert_eq!(a.peak_outstanding_elems(), 64, "early release lowers the peak");
+        // take(0) placeholders stay invisible to the gauge
+        let z = a.take(0);
+        a.give(z);
+        assert_eq!(a.peak_outstanding_elems(), 64);
     }
 
     #[test]

@@ -201,13 +201,18 @@ impl DpLayer for Attention {
         // Tape invariant: attention always has parameters, so every walk
         // calls this layer's `accum_sq_norms` or `clipped_grads` with
         // the *same* output gradient immediately before `backward_data`
-        // (see `StackRun::norm_pass` / `clipped_recompute`). That call
-        // left `[g_ao | g_qkv]` for this layer in `Scratch::attn`, so
-        // the O(B T^2 d) softmax backward is NOT run a second time here
-        // — only the final projection through W_qkv remains. The
-        // differential harness and the full-stack FD tests pin this
-        // invariant; breaking the call order produces garbage gradients
-        // they catch immediately.
+        // (see `StackRun::norm_pass` / `clipped_recompute` /
+        // `fused_pass`). That call left `[g_ao | g_qkv]` for this layer
+        // in `Scratch::attn`, so the O(B T^2 d) softmax backward is NOT
+        // run a second time here — only the final projection through
+        // W_qkv remains. The fused schedule preserves the invariant by
+        // finalizing a clipping group only *after* the boundary layer's
+        // `backward_data`: a group finalize may refill `Scratch::attn`
+        // for another attention layer (each `finalize_group` recomputes
+        // its own core), but never between one layer's norm hook and
+        // its `backward_data`. The differential harness and the
+        // full-stack FD tests pin this invariant; breaking the call
+        // order produces garbage gradients they catch immediately.
         let rows = ctx.rows();
         let dm = self.d;
         let g_qkv = &scratch.attn[rows * dm..rows * 4 * dm];

@@ -115,7 +115,10 @@ impl DpLayer for Embedding {
     /// `TiedLinear` vocab head): `sq[i] += 2 <G_emb_i, G_head_i>`,
     /// contracted in O(T^2 d) without materializing either `(vocab, d)`
     /// gradient — the third Gram next to the token-equality mask and
-    /// the head's activation/gradient Grams.
+    /// the head's activation/gradient Grams. `alias_g` is a stash copy
+    /// on the two-pass norm walk and the head's still-live book-kept
+    /// gradient on the fused walk (same bits either way — the shared
+    /// group finalizes only after this hook runs).
     fn accum_tied_cross_sq_norms(
         &self,
         x: LayerIn<'_>,

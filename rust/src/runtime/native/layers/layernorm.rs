@@ -4,7 +4,11 @@
 //! row — the two tensors the backward and the per-sample (gamma, beta)
 //! gradients need. Norm layers always take the instantiation route
 //! (their per-sample grads are `O(p)`, trivially small — paper
-//! Section 2.2's "norm layers" convention).
+//! Section 2.2's "norm layers" convention). Note the book-kept output
+//! gradient is still a full `B*T*width` buffer, so LayerNorms count in
+//! the fused schedule's g-cache gauge like any other trainable layer
+//! (the per-group finalize is the default dispatch to
+//! `ln_weighted_grads`).
 
 #![allow(clippy::too_many_arguments)]
 

@@ -1,7 +1,11 @@
 //! Fully connected layer `(d, p)` with bias — the generalized-linear
 //! workhorse of the Book-Keeping algorithm. Supports both norm routes
 //! (ghost Grams, streamed instantiation) plus the stored-psg reuse path
-//! (Opacus / BK-MixOpt instantiation layers).
+//! (Opacus / BK-MixOpt instantiation layers). The fused schedule's
+//! per-group finalize is the default [`DpLayer::finalize_group`]
+//! dispatch: `psg_weighted_sum` when this layer stored its per-sample
+//! grads during the norm walk, the `weighted_grad` contraction
+//! otherwise — bit-for-bit the unfused second pass, just earlier.
 
 #![allow(clippy::too_many_arguments)]
 

@@ -8,6 +8,9 @@
 //! assembled layer by layer from the book-kept caches. [`DpLayer`]
 //! captures exactly that contract, and [`StackRun`] threads the
 //! one-pass / two-pass BK schedules through an arbitrary layer stack —
+//! the one-pass default is the *fused* walk ([`StackRun::fused_pass`]),
+//! which finalizes each clipping group's clip factor and clipped sum at
+//! the group boundary and frees the group's g-caches mid-walk —
 //! so Embedding, LayerNorm, and causal self-[`Attention`] (including
 //! transformer residual skips, see [`StackRun::residuals`]) run
 //! natively next to Linear + ReLU without touching the scheduler.
@@ -290,9 +293,12 @@ pub trait DpLayer: Send + Sync {
     /// `sq`, on top of the two layers' individual squared norms —
     /// together they form `||G_own_i + G_alias_i||^2`, the true
     /// sensitivity of the shared tensor. `alias_x` / `alias_g` are the
-    /// aliasing layer's input activations and output gradient (the tape
-    /// stashes `alias_g` while walking down). Only owners of aliased
-    /// tensors implement this (Embedding, for the tied vocab head).
+    /// aliasing layer's input activations and output gradient (the
+    /// two-pass norm walk stashes a copy of `alias_g` on the way down;
+    /// the fused one-pass walk hands the alias's book-kept gradient
+    /// directly, since it stays alive until the shared group
+    /// finalizes). Only owners of aliased tensors implement this
+    /// (Embedding, for the tied vocab head).
     fn accum_tied_cross_sq_norms(
         &self,
         x: LayerIn<'_>,
@@ -304,6 +310,36 @@ pub trait DpLayer: Send + Sync {
     ) {
         let _ = (x, g_own, alias_x, alias_g, sq, ctx);
         unreachable!("{}: layer does not own an aliased tensor", self.name());
+    }
+
+    /// Per-group finalize hook of the fused one-pass schedule
+    /// ([`StackRun::fused_pass`]): called the moment this layer's
+    /// clipping group's clip factors are known — *mid-walk*, right
+    /// after the backward crosses the group boundary — to consume the
+    /// book-kept output gradient `g_out` (and the stored per-sample
+    /// grads, when this layer took the stored-psg route) into the
+    /// clipped weighted sum. The tape releases `g_out`'s buffer
+    /// immediately after this returns, so implementations must not
+    /// retain it. The default dispatches exactly like the unfused
+    /// second pass, which keeps the fused schedule bitwise identical;
+    /// layers only override to change *when* their stashes die, never
+    /// what is computed.
+    fn finalize_group(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        psg_store: Option<&[f32]>,
+        c: &[f32],
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        match psg_store {
+            Some(store) => self.psg_weighted_sum(store, g_out, c, grads, ctx),
+            None => self.clipped_grads(x, g_out, Some(c), params, cache, scratch, grads, ctx),
+        }
     }
 }
 
@@ -612,6 +648,173 @@ impl StackRun<'_> {
             arena.give(ag);
         }
         (loss, kept)
+    }
+
+    /// The fused one-pass BK schedule: norms **and** clipped sums in a
+    /// single backward walk, releasing each clipping group's book-kept
+    /// g-caches at the group boundary instead of stashing all of them
+    /// to the end of the pass.
+    ///
+    /// Clipping groups are contiguous over *owner* layers in stack
+    /// order, so walking top-down the walk leaves group `G-1` first,
+    /// then `G-2`, ... and a group's per-sample norms are complete the
+    /// moment its lowest-index member has contributed
+    /// (`finalize_at[k] = Some(g)` marks that member; aliasing layers
+    /// sit higher in the stack than their owner, so the owner is always
+    /// that member for a shared group). At the boundary the group's
+    /// clip factors are computed via `clip` (filling that group's row
+    /// of `cfac`) and every member's [`DpLayer::finalize_group`] runs
+    /// in descending stack order — the same per-tensor accumulation
+    /// order as [`StackRun::clipped_from_cache`], so the fused schedule
+    /// is bitwise identical to the unfused one; only buffer lifetimes
+    /// move.
+    ///
+    /// A group finalizes only *after* the boundary layer's
+    /// `backward_data`, preserving the attention invariant that a
+    /// layer's norm hook and its `backward_data` share one
+    /// `Scratch::attn` recompute with no other attention call between
+    /// them.
+    ///
+    /// Tied tensors: the aliasing layer's book-kept gradient doubles as
+    /// the owner's cross-term input (no separate stash copy — one
+    /// `B*T*vocab` buffer fewer than the two-pass norm walk), which is
+    /// safe exactly because the alias shares the owner's group and so
+    /// outlives the owner's norm hook.
+    ///
+    /// Returns `(summed loss, peak g-cache floats)`. The peak gauge
+    /// counts the frontier gradient plus every live book-kept cache —
+    /// the quantity `complexity::bk_gcache_floats` predicts; residual
+    /// skip copies and psg stores are outside its definition.
+    pub fn fused_pass(
+        &self,
+        arena: &mut Arena,
+        acts: &[Vec<f32>],
+        caches: &[Vec<Vec<f32>>],
+        input: LayerIn<'_>,
+        y: &[i32],
+        scratch: &mut Scratch<'_>,
+        psg: &mut [Option<Vec<f32>>],
+        sq: &mut [f32],
+        cfac: &mut [f32],
+        finalize_at: &[Option<usize>],
+        clip: &mut dyn FnMut(&[f32], &mut [f32]),
+        grads: &mut [Vec<f32>],
+    ) -> (f32, usize) {
+        let ctx = self.ctx;
+        let b = ctx.b;
+        let rows = ctx.rows();
+        let nl = self.layers.len();
+        let c_out = self.layers[nl - 1].out_width();
+        let mut kept: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
+        let mut pending: Vec<Option<Vec<f32>>> = (0..nl).map(|_| None).collect();
+        let mut g = arena.take(rows * c_out);
+        // g-cache gauge: frontier + book-kept caches currently alive
+        let mut live = g.len();
+        let mut peak = live;
+        let loss = kernels::softmax_xent(&acts[nl], y, rows, c_out, Some(&mut g));
+        for k in (0..nl).rev() {
+            let layer = &self.layers[k];
+            let xin = self.input_of(k, acts, input);
+            self.stash_residual(arena, &mut pending, k, &g);
+            let trainable = layer.n_param_tensors() > 0;
+            if trainable {
+                let gr = self.groups[k] * b..(self.groups[k] + 1) * b;
+                match psg[k].as_mut() {
+                    Some(store) => {
+                        layer.psg_norms_stored(xin, &g, store, scratch, &mut sq[gr.clone()], ctx)
+                    }
+                    None => layer.accum_sq_norms(
+                        xin,
+                        &g,
+                        self.routes[k],
+                        self.params_of(k),
+                        &caches[k],
+                        scratch,
+                        &mut sq[gr.clone()],
+                        ctx,
+                    ),
+                }
+                if let Some(ak) = self.alias_of.iter().position(|a| *a == Some(k)) {
+                    let ag = kept[ak]
+                        .as_ref()
+                        .expect("aliasing layer's book-kept gradient outlives its owner's norms");
+                    layer.accum_tied_cross_sq_norms(xin, &g, &acts[ak], ag, &mut sq[gr], ctx);
+                }
+            }
+            if k > 0 {
+                let mut g_prev = arena.take(rows * layer.in_width());
+                layer.backward_data(
+                    &g,
+                    xin,
+                    &acts[k + 1],
+                    self.params_of(k),
+                    &caches[k],
+                    scratch,
+                    &mut g_prev,
+                    ctx,
+                );
+                self.merge_residual(arena, &mut pending, k, &mut g_prev);
+                let old = std::mem::replace(&mut g, g_prev);
+                if trainable {
+                    // the old frontier becomes this layer's book-kept
+                    // cache; the new frontier joins it in the gauge
+                    live += g.len();
+                    kept[k] = Some(old);
+                } else {
+                    // stateless: the frontier merely changes width
+                    live += g.len();
+                    live -= old.len();
+                    arena.give(old);
+                }
+                peak = peak.max(live);
+            } else if trainable {
+                // no backward below the front layer: the frontier
+                // itself is the book-kept cache (gauge unchanged)
+                kept[0] = Some(std::mem::take(&mut g));
+            }
+            if let Some(gi) = finalize_at[k] {
+                clip(&sq[gi * b..(gi + 1) * b], &mut cfac[gi * b..(gi + 1) * b]);
+                let c = &cfac[gi * b..(gi + 1) * b];
+                for j in (k..nl).rev() {
+                    if self.layers[j].n_param_tensors() == 0 || self.groups[j] != gi {
+                        continue;
+                    }
+                    let gj = kept[j]
+                        .take()
+                        .expect("book-kept gradient of a finalizing group member");
+                    let xj = self.input_of(j, acts, input);
+                    let gk = &mut grads[self.slots[j].0..self.slots[j].1];
+                    self.layers[j].finalize_group(
+                        xj,
+                        &gj,
+                        psg[j].as_deref(),
+                        c,
+                        self.params_of(j),
+                        &caches[j],
+                        scratch,
+                        gk,
+                        ctx,
+                    );
+                    live -= gj.len();
+                    arena.give(gj);
+                }
+            }
+        }
+        if g.capacity() > 0 {
+            // only reachable when the front layer is stateless (no such
+            // plan today); return the unconsumed frontier
+            live -= g.len();
+            arena.give(g);
+        }
+        for p in pending.into_iter().flatten() {
+            arena.give(p);
+        }
+        debug_assert_eq!(live, 0, "g-cache gauge must drain to zero");
+        debug_assert!(
+            kept.iter().all(Option::is_none),
+            "every book-kept cache must have been finalized"
+        );
+        (loss, peak)
     }
 
     /// BK one-pass clipped sums: no recompute, every trainable layer

@@ -2,7 +2,10 @@
 //! single pass. Contributes no norms and no gradients — the tape only
 //! routes the data gradient through it (masked by the cached
 //! *post*-activation output, exactly the legacy fused Linear+ReLU
-//! semantics, bitwise).
+//! semantics, bitwise). Having no parameters it belongs to no clipping
+//! group: the fused walk never calls its finalize hook, and its only
+//! memory effect on the g-cache gauge is the width-preserving frontier
+//! swap.
 
 use super::{Ctx, DpLayer, LayerIn, Scratch};
 use crate::arch::LayerDims;

@@ -15,6 +15,15 @@
 //! job ([`super::DpLayer::accum_tied_cross_sq_norms`] on `Embedding`),
 //! driven by the tape.
 //!
+//! Under the fused schedule the head finalizes with the **owner's**
+//! clipping group (shared tensors must share a group, so the alias's
+//! [`super::DpLayer::finalize_group`] — the default dispatch — runs at
+//! the bottom of the walk, right before the embedding's, preserving
+//! the alias-then-owner accumulation order of the unfused sweep). Its
+//! book-kept output gradient therefore lives for the whole walk, where
+//! it doubles as the owner's cross-term input — the fused walk takes
+//! no separate `B*T*vocab` stash copy.
+//!
 //! The stored-psg route is deliberately unsupported (`psg_len() == 0`):
 //! `psg_instantiate` materializes `a^T g` in `(d, vocab)` order, the
 //! transpose of the canonical tensor, so reusing it for the weighted

@@ -79,6 +79,19 @@ pub struct NativeBackend {
     /// Residual skip per stack layer (`Some(r)` adds layer `r`'s input
     /// activation to layer `k`'s output; transformer blocks).
     residuals: Vec<Option<usize>>,
+    /// Fused-schedule group boundaries: `finalize_at[k] = Some(g)`
+    /// marks stack layer `k` as the lowest-index member of clipping
+    /// group `g` — the walk finalizes `g` (clip factors + clipped sums
+    /// + g-cache release) right after processing `k`.
+    finalize_at: Vec<Option<usize>>,
+    /// Diagnostic switch: run the legacy unfused one-pass schedule
+    /// (norm walk stashes every g-cache, then a separate clipped-sum
+    /// sweep). The fused and unfused schedules are bitwise identical;
+    /// tests flip this to prove it and to compare peak memory.
+    unfused_schedule: bool,
+    /// Peak g-cache floats of the last fused walk (0 when the last
+    /// step ran two-pass, nondp, or the unfused diagnostic schedule).
+    last_peak_gcache: usize,
     /// Number of clipping groups.
     n_groups: usize,
     threads: usize,
@@ -312,6 +325,18 @@ impl NativeBackend {
             }
         }
 
+        // fused-schedule group boundaries: a group's norms are complete
+        // once its lowest-index trainable member has contributed (owner
+        // groups are contiguous in stack order; an alias sits above its
+        // owner, so the owner is always the boundary of a shared group)
+        let mut finalize_at: Vec<Option<usize>> = vec![None; stack.len()];
+        for gi in 0..n_groups {
+            let min_k = (0..stack.len())
+                .find(|&k| stack[k].n_param_tensors() > 0 && groups[k] == gi)
+                .expect("every clipping group has a trainable member");
+            finalize_at[min_k] = Some(gi);
+        }
+
         // shared scratch sizing
         let mut max_dp = 1usize;
         let mut max_small = 1usize;
@@ -386,6 +411,9 @@ impl NativeBackend {
             store_psg,
             groups,
             residuals,
+            finalize_at,
+            unfused_schedule: false,
+            last_peak_gcache: 0,
             n_groups,
             threads,
             params,
@@ -416,6 +444,23 @@ impl NativeBackend {
     /// Number of clipping groups (1 for all-layer).
     pub fn n_clip_groups(&self) -> usize {
         self.n_groups
+    }
+
+    /// Diagnostic/test surface: `true` reverts the one-pass DP
+    /// strategies to the legacy unfused schedule (norm walk stashes
+    /// every g-cache to the end, then a separate clipped-sum sweep).
+    /// Bitwise identical to the fused default — only buffer lifetimes
+    /// differ — which the fused-schedule tests assert.
+    pub fn set_unfused_schedule(&mut self, unfused: bool) {
+        self.unfused_schedule = unfused;
+    }
+
+    /// Peak g-cache floats (frontier gradient + live book-kept output
+    /// gradients, tied-alias cache included) of the last fused walk;
+    /// 0 when the last step ran two-pass, nondp, or unfused. Matches
+    /// `complexity::bk_gcache_floats` for the same (model, style).
+    pub fn peak_gcache_floats(&self) -> usize {
+        self.last_peak_gcache
     }
 
     fn two_pass(&self) -> bool {
@@ -495,15 +540,23 @@ impl NativeBackend {
         }
     }
 
-    /// Per-group clip factors from the grouped squared norms. With `G`
-    /// groups each group clips to `R / sqrt(G)` (total sensitivity `R`).
-    fn grouped_clip_factors(&self, sq: &[f32], clip: f32, cfac: &mut [f32]) {
-        let b = self.spec.batch;
-        let rg = if self.n_groups == 1 {
+    /// Per-group clipping radius: with `G` groups each group clips to
+    /// `R / sqrt(G)` so total sensitivity stays `R`. The single source
+    /// of the split — the fused and unfused schedules both derive
+    /// their factors from this, which the bitwise-equivalence tests
+    /// depend on.
+    fn group_radius(&self, clip: f32) -> f32 {
+        if self.n_groups == 1 {
             clip
         } else {
             clip / (self.n_groups as f32).sqrt()
-        };
+        }
+    }
+
+    /// Per-group clip factors from the grouped squared norms.
+    fn grouped_clip_factors(&self, sq: &[f32], clip: f32, cfac: &mut [f32]) {
+        let b = self.spec.batch;
+        let rg = self.group_radius(clip);
         for gi in 0..self.n_groups {
             kernels::clip_factors(
                 &sq[gi * b..(gi + 1) * b],
@@ -553,6 +606,7 @@ impl NativeBackend {
             Vec::new()
         };
 
+        let mut peak_gcache = 0usize;
         let (loss, mean_clip, group_clip) = if self.strategy == Strategy::NonDp {
             // -- single backward, plain summed gradients ---------------
             let mut small = self.arena.take(workers * self.max_small);
@@ -606,8 +660,15 @@ impl NativeBackend {
                 }
             }
 
-            // ---- pass 1: norms (book-keeping g for one-pass) ---------
-            let (loss, kept) = {
+            let mut cfac = self.arena.take(self.n_groups * b);
+            let loss = if !two && !self.unfused_schedule {
+                // ---- fused one-pass: norms + per-group finalize ------
+                // each clipping group's clip factors and clipped sums
+                // are issued at its boundary inside the single backward
+                // walk, releasing the group's g-caches early (bitwise
+                // identical to the unfused schedule below)
+                let rg = self.group_radius(clip);
+                let ck = self.clip_kind;
                 let mut scratch = Scratch {
                     gram_a: &mut gram_a[..],
                     gram_g: &mut gram_g[..],
@@ -616,7 +677,7 @@ impl NativeBackend {
                     partials: &mut partials[..],
                     attn: &mut attn_buf[..],
                 };
-                run.norm_pass(
+                let (loss, peak) = run.fused_pass(
                     &mut self.arena,
                     &acts,
                     &caches,
@@ -625,48 +686,78 @@ impl NativeBackend {
                     &mut scratch,
                     &mut psg,
                     &mut sq,
-                    !two,
-                )
-            };
-
-            let mut cfac = self.arena.take(self.n_groups * b);
-            self.grouped_clip_factors(&sq, clip, &mut cfac);
-            let mean_clip = cfac.iter().sum::<f32>() / (self.n_groups * b) as f32;
-            let group_clip: Vec<f32> = (0..self.n_groups)
-                .map(|gi| cfac[gi * b..(gi + 1) * b].iter().sum::<f32>() / b as f32)
-                .collect();
-
-            // ---- pass 2: clipped sums (cached or recomputed) ---------
-            {
-                let mut scratch = Scratch {
-                    gram_a: &mut gram_a[..],
-                    gram_g: &mut gram_g[..],
-                    stream: &mut stream[..],
-                    small: &mut small[..],
-                    partials: &mut partials[..],
-                    attn: &mut attn_buf[..],
-                };
-                if two {
-                    run.clipped_recompute(
+                    &mut cfac,
+                    &self.finalize_at,
+                    &mut |sqr, cfr| kernels::clip_factors(sqr, rg, ck, cfr),
+                    grads,
+                );
+                peak_gcache = peak;
+                loss
+            } else {
+                // ---- pass 1: norms (book-keeping g for one-pass) -----
+                let (loss, kept) = {
+                    let mut scratch = Scratch {
+                        gram_a: &mut gram_a[..],
+                        gram_g: &mut gram_g[..],
+                        stream: &mut stream[..],
+                        small: &mut small[..],
+                        partials: &mut partials[..],
+                        attn: &mut attn_buf[..],
+                    };
+                    run.norm_pass(
                         &mut self.arena,
                         &acts,
                         &caches,
                         input,
                         y,
-                        Some(&cfac),
                         &mut scratch,
-                        grads,
-                    );
-                } else {
-                    run.clipped_from_cache(
-                        &acts, &caches, input, &kept, &psg, &cfac, &mut scratch, grads,
-                    );
-                }
-            }
+                        &mut psg,
+                        &mut sq,
+                        !two,
+                    )
+                };
 
-            for buf in kept.into_iter().flatten() {
-                self.arena.give(buf);
-            }
+                self.grouped_clip_factors(&sq, clip, &mut cfac);
+
+                // ---- pass 2: clipped sums (cached or recomputed) -----
+                {
+                    let mut scratch = Scratch {
+                        gram_a: &mut gram_a[..],
+                        gram_g: &mut gram_g[..],
+                        stream: &mut stream[..],
+                        small: &mut small[..],
+                        partials: &mut partials[..],
+                        attn: &mut attn_buf[..],
+                    };
+                    if two {
+                        run.clipped_recompute(
+                            &mut self.arena,
+                            &acts,
+                            &caches,
+                            input,
+                            y,
+                            Some(&cfac),
+                            &mut scratch,
+                            grads,
+                        );
+                    } else {
+                        run.clipped_from_cache(
+                            &acts, &caches, input, &kept, &psg, &cfac, &mut scratch, grads,
+                        );
+                    }
+                }
+
+                for buf in kept.into_iter().flatten() {
+                    self.arena.give(buf);
+                }
+                loss
+            };
+
+            let mean_clip = cfac.iter().sum::<f32>() / (self.n_groups * b) as f32;
+            let group_clip: Vec<f32> = (0..self.n_groups)
+                .map(|gi| cfac[gi * b..(gi + 1) * b].iter().sum::<f32>() / b as f32)
+                .collect();
+
             for buf in psg.into_iter().flatten() {
                 self.arena.give(buf);
             }
@@ -684,6 +775,7 @@ impl NativeBackend {
             (loss, mean_clip, group_clip)
         };
 
+        self.last_peak_gcache = peak_gcache;
         if self.max_attn > 0 {
             self.arena.give(attn_buf);
         }
@@ -1014,6 +1106,8 @@ impl Backend for NativeBackend {
         AllocStats {
             fresh_allocs_last_step: self.last_fresh,
             arena_bytes: self.arena.total_bytes(),
+            arena_peak_floats: self.arena.peak_outstanding_elems(),
+            peak_gcache_floats: self.last_peak_gcache,
         }
     }
 }
