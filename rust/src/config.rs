@@ -44,6 +44,21 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub checkpoint_dir: Option<PathBuf>,
     pub checkpoint_every: usize,
+    /// Retention cap: prune to this many newest checkpoints after each
+    /// successful publish (0 = keep everything).
+    pub checkpoint_keep_last: usize,
+    /// Require a checkpoint to resume from: error out instead of
+    /// silently starting fresh when `checkpoint_dir` holds none.
+    /// (Resume itself is automatic whenever the dir has a usable
+    /// checkpoint — this flag only upgrades "none found" to an error.)
+    pub resume: bool,
+    /// Policy when a step produces NaN/Inf in the loss, gradients, or
+    /// updated parameters: "abort" (fail loudly, default), "skip"
+    /// (discard the update but burn the noise draw and accountant step —
+    /// the data was touched, the budget is spent), or "rollback"
+    /// (restore parameters from the last checkpoint; streams and ledger
+    /// keep advancing).
+    pub on_nonfinite: String,
     pub privacy: PrivacyConfig,
     /// Disable DP entirely (strategy must be "nondp").
     pub disable_dp: bool,
@@ -79,6 +94,9 @@ impl Default for TrainConfig {
             eval_every: 0,
             checkpoint_dir: None,
             checkpoint_every: 0,
+            checkpoint_keep_last: 0,
+            resume: false,
+            on_nonfinite: "abort".to_string(),
             privacy: PrivacyConfig::default(),
             disable_dp: false,
         }
@@ -102,6 +120,9 @@ impl TrainConfig {
         c.log_every = v.opt_i64("log_every", c.log_every as i64) as usize;
         c.eval_every = v.opt_i64("eval_every", 0) as usize;
         c.checkpoint_every = v.opt_i64("checkpoint_every", 0) as usize;
+        c.checkpoint_keep_last = v.opt_i64("checkpoint_keep_last", 0) as usize;
+        c.resume = v.opt_bool("resume", false);
+        c.on_nonfinite = v.opt_str("on_nonfinite", &c.on_nonfinite).to_string();
         if let Some(d) = v.get("checkpoint_dir").and_then(Value::as_str) {
             c.checkpoint_dir = Some(PathBuf::from(d));
         }
@@ -147,6 +168,17 @@ impl TrainConfig {
         self.logical_batch = args.get_usize("logical-batch", self.logical_batch);
         self.log_every = args.get_usize("log-every", self.log_every);
         self.eval_every = args.get_usize("eval-every", self.eval_every);
+        if let Some(d) = args.get("checkpoint-dir") {
+            self.checkpoint_dir = Some(PathBuf::from(d));
+        }
+        self.checkpoint_every = args.get_usize("checkpoint-every", self.checkpoint_every);
+        self.checkpoint_keep_last = args.get_usize("keep-last", self.checkpoint_keep_last);
+        if args.has_flag("resume") {
+            self.resume = true;
+        }
+        if let Some(p) = args.get("on-nonfinite") {
+            self.on_nonfinite = p.to_string();
+        }
         self.privacy.target_epsilon = args.get_f64("epsilon", self.privacy.target_epsilon);
         self.privacy.target_delta = args.get_f64("delta", self.privacy.target_delta);
         self.privacy.sigma = args.get_f64("sigma", self.privacy.sigma);
@@ -189,6 +221,18 @@ impl TrainConfig {
         }
         if self.steps == 0 {
             return Err("steps must be > 0".into());
+        }
+        if !["abort", "skip", "rollback"].contains(&self.on_nonfinite.as_str()) {
+            return Err(format!(
+                "unknown on_nonfinite policy '{}', expected abort, skip, or rollback",
+                self.on_nonfinite
+            ));
+        }
+        if self.on_nonfinite == "rollback" && self.checkpoint_dir.is_none() {
+            return Err("on_nonfinite=rollback requires checkpoint_dir".into());
+        }
+        if self.resume && self.checkpoint_dir.is_none() {
+            return Err("resume requires checkpoint_dir".into());
         }
         if self.lr <= 0.0 {
             return Err("lr must be > 0".into());
@@ -282,6 +326,43 @@ mod tests {
         let v = parse(r#"{"strategy": "bk", "privacy": {"target_epsilon": 0, "sigma": 0}}"#)
             .unwrap();
         assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_nonfinite_options() {
+        let v = parse(
+            r#"{"checkpoint_dir": "/tmp/ck", "checkpoint_every": 5,
+                "checkpoint_keep_last": 3, "on_nonfinite": "skip", "resume": true}"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/ck")));
+        assert_eq!(c.checkpoint_every, 5);
+        assert_eq!(c.checkpoint_keep_last, 3);
+        assert_eq!(c.on_nonfinite, "skip");
+        assert!(c.resume);
+
+        // unknown policy and dir-less rollback/resume are rejected
+        let v = parse(r#"{"on_nonfinite": "retry"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let v = parse(r#"{"on_nonfinite": "rollback"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let v = parse(r#"{"resume": true}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+
+        let mut c = TrainConfig::default();
+        let args = crate::cli::Args::parse(
+            "train --checkpoint-dir /tmp/ck2 --checkpoint-every 4 --keep-last 2 \
+             --on-nonfinite rollback --resume"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/ck2")));
+        assert_eq!(c.checkpoint_every, 4);
+        assert_eq!(c.checkpoint_keep_last, 2);
+        assert_eq!(c.on_nonfinite, "rollback");
+        assert!(c.resume);
     }
 
     #[test]

@@ -1,17 +1,386 @@
-//! Checkpointing: params (+ optimizer state) to a simple self-describing
-//! binary format — a JSON header (model name, step, tensor count/lengths)
-//! followed by raw little-endian f32 data.
+//! Crash-safe checkpointing — format v2 (`FASTDP02`).
+//!
+//! Layout: `magic(8) | header_len u64 LE (8) | header_crc32 u32 LE (4) |
+//! header JSON | payload` where the payload is the raw little-endian f32
+//! tensor data (params, then Adam m / v moments) in `ModelInfo` state
+//! order. The header carries:
+//!
+//!  * tensor `lengths` (validated against `ModelInfo::state_tensor_lens`
+//!    on load — a malformed header is an error, never empty tensors),
+//!  * `payload_crc`: CRC-32 of the payload (bit-flips and truncation are
+//!    detected before any tensor reaches the backend),
+//!  * a privacy [`Fingerprint`] (strategy, clipping style/fn, clip R,
+//!    sigma, seed, logical batch) — resume refuses on mismatch instead
+//!    of silently changing the DP semantics of already-spent budget,
+//!  * stream [`Cursors`] (noise step, data draw cursor, accountant
+//!    steps) so a resumed run continues every deterministic stream
+//!    exactly where the killed run left it.
+//!
+//! Publishing is atomic: write to a `.ckpt_*.tmp`, fsync the file,
+//! rename into place, fsync the directory. A crash at any point leaves
+//! either the previous good checkpoint or a stale `.tmp` that
+//! [`sweep_stale_tmps`] removes and [`latest`]/[`list_desc`] never
+//! consider. v1 (`FASTDP01`) files remain loadable (no CRC or
+//! fingerprint — the caller falls back to step-derived cursors).
+//!
+//! The [`fault`] submodule is a test-only injection hook (kill
+//! mid-write, kill before rename, truncate, bit-flip) driving the
+//! crash-recovery suite; it is a single mutex check per save and is
+//! never armed outside tests.
 
+use crate::error::{Context, Result};
 use crate::json::Value;
 use crate::runtime::ModelInfo;
+use crate::util::crc::crc32;
 use crate::{anyhow, bail};
-use crate::error::{Context, Result};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-const MAGIC: &[u8; 8] = b"FASTDP01";
+const MAGIC_V1: &[u8; 8] = b"FASTDP01";
+const MAGIC_V2: &[u8; 8] = b"FASTDP02";
+/// Header-length sanity cap: anything larger is a corrupt length field,
+/// not a real header (headers are a few hundred bytes).
+const MAX_HEADER_BYTES: u64 = 16 * 1024 * 1024;
 
-pub fn save(dir: &Path, step: usize, info: &ModelInfo, tensors: &[Vec<f32>]) -> Result<()> {
+/// Test-only fault injection for the crash-recovery suite.
+///
+/// Arm a fault before a save; the next [`save`] consumes it (one-shot).
+/// `KillMidWrite` / `KillBeforeRename` make the save fail the way a
+/// `kill -9` at that point would (partial or complete `.tmp`, nothing
+/// published); `Truncate` / `BitFlip` publish normally and then damage
+/// the published file, simulating media corruption the *next* load must
+/// catch and fall back from.
+pub mod fault {
+    use std::sync::Mutex;
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Fault {
+        /// Die after writing the header and half the payload to `.tmp`.
+        KillMidWrite,
+        /// Die after a complete, fsynced `.tmp` but before the rename.
+        KillBeforeRename,
+        /// Publish, then chop N bytes off the end of the file.
+        Truncate(usize),
+        /// Publish, then XOR one bit at the given byte offset (clamped
+        /// to the file; offsets past the header land in the payload).
+        BitFlip(usize),
+    }
+
+    static ARMED: Mutex<Option<Fault>> = Mutex::new(None);
+
+    /// Marker prefix of injected-kill error messages, so tests can tell
+    /// a simulated crash from a real I/O failure.
+    pub const INJECTED: &str = "injected fault";
+
+    pub fn arm(f: Fault) {
+        *ARMED.lock().unwrap() = Some(f);
+    }
+
+    pub fn disarm() {
+        *ARMED.lock().unwrap() = None;
+    }
+
+    pub(super) fn take() -> Option<Fault> {
+        ARMED.lock().unwrap().take()
+    }
+}
+
+/// The config/privacy identity of a training run. Persisted in every v2
+/// checkpoint; resume compares it field-by-field against the live run
+/// and refuses on any mismatch — a checkpoint resumed under different
+/// clipping, noise, seed, or batching would silently change what the
+/// already-released steps meant for the privacy ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    pub strategy: String,
+    pub clipping_style: String,
+    pub clip_fn: String,
+    pub clip: f64,
+    pub sigma: f64,
+    pub seed: u64,
+    pub logical_batch: usize,
+}
+
+impl Fingerprint {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("strategy", Value::from(self.strategy.as_str()));
+        v.set("clipping_style", Value::from(self.clipping_style.as_str()));
+        v.set("clip_fn", Value::from(self.clip_fn.as_str()));
+        v.set("clip", Value::from(self.clip));
+        v.set("sigma", Value::from(self.sigma));
+        // u64 seeds may exceed i64: store as a decimal string
+        v.set("seed", Value::from(self.seed.to_string()));
+        v.set("logical_batch", Value::from(self.logical_batch));
+        v
+    }
+
+    fn from_json(v: &Value) -> Result<Fingerprint> {
+        let seed: u64 = v
+            .req_str("seed")
+            .map_err(|e| anyhow!("fingerprint: {e}"))?
+            .parse()
+            .context("fingerprint: seed is not a u64")?;
+        Ok(Fingerprint {
+            strategy: v.req_str("strategy").map_err(|e| anyhow!("fingerprint: {e}"))?.to_string(),
+            clipping_style: v
+                .req_str("clipping_style")
+                .map_err(|e| anyhow!("fingerprint: {e}"))?
+                .to_string(),
+            clip_fn: v.req_str("clip_fn").map_err(|e| anyhow!("fingerprint: {e}"))?.to_string(),
+            clip: v.req_f64("clip").map_err(|e| anyhow!("fingerprint: {e}"))?,
+            sigma: v.req_f64("sigma").map_err(|e| anyhow!("fingerprint: {e}"))?,
+            seed,
+            logical_batch: v
+                .req_i64("logical_batch")
+                .map_err(|e| anyhow!("fingerprint: {e}"))? as usize,
+        })
+    }
+
+    /// Refuse resume on any field drift, naming every mismatch.
+    pub fn check(&self, run: &Fingerprint) -> Result<()> {
+        let mut diffs: Vec<String> = Vec::new();
+        if self.strategy != run.strategy {
+            diffs.push(format!("strategy '{}' vs run '{}'", self.strategy, run.strategy));
+        }
+        if self.clipping_style != run.clipping_style {
+            diffs.push(format!(
+                "clipping_style '{}' vs run '{}'",
+                self.clipping_style, run.clipping_style
+            ));
+        }
+        if self.clip_fn != run.clip_fn {
+            diffs.push(format!("clip_fn '{}' vs run '{}'", self.clip_fn, run.clip_fn));
+        }
+        if self.clip.to_bits() != run.clip.to_bits() {
+            diffs.push(format!("clip R {} vs run {}", self.clip, run.clip));
+        }
+        if self.sigma.to_bits() != run.sigma.to_bits() {
+            diffs.push(format!("sigma {} vs run {}", self.sigma, run.sigma));
+        }
+        if self.seed != run.seed {
+            diffs.push(format!("seed {} vs run {}", self.seed, run.seed));
+        }
+        if self.logical_batch != run.logical_batch {
+            diffs.push(format!(
+                "logical_batch {} vs run {}",
+                self.logical_batch, run.logical_batch
+            ));
+        }
+        if !diffs.is_empty() {
+            bail!(
+                "checkpoint fingerprint mismatch ({}) — resuming would silently change the \
+                 privacy semantics of budget already spent. Re-run with the original flags, \
+                 or point --checkpoint-dir at a fresh directory to start over",
+                diffs.join("; ")
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Positions of every deterministic stream at checkpoint time. Restoring
+/// them is what makes kill/resume bitwise: the noise draws and data
+/// batches consumed before the crash are burned, never replayed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Cursors {
+    /// `NoiseSource` step counter (draw sets consumed).
+    pub noise_step: u64,
+    /// `BatchSource` training-draw cursor (micro-batches consumed).
+    pub data_cursor: u64,
+    /// `RdpAccountant` composed steps.
+    pub accountant_steps: u64,
+}
+
+impl Cursors {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("noise_step", Value::from(self.noise_step as i64));
+        v.set("data_cursor", Value::from(self.data_cursor as i64));
+        v.set("accountant_steps", Value::from(self.accountant_steps as i64));
+        v
+    }
+
+    fn from_json(v: &Value) -> Result<Cursors> {
+        let get = |k: &str| -> Result<u64> {
+            let x = v.req_i64(k).map_err(|e| anyhow!("cursors: {e}"))?;
+            if x < 0 {
+                bail!("cursors: '{k}' is negative ({x})");
+            }
+            Ok(x as u64)
+        };
+        Ok(Cursors {
+            noise_step: get("noise_step")?,
+            data_cursor: get("data_cursor")?,
+            accountant_steps: get("accountant_steps")?,
+        })
+    }
+}
+
+/// Everything required to save one checkpoint (besides the tensors).
+pub struct SaveMeta<'a> {
+    pub step: usize,
+    pub info: &'a ModelInfo,
+    pub fingerprint: &'a Fingerprint,
+    pub cursors: Cursors,
+    /// Prune to this many newest checkpoints after a successful
+    /// publish; 0 keeps everything.
+    pub keep_last: usize,
+}
+
+/// A fully parsed, integrity-checked checkpoint file.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Format version: 1 (`FASTDP01`) or 2 (`FASTDP02`).
+    pub version: u8,
+    pub model: String,
+    pub optimizer: String,
+    pub step: usize,
+    /// v2 only; `None` for v1 files (back-compat: accepted unchecked).
+    pub fingerprint: Option<Fingerprint>,
+    /// v2 only; v1 resumes derive cursors from `step`.
+    pub cursors: Option<Cursors>,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Semantic validation against the live model: name, tensor count
+    /// (params-only or full state), and every tensor length against
+    /// `param_shapes`. Structural corruption is caught earlier, in
+    /// [`read`]; failures here mean the checkpoint belongs to a
+    /// different model and must not be loaded.
+    pub fn validate(&self, info: &ModelInfo) -> Result<()> {
+        if self.model != info.name {
+            bail!("checkpoint is for model '{}', expected '{}'", self.model, info.name);
+        }
+        let full = info.state_tensor_lens();
+        let n_params = info.param_names.len();
+        let want: &[usize] = if self.tensors.len() == n_params {
+            &full[..n_params]
+        } else if self.tensors.len() == full.len() {
+            &full[..]
+        } else {
+            bail!(
+                "checkpoint for '{}' has {} tensors, expected {} (params only) or {} (full state)",
+                info.name,
+                self.tensors.len(),
+                n_params,
+                full.len()
+            );
+        };
+        for (i, (t, w)) in self.tensors.iter().zip(want.iter()).enumerate() {
+            if t.len() != *w {
+                let name = &info.param_names[i % n_params];
+                let part = match i / n_params {
+                    0 => "param",
+                    1 => "adam-m",
+                    _ => "adam-v",
+                };
+                bail!(
+                    "checkpoint tensor {i} ({part} '{name}') has {} elements, expected {w} \
+                     from the model's param shapes",
+                    t.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total floats across all tensors.
+    pub fn total_floats(&self) -> usize {
+        self.tensors.iter().map(Vec::len).sum()
+    }
+}
+
+/// Save a v2 checkpoint atomically. Refuses non-finite tensors — a
+/// poisoned state must never be persisted (the non-finite step guards
+/// keep it out of the backend; this is the last line of defense).
+pub fn save(dir: &Path, meta: &SaveMeta, tensors: &[Vec<f32>]) -> Result<PathBuf> {
+    for (i, t) in tensors.iter().enumerate() {
+        if t.iter().any(|x| !x.is_finite()) {
+            bail!(
+                "refusing to checkpoint at step {}: tensor {i} contains non-finite values",
+                meta.step
+            );
+        }
+    }
+    std::fs::create_dir_all(dir)?;
+
+    let mut payload: Vec<u8> = Vec::with_capacity(tensors.iter().map(|t| t.len() * 4).sum());
+    for t in tensors {
+        for x in t {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let payload_crc = crc32(&payload);
+
+    let mut header = Value::obj();
+    header.set("format", Value::from(2usize));
+    header.set("model", Value::from(meta.info.name.as_str()));
+    header.set("step", Value::from(meta.step));
+    header.set("optimizer", Value::from(meta.info.optimizer.as_str()));
+    header.set(
+        "lengths",
+        Value::Arr(tensors.iter().map(|t| Value::from(t.len())).collect()),
+    );
+    header.set("payload_crc", Value::from(payload_crc as i64));
+    header.set("fingerprint", meta.fingerprint.to_json());
+    header.set("cursors", meta.cursors.to_json());
+    let htext = header.to_string();
+    let hcrc = crc32(htext.as_bytes());
+
+    let path = dir.join(format!("ckpt_{:08}.fdp", meta.step));
+    let tmp = dir.join(format!(".ckpt_{:08}.tmp", meta.step));
+    let injected = fault::take();
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&(htext.len() as u64).to_le_bytes())?;
+        f.write_all(&hcrc.to_le_bytes())?;
+        f.write_all(htext.as_bytes())?;
+        if injected == Some(fault::Fault::KillMidWrite) {
+            f.write_all(&payload[..payload.len() / 2])?;
+            f.sync_all()?;
+            bail!("{}: killed mid-write of {}", fault::INJECTED, tmp.display());
+        }
+        f.write_all(&payload)?;
+        f.sync_all()?;
+    }
+    if injected == Some(fault::Fault::KillBeforeRename) {
+        bail!("{}: killed before rename of {}", fault::INJECTED, tmp.display());
+    }
+    std::fs::rename(&tmp, &path)?; // atomic publish
+    // fsync the directory so the rename itself survives power loss
+    // (best-effort: not every platform lets you open a directory).
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    match injected {
+        Some(fault::Fault::Truncate(n)) => {
+            let len = std::fs::metadata(&path)?.len();
+            let f = std::fs::OpenOptions::new().write(true).open(&path)?;
+            f.set_len(len.saturating_sub(n as u64))?;
+        }
+        Some(fault::Fault::BitFlip(off)) => {
+            let mut bytes = std::fs::read(&path)?;
+            if !bytes.is_empty() {
+                let i = off.min(bytes.len() - 1);
+                bytes[i] ^= 0x08;
+                std::fs::write(&path, bytes)?;
+            }
+        }
+        _ => {}
+    }
+    if meta.keep_last > 0 {
+        prune(dir, meta.keep_last)?;
+    }
+    Ok(path)
+}
+
+/// Legacy v1 writer (`FASTDP01`: JSON header, no CRC, no fingerprint).
+/// Kept only so the back-compat suite can generate v1 files the way the
+/// pre-v2 code did; production saves always write v2.
+pub fn save_v1(dir: &Path, step: usize, info: &ModelInfo, tensors: &[Vec<f32>]) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let mut header = Value::obj();
     header.set("model", Value::from(info.name.as_str()));
@@ -26,11 +395,10 @@ pub fn save(dir: &Path, step: usize, info: &ModelInfo, tensors: &[Vec<f32>]) -> 
     let tmp = dir.join(format!(".ckpt_{step:08}.tmp"));
     {
         let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(MAGIC)?;
+        f.write_all(MAGIC_V1)?;
         f.write_all(&(htext.len() as u64).to_le_bytes())?;
         f.write_all(htext.as_bytes())?;
         for t in tensors {
-            // SAFETY-free little-endian write
             let mut bytes = Vec::with_capacity(t.len() * 4);
             for x in t {
                 bytes.extend_from_slice(&x.to_le_bytes());
@@ -39,63 +407,200 @@ pub fn save(dir: &Path, step: usize, info: &ModelInfo, tensors: &[Vec<f32>]) -> 
         }
         f.sync_all()?;
     }
-    std::fs::rename(&tmp, &path)?; // atomic publish
+    std::fs::rename(&tmp, &path)?;
     Ok(())
 }
 
-pub fn load(path: &Path, info: &ModelInfo) -> Result<(usize, Vec<Vec<f32>>)> {
+/// Structural read + integrity check of one checkpoint file (either
+/// format version). Every way a file can be damaged — bad magic,
+/// corrupt length field, header CRC mismatch, malformed JSON, invalid
+/// lengths, truncated/overlong payload, payload CRC mismatch — is an
+/// error here, so the resume loop can fall back to an older file.
+/// Semantic checks against a model live in [`Checkpoint::validate`].
+pub fn read(path: &Path) -> Result<Checkpoint> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}", path.display()))?;
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    f.read_exact(&mut magic)
+        .with_context(|| format!("reading magic of {}", path.display()))?;
+    let version: u8 = if &magic == MAGIC_V2 {
+        2
+    } else if &magic == MAGIC_V1 {
+        1
+    } else {
         bail!("bad checkpoint magic in {}", path.display());
-    }
+    };
     let mut lenb = [0u8; 8];
-    f.read_exact(&mut lenb)?;
-    let hlen = u64::from_le_bytes(lenb) as usize;
-    let mut hbytes = vec![0u8; hlen];
-    f.read_exact(&mut hbytes)?;
-    let header = crate::json::parse(std::str::from_utf8(&hbytes)?)
-        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
-    let model = header.req_str("model").map_err(|e| anyhow!(e))?;
-    if model != info.name {
-        bail!("checkpoint is for model '{model}', expected '{}'", info.name);
+    f.read_exact(&mut lenb)
+        .with_context(|| format!("reading header length of {}", path.display()))?;
+    let hlen = u64::from_le_bytes(lenb);
+    if hlen == 0 || hlen > MAX_HEADER_BYTES {
+        bail!("malformed header length {hlen} in {}", path.display());
     }
-    let step = header.req_i64("step").map_err(|e| anyhow!(e))? as usize;
-    let lengths: Vec<usize> = header
-        .req_arr("lengths")
-        .map_err(|e| anyhow!(e))?
-        .iter()
-        .map(|v| v.as_usize().unwrap_or(0))
-        .collect();
+    let header_crc = if version == 2 {
+        let mut c = [0u8; 4];
+        f.read_exact(&mut c)
+            .with_context(|| format!("reading header CRC of {}", path.display()))?;
+        Some(u32::from_le_bytes(c))
+    } else {
+        None
+    };
+    let mut hbytes = vec![0u8; hlen as usize];
+    f.read_exact(&mut hbytes)
+        .with_context(|| format!("truncated header in {}", path.display()))?;
+    if let Some(want) = header_crc {
+        let got = crc32(&hbytes);
+        if got != want {
+            bail!(
+                "header CRC mismatch in {} (stored {want:08x}, computed {got:08x})",
+                path.display()
+            );
+        }
+    }
+    let header = crate::json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow!("checkpoint header of {}: {e}", path.display()))?;
+    let model = header.req_str("model").map_err(|e| anyhow!(e))?.to_string();
+    let optimizer = header.opt_str("optimizer", "sgd").to_string();
+    let step_raw = header.req_i64("step").map_err(|e| anyhow!(e))?;
+    if step_raw < 0 {
+        bail!("checkpoint header of {} has negative step {step_raw}", path.display());
+    }
+    let step = step_raw as usize;
+    // Strict length parsing: a malformed entry is an error, never a
+    // silent empty tensor.
+    let raw_lengths = header.req_arr("lengths").map_err(|e| anyhow!(e))?;
+    let mut lengths: Vec<usize> = Vec::with_capacity(raw_lengths.len());
+    for (i, v) in raw_lengths.iter().enumerate() {
+        match v.as_usize() {
+            Some(n) => lengths.push(n),
+            None => bail!(
+                "malformed header in {}: lengths[{i}] = {v} is not a non-negative integer",
+                path.display()
+            ),
+        }
+    }
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)
+        .with_context(|| format!("reading payload of {}", path.display()))?;
+    let want_bytes: usize = lengths.iter().map(|n| n * 4).sum();
+    if payload.len() != want_bytes {
+        bail!(
+            "payload of {} is {} bytes, header declares {want_bytes} — truncated or corrupt",
+            path.display(),
+            payload.len()
+        );
+    }
+    if version == 2 {
+        let want = header.req_i64("payload_crc").map_err(|e| anyhow!(e))? as u32;
+        let got = crc32(&payload);
+        if got != want {
+            bail!(
+                "payload CRC mismatch in {} (stored {want:08x}, computed {got:08x})",
+                path.display()
+            );
+        }
+    }
     let mut tensors = Vec::with_capacity(lengths.len());
+    let mut off = 0usize;
     for n in lengths {
-        let mut bytes = vec![0u8; n * 4];
-        f.read_exact(&mut bytes)?;
         let mut t = Vec::with_capacity(n);
-        for c in bytes.chunks_exact(4) {
+        for c in payload[off..off + n * 4].chunks_exact(4) {
             t.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
+        off += n * 4;
         tensors.push(t);
     }
-    Ok((step, tensors))
+    let fingerprint = match header.get("fingerprint") {
+        Some(v) => Some(Fingerprint::from_json(v)?),
+        None => None,
+    };
+    let cursors = match header.get("cursors") {
+        Some(v) => Some(Cursors::from_json(v)?),
+        None => None,
+    };
+    Ok(Checkpoint {
+        version,
+        model,
+        optimizer,
+        step,
+        fingerprint,
+        cursors,
+        tensors,
+    })
+}
+
+/// Read + validate against a model: `(step, tensors)` on success.
+pub fn load(path: &Path, info: &ModelInfo) -> Result<(usize, Vec<Vec<f32>>)> {
+    let ck = read(path)?;
+    ck.validate(info)?;
+    Ok((ck.step, ck.tensors))
+}
+
+fn is_checkpoint_name(name: &str) -> bool {
+    name.starts_with("ckpt_") && name.ends_with(".fdp")
+}
+
+/// All published checkpoints in `dir`, newest (highest step) first.
+/// Stale `.tmp` files are never included.
+pub fn list_desc(dir: &Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.file_name()
+                .and_then(|n| n.to_str())
+                .map(is_checkpoint_name)
+                .unwrap_or(false)
+            {
+                out.push(p);
+            }
+        }
+    }
+    // zero-padded step in the name => lexicographic == numeric order
+    out.sort();
+    out.reverse();
+    out
 }
 
 /// Most recent checkpoint in `dir`, if any.
 pub fn latest(dir: &Path) -> Option<PathBuf> {
-    let mut best: Option<PathBuf> = None;
-    for entry in std::fs::read_dir(dir).ok()? {
-        let p = entry.ok()?.path();
-        let name = p.file_name()?.to_str()?;
-        if name.starts_with("ckpt_")
-            && name.ends_with(".fdp")
-            && best.as_ref().map(|b| p > *b).unwrap_or(true)
-        {
-            best = Some(p.clone());
+    list_desc(dir).into_iter().next()
+}
+
+/// Remove `.ckpt_*.tmp` leftovers from crashed saves. Returns how many
+/// were swept. Call at startup, before scanning for a resume point.
+pub fn sweep_stale_tmps(dir: &Path) -> usize {
+    let mut swept = 0;
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            let stale = p
+                .file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with(".ckpt_") && n.ends_with(".tmp"))
+                .unwrap_or(false);
+            if stale && std::fs::remove_file(&p).is_ok() {
+                swept += 1;
+            }
         }
     }
-    best
+    swept
+}
+
+/// Delete all but the newest `keep` checkpoints (`keep == 0` keeps
+/// everything). Returns how many were removed.
+pub fn prune(dir: &Path, keep: usize) -> Result<usize> {
+    if keep == 0 {
+        return Ok(0);
+    }
+    let all = list_desc(dir);
+    let mut removed = 0;
+    for p in all.iter().skip(keep) {
+        std::fs::remove_file(p)
+            .with_context(|| format!("pruning old checkpoint {}", p.display()))?;
+        removed += 1;
+    }
+    Ok(removed)
 }
 
 #[cfg(test)]
@@ -118,39 +623,253 @@ mod tests {
         .info()
     }
 
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            strategy: "bk".into(),
+            clipping_style: "all-layer".into(),
+            clip_fn: "abadi".into(),
+            clip: 1.0,
+            sigma: 0.7310585786300049,
+            seed: 42,
+            logical_batch: 32,
+        }
+    }
+
+    fn tensors_for(info: &ModelInfo) -> Vec<Vec<f32>> {
+        info.state_tensor_lens()
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (0..n).map(|j| (i * 1000 + j) as f32 * 0.25 - 3.0).collect())
+            .collect()
+    }
+
+    fn meta<'a>(step: usize, info: &'a ModelInfo, f: &'a Fingerprint) -> SaveMeta<'a> {
+        SaveMeta {
+            step,
+            info,
+            fingerprint: f,
+            cursors: Cursors {
+                noise_step: step as u64,
+                data_cursor: step as u64,
+                accountant_steps: step as u64,
+            },
+            keep_last: 0,
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fastdp_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// The fault hook is a process-global one-shot, and the test harness
+    /// runs tests concurrently — serialize every test that calls save()
+    /// so an armed fault is consumed by the save it was armed for.
+    fn lock_faults() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
-    fn roundtrip() {
-        let dir = std::env::temp_dir().join(format!("fastdp_ckpt_{}", std::process::id()));
+    fn roundtrip_v2() {
+        let _g = lock_faults();
+        let dir = tmpdir("rt2");
         let info = fake_info();
-        let tensors = vec![vec![1.0f32, -2.5, 3.25, 0.0], vec![9.0f32; 7]];
-        save(&dir, 42, &info, &tensors).unwrap();
-        save(&dir, 7, &info, &tensors).unwrap();
+        let f = fp();
+        let tensors = tensors_for(&info);
+        save(&dir, &meta(42, &info, &f), &tensors).unwrap();
+        save(&dir, &meta(7, &info, &f), &tensors).unwrap();
         let latest_path = latest(&dir).unwrap();
         assert!(latest_path.to_str().unwrap().contains("00000042"));
-        let (step, loaded) = load(&latest_path, &info).unwrap();
-        assert_eq!(step, 42);
-        assert_eq!(loaded, tensors);
+        let ck = read(&latest_path).unwrap();
+        assert_eq!(ck.version, 2);
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.tensors, tensors);
+        assert_eq!(ck.fingerprint.as_ref().unwrap(), &f);
+        assert_eq!(
+            ck.cursors.unwrap(),
+            Cursors { noise_step: 42, data_cursor: 42, accountant_steps: 42 }
+        );
+        ck.validate(&info).unwrap();
+        // fingerprint round-trips bitwise (sigma is an awkward decimal)
+        ck.fingerprint.unwrap().check(&f).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn rejects_wrong_model() {
-        let dir = std::env::temp_dir().join(format!("fastdp_ckpt2_{}", std::process::id()));
+    fn v1_files_still_load() {
+        let dir = tmpdir("v1");
         let info = fake_info();
-        save(&dir, 1, &info, &[vec![0.0]]).unwrap();
+        let tensors = tensors_for(&info);
+        save_v1(&dir, 9, &info, &tensors).unwrap();
+        let ck = read(&latest(&dir).unwrap()).unwrap();
+        assert_eq!(ck.version, 1);
+        assert_eq!(ck.step, 9);
+        assert_eq!(ck.tensors, tensors);
+        assert!(ck.fingerprint.is_none());
+        assert!(ck.cursors.is_none());
+        ck.validate(&info).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_model_and_lengths() {
+        let _g = lock_faults();
+        let dir = tmpdir("wrong");
+        let info = fake_info();
+        let f = fp();
+        save(&dir, &meta(1, &info, &f), &tensors_for(&info)).unwrap();
+        let p = latest(&dir).unwrap();
+        let ck = read(&p).unwrap();
         let mut other = info.clone();
         other.name = "different".into();
-        assert!(load(&latest(&dir).unwrap(), &other).is_err());
+        assert!(ck.validate(&other).is_err());
+        // tensor-length drift against param_shapes is rejected precisely
+        let mut bad = ck.clone();
+        bad.tensors[0].push(0.0);
+        let err = bad.validate(&info).unwrap_err().to_string();
+        assert!(err.contains("elements, expected"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn rejects_corrupt_magic() {
-        let dir = std::env::temp_dir().join(format!("fastdp_ckpt3_{}", std::process::id()));
+    fn rejects_corrupt_magic_and_header_len() {
+        let dir = tmpdir("magic");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("ckpt_00000001.fdp");
-        std::fs::write(&p, b"NOTMAGIC????").unwrap();
-        assert!(load(&p, &fake_info()).is_err());
+        std::fs::write(&p, b"NOTMAGIC????????????").unwrap();
+        assert!(read(&p).is_err());
+        // absurd header length (the old unwrap_or(0) class of bug)
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&p, bytes).unwrap();
+        let err = read(&p).unwrap_err().to_string();
+        assert!(err.contains("malformed header length"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_payload_bitflip_and_truncation() {
+        let _g = lock_faults();
+        let dir = tmpdir("flip");
+        let info = fake_info();
+        let f = fp();
+        save(&dir, &meta(1, &info, &f), &tensors_for(&info)).unwrap();
+        let p = latest(&dir).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        // flip one payload bit
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 3] ^= 0x01;
+        std::fs::write(&p, &bad).unwrap();
+        let err = read(&p).unwrap_err().to_string();
+        assert!(err.contains("payload CRC mismatch"), "{err}");
+        // truncate
+        std::fs::write(&p, &good[..n - 5]).unwrap();
+        let err = read(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "{err}");
+        // header bit-flip is caught by the header CRC
+        let mut badh = good.clone();
+        badh[20] ^= 0x04;
+        std::fs::write(&p, &badh).unwrap();
+        assert!(read(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_actionable() {
+        let a = fp();
+        let mut b = fp();
+        b.clip = 2.0;
+        b.strategy = "opacus".into();
+        let err = a.check(&b).unwrap_err().to_string();
+        assert!(err.contains("clip R"), "{err}");
+        assert!(err.contains("strategy"), "{err}");
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        a.check(&fp()).unwrap();
+    }
+
+    #[test]
+    fn refuses_nonfinite_tensors() {
+        let _g = lock_faults();
+        let dir = tmpdir("nan");
+        let info = fake_info();
+        let f = fp();
+        let mut tensors = tensors_for(&info);
+        tensors[0][0] = f32::NAN;
+        let err = save(&dir, &meta(3, &info, &f), &tensors).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "{err}");
+        assert!(latest(&dir).is_none(), "no file may be published");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_and_tmp_sweep() {
+        let _g = lock_faults();
+        let dir = tmpdir("keep");
+        let info = fake_info();
+        let f = fp();
+        let tensors = tensors_for(&info);
+        for step in 1..=5 {
+            let mut m = meta(step, &info, &f);
+            m.keep_last = 2;
+            save(&dir, &m, &tensors).unwrap();
+        }
+        let kept = list_desc(&dir);
+        assert_eq!(kept.len(), 2);
+        assert!(kept[0].to_str().unwrap().contains("00000005"));
+        assert!(kept[1].to_str().unwrap().contains("00000004"));
+        // stale tmp from a crashed save: swept, and never listed
+        std::fs::write(dir.join(".ckpt_00000009.tmp"), b"partial").unwrap();
+        assert_eq!(list_desc(&dir).len(), 2);
+        assert_eq!(sweep_stale_tmps(&dir), 1);
+        assert!(!dir.join(".ckpt_00000009.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_injection_kills_leave_no_published_file() {
+        let _g = lock_faults();
+        let dir = tmpdir("fault");
+        let info = fake_info();
+        let f = fp();
+        let tensors = tensors_for(&info);
+
+        fault::arm(fault::Fault::KillMidWrite);
+        let err = save(&dir, &meta(1, &info, &f), &tensors).unwrap_err().to_string();
+        assert!(err.contains(fault::INJECTED), "{err}");
+        assert!(latest(&dir).is_none());
+        assert_eq!(sweep_stale_tmps(&dir), 1, "partial tmp left behind");
+
+        fault::arm(fault::Fault::KillBeforeRename);
+        let err = save(&dir, &meta(1, &info, &f), &tensors).unwrap_err().to_string();
+        assert!(err.contains(fault::INJECTED), "{err}");
+        assert!(latest(&dir).is_none());
+        assert_eq!(sweep_stale_tmps(&dir), 1, "complete tmp left behind");
+
+        // one-shot: the next save is clean
+        save(&dir, &meta(2, &info, &f), &tensors).unwrap();
+        assert!(latest(&dir).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_injection_corruption_is_caught_on_read() {
+        let _g = lock_faults();
+        let dir = tmpdir("faultc");
+        let info = fake_info();
+        let f = fp();
+        let tensors = tensors_for(&info);
+        fault::arm(fault::Fault::Truncate(6));
+        save(&dir, &meta(1, &info, &f), &tensors).unwrap();
+        assert!(read(&latest(&dir).unwrap()).is_err());
+
+        fault::arm(fault::Fault::BitFlip(1_000_000));
+        save(&dir, &meta(2, &info, &f), &tensors).unwrap();
+        assert!(read(&latest(&dir).unwrap()).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -23,7 +23,7 @@ use crate::error::{Context, Result};
 use crate::privacy::{calibrate_sigma, RdpAccountant};
 use crate::runtime::{create_backend, Backend, BatchX, ModelInfo, StepHyper, StepOut};
 use crate::util::stats::{peak_rss_bytes, Summary};
-use crate::{bail, data, info};
+use crate::{bail, data, info, warn_};
 use std::time::Instant;
 
 /// One logged training step.
@@ -105,6 +105,38 @@ impl BatchSource {
             }
         }
     }
+
+    /// Eval batch from the disjoint eval stream — never advances the
+    /// training cursor, so evaluation cannot perturb which training
+    /// batches a (resumed) run sees.
+    fn sample_eval(&mut self, b: usize, t: usize) -> (BatchX, Vec<i32>) {
+        match self {
+            BatchSource::Tokens(c) => {
+                let (xs, ys) = c.sample_eval_batch(b);
+                (BatchX::I32(xs), ys)
+            }
+            BatchSource::Vectors(ds) => {
+                let (xs, ys) = ds.sample_eval_batch(b * t);
+                (BatchX::F32(xs), ys)
+            }
+        }
+    }
+
+    /// Training draws consumed so far (persisted in checkpoints).
+    fn cursor(&self) -> u64 {
+        match self {
+            BatchSource::Tokens(c) => c.cursor(),
+            BatchSource::Vectors(ds) => ds.cursor(),
+        }
+    }
+
+    /// Position the training stream (checkpoint resume).
+    fn skip_to(&mut self, cursor: u64) {
+        match self {
+            BatchSource::Tokens(c) => c.skip_to(cursor),
+            BatchSource::Vectors(ds) => ds.skip_to(cursor),
+        }
+    }
 }
 
 pub struct Trainer {
@@ -183,35 +215,112 @@ impl Trainer {
         self.cfg.strategy != "nondp"
     }
 
-    /// Initialize parameters via the backend (or resume a checkpoint).
+    /// Micro-batches per logical step.
+    fn accum(&self) -> usize {
+        self.logical_batch() / self.info.batch
+    }
+
+    /// The run's config/privacy identity, persisted in every checkpoint
+    /// header and compared on resume.
+    fn fingerprint(&self) -> checkpoint::Fingerprint {
+        checkpoint::Fingerprint {
+            strategy: self.cfg.strategy.clone(),
+            clipping_style: self.cfg.clipping_style.clone(),
+            clip_fn: self.info.clip_fn.clone(),
+            clip: self.cfg.clip,
+            sigma: self.sigma,
+            seed: self.cfg.seed,
+            logical_batch: self.logical_batch(),
+        }
+    }
+
+    /// Initialize parameters via the backend, or resume from the newest
+    /// usable checkpoint whenever `checkpoint_dir` holds one (resume is
+    /// *not* gated on `checkpoint_every`: a dir with a checkpoint and
+    /// periodic saving off still resumes).
+    ///
+    /// Corrupt files (bad magic/CRC, malformed header, truncation) are
+    /// logged and skipped — the scan falls back to the next-older
+    /// checkpoint. Semantic mismatches (different model, fingerprint
+    /// drift) are hard errors: the directory belongs to a different run
+    /// and silently ignoring it would change privacy semantics.
     pub fn init(&mut self) -> Result<()> {
-        if let (Some(dir), true) = (&self.cfg.checkpoint_dir, self.cfg.checkpoint_every > 0) {
-            if let Some(path) = checkpoint::latest(dir) {
-                info!("resuming from checkpoint {}", path.display());
-                let (step, tensors) = checkpoint::load(&path, &self.info)?;
-                self.step_no = step;
-                // Replay the privacy ledger and burn the consumed noise
-                // draws: the pre-crash steps spent budget and used the
-                // deterministic streams for steps 1..=step, so a resumed
-                // run must account for them and never redraw them.
-                if let Some(acc) = &mut self.accountant {
-                    for _ in 0..step {
-                        acc.step();
-                    }
-                }
-                self.noise.skip_to(step as u64);
-                self.backend.load_state(tensors)?;
-                return Ok(());
+        if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+            let swept = checkpoint::sweep_stale_tmps(&dir);
+            if swept > 0 {
+                info!("swept {swept} stale .tmp file(s) from {}", dir.display());
             }
+            for path in checkpoint::list_desc(&dir) {
+                let ck = match checkpoint::read(&path) {
+                    Ok(ck) => ck,
+                    Err(e) => {
+                        warn_!("ignoring corrupt checkpoint: {e}");
+                        continue;
+                    }
+                };
+                ck.validate(&self.info)
+                    .with_context(|| format!("cannot resume from {}", path.display()))?;
+                if let Some(fp) = &ck.fingerprint {
+                    fp.check(&self.fingerprint())
+                        .with_context(|| format!("cannot resume from {}", path.display()))?;
+                }
+                return self.resume_from(ck, &path);
+            }
+            if self.cfg.resume {
+                bail!(
+                    "--resume: no usable checkpoint found in {}",
+                    dir.display()
+                );
+            }
+        } else if self.cfg.resume {
+            bail!("--resume requires --checkpoint-dir");
         }
         self.backend.init(self.cfg.seed)
     }
 
-    /// Evaluate mean loss on `batches` fresh batches.
+    /// Restore backend state and every stream cursor from a validated
+    /// checkpoint. After this, the run continues exactly where the
+    /// killed run left off: same upcoming noise draws, same upcoming
+    /// data batches, same privacy ledger.
+    fn resume_from(&mut self, ck: checkpoint::Checkpoint, path: &std::path::Path) -> Result<()> {
+        // v1 files predate cursor persistence: derive positions from the
+        // step counter (one noise draw set + one accountant step per
+        // logical step; one data draw per micro-batch).
+        let cursors = ck.cursors.unwrap_or(checkpoint::Cursors {
+            noise_step: ck.step as u64,
+            data_cursor: (ck.step * self.accum()) as u64,
+            accountant_steps: ck.step as u64,
+        });
+        info!(
+            "resuming from checkpoint {} (v{}, step {})",
+            path.display(),
+            ck.version,
+            ck.step
+        );
+        self.step_no = ck.step;
+        if let Some(acc) = &mut self.accountant {
+            // Replay the ledger with sequential step() calls: n
+            // sequential compositions are bitwise-identical to the
+            // original accumulation (advance(n) computes n*x, which is
+            // not, in floating point).
+            for _ in 0..cursors.accountant_steps {
+                acc.step();
+            }
+        }
+        // Burn the consumed stream positions: the pre-crash steps used
+        // draws 1..=k, and a resumed run must never replay them —
+        // reusing a spent noise draw would correlate fresh noise with
+        // already-released parameters.
+        self.noise.skip_to(cursors.noise_step);
+        self.source.skip_to(cursors.data_cursor);
+        self.backend.load_state(ck.tensors)
+    }
+
+    /// Evaluate mean loss on `batches` batches from the eval stream.
     pub fn eval(&mut self, batches: usize) -> Result<f32> {
         let mut total = 0.0f32;
         for _ in 0..batches.max(1) {
-            let (x, y) = self.source.sample(self.info.batch, self.info.seq);
+            let (x, y) = self.source.sample_eval(self.info.batch, self.info.seq);
             total += self.backend.eval_loss(&x, &y)?;
         }
         Ok(total / batches.max(1) as f32)
@@ -228,16 +337,36 @@ impl Trainer {
     }
 
     /// One *logical* training step (possibly several physical batches).
+    ///
+    /// Under `on_nonfinite=abort` (default) the fused fast path is used
+    /// and a non-finite loss is a hard error. `skip` / `rollback` run
+    /// the two-phase guarded path: gradients are checked before the
+    /// apply and parameters after it, so a poisoned tensor never
+    /// survives the step — but the noise draw and accountant step are
+    /// burned regardless (the data was touched; the budget is spent).
     pub fn train_step(&mut self) -> Result<StepLog> {
         let b_phys = self.info.batch;
         let logical = self.logical_batch();
         let accum = logical / b_phys;
         let t0 = Instant::now();
 
-        let out = if accum == 1 {
-            self.fused_step(logical)?
+        let out = if self.cfg.on_nonfinite == "abort" {
+            let out = if accum == 1 {
+                self.fused_step(logical)?
+            } else {
+                self.accumulated_step(accum, logical)?
+            };
+            if !out.loss.is_finite() {
+                bail!(
+                    "non-finite loss {} at step {} (on_nonfinite=abort; use \
+                     --on-nonfinite skip|rollback to continue past bad steps)",
+                    out.loss,
+                    self.step_no + 1
+                );
+            }
+            out
         } else {
-            self.accumulated_step(accum, logical)?
+            self.guarded_step(accum, logical)?
         };
 
         if let Some(acc) = &mut self.accountant {
@@ -273,11 +402,10 @@ impl Trainer {
         self.backend.step(&x, &y, &noise, &h)
     }
 
-    /// Gradient accumulation: k clipped-grad micro-steps summed
-    /// host-side, then one apply with a single noise draw (DP-correct:
-    /// per-sample clipping is per micro-batch, noise is per logical
-    /// batch).
-    fn accumulated_step(&mut self, accum: usize, logical: usize) -> Result<StepOut> {
+    /// Accumulate per-sample-clipped gradient sums over `accum`
+    /// micro-batches (no update). Returns the summed grads plus the
+    /// step metrics averaged over the micro-batches.
+    fn accumulate_grads(&mut self, accum: usize) -> Result<(Vec<Vec<f32>>, StepOut)> {
         let mut acc_grads: Vec<Vec<f32>> = Vec::new();
         let mut loss_sum = 0.0f32;
         let mut clip_sum = 0.0f32;
@@ -304,6 +432,23 @@ impl Trainer {
                 }
             }
         }
+        for g in group_sum.iter_mut() {
+            *g /= accum as f32;
+        }
+        let out = StepOut {
+            loss: loss_sum / accum as f32,
+            mean_clip: clip_sum / accum as f32,
+            group_clip: group_sum,
+        };
+        Ok((acc_grads, out))
+    }
+
+    /// Gradient accumulation: k clipped-grad micro-steps summed
+    /// host-side, then one apply with a single noise draw (DP-correct:
+    /// per-sample clipping is per micro-batch, noise is per logical
+    /// batch).
+    fn accumulated_step(&mut self, accum: usize, logical: usize) -> Result<StepOut> {
+        let (acc_grads, out) = self.accumulate_grads(accum)?;
         let noise = if self.wants_noise() {
             self.noise.tensors(&self.info)
         } else {
@@ -311,14 +456,108 @@ impl Trainer {
         };
         let h = self.hyper(logical);
         self.backend.apply_update(&acc_grads, &noise, &h)?;
-        for g in group_sum.iter_mut() {
-            *g /= accum as f32;
+        Ok(out)
+    }
+
+    /// Two-phase guarded step for `on_nonfinite=skip|rollback`: compute
+    /// clipped grads, check them and the loss, snapshot, apply, then
+    /// scan the updated parameters. The same kernels run as on the
+    /// fused path (clipped sums + apply into zeroed buffers), so the
+    /// guard changes robustness, not arithmetic.
+    fn guarded_step(&mut self, accum: usize, logical: usize) -> Result<StepOut> {
+        let (grads, out) = self.accumulate_grads(accum)?;
+        let noise = if self.wants_noise() {
+            self.noise.tensors(&self.info)
+        } else {
+            Vec::new()
+        };
+        let h = self.hyper(logical);
+        let grads_poisoned = !out.loss.is_finite()
+            || grads.iter().any(|g| g.iter().any(|x| !x.is_finite()));
+        let mut update_poisoned = false;
+        let mut snapshot = None;
+        if !grads_poisoned {
+            snapshot = Some(self.backend.state()?);
+            self.backend.apply_update(&grads, &noise, &h)?;
+            update_poisoned = self
+                .backend
+                .state()?
+                .iter()
+                .any(|t| t.iter().any(|x| !x.is_finite()));
         }
-        Ok(StepOut {
-            loss: loss_sum / accum as f32,
-            mean_clip: clip_sum / accum as f32,
-            group_clip: group_sum,
-        })
+        if grads_poisoned || update_poisoned {
+            match self.cfg.on_nonfinite.as_str() {
+                // Skip: discard the poisoned update. If nothing was
+                // applied (grads caught first) the parameters are
+                // already clean; otherwise restore the pre-apply
+                // snapshot.
+                "skip" => {
+                    if update_poisoned {
+                        self.backend.load_state(snapshot.unwrap())?;
+                    }
+                    warn_!(
+                        "step {}: non-finite {} — update skipped; the noise draw and \
+                         accountant step are burned (budget is spent)",
+                        self.step_no + 1,
+                        if grads_poisoned { "loss/gradients" } else { "parameter update" }
+                    );
+                }
+                // Rollback: restore the last good checkpoint's params +
+                // optimizer state. Only needed when the apply itself
+                // overflowed; a pre-apply catch leaves params clean.
+                _ => {
+                    if update_poisoned {
+                        self.rollback_to_checkpoint()?;
+                    } else {
+                        warn_!(
+                            "step {}: non-finite loss/gradients caught before the apply — \
+                             update dropped (parameters untouched); the noise draw and \
+                             accountant step are burned",
+                            self.step_no + 1
+                        );
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Restore parameters (+ optimizer state) from the newest usable
+    /// checkpoint. Streams and the privacy ledger are *not* rewound:
+    /// the consumed draws and spent budget stay consumed and spent.
+    fn rollback_to_checkpoint(&mut self) -> Result<()> {
+        let dir = self
+            .cfg
+            .checkpoint_dir
+            .clone()
+            .context("on_nonfinite=rollback requires checkpoint_dir")?;
+        for path in checkpoint::list_desc(&dir) {
+            let ck = match checkpoint::read(&path) {
+                Ok(ck) => ck,
+                Err(e) => {
+                    warn_!("rollback: ignoring corrupt checkpoint: {e}");
+                    continue;
+                }
+            };
+            ck.validate(&self.info)?;
+            if let Some(fp) = &ck.fingerprint {
+                fp.check(&self.fingerprint())?;
+            }
+            warn_!(
+                "step {}: non-finite parameter update — rolled back to checkpoint {} \
+                 (step {}); streams and the privacy ledger continue forward",
+                self.step_no + 1,
+                path.display(),
+                ck.step
+            );
+            return self.backend.load_state(ck.tensors);
+        }
+        bail!(
+            "on_nonfinite=rollback: non-finite update at step {} but no usable checkpoint \
+             in {}",
+            self.step_no + 1,
+            dir.display()
+        )
     }
 
     pub fn epsilon(&self) -> f64 {
@@ -330,7 +569,25 @@ impl Trainer {
 
     pub fn save_checkpoint(&self, dir: &std::path::Path) -> Result<()> {
         let tensors = self.backend.state()?;
-        checkpoint::save(dir, self.step_no, &self.info, &tensors).context("saving checkpoint")
+        let fp = self.fingerprint();
+        let meta = checkpoint::SaveMeta {
+            step: self.step_no,
+            info: &self.info,
+            fingerprint: &fp,
+            cursors: checkpoint::Cursors {
+                noise_step: self.noise.step(),
+                data_cursor: self.source.cursor(),
+                accountant_steps: self
+                    .accountant
+                    .as_ref()
+                    .map(|a| a.steps)
+                    .unwrap_or(self.step_no as u64),
+            },
+            keep_last: self.cfg.checkpoint_keep_last,
+        };
+        checkpoint::save(dir, &meta, &tensors)
+            .context("saving checkpoint")
+            .map(|_| ())
     }
 
     /// Full training run per the config; logs every `log_every` steps.
@@ -358,19 +615,23 @@ impl Trainer {
         let logical = self.logical_batch();
         let run_t0 = Instant::now();
         let mut last_loss = initial_loss;
-        for s in 0..self.cfg.steps {
+        // `steps` is the *total* step target: a resumed run picks up at
+        // the checkpointed step_no and stops at the same total as the
+        // uninterrupted run would.
+        let start_step = self.step_no;
+        while self.step_no < self.cfg.steps {
             if self.cfg.privacy.strict_budget
                 && self.accountant.is_some()
                 && self.epsilon() >= self.cfg.privacy.target_epsilon
                 && self.cfg.privacy.sigma > 0.0
             {
-                info!("privacy budget exhausted at step {s}; stopping");
+                info!("privacy budget exhausted at step {}; stopping", self.step_no);
                 break;
             }
             let log = self.train_step()?;
             times.push(log.step_secs);
             last_loss = log.loss;
-            if self.cfg.log_every > 0 && (s + 1) % self.cfg.log_every == 0 {
+            if self.cfg.log_every > 0 && self.step_no % self.cfg.log_every == 0 {
                 info!(
                     "step {:>5} loss {:.4} clip {:.3} eps {:.3} ({:.0} samples/s)",
                     log.step,
@@ -386,7 +647,7 @@ impl Trainer {
                 }
                 report.logs.push(log);
             }
-            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+            if self.cfg.eval_every > 0 && self.step_no % self.cfg.eval_every == 0 {
                 let ev = self.eval(2)?;
                 info!("eval loss {ev:.4}");
             }
@@ -396,7 +657,8 @@ impl Trainer {
         report.final_loss = last_loss;
         report.final_epsilon = self.epsilon();
         report.mean_step_secs = times.mean();
-        report.throughput_samples_per_sec = (self.step_no * logical) as f64 / elapsed.max(1e-9);
+        report.throughput_samples_per_sec =
+            ((self.step_no - start_step) * logical) as f64 / elapsed.max(1e-9);
         report.compile_secs = self.backend.compile_secs();
         report.peak_rss_bytes = peak_rss_bytes();
         Ok(report)

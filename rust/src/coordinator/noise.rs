@@ -23,6 +23,11 @@ impl NoiseSource {
         }
     }
 
+    /// Draw sets consumed so far (persisted in checkpoints).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
     /// Fast-forward the step counter (checkpoint resume): the draws for
     /// steps 1..=step were already consumed by the pre-crash run and
     /// must never be replayed — reusing them would correlate the

@@ -16,6 +16,8 @@
 //!                 (`--gcache-md` emits the fused-vs-legacy g-cache
 //!                 markdown rows for the CI step summary)
 //!   calibrate   — solve sigma for a (epsilon, delta, q, steps) target
+//!   ckpt        — inspect / list checkpoint files: format version,
+//!                 integrity (CRC), privacy fingerprint, stream cursors
 //!   list        — list native models (and PJRT artifacts if present)
 //!   version
 
@@ -38,16 +40,21 @@ fn main() {
         Some("bench-check") => fastdp::bench::run_bench_check(&args),
         Some("complexity") => cmd_complexity(&args),
         Some("calibrate") => cmd_calibrate(&args),
+        Some("ckpt") => cmd_ckpt(&args),
         Some("list") => cmd_list(&args),
         Some("version") | None => {
             println!("fastdp 0.2.0 — Book-Keeping DP optimization (Bu et al., ICML 2023)");
             println!(
-                "usage: fastdp <train|bench|bench-check|complexity|calibrate|list|version> [--opts]"
+                "usage: fastdp <train|bench|bench-check|complexity|calibrate|ckpt|list|version> \
+                 [--opts]"
             );
             println!(
                 "       train --model <m> --strategy <s> \
-                 [--clipping-style all-layer|layer-wise|group-wise[:k]]"
+                 [--clipping-style all-layer|layer-wise|group-wise[:k]] \
+                 [--checkpoint-dir <d> --checkpoint-every <k> --keep-last <n>] \
+                 [--on-nonfinite abort|skip|rollback] [--resume]"
             );
+            println!("       ckpt inspect <checkpoint.fdp|dir> | ckpt list <dir>");
             println!("       bench [--model <m>] [--strategy a,b,...] [--styles a,b,...] [--json]");
             println!(
                 "       bench-check [--current a.json,b.json] [--baseline ci/bench_baseline.json] \
@@ -269,6 +276,96 @@ fn cmd_complexity(args: &Args) -> i32 {
     }
     print!("{}", t.render());
     0
+}
+
+fn cmd_ckpt(args: &Args) -> i32 {
+    use fastdp::coordinator::checkpoint;
+    let action = args.positional.first().map(String::as_str).unwrap_or("");
+    let Some(target) = args.positional.get(1) else {
+        eprintln!("usage: fastdp ckpt <inspect|list> <checkpoint.fdp|dir>");
+        return 2;
+    };
+    let path = std::path::PathBuf::from(target);
+    match action {
+        "list" => {
+            let files = checkpoint::list_desc(&path);
+            if files.is_empty() {
+                println!("no checkpoints in {}", path.display());
+                return 0;
+            }
+            for p in files {
+                match checkpoint::read(&p) {
+                    Ok(ck) => println!(
+                        "{}  v{} step {:>6} model {} ({} tensors, {} floats)",
+                        p.display(),
+                        ck.version,
+                        ck.step,
+                        ck.model,
+                        ck.tensors.len(),
+                        fmt_count(ck.total_floats() as f64),
+                    ),
+                    Err(e) => println!("{}  CORRUPT: {e}", p.display()),
+                }
+            }
+            0
+        }
+        "inspect" => {
+            let file = if path.is_dir() {
+                match checkpoint::latest(&path) {
+                    Some(p) => p,
+                    None => {
+                        eprintln!("no checkpoints in {}", path.display());
+                        return 1;
+                    }
+                }
+            } else {
+                path
+            };
+            match checkpoint::read(&file) {
+                Ok(ck) => {
+                    println!("checkpoint : {}", file.display());
+                    println!("format     : v{}", ck.version);
+                    println!("model      : {} (optimizer {})", ck.model, ck.optimizer);
+                    println!("step       : {}", ck.step);
+                    println!(
+                        "tensors    : {} ({} floats, CRC OK)",
+                        ck.tensors.len(),
+                        fmt_count(ck.total_floats() as f64),
+                    );
+                    match &ck.fingerprint {
+                        Some(fp) => println!(
+                            "fingerprint: strategy={} clipping={}/{} clip={} sigma={} \
+                             seed={} logical_batch={}",
+                            fp.strategy,
+                            fp.clipping_style,
+                            fp.clip_fn,
+                            fp.clip,
+                            fp.sigma,
+                            fp.seed,
+                            fp.logical_batch,
+                        ),
+                        None => println!("fingerprint: none (v1 checkpoint)"),
+                    }
+                    match ck.cursors {
+                        Some(c) => println!(
+                            "cursors    : noise_step={} data_cursor={} accountant_steps={}",
+                            c.noise_step, c.data_cursor, c.accountant_steps,
+                        ),
+                        None => println!("cursors    : none (v1 — derived from step on resume)"),
+                    }
+                    0
+                }
+                Err(e) => {
+                    eprintln!("corrupt checkpoint: {e}");
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown ckpt action '{other}' (expected inspect or list)");
+            2
+        }
+    }
 }
 
 fn cmd_calibrate(args: &Args) -> i32 {

@@ -69,6 +69,25 @@ impl ModelInfo {
             self.param_names.len()
         }
     }
+
+    /// Expected element count of each tensor in a full state snapshot,
+    /// in snapshot order: params in `param_names` order, then (Adam
+    /// only) the m moments, then the v moments — the layout `state()` /
+    /// `load_state()` and the checkpoint format share. Checkpoint
+    /// validation compares header lengths against this.
+    pub fn state_tensor_lens(&self) -> Vec<usize> {
+        let param_lens: Vec<usize> = self
+            .param_names
+            .iter()
+            .map(|n| self.param_shapes[n].iter().product())
+            .collect();
+        let mut out = param_lens.clone();
+        if self.is_adam() {
+            out.extend(param_lens.iter().copied()); // m
+            out.extend(param_lens); // v
+        }
+        out
+    }
 }
 
 /// Input features for one physical batch (labels travel separately).

@@ -4,6 +4,7 @@
 //! functions for the accountant, timing/summary stats, table rendering,
 //! and a tiny leveled logger.
 
+pub mod crc;
 pub mod log;
 pub mod math;
 pub mod rng;

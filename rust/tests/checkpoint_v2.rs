@@ -1,0 +1,203 @@
+//! Checkpoint format v2 integration: v1 files still resume (with
+//! derived cursors), semantic mismatches are refused with actionable
+//! errors, and resume restores the *full* optimizer state — Adam
+//! moments included — bitwise, on both plain and weight-tied models.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use fastdp::config::TrainConfig;
+use fastdp::coordinator::checkpoint;
+use fastdp::coordinator::Trainer;
+use std::path::PathBuf;
+
+fn cfg_for(model: &str, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model.into();
+    cfg.strategy = "bk".into();
+    cfg.steps = steps;
+    cfg.lr = 0.5;
+    cfg.clip = 1.0;
+    cfg.log_every = 0;
+    cfg.privacy.sigma = 0.8;
+    cfg.privacy.dataset_size = 50_000;
+    cfg.privacy.strict_budget = false;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastdp_ckv2_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn assert_states_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count differs");
+    for (i, (ta, tb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "{what}: tensor {i} length differs");
+        for (j, (x, y)) in ta.iter().zip(tb.iter()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{what}: tensor {i}[{j}] differs bitwise: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn v1_checkpoints_still_resume_with_derived_cursors() {
+    let dir = tmpdir("v1compat");
+
+    // A run that saved a v1 checkpoint at step 2 and kept going to 3.
+    let mut a = Trainer::new(cfg_for("mlp_e2e", 3)).unwrap();
+    a.init().unwrap();
+    a.train_step().unwrap();
+    a.train_step().unwrap();
+    checkpoint::save_v1(&dir, 2, &a.info, &a.backend.state().unwrap()).unwrap();
+    a.train_step().unwrap();
+    let a_state = a.backend.state().unwrap();
+    let a_eps = a.epsilon();
+
+    // v1 headers carry no cursors: resume derives them from the step
+    // counter (one noise draw + one accountant step per logical step,
+    // one data draw per micro-batch) and must still land bitwise.
+    let mut cfg = cfg_for("mlp_e2e", 3);
+    cfg.checkpoint_dir = Some(dir.clone());
+    let mut b = Trainer::new(cfg).unwrap();
+    let report = b.run().unwrap();
+    assert_eq!(report.steps, 3);
+    assert_states_equal(&a_state, &b.backend.state().unwrap(), "v1 resume parity");
+    assert!(
+        a_eps.to_bits() == b.epsilon().to_bits(),
+        "epsilon diverged on v1 resume: {a_eps} vs {}",
+        b.epsilon()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fingerprint_drift_is_refused_with_an_actionable_error() {
+    let dir = tmpdir("fpdrift");
+    let mut cfg = cfg_for("mlp_e2e", 2);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 2;
+    Trainer::new(cfg.clone()).unwrap().run().unwrap();
+
+    // Same dir, different clipping threshold: budget already spent under
+    // R=1.0 must not silently continue under R=2.0.
+    cfg.clip = 2.0;
+    let mut t = Trainer::new(cfg).unwrap();
+    let err = t.init().unwrap_err().to_string();
+    assert!(err.contains("fingerprint mismatch"), "{err}");
+    assert!(err.contains("clip R"), "{err}");
+    assert!(err.contains("cannot resume from"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_for_a_different_model_is_refused() {
+    let dir = tmpdir("wrongmodel");
+    let mut cfg = cfg_for("mlp_e2e", 2);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 2;
+    Trainer::new(cfg).unwrap().run().unwrap();
+
+    let mut other = cfg_for("mlp_wide", 2);
+    other.checkpoint_dir = Some(dir.clone());
+    let mut t = Trainer::new(other).unwrap();
+    let err = t.init().unwrap_err().to_string();
+    assert!(err.contains("checkpoint is for model"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn adam_moments_survive_resume_bitwise() {
+    let dir = tmpdir("adam");
+    let mut cfg = cfg_for("seq_e2e", 4);
+    cfg.lr = 1e-3; // Adam model
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 2;
+    let mut a = Trainer::new(cfg.clone()).unwrap();
+    a.init().unwrap();
+    a.train_step().unwrap();
+    a.train_step().unwrap(); // checkpoint lands here
+
+    // Full state = params + m + v; after two steps the moments are live.
+    let full = a.backend.state().unwrap();
+    let n = a.info.param_names.len();
+    assert_eq!(full.len(), 3 * n, "Adam state must be params + m + v");
+    let m_live = full[n..2 * n].iter().any(|t| t.iter().any(|x| *x != 0.0));
+    assert!(m_live, "first moments should be nonzero after two steps");
+
+    // Resume must restore the moments bitwise, not re-zero them.
+    let mut b = Trainer::new(cfg).unwrap();
+    b.init().unwrap();
+    assert_states_equal(&full, &b.backend.state().unwrap(), "Adam resume");
+
+    // And the continued trajectories stay identical.
+    for _ in 0..2 {
+        a.train_step().unwrap();
+        b.train_step().unwrap();
+    }
+    assert_states_equal(
+        &a.backend.state().unwrap(),
+        &b.backend.state().unwrap(),
+        "Adam continuation parity",
+    );
+    assert!(a.epsilon().to_bits() == b.epsilon().to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tied_gpt_round_trips_through_a_checkpoint() {
+    let dir = tmpdir("tied");
+    let mut cfg = cfg_for("gpt_nano_tied_e2e", 2);
+    cfg.lr = 1e-2; // Adam
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 1;
+    let mut a = Trainer::new(cfg.clone()).unwrap();
+    a.init().unwrap();
+    a.train_step().unwrap(); // checkpoint at 1
+
+    let mut b = Trainer::new(cfg).unwrap();
+    b.init().unwrap();
+    assert_states_equal(
+        &a.backend.state().unwrap(),
+        &b.backend.state().unwrap(),
+        "tied resume",
+    );
+
+    // One more step each: the shared embedding/head tensor must evolve
+    // identically through the restored optimizer state.
+    a.train_step().unwrap();
+    b.train_step().unwrap();
+    assert_states_equal(
+        &a.backend.state().unwrap(),
+        &b.backend.state().unwrap(),
+        "tied continuation parity",
+    );
+    assert!(a.epsilon().to_bits() == b.epsilon().to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn inspecting_a_v2_file_reports_integrity_fields() {
+    let dir = tmpdir("inspect");
+    let mut cfg = cfg_for("mlp_e2e", 2);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 2;
+    Trainer::new(cfg).unwrap().run().unwrap();
+
+    let path = checkpoint::latest(&dir).expect("a checkpoint was published");
+    let ck = checkpoint::read(&path).unwrap();
+    assert_eq!(ck.version, 2);
+    assert_eq!(ck.model, "mlp_e2e");
+    assert_eq!(ck.step, 2);
+    let fp = ck.fingerprint.expect("v2 carries a fingerprint");
+    assert_eq!(fp.strategy, "bk");
+    assert_eq!(fp.sigma.to_bits(), 0.8f64.to_bits());
+    let cur = ck.cursors.expect("v2 carries cursors");
+    assert_eq!(cur.noise_step, 2);
+    assert_eq!(cur.data_cursor, 2);
+    assert_eq!(cur.accountant_steps, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -269,6 +269,46 @@ fn checkpoint_resume_preserves_progress() {
 }
 
 #[test]
+fn resume_works_with_periodic_saving_off() {
+    // The old gate `checkpoint_every > 0` silently started from scratch
+    // when a dir held a checkpoint but periodic saving was off. Resume
+    // must key on the directory contents alone.
+    let dir = std::env::temp_dir().join(format!("fastdp_ci_ckpt_nogate_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = base_cfg("mlp_e2e", "bk", 6);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 3;
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.final_epsilon > 0.0);
+
+    cfg.checkpoint_every = 0; // periodic saving off; resume must still happen
+    let mut resumed = Trainer::new(cfg).unwrap();
+    resumed.init().unwrap();
+    assert!(
+        (resumed.epsilon() - r.final_epsilon).abs() < 1e-12,
+        "resume ignored with checkpoint_every=0: epsilon {} vs {}",
+        resumed.epsilon(),
+        r.final_epsilon
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_flag_requires_a_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("fastdp_ci_ckpt_empty_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = base_cfg("mlp_e2e", "bk", 3);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    let mut t = Trainer::new(cfg).unwrap();
+    let err = t.init().unwrap_err().to_string();
+    assert!(err.contains("no usable checkpoint"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn rejects_bad_logical_batch() {
     let mut cfg = base_cfg("mlp_e2e", "bk", 5);
     cfg.logical_batch = 33; // not a multiple of physical 32

@@ -1,0 +1,250 @@
+//! Crash-safety acceptance suite: a killed-and-resumed run must be
+//! *bitwise* identical to the uninterrupted run (parameters, optimizer
+//! state, privacy ledger), corruption of the newest checkpoint must fall
+//! back to an older one, and non-finite steps must be handled per the
+//! configured policy without persisting a poisoned tensor.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use fastdp::config::TrainConfig;
+use fastdp::coordinator::checkpoint::{self, fault};
+use fastdp::coordinator::Trainer;
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+/// The fault hook is a process-global one-shot: serialize every test in
+/// this file so an armed fault can't be consumed by a concurrent test's
+/// save (and an unrelated save can't fire between arm and use).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg_for(model: &str, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model.into();
+    cfg.strategy = "bk".into();
+    cfg.steps = steps;
+    cfg.lr = 0.5;
+    cfg.clip = 1.0;
+    cfg.log_every = 0;
+    cfg.privacy.sigma = 0.8;
+    cfg.privacy.dataset_size = 50_000;
+    cfg.privacy.strict_budget = false;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastdp_crash_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Bitwise comparison of two backend state dumps.
+fn assert_states_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count differs");
+    for (i, (ta, tb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "{what}: tensor {i} length differs");
+        for (j, (x, y)) in ta.iter().zip(tb.iter()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{what}: tensor {i}[{j}] differs bitwise: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kill_and_resume_is_bitwise_identical_to_uninterrupted_run() {
+    let _g = serial();
+    let dir = tmpdir("parity");
+
+    // Reference: the same run, never interrupted, never checkpointed.
+    let mut clean = Trainer::new(cfg_for("mlp_e2e", 8)).unwrap();
+    let clean_report = clean.run().unwrap();
+    let clean_state = clean.backend.state().unwrap();
+
+    // Interrupted run: 7 of 8 steps (checkpoints land at 3 and 6), then
+    // a simulated kill -9 in the middle of an extra save.
+    let mut cfg = cfg_for("mlp_e2e", 8);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 3;
+    let mut pre = Trainer::new(cfg.clone()).unwrap();
+    pre.init().unwrap();
+    for _ in 0..7 {
+        pre.train_step().unwrap();
+    }
+    fault::arm(fault::Fault::KillMidWrite);
+    let err = pre.save_checkpoint(&dir).unwrap_err().to_string();
+    assert!(err.contains(fault::INJECTED), "{err}");
+    drop(pre); // the "killed" process
+
+    // The crash left a partial .tmp and published checkpoints at 3, 6.
+    let tmps: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+        .collect();
+    assert_eq!(tmps.len(), 1, "expected exactly one partial .tmp");
+    assert_eq!(checkpoint::list_desc(&dir).len(), 2);
+
+    // Resume: sweeps the .tmp, picks up at step 6, finishes 7 and 8.
+    let mut resumed = Trainer::new(cfg).unwrap();
+    let resumed_report = resumed.run().unwrap();
+    assert_eq!(resumed_report.steps, 8);
+    let resumed_state = resumed.backend.state().unwrap();
+
+    assert_states_equal(&clean_state, &resumed_state, "kill/resume parity");
+    assert!(
+        clean_report.final_epsilon.to_bits() == resumed_report.final_epsilon.to_bits(),
+        "epsilon diverged: {} vs {}",
+        clean_report.final_epsilon,
+        resumed_report.final_epsilon
+    );
+    let leftover = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .any(|e| e.file_name().to_string_lossy().ends_with(".tmp"));
+    assert!(!leftover, "stale .tmp survived the resume sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_newest_checkpoint_falls_back_and_still_matches_clean_run() {
+    let _g = serial();
+    let dir = tmpdir("fallback");
+
+    let mut clean = Trainer::new(cfg_for("mlp_e2e", 9)).unwrap();
+    let clean_report = clean.run().unwrap();
+    let clean_state = clean.backend.state().unwrap();
+
+    // First leg: 6 steps, checkpoints at 3 and 6.
+    let mut cfg = cfg_for("mlp_e2e", 9);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 3;
+    let mut first_cfg = cfg.clone();
+    first_cfg.steps = 6;
+    let mut first = Trainer::new(first_cfg).unwrap();
+    first.run().unwrap();
+    drop(first);
+
+    // Flip one payload bit in the newest checkpoint (media corruption).
+    let newest = dir.join("ckpt_00000006.fdp");
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(&newest, &bytes).unwrap();
+    let read_err = checkpoint::read(&newest).unwrap_err().to_string();
+    assert!(
+        read_err.contains("CRC") || read_err.contains("corrupt"),
+        "corruption not detected: {read_err}"
+    );
+
+    // Resume skips the damaged step-6 file, falls back to step 3,
+    // re-executes 4..=6 with the same counter-based draws, and finishes
+    // 7..=9 — ending bitwise-equal to the uninterrupted run.
+    let mut resumed = Trainer::new(cfg).unwrap();
+    let resumed_report = resumed.run().unwrap();
+    assert_eq!(resumed_report.steps, 9);
+    assert_states_equal(
+        &clean_state,
+        &resumed.backend.state().unwrap(),
+        "corruption fallback parity",
+    );
+    assert!(
+        clean_report.final_epsilon.to_bits() == resumed_report.final_epsilon.to_bits(),
+        "epsilon diverged after fallback: {} vs {}",
+        clean_report.final_epsilon,
+        resumed_report.final_epsilon
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nonfinite_abort_is_a_hard_error() {
+    let _g = serial();
+    // lr = 1e39 overflows to +inf as f32: the first apply poisons the
+    // parameters, and the next step's forward pass produces a
+    // non-finite loss, which the default policy turns into an error.
+    let mut cfg = cfg_for("mlp_e2e", 5);
+    cfg.lr = 1e39;
+    let mut t = Trainer::new(cfg).unwrap();
+    let err = t.run().unwrap_err().to_string();
+    assert!(err.contains("non-finite loss"), "{err}");
+    assert!(err.contains("on_nonfinite=abort"), "{err}");
+}
+
+#[test]
+fn nonfinite_skip_drops_the_update_but_spends_the_budget() {
+    let _g = serial();
+    let mut cfg = cfg_for("mlp_e2e", 5);
+    cfg.lr = 1e39;
+    cfg.on_nonfinite = "skip".into();
+    let mut t = Trainer::new(cfg).unwrap();
+    t.init().unwrap();
+    let initial = t.backend.state().unwrap();
+    for _ in 0..3 {
+        t.train_step().unwrap(); // every apply overflows; every update is dropped
+    }
+    assert_states_equal(&initial, &t.backend.state().unwrap(), "skip leaves params clean");
+    // The ledger still moved: skipped steps touched data, so their
+    // budget is spent.
+    let q = t.info.batch as f64 / t.cfg.privacy.dataset_size as f64;
+    let mut three = fastdp::privacy::RdpAccountant::new(q, t.sigma);
+    for _ in 0..3 {
+        three.step();
+    }
+    let delta = t.cfg.privacy.target_delta;
+    assert!(
+        t.epsilon().to_bits() == three.epsilon(delta).to_bits(),
+        "skip must still compose 3 accountant steps: {} vs {}",
+        t.epsilon(),
+        three.epsilon(delta)
+    );
+}
+
+#[test]
+fn nonfinite_rollback_restores_the_last_checkpoint() {
+    let _g = serial();
+    let dir = tmpdir("rollback");
+    let mut cfg = cfg_for("mlp_e2e", 10);
+    cfg.on_nonfinite = "rollback".into();
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 1;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.init().unwrap();
+    t.train_step().unwrap();
+    t.train_step().unwrap();
+    let good = t.backend.state().unwrap();
+
+    // lr is a tuning knob, not part of the privacy fingerprint — a
+    // mid-run change must not block the rollback load.
+    t.cfg.lr = 1e39;
+    t.train_step().unwrap();
+    assert_states_equal(
+        &good,
+        &t.backend.state().unwrap(),
+        "rollback restores the step-2 checkpoint",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn save_refuses_nonfinite_state_even_if_asked() {
+    let _g = serial();
+    let dir = tmpdir("refuse");
+    let cfg = cfg_for("mlp_e2e", 3);
+    let mut t = Trainer::new(cfg).unwrap();
+    t.init().unwrap();
+    // Poison the parameters directly (bypassing the step guards), then
+    // ask for a checkpoint: the writer itself is the last line of
+    // defense and must refuse.
+    let mut state = t.backend.state().unwrap();
+    state[0][0] = f32::NAN;
+    t.backend.load_state(state).unwrap();
+    let err = t.save_checkpoint(&dir).unwrap_err().to_string();
+    assert!(err.contains("non-finite"), "{err}");
+    assert!(checkpoint::latest(&dir).is_none(), "poisoned checkpoint was published");
+    let _ = std::fs::remove_dir_all(&dir);
+}
