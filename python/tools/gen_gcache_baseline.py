@@ -141,9 +141,13 @@ def main():
                         "tied": any(l[0] == "T" for l in layers),
                         "threads": 0,
                         # times are deliberately unpinned (0.0): CI machines
-                        # vary; bench-check skips the time band for 0 rows
+                        # vary; bench-check skips the time bands for 0 rows
+                        # (the statistical gate bands median_step_secs when
+                        # a locally regenerated baseline pins it)
                         "mean_step_secs": 0.0,
+                        "median_step_secs": 0.0,
                         "min_step_secs": 0.0,
+                        "gflops": 0.0,
                         "samples_per_sec": 0.0,
                         "peak_rss": 0.0,
                         "steady_allocs": 0,

@@ -44,7 +44,16 @@ pub struct BenchResult {
     pub tied: bool,
     pub threads: usize,
     pub mean_step_secs: f64,
+    /// Median step time — the statistic the regression gate bands
+    /// against (robust to scheduler spikes on shared CI runners). Rows
+    /// from JSON written before the field existed parse as 0.0 =
+    /// unpinned, which falls back to the legacy mean band.
+    pub median_step_secs: f64,
     pub min_step_secs: f64,
+    /// Useful-arithmetic throughput: the complexity engine's analytic
+    /// FLOP count for this (strategy, model) divided by the median step
+    /// time. 0.0 when unmeasured (legacy rows, PJRT).
+    pub gflops: f64,
     pub samples_per_sec: f64,
     pub peak_rss: u64,
     /// Arena pool misses in the last warm step (0 = flat memory).
@@ -75,7 +84,9 @@ impl BenchResult {
             .set("tied", Value::from(self.tied))
             .set("threads", Value::from(self.threads))
             .set("mean_step_secs", Value::from(self.mean_step_secs))
+            .set("median_step_secs", Value::from(self.median_step_secs))
             .set("min_step_secs", Value::from(self.min_step_secs))
+            .set("gflops", Value::from(self.gflops))
             .set("samples_per_sec", Value::from(self.samples_per_sec))
             .set("peak_rss", Value::from(self.peak_rss as f64))
             .set("steady_allocs", Value::from(self.steady_allocs))
@@ -108,7 +119,11 @@ impl BenchResult {
             tied: v.opt_bool("tied", false),
             threads: v.opt_i64("threads", 1) as usize,
             mean_step_secs: v.req_f64("mean_step_secs").map_err(|e| anyhow!(e))?,
+            // pre-statistical-gate JSON (no median/gflops) parses as
+            // unpinned median + unmeasured throughput
+            median_step_secs: v.opt_f64("median_step_secs", 0.0),
             min_step_secs: v.req_f64("min_step_secs").map_err(|e| anyhow!(e))?,
+            gflops: v.opt_f64("gflops", 0.0),
             samples_per_sec: v.req_f64("samples_per_sec").map_err(|e| anyhow!(e))?,
             peak_rss: v.req_f64("peak_rss").map_err(|e| anyhow!(e))? as u64,
             steady_allocs: v.opt_i64("steady_allocs", 0) as usize,
@@ -193,6 +208,16 @@ pub fn measure_native(
     } else {
         (0.0, 0.0)
     };
+    // useful-arithmetic throughput: analytic FLOPs of this strategy on
+    // the generalized-linear stack (LayerNorm excluded, matching the
+    // complexity tables) over the median step time
+    let flop_layers: Vec<_> = spec
+        .arch_layers()
+        .into_iter()
+        .filter(|l| l.kind != crate::arch::LayerKind::Norm)
+        .collect();
+    let step_flops = crate::complexity::model_cost(strat, spec.batch as f64, &flop_layers).time;
+    let median = s.median();
     Ok(BenchResult {
         model: model.to_string(),
         strategy: strategy.to_string(),
@@ -203,7 +228,9 @@ pub fn measure_native(
         tied: spec.tied,
         threads,
         mean_step_secs: s.mean(),
+        median_step_secs: median,
         min_step_secs: s.min(),
+        gflops: if median > 0.0 { step_flops / median / 1e9 } else { 0.0 },
         samples_per_sec: spec.batch as f64 / s.mean(),
         peak_rss: peak_rss_bytes(),
         steady_allocs,
@@ -348,7 +375,9 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
             "strategy",
             "style",
             "mean/step",
+            "median/step",
             "min/step",
+            "GFLOP/s",
             "samples/s",
             "peak RSS",
             "g-cache peak",
@@ -360,7 +389,9 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
             r.strategy.clone(),
             r.style.clone(),
             fmt_duration(r.mean_step_secs),
+            fmt_duration(r.median_step_secs),
             fmt_duration(r.min_step_secs),
+            if r.gflops > 0.0 { format!("{:.2}", r.gflops) } else { "-".into() },
             format!("{:.0}", r.samples_per_sec),
             fmt_bytes(r.peak_rss as f64),
             if r.peak_gcache_floats_measured > 0 {
@@ -435,6 +466,8 @@ pub struct CheckRow {
     pub unfused: f64,
     pub time_secs: f64,
     pub baseline_time_secs: f64,
+    /// Useful-arithmetic throughput of the current row (0 = unmeasured).
+    pub gflops: f64,
 }
 
 /// Compare current bench rows against a committed baseline.
@@ -448,10 +481,15 @@ pub struct CheckRow {
 /// * measured must agree with the row's own complexity prediction to
 ///   within 1% (they are exact in practice; the band absorbs f64
 ///   rounding of the prediction);
-/// * `mean_step_secs` must stay within `(1 + time_tolerance) *`
-///   baseline when the baseline pins a time (> 0; the committed
-///   baseline leaves times at 0 = unpinned, because CI machines vary —
-///   the band exists for locally regenerated baselines);
+/// * step time is banded **statistically**: when the baseline pins a
+///   median (`median_step_secs` > 0, from ≥ 5 timed reps per row), the
+///   current median must stay within `(1 + time_tolerance) *` baseline
+///   median — medians are robust to the scheduler spikes that make
+///   single-rep means flaky on shared CI runners. Baselines written
+///   before the median field existed (median 0) fall back to the old
+///   mean band; the committed baseline leaves both at 0 = unpinned,
+///   because CI machines vary — the bands exist for locally
+///   regenerated baselines;
 /// * symmetrically, a current one-pass DP row absent from the baseline
 ///   fails — growing the CI matrix requires regenerating the baseline
 ///   so the new rows are actually pinned.
@@ -475,6 +513,7 @@ pub fn check_against_baseline(
                 unfused: base.peak_gcache_floats_unfused,
                 time_secs: 0.0,
                 baseline_time_secs: base.mean_step_secs,
+                gflops: 0.0,
             });
             continue;
         };
@@ -500,7 +539,18 @@ pub fn check_against_baseline(
                 ));
             }
         }
-        if base.mean_step_secs > 0.0
+        // statistical time gate: prefer the median band (robust to CI
+        // scheduler spikes); mean band only for pre-median baselines
+        if base.median_step_secs > 0.0 {
+            if cur.median_step_secs > base.median_step_secs * (1.0 + time_tolerance) {
+                failures.push(format!(
+                    "median step time regressed: {:.2}ms vs baseline {:.2}ms (+{:.0}% band)",
+                    cur.median_step_secs * 1e3,
+                    base.median_step_secs * 1e3,
+                    time_tolerance * 100.0
+                ));
+            }
+        } else if base.mean_step_secs > 0.0
             && cur.mean_step_secs > base.mean_step_secs * (1.0 + time_tolerance)
         {
             failures.push(format!(
@@ -515,8 +565,17 @@ pub fn check_against_baseline(
             failures,
             fused: cur.peak_gcache_floats_measured,
             unfused: cur.peak_gcache_floats_unfused,
-            time_secs: cur.mean_step_secs,
-            baseline_time_secs: base.mean_step_secs,
+            time_secs: if cur.median_step_secs > 0.0 {
+                cur.median_step_secs
+            } else {
+                cur.mean_step_secs
+            },
+            baseline_time_secs: if base.median_step_secs > 0.0 {
+                base.median_step_secs
+            } else {
+                base.mean_step_secs
+            },
+            gflops: cur.gflops,
         });
     }
     // Symmetric guard: a current row with no baseline counterpart means
@@ -539,6 +598,7 @@ pub fn check_against_baseline(
                 unfused: cur.peak_gcache_floats_unfused,
                 time_secs: cur.mean_step_secs,
                 baseline_time_secs: 0.0,
+                gflops: cur.gflops,
             });
         }
     }
@@ -550,8 +610,8 @@ pub fn check_against_baseline(
 pub fn check_summary_markdown(rows: &[CheckRow]) -> String {
     let mut s = String::from(
         "### bench regression gate: fused g-cache peaks vs baseline\n\n\
-         | model/strategy/style | fused peak (floats) | legacy (unfused) | saved | mean/step | status |\n\
-         |---|---|---|---|---|---|\n",
+         | model/strategy/style | fused peak (floats) | legacy (unfused) | saved | median/step | GFLOP/s | status |\n\
+         |---|---|---|---|---|---|---|\n",
     );
     for r in rows {
         let saved = if r.unfused > 0.0 {
@@ -560,13 +620,18 @@ pub fn check_summary_markdown(rows: &[CheckRow]) -> String {
             "-".to_string()
         };
         s.push_str(&format!(
-            "| {} | {} | {:.0} | {} | {} | {} |\n",
+            "| {} | {} | {:.0} | {} | {} | {} | {} |\n",
             r.key,
             r.fused,
             r.unfused,
             saved,
             if r.time_secs > 0.0 {
                 fmt_duration(r.time_secs)
+            } else {
+                "-".to_string()
+            },
+            if r.gflops > 0.0 {
+                format!("{:.2}", r.gflops)
             } else {
                 "-".to_string()
             },
@@ -808,7 +873,10 @@ pub fn measure_step(
         tied: meta.spec.opt_bool("tied", false),
         threads: 1,
         mean_step_secs: s.mean(),
+        median_step_secs: s.median(),
         min_step_secs: s.min(),
+        // no analytic FLOP census for artifact-driven rows
+        gflops: 0.0,
         samples_per_sec: b as f64 / s.mean(),
         peak_rss: peak_rss_bytes(),
         steady_allocs: 0,
@@ -866,7 +934,9 @@ mod tests {
             tied: true,
             threads: 4,
             mean_step_secs: 0.25,
+            median_step_secs: 0.24,
             min_step_secs: 0.2,
+            gflops: 1.5,
             samples_per_sec: 32.0,
             peak_rss: 1024,
             steady_allocs: 0,
@@ -889,6 +959,8 @@ mod tests {
         assert_eq!(r2.heads, 4);
         assert!(r2.tied, "tied flag must round-trip");
         assert_eq!(r2.threads, 4);
+        assert_eq!(r2.median_step_secs, 0.24);
+        assert_eq!(r2.gflops, 1.5);
         assert!((r2.samples_per_sec - 32.0).abs() < 1e-12);
         assert_eq!(r2.steady_allocs, 0);
         assert_eq!(r2.peak_gcache_floats_measured, 4096);
@@ -907,6 +979,9 @@ mod tests {
         assert_eq!(lr.seq_len, 1);
         assert_eq!(lr.heads, 0);
         assert!(!lr.tied, "legacy rows default to untied");
+        assert_eq!(lr.threads, 1, "pre-threads rows parse with the old default");
+        assert_eq!(lr.median_step_secs, 0.0, "pre-median rows parse as unpinned");
+        assert_eq!(lr.gflops, 0.0);
         assert_eq!(lr.peak_gcache_floats_measured, 0, "pre-fusion rows parse as unmeasured");
         assert_eq!(lr.peak_gcache_floats_unfused, 0.0);
         assert_eq!(lr.arena_peak_floats, 0);
@@ -927,8 +1002,11 @@ mod tests {
         let r = measure_native("mlp_e2e", "bk", "all-layer", 2, 2, 2).unwrap();
         assert_eq!(r.steady_allocs, 0, "arena must be warm after warmup");
         assert!(r.mean_step_secs > 0.0);
+        assert!(r.median_step_secs > 0.0);
+        assert!(r.gflops > 0.0, "analytic throughput must be measured");
         assert!(r.samples_per_sec > 0.0);
         assert_eq!(r.batch, 32);
+        assert_eq!(r.threads, 2, "the requested thread count lands in the row");
     }
 
     #[test]
@@ -1002,6 +1080,8 @@ mod tests {
         let md = check_summary_markdown(&rows);
         assert!(md.contains("m/bk/layer-wise"), "{md}");
         assert!(md.contains("50.0%"), "savings column: {md}");
+        assert!(md.contains("GFLOP/s"), "throughput column header: {md}");
+        assert!(md.contains("| 1.50 |"), "throughput column value: {md}");
         assert!(md.contains("| ok |"), "{md}");
 
         // injected floats-held regression: exact pin must fail
@@ -1026,17 +1106,36 @@ mod tests {
         );
         assert!(rows[0].failures.iter().any(|f| f.contains("off its own prediction")));
 
-        // time regression beyond the band fails only when the baseline
-        // pins a time; unpinned (0.0) baselines skip the band
+        // statistical time gate: the median band fires when the current
+        // median drifts beyond it — a blown *mean* alone (one scheduler
+        // spike) does not fail a median-pinned baseline
         cur.mean_step_secs = base.mean_step_secs * 2.0;
         let rows = check_against_baseline(
             std::slice::from_ref(&cur),
             std::slice::from_ref(&base),
             0.5,
         );
+        assert!(rows[0].failures.is_empty(), "mean spike alone: {:?}", rows[0].failures);
+        cur.median_step_secs = base.median_step_secs * 2.0;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&cur),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        assert!(rows[0].failures.iter().any(|f| f.contains("median step time regressed")));
+        // pre-median baselines (median 0, mean pinned) fall back to the
+        // legacy mean band; fully unpinned baselines skip it
+        let mut mean_only = base.clone();
+        mean_only.median_step_secs = 0.0;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&cur),
+            std::slice::from_ref(&mean_only),
+            0.5,
+        );
         assert!(rows[0].failures.iter().any(|f| f.contains("step time regressed")));
         let mut unpinned = base.clone();
         unpinned.mean_step_secs = 0.0;
+        unpinned.median_step_secs = 0.0;
         let rows = check_against_baseline(
             std::slice::from_ref(&cur),
             std::slice::from_ref(&unpinned),

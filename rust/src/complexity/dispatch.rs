@@ -1,0 +1,227 @@
+//! Ghost-vs-instantiation dispatch: formula or measured.
+//!
+//! The paper's mixed strategies pick, per layer, between the ghost-norm
+//! route (`O(BT^2(p+d))`, no per-sample gradient) and per-sample
+//! instantiation (`O(BTpd)`). The closed-form rule `2T^2 < p*d`
+//! compares FLOP counts — but FLOPs are not seconds: the two routes
+//! have different arithmetic intensity and memory traffic, so on a real
+//! machine the crossover can sit well away from the formula's. A
+//! [`DispatchProfile`] holds *measured* seconds-per-FLOP coefficients
+//! for each route (calibrated by `runtime::native::autotune` and cached
+//! to a JSON profile file), and [`Dispatch::Measured`] weighs the
+//! per-layer FLOP counts by them, picking the route that is actually
+//! faster on this hardware.
+//!
+//! Embedding and Norm layers are *not* up for debate in either mode:
+//! embeddings always ghost (instantiation is `vocab * p` floats per
+//! sample) and norm layers always instantiate their `O(p)` gradients —
+//! the same forced routes the backend applies.
+
+use crate::arch::{LayerDims, LayerKind};
+use crate::json::Value;
+
+/// Bump when the profile file schema or the calibration workload
+/// changes; stale files fall back to the formula with a warning.
+pub const PROFILE_VERSION: i64 = 1;
+
+/// Measured per-route cost coefficients (seconds per FLOP), as
+/// calibrated on one machine at one thread count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchProfile {
+    /// Seconds per ghost-norm FLOP (Gram build + Gram dot).
+    pub ghost_secs_per_flop: f64,
+    /// Seconds per instantiation FLOP (streamed `a^T g` + norm).
+    pub inst_secs_per_flop: f64,
+    /// Thread count the calibration ran with (informational).
+    pub threads: usize,
+    /// SIMD ISA the calibration ran with (informational).
+    pub isa: String,
+}
+
+impl DispatchProfile {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("version", Value::Int(PROFILE_VERSION));
+        v.set("ghost_secs_per_flop", Value::Num(self.ghost_secs_per_flop));
+        v.set("inst_secs_per_flop", Value::Num(self.inst_secs_per_flop));
+        v.set("threads", Value::Int(self.threads as i64));
+        v.set("isa", Value::Str(self.isa.clone()));
+        v
+    }
+
+    /// Parse a cached profile. Errors distinguish a stale version from
+    /// a corrupt file only in the message; both mean "do not trust it".
+    pub fn from_json(v: &Value) -> Result<DispatchProfile, String> {
+        let version = v.req_i64("version")?;
+        if version != PROFILE_VERSION {
+            return Err(format!(
+                "stale dispatch profile (version {version}, expected {PROFILE_VERSION})"
+            ));
+        }
+        let ghost = v.req_f64("ghost_secs_per_flop")?;
+        let inst = v.req_f64("inst_secs_per_flop")?;
+        if !(ghost.is_finite() && ghost > 0.0 && inst.is_finite() && inst > 0.0) {
+            return Err(format!(
+                "corrupt dispatch profile (ghost {ghost}, inst {inst}; both must be positive)"
+            ));
+        }
+        Ok(DispatchProfile {
+            ghost_secs_per_flop: ghost,
+            inst_secs_per_flop: inst,
+            threads: v.opt_i64("threads", 0).max(0) as usize,
+            isa: v.opt_str("isa", "unknown").to_string(),
+        })
+    }
+}
+
+/// How the mixed strategies route each layer's per-sample norm.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dispatch {
+    /// The paper's closed-form rule (`ghost_preferred`: `2T^2 < pd`,
+    /// attention `2T^2 < d^2`).
+    Formula,
+    /// Measured per-machine cost model: route = argmin of
+    /// coefficient-weighted per-layer module times.
+    Measured(DispatchProfile),
+}
+
+impl Dispatch {
+    /// Route decision for one layer. The batch size cancels from both
+    /// sides, so the decision is batch-independent (like the formula).
+    pub fn ghost_preferred(&self, l: &LayerDims) -> bool {
+        match self {
+            Dispatch::Formula => super::ghost_preferred(l),
+            Dispatch::Measured(p) => match l.kind {
+                LayerKind::Embedding => true,
+                LayerKind::Norm => false,
+                _ => {
+                    let ghost = p.ghost_secs_per_flop
+                        * super::module_time(super::Module::GhostNorm, 1.0, l);
+                    let inst = p.inst_secs_per_flop
+                        * super::module_time(super::Module::PsgInstantiation, 1.0, l);
+                    ghost < inst
+                }
+            },
+        }
+    }
+
+    /// Short mode name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dispatch::Formula => "formula",
+            Dispatch::Measured(_) => "measured",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear(t: u64, d: u64, p: u64) -> LayerDims {
+        LayerDims {
+            kind: LayerKind::Linear,
+            name: "lin".to_string(),
+            t,
+            d,
+            p,
+        }
+    }
+
+    #[test]
+    fn profile_round_trips_through_json() {
+        let p = DispatchProfile {
+            ghost_secs_per_flop: 2.5e-10,
+            inst_secs_per_flop: 4.0e-10,
+            threads: 8,
+            isa: "avx2+fma".to_string(),
+        };
+        let back = DispatchProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn stale_or_corrupt_profiles_are_rejected() {
+        let mut stale = DispatchProfile {
+            ghost_secs_per_flop: 1e-10,
+            inst_secs_per_flop: 1e-10,
+            threads: 1,
+            isa: "portable".to_string(),
+        }
+        .to_json();
+        stale.set("version", Value::Int(PROFILE_VERSION + 1));
+        assert!(DispatchProfile::from_json(&stale).unwrap_err().contains("stale"));
+
+        let mut corrupt = DispatchProfile {
+            ghost_secs_per_flop: 1e-10,
+            inst_secs_per_flop: 1e-10,
+            threads: 1,
+            isa: "portable".to_string(),
+        }
+        .to_json();
+        corrupt.set("inst_secs_per_flop", Value::Num(-1.0));
+        assert!(DispatchProfile::from_json(&corrupt)
+            .unwrap_err()
+            .contains("corrupt"));
+        assert!(DispatchProfile::from_json(&Value::obj()).is_err());
+    }
+
+    #[test]
+    fn formula_mode_matches_ghost_preferred() {
+        let d = Dispatch::Formula;
+        for l in [linear(4, 16, 16), linear(64, 8, 8), linear(1, 100, 100)] {
+            assert_eq!(d.ghost_preferred(&l), crate::complexity::ghost_preferred(&l));
+        }
+    }
+
+    #[test]
+    fn measured_profile_can_flip_the_formula_route() {
+        // t=4, d=p=16: 2T^2 = 32 < 256 = pd, so the formula says ghost.
+        let l = linear(4, 16, 16);
+        assert!(crate::complexity::ghost_preferred(&l));
+        // A machine where ghost FLOPs are 100x more expensive than
+        // instantiation FLOPs flips the route...
+        let slow_ghost = Dispatch::Measured(DispatchProfile {
+            ghost_secs_per_flop: 1e-8,
+            inst_secs_per_flop: 1e-10,
+            threads: 1,
+            isa: "portable".to_string(),
+        });
+        assert!(!slow_ghost.ghost_preferred(&l));
+        // ...while equal coefficients reduce to the FLOP comparison,
+        // which agrees with the formula here.
+        let neutral = Dispatch::Measured(DispatchProfile {
+            ghost_secs_per_flop: 1e-10,
+            inst_secs_per_flop: 1e-10,
+            threads: 1,
+            isa: "portable".to_string(),
+        });
+        assert!(neutral.ghost_preferred(&l));
+    }
+
+    #[test]
+    fn measured_keeps_the_forced_routes() {
+        let inst_biased = Dispatch::Measured(DispatchProfile {
+            ghost_secs_per_flop: 1e-6,
+            inst_secs_per_flop: 1e-12,
+            threads: 1,
+            isa: "portable".to_string(),
+        });
+        let emb = LayerDims {
+            kind: LayerKind::Embedding,
+            name: "emb".to_string(),
+            t: 8,
+            d: 1,
+            p: 32,
+        };
+        let norm = LayerDims {
+            kind: LayerKind::Norm,
+            name: "ln".to_string(),
+            t: 8,
+            d: 32,
+            p: 64,
+        };
+        assert!(inst_biased.ghost_preferred(&emb));
+        assert!(!inst_biased.ghost_preferred(&norm));
+    }
+}

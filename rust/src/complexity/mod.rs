@@ -13,10 +13,12 @@
 //! and aggregates over a model — exactly regenerating Tables 2, 3, 4, 5,
 //! 8, 10 and the layerwise series behind Figures 7 and 10-19.
 
+pub mod dispatch;
 pub mod strategy;
 
 use crate::arch::{LayerDims, LayerKind};
 
+pub use dispatch::{Dispatch, DispatchProfile};
 pub use strategy::{
     bk_gcache_floats, bk_gcache_floats_unfused, clip_state_floats, layer_cost, ClippingStyle,
     Strategy, ALL_STRATEGIES,

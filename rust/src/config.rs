@@ -29,6 +29,14 @@ pub struct TrainConfig {
     pub backend: String,
     /// Worker threads for the native kernels (0 = one per core).
     pub threads: usize,
+    /// Ghost-vs-instantiation route decision for the mixed strategies:
+    /// "formula" (the paper's `2T^2 < pd` rule, default) or "measured"
+    /// (per-machine cost model calibrated by a startup microbenchmark,
+    /// cached in `dispatch_profile`; corrupt/stale caches fall back to
+    /// the formula with a warning).
+    pub dispatch: String,
+    /// Cache file for the measured dispatch profile.
+    pub dispatch_profile: PathBuf,
     pub artifacts_dir: PathBuf,
     pub model: String,
     pub strategy: String,
@@ -81,6 +89,8 @@ impl Default for TrainConfig {
         Self {
             backend: "native".to_string(),
             threads: 0,
+            dispatch: "formula".to_string(),
+            dispatch_profile: PathBuf::from("fastdp_dispatch.json"),
             artifacts_dir: PathBuf::from("artifacts"),
             model: "mlp_e2e".to_string(),
             strategy: "bk".to_string(),
@@ -108,6 +118,10 @@ impl TrainConfig {
         let mut c = TrainConfig::default();
         c.backend = v.opt_str("backend", &c.backend).to_string();
         c.threads = v.opt_i64("threads", 0) as usize;
+        c.dispatch = v.opt_str("dispatch", &c.dispatch).to_string();
+        if let Some(p) = v.get("dispatch_profile").and_then(Value::as_str) {
+            c.dispatch_profile = PathBuf::from(p);
+        }
         c.model = v.opt_str("model", &c.model).to_string();
         c.strategy = v.opt_str("strategy", &c.strategy).to_string();
         c.clipping_style = v.opt_str("clipping_style", &c.clipping_style).to_string();
@@ -149,6 +163,12 @@ impl TrainConfig {
             self.backend = b.to_string();
         }
         self.threads = args.get_usize("threads", self.threads);
+        if let Some(d) = args.get("dispatch") {
+            self.dispatch = d.to_string();
+        }
+        if let Some(p) = args.get("dispatch-profile") {
+            self.dispatch_profile = PathBuf::from(p);
+        }
         if let Some(m) = args.get("model") {
             self.model = m.to_string();
         }
@@ -211,6 +231,12 @@ impl TrainConfig {
             return Err(format!(
                 "unknown backend '{}', expected 'native' or 'pjrt'",
                 self.backend
+            ));
+        }
+        if self.dispatch != "formula" && self.dispatch != "measured" {
+            return Err(format!(
+                "unknown dispatch '{}', expected 'formula' or 'measured'",
+                self.dispatch
             ));
         }
         if crate::complexity::ClippingStyle::parse(&self.clipping_style).is_none() {
@@ -297,6 +323,29 @@ mod tests {
         c.apply_cli(&args).unwrap();
         assert_eq!(c.backend, "pjrt");
         assert_eq!(c.threads, 2);
+    }
+
+    #[test]
+    fn dispatch_parse_and_reject() {
+        let v = parse(r#"{"dispatch": "measured", "dispatch_profile": "/tmp/prof.json"}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.dispatch, "measured");
+        assert_eq!(
+            c.dispatch_profile,
+            std::path::Path::new("/tmp/prof.json")
+        );
+        let v = parse(r#"{"dispatch": "vibes"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let mut c = TrainConfig::default();
+        assert_eq!(c.dispatch, "formula");
+        let args = crate::cli::Args::parse(
+            "train --dispatch measured --dispatch-profile prof.json"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.dispatch, "measured");
+        assert_eq!(c.dispatch_profile, std::path::Path::new("prof.json"));
     }
 
     #[test]

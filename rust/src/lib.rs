@@ -11,8 +11,9 @@
 //!   ghost-norm / per-sample-instantiation norms with the paper's mixed
 //!   layerwise dispatch, all-layer / layer-wise / group-wise clipping
 //!   styles, the clipped weighted sum, and noisy SGD/Adam —
-//!   cache-blocked, thread-fanned over the batch, and allocation-free in
-//!   steady state (step-scoped buffer arena).
+//!   register-tiled wide-lane kernels (runtime-detected SIMD with a
+//!   portable fallback), thread-fanned over the batch, and
+//!   allocation-free in steady state (step-scoped buffer arena).
 //! * **runtime::pjrt (feature `xla-runtime`)** — the original AOT
 //!   artifact executor (HLO text + manifest from `python/compile/`,
 //!   executed on the PJRT CPU client). Off by default because the `xla`

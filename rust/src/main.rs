@@ -14,8 +14,12 @@
 //!   complexity  — print the paper's complexity tables for a model,
 //!                 including per-clipping-style cost reporting
 //!                 (`--gcache-md` emits the fused-vs-legacy g-cache
-//!                 markdown rows for the CI step summary)
+//!                 markdown rows for the CI step summary) and the
+//!                 per-layer ghost/inst route under both the formula
+//!                 and the active `--dispatch` mode
 //!   calibrate   — solve sigma for a (epsilon, delta, q, steps) target
+//!   calibrate-dispatch — run the ghost-vs-instantiation microbenchmark
+//!                 and cache the measured dispatch profile
 //!   ckpt        — inspect / list checkpoint files: format version,
 //!                 integrity (CRC), privacy fingerprint, stream cursors
 //!   list        — list native models (and PJRT artifacts if present)
@@ -40,22 +44,32 @@ fn main() {
         Some("bench-check") => fastdp::bench::run_bench_check(&args),
         Some("complexity") => cmd_complexity(&args),
         Some("calibrate") => cmd_calibrate(&args),
+        Some("calibrate-dispatch") => cmd_calibrate_dispatch(&args),
         Some("ckpt") => cmd_ckpt(&args),
         Some("list") => cmd_list(&args),
         Some("version") | None => {
             println!("fastdp 0.2.0 — Book-Keeping DP optimization (Bu et al., ICML 2023)");
             println!(
-                "usage: fastdp <train|bench|bench-check|complexity|calibrate|ckpt|list|version> \
-                 [--opts]"
+                "usage: fastdp <train|bench|bench-check|complexity|calibrate|\
+                 calibrate-dispatch|ckpt|list|version> [--opts]"
             );
             println!(
-                "       train --model <m> --strategy <s> \
+                "       train --model <m> --strategy <s> [--threads <n>] \
                  [--clipping-style all-layer|layer-wise|group-wise[:k]] \
+                 [--dispatch formula|measured] [--dispatch-profile <file>] \
                  [--checkpoint-dir <d> --checkpoint-every <k> --keep-last <n>] \
                  [--on-nonfinite abort|skip|rollback] [--resume]"
             );
             println!("       ckpt inspect <checkpoint.fdp|dir> | ckpt list <dir>");
-            println!("       bench [--model <m>] [--strategy a,b,...] [--styles a,b,...] [--json]");
+            println!(
+                "       bench [--model <m>] [--strategy a,b,...] [--styles a,b,...] \
+                 [--threads <n>] [--json]"
+            );
+            println!(
+                "       complexity [--model <m>] [--batch <b>] \
+                 [--dispatch formula|measured] [--dispatch-profile <file>]"
+            );
+            println!("       calibrate-dispatch [--threads <n>] [--dispatch-profile <file>]");
             println!(
                 "       bench-check [--current a.json,b.json] [--baseline ci/bench_baseline.json] \
                  [--time-tolerance 1.0] [--summary out.md]"
@@ -231,6 +245,49 @@ fn cmd_complexity(args: &Args) -> i32 {
         layers.len()
     );
 
+    // per-layer route report under the active dispatch: `--dispatch
+    // measured [--dispatch-profile f]` shows exactly which layers a
+    // measured cost profile flips relative to the paper's formula
+    let dispatch = match fastdp::runtime::native::autotune::resolve_dispatch(
+        args.get_or("dispatch", "formula"),
+        std::path::Path::new(args.get_or("dispatch-profile", "fastdp_dispatch.json")),
+        args.get_usize("threads", 0),
+    ) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("dispatch error: {e}");
+            return 2;
+        }
+    };
+    let route = |ghost: bool| if ghost { "ghost" } else { "inst" };
+    let mut t = Table::new(
+        &format!("per-layer norm route (active dispatch: {})", dispatch.name()),
+        &["layer", "T", "d", "p", "formula", "active"],
+    );
+    let mut flips = 0usize;
+    for l in &layers {
+        let f = complexity::ghost_preferred(l);
+        let m = dispatch.ghost_preferred(l);
+        if f != m {
+            flips += 1;
+        }
+        t.row(&[
+            l.name.clone(),
+            l.t.to_string(),
+            l.d.to_string(),
+            l.p.to_string(),
+            route(f).into(),
+            format!("{}{}", route(m), if f != m { " *" } else { "" }),
+        ]);
+    }
+    print!("{}", t.render());
+    if dispatch.name() == "measured" {
+        println!(
+            "measured dispatch flips {flips}/{} layer route(s) vs the formula",
+            layers.len()
+        );
+    }
+
     // clipping-style cost reporting: the fused schedule frees each
     // group's book-kept output-gradient cache at its group boundary
     // (He et al. / Bu et al. group-wise clipping); the legacy column is
@@ -389,6 +446,34 @@ fn cmd_calibrate(args: &Args) -> i32 {
         t.row(&[s.to_string(), format!("{:.4}", privacy::epsilon_for(q, sigma, s, delta))]);
     }
     print!("{}", t.render());
+    0
+}
+
+fn cmd_calibrate_dispatch(args: &Args) -> i32 {
+    use fastdp::runtime::native::autotune;
+    let threads = args.get_usize("threads", 0);
+    let path =
+        std::path::PathBuf::from(args.get_or("dispatch-profile", "fastdp_dispatch.json"));
+    let profile = autotune::calibrate(threads);
+    println!(
+        "calibrated ghost-vs-instantiation dispatch on {} thread(s), isa {}:",
+        profile.threads, profile.isa
+    );
+    println!(
+        "  ghost norm     : {:.3e} s/FLOP\n  instantiation  : {:.3e} s/FLOP\n  \
+         ghost/inst cost: {:.3}x",
+        profile.ghost_secs_per_flop,
+        profile.inst_secs_per_flop,
+        profile.ghost_secs_per_flop / profile.inst_secs_per_flop,
+    );
+    if let Err(e) = autotune::save_profile(&path, &profile) {
+        eprintln!("profile write error: {e}");
+        return 1;
+    }
+    println!(
+        "profile cached to {} (pass --dispatch measured to use it)",
+        path.display()
+    );
     0
 }
 

@@ -207,11 +207,17 @@ pub fn create_backend(cfg: &crate::config::TrainConfig) -> Result<Box<dyn Backen
             })?;
             let strategy = crate::complexity::Strategy::parse(&cfg.strategy)
                 .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
-            Ok(Box::new(native::NativeBackend::with_style(
+            let dispatch = native::autotune::resolve_dispatch(
+                &cfg.dispatch,
+                &cfg.dispatch_profile,
+                cfg.threads,
+            )?;
+            Ok(Box::new(native::NativeBackend::with_style_dispatch(
                 spec,
                 strategy,
                 style,
                 cfg.threads,
+                &dispatch,
             )?))
         }
         "pjrt" if style != crate::complexity::ClippingStyle::AllLayer => bail!(

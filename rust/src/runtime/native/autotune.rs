@@ -1,0 +1,182 @@
+//! Startup microbenchmark calibrating the measured ghost-vs-
+//! instantiation dispatch (`complexity::dispatch`) to this machine.
+//!
+//! Calibration times the two real norm kernels — `kernels::ghost_norm`
+//! and `kernels::psg_norms_streaming` — on one mid-size calibration
+//! layer with *equal* FLOP counts on both routes (`T(p+d) = pd`, so
+//! the two module costs coincide), then divides the best-of-reps wall time
+//! by the analytic FLOP count to get seconds-per-FLOP coefficients.
+//! The profile is cached to a JSON file so later runs skip the bench;
+//! `resolve_dispatch` is the single entry point the trainer and CLI
+//! use, implementing the mode/cache/fallback policy:
+//!
+//! * mode `formula` → no benching, the paper's rule;
+//! * mode `measured` + readable valid cache → use it;
+//! * mode `measured` + no cache → calibrate now, write the cache;
+//! * mode `measured` + corrupt/stale/unreadable cache → **warn and
+//!   fall back to the formula** (never an error: a bad cache file must
+//!   not stop training).
+
+use super::kernels;
+use super::par;
+use super::simd;
+use crate::arch::{LayerDims, LayerKind};
+use crate::complexity::dispatch::{Dispatch, DispatchProfile};
+use crate::complexity::{module_time, Module};
+use crate::error::Result;
+use crate::json;
+use crate::json::Value;
+use crate::util::rng::Xoshiro256;
+use std::path::Path;
+use std::time::Instant;
+
+/// Calibration layer, chosen so both routes cost the same 2.1 MFLOP:
+/// `2*B*T^2*(p+d) == 2*B*T*p*d` exactly when `T*(p+d) == p*d`, and
+/// `32 * (64+64) == 64 * 64`. Equal FLOPs make the coefficient ratio a
+/// direct measured speed ratio of the two kernels.
+const CAL_B: usize = 8;
+const CAL_T: usize = 32;
+const CAL_D: usize = 64;
+const CAL_P: usize = 64;
+/// Timed repetitions (plus one untimed warm-up); best-of is used.
+const CAL_REPS: usize = 5;
+
+/// Run the calibration microbenchmark at the given thread count
+/// (0 = `par::default_threads()`).
+pub fn calibrate(threads: usize) -> DispatchProfile {
+    let threads = if threads == 0 {
+        par::default_threads()
+    } else {
+        threads
+    };
+    let (b, t, d, p) = (CAL_B, CAL_T, CAL_D, CAL_P);
+    let mut rng = Xoshiro256::new(0xCA11B8);
+    let a: Vec<f32> = (0..b * t * d).map(|_| rng.next_f32() - 0.5).collect();
+    let g: Vec<f32> = (0..b * t * p).map(|_| rng.next_f32() - 0.5).collect();
+    let mut sq = vec![0.0f32; b];
+
+    let mut gram_a = vec![0.0f32; b * t * t];
+    let mut gram_g = vec![0.0f32; b * t * t];
+    let mut ghost_best = f64::INFINITY;
+    for rep in 0..=CAL_REPS {
+        sq.fill(0.0);
+        let t0 = Instant::now();
+        kernels::ghost_norm(
+            &a,
+            &g,
+            b,
+            t,
+            d,
+            p,
+            &mut gram_a,
+            &mut gram_g,
+            &mut sq,
+            threads,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        if rep > 0 {
+            ghost_best = ghost_best.min(dt);
+        }
+    }
+    // the outputs keep the timed calls observable (and sane)
+    assert!(sq.iter().all(|v| v.is_finite()));
+
+    let workers = threads.max(1).min(b.max(1));
+    let mut scratch = vec![0.0f32; workers * d * p];
+    let mut inst_best = f64::INFINITY;
+    for rep in 0..=CAL_REPS {
+        sq.fill(0.0);
+        let t0 = Instant::now();
+        kernels::psg_norms_streaming(&a, &g, b, t, d, p, &mut scratch, &mut sq, threads);
+        let dt = t0.elapsed().as_secs_f64();
+        if rep > 0 {
+            inst_best = inst_best.min(dt);
+        }
+    }
+    assert!(sq.iter().all(|v| v.is_finite()));
+
+    let l = LayerDims {
+        kind: LayerKind::Linear,
+        name: "calibration".to_string(),
+        t: t as u64,
+        d: d as u64,
+        p: p as u64,
+    };
+    let ghost_flops = module_time(Module::GhostNorm, b as f64, &l);
+    let inst_flops = module_time(Module::PsgInstantiation, b as f64, &l);
+    // clock floor: a kernel faster than the timer granularity still
+    // gets a positive coefficient
+    let floor = 1e-9;
+    DispatchProfile {
+        ghost_secs_per_flop: ghost_best.max(floor) / ghost_flops,
+        inst_secs_per_flop: inst_best.max(floor) / inst_flops,
+        threads,
+        isa: simd::isa_name().to_string(),
+    }
+}
+
+/// Write a profile to its cache file (pretty JSON).
+pub fn save_profile(path: &Path, profile: &DispatchProfile) -> std::result::Result<(), String> {
+    let mut text = profile.to_json().to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Load and validate a cached profile.
+pub fn load_profile(path: &Path) -> std::result::Result<DispatchProfile, String> {
+    let v: Value = json::from_file(path)?;
+    DispatchProfile::from_json(&v)
+}
+
+/// Resolve the dispatch for a run. `mode` is `"formula"` or
+/// `"measured"`; `threads` is the run's thread count (0 = default) and
+/// only matters when a fresh calibration runs. See the module docs for
+/// the cache/fallback policy. Unknown modes are the only error.
+pub fn resolve_dispatch(mode: &str, profile_path: &Path, threads: usize) -> Result<Dispatch> {
+    match mode {
+        "formula" => Ok(Dispatch::Formula),
+        "measured" => {
+            if profile_path.exists() {
+                match load_profile(profile_path) {
+                    Ok(p) => Ok(Dispatch::Measured(p)),
+                    Err(e) => {
+                        eprintln!(
+                            "warning: dispatch profile {}: {e}; falling back to the formula rule \
+                             (delete the file or rerun `fastdp calibrate-dispatch` to re-measure)",
+                            profile_path.display()
+                        );
+                        Ok(Dispatch::Formula)
+                    }
+                }
+            } else {
+                let profile = calibrate(threads);
+                if let Err(e) = save_profile(profile_path, &profile) {
+                    eprintln!("warning: could not cache the dispatch profile: {e}");
+                }
+                Ok(Dispatch::Measured(profile))
+            }
+        }
+        other => crate::bail!("unknown dispatch mode '{other}' (expected 'formula' or 'measured')"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrate_produces_positive_coefficients() {
+        let p = calibrate(1);
+        assert!(p.ghost_secs_per_flop > 0.0 && p.ghost_secs_per_flop.is_finite());
+        assert!(p.inst_secs_per_flop > 0.0 && p.inst_secs_per_flop.is_finite());
+        assert_eq!(p.threads, 1);
+        assert_eq!(p.isa, simd::isa_name());
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_modes() {
+        let path = std::env::temp_dir().join("fastdp_test_no_such_profile.json");
+        assert!(resolve_dispatch("formula", &path, 1).is_ok());
+        assert!(resolve_dispatch("sometimes", &path, 1).is_err());
+    }
+}

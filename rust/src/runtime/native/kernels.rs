@@ -8,13 +8,25 @@
 //! * `c` — per-sample clip factors, `(B,)`
 //!
 //! Performance model (see DESIGN.md):
-//! * matmuls are cache-blocked over the reduction dimension and fan out
-//!   over rows / the batch via `par`;
+//! * every inner loop bottoms out in the wide-lane primitives of
+//!   `simd` (`dot` / `axpy` / `axpy4`) — `[f32; LANES]` chunk
+//!   accumulators with runtime-detected `core::arch` specializations;
+//! * matmuls are register-tiled (the `MR`-row tile of `backward_data`,
+//!   the 4-way `axpy4` reduction unroll of the forward) and cache-
+//!   blocked over the reduction dimension (`KC`), fanning out over
+//!   rows / the batch via `par`;
 //! * reductions over the batch accumulate into per-worker partial
-//!   buffers merged in worker order, so results are deterministic for a
-//!   fixed thread count;
+//!   buffers merged in worker order;
 //! * no kernel allocates: all scratch is passed in by the caller (the
 //!   backend checks it out of the step arena).
+//!
+//! Determinism contract: for a fixed thread count, instruction set
+//! (`simd::active_isa`), lane width, and tile config, every kernel is a
+//! pure function of its inputs — step results are bitwise reproducible
+//! run-to-run. Changing any of those knobs may change final bits (lane
+//! reassociation, FMA contraction, different reduction split), which is
+//! why golden/bitwise tests pin the configuration rather than compare
+//! across configurations.
 //!
 //! The clipped-weighted-sum kernel is shared by every DP strategy, so
 //! two strategies given bitwise-identical clip factors produce
@@ -24,23 +36,25 @@
 #![allow(clippy::too_many_arguments)]
 
 use super::par;
+use super::simd;
+use super::simd::dot;
 
-/// Reduction-dimension block size for the forward matmul: keeps a block
-/// of weight rows hot in L1/L2 while streaming the row chunk.
-const KB: usize = 64;
+/// Reduction-dimension cache block (the `KC` of an MR×NR×KC tiling):
+/// keeps a block of weight rows hot in L1/L2 while streaming the row
+/// chunk. 256 rows × a typical `p` fits comfortably in L2.
+const KC: usize = 256;
 
-#[inline]
-fn dot(x: &[f32], y: &[f32]) -> f32 {
-    let mut acc = 0.0f32;
-    for (a, b) in x.iter().zip(y) {
-        acc += a * b;
-    }
-    acc
-}
+/// Register-tile height: rows processed together so a streamed weight
+/// row is reused `MR` times from registers/L1 instead of once.
+const MR: usize = 4;
 
 /// Forward: `out (rows, p) = a (rows, d) · w (d, p) [+ bias]`.
 ///
-/// `rows = B*T`. Cache-blocked i-k-j loop, threaded over rows.
+/// `rows = B*T`. Register-tiled i-k-j loop, threaded over rows: the
+/// reduction dimension is cache-blocked by `KC` and unrolled 4-wide
+/// through `simd::axpy4`, so the `out` row is loaded/stored once per
+/// four weight rows instead of once per weight row. Groups whose four
+/// coefficients are all zero are skipped (ReLU sparsity).
 pub fn linear_forward(
     a: &[f32],
     w: &[f32],
@@ -62,18 +76,32 @@ pub fn linear_forward(
             }
         }
         let n_rows = chunk.len() / p;
-        for j0 in (0..d).step_by(KB) {
-            let j1 = (j0 + KB).min(d);
+        for j0 in (0..d).step_by(KC) {
+            let j1 = (j0 + KC).min(d);
             for ri in 0..n_rows {
                 let a_row = &a[(r0 + ri) * d..(r0 + ri) * d + d];
                 let out_row = &mut chunk[ri * p..ri * p + p];
-                for (j, &av) in a_row.iter().enumerate().take(j1).skip(j0) {
-                    if av != 0.0 {
-                        let w_row = &w[j * p..j * p + p];
-                        for (o, &wv) in out_row.iter_mut().zip(w_row) {
-                            *o += av * wv;
-                        }
+                let mut j = j0;
+                while j + 4 <= j1 {
+                    let c = [a_row[j], a_row[j + 1], a_row[j + 2], a_row[j + 3]];
+                    if c != [0.0; 4] {
+                        simd::axpy4(
+                            c,
+                            &w[j * p..j * p + p],
+                            &w[(j + 1) * p..(j + 1) * p + p],
+                            &w[(j + 2) * p..(j + 2) * p + p],
+                            &w[(j + 3) * p..(j + 3) * p + p],
+                            out_row,
+                        );
                     }
+                    j += 4;
+                }
+                while j < j1 {
+                    let av = a_row[j];
+                    if av != 0.0 {
+                        simd::axpy(av, &w[j * p..j * p + p], out_row);
+                    }
+                    j += 1;
                 }
             }
         }
@@ -82,6 +110,11 @@ pub fn linear_forward(
 
 /// Backward (data): `da (rows, d) = g (rows, p) · w^T`, i.e.
 /// `da[r, j] = g[r, :] · w[j, :]` — contiguous dot products.
+///
+/// Register-tiled `MR` rows at a time: each streamed weight row feeds
+/// `MR` dots while it is hot, cutting the weight-matrix traffic by
+/// `MR`x. Every element is still one `simd::dot` of the same operands,
+/// so the result is independent of the tiling.
 pub fn backward_data(
     g: &[f32],
     w: &[f32],
@@ -95,11 +128,31 @@ pub fn backward_data(
     debug_assert_eq!(w.len(), d * p);
     debug_assert_eq!(da.len(), rows * d);
     par::par_rows(da, rows, d, threads, |r0, chunk| {
-        for (ri, da_row) in chunk.chunks_mut(d).enumerate() {
-            let g_row = &g[(r0 + ri) * p..(r0 + ri) * p + p];
+        let mut blocks = chunk.chunks_exact_mut(MR * d);
+        let mut r = r0;
+        for block in &mut blocks {
+            let (da0, rest) = block.split_at_mut(d);
+            let (da1, rest) = rest.split_at_mut(d);
+            let (da2, da3) = rest.split_at_mut(d);
+            let g0 = &g[r * p..r * p + p];
+            let g1 = &g[(r + 1) * p..(r + 1) * p + p];
+            let g2 = &g[(r + 2) * p..(r + 2) * p + p];
+            let g3 = &g[(r + 3) * p..(r + 3) * p + p];
+            for j in 0..d {
+                let w_row = &w[j * p..j * p + p];
+                da0[j] = dot(g0, w_row);
+                da1[j] = dot(g1, w_row);
+                da2[j] = dot(g2, w_row);
+                da3[j] = dot(g3, w_row);
+            }
+            r += MR;
+        }
+        for da_row in blocks.into_remainder().chunks_mut(d) {
+            let g_row = &g[r * p..r * p + p];
             for (j, slot) in da_row.iter_mut().enumerate() {
                 *slot = dot(g_row, &w[j * p..j * p + p]);
             }
+            r += 1;
         }
     });
 }
@@ -249,10 +302,7 @@ pub fn psg_instantiate(
                 let g_row = &g[row * p..row * p + p];
                 for (j, &av) in a_row.iter().enumerate() {
                     if av != 0.0 {
-                        let acc = &mut pg[j * p..j * p + p];
-                        for (o, &gv) in acc.iter_mut().zip(g_row) {
-                            *o += av * gv;
-                        }
+                        simd::axpy(av, g_row, &mut pg[j * p..j * p + p]);
                     }
                 }
             }
@@ -298,10 +348,7 @@ pub fn psg_norms_streaming(
                 let g_row = &g[row * p..row * p + p];
                 for (j, &av) in a_row.iter().enumerate() {
                     if av != 0.0 {
-                        let acc = &mut scr[j * p..j * p + p];
-                        for (o, &gv) in acc.iter_mut().zip(g_row) {
-                            *o += av * gv;
-                        }
+                        simd::axpy(av, g_row, &mut scr[j * p..j * p + p]);
                     }
                 }
             }
@@ -348,10 +395,7 @@ pub fn weighted_grad(
                 for (j, &av) in a_row.iter().enumerate() {
                     let s = ci * av;
                     if s != 0.0 {
-                        let slot = &mut acc[j * p..j * p + p];
-                        for (o, &gv) in slot.iter_mut().zip(g_row) {
-                            *o += s * gv;
-                        }
+                        simd::axpy(s, g_row, &mut acc[j * p..j * p + p]);
                     }
                 }
             }
@@ -376,6 +420,10 @@ pub fn weighted_grad(
 
 /// Weighted sum from **stored** per-sample gradients (BK-MixOpt reuses
 /// the instantiation done for the norms): `out += sum_i c_i psg_i`.
+///
+/// The batch reduction is unrolled 4 samples wide (`simd::axpy4`), so
+/// each output chunk is loaded/stored once per four samples; groups
+/// whose four clip factors are all zero are skipped (flat clipping).
 pub fn weighted_sum_psg(
     psg: &[f32],
     c: &[f32],
@@ -389,15 +437,27 @@ pub fn weighted_sum_psg(
     debug_assert_eq!(psg.len(), b * dp);
     debug_assert_eq!(out.len(), dp);
     par::par_rows(out, d, p, threads, |j0, chunk| {
-        for (i, &ci) in c.iter().enumerate().take(b) {
-            if ci == 0.0 {
-                continue;
+        let base = |i: usize| i * dp + j0 * p;
+        let mut i = 0usize;
+        while i + 4 <= b {
+            let cc = [c[i], c[i + 1], c[i + 2], c[i + 3]];
+            if cc != [0.0; 4] {
+                simd::axpy4(
+                    cc,
+                    &psg[base(i)..base(i) + chunk.len()],
+                    &psg[base(i + 1)..base(i + 1) + chunk.len()],
+                    &psg[base(i + 2)..base(i + 2) + chunk.len()],
+                    &psg[base(i + 3)..base(i + 3) + chunk.len()],
+                    chunk,
+                );
             }
-            let base = i * dp + j0 * p;
-            let src = &psg[base..base + chunk.len()];
-            for (o, &s) in chunk.iter_mut().zip(src) {
-                *o += ci * s;
+            i += 4;
+        }
+        while i < b {
+            if c[i] != 0.0 {
+                simd::axpy(c[i], &psg[base(i)..base(i) + chunk.len()], chunk);
             }
+            i += 1;
         }
     });
 }
@@ -420,9 +480,7 @@ pub fn bias_sq_norms(
             scr.fill(0.0);
             for tt in 0..t {
                 let g_row = &g[(i * t + tt) * p..(i * t + tt) * p + p];
-                for (o, &gv) in scr.iter_mut().zip(g_row) {
-                    *o += gv;
-                }
+                simd::axpy(1.0, g_row, scr);
             }
             sqc[k] += dot(scr, scr);
         }
@@ -443,9 +501,7 @@ pub fn bias_grad(g: &[f32], c: Option<&[f32]>, b: usize, t: usize, p: usize, out
         }
         for tt in 0..t {
             let g_row = &g[(i * t + tt) * p..(i * t + tt) * p + p];
-            for (o, &gv) in out.iter_mut().zip(g_row) {
-                *o += ci * gv;
-            }
+            simd::axpy(ci, g_row, out);
         }
     }
 }
@@ -677,10 +733,7 @@ pub fn embedding_weighted_grad(
         for tt in 0..t {
             let tok = tokens[i * t + tt] as usize;
             let g_row = &g[(i * t + tt) * p..(i * t + tt) * p + p];
-            let slot = &mut out[tok * p..tok * p + p];
-            for (o, &gv) in slot.iter_mut().zip(g_row) {
-                *o += ci * gv;
-            }
+            simd::axpy(ci, g_row, &mut out[tok * p..tok * p + p]);
         }
     }
 }
@@ -812,14 +865,12 @@ pub fn attention_forward(
             for h in 0..heads {
                 let ph = &probs[(i * heads + h) * t * t..][..t * t];
                 for t1 in 0..t {
+                    let out = &mut av[t1 * d + h * hd..t1 * d + h * hd + hd];
                     for t2 in 0..=t1 {
                         let p = ph[t1 * t + t2];
                         if p != 0.0 {
                             let v = &qkv[(i * t + t2) * w3 + 2 * d + h * hd..][..hd];
-                            let out = &mut av[t1 * d + h * hd..t1 * d + h * hd + hd];
-                            for (o, &vv) in out.iter_mut().zip(v) {
-                                *o += p * vv;
-                            }
+                            simd::axpy(p, v, out);
                         }
                     }
                 }
@@ -880,28 +931,13 @@ pub fn attention_backward(
                         let v = &qkv[(i * t + t2) * w3 + 2 * d + h * hd..][..hd];
                         let gs = p * (dot(ga, v) - dotsum) * scale;
                         // dL/d v_t2 += p * g_ao_t1
-                        {
-                            let gv = &mut gq[t2 * w3 + 2 * d + h * hd..t2 * w3 + 2 * d + h * hd + hd];
-                            for (o, &gav) in gv.iter_mut().zip(ga) {
-                                *o += p * gav;
-                            }
-                        }
+                        simd::axpy(p, ga, &mut gq[t2 * w3 + 2 * d + h * hd..][..hd]);
                         // dL/d q_t1 += gs * k_t2
-                        {
-                            let kk = &qkv[(i * t + t2) * w3 + d + h * hd..][..hd];
-                            let gq1 = &mut gq[t1 * w3 + h * hd..t1 * w3 + h * hd + hd];
-                            for (o, &kv) in gq1.iter_mut().zip(kk) {
-                                *o += gs * kv;
-                            }
-                        }
+                        let kk = &qkv[(i * t + t2) * w3 + d + h * hd..][..hd];
+                        simd::axpy(gs, kk, &mut gq[t1 * w3 + h * hd..][..hd]);
                         // dL/d k_t2 += gs * q_t1
-                        {
-                            let q = &qkv[(i * t + t1) * w3 + h * hd..][..hd];
-                            let gk = &mut gq[t2 * w3 + d + h * hd..t2 * w3 + d + h * hd + hd];
-                            for (o, &qv) in gk.iter_mut().zip(q) {
-                                *o += gs * qv;
-                            }
-                        }
+                        let q = &qkv[(i * t + t1) * w3 + h * hd..][..hd];
+                        simd::axpy(gs, q, &mut gq[t2 * w3 + d + h * hd..][..hd]);
                     }
                 }
             }

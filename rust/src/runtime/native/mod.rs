@@ -3,8 +3,10 @@
 //! Executes arbitrary stacks of [`layers::DpLayer`] modules (Linear,
 //! ReLU, Embedding, LayerNorm — see `model`) with the fused kernels in
 //! `kernels`, dispatching per layer between the ghost-norm and
-//! per-sample-instantiation routes exactly as the complexity engine's
-//! `ghost_preferred` decides. One `NativeBackend` is constructed per
+//! per-sample-instantiation routes as a [`Dispatch`] decides — the
+//! complexity engine's `2T^2 < pd` formula by default, or a measured
+//! per-machine cost model (`complexity::dispatch` + `autotune`)
+//! calibrated at startup. One `NativeBackend` is constructed per
 //! (model, strategy, clipping style) triple and implements the
 //! [`Backend`](crate::runtime::Backend) trait the coordinator drives.
 //!
@@ -34,10 +36,12 @@
 //! allocation is zero — asserted by tests and reported by the bench.
 
 pub mod arena;
+pub mod autotune;
 pub mod kernels;
 pub mod layers;
 pub mod model;
 pub mod par;
+pub mod simd;
 
 #[cfg(test)]
 pub(crate) mod reference;
@@ -47,7 +51,7 @@ use self::kernels::ClipKind;
 use self::layers::{Ctx, DpLayer, LayerIn, NormRoute, Scratch, StackRun};
 use self::model::NativeSpec;
 use crate::arch::LayerKind;
-use crate::complexity::{ghost_preferred, ClippingStyle, Strategy};
+use crate::complexity::{ClippingStyle, Dispatch, Strategy};
 use crate::error::Result;
 use crate::runtime::{AllocStats, Backend, BatchX, ModelInfo, StepHyper, StepOut};
 use crate::util::rng::Xoshiro256;
@@ -120,12 +124,28 @@ impl NativeBackend {
         Self::with_style(spec, strategy, ClippingStyle::AllLayer, threads)
     }
 
-    /// Build with an explicit clipping style.
+    /// Build with an explicit clipping style and the formulaic
+    /// ghost-vs-instantiation dispatch (`2T^2 < pd`).
     pub fn with_style(
         spec: NativeSpec,
         strategy: Strategy,
         style: ClippingStyle,
         threads: usize,
+    ) -> Result<Self> {
+        Self::with_style_dispatch(spec, strategy, style, threads, &Dispatch::Formula)
+    }
+
+    /// Build with an explicit clipping style and norm-route dispatch.
+    /// `dispatch` decides ghost vs instantiation per mixed-strategy
+    /// layer — either the paper's formula or a measured per-machine
+    /// cost model (see `complexity::dispatch` and `autotune`). The
+    /// non-mixed strategies force their route and ignore it.
+    pub fn with_style_dispatch(
+        spec: NativeSpec,
+        strategy: Strategy,
+        style: ClippingStyle,
+        threads: usize,
+        dispatch: &Dispatch,
     ) -> Result<Self> {
         let clip_kind = ClipKind::parse(&spec.clip_fn).ok_or_else(|| {
             anyhow!(
@@ -194,7 +214,7 @@ impl NativeBackend {
                         Strategy::Opacus | Strategy::FastGradClip => NormRoute::Inst,
                         Strategy::GhostClip | Strategy::Bk | Strategy::NonDp => NormRoute::Ghost,
                         Strategy::MixGhostClip | Strategy::BkMixGhostClip | Strategy::BkMixOpt => {
-                            if ghost_preferred(&d) {
+                            if dispatch.ghost_preferred(&d) {
                                 NormRoute::Ghost
                             } else {
                                 NormRoute::Inst

@@ -6,21 +6,53 @@
 //! hands one chunk per worker. Inputs are shared as `&[f32]`. This keeps
 //! every kernel data-race-free by construction — no worker ever writes
 //! memory another can see — and makes results deterministic for a fixed
-//! thread count (reductions merge per-worker partials in worker order).
+//! thread count (reductions merge per-worker partials in worker order;
+//! the split itself is a pure function of `(items, threads)`).
 //!
-//! Spawn cost is a few microseconds per region; the kernels only fan out
-//! when the work comfortably amortizes it (see `MIN_ROWS_PER_THREAD`).
+//! Splits are **balanced**: `items` divides into ranges whose sizes
+//! differ by at most one (the first `items % workers` workers take one
+//! extra). The old ceil-split handed the last worker anywhere from half
+//! a share to a double share on ragged counts — the slowest worker sets
+//! the region's wall time, so the ragged tail was pure loss.
+//!
+//! Spawn cost is a few microseconds per region. Row regions
+//! (`par_rows`) are work-size-aware: the worker count is capped so every
+//! worker owns at least `MIN_ROWS_PER_THREAD` rows, degenerating to a
+//! serial call for small outputs. Batch regions (`par_batch` /
+//! `par_reduce`) keep one worker per item up to `threads` — their items
+//! (per-sample norms, gradient reductions) are heavyweight enough to
+//! amortize a spawn each.
 
-/// Below this many rows per worker a parallel region runs serially.
+/// Minimum rows a `par_rows` worker must own; fewer rows than
+/// `2 * MIN_ROWS_PER_THREAD` runs serially.
 const MIN_ROWS_PER_THREAD: usize = 8;
 
-/// Default worker count: one per available core, capped to keep spawn
-/// overhead sane on very wide machines.
+/// Default worker count: one per available core. There is no hard cap —
+/// `--threads N` (config `threads`) is the way to bound fan-out on wide
+/// machines, and the work-size-aware splits below already keep small
+/// regions from spawning more workers than their rows can feed.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
-        .min(16)
+}
+
+/// Sizes of the balanced partition of `items` into `workers` consecutive
+/// ranges: `base = items / workers` each, the first `items % workers`
+/// ranges getting one extra.
+fn split_sizes(items: usize, workers: usize) -> impl Iterator<Item = usize> {
+    let base = items / workers;
+    let extra = items % workers;
+    (0..workers).map(move |w| base + usize::from(w < extra))
+}
+
+/// Work-size-aware worker count for row regions: never more than
+/// `threads`, never more than one worker per `MIN_ROWS_PER_THREAD` rows.
+fn row_workers(rows: usize, threads: usize) -> usize {
+    threads
+        .max(1)
+        .min(rows.max(1))
+        .min((rows / MIN_ROWS_PER_THREAD).max(1))
 }
 
 /// Split `out` into per-worker chunks of whole rows (`row_w` elements per
@@ -31,23 +63,28 @@ where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     debug_assert_eq!(out.len(), rows * row_w);
-    let t = threads.max(1).min(rows.max(1));
-    if t == 1 || rows < 2 * MIN_ROWS_PER_THREAD {
+    let t = row_workers(rows, threads);
+    if t == 1 {
         f(0, out);
         return;
     }
-    let rows_per = (rows + t - 1) / t;
     std::thread::scope(|s| {
-        for (ci, chunk) in out.chunks_mut(rows_per * row_w).enumerate() {
+        let mut rest = out;
+        let mut r0 = 0usize;
+        for n in split_sizes(rows, t) {
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(n * row_w);
+            rest = tail;
             let f = &f;
-            s.spawn(move || f(ci * rows_per, chunk));
+            let first = r0;
+            s.spawn(move || f(first, mine));
+            r0 += n;
         }
     });
 }
 
-/// Fan a batch reduction out over workers: `out_chunks` is split by
-/// `chunk_out` rows (of width `out_w`), `scratch` provides one disjoint
-/// `scratch_w`-sized accumulator per worker. `f(first_item, out_chunk,
+/// Fan a batch reduction out over workers: `out` is split by items (of
+/// width `out_w`), `scratch` provides one disjoint `scratch_w`-sized
+/// accumulator per worker. `f(first_item, n_items, out_chunk,
 /// scratch_chunk)` runs once per worker. Used by kernels whose output is
 /// per-sample (norms) or that reduce over the batch into per-worker
 /// partial buffers.
@@ -70,15 +107,19 @@ pub fn par_batch<F>(
         return;
     }
     debug_assert!(scratch.len() >= t * scratch_w);
-    let items_per = (items + t - 1) / t;
     std::thread::scope(|s| {
+        let mut out_rest = out;
         let mut rest = scratch;
-        for (ci, chunk) in out.chunks_mut(items_per * out_w).enumerate() {
+        let mut i0 = 0usize;
+        for n in split_sizes(items, t) {
+            let (chunk, out_tail) = std::mem::take(&mut out_rest).split_at_mut(n * out_w);
+            out_rest = out_tail;
             let (mine, tail) = std::mem::take(&mut rest).split_at_mut(scratch_w);
             rest = tail;
             let f = &f;
-            let n_items = chunk.len() / out_w.max(1);
-            s.spawn(move || f(ci * items_per, n_items, chunk, mine));
+            let first = i0;
+            s.spawn(move || f(first, n, chunk, mine));
+            i0 += n;
         }
     });
 }
@@ -98,16 +139,15 @@ where
         return;
     }
     debug_assert!(scratch.len() >= t * scratch_w);
-    let per = (items + t - 1) / t;
     std::thread::scope(|s| {
         let mut rest = scratch;
-        let mut i0 = 0;
-        while i0 < items {
-            let n = per.min(items - i0);
+        let mut i0 = 0usize;
+        for n in split_sizes(items, t) {
             let (mine, tail) = std::mem::take(&mut rest).split_at_mut(scratch_w);
             rest = tail;
             let f = &f;
-            s.spawn(move || f(i0, n, mine));
+            let first = i0;
+            s.spawn(move || f(first, n, mine));
             i0 += n;
         }
     });
@@ -116,6 +156,39 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn split_sizes_are_balanced() {
+        // The ragged case the old ceil-split got wrong: 17 rows over 4
+        // workers was [5, 5, 5, 2]; balanced is [5, 4, 4, 4].
+        assert_eq!(split_sizes(17, 4).collect::<Vec<_>>(), vec![5, 4, 4, 4]);
+        assert_eq!(split_sizes(21, 4).collect::<Vec<_>>(), vec![6, 5, 5, 5]);
+        assert_eq!(split_sizes(8, 4).collect::<Vec<_>>(), vec![2, 2, 2, 2]);
+        assert_eq!(split_sizes(5, 5).collect::<Vec<_>>(), vec![1, 1, 1, 1, 1]);
+        for (items, workers) in [(17usize, 4usize), (103, 7), (64, 16), (9, 2)] {
+            let sizes: Vec<usize> = split_sizes(items, workers).collect();
+            assert_eq!(sizes.iter().sum::<usize>(), items);
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "{items}/{workers}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn par_rows_chunks_are_balanced() {
+        // 35 rows over 4 threads: work-size cap allows all 4 workers
+        // (35 / MIN_ROWS_PER_THREAD = 4) and the split is [9, 9, 9, 8].
+        let rows = 35;
+        let w = 3;
+        let mut out = vec![0f32; rows * w];
+        let seen = Mutex::new(Vec::new());
+        par_rows(&mut out, rows, w, 4, |r0, chunk| {
+            seen.lock().unwrap().push((r0, chunk.len() / w));
+        });
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(0, 9), (9, 9), (18, 9), (27, 8)]);
+    }
 
     #[test]
     fn par_rows_covers_all_rows() {
@@ -148,6 +221,16 @@ mod tests {
     }
 
     #[test]
+    fn par_rows_worker_count_is_work_size_aware() {
+        // 16 rows with 8 threads offered: only 2 workers spawn, each
+        // owning MIN_ROWS_PER_THREAD rows.
+        assert_eq!(row_workers(16, 8), 2);
+        assert_eq!(row_workers(7, 8), 1);
+        assert_eq!(row_workers(1024, 8), 8);
+        assert_eq!(row_workers(0, 4), 1);
+    }
+
+    #[test]
     fn par_batch_reduces_with_scratch() {
         // Sum i..i+1 per item into out, and count items per worker in
         // scratch slot 0 — verifies disjoint scratch distribution.
@@ -166,6 +249,10 @@ mod tests {
         }
         let counted: f32 = scratch.iter().sum();
         assert_eq!(counted, items as f32);
+        // balanced: 37 over 5 → [8, 8, 7, 7, 7]
+        let mut sizes: Vec<f32> = scratch.clone();
+        sizes.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(sizes, vec![8.0, 8.0, 7.0, 7.0, 7.0]);
     }
 
     #[test]
@@ -181,5 +268,13 @@ mod tests {
         });
         let total: f32 = scratch.iter().sum();
         assert_eq!(total, (items * (items - 1) / 2) as f32);
+    }
+
+    #[test]
+    fn default_threads_is_uncapped_core_count() {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        assert_eq!(default_threads(), cores);
     }
 }

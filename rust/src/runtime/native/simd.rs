@@ -1,0 +1,320 @@
+//! Wide-lane f32 primitives for the hot kernels.
+//!
+//! Every inner loop in `kernels.rs` bottoms out in one of three shapes:
+//! a dot product (`dot`), a scaled accumulate (`axpy`), or a 4-way fused
+//! scaled accumulate (`axpy4`, the register-tiled variant that amortizes
+//! the load/store of the accumulator row over four reduction steps).
+//! Each primitive has
+//!
+//! * a **portable** body written around `[f32; LANES]` chunk
+//!   accumulators — fixed-width arrays the autovectorizer reliably turns
+//!   into SIMD on any target, with a scalar tail for the remainder — and
+//! * a **specialized** body behind runtime feature detection
+//!   (`core::arch` AVX2+FMA on x86_64) selected once per process.
+//!
+//! Determinism contract: for a fixed instruction set, lane width
+//! (`LANES`), and thread count, every primitive is a pure function of
+//! its inputs — results are bitwise reproducible run-to-run. Lane
+//! reassociation means results may differ in final bits *across* ISAs
+//! (FMA contracts the multiply-add) or if `LANES` changes; all
+//! cross-run golden tests therefore fix the configuration, and
+//! cross-path invariants (fused vs unfused, style equivalences) hold
+//! bitwise because both sides run the identical primitives. Setting
+//! `FASTDP_FORCE_PORTABLE=1` pins the portable body everywhere, which
+//! CI uses to keep the fallback green.
+//!
+//! The lane reduction order is shared by every body: the `LANES`-wide
+//! accumulator collapses pairwise (`reduce_lanes`), never left-to-right,
+//! so the portable and specialized paths agree in structure and the
+//! portable path keeps the same rounding tree whether or not the
+//! autovectorizer fires.
+
+/// Accumulator width of the portable micro-kernel, in f32 lanes. Eight
+/// lanes = one AVX2 register; wide enough that the autovectorizer emits
+/// full-width SIMD, narrow enough not to spill on 128-bit targets.
+pub const LANES: usize = 8;
+
+/// Instruction set selected for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// `[f32; LANES]` chunk accumulators, autovectorized.
+    Portable,
+    /// AVX2 + FMA `core::arch` bodies (x86_64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2Fma,
+}
+
+static ACTIVE: std::sync::OnceLock<Isa> = std::sync::OnceLock::new();
+
+/// The ISA every primitive dispatches to, detected once per process.
+/// `FASTDP_FORCE_PORTABLE` (any value but `0`) pins `Portable`.
+pub fn active_isa() -> Isa {
+    *ACTIVE.get_or_init(detect)
+}
+
+/// Human-readable ISA name for bench/calibration reports.
+pub fn isa_name() -> &'static str {
+    match active_isa() {
+        Isa::Portable => "portable",
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => "avx2+fma",
+    }
+}
+
+fn detect() -> Isa {
+    if matches!(std::env::var("FASTDP_FORCE_PORTABLE"), Ok(v) if v != "0") {
+        return Isa::Portable;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Isa::Avx2Fma;
+        }
+    }
+    Isa::Portable
+}
+
+/// Collapse a `LANES`-wide accumulator pairwise. The fixed tree (4+4,
+/// then 2+2, then 1+1) is shared by the portable and AVX2 bodies so
+/// both produce the same reduction order for equal lane contents.
+#[inline(always)]
+fn reduce_lanes(acc: [f32; LANES]) -> f32 {
+    let a = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+    let b = [a[0] + a[2], a[1] + a[3]];
+    b[0] + b[1]
+}
+
+/// `sum_i x[i] * y[i]` over `min(x.len(), y.len())` elements.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { dot_avx2(x, y) },
+        Isa::Portable => dot_portable(x, y),
+    }
+}
+
+/// `out[i] += a * x[i]` over `min(x.len(), out.len())` elements.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], out: &mut [f32]) {
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { axpy_avx2(a, x, out) },
+        Isa::Portable => axpy_portable(a, x, out),
+    }
+}
+
+/// `out[i] += c[0]*x0[i] + c[1]*x1[i] + c[2]*x2[i] + c[3]*x3[i]`.
+///
+/// The four products are summed into `out[i]` as one expression per
+/// element (left to right), so the result is independent of whether the
+/// body is scalar or vector for a fixed ISA.
+#[inline]
+pub fn axpy4(c: [f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], out: &mut [f32]) {
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { axpy4_avx2(c, x0, x1, x2, x3, out) },
+        Isa::Portable => axpy4_portable(c, x0, x1, x2, x3, out),
+    }
+}
+
+fn dot_portable(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let (x, y) = (&x[..n], &y[..n]);
+    let mut acc = [0.0f32; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut s = reduce_lanes(acc);
+    for (xv, yv) in xc.remainder().iter().zip(yc.remainder()) {
+        s += xv * yv;
+    }
+    s
+}
+
+fn axpy_portable(a: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len().min(out.len());
+    for (o, xv) in out[..n].iter_mut().zip(&x[..n]) {
+        *o += a * xv;
+    }
+}
+
+fn axpy4_portable(c: [f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], out: &mut [f32]) {
+    let n = out
+        .len()
+        .min(x0.len())
+        .min(x1.len())
+        .min(x2.len())
+        .min(x3.len());
+    for i in 0..n {
+        out[i] += c[0] * x0[i] + c[1] * x1[i] + c[2] * x2[i] + c[3] * x3[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = x.len().min(y.len());
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        acc = _mm256_fmadd_ps(xv, yv, acc);
+        i += LANES;
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut s = reduce_lanes(lanes);
+    while i < n {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(a: f32, x: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len().min(out.len());
+    let av = _mm256_set1_ps(a);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(av, xv, ov));
+        i += LANES;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy4_avx2(c: [f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = out
+        .len()
+        .min(x0.len())
+        .min(x1.len())
+        .min(x2.len())
+        .min(x3.len());
+    let c0 = _mm256_set1_ps(c[0]);
+    let c1 = _mm256_set1_ps(c[1]);
+    let c2 = _mm256_set1_ps(c[2]);
+    let c3 = _mm256_set1_ps(c[3]);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let mut ov = _mm256_loadu_ps(out.as_ptr().add(i));
+        ov = _mm256_fmadd_ps(c0, _mm256_loadu_ps(x0.as_ptr().add(i)), ov);
+        ov = _mm256_fmadd_ps(c1, _mm256_loadu_ps(x1.as_ptr().add(i)), ov);
+        ov = _mm256_fmadd_ps(c2, _mm256_loadu_ps(x2.as_ptr().add(i)), ov);
+        ov = _mm256_fmadd_ps(c3, _mm256_loadu_ps(x3.as_ptr().add(i)), ov);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), ov);
+        i += LANES;
+    }
+    while i < n {
+        out[i] += c[0] * x0[i] + c[1] * x1[i] + c[2] * x2[i] + c[3] * x3[i];
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    fn dot_ref(x: &[f32], y: &[f32]) -> f64 {
+        x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+    }
+
+    #[test]
+    fn dot_matches_f64_reference_at_odd_lengths() {
+        // lengths straddle the lane width and include primes, so the
+        // chunked body and the scalar tail both get exercised
+        for n in [0usize, 1, 3, 7, 8, 9, 13, 16, 31, 57, 128, 257] {
+            let x = seeded(n, 1 + n as u64);
+            let y = seeded(n, 1000 + n as u64);
+            let want = dot_ref(&x, &y);
+            for got in [dot(&x, &y), dot_portable(&x, &y)] {
+                assert!(
+                    (got as f64 - want).abs() <= 1e-5 * want.abs().max(1.0),
+                    "n={n}: got {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_is_bitwise_deterministic() {
+        let x = seeded(103, 7);
+        let y = seeded(103, 11);
+        assert_eq!(dot(&x, &y).to_bits(), dot(&x, &y).to_bits());
+        assert_eq!(
+            dot_portable(&x, &y).to_bits(),
+            dot_portable(&x, &y).to_bits()
+        );
+    }
+
+    #[test]
+    fn axpy_matches_scalar() {
+        for n in [1usize, 5, 8, 21, 64, 101] {
+            let x = seeded(n, 3 + n as u64);
+            let mut out = seeded(n, 5 + n as u64);
+            let mut want = out.clone();
+            for (o, xv) in want.iter_mut().zip(&x) {
+                *o += 0.37 * xv;
+            }
+            axpy(0.37, &x, &mut out);
+            for (got, want) in out.iter().zip(&want) {
+                assert!((got - want).abs() <= 1e-6 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_matches_composed_axpys() {
+        for n in [1usize, 7, 8, 19, 40, 97] {
+            let c = [0.5f32, -1.25, 0.0, 2.0];
+            let xs: Vec<Vec<f32>> = (0..4).map(|k| seeded(n, 20 + k + n as u64)).collect();
+            let mut out = seeded(n, 40 + n as u64);
+            let mut want = out.clone();
+            for i in 0..n {
+                let w: f64 = (0..4).map(|k| c[k] as f64 * xs[k][i] as f64).sum();
+                want[i] = (want[i] as f64 + w) as f32;
+            }
+            axpy4(c, &xs[0], &xs[1], &xs[2], &xs[3], &mut out);
+            for (got, want) in out.iter().zip(&want) {
+                assert!(
+                    (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+                    "n={n}: got {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn isa_name_is_stable_within_process() {
+        assert_eq!(isa_name(), isa_name());
+        assert_eq!(active_isa(), active_isa());
+    }
+}

@@ -1,0 +1,170 @@
+//! Measured ghost-vs-instantiation dispatch: calibration, the profile
+//! cache file, the corrupt/stale fallback policy, and end-to-end
+//! equivalence of the two routes on a real model.
+//!
+//! The dispatch decision only changes *which kernel computes the
+//! per-sample norms* — never the math those norms feed — so flipping a
+//! layer's route must leave a training step equivalent within float
+//! tolerance. That is the safety property that makes measured dispatch
+//! shippable: a bad profile can cost time, not correctness.
+
+use fastdp::complexity::dispatch::{Dispatch, DispatchProfile, PROFILE_VERSION};
+use fastdp::complexity::{self, ClippingStyle, Strategy};
+use fastdp::runtime::native::autotune::{
+    calibrate, load_profile, resolve_dispatch, save_profile,
+};
+use fastdp::runtime::native::model::NativeSpec;
+use fastdp::runtime::native::NativeBackend;
+use fastdp::runtime::{Backend, BatchX, StepHyper};
+use std::path::PathBuf;
+
+fn temp_path(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("fastdp_dispatch_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// A profile that makes ghost norms look catastrophically slow, so any
+/// layer the formula routes to ghost flips to instantiation.
+fn inst_biased_profile() -> DispatchProfile {
+    DispatchProfile {
+        ghost_secs_per_flop: 1e-6,
+        inst_secs_per_flop: 1e-12,
+        threads: 1,
+        isa: "synthetic".to_string(),
+    }
+}
+
+#[test]
+fn profile_round_trips_through_cache_file() {
+    let path = temp_path("roundtrip.json");
+    let p = calibrate(1);
+    save_profile(&path, &p).unwrap();
+    let loaded = load_profile(&path).unwrap();
+    assert_eq!(loaded.ghost_secs_per_flop, p.ghost_secs_per_flop);
+    assert_eq!(loaded.inst_secs_per_flop, p.inst_secs_per_flop);
+    assert_eq!(loaded.threads, p.threads);
+    assert_eq!(loaded.isa, p.isa);
+    // and resolve() picks the cached profile up as measured dispatch
+    match resolve_dispatch("measured", &path, 1).unwrap() {
+        Dispatch::Measured(m) => assert_eq!(m.threads, p.threads),
+        d => panic!("expected measured dispatch, got {}", d.name()),
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn missing_profile_calibrates_and_caches() {
+    let path = temp_path("fresh.json");
+    assert!(!path.exists());
+    let d = resolve_dispatch("measured", &path, 1).unwrap();
+    assert_eq!(d.name(), "measured");
+    assert!(path.exists(), "resolve must write the calibrated profile");
+    let p = load_profile(&path).unwrap();
+    assert!(p.ghost_secs_per_flop > 0.0 && p.inst_secs_per_flop > 0.0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_or_stale_profiles_fall_back_to_formula() {
+    // corrupt: unparseable JSON is a warning + formula, never an error
+    let path = temp_path("corrupt.json");
+    std::fs::write(&path, "{this is not json").unwrap();
+    let d = resolve_dispatch("measured", &path, 1).unwrap();
+    assert_eq!(d.name(), "formula", "corrupt cache must fall back");
+    // stale: wrong version, same policy
+    let path2 = temp_path("stale.json");
+    let mut p = inst_biased_profile().to_json();
+    p.set("version", fastdp::json::Value::Int(PROFILE_VERSION + 1));
+    std::fs::write(&path2, p.to_string()).unwrap();
+    let d = resolve_dispatch("measured", &path2, 1).unwrap();
+    assert_eq!(d.name(), "formula", "stale cache must fall back");
+    // non-finite coefficients are corrupt too
+    let path3 = temp_path("nan.json");
+    let mut p = inst_biased_profile();
+    p.ghost_secs_per_flop = -1.0;
+    std::fs::write(&path3, p.to_json().to_string()).unwrap();
+    assert_eq!(resolve_dispatch("measured", &path3, 1).unwrap().name(), "formula");
+    for p in [path, path2, path3] {
+        let _ = std::fs::remove_file(&p);
+    }
+}
+
+#[test]
+fn measured_profile_flips_registry_layer_routes() {
+    // seq_tok_e2e's linear layers are formula-ghost (2T^2 << pd); the
+    // inst-biased profile must reroute them while the forced routes
+    // (embedding -> ghost, norm -> inst) stay put.
+    let spec = NativeSpec::by_name("seq_tok_e2e").unwrap();
+    let layers = spec.arch_layers();
+    let measured = Dispatch::Measured(inst_biased_profile());
+    let mut flipped = 0;
+    for l in &layers {
+        let f = complexity::ghost_preferred(l);
+        let m = measured.ghost_preferred(l);
+        match l.kind {
+            fastdp::arch::LayerKind::Embedding => assert!(m, "embedding stays ghost"),
+            fastdp::arch::LayerKind::Norm => assert!(!m, "norm stays instantiation"),
+            _ => {
+                if f != m {
+                    flipped += 1;
+                }
+            }
+        }
+    }
+    assert!(flipped >= 1, "the synthetic profile must change at least one route");
+}
+
+#[test]
+fn flipped_routes_train_equivalently() {
+    // One BkMixOpt step under formula dispatch vs under the route-
+    // flipping measured profile: per-sample norms come from different
+    // kernels (Gram-based ghost vs instantiated gradients), but the
+    // clipped update must agree within float tolerance. mlp_ln is an
+    // SGD model whose linear layers are all formula-ghost (T = 1), so
+    // the synthetic profile reroutes every one of them.
+    let spec = NativeSpec::by_name("mlp_ln").unwrap();
+    let measured_d = Dispatch::Measured(inst_biased_profile());
+    // precondition: the synthetic profile really flips linear routes
+    assert!(
+        spec.arch_layers()
+            .iter()
+            .any(|l| complexity::ghost_preferred(l) != measured_d.ghost_preferred(l)),
+        "test precondition: the synthetic profile must flip a route"
+    );
+    let step_state = |dispatch: &Dispatch| -> Vec<f32> {
+        let spec = NativeSpec::by_name("mlp_ln").unwrap();
+        let mut be = NativeBackend::with_style_dispatch(
+            spec.clone(),
+            Strategy::BkMixOpt,
+            ClippingStyle::AllLayer,
+            2,
+            dispatch,
+        )
+        .unwrap();
+        be.init(3).unwrap();
+        let mut ds = fastdp::data::VectorDataset::new(spec.d_in, spec.n_classes, 2.0, 17);
+        let (xs, ys) = ds.sample_batch(spec.batch * spec.seq);
+        let h = StepHyper {
+            lr: 1e-2,
+            clip: 1.0,
+            sigma_r: 0.0,
+            logical_batch: spec.batch as f32,
+            step: 1.0,
+        };
+        be.step(&BatchX::F32(xs), &ys, &[], &h).unwrap();
+        be.state().unwrap().concat()
+    };
+    let formula = step_state(&Dispatch::Formula);
+    let measured = step_state(&measured_d);
+    assert_eq!(formula.len(), measured.len());
+    let mut max_rel = 0.0f64;
+    for (&a, &b) in formula.iter().zip(&measured) {
+        let rel = (a as f64 - b as f64).abs() / (a as f64).abs().max(1.0);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(
+        max_rel < 1e-4,
+        "route flip changed the step beyond float tolerance: max rel diff {max_rel}"
+    );
+}

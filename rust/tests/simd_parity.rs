@@ -1,0 +1,418 @@
+//! Parity + determinism suite for the wide-lane kernel overhaul.
+//!
+//! Every vectorized kernel (`simd::dot`/`axpy`/`axpy4` call sites:
+//! forward matmul, backward-data, ghost norms, instantiation, weighted
+//! sums, bias/embedding reductions, the attention core) is pinned
+//! against a serial scalar reference evaluated in f64, within 1e-5
+//! relative tolerance, across randomized odd/prime shapes — d, p, T
+//! deliberately not multiples of the lane width, so the chunk/tail
+//! split and the 4-wide unroll remainder are always exercised.
+//!
+//! Separately, the determinism contract (DESIGN.md): for a fixed thread
+//! count and instruction set, running the same config twice is bitwise
+//! identical — asserted at both the kernel level and for a full
+//! backend step. (Bitwise equality across *different* thread counts or
+//! ISAs is deliberately not promised.)
+
+use fastdp::complexity::Strategy;
+use fastdp::runtime::native::kernels;
+use fastdp::runtime::native::model::NativeSpec;
+use fastdp::runtime::native::NativeBackend;
+use fastdp::runtime::{Backend, BatchX, StepHyper};
+use fastdp::util::rng::Xoshiro256;
+
+fn randv(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+/// Relative closeness with a unit floor on the denominator: values near
+/// zero get an absolute 1e-5 band, larger values a relative one.
+fn close(got: f32, want: f64) -> bool {
+    (got as f64 - want).abs() / want.abs().max(1.0) < 1e-5
+}
+
+fn assert_close(got: &[f32], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(close(g, w), "{what}[{i}]: got {g}, want {w}");
+    }
+}
+
+/// Odd/prime (b, t, d, p) shapes — never multiples of the 8-float lane
+/// or the 4-wide unroll, so every tail path runs.
+const SHAPES: [(usize, usize, usize, usize); 5] = [
+    (3, 5, 13, 7),
+    (5, 3, 7, 11),
+    (2, 7, 31, 29),
+    (1, 1, 9, 5),
+    (7, 1, 17, 23),
+];
+
+fn ref_psg(a: &[f32], g: &[f32], b: usize, t: usize, d: usize, p: usize) -> Vec<f64> {
+    let mut psg = vec![0f64; b * d * p];
+    for i in 0..b {
+        for tt in 0..t {
+            let row = i * t + tt;
+            for j in 0..d {
+                for q in 0..p {
+                    psg[i * d * p + j * p + q] +=
+                        a[row * d + j] as f64 * g[row * p + q] as f64;
+                }
+            }
+        }
+    }
+    psg
+}
+
+#[test]
+fn linear_forward_matches_serial_reference() {
+    let mut rng = Xoshiro256::new(0x51);
+    for &(b, t, d, p) in &SHAPES {
+        let rows = b * t;
+        let a = randv(&mut rng, rows * d);
+        let w = randv(&mut rng, d * p);
+        let bias = randv(&mut rng, p);
+        let mut want = vec![0f64; rows * p];
+        for r in 0..rows {
+            for q in 0..p {
+                let mut acc = bias[q] as f64;
+                for j in 0..d {
+                    acc += a[r * d + j] as f64 * w[j * p + q] as f64;
+                }
+                want[r * p + q] = acc;
+            }
+        }
+        for threads in [1, 3] {
+            let mut out = vec![0f32; rows * p];
+            kernels::linear_forward(&a, &w, Some(&bias), &mut out, rows, d, p, threads);
+            assert_close(&out, &want, &format!("forward {rows}x{d}x{p} t{threads}"));
+        }
+        // no-bias path zero-initializes
+        let mut out = vec![7.0f32; rows * p];
+        kernels::linear_forward(&a, &w, None, &mut out, rows, d, p, 2);
+        let want0: Vec<f64> = want
+            .iter()
+            .enumerate()
+            .map(|(k, v)| v - bias[k % p] as f64)
+            .collect();
+        assert_close(&out, &want0, "forward, no bias");
+    }
+}
+
+#[test]
+fn backward_data_matches_serial_reference() {
+    let mut rng = Xoshiro256::new(0x52);
+    for &(b, t, d, p) in &SHAPES {
+        let rows = b * t;
+        let g = randv(&mut rng, rows * p);
+        let w = randv(&mut rng, d * p);
+        let mut want = vec![0f64; rows * d];
+        for r in 0..rows {
+            for j in 0..d {
+                want[r * d + j] = (0..p)
+                    .map(|q| g[r * p + q] as f64 * w[j * p + q] as f64)
+                    .sum();
+            }
+        }
+        for threads in [1, 3] {
+            let mut da = vec![0f32; rows * d];
+            kernels::backward_data(&g, &w, &mut da, rows, d, p, threads);
+            assert_close(&da, &want, &format!("backward_data {rows}x{d}x{p} t{threads}"));
+        }
+    }
+}
+
+#[test]
+fn norm_kernels_match_serial_reference() {
+    let mut rng = Xoshiro256::new(0x53);
+    for &(b, t, d, p) in &SHAPES {
+        let a = randv(&mut rng, b * t * d);
+        let g = randv(&mut rng, b * t * p);
+        let psg_ref = ref_psg(&a, &g, b, t, d, p);
+        let want: Vec<f64> = (0..b)
+            .map(|i| psg_ref[i * d * p..(i + 1) * d * p].iter().map(|x| x * x).sum())
+            .collect();
+        for threads in [1, 3] {
+            // ghost route (Gram-based)
+            let mut sq = vec![0f32; b];
+            let mut gram_a = vec![0f32; b * t * t];
+            let mut gram_g = vec![0f32; b * t * t];
+            kernels::ghost_norm(&a, &g, b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads);
+            assert_close(&sq, &want, &format!("ghost_norm b{b} t{t} {d}x{p}"));
+            // streaming instantiation route
+            let mut sq = vec![0f32; b];
+            let mut scratch = vec![0f32; threads.max(1) * d * p];
+            kernels::psg_norms_streaming(&a, &g, b, t, d, p, &mut scratch, &mut sq, threads);
+            assert_close(&sq, &want, &format!("psg_norms_streaming b{b} t{t} {d}x{p}"));
+            // stored instantiation route
+            let mut psg = vec![0f32; b * d * p];
+            kernels::psg_instantiate(&a, &g, b, t, d, p, &mut psg, threads);
+            assert_close(&psg, &psg_ref, &format!("psg_instantiate b{b} t{t} {d}x{p}"));
+            let mut sq = vec![0f32; b];
+            kernels::sq_norms_from_psg(&psg, b, d * p, &mut sq, threads);
+            let want_f32: Vec<f64> = (0..b)
+                .map(|i| {
+                    psg[i * d * p..(i + 1) * d * p]
+                        .iter()
+                        .map(|&x| x as f64 * x as f64)
+                        .sum()
+                })
+                .collect();
+            assert_close(&sq, &want_f32, "sq_norms_from_psg");
+        }
+    }
+}
+
+#[test]
+fn weighted_sum_kernels_match_serial_reference() {
+    let mut rng = Xoshiro256::new(0x54);
+    for &(b, t, d, p) in &SHAPES {
+        let a = randv(&mut rng, b * t * d);
+        let g = randv(&mut rng, b * t * p);
+        // clip factors with a zero mixed in (flat-clipping skip path)
+        let mut c: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        c[b / 2] = 0.0;
+        let psg_ref = ref_psg(&a, &g, b, t, d, p);
+        let want: Vec<f64> = (0..d * p)
+            .map(|k| {
+                (0..b)
+                    .map(|i| c[i] as f64 * psg_ref[i * d * p + k])
+                    .sum()
+            })
+            .collect();
+        for threads in [1, 3] {
+            // fused contraction from activations
+            let mut out = vec![0f32; d * p];
+            let mut partials = vec![0f32; threads.max(1) * d * p];
+            kernels::weighted_grad(&a, &g, Some(&c), b, t, d, p, &mut partials, &mut out, threads);
+            assert_close(&out, &want, &format!("weighted_grad b{b} t{t} {d}x{p}"));
+            // reduction over stored per-sample gradients (4-wide unroll)
+            let mut psg = vec![0f32; b * d * p];
+            kernels::psg_instantiate(&a, &g, b, t, d, p, &mut psg, threads);
+            let want_stored: Vec<f64> = (0..d * p)
+                .map(|k| {
+                    (0..b)
+                        .map(|i| c[i] as f64 * psg[i * d * p + k] as f64)
+                        .sum()
+                })
+                .collect();
+            let mut out = vec![0f32; d * p];
+            kernels::weighted_sum_psg(&psg, &c, b, d, p, &mut out, threads);
+            assert_close(&out, &want_stored, &format!("weighted_sum_psg b{b} {d}x{p}"));
+        }
+    }
+}
+
+#[test]
+fn bias_and_embedding_kernels_match_serial_reference() {
+    let mut rng = Xoshiro256::new(0x55);
+    for &(b, t, _d, p) in &SHAPES {
+        let g = randv(&mut rng, b * t * p);
+        let c: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        // bias norms: ||sum_t g_i[t,:]||^2
+        let want_sq: Vec<f64> = (0..b)
+            .map(|i| {
+                (0..p)
+                    .map(|q| {
+                        let s: f64 = (0..t).map(|tt| g[(i * t + tt) * p + q] as f64).sum();
+                        s * s
+                    })
+                    .sum()
+            })
+            .collect();
+        let mut sq = vec![0f32; b];
+        let mut scratch = vec![0f32; 3 * p];
+        kernels::bias_sq_norms(&g, b, t, p, &mut scratch, &mut sq, 3);
+        assert_close(&sq, &want_sq, &format!("bias_sq_norms b{b} t{t} p{p}"));
+        // clipped bias sum
+        let want_bg: Vec<f64> = (0..p)
+            .map(|q| {
+                (0..b)
+                    .map(|i| {
+                        c[i] as f64
+                            * (0..t).map(|tt| g[(i * t + tt) * p + q] as f64).sum::<f64>()
+                    })
+                    .sum()
+            })
+            .collect();
+        let mut out = vec![0f32; p];
+        kernels::bias_grad(&g, Some(&c), b, t, p, &mut out);
+        assert_close(&out, &want_bg, "bias_grad");
+        // embedding scatter: out[tok] += c_i * g_row
+        let vocab = 11usize;
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.next_below(vocab as u64) as i32).collect();
+        let mut want_emb = vec![0f64; vocab * p];
+        for i in 0..b {
+            for tt in 0..t {
+                let tok = tokens[i * t + tt] as usize;
+                for q in 0..p {
+                    want_emb[tok * p + q] += c[i] as f64 * g[(i * t + tt) * p + q] as f64;
+                }
+            }
+        }
+        let mut out = vec![0f32; vocab * p];
+        kernels::embedding_weighted_grad(&tokens, &g, Some(&c), b, t, p, &mut out);
+        assert_close(&out, &want_emb, "embedding_weighted_grad");
+    }
+}
+
+#[test]
+fn attention_core_matches_serial_reference() {
+    let mut rng = Xoshiro256::new(0x56);
+    // heads must divide d; t stays odd/prime
+    for &(b, t, heads, hd) in &[(2usize, 5usize, 3usize, 5usize), (3, 7, 1, 13)] {
+        let d = heads * hd;
+        let w3 = 3 * d;
+        let qkv = randv(&mut rng, b * t * w3);
+        let g_ao = randv(&mut rng, b * t * d);
+        let scale = 1.0 / (hd as f64).sqrt();
+
+        // f64 reference forward: causal softmax + prob-weighted values
+        let mut probs_ref = vec![0f64; b * heads * t * t];
+        let mut ao_ref = vec![0f64; b * t * d];
+        for i in 0..b {
+            for h in 0..heads {
+                let ph = &mut probs_ref[(i * heads + h) * t * t..][..t * t];
+                for t1 in 0..t {
+                    let mut scores = vec![0f64; t1 + 1];
+                    let mut m = f64::NEG_INFINITY;
+                    for (t2, s) in scores.iter_mut().enumerate() {
+                        *s = scale
+                            * (0..hd)
+                                .map(|x| {
+                                    qkv[(i * t + t1) * w3 + h * hd + x] as f64
+                                        * qkv[(i * t + t2) * w3 + d + h * hd + x] as f64
+                                })
+                                .sum::<f64>();
+                        m = m.max(*s);
+                    }
+                    let z: f64 = scores.iter().map(|s| (s - m).exp()).sum();
+                    for (t2, s) in scores.iter().enumerate() {
+                        ph[t1 * t + t2] = (s - m).exp() / z;
+                    }
+                    for t2 in 0..=t1 {
+                        let pr = ph[t1 * t + t2];
+                        for x in 0..hd {
+                            ao_ref[(i * t + t1) * d + h * hd + x] +=
+                                pr * qkv[(i * t + t2) * w3 + 2 * d + h * hd + x] as f64;
+                        }
+                    }
+                }
+            }
+        }
+        let mut probs = vec![0f32; b * heads * t * t];
+        let mut ao = vec![0f32; b * t * d];
+        kernels::attention_forward(&qkv, &mut probs, &mut ao, b, t, d, heads, 3);
+        assert_close(&probs, &probs_ref, &format!("attention probs b{b} t{t} h{heads}"));
+        assert_close(&ao, &ao_ref, &format!("attention ao b{b} t{t} h{heads}"));
+
+        // f64 reference backward, from the kernel's own probs cache (so
+        // this isolates the backward arithmetic)
+        let mut gq_ref = vec![0f64; b * t * w3];
+        for i in 0..b {
+            for h in 0..heads {
+                let ph = &probs[(i * heads + h) * t * t..][..t * t];
+                for t1 in 0..t {
+                    let ga: Vec<f64> = (0..hd)
+                        .map(|x| g_ao[(i * t + t1) * d + h * hd + x] as f64)
+                        .collect();
+                    let gdot = |t2: usize| -> f64 {
+                        (0..hd)
+                            .map(|x| ga[x] * qkv[(i * t + t2) * w3 + 2 * d + h * hd + x] as f64)
+                            .sum()
+                    };
+                    let dotsum: f64 =
+                        (0..=t1).map(|t2| ph[t1 * t + t2] as f64 * gdot(t2)).sum();
+                    for t2 in 0..=t1 {
+                        let pr = ph[t1 * t + t2] as f64;
+                        if pr == 0.0 {
+                            continue;
+                        }
+                        let gs = pr * (gdot(t2) - dotsum) * scale;
+                        for x in 0..hd {
+                            gq_ref[(i * t + t2) * w3 + 2 * d + h * hd + x] += pr * ga[x];
+                            gq_ref[(i * t + t1) * w3 + h * hd + x] +=
+                                gs * qkv[(i * t + t2) * w3 + d + h * hd + x] as f64;
+                            gq_ref[(i * t + t2) * w3 + d + h * hd + x] +=
+                                gs * qkv[(i * t + t1) * w3 + h * hd + x] as f64;
+                        }
+                    }
+                }
+            }
+        }
+        let mut g_qkv = vec![0f32; b * t * w3];
+        kernels::attention_backward(&qkv, &probs, &g_ao, &mut g_qkv, b, t, d, heads, 3);
+        assert_close(&g_qkv, &gq_ref, &format!("attention g_qkv b{b} t{t} h{heads}"));
+    }
+}
+
+#[test]
+fn kernels_are_bitwise_deterministic_for_fixed_config() {
+    let mut rng = Xoshiro256::new(0x57);
+    let (b, t, d, p) = (5, 7, 29, 13);
+    let a = randv(&mut rng, b * t * d);
+    let g = randv(&mut rng, b * t * p);
+    let w = randv(&mut rng, d * p);
+    let c: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+    for threads in [1, 4] {
+        let run = || {
+            let rows = b * t;
+            let mut out = vec![0f32; rows * p];
+            kernels::linear_forward(&a, &w, None, &mut out, rows, d, p, threads);
+            let mut da = vec![0f32; rows * d];
+            kernels::backward_data(&g, &w, &mut da, rows, d, p, threads);
+            let mut sq = vec![0f32; b];
+            let mut gram_a = vec![0f32; b * t * t];
+            let mut gram_g = vec![0f32; b * t * t];
+            kernels::ghost_norm(&a, &g, b, t, d, p, &mut gram_a, &mut gram_g, &mut sq, threads);
+            let mut grad = vec![0f32; d * p];
+            let mut partials = vec![0f32; threads * d * p];
+            kernels::weighted_grad(
+                &a, &g, Some(&c), b, t, d, p, &mut partials, &mut grad, threads,
+            );
+            let mut bits: Vec<u32> = Vec::new();
+            bits.extend(out.iter().map(|v| v.to_bits()));
+            bits.extend(da.iter().map(|v| v.to_bits()));
+            bits.extend(sq.iter().map(|v| v.to_bits()));
+            bits.extend(grad.iter().map(|v| v.to_bits()));
+            bits
+        };
+        assert_eq!(run(), run(), "kernel outputs drifted at threads={threads}");
+    }
+}
+
+#[test]
+fn full_step_is_bitwise_deterministic_for_fixed_config() {
+    // Same config twice — model, strategy, seed, thread count — must
+    // produce a bitwise-identical post-step state (transformer stack:
+    // embedding, attention, LayerNorm, tied head all in the walk).
+    let run = || {
+        let spec = NativeSpec::by_name("gpt_nano_tied_e2e").unwrap();
+        let mut be = NativeBackend::with_style(
+            spec.clone(),
+            Strategy::BkMixOpt,
+            fastdp::complexity::ClippingStyle::LayerWise,
+            4,
+        )
+        .unwrap();
+        be.init(7).unwrap();
+        let mut corpus = fastdp::data::TokenCorpus::new(spec.vocab, spec.seq, 13);
+        let (xs, ys) = corpus.sample_batch(spec.batch);
+        let h = StepHyper {
+            lr: 1e-3,
+            clip: 1.0,
+            sigma_r: 0.0,
+            logical_batch: spec.batch as f32,
+            step: 1.0,
+        };
+        be.step(&BatchX::I32(xs), &ys, &[], &h).unwrap();
+        let state: Vec<u32> = be
+            .state()
+            .unwrap()
+            .iter()
+            .flat_map(|t| t.iter().map(|v| v.to_bits()))
+            .collect();
+        state
+    };
+    assert_eq!(run(), run(), "post-step state must be bitwise reproducible");
+}
