@@ -140,6 +140,7 @@ def main():
                         "heads": 4 if any(l[0] == "A" for l in layers) else 0,
                         "tied": any(l[0] == "T" for l in layers),
                         "threads": 0,
+                        "shards": 1,
                         # times are deliberately unpinned (0.0): CI machines
                         # vary; bench-check skips the time bands for 0 rows
                         # (the statistical gate bands median_step_secs when
@@ -157,6 +158,15 @@ def main():
                         "arena_peak_floats": 0,
                     }
                 )
+    # Sharded pins: the CI bench-regression job also times mlp_ln with
+    # --shards 2. Each shard runs whole physical micro-batches through
+    # the unchanged fused schedule, so the per-shard g-cache peak is
+    # byte-identical to the 1-shard figure — the sharded rows pin the
+    # same floats-held values under their own (model, strategy, style,
+    # shards) identity.
+    sharded = [dict(r, shards=2) for r in rows if r["model"] == "mlp_ln"]
+    rows.extend(sharded)
+    print(f"sharded pins: {len(sharded)} rows (mlp_ln, shards=2)")
     baseline = {
         "note": (
             "bench-regression baseline: floats-held values are exact pins "

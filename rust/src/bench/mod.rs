@@ -43,6 +43,12 @@ pub struct BenchResult {
     /// JSON written before the field existed parse as untied.
     pub tied: bool,
     pub threads: usize,
+    /// Data-parallel worker shards per logical step (1 = the plain
+    /// single-worker backend). Sharded rows time one logical step of
+    /// `shards` micro-batches — one per shard — so the fan-out and the
+    /// rank-0 reduction are on the measured path. Rows from JSON
+    /// written before the field existed parse as `shards: 1`.
+    pub shards: usize,
     pub mean_step_secs: f64,
     /// Median step time — the statistic the regression gate bands
     /// against (robust to scheduler spikes on shared CI runners). Rows
@@ -83,6 +89,7 @@ impl BenchResult {
             .set("heads", Value::from(self.heads))
             .set("tied", Value::from(self.tied))
             .set("threads", Value::from(self.threads))
+            .set("shards", Value::from(self.shards))
             .set("mean_step_secs", Value::from(self.mean_step_secs))
             .set("median_step_secs", Value::from(self.median_step_secs))
             .set("min_step_secs", Value::from(self.min_step_secs))
@@ -118,6 +125,8 @@ impl BenchResult {
             // pre-tying JSON (no tied field) defaults to untied
             tied: v.opt_bool("tied", false),
             threads: v.opt_i64("threads", 1) as usize,
+            // pre-sharding JSON (no shards field) parses as single-worker
+            shards: v.opt_i64("shards", 1) as usize,
             mean_step_secs: v.req_f64("mean_step_secs").map_err(|e| anyhow!(e))?,
             // pre-statistical-gate JSON (no median/gflops) parses as
             // unpinned median + unmeasured throughput
@@ -136,8 +145,11 @@ impl BenchResult {
     }
 }
 
-/// Measure one (model, strategy, clipping style) native step in THIS
-/// process.
+/// Measure one (model, strategy, clipping style, shards) native step in
+/// THIS process. `shards == 1` times the fused single-worker step;
+/// `shards > 1` times one logical step of `shards` micro-batches (one
+/// per shard) through the `ShardedRun` fan-out + rank-0 reduction +
+/// broadcast update — the reduction is on the measured path.
 pub fn measure_native(
     model: &str,
     strategy: &str,
@@ -145,6 +157,7 @@ pub fn measure_native(
     warmup: usize,
     iters: usize,
     threads: usize,
+    shards: usize,
 ) -> Result<BenchResult> {
     let spec = NativeSpec::by_name(model)
         .ok_or_else(|| anyhow!("model '{model}' not in the native registry"))?;
@@ -152,18 +165,40 @@ pub fn measure_native(
     let cstyle = ClippingStyle::parse(style)
         .ok_or_else(|| anyhow!("unknown clipping style '{style}'"))?;
     let threads = if threads == 0 { par::default_threads() } else { threads };
-    let mut be = NativeBackend::with_style(spec.clone(), strat, cstyle, threads)?;
+    let shards = shards.max(1);
+    let mut be: Box<dyn Backend> = if shards > 1 {
+        Box::new(crate::runtime::native::shard::ShardedRun::new(
+            spec.clone(),
+            strat,
+            cstyle,
+            threads,
+            &crate::complexity::Dispatch::Formula,
+            shards,
+        )?)
+    } else {
+        Box::new(NativeBackend::with_style(spec.clone(), strat, cstyle, threads)?)
+    };
     be.init(0)?;
 
+    // one micro-batch per shard, so every replica computes each step
+    let micro = shards;
     let rows = spec.batch * spec.seq;
-    let (x, y) = if spec.vocab > 0 {
+    let batches: Vec<(BatchX, Vec<i32>)> = if spec.vocab > 0 {
         let mut corpus = data::TokenCorpus::new(spec.vocab, spec.seq, 11);
-        let (xs, ys) = corpus.sample_batch(spec.batch);
-        (BatchX::I32(xs), ys)
+        (0..micro)
+            .map(|_| {
+                let (xs, ys) = corpus.sample_batch(spec.batch);
+                (BatchX::I32(xs), ys)
+            })
+            .collect()
     } else {
         let mut ds = data::VectorDataset::new(spec.d_in, spec.n_classes, 2.0, 11);
-        let (xs, ys) = ds.sample_batch(rows);
-        (BatchX::F32(xs), ys)
+        (0..micro)
+            .map(|_| {
+                let (xs, ys) = ds.sample_batch(rows);
+                (BatchX::F32(xs), ys)
+            })
+            .collect()
     };
     let dp = strat != Strategy::NonDp;
     let noise: Vec<Vec<f32>> = if dp {
@@ -176,19 +211,29 @@ pub fn measure_native(
         lr: 1e-3,
         clip: 1.0,
         sigma_r: if dp { 0.5 } else { 0.0 },
-        logical_batch: spec.batch as f32,
+        logical_batch: (spec.batch * micro) as f32,
         step: 1.0,
+    };
+    let mut run_step = |be: &mut Box<dyn Backend>| -> Result<f32> {
+        if shards == 1 {
+            let (x, y) = &batches[0];
+            Ok(be.step(x, y, &noise, &h)?.loss)
+        } else {
+            let (grads, out) = be.sharded_grads(&batches, h.clip)?;
+            be.apply_update(&grads, &noise, &h)?;
+            Ok(out.loss)
+        }
     };
 
     for _ in 0..warmup.max(1) {
-        be.step(&x, &y, &noise, &h)?;
+        run_step(&mut be)?;
     }
     let mut s = Summary::new();
     for _ in 0..iters.max(1) {
         let t0 = Instant::now();
-        let out = be.step(&x, &y, &noise, &h)?;
+        let loss = run_step(&mut be)?;
         s.push(t0.elapsed().as_secs_f64());
-        if !out.loss.is_finite() {
+        if !loss.is_finite() {
             bail!("{model}/{strategy}: loss diverged during bench");
         }
     }
@@ -216,7 +261,9 @@ pub fn measure_native(
         .into_iter()
         .filter(|l| l.kind != crate::arch::LayerKind::Norm)
         .collect();
-    let step_flops = crate::complexity::model_cost(strat, spec.batch as f64, &flop_layers).time;
+    // per-micro-batch FLOPs times micro-batches per timed logical step
+    let step_flops =
+        crate::complexity::model_cost(strat, spec.batch as f64, &flop_layers).time * micro as f64;
     let median = s.median();
     Ok(BenchResult {
         model: model.to_string(),
@@ -227,11 +274,12 @@ pub fn measure_native(
         heads: spec.attn_heads,
         tied: spec.tied,
         threads,
+        shards,
         mean_step_secs: s.mean(),
         median_step_secs: median,
         min_step_secs: s.min(),
         gflops: if median > 0.0 { step_flops / median / 1e9 } else { 0.0 },
-        samples_per_sec: spec.batch as f64 / s.mean(),
+        samples_per_sec: (spec.batch * micro) as f64 / s.mean(),
         peak_rss: peak_rss_bytes(),
         steady_allocs,
         peak_gcache_floats_measured: stats.peak_gcache_floats,
@@ -284,11 +332,14 @@ pub fn measure_native_isolated(
     warmup: usize,
     iters: usize,
     threads: usize,
+    shards: usize,
 ) -> Result<BenchResult> {
-    let spec = format!("{model}:{strategy}:{warmup}:{iters}:{threads}:{style}");
+    // NOTE: style is LAST because it may itself contain ':'
+    // ("group-wise:4"); every numeric field sits before it.
+    let spec = format!("{model}:{strategy}:{warmup}:{iters}:{threads}:{shards}:{style}");
     match spawn_child_raw(&spec) {
         Ok(out) => parse_child_output(&spec, out),
-        Err(_) => measure_native(model, strategy, style, warmup, iters, threads),
+        Err(_) => measure_native(model, strategy, style, warmup, iters, threads, shards),
     }
 }
 
@@ -304,10 +355,11 @@ pub fn maybe_run_native_child() {
         let warmup = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
         let iters = parts.get(3).and_then(|s| s.parse().ok()).unwrap_or(10);
         let threads = parts.get(4).and_then(|s| s.parse().ok()).unwrap_or(0);
+        let shards = parts.get(5).and_then(|s| s.parse().ok()).unwrap_or(1);
         // NOTE: the style field rejoins on ':' so "group-wise:4" survives
         // the split.
-        let style = if parts.len() > 5 { parts[5..].join(":") } else { "all-layer".to_string() };
-        match measure_native(parts[0], parts[1], &style, warmup, iters, threads) {
+        let style = if parts.len() > 6 { parts[6..].join(":") } else { "all-layer".to_string() };
+        match measure_native(parts[0], parts[1], &style, warmup, iters, threads, shards) {
             Ok(r) => {
                 println!("{}", r.to_json());
                 std::process::exit(0);
@@ -344,6 +396,7 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
     let warmup = args.get_usize("warmup", 5);
     let iters = args.get_usize("iters", 20);
     let threads = args.get_usize("threads", 0);
+    let shards = args.get_usize("shards", 1);
     let isolate = !args.has_flag("no-isolate");
 
     let mut results: Vec<BenchResult> = Vec::new();
@@ -355,9 +408,9 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
                 continue;
             }
             let r = if isolate {
-                measure_native_isolated(&model, strat, style, warmup, iters, threads)
+                measure_native_isolated(&model, strat, style, warmup, iters, threads, shards)
             } else {
-                measure_native(&model, strat, style, warmup, iters, threads)
+                measure_native(&model, strat, style, warmup, iters, threads, shards)
             };
             match r {
                 Ok(r) => results.push(r),
@@ -369,8 +422,9 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
         }
     }
 
+    let shard_note = if shards > 1 { format!(", shards={shards}") } else { String::new() };
     let mut t = Table::new(
-        &format!("native kernel bench: {model} (warmup={warmup}, iters={iters})"),
+        &format!("native kernel bench: {model} (warmup={warmup}, iters={iters}{shard_note})"),
         &[
             "strategy",
             "style",
@@ -498,12 +552,23 @@ pub fn check_against_baseline(
     baseline: &[BenchResult],
     time_tolerance: f64,
 ) -> Vec<CheckRow> {
+    // Row identity is (model, strategy, style, shards): a shards-2 row
+    // and its single-worker sibling are distinct pins. Legacy rows
+    // parse as shards 1, so old baselines keep matching.
+    let row_key = |r: &BenchResult| {
+        if r.shards > 1 {
+            format!("{}/{}/{}/shards{}", r.model, r.strategy, r.style, r.shards)
+        } else {
+            format!("{}/{}/{}", r.model, r.strategy, r.style)
+        }
+    };
+    let same_row = |a: &BenchResult, b: &BenchResult| {
+        a.model == b.model && a.strategy == b.strategy && a.style == b.style && a.shards == b.shards
+    };
     let mut out = Vec::new();
     for base in baseline {
-        let key = format!("{}/{}/{}", base.model, base.strategy, base.style);
-        let cur = current.iter().find(|r| {
-            r.model == base.model && r.strategy == base.strategy && r.style == base.style
-        });
+        let key = row_key(base);
+        let cur = current.iter().find(|r| same_row(r, base));
         let mut failures = Vec::new();
         let Some(cur) = cur else {
             out.push(CheckRow {
@@ -583,12 +648,10 @@ pub fn check_against_baseline(
     // floats-held pin would otherwise never be checked, so it fails too
     // (DP one-pass rows only; nondp/two-pass rows carry no g-cache pin).
     for cur in current {
-        let known = baseline.iter().any(|b| {
-            b.model == cur.model && b.strategy == cur.strategy && b.style == cur.style
-        });
+        let known = baseline.iter().any(|b| same_row(b, cur));
         if !known && cur.peak_gcache_floats_measured > 0 {
             out.push(CheckRow {
-                key: format!("{}/{}/{}", cur.model, cur.strategy, cur.style),
+                key: row_key(cur),
                 failures: vec![
                     "row not pinned in the baseline — regenerate it \
                      (python3 python/tools/gen_gcache_baseline.py)"
@@ -933,6 +996,7 @@ mod tests {
             heads: 4,
             tied: true,
             threads: 4,
+            shards: 1,
             mean_step_secs: 0.25,
             median_step_secs: 0.24,
             min_step_secs: 0.2,
@@ -959,6 +1023,13 @@ mod tests {
         assert_eq!(r2.heads, 4);
         assert!(r2.tied, "tied flag must round-trip");
         assert_eq!(r2.threads, 4);
+        assert_eq!(r2.shards, 1);
+        // sharded rows round-trip their worker count
+        let mut sharded = sample_result();
+        sharded.shards = 3;
+        let sv = sharded.to_json();
+        let s2 = BenchResult::from_json(&crate::json::parse(&sv.to_string()).unwrap()).unwrap();
+        assert_eq!(s2.shards, 3, "shards field must round-trip");
         assert_eq!(r2.median_step_secs, 0.24);
         assert_eq!(r2.gflops, 1.5);
         assert!((r2.samples_per_sec - 32.0).abs() < 1e-12);
@@ -980,6 +1051,7 @@ mod tests {
         assert_eq!(lr.heads, 0);
         assert!(!lr.tied, "legacy rows default to untied");
         assert_eq!(lr.threads, 1, "pre-threads rows parse with the old default");
+        assert_eq!(lr.shards, 1, "pre-sharding rows parse as single-worker");
         assert_eq!(lr.median_step_secs, 0.0, "pre-median rows parse as unpinned");
         assert_eq!(lr.gflops, 0.0);
         assert_eq!(lr.peak_gcache_floats_measured, 0, "pre-fusion rows parse as unmeasured");
@@ -999,7 +1071,7 @@ mod tests {
     fn measure_native_reports_steady_state() {
         // Tiny in-process measurement: BK on the seed MLP reaches a warm
         // arena (no steady-state allocations) and finite throughput.
-        let r = measure_native("mlp_e2e", "bk", "all-layer", 2, 2, 2).unwrap();
+        let r = measure_native("mlp_e2e", "bk", "all-layer", 2, 2, 2, 1).unwrap();
         assert_eq!(r.steady_allocs, 0, "arena must be warm after warmup");
         assert!(r.mean_step_secs > 0.0);
         assert!(r.median_step_secs > 0.0);
@@ -1013,10 +1085,10 @@ mod tests {
     fn measure_native_covers_styles_and_token_models() {
         // layer-wise clipping on the seed MLP, and the token+LayerNorm
         // model end-to-end — both stay allocation-free once warm.
-        let r = measure_native("mlp_e2e", "bk", "layer-wise", 2, 2, 2).unwrap();
+        let r = measure_native("mlp_e2e", "bk", "layer-wise", 2, 2, 2, 1).unwrap();
         assert_eq!(r.steady_allocs, 0);
         assert_eq!(r.style, "layer-wise");
-        let r = measure_native("seq_tok_e2e", "bk", "group-wise:2", 2, 2, 2).unwrap();
+        let r = measure_native("seq_tok_e2e", "bk", "group-wise:2", 2, 2, 2, 1).unwrap();
         assert_eq!(r.steady_allocs, 0, "token model arena must be warm");
         assert!(r.samples_per_sec > 0.0);
     }
@@ -1025,7 +1097,7 @@ mod tests {
     fn measure_native_reports_transformer_dims() {
         // gpt_nano rows must carry seq_len + heads so transformer rows
         // in BENCH_native_kernels.json are unambiguous.
-        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 2, 2).unwrap();
+        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 2, 2, 1).unwrap();
         assert_eq!(r.seq_len, 16);
         assert_eq!(r.heads, 4);
         assert_eq!(r.steady_allocs, 0, "gpt arena must be warm after warmup");
@@ -1038,7 +1110,7 @@ mod tests {
     fn measure_native_covers_tied_models() {
         // the tied gpt model benches end-to-end (cross-term kernel in
         // the norm pass) and stays allocation-free once warm
-        let r = measure_native("gpt_nano_tied_e2e", "bk", "all-layer", 1, 2, 2).unwrap();
+        let r = measure_native("gpt_nano_tied_e2e", "bk", "all-layer", 1, 2, 2, 1).unwrap();
         assert!(r.tied, "registry tied model must report tied");
         assert_eq!(r.seq_len, 16);
         assert_eq!(r.heads, 4);
@@ -1046,7 +1118,7 @@ mod tests {
         let v = r.to_json().to_string();
         assert!(v.contains("\"tied\":true"), "{v}");
         // untied sibling reports untied
-        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 1, 2).unwrap();
+        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 1, 2, 1).unwrap();
         assert!(!r.tied);
     }
 
@@ -1055,12 +1127,12 @@ mod tests {
         // One-pass DP rows carry the fused g-cache gauge, and the
         // measured value equals the complexity-engine prediction (walk
         // simulation) exactly; nondp rows are unmeasured by definition.
-        let r = measure_native("mlp_ln", "bk", "group-wise:2", 2, 2, 2).unwrap();
+        let r = measure_native("mlp_ln", "bk", "group-wise:2", 2, 2, 2, 1).unwrap();
         assert!(r.peak_gcache_floats_measured > 0);
         assert_eq!(r.peak_gcache_floats_measured as f64, r.peak_gcache_floats_predicted);
         assert!(r.peak_gcache_floats_unfused > r.peak_gcache_floats_predicted);
         assert!(r.arena_peak_floats >= r.peak_gcache_floats_measured);
-        let nd = measure_native("mlp_ln", "nondp", "all-layer", 1, 1, 2).unwrap();
+        let nd = measure_native("mlp_ln", "nondp", "all-layer", 1, 1, 2, 1).unwrap();
         assert_eq!(nd.peak_gcache_floats_measured, 0);
         assert_eq!(nd.peak_gcache_floats_predicted, 0.0);
     }
@@ -1182,9 +1254,58 @@ mod tests {
     }
 
     #[test]
+    fn measure_native_sharded_row() {
+        // A shards-2 measurement runs the fan-out + rank-0 reduction
+        // path: arena stays warm in every replica, the rank-0 g-cache
+        // gauge still equals the (shard-count-independent) prediction,
+        // and the row carries the shard count.
+        let r = measure_native("mlp_ln", "bk", "all-layer", 2, 2, 2, 2).unwrap();
+        assert_eq!(r.shards, 2);
+        assert_eq!(r.steady_allocs, 0, "replica arenas must be warm after warmup");
+        assert!(r.peak_gcache_floats_measured > 0);
+        assert_eq!(r.peak_gcache_floats_measured as f64, r.peak_gcache_floats_predicted);
+        let solo = measure_native("mlp_ln", "bk", "all-layer", 2, 2, 2, 1).unwrap();
+        assert_eq!(
+            r.peak_gcache_floats_measured, solo.peak_gcache_floats_measured,
+            "per-shard g-cache peak must not depend on the shard count"
+        );
+        assert!(r.to_json().to_string().contains("\"shards\":2"));
+    }
+
+    #[test]
+    fn bench_check_keys_sharded_rows_separately() {
+        // A shards-2 row and its single-worker sibling are distinct
+        // pins: same (model, strategy, style) but different shard
+        // counts must not match each other.
+        let base = sample_result();
+        let mut sharded = sample_result();
+        sharded.shards = 2;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&sharded),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        // base row is missing (no shards-1 current), sharded row is
+        // unpinned (no shards-2 baseline)
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert_eq!(rows[0].key, "m/bk/layer-wise");
+        assert!(rows[0].failures.iter().any(|f| f.contains("missing")), "{rows:?}");
+        assert_eq!(rows[1].key, "m/bk/layer-wise/shards2");
+        assert!(rows[1].failures.iter().any(|f| f.contains("not pinned")), "{rows:?}");
+        // with both pinned, both pass
+        let rows = check_against_baseline(
+            &[base.clone(), sharded.clone()],
+            &[base.clone(), sharded.clone()],
+            0.5,
+        );
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert!(rows.iter().all(|r| r.failures.is_empty()), "{rows:?}");
+    }
+
+    #[test]
     fn measure_native_rejects_unknowns() {
-        assert!(measure_native("nope", "bk", "all-layer", 1, 1, 1).is_err());
-        assert!(measure_native("mlp_e2e", "warp", "all-layer", 1, 1, 1).is_err());
-        assert!(measure_native("mlp_e2e", "bk", "per-tensor", 1, 1, 1).is_err());
+        assert!(measure_native("nope", "bk", "all-layer", 1, 1, 1, 1).is_err());
+        assert!(measure_native("mlp_e2e", "warp", "all-layer", 1, 1, 1, 1).is_err());
+        assert!(measure_native("mlp_e2e", "bk", "per-tensor", 1, 1, 1, 1).is_err());
     }
 }

@@ -215,6 +215,62 @@ pub fn model_cost(strategy: Strategy, b: f64, layers: &[LayerDims]) -> ModelCost
     }
 }
 
+/// Memory prediction for the data-parallel sharded driver (`--shards`).
+///
+/// Sharding is at micro-batch granularity, so *per-shard* peaks are
+/// unchanged from the 1-shard run: each shard runs the same fused
+/// schedule over whole physical micro-batches, and its peak g-cache is
+/// exactly the 1-shard `bk_gcache_floats` prediction (same for the
+/// arena peak). What scales with N is replica state — every shard owns
+/// a full copy of the parameters (+ Adam moments) and its own arena —
+/// plus the rank-0 reduction's in-flight gradient sets.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardedSpace {
+    pub shards: usize,
+    /// Model + optimizer state floats of ONE replica (P, or 3P under
+    /// Adam).
+    pub replica_state_floats: f64,
+    /// Peak g-cache floats of ONE shard — identical to the 1-shard
+    /// prediction, because the physical micro-batch is unchanged.
+    pub per_shard_gcache_floats: f64,
+    /// Worst-case in-flight floats of the rank-0 reduction: the fold
+    /// accumulator plus every not-yet-merged micro-batch gradient set
+    /// (each P floats). Bounded by `(K + 1) * P` for K micro-batches;
+    /// `2 * P` when the fold is sequential (N == 1 or K == 1), matching
+    /// the plain gradient-accumulation path.
+    pub reduction_inflight_floats: f64,
+    /// Predicted total: `N * (state + g-cache)` + reduction in-flight.
+    pub total_floats: f64,
+}
+
+/// Predict sharded-run memory from the per-replica numbers.
+/// `param_floats` is the trainable-parameter float count P (one
+/// gradient set is P floats), `per_shard_gcache` the 1-shard
+/// `bk_gcache_floats` prediction for the model/strategy/style.
+pub fn sharded_space(
+    shards: usize,
+    micro_batches: usize,
+    param_floats: f64,
+    adam: bool,
+    per_shard_gcache: f64,
+) -> ShardedSpace {
+    let n = shards.max(1);
+    let k = micro_batches.max(1);
+    let state = if adam { 3.0 * param_floats } else { param_floats };
+    let inflight = if n == 1 || k == 1 {
+        2.0 * param_floats
+    } else {
+        (k as f64 + 1.0) * param_floats
+    };
+    ShardedSpace {
+        shards: n,
+        replica_state_floats: state,
+        per_shard_gcache_floats: per_shard_gcache,
+        reduction_inflight_floats: inflight,
+        total_floats: n as f64 * (state + per_shard_gcache) + inflight,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,5 +406,43 @@ mod tests {
         assert!((norm_space_ghost(1.0, &l) - 3.148e8).abs() / 3.148e8 < 0.01);
         assert_eq!(norm_space_inst(1.0, &l), 9408.0);
         assert!(!ghost_preferred(&l));
+    }
+
+    #[test]
+    fn sharded_space_per_shard_peaks_are_shard_independent() {
+        // The per-shard g-cache prediction never changes with N — the
+        // physical micro-batch is unchanged; only replica count scales.
+        let p = 1000.0;
+        let g = 250.0;
+        for n in [1usize, 2, 4, 7] {
+            let s = sharded_space(n, 8, p, false, g);
+            assert_eq!(s.per_shard_gcache_floats, g);
+            assert_eq!(s.replica_state_floats, p);
+        }
+        let adam = sharded_space(2, 8, p, true, g);
+        assert_eq!(adam.replica_state_floats, 3.0 * p);
+    }
+
+    #[test]
+    fn sharded_space_totals_scale_with_replicas() {
+        let p = 1000.0;
+        let g = 250.0;
+        // N = 1 reduces to the plain accumulation bound: state + cache
+        // + a 2P fold.
+        let one = sharded_space(1, 8, p, false, g);
+        assert_eq!(one.reduction_inflight_floats, 2.0 * p);
+        assert_eq!(one.total_floats, p + g + 2.0 * p);
+        // N > 1, K micro-batches: (K+1)*P in-flight worst case, N
+        // replicas of state + cache.
+        let four = sharded_space(4, 8, p, false, g);
+        assert_eq!(four.reduction_inflight_floats, 9.0 * p);
+        assert_eq!(four.total_floats, 4.0 * (p + g) + 9.0 * p);
+        // K = 1 is sequential on rank 0 even with many shards.
+        let idle = sharded_space(4, 1, p, false, g);
+        assert_eq!(idle.reduction_inflight_floats, 2.0 * p);
+        // monotone in N
+        assert!(four.total_floats > one.total_floats);
+        // shards = 0 clamps to 1
+        assert_eq!(sharded_space(0, 8, p, false, g), one);
     }
 }

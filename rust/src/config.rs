@@ -29,6 +29,13 @@ pub struct TrainConfig {
     pub backend: String,
     /// Worker threads for the native kernels (0 = one per core).
     pub threads: usize,
+    /// Data-parallel worker shards per logical step (native backend
+    /// only). Each shard runs whole micro-batches through the fused
+    /// schedule on its own replica; rank 0 merges the per-micro-batch
+    /// clipped sums in fixed global order and stays authoritative for
+    /// the noise draw and the privacy accountant, so an N-shard step is
+    /// bitwise identical to the 1-shard step at equal global batch.
+    pub shards: usize,
     /// Ghost-vs-instantiation route decision for the mixed strategies:
     /// "formula" (the paper's `2T^2 < pd` rule, default) or "measured"
     /// (per-machine cost model calibrated by a startup microbenchmark,
@@ -89,6 +96,7 @@ impl Default for TrainConfig {
         Self {
             backend: "native".to_string(),
             threads: 0,
+            shards: 1,
             dispatch: "formula".to_string(),
             dispatch_profile: PathBuf::from("fastdp_dispatch.json"),
             artifacts_dir: PathBuf::from("artifacts"),
@@ -118,6 +126,7 @@ impl TrainConfig {
         let mut c = TrainConfig::default();
         c.backend = v.opt_str("backend", &c.backend).to_string();
         c.threads = v.opt_i64("threads", 0) as usize;
+        c.shards = v.opt_i64("shards", 1) as usize;
         c.dispatch = v.opt_str("dispatch", &c.dispatch).to_string();
         if let Some(p) = v.get("dispatch_profile").and_then(Value::as_str) {
             c.dispatch_profile = PathBuf::from(p);
@@ -163,6 +172,7 @@ impl TrainConfig {
             self.backend = b.to_string();
         }
         self.threads = args.get_usize("threads", self.threads);
+        self.shards = args.get_usize("shards", self.shards);
         if let Some(d) = args.get("dispatch") {
             self.dispatch = d.to_string();
         }
@@ -237,6 +247,15 @@ impl TrainConfig {
             return Err(format!(
                 "unknown dispatch '{}', expected 'formula' or 'measured'",
                 self.dispatch
+            ));
+        }
+        if self.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        if self.shards > 1 && self.backend != "native" {
+            return Err(format!(
+                "--shards {} requires the native backend (pjrt artifacts are single-worker)",
+                self.shards
             ));
         }
         if crate::complexity::ClippingStyle::parse(&self.clipping_style).is_none() {
@@ -346,6 +365,27 @@ mod tests {
         c.apply_cli(&args).unwrap();
         assert_eq!(c.dispatch, "measured");
         assert_eq!(c.dispatch_profile, std::path::Path::new("prof.json"));
+    }
+
+    #[test]
+    fn shards_parse_and_reject() {
+        let v = parse(r#"{"shards": 4}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.shards, 4);
+        // legacy configs without the field default to a single worker
+        let v = parse(r#"{"model": "mlp_e2e"}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&v).unwrap().shards, 1);
+        // zero shards and non-native sharding are rejected
+        let v = parse(r#"{"shards": 0}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let v = parse(r#"{"backend": "pjrt", "shards": 2}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let mut c = TrainConfig::default();
+        let args = crate::cli::Args::parse(
+            "train --shards 3".split_whitespace().map(String::from),
+        );
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.shards, 3);
     }
 
     #[test]

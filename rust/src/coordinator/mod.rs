@@ -137,6 +137,17 @@ impl BatchSource {
             BatchSource::Vectors(ds) => ds.skip_to(cursor),
         }
     }
+
+    /// Positioned clone of the training stream starting at absolute
+    /// draw `start`. Sharded steps give each shard a sub-stream at its
+    /// first global micro-batch index; the per-shard draws concatenate
+    /// to exactly this stream's 1-shard order.
+    fn sub_stream(&self, start: u64) -> Self {
+        match self {
+            BatchSource::Tokens(c) => BatchSource::Tokens(c.sub_stream(start)),
+            BatchSource::Vectors(ds) => BatchSource::Vectors(ds.sub_stream(start)),
+        }
+    }
 }
 
 pub struct Trainer {
@@ -405,42 +416,30 @@ impl Trainer {
     /// Accumulate per-sample-clipped gradient sums over `accum`
     /// micro-batches (no update). Returns the summed grads plus the
     /// step metrics averaged over the micro-batches.
+    ///
+    /// Data is drawn through per-shard sub-streams: shard `s` owns the
+    /// contiguous micro-batch range the balanced split assigns it and
+    /// reads from a stream clone positioned at its first global draw
+    /// index, so the per-shard draws concatenate to exactly the
+    /// 1-shard order (the parent cursor advances by `accum` either
+    /// way, keeping checkpoint cursors shard-count-independent). The
+    /// reduction is the backend's [`Backend::sharded_grads`], whose
+    /// contract is a flat left fold in global micro-batch order —
+    /// bitwise the sequential accumulation regardless of shard count.
     fn accumulate_grads(&mut self, accum: usize) -> Result<(Vec<Vec<f32>>, StepOut)> {
-        let mut acc_grads: Vec<Vec<f32>> = Vec::new();
-        let mut loss_sum = 0.0f32;
-        let mut clip_sum = 0.0f32;
-        let mut group_sum: Vec<f32> = Vec::new();
-        for _ in 0..accum {
-            let (x, y) = self.source.sample(self.info.batch, self.info.seq);
-            let (grads, out) = self.backend.clipped_grads(&x, &y, self.cfg.clip as f32)?;
-            loss_sum += out.loss;
-            clip_sum += out.mean_clip;
-            if group_sum.is_empty() {
-                group_sum = out.group_clip;
-            } else {
-                for (a, g) in group_sum.iter_mut().zip(out.group_clip.iter()) {
-                    *a += *g;
-                }
+        let cursor = self.source.cursor();
+        let shards = self.cfg.shards.max(1);
+        let mut batches = Vec::with_capacity(accum);
+        let mut start = 0u64;
+        for n in crate::runtime::native::par::split_sizes(accum, shards) {
+            let mut sub = self.source.sub_stream(cursor + start);
+            for _ in 0..n {
+                batches.push(sub.sample(self.info.batch, self.info.seq));
             }
-            if acc_grads.is_empty() {
-                acc_grads = grads;
-            } else {
-                for (a, g) in acc_grads.iter_mut().zip(grads.iter()) {
-                    for (av, gv) in a.iter_mut().zip(g.iter()) {
-                        *av += *gv;
-                    }
-                }
-            }
+            start += n as u64;
         }
-        for g in group_sum.iter_mut() {
-            *g /= accum as f32;
-        }
-        let out = StepOut {
-            loss: loss_sum / accum as f32,
-            mean_clip: clip_sum / accum as f32,
-            group_clip: group_sum,
-        };
-        Ok((acc_grads, out))
+        self.source.skip_to(cursor + accum as u64);
+        self.backend.sharded_grads(&batches, self.cfg.clip as f32)
     }
 
     /// Gradient accumulation: k clipped-grad micro-steps summed

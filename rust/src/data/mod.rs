@@ -15,6 +15,7 @@
 use crate::util::rng::Xoshiro256;
 
 /// Zipf-ish unigram sampler over [0, vocab) via inverse CDF.
+#[derive(Clone)]
 struct Zipf {
     cdf: Vec<f64>,
 }
@@ -57,6 +58,13 @@ impl Zipf {
 /// after k draws restores `skip_to(k)` from a checkpoint and continues
 /// bitwise-identically — and lets eval draw from a disjoint stream
 /// (odd stream ids) without perturbing training data.
+///
+/// Because draws are counter-based, the stream also splits for free:
+/// [`Self::sub_stream`] hands out a positioned clone, so a sharded step
+/// can give shard `s` a sub-stream starting at its first global
+/// micro-batch index and the per-shard draws concatenate to exactly the
+/// 1-shard draw order.
+#[derive(Clone)]
 pub struct TokenCorpus {
     pub vocab: usize,
     pub seq: usize,
@@ -98,6 +106,16 @@ impl TokenCorpus {
     /// Position the training stream at draw `cursor` (checkpoint resume).
     pub fn skip_to(&mut self, cursor: u64) {
         self.cursor = cursor;
+    }
+
+    /// Positioned clone of the training stream starting at absolute
+    /// draw `start`. Batch k is a pure function of (seed, k), so the
+    /// sub-stream's draws are bitwise those the parent would make from
+    /// the same cursor; the parent's own cursor is untouched.
+    pub fn sub_stream(&self, start: u64) -> Self {
+        let mut s = self.clone();
+        s.cursor = start;
+        s
     }
 
     fn sequence_from(&self, rng: &mut Xoshiro256) -> (Vec<i32>, Vec<i32>) {
@@ -157,7 +175,9 @@ impl TokenCorpus {
 ///
 /// Counter-based like [`TokenCorpus`]: batch k is a pure function of
 /// (seed, k), with a disjoint eval stream, so checkpoints can persist
-/// and restore the exact data position.
+/// and restore the exact data position, and [`Self::sub_stream`] can
+/// split the draw order across shards without perturbing it.
+#[derive(Clone)]
 pub struct VectorDataset {
     pub dim: usize,
     pub classes: usize,
@@ -196,6 +216,14 @@ impl VectorDataset {
     /// Position the training stream at draw `cursor` (checkpoint resume).
     pub fn skip_to(&mut self, cursor: u64) {
         self.cursor = cursor;
+    }
+
+    /// Positioned clone of the training stream starting at absolute
+    /// draw `start` (see [`TokenCorpus::sub_stream`]).
+    pub fn sub_stream(&self, start: u64) -> Self {
+        let mut s = self.clone();
+        s.cursor = start;
+        s
     }
 
     fn batch_from(&self, rng: &mut Xoshiro256, b: usize) -> (Vec<f32>, Vec<i32>) {
@@ -349,6 +377,39 @@ mod tests {
         let mut b = VectorDataset::new(8, 3, 4.0, 11);
         b.skip_to(1);
         assert_eq!(b.sample_batch(5), second);
+    }
+
+    #[test]
+    fn sub_streams_concatenate_to_one_shard_draw_order() {
+        // Split 7 draws over 3 shard sub-streams (balanced contiguous
+        // ranges 3+2+2): concatenating their draws reproduces the
+        // 1-shard sequence bitwise, and the parent cursor is untouched.
+        let parent = TokenCorpus::new(64, 8, 9);
+        let mut solo = TokenCorpus::new(64, 8, 9);
+        let expect: Vec<_> = (0..7).map(|_| solo.sample_batch(4)).collect();
+        let mut got = Vec::new();
+        for (start, len) in [(0u64, 3usize), (3, 2), (5, 2)] {
+            let mut sub = parent.sub_stream(start);
+            for _ in 0..len {
+                got.push(sub.sample_batch(4));
+            }
+            assert_eq!(sub.cursor(), start + len as u64);
+        }
+        assert_eq!(got, expect);
+        assert_eq!(parent.cursor(), 0);
+
+        let parent = VectorDataset::new(8, 3, 4.0, 9);
+        let mut solo = VectorDataset::new(8, 3, 4.0, 9);
+        let expect: Vec<_> = (0..5).map(|_| solo.sample_batch(6)).collect();
+        let mut got = Vec::new();
+        for (start, len) in [(0u64, 2usize), (2, 2), (4, 1)] {
+            let mut sub = parent.sub_stream(start);
+            for _ in 0..len {
+                got.push(sub.sample_batch(6));
+            }
+        }
+        assert_eq!(got, expect);
+        assert_eq!(parent.cursor(), 0);
     }
 
     #[test]

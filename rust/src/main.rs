@@ -54,7 +54,7 @@ fn main() {
                  calibrate-dispatch|ckpt|list|version> [--opts]"
             );
             println!(
-                "       train --model <m> --strategy <s> [--threads <n>] \
+                "       train --model <m> --strategy <s> [--threads <n>] [--shards <n>] \
                  [--clipping-style all-layer|layer-wise|group-wise[:k]] \
                  [--dispatch formula|measured] [--dispatch-profile <file>] \
                  [--checkpoint-dir <d> --checkpoint-every <k> --keep-last <n>] \
@@ -63,10 +63,10 @@ fn main() {
             println!("       ckpt inspect <checkpoint.fdp|dir> | ckpt list <dir>");
             println!(
                 "       bench [--model <m>] [--strategy a,b,...] [--styles a,b,...] \
-                 [--threads <n>] [--json]"
+                 [--threads <n>] [--shards <n>] [--json]"
             );
             println!(
-                "       complexity [--model <m>] [--batch <b>] \
+                "       complexity [--model <m>] [--batch <b>] [--shards <n> [--micro-batches <k>]] \
                  [--dispatch formula|measured] [--dispatch-profile <file>]"
             );
             println!("       calibrate-dispatch [--threads <n>] [--dispatch-profile <file>]");
@@ -332,6 +332,46 @@ fn cmd_complexity(args: &Args) -> i32 {
         ]);
     }
     print!("{}", t.render());
+
+    // `--shards N` (>1): predicted sharded-execution memory. Per-shard
+    // g-cache peaks equal the 1-shard figure (shards take whole physical
+    // micro-batches, never slices); totals scale with the N replicas
+    // plus the rank-0 reduction's in-flight micro-batch grad sets.
+    let shards = args.get_usize("shards", 1);
+    if shards > 1 {
+        let param_floats = match &native_spec {
+            Some(spec) => spec.n_params() as f64,
+            None => layers.iter().map(|l| l.p as f64).sum(),
+        };
+        let adam = native_spec
+            .as_ref()
+            .map(|s| s.optimizer == "adam")
+            .unwrap_or(false);
+        let micro = args.get_usize("micro-batches", shards);
+        let mut t = Table::new(
+            &format!(
+                "sharded execution (N={shards} shards, K={micro} micro-batches/step): \
+                 predicted peak floats"
+            ),
+            &["style", "replica state", "per-shard g-cache", "reduction in-flight", "total"],
+        );
+        for style in &styles {
+            let g = complexity::bk_gcache_floats(*style, b, &gcache_layers);
+            let sp = complexity::sharded_space(shards, micro, param_floats, adam, g);
+            t.row(&[
+                style.name(),
+                fmt_count(sp.replica_state_floats),
+                fmt_count(sp.per_shard_gcache_floats),
+                fmt_count(sp.reduction_inflight_floats),
+                fmt_count(sp.total_floats),
+            ]);
+        }
+        print!("{}", t.render());
+        println!(
+            "per-shard g-cache peak is shard-count independent (each shard runs whole \
+             physical micro-batches); replica state and g-cache scale with N"
+        );
+    }
     0
 }
 

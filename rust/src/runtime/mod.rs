@@ -169,6 +169,33 @@ pub trait Backend {
     fn clipped_grads(&mut self, x: &BatchX, y: &[i32], clip: f32)
         -> Result<(Vec<Vec<f32>>, StepOut)>;
 
+    /// Per-sample-clipped gradient sums over one *logical* batch given
+    /// as an ordered list of micro-batches, merged micro-batch by
+    /// micro-batch in list order; metrics are averaged over the
+    /// micro-batches (group clip factors included).
+    ///
+    /// The default is the single-worker tape: sequential
+    /// `clipped_grads` per micro-batch, accumulated in a flat left
+    /// fold — the reduction-order contract every parallel override
+    /// (e.g. the native sharded driver) must reproduce bitwise.
+    fn sharded_grads(
+        &mut self,
+        batches: &[(BatchX, Vec<i32>)],
+        clip: f32,
+    ) -> Result<(Vec<Vec<f32>>, StepOut)> {
+        if batches.is_empty() {
+            bail!("sharded_grads needs at least one micro-batch");
+        }
+        let mut acc_grads: Vec<Vec<f32>> = Vec::new();
+        let mut out = StepOut::default();
+        for (x, y) in batches {
+            let (grads, micro) = self.clipped_grads(x, y, clip)?;
+            merge_micro_batch(&mut acc_grads, &mut out, grads, micro);
+        }
+        finalize_step_out(&mut out, batches.len());
+        Ok((acc_grads, out))
+    }
+
     /// Apply an optimizer update from accumulated gradient sums.
     fn apply_update(&mut self, grads: &[Vec<f32>], noise: &[Vec<f32>], h: &StepHyper) -> Result<()>;
 
@@ -185,6 +212,48 @@ pub trait Backend {
 
     fn alloc_stats(&self) -> AllocStats {
         AllocStats::default()
+    }
+}
+
+/// Fold one micro-batch's clipped gradient sums and metrics into the
+/// logical-step accumulators, in arrival order. This is THE
+/// reduction-order contract of gradient accumulation and sharding: a
+/// flat left fold over micro-batches (`acc += g_k` element-wise, k
+/// ascending), so any driver that merges in global micro-batch order —
+/// sequential or sharded — produces bitwise-identical sums.
+pub fn merge_micro_batch(
+    acc_grads: &mut Vec<Vec<f32>>,
+    acc_out: &mut StepOut,
+    grads: Vec<Vec<f32>>,
+    out: StepOut,
+) {
+    acc_out.loss += out.loss;
+    acc_out.mean_clip += out.mean_clip;
+    if acc_out.group_clip.is_empty() {
+        acc_out.group_clip = out.group_clip;
+    } else {
+        for (a, g) in acc_out.group_clip.iter_mut().zip(out.group_clip.iter()) {
+            *a += *g;
+        }
+    }
+    if acc_grads.is_empty() {
+        *acc_grads = grads;
+    } else {
+        for (a, g) in acc_grads.iter_mut().zip(grads.iter()) {
+            for (av, gv) in a.iter_mut().zip(g.iter()) {
+                *av += *gv;
+            }
+        }
+    }
+}
+
+/// Turn micro-batch metric sums into per-logical-step means.
+pub fn finalize_step_out(out: &mut StepOut, micro_batches: usize) {
+    let k = micro_batches.max(1) as f32;
+    out.loss /= k;
+    out.mean_clip /= k;
+    for g in out.group_clip.iter_mut() {
+        *g /= k;
     }
 }
 
@@ -212,13 +281,24 @@ pub fn create_backend(cfg: &crate::config::TrainConfig) -> Result<Box<dyn Backen
                 &cfg.dispatch_profile,
                 cfg.threads,
             )?;
-            Ok(Box::new(native::NativeBackend::with_style_dispatch(
-                spec,
-                strategy,
-                style,
-                cfg.threads,
-                &dispatch,
-            )?))
+            if cfg.shards > 1 {
+                Ok(Box::new(native::shard::ShardedRun::new(
+                    spec,
+                    strategy,
+                    style,
+                    cfg.threads,
+                    &dispatch,
+                    cfg.shards,
+                )?))
+            } else {
+                Ok(Box::new(native::NativeBackend::with_style_dispatch(
+                    spec,
+                    strategy,
+                    style,
+                    cfg.threads,
+                    &dispatch,
+                )?))
+            }
         }
         "pjrt" if style != crate::complexity::ClippingStyle::AllLayer => bail!(
             "clipping_style '{}' requires the native backend (pjrt artifacts are all-layer only)",
@@ -288,6 +368,19 @@ mod tests {
         cfg.clipping_style = "layer-wise".into();
         let err = create_backend(&cfg).unwrap_err().to_string();
         assert!(err.contains("native"), "{err}");
+    }
+
+    #[test]
+    fn create_backend_shards_selects_sharded_driver() {
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.shards = 3;
+        let be = create_backend(&cfg).unwrap();
+        // Same public surface as the single-worker backend.
+        assert_eq!(be.info().name, cfg.model);
+        assert_eq!(be.strategy(), cfg.strategy);
+        // shards == 1 keeps the bare NativeBackend path working.
+        cfg.shards = 1;
+        assert!(create_backend(&cfg).is_ok());
     }
 
     #[test]

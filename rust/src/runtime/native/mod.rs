@@ -41,6 +41,7 @@ pub mod kernels;
 pub mod layers;
 pub mod model;
 pub mod par;
+pub mod shard;
 pub mod simd;
 
 #[cfg(test)]

@@ -39,8 +39,9 @@ pub fn default_threads() -> usize {
 
 /// Sizes of the balanced partition of `items` into `workers` consecutive
 /// ranges: `base = items / workers` each, the first `items % workers`
-/// ranges getting one extra.
-fn split_sizes(items: usize, workers: usize) -> impl Iterator<Item = usize> {
+/// ranges getting one extra. Public because the sharded driver reuses
+/// the same balanced split for its micro-batch ranges.
+pub fn split_sizes(items: usize, workers: usize) -> impl Iterator<Item = usize> {
     let base = items / workers;
     let extra = items % workers;
     (0..workers).map(move |w| base + usize::from(w < extra))

@@ -1,0 +1,396 @@
+//! Data-parallel sharded driver for the native backend.
+//!
+//! [`ShardedRun`] owns `N` full [`NativeBackend`] replicas (params +
+//! optimizer state + arena each) and splits every logical batch — an
+//! ordered list of K micro-batches — across them at *micro-batch*
+//! granularity using the same balanced contiguous split as the kernel
+//! fan-out (`par::split_sizes`). Each shard runs whole physical
+//! micro-batches through the unchanged fused `StackRun` schedule on its
+//! own replica, so every per-micro-batch clipped sum is bitwise
+//! identical to what the 1-shard tape computes for that micro-batch.
+//!
+//! **Reduction-order contract.** f32 addition is non-associative, so
+//! shards never pre-merge their local micro-batches: each shard ships
+//! every micro-batch result `(k, grads, metrics)` individually over a
+//! channel, and rank 0 folds them strictly in ascending global
+//! micro-batch order k = 0..K-1 with the same flat left fold
+//! ([`merge_micro_batch`]) the sequential accumulation path uses.
+//! Out-of-order arrivals park in a pending map until their turn. The
+//! result: an N-shard logical step is bitwise identical to the 1-shard
+//! step at equal global batch, for any N, including ragged K % N != 0
+//! splits and idle shards when K < N.
+//!
+//! **Rank 0 stays authoritative.** The coordinator owns the noise
+//! stream and the RDP accountant; this driver never draws noise or
+//! touches the accountant. Reads (`info`, `eval_loss`, `state`,
+//! `clipped_grads`, `alloc_stats`) are served by replica 0; writes
+//! (`init`, `load_state`, `apply_update`) broadcast to every replica,
+//! and because the optimizer update is deterministic element-wise
+//! arithmetic, the replicas remain bitwise identical forever.
+//!
+//! **Determinism scope.** Bitwise parity holds per fixed kernel
+//! `threads` and ISA, exactly like the 1-shard tape: every replica is
+//! built with the *same* `threads` the 1-shard run would use. N shards
+//! x `threads` kernel workers can oversubscribe the machine; that costs
+//! wall time, never bits.
+
+use super::model::NativeSpec;
+use super::{par, NativeBackend};
+use crate::complexity::{ClippingStyle, Dispatch, Strategy};
+use crate::error::{Error, Result};
+use crate::runtime::{
+    finalize_step_out, merge_micro_batch, AllocStats, Backend, BatchX, ModelInfo, StepHyper,
+    StepOut,
+};
+use crate::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::mpsc;
+
+/// `N` bitwise-identical [`NativeBackend`] replicas plus the rank-0
+/// fixed-order reduction. Implements [`Backend`], so the coordinator,
+/// bench, and tests drive it exactly like a single-worker backend.
+pub struct ShardedRun {
+    /// Replica 0 is rank 0: it serves reads and anchors parity checks.
+    shards: Vec<NativeBackend>,
+}
+
+impl ShardedRun {
+    pub fn new(
+        spec: NativeSpec,
+        strategy: Strategy,
+        style: ClippingStyle,
+        threads: usize,
+        dispatch: &Dispatch,
+        n_shards: usize,
+    ) -> Result<Self> {
+        if n_shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        let mut shards = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            shards.push(NativeBackend::with_style_dispatch(
+                spec.clone(),
+                strategy,
+                style,
+                threads,
+                dispatch,
+            )?);
+        }
+        Ok(Self { shards })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Rank-0 replica (parity tests compare its state to a 1-shard run).
+    pub fn rank0(&self) -> &NativeBackend {
+        &self.shards[0]
+    }
+
+    pub fn rank0_mut(&mut self) -> &mut NativeBackend {
+        &mut self.shards[0]
+    }
+
+    /// Contiguous global micro-batch range per shard: the balanced
+    /// split (first `K % N` shards take one extra micro-batch).
+    fn shard_ranges(&self, k_total: usize) -> Vec<Range<usize>> {
+        let mut ranges = Vec::with_capacity(self.shards.len());
+        let mut start = 0usize;
+        for n in par::split_sizes(k_total, self.shards.len()) {
+            ranges.push(start..start + n);
+            start += n;
+        }
+        ranges
+    }
+}
+
+impl Backend for ShardedRun {
+    fn info(&self) -> &ModelInfo {
+        self.shards[0].info()
+    }
+
+    fn strategy(&self) -> &str {
+        self.shards[0].strategy()
+    }
+
+    fn init(&mut self, seed: u64) -> Result<()> {
+        // Same seed on every replica: the init streams are a pure
+        // function of (seed, layer), so all replicas start bitwise
+        // identical.
+        for shard in self.shards.iter_mut() {
+            shard.init(seed)?;
+        }
+        Ok(())
+    }
+
+    fn eval_loss(&mut self, x: &BatchX, y: &[i32]) -> Result<f32> {
+        self.shards[0].eval_loss(x, y)
+    }
+
+    fn step(
+        &mut self,
+        x: &BatchX,
+        y: &[i32],
+        noise: &[Vec<f32>],
+        h: &StepHyper,
+    ) -> Result<StepOut> {
+        // One physical batch == one micro-batch: rank 0 computes the
+        // clipped sums (other shards idle) and the update broadcasts.
+        // guarded_step pins fused step == clipped_grads + apply_update
+        // bitwise, so this matches the 1-shard fused path.
+        let (grads, out) = {
+            let (grads, mut out) = self.shards[0].clipped_grads(x, y, h.clip)?;
+            finalize_step_out(&mut out, 1);
+            (grads, out)
+        };
+        self.apply_update(&grads, noise, h)?;
+        Ok(out)
+    }
+
+    fn clipped_grads(
+        &mut self,
+        x: &BatchX,
+        y: &[i32],
+        clip: f32,
+    ) -> Result<(Vec<Vec<f32>>, StepOut)> {
+        // Read-only w.r.t. params: rank 0 serves it; replicas stay
+        // in sync because nothing is applied here.
+        self.shards[0].clipped_grads(x, y, clip)
+    }
+
+    fn sharded_grads(
+        &mut self,
+        batches: &[(BatchX, Vec<i32>)],
+        clip: f32,
+    ) -> Result<(Vec<Vec<f32>>, StepOut)> {
+        if batches.is_empty() {
+            bail!("sharded_grads needs at least one micro-batch");
+        }
+        let k_total = batches.len();
+        if self.shards.len() == 1 || k_total == 1 {
+            // Degenerate fan-out: run the sequential contract directly
+            // on rank 0 (bitwise the same fold, no thread spawn).
+            let mut acc_grads: Vec<Vec<f32>> = Vec::new();
+            let mut out = StepOut::default();
+            for (x, y) in batches {
+                let (grads, micro) = self.shards[0].clipped_grads(x, y, clip)?;
+                merge_micro_batch(&mut acc_grads, &mut out, grads, micro);
+            }
+            finalize_step_out(&mut out, k_total);
+            return Ok((acc_grads, out));
+        }
+
+        let ranges = self.shard_ranges(k_total);
+        let (tx, rx) = mpsc::channel::<(usize, Result<(Vec<Vec<f32>>, StepOut)>)>();
+        let merged = std::thread::scope(|s| {
+            for (shard, range) in self.shards.iter_mut().zip(ranges) {
+                if range.is_empty() {
+                    continue; // K < N leaves trailing shards idle
+                }
+                let tx = tx.clone();
+                let slice = &batches[range.clone()];
+                let k0 = range.start;
+                s.spawn(move || {
+                    for (i, (x, y)) in slice.iter().enumerate() {
+                        let res = shard.clipped_grads(x, y, clip);
+                        let failed = res.is_err();
+                        if tx.send((k0 + i, res)).is_err() || failed {
+                            return; // receiver gone or shard errored
+                        }
+                    }
+                });
+            }
+            drop(tx);
+
+            // Rank-0 reduction: fold strictly in ascending global
+            // micro-batch order. Results arriving early for a later k
+            // park in `pending` until every earlier k has been folded —
+            // this is what makes the N-shard sum bitwise equal to the
+            // sequential flat left fold.
+            let mut acc_grads: Vec<Vec<f32>> = Vec::new();
+            let mut out = StepOut::default();
+            let mut next_k = 0usize;
+            let mut pending: BTreeMap<usize, (Vec<Vec<f32>>, StepOut)> = BTreeMap::new();
+            let mut first_err: Option<Error> = None;
+            for (k, res) in rx {
+                match res {
+                    Ok(pair) => {
+                        pending.insert(k, pair);
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e.wrap(format!("shard micro-batch {k}")));
+                        }
+                    }
+                }
+                while let Some((grads, micro)) = pending.remove(&next_k) {
+                    merge_micro_batch(&mut acc_grads, &mut out, grads, micro);
+                    next_k += 1;
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            if next_k != k_total {
+                return Err(anyhow!(
+                    "sharded reduction incomplete: merged {next_k} of {k_total} micro-batches"
+                ));
+            }
+            finalize_step_out(&mut out, k_total);
+            Ok((acc_grads, out))
+        })?;
+        Ok(merged)
+    }
+
+    fn apply_update(
+        &mut self,
+        grads: &[Vec<f32>],
+        noise: &[Vec<f32>],
+        h: &StepHyper,
+    ) -> Result<()> {
+        // Broadcast the identical (grads, noise, hyper) update to every
+        // replica; the element-wise optimizer keeps them bitwise equal.
+        // Replicas update concurrently — each owns its state.
+        let mut results: Vec<Result<()>> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .shards
+                .iter_mut()
+                .map(|shard| s.spawn(move || shard.apply_update(grads, noise, h)))
+                .collect();
+            results = handles
+                .into_iter()
+                .map(|hdl| match hdl.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow!("shard update thread panicked")),
+                })
+                .collect();
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    fn state(&self) -> Result<Vec<Vec<f32>>> {
+        self.shards[0].state()
+    }
+
+    fn load_state(&mut self, tensors: Vec<Vec<f32>>) -> Result<()> {
+        for shard in self.shards.iter_mut().skip(1) {
+            shard.load_state(tensors.clone())?;
+        }
+        self.shards[0].load_state(tensors)
+    }
+
+    fn alloc_stats(&self) -> AllocStats {
+        // Rank 0's arena telemetry: per-shard peaks equal the 1-shard
+        // peaks (the physical micro-batch is unchanged), and rank 0
+        // always owns micro-batch 0, so its g-cache peak is the pinned
+        // one. Fresh allocs are summed so the zero-steady-state
+        // invariant covers every replica.
+        let mut stats = self.shards[0].alloc_stats();
+        for shard in self.shards.iter().skip(1) {
+            let s = shard.alloc_stats();
+            stats.fresh_allocs_last_step += s.fresh_allocs_last_step;
+            stats.arena_bytes += s.arena_bytes;
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn mk(n_shards: usize) -> ShardedRun {
+        let spec = NativeSpec::by_name("mlp_e2e").unwrap();
+        ShardedRun::new(
+            spec,
+            Strategy::Bk,
+            ClippingStyle::AllLayer,
+            2,
+            &Dispatch::Formula,
+            n_shards,
+        )
+        .unwrap()
+    }
+
+    fn batch_for(info: &ModelInfo, rng: &mut Xoshiro256) -> (BatchX, Vec<i32>) {
+        let n = info.batch * info.seq * info.d_in;
+        let x: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let y: Vec<i32> = (0..info.batch)
+            .map(|_| (rng.next_u64() % info.n_classes as u64) as i32)
+            .collect();
+        (BatchX::F32(x), y)
+    }
+
+    #[test]
+    fn rejects_zero_shards() {
+        let spec = NativeSpec::by_name("mlp_e2e").unwrap();
+        assert!(ShardedRun::new(
+            spec,
+            Strategy::Bk,
+            ClippingStyle::AllLayer,
+            1,
+            &Dispatch::Formula,
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn shard_ranges_balanced_and_contiguous() {
+        let run = mk(3);
+        let r = run.shard_ranges(7);
+        assert_eq!(r, vec![0..3, 3..5, 5..7]);
+        let r = run.shard_ranges(2); // K < N: last shard idle
+        assert_eq!(r, vec![0..1, 1..2, 2..2]);
+    }
+
+    #[test]
+    fn replicas_stay_bitwise_identical_after_updates() {
+        let mut run = mk(3);
+        run.init(7).unwrap();
+        let mut rng = Xoshiro256::new(11);
+        let info = run.info().clone();
+        let batches: Vec<_> = (0..5).map(|_| batch_for(&info, &mut rng)).collect();
+        let h = StepHyper {
+            lr: 0.1,
+            clip: 1.0,
+            sigma_r: 0.0,
+            logical_batch: (info.batch * batches.len()) as f32,
+            step: 1.0,
+        };
+        let (grads, _) = run.sharded_grads(&batches, h.clip).unwrap();
+        run.apply_update(&grads, &[], &h).unwrap();
+        let s0 = run.shards[0].state().unwrap();
+        for (i, shard) in run.shards.iter().enumerate().skip(1) {
+            assert_eq!(s0, shard.state().unwrap(), "replica {i} diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_sequential_fold_bitwise() {
+        // K=5 micro-batches: ragged over N=2 (3+2) and N=3 (2+2+1),
+        // idle shards at N=7. The full N x K matrix lives in
+        // tests/shard_parity.rs.
+        for n in [2usize, 3, 7] {
+            let mut run = mk(n);
+            run.init(3).unwrap();
+            let mut solo = mk(1);
+            solo.init(3).unwrap();
+            let mut rng = Xoshiro256::new(5);
+            let info = run.info().clone();
+            let batches: Vec<_> = (0..5).map(|_| batch_for(&info, &mut rng)).collect();
+            let (g_n, o_n) = run.sharded_grads(&batches, 1.0).unwrap();
+            let (g_1, o_1) = solo.sharded_grads(&batches, 1.0).unwrap();
+            assert_eq!(g_n, g_1, "grads diverged at N={n}");
+            assert_eq!(o_n.loss.to_bits(), o_1.loss.to_bits(), "loss at N={n}");
+            assert_eq!(o_n.group_clip, o_1.group_clip, "group clips at N={n}");
+        }
+    }
+}

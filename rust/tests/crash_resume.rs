@@ -111,6 +111,71 @@ fn kill_and_resume_is_bitwise_identical_to_uninterrupted_run() {
 }
 
 #[test]
+fn sharded_kill_and_resume_matches_uninterrupted_single_worker_run() {
+    let _g = serial();
+    let dir = tmpdir("shard");
+
+    // Reference: 1-shard, never interrupted, never checkpointed, at the
+    // same logical batch (3 micro-batches of the 32-row physical batch).
+    let mut cfg1 = cfg_for("mlp_e2e", 8);
+    cfg1.logical_batch = 96;
+    let mut clean = Trainer::new(cfg1).unwrap();
+    let clean_report = clean.run().unwrap();
+    let clean_state = clean.backend.state().unwrap();
+
+    // Interrupted run under --shards 3: 7 of 8 steps (checkpoints land
+    // at 3 and 6), then a simulated kill -9 mid-save.
+    let mut cfg = cfg_for("mlp_e2e", 8);
+    cfg.logical_batch = 96;
+    cfg.shards = 3;
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 3;
+    let mut pre = Trainer::new(cfg.clone()).unwrap();
+    pre.init().unwrap();
+    for _ in 0..7 {
+        pre.train_step().unwrap();
+    }
+    fault::arm(fault::Fault::KillMidWrite);
+    let err = pre.save_checkpoint(&dir).unwrap_err().to_string();
+    assert!(err.contains(fault::INJECTED), "{err}");
+    drop(pre); // the "killed" process
+
+    // Resume sharded: picks up at step 6, finishes 7 and 8, and ends
+    // bitwise equal to the clean SINGLE-worker run — the reduction
+    // order, rank-0 noise draws, and data cursors are all shard-count
+    // independent.
+    let mut resumed = Trainer::new(cfg.clone()).unwrap();
+    let resumed_report = resumed.run().unwrap();
+    assert_eq!(resumed_report.steps, 8);
+    assert_states_equal(
+        &clean_state,
+        &resumed.backend.state().unwrap(),
+        "sharded kill/resume parity",
+    );
+    assert!(
+        clean_report.final_epsilon.to_bits() == resumed_report.final_epsilon.to_bits(),
+        "epsilon diverged: {} vs {}",
+        clean_report.final_epsilon,
+        resumed_report.final_epsilon
+    );
+
+    // Cross-shard-count interop: the same step-6 checkpoint resumed at
+    // shards=1 must land on the identical final state — the fingerprint
+    // and cursors carry no shard count.
+    let mut cfg_solo = cfg.clone();
+    cfg_solo.shards = 1;
+    let mut cross = Trainer::new(cfg_solo).unwrap();
+    let cross_report = cross.run().unwrap();
+    assert_eq!(cross_report.steps, 8);
+    assert_states_equal(
+        &clean_state,
+        &cross.backend.state().unwrap(),
+        "cross-shard-count resume parity",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn corrupted_newest_checkpoint_falls_back_and_still_matches_clean_run() {
     let _g = serial();
     let dir = tmpdir("fallback");

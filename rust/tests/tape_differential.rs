@@ -24,8 +24,9 @@
 //! is `#[ignore]`d into the slow CI job (`cargo test --release --
 //! --ignored`). Per-stack timing is printed for the workflow log.
 
-use fastdp::complexity::{ClippingStyle, Strategy};
+use fastdp::complexity::{ClippingStyle, Dispatch, Strategy};
 use fastdp::runtime::native::model::NativeSpec;
+use fastdp::runtime::native::shard::ShardedRun;
 use fastdp::runtime::native::NativeBackend;
 use fastdp::runtime::{Backend, BatchX};
 use fastdp::util::rng::Xoshiro256;
@@ -47,6 +48,8 @@ struct Case {
     strategy: Strategy,
     style: ClippingStyle,
     data_seed: u64,
+    /// Sharded-driver worker count for the parity leg (1 = skip it).
+    shards: usize,
 }
 
 fn below(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
@@ -130,6 +133,9 @@ fn random_case(rng: &mut Xoshiro256, idx: usize) -> Case {
         strategy,
         style,
         data_seed: rng.next_u64(),
+        // random shard count: ~1/3 of stacks also exercise the sharded
+        // reduction (bitwise vs the sequential fold) on the same spec
+        shards: 1 + rng.next_below(3) as usize,
     }
 }
 
@@ -161,7 +167,7 @@ fn slice_sample(x: &BatchX, y: &[i32], spec: &NativeSpec, i: usize) -> (BatchX, 
 
 /// Run one case: tape norms vs the materialized per-sample f64 oracle.
 fn check_case(case: &Case) -> Result<(), String> {
-    let Case { spec, strategy, style, data_seed } = case;
+    let Case { spec, strategy, style, data_seed, shards } = case;
     let mut be = NativeBackend::with_style(spec.clone(), *strategy, *style, 2)
         .map_err(|e| format!("build: {e}"))?;
     be.init(data_seed ^ 0x5EED).map_err(|e| format!("init: {e}"))?;
@@ -208,18 +214,69 @@ fn check_case(case: &Case) -> Result<(), String> {
             }
         }
     }
+
+    // sharded differential leg: the N-shard rank-0 reduction over K
+    // micro-batches must be BITWISE identical to the sequential 1-shard
+    // fold — same spec, same init seed, same drawn batches
+    if *shards > 1 {
+        let k = shards + 2; // ragged split: K not divisible by N
+        let batches: Vec<(BatchX, Vec<i32>)> = (0..k)
+            .map(|j| batch_for(spec, data_seed.wrapping_add(j as u64 + 1)))
+            .collect();
+        let mut solo = NativeBackend::with_style(spec.clone(), *strategy, *style, 2)
+            .map_err(|e| format!("solo build: {e}"))?;
+        solo.init(data_seed ^ 0x5EED).map_err(|e| format!("solo init: {e}"))?;
+        let (want_g, want_o) = solo
+            .sharded_grads(&batches, 1.0)
+            .map_err(|e| format!("solo fold: {e}"))?;
+        let mut sh =
+            ShardedRun::new(spec.clone(), *strategy, *style, 2, &Dispatch::Formula, *shards)
+                .map_err(|e| format!("sharded build: {e}"))?;
+        sh.init(data_seed ^ 0x5EED).map_err(|e| format!("sharded init: {e}"))?;
+        let (got_g, got_o) = sh
+            .sharded_grads(&batches, 1.0)
+            .map_err(|e| format!("sharded fold: {e}"))?;
+        if got_g != want_g {
+            return Err(format!(
+                "sharded grads diverge from 1-shard fold (N={shards}, K={k})"
+            ));
+        }
+        if got_o.loss.to_bits() != want_o.loss.to_bits()
+            || got_o.mean_clip.to_bits() != want_o.mean_clip.to_bits()
+            || got_o.group_clip.len() != want_o.group_clip.len()
+            || got_o
+                .group_clip
+                .iter()
+                .zip(&want_o.group_clip)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(format!(
+                "sharded StepOut diverges from 1-shard fold (N={shards}, K={k}): \
+                 loss {} vs {}, mean_clip {} vs {}",
+                got_o.loss, want_o.loss, got_o.mean_clip, want_o.mean_clip
+            ));
+        }
+    }
     Ok(())
 }
 
 /// Candidate simplifications of a failing case, most aggressive first.
 fn shrink_candidates(c: &Case) -> Vec<Case> {
     let mut out = Vec::new();
+    // drop the sharded leg first: if the failure survives at shards=1
+    // it is a tape bug, not a reduction bug
+    if c.shards > 1 {
+        let mut s = c.clone();
+        s.shards = 1;
+        out.push(s);
+    }
     let mut push = |spec: NativeSpec, strategy: Strategy, style: ClippingStyle| {
         out.push(Case {
             spec,
             strategy,
             style,
             data_seed: c.data_seed,
+            shards: c.shards,
         });
     };
     if c.strategy != Strategy::Bk {
@@ -333,7 +390,7 @@ fn run_stacks(n: usize) {
             );
         }
         eprintln!(
-            "stack {idx:>3} ok in {:>8.2?}  ({} B={} T={} blocks={} {:?} {})",
+            "stack {idx:>3} ok in {:>8.2?}  ({} B={} T={} blocks={} {:?} {} shards={})",
             t0.elapsed(),
             if case.spec.tied {
                 "gpt-tied"
@@ -349,6 +406,7 @@ fn run_stacks(n: usize) {
             case.spec.blocks,
             case.strategy,
             case.style.name(),
+            case.shards,
         );
     }
 }
