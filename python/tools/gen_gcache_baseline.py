@@ -2,10 +2,12 @@
 """Oracle for the fused BK g-cache peak + generator for ci/bench_baseline.json.
 
 Replicates, independently of the Rust code, the walk simulation in
-`complexity::bk_gcache_floats` (fused group-wise schedule) and the
-legacy hold-everything sum (`bk_gcache_floats_unfused`), evaluates both
-on the registry models the bench-regression CI job pins, and writes the
-committed baseline the `fastdp bench-check` subcommand compares against.
+`complexity::bk_gcache_floats_masked` (fused group-wise schedule under a
+per-layer trainability mask) and the legacy hold-everything sum
+(`bk_gcache_floats_unfused`), evaluates both on the registry models the
+bench-regression CI job pins — full fine-tune rows plus the bias-only
+and LoRA legs — and writes the committed baseline the `fastdp
+bench-check` subcommand compares against.
 
 The measured gauge in `StackRun::fused_pass` counts the same quantity
 (frontier gradient + book-kept per-layer output gradients, tied-alias
@@ -75,21 +77,31 @@ def group_of(style, i, n):
     return i * n_groups(style, n) // n
 
 
-def assign_groups(style, layers):
-    owners = [i for i, l in enumerate(layers) if l[0] != "T"]
-    groups = [0] * len(layers)
+FROZEN = -1
+
+
+def assign_groups(style, layers, mask):
+    # trainable owners (non-tied) take group ids positionally; frozen
+    # layers carry a sentinel (no cache, no group); a trainable tied
+    # head inherits the group of the embedding whose tensor it views —
+    # mirrors `bk_gcache_floats_masked` exactly
+    owners = [i for i, l in enumerate(layers) if mask[i] and l[0] != "T"]
+    groups = [FROZEN] * len(layers)
     for oi, i in enumerate(owners):
         groups[i] = group_of(style, oi, len(owners))
     emb = next((i for i, l in enumerate(layers) if l[0] == "E"), None)
     for i, l in enumerate(layers):
-        if l[0] == "T":
+        if l[0] == "T" and mask[i]:
             groups[i] = groups[emb] if emb is not None else 0
     return groups, len(owners)
 
 
-def fused_peak(style, b, layers):
+def fused_peak(style, b, layers, mask=None):
     n = len(layers)
-    groups, n_own = assign_groups(style, layers)
+    mask = [1] * n if mask is None else mask
+    if not any(mask):
+        return 0.0
+    groups, n_own = assign_groups(style, layers, mask)
     fin = {}
     for gi in range(n_groups(style, n_own)):
         fin[gi] = min(i for i in range(n) if groups[i] == gi)
@@ -99,15 +111,64 @@ def fused_peak(style, b, layers):
     peak = b * last[1] * out_width(last)
     for i in reversed(range(n)):
         l = layers[i]
-        cache = b * l[1] * out_width(l)
-        kept[groups[i]] += cache
-        kept_total += cache
+        if mask[i]:
+            cache = b * l[1] * out_width(l)
+            kept[groups[i]] += cache
+            kept_total += cache
+        # frozen layers are pure frontier transitions: backward_data
+        # still flows through them at their input width
         frontier = b * l[1] * in_width(l) if i > 0 else 0.0
         peak = max(peak, kept_total + frontier)
-        if fin[groups[i]] == i:
+        if mask[i] and fin[groups[i]] == i:
             kept_total -= kept[groups[i]]
             kept[groups[i]] = 0.0
     return peak
+
+
+def layer_params(l):
+    """Total parameter census of one layer (aliases count 0)."""
+    kind, _, d, p = l
+    if kind == "L":
+        return d * p + p
+    if kind == "N":
+        return 2 * p
+    if kind == "E":
+        return d * p  # (vocab, d) table
+    if kind == "A":
+        return 4 * d * d + 4 * d  # qkv (d,3d)+3d, out (d,d)+d
+    return 0  # tied head aliases the embedding
+
+
+def layer_1d_params(l):
+    """Bias-like (1-D) parameter census — what `bias-only` trains."""
+    kind, _, d, p = l
+    if kind == "L":
+        return p
+    if kind == "N":
+        return 2 * p
+    if kind == "A":
+        return 4 * d
+    return 0
+
+
+def lora_adapter_params(l, rank):
+    """Adapter pair census of a rewritten linear: A (d,r) + B (r,p)."""
+    kind, _, d, p = l
+    return d * rank + rank * p if kind == "L" else 0
+
+
+def bias_mask(layers):
+    """Layer-trainability under bias-only: any 1-D tensor keeps the
+    layer book-keeping (its full-width output gradient feeds the bias
+    sum), so only bias-less layers (embedding, tied head) freeze."""
+    return [1 if layer_1d_params(l) > 0 else 0 for l in layers]
+
+
+def lora_mask(layers):
+    """Layer-trainability under lora:<r>: every plain linear is
+    rewritten to a frozen base + trainable adapters (same book-kept
+    output width p), everything else freezes outright."""
+    return [1 if l[0] == "L" else 0 for l in layers]
 
 
 def unfused_peak(b, layers):
@@ -117,54 +178,104 @@ def unfused_peak(b, layers):
 STYLES = ["all-layer", "layer-wise", "group-wise:2"]
 BASELINE_MODELS = ["mlp_ln", "seq_tok_e2e", "gpt_nano_e2e", "gpt_nano_tied_e2e"]
 
+# peft legs the CI bench-regression job also times: (row model name,
+# layer-set key, peft preset, mask fn, trainable-census fn). The LoRA
+# leg is the gpt_nano_lora_e2e registry model (its own preset, lora:4);
+# the bias-only leg is mlp_ln with --trainable bias-only.
+PEFT_PINS = [
+    (
+        "mlp_ln",
+        "mlp_ln",
+        "bias-only",
+        bias_mask,
+        lambda layers: sum(layer_1d_params(l) for l in layers),
+    ),
+    (
+        "gpt_nano_lora_e2e",
+        "gpt_nano_e2e",  # same dims as the plain nano, linears rewritten
+        "lora:4",
+        lora_mask,
+        lambda layers: sum(lora_adapter_params(l, 4) for l in layers),
+    ),
+]
+
+
+def make_row(name, style, b, layers, fused, legacy, peft="all", frac=1.0):
+    row = {
+        "model": name,
+        "strategy": "bk",
+        "style": style,
+        "batch": b,
+        "seq_len": layers[0][1],
+        "heads": 4 if any(l[0] == "A" for l in layers) else 0,
+        "tied": any(l[0] == "T" for l in layers),
+        "threads": 0,
+        "shards": 1,
+        # times are deliberately unpinned (0.0): CI machines
+        # vary; bench-check skips the time bands for 0 rows
+        # (the statistical gate bands median_step_secs when
+        # a locally regenerated baseline pins it)
+        "mean_step_secs": 0.0,
+        "median_step_secs": 0.0,
+        "min_step_secs": 0.0,
+        "gflops": 0.0,
+        "samples_per_sec": 0.0,
+        "peak_rss": 0.0,
+        "steady_allocs": 0,
+        "peak_gcache_floats_measured": int(fused),
+        "peak_gcache_floats_predicted": fused,
+        "peak_gcache_floats_unfused": legacy,
+        "arena_peak_floats": 0,
+    }
+    # full rows omit the peft fields on purpose: they exercise the
+    # legacy-JSON parse path (peft defaults to "all") in CI forever
+    if peft != "all":
+        row["peft"] = peft
+        row["trainable_frac"] = frac
+    return row
+
 
 def main():
     rows = []
-    print(f"{'model':22} {'style':14} {'fused':>10} {'legacy':>10} {'saved':>7}")
+    print(f"{'model':22} {'peft':10} {'style':14} {'fused':>10} {'legacy':>10} {'saved':>7}")
     for name, (b, layers) in MODELS.items():
         legacy = unfused_peak(b, layers)
         for style in STYLES:
             fused = fused_peak(style, b, layers)
             print(
-                f"{name:22} {style:14} {fused:10.0f} {legacy:10.0f} "
+                f"{name:22} {'all':10} {style:14} {fused:10.0f} {legacy:10.0f} "
                 f"{100.0 * (1.0 - fused / legacy):6.1f}%"
             )
             if name in BASELINE_MODELS:
-                rows.append(
-                    {
-                        "model": name,
-                        "strategy": "bk",
-                        "style": style,
-                        "batch": b,
-                        "seq_len": layers[0][1],
-                        "heads": 4 if any(l[0] == "A" for l in layers) else 0,
-                        "tied": any(l[0] == "T" for l in layers),
-                        "threads": 0,
-                        "shards": 1,
-                        # times are deliberately unpinned (0.0): CI machines
-                        # vary; bench-check skips the time bands for 0 rows
-                        # (the statistical gate bands median_step_secs when
-                        # a locally regenerated baseline pins it)
-                        "mean_step_secs": 0.0,
-                        "median_step_secs": 0.0,
-                        "min_step_secs": 0.0,
-                        "gflops": 0.0,
-                        "samples_per_sec": 0.0,
-                        "peak_rss": 0.0,
-                        "steady_allocs": 0,
-                        "peak_gcache_floats_measured": int(fused),
-                        "peak_gcache_floats_predicted": fused,
-                        "peak_gcache_floats_unfused": legacy,
-                        "arena_peak_floats": 0,
-                    }
-                )
+                rows.append(make_row(name, style, b, layers, fused, legacy))
+    # peft legs: masked fused peaks under the same walk; the adapter
+    # census never enters the g-cache (a LoRA layer book-keeps the same
+    # B*T*p output gradient), only *fully frozen* layers shrink the peak
+    for name, key, peft, mask_fn, census in PEFT_PINS:
+        b, layers = MODELS[key]
+        mask = mask_fn(layers)
+        legacy = unfused_peak(b, layers)
+        total = sum(layer_params(l) for l in layers)
+        if peft.startswith("lora:"):
+            rank = int(peft.split(":")[1])
+            total += sum(lora_adapter_params(l, rank) for l in layers)
+        frac = census(layers) / total
+        for style in STYLES:
+            fused = fused_peak(style, b, layers, mask)
+            print(
+                f"{name:22} {peft:10} {style:14} {fused:10.0f} {legacy:10.0f} "
+                f"{100.0 * (1.0 - fused / legacy):6.1f}%"
+            )
+            rows.append(make_row(name, style, b, layers, fused, legacy, peft, frac))
     # Sharded pins: the CI bench-regression job also times mlp_ln with
     # --shards 2. Each shard runs whole physical micro-batches through
     # the unchanged fused schedule, so the per-shard g-cache peak is
     # byte-identical to the 1-shard figure — the sharded rows pin the
     # same floats-held values under their own (model, strategy, style,
     # shards) identity.
-    sharded = [dict(r, shards=2) for r in rows if r["model"] == "mlp_ln"]
+    sharded = [
+        dict(r, shards=2) for r in rows if r["model"] == "mlp_ln" and "peft" not in r
+    ]
     rows.extend(sharded)
     print(f"sharded pins: {len(sharded)} rows (mlp_ln, shards=2)")
     baseline = {

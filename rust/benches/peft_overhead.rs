@@ -1,36 +1,45 @@
-//! §E.2: DP parameter-efficient fine-tuning — BK on LoRA vs the
-//! per-sample-instantiation (Opacus-style) implementation, measured on
-//! the gptlora artifact, plus the analytic overhead formulas of §E.2.
+//! §E.2: DP parameter-efficient fine-tuning — BK step time and memory
+//! under the native trainability plane (full vs bias-only vs LoRA on
+//! the gpt_nano bench model), plus the analytic overhead formulas of
+//! §E.2. Frozen layers skip ghost norms, per-sample instantiation, and
+//! clipped-sum accumulation, so bias-only must come in strictly below
+//! the full fine-tune; the binary exits non-zero if it does not.
 
-use fastdp::bench::{artifacts_dir, emit, maybe_run_child, measure_in_child};
-use fastdp::runtime::Manifest;
+use fastdp::bench::{emit, maybe_run_native_child, measure_native_isolated};
 use fastdp::util::stats::{fmt_bytes, fmt_count, fmt_duration};
 use fastdp::util::table::Table;
 
 fn main() {
-    maybe_run_child();
-    let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
-    let iters = 3;
+    // this binary re-execs itself per row for peak-RSS isolation
+    maybe_run_native_child();
+    let (model, strategy) = ("gpt_nano_bench", "bk");
+    let (warmup, iters, threads) = (3, 10, 0);
 
     let mut t = Table::new(
-        "DP LoRA fine-tuning (measured, gpt-mini rank 8)",
-        &["strategy", "time/step", "throughput", "peak RSS"],
+        "DP parameter-efficient fine-tuning (native BK, gpt_nano_bench)",
+        &["preset", "trainable", "median/step", "vs full", "g-cache peak", "peak RSS"],
     );
-    for strat in manifest.strategies_for("gptlora") {
-        match measure_in_child("gptlora", &strat, iters) {
-            Ok(r) => t
-                .row(&[
-                    strat.clone(),
-                    fmt_duration(r.mean_step_secs),
-                    format!("{:.1}/s", r.samples_per_sec),
-                    fmt_bytes(r.peak_rss as f64),
-                ])
-                .to_owned(),
+    let mut rows = Vec::new();
+    for preset in ["all", "bias-only", "lora:8"] {
+        match measure_native_isolated(model, strategy, "all-layer", warmup, iters, threads, 1, preset)
+        {
+            Ok(r) => rows.push(r),
             Err(e) => {
-                eprintln!("skip {strat}: {e}");
-                continue;
+                eprintln!("peft_overhead: {model}/{preset}: {e}");
+                std::process::exit(1);
             }
-        };
+        }
+    }
+    let full_median = rows[0].median_step_secs;
+    for r in &rows {
+        t.row(&[
+            r.peft.clone(),
+            format!("{:.2}%", 100.0 * r.trainable_frac),
+            fmt_duration(r.median_step_secs),
+            format!("{:.2}x", r.median_step_secs / full_median),
+            fmt_count(r.peak_gcache_floats_measured as f64),
+            fmt_bytes(r.peak_rss as f64),
+        ]);
     }
     emit("peft_measured", &t, false);
 
@@ -53,4 +62,20 @@ fn main() {
     }
     println!();
     emit("peft_analytic", &a, false);
+
+    let bias_median = rows[1].median_step_secs;
+    if bias_median < full_median {
+        println!(
+            "\nbias-only speedup over full fine-tune: {:.2}x",
+            full_median / bias_median
+        );
+    } else {
+        eprintln!(
+            "\npeft_overhead: bias-only median {:.3}ms is not below full {:.3}ms — \
+             frozen layers are not skipping work",
+            bias_median * 1e3,
+            full_median * 1e3
+        );
+        std::process::exit(1);
+    }
 }

@@ -1,8 +1,12 @@
 //! Table 7: parameter census of the model zoo — weights in generalized
-//! linear layers (BK-applicable) vs biases vs norm-layer parameters.
+//! linear layers (BK-applicable) vs biases vs norm-layer parameters —
+//! plus the same census for the native trainability plane: what
+//! fraction of each registry model actually trains (and gets grads,
+//! noise, and Adam state allocated) under each fine-tuning preset.
 
 use fastdp::arch::catalog::{by_name, LANGUAGE_ZOO, VISION_ZOO};
 use fastdp::bench::emit;
+use fastdp::runtime::native::model::NativeSpec;
 use fastdp::util::stats::fmt_count;
 use fastdp::util::table::Table;
 
@@ -23,4 +27,34 @@ fn main() {
     }
     emit("table7_param_fractions", &t, true);
     println!("\npaper: every model >= 98.9% applicable (Table 7)");
+
+    // Native trainability census: the backend only allocates grad /
+    // noise / optimizer buffers for the trainable slots, so this
+    // fraction is also the fraction of BK book-keeping that survives.
+    let mut n = Table::new(
+        "native registry trainability census (§E.2 presets)",
+        &["model", "preset", "trainable", "total", "fraction"],
+    );
+    // "" keeps the registry preset (the lora_bench variant ships its own)
+    for (name, preset) in [
+        ("gpt_nano_bench", "all"),
+        ("gpt_nano_bench", "bias-only"),
+        ("gpt_nano_bench", "lora:8"),
+        ("gpt_nano_lora_bench", ""),
+    ] {
+        let mut spec = NativeSpec::by_name(name).unwrap();
+        if !preset.is_empty() {
+            spec.trainable = preset.into();
+        }
+        let (tr, total) = (spec.n_trainable_params(), spec.n_params());
+        n.row(&[
+            name.to_string(),
+            spec.trainable.clone(),
+            fmt_count(tr as f64),
+            fmt_count(total as f64),
+            format!("{:.2}%", 100.0 * tr as f64 / total as f64),
+        ]);
+    }
+    println!();
+    emit("table7_native_trainability", &n, true);
 }

@@ -35,6 +35,20 @@ pub enum LayerKind {
     /// per-sample norm needs the tied ghost cross term on top of its own
     /// Grams (see `complexity::module_time`).
     TiedLinear,
+    /// Learned positional-embedding table added row-wise to the
+    /// sequence (GPT-2 `wpe`). Dims convention: `t` = sequence length
+    /// (= table rows), `d = p` = embedding dim. Unlike a token
+    /// embedding, its rows never collide across positions, so the
+    /// per-sample norm is the plain gradient Frobenius norm (no
+    /// token-equality Gram) and backward to the layer below is the
+    /// identity.
+    PosEmbedding,
+    /// LoRA-adapted linear: a frozen `(d, p)` base (weight + bias) with
+    /// trainable rank-`rank` adapters `A (d, r)` and `B (r, p)` —
+    /// `out = x·W + b + (x·A)·B`. The census counts base + adapters;
+    /// only the adapters ever take gradients, so norm/sum costs come
+    /// from the two skinny sublayers (see `complexity::lora_sublayers`).
+    Lora { rank: u64 },
 }
 
 #[derive(Clone, Debug)]
@@ -54,6 +68,10 @@ impl LayerDims {
             LayerKind::Attention => 4 * self.d * self.d,
             // the weight is an alias of another layer's tensor
             LayerKind::TiedLinear => 0,
+            // the (t, p) position table
+            LayerKind::PosEmbedding => self.t * self.p,
+            // frozen (d, p) base plus the rank-r adapter pair
+            LayerKind::Lora { rank } => self.d * self.p + rank * (self.d + self.p),
             _ => self.d * self.p,
         }
     }
@@ -155,6 +173,43 @@ impl Arch {
             d,
             p,
         });
+        self
+    }
+
+    /// Learned positional-embedding table over `t` positions of width
+    /// `dim` (GPT-2 `wpe`): `t * dim` weights, no bias.
+    pub fn pos_embedding(&mut self, name: &str, t: u64, dim: u64) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::PosEmbedding,
+            name: name.into(),
+            t,
+            d: dim,
+            p: dim,
+        });
+        self
+    }
+
+    /// LoRA-adapted `(d, p)` linear: frozen base (weights + optional
+    /// bias) plus trainable rank-`rank` adapters.
+    pub fn lora_linear(
+        &mut self,
+        name: &str,
+        t: u64,
+        d: u64,
+        p: u64,
+        rank: u64,
+        bias: bool,
+    ) -> &mut Self {
+        self.layers.push(LayerDims {
+            kind: LayerKind::Lora { rank },
+            name: name.into(),
+            t,
+            d,
+            p,
+        });
+        if bias {
+            self.gl_bias += p;
+        }
         self
     }
 

@@ -3,9 +3,11 @@
 //!
 //! Memory attribution problem: allocators retain arenas, so measuring
 //! several strategies in one process smears their footprints. Solution:
-//! the CLI re-execs itself once per (model, strategy) with
-//! `FASTDP_BENCH_CHILD=<model>:<strategy>:<warmup>:<iters>:<threads>`;
-//! the child runs the measurement and prints one JSON line; the parent
+//! the CLI re-execs itself once per (model, strategy, style) with
+//! `FASTDP_BENCH_CHILD=<model>:<strategy>:<warmup>:<iters>:<threads>:<shards>:<style>`
+//! (plus `FASTDP_BENCH_TRAINABLE=<preset>` when a trainability
+//! override is in play); the child measures, prints one JSON line, and
+//! exits; the parent
 //! aggregates into the paper-style table and (with `--json`) writes
 //! `BENCH_native_kernels.json` so the perf trajectory is tracked across
 //! PRs.
@@ -25,6 +27,10 @@ use crate::{anyhow, bail};
 use std::time::Instant;
 
 pub const CHILD_ENV: &str = "FASTDP_BENCH_CHILD";
+/// Trainability preset for the bench child ("" / unset = the registry
+/// default). A separate env var because preset syntax (`lora:4`,
+/// `mask:a,b`) would collide with the `:`-separated `CHILD_ENV` spec.
+pub const CHILD_TRAINABLE_ENV: &str = "FASTDP_BENCH_TRAINABLE";
 
 /// Result of benchmarking one (model, strategy, clipping style) triple.
 #[derive(Clone, Debug)]
@@ -76,6 +82,13 @@ pub struct BenchResult {
     pub peak_gcache_floats_unfused: f64,
     /// Arena high-water mark (floats checked out) of the last step.
     pub arena_peak_floats: usize,
+    /// Canonical trainability preset of the measured run ("all",
+    /// "bias-only", "lora:<rank>", "mask:<layers>"). Rows from JSON
+    /// written before the trainability plane parse as fully trainable.
+    pub peft: String,
+    /// Trainable fraction of the canonical parameter census (1.0 for
+    /// full fine-tuning). Legacy rows parse as 1.0.
+    pub trainable_frac: f64,
 }
 
 impl BenchResult {
@@ -109,7 +122,9 @@ impl BenchResult {
                 "peak_gcache_floats_unfused",
                 Value::from(self.peak_gcache_floats_unfused),
             )
-            .set("arena_peak_floats", Value::from(self.arena_peak_floats));
+            .set("arena_peak_floats", Value::from(self.arena_peak_floats))
+            .set("peft", Value::from(self.peft.as_str()))
+            .set("trainable_frac", Value::from(self.trainable_frac));
         v
     }
 
@@ -141,6 +156,10 @@ impl BenchResult {
             peak_gcache_floats_predicted: v.opt_f64("peak_gcache_floats_predicted", 0.0),
             peak_gcache_floats_unfused: v.opt_f64("peak_gcache_floats_unfused", 0.0),
             arena_peak_floats: v.opt_i64("arena_peak_floats", 0) as usize,
+            // pre-trainability JSON (no peft fields) parses as a full
+            // fine-tune, so old baselines keep their row identity
+            peft: v.opt_str("peft", "all").to_string(),
+            trainable_frac: v.opt_f64("trainable_frac", 1.0),
         })
     }
 }
@@ -150,6 +169,9 @@ impl BenchResult {
 /// `shards > 1` times one logical step of `shards` micro-batches (one
 /// per shard) through the `ShardedRun` fan-out + rank-0 reduction +
 /// broadcast update — the reduction is on the measured path.
+/// `trainable` overrides the registry trainability preset ("" keeps
+/// it, so LoRA registry variants bench their own adapters by default).
+#[allow(clippy::too_many_arguments)]
 pub fn measure_native(
     model: &str,
     strategy: &str,
@@ -158,9 +180,19 @@ pub fn measure_native(
     iters: usize,
     threads: usize,
     shards: usize,
+    trainable: &str,
 ) -> Result<BenchResult> {
-    let spec = NativeSpec::by_name(model)
+    let mut spec = NativeSpec::by_name(model)
         .ok_or_else(|| anyhow!("model '{model}' not in the native registry"))?;
+    if !trainable.is_empty() {
+        spec.trainable = trainable.to_string();
+    }
+    // validate the preset up front (backend construction would refuse
+    // it too, but with less context in a bench child's stderr)
+    let preset = spec
+        .trainable_preset()
+        .map_err(|e| anyhow!("model '{model}': {e}"))?
+        .canonical();
     let strat = Strategy::parse(strategy).ok_or_else(|| anyhow!("unknown strategy '{strategy}'"))?;
     let cstyle = ClippingStyle::parse(style)
         .ok_or_else(|| anyhow!("unknown clipping style '{style}'"))?;
@@ -242,12 +274,18 @@ pub fn measure_native(
     let stats = be.alloc_stats();
     let steady_allocs = stats.fresh_allocs_last_step;
     // g-cache accounting: measured by the fused walk's gauge, predicted
-    // by the complexity engine's walk simulation over the same layers —
-    // only the one-pass DP strategies book-keep output gradients
+    // by the complexity engine's *masked* walk simulation over the same
+    // layers (frozen layers are pure frontier transitions) — only the
+    // one-pass DP strategies book-keep output gradients
     let (predicted, unfused) = if strat != Strategy::NonDp && strat.backprops() == 1 {
         let layers = spec.arch_layers();
         (
-            crate::complexity::bk_gcache_floats(cstyle, spec.batch as f64, &layers),
+            crate::complexity::bk_gcache_floats_masked(
+                cstyle,
+                spec.batch as f64,
+                &layers,
+                &spec.arch_layer_trainable(),
+            ),
             crate::complexity::bk_gcache_floats_unfused(spec.batch as f64, &layers),
         )
     } else {
@@ -286,6 +324,8 @@ pub fn measure_native(
         peak_gcache_floats_predicted: predicted,
         peak_gcache_floats_unfused: unfused,
         arena_peak_floats: stats.arena_peak_floats,
+        peft: preset,
+        trainable_frac: spec.n_trainable_params() as f64 / spec.n_params().max(1) as f64,
     })
 }
 
@@ -293,12 +333,14 @@ pub fn measure_native(
 /// the `CHILD_ENV` spec (`model:strategy:warmup:iters:threads`). The
 /// child side is [`maybe_run_native_child`] (or the PJRT benches'
 /// `maybe_run_child`).
-fn spawn_child_raw(spec: &str) -> std::io::Result<std::process::Output> {
+fn spawn_child_raw(spec: &str, trainable: &str) -> std::io::Result<std::process::Output> {
     let exe = std::env::current_exe()?;
-    std::process::Command::new(exe)
-        .env(CHILD_ENV, spec)
-        .env("FASTDP_LOG", "error")
-        .output()
+    let mut cmd = std::process::Command::new(exe);
+    cmd.env(CHILD_ENV, spec).env("FASTDP_LOG", "error");
+    if !trainable.is_empty() {
+        cmd.env(CHILD_TRAINABLE_ENV, trainable);
+    }
+    cmd.output()
 }
 
 /// Shared child protocol, parse half: the child prints exactly one
@@ -325,6 +367,7 @@ fn parse_child_output(spec: &str, out: std::process::Output) -> Result<BenchResu
 /// ran but broke the protocol is a hard error, because silently
 /// re-measuring in the parent would smear peak-RSS attribution across
 /// strategies.
+#[allow(clippy::too_many_arguments)]
 pub fn measure_native_isolated(
     model: &str,
     strategy: &str,
@@ -333,13 +376,16 @@ pub fn measure_native_isolated(
     iters: usize,
     threads: usize,
     shards: usize,
+    trainable: &str,
 ) -> Result<BenchResult> {
     // NOTE: style is LAST because it may itself contain ':'
-    // ("group-wise:4"); every numeric field sits before it.
+    // ("group-wise:4"); every numeric field sits before it. The
+    // trainability preset travels in its own env var for the same
+    // reason ("lora:4", "mask:a,b").
     let spec = format!("{model}:{strategy}:{warmup}:{iters}:{threads}:{shards}:{style}");
-    match spawn_child_raw(&spec) {
+    match spawn_child_raw(&spec, trainable) {
         Ok(out) => parse_child_output(&spec, out),
-        Err(_) => measure_native(model, strategy, style, warmup, iters, threads, shards),
+        Err(_) => measure_native(model, strategy, style, warmup, iters, threads, shards, trainable),
     }
 }
 
@@ -359,7 +405,9 @@ pub fn maybe_run_native_child() {
         // NOTE: the style field rejoins on ':' so "group-wise:4" survives
         // the split.
         let style = if parts.len() > 6 { parts[6..].join(":") } else { "all-layer".to_string() };
-        match measure_native(parts[0], parts[1], &style, warmup, iters, threads, shards) {
+        let trainable = std::env::var(CHILD_TRAINABLE_ENV).unwrap_or_default();
+        match measure_native(parts[0], parts[1], &style, warmup, iters, threads, shards, &trainable)
+        {
             Ok(r) => {
                 println!("{}", r.to_json());
                 std::process::exit(0);
@@ -397,6 +445,8 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
     let iters = args.get_usize("iters", 20);
     let threads = args.get_usize("threads", 0);
     let shards = args.get_usize("shards", 1);
+    // "" keeps the registry preset (LoRA variants bench their adapters)
+    let trainable = args.get_or("trainable", "").to_string();
     let isolate = !args.has_flag("no-isolate");
 
     let mut results: Vec<BenchResult> = Vec::new();
@@ -408,9 +458,11 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
                 continue;
             }
             let r = if isolate {
-                measure_native_isolated(&model, strat, style, warmup, iters, threads, shards)
+                measure_native_isolated(
+                    &model, strat, style, warmup, iters, threads, shards, &trainable,
+                )
             } else {
-                measure_native(&model, strat, style, warmup, iters, threads, shards)
+                measure_native(&model, strat, style, warmup, iters, threads, shards, &trainable)
             };
             match r {
                 Ok(r) => results.push(r),
@@ -428,6 +480,7 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
         &[
             "strategy",
             "style",
+            "peft",
             "mean/step",
             "median/step",
             "min/step",
@@ -442,6 +495,7 @@ pub fn run_native_bench(args: &crate::cli::Args) -> i32 {
         t.row(&[
             r.strategy.clone(),
             r.style.clone(),
+            r.peft.clone(),
             fmt_duration(r.mean_step_secs),
             fmt_duration(r.median_step_secs),
             fmt_duration(r.min_step_secs),
@@ -552,18 +606,27 @@ pub fn check_against_baseline(
     baseline: &[BenchResult],
     time_tolerance: f64,
 ) -> Vec<CheckRow> {
-    // Row identity is (model, strategy, style, shards): a shards-2 row
-    // and its single-worker sibling are distinct pins. Legacy rows
-    // parse as shards 1, so old baselines keep matching.
+    // Row identity is (model, strategy, style, shards, peft): a
+    // shards-2 row and its single-worker sibling are distinct pins, and
+    // so are a bias-only leg and the full fine-tune of the same triple.
+    // Legacy rows parse as shards 1 / peft "all", so old baselines keep
+    // matching; the key only grows a suffix for the non-default values.
     let row_key = |r: &BenchResult| {
+        let mut key = format!("{}/{}/{}", r.model, r.strategy, r.style);
         if r.shards > 1 {
-            format!("{}/{}/{}/shards{}", r.model, r.strategy, r.style, r.shards)
-        } else {
-            format!("{}/{}/{}", r.model, r.strategy, r.style)
+            key.push_str(&format!("/shards{}", r.shards));
         }
+        if r.peft != "all" {
+            key.push_str(&format!("/{}", r.peft));
+        }
+        key
     };
     let same_row = |a: &BenchResult, b: &BenchResult| {
-        a.model == b.model && a.strategy == b.strategy && a.style == b.style && a.shards == b.shards
+        a.model == b.model
+            && a.strategy == b.strategy
+            && a.style == b.style
+            && a.shards == b.shards
+            && a.peft == b.peft
     };
     let mut out = Vec::new();
     for base in baseline {
@@ -935,6 +998,7 @@ pub fn measure_step(
         heads: meta.spec.opt_i64("heads", 0) as usize,
         tied: meta.spec.opt_bool("tied", false),
         threads: 1,
+        shards: 1,
         mean_step_secs: s.mean(),
         median_step_secs: s.median(),
         min_step_secs: s.min(),
@@ -948,6 +1012,9 @@ pub fn measure_step(
         peak_gcache_floats_predicted: 0.0,
         peak_gcache_floats_unfused: 0.0,
         arena_peak_floats: 0,
+        // PJRT artifacts are compiled fully trainable
+        peft: "all".to_string(),
+        trainable_frac: 1.0,
     })
 }
 
@@ -956,7 +1023,7 @@ pub fn measure_step(
 #[cfg(feature = "xla-runtime")]
 pub fn measure_in_child(model: &str, strategy: &str, iters: usize) -> Result<BenchResult> {
     let spec = format!("{model}:{strategy}:1:{iters}:0");
-    let out = spawn_child_raw(&spec).map_err(|e| anyhow!("spawning bench child: {e}"))?;
+    let out = spawn_child_raw(&spec, "").map_err(|e| anyhow!("spawning bench child: {e}"))?;
     parse_child_output(&spec, out)
 }
 
@@ -1008,6 +1075,8 @@ mod tests {
             peak_gcache_floats_predicted: 4096.0,
             peak_gcache_floats_unfused: 8192.0,
             arena_peak_floats: 50_000,
+            peft: "all".into(),
+            trainable_frac: 1.0,
         }
     }
 
@@ -1038,6 +1107,16 @@ mod tests {
         assert_eq!(r2.peak_gcache_floats_predicted, 4096.0);
         assert_eq!(r2.peak_gcache_floats_unfused, 8192.0);
         assert_eq!(r2.arena_peak_floats, 50_000);
+        assert_eq!(r2.peft, "all");
+        assert_eq!(r2.trainable_frac, 1.0);
+        // peft rows round-trip their preset + trainable fraction
+        let mut peft = sample_result();
+        peft.peft = "bias-only".into();
+        peft.trainable_frac = 0.01;
+        let pv = peft.to_json();
+        let p2 = BenchResult::from_json(&crate::json::parse(&pv.to_string()).unwrap()).unwrap();
+        assert_eq!(p2.peft, "bias-only", "peft preset must round-trip");
+        assert_eq!(p2.trainable_frac, 0.01, "trainable fraction must round-trip");
         // pre-style/pre-attention/pre-tying JSON defaults: all-layer,
         // T = 1, no heads, untied
         let legacy = crate::json::parse(
@@ -1057,6 +1136,8 @@ mod tests {
         assert_eq!(lr.peak_gcache_floats_measured, 0, "pre-fusion rows parse as unmeasured");
         assert_eq!(lr.peak_gcache_floats_unfused, 0.0);
         assert_eq!(lr.arena_peak_floats, 0);
+        assert_eq!(lr.peft, "all", "pre-trainability rows parse as fully trainable");
+        assert_eq!(lr.trainable_frac, 1.0);
         // a row with seq/heads but no tied field (PR 3 era) is untied too
         let pr3 = crate::json::parse(
             r#"{"model":"m","strategy":"bk","batch":4,"seq_len":16,"heads":4,
@@ -1071,7 +1152,7 @@ mod tests {
     fn measure_native_reports_steady_state() {
         // Tiny in-process measurement: BK on the seed MLP reaches a warm
         // arena (no steady-state allocations) and finite throughput.
-        let r = measure_native("mlp_e2e", "bk", "all-layer", 2, 2, 2, 1).unwrap();
+        let r = measure_native("mlp_e2e", "bk", "all-layer", 2, 2, 2, 1, "").unwrap();
         assert_eq!(r.steady_allocs, 0, "arena must be warm after warmup");
         assert!(r.mean_step_secs > 0.0);
         assert!(r.median_step_secs > 0.0);
@@ -1085,10 +1166,10 @@ mod tests {
     fn measure_native_covers_styles_and_token_models() {
         // layer-wise clipping on the seed MLP, and the token+LayerNorm
         // model end-to-end — both stay allocation-free once warm.
-        let r = measure_native("mlp_e2e", "bk", "layer-wise", 2, 2, 2, 1).unwrap();
+        let r = measure_native("mlp_e2e", "bk", "layer-wise", 2, 2, 2, 1, "").unwrap();
         assert_eq!(r.steady_allocs, 0);
         assert_eq!(r.style, "layer-wise");
-        let r = measure_native("seq_tok_e2e", "bk", "group-wise:2", 2, 2, 2, 1).unwrap();
+        let r = measure_native("seq_tok_e2e", "bk", "group-wise:2", 2, 2, 2, 1, "").unwrap();
         assert_eq!(r.steady_allocs, 0, "token model arena must be warm");
         assert!(r.samples_per_sec > 0.0);
     }
@@ -1097,7 +1178,7 @@ mod tests {
     fn measure_native_reports_transformer_dims() {
         // gpt_nano rows must carry seq_len + heads so transformer rows
         // in BENCH_native_kernels.json are unambiguous.
-        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 2, 2, 1).unwrap();
+        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 2, 2, 1, "").unwrap();
         assert_eq!(r.seq_len, 16);
         assert_eq!(r.heads, 4);
         assert_eq!(r.steady_allocs, 0, "gpt arena must be warm after warmup");
@@ -1110,7 +1191,7 @@ mod tests {
     fn measure_native_covers_tied_models() {
         // the tied gpt model benches end-to-end (cross-term kernel in
         // the norm pass) and stays allocation-free once warm
-        let r = measure_native("gpt_nano_tied_e2e", "bk", "all-layer", 1, 2, 2, 1).unwrap();
+        let r = measure_native("gpt_nano_tied_e2e", "bk", "all-layer", 1, 2, 2, 1, "").unwrap();
         assert!(r.tied, "registry tied model must report tied");
         assert_eq!(r.seq_len, 16);
         assert_eq!(r.heads, 4);
@@ -1118,7 +1199,7 @@ mod tests {
         let v = r.to_json().to_string();
         assert!(v.contains("\"tied\":true"), "{v}");
         // untied sibling reports untied
-        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 1, 2, 1).unwrap();
+        let r = measure_native("gpt_nano_e2e", "bk", "all-layer", 1, 1, 2, 1, "").unwrap();
         assert!(!r.tied);
     }
 
@@ -1127,12 +1208,12 @@ mod tests {
         // One-pass DP rows carry the fused g-cache gauge, and the
         // measured value equals the complexity-engine prediction (walk
         // simulation) exactly; nondp rows are unmeasured by definition.
-        let r = measure_native("mlp_ln", "bk", "group-wise:2", 2, 2, 2, 1).unwrap();
+        let r = measure_native("mlp_ln", "bk", "group-wise:2", 2, 2, 2, 1, "").unwrap();
         assert!(r.peak_gcache_floats_measured > 0);
         assert_eq!(r.peak_gcache_floats_measured as f64, r.peak_gcache_floats_predicted);
         assert!(r.peak_gcache_floats_unfused > r.peak_gcache_floats_predicted);
         assert!(r.arena_peak_floats >= r.peak_gcache_floats_measured);
-        let nd = measure_native("mlp_ln", "nondp", "all-layer", 1, 1, 2, 1).unwrap();
+        let nd = measure_native("mlp_ln", "nondp", "all-layer", 1, 1, 2, 1, "").unwrap();
         assert_eq!(nd.peak_gcache_floats_measured, 0);
         assert_eq!(nd.peak_gcache_floats_predicted, 0.0);
     }
@@ -1259,12 +1340,12 @@ mod tests {
         // path: arena stays warm in every replica, the rank-0 g-cache
         // gauge still equals the (shard-count-independent) prediction,
         // and the row carries the shard count.
-        let r = measure_native("mlp_ln", "bk", "all-layer", 2, 2, 2, 2).unwrap();
+        let r = measure_native("mlp_ln", "bk", "all-layer", 2, 2, 2, 2, "").unwrap();
         assert_eq!(r.shards, 2);
         assert_eq!(r.steady_allocs, 0, "replica arenas must be warm after warmup");
         assert!(r.peak_gcache_floats_measured > 0);
         assert_eq!(r.peak_gcache_floats_measured as f64, r.peak_gcache_floats_predicted);
-        let solo = measure_native("mlp_ln", "bk", "all-layer", 2, 2, 2, 1).unwrap();
+        let solo = measure_native("mlp_ln", "bk", "all-layer", 2, 2, 2, 1, "").unwrap();
         assert_eq!(
             r.peak_gcache_floats_measured, solo.peak_gcache_floats_measured,
             "per-shard g-cache peak must not depend on the shard count"
@@ -1303,9 +1384,63 @@ mod tests {
     }
 
     #[test]
+    fn measure_native_reports_peft_rows() {
+        // A bias-only override lands in the row (canonical preset +
+        // trainable fraction) and the masked g-cache prediction still
+        // matches the measured fused peak exactly — otherwise the
+        // bench-check ">1% off its own prediction" gate would fail every
+        // peft row.
+        let r = measure_native("mlp_ln", "bk", "layer-wise", 1, 2, 2, 1, "bias-only").unwrap();
+        assert_eq!(r.peft, "bias-only");
+        assert!(
+            r.trainable_frac > 0.0 && r.trainable_frac < 0.5,
+            "bias census must be a small fraction: {}",
+            r.trainable_frac
+        );
+        assert!(r.peak_gcache_floats_measured > 0);
+        assert_eq!(r.peak_gcache_floats_measured as f64, r.peak_gcache_floats_predicted);
+        // a LoRA registry variant benches its own adapters by default
+        let r = measure_native("gpt_nano_lora_e2e", "bk", "all-layer", 1, 1, 2, 1, "").unwrap();
+        assert_eq!(r.peft, "lora:4");
+        assert!(r.trainable_frac < 1.0);
+        assert_eq!(r.peak_gcache_floats_measured as f64, r.peak_gcache_floats_predicted);
+        // ...and an invalid override is refused up front
+        assert!(measure_native("mlp_ln", "bk", "all-layer", 1, 1, 1, 1, "lora:0").is_err());
+    }
+
+    #[test]
+    fn bench_check_keys_peft_rows_separately() {
+        // A bias-only leg and the full fine-tune of the same
+        // (model, strategy, style) are distinct pins; legacy baselines
+        // (peft parses as "all") keep matching full rows only.
+        let base = sample_result();
+        let mut bias = sample_result();
+        bias.peft = "bias-only".into();
+        bias.trainable_frac = 0.02;
+        let rows = check_against_baseline(
+            std::slice::from_ref(&bias),
+            std::slice::from_ref(&base),
+            0.5,
+        );
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert_eq!(rows[0].key, "m/bk/layer-wise");
+        assert!(rows[0].failures.iter().any(|f| f.contains("missing")), "{rows:?}");
+        assert_eq!(rows[1].key, "m/bk/layer-wise/bias-only");
+        assert!(rows[1].failures.iter().any(|f| f.contains("not pinned")), "{rows:?}");
+        // with both pinned, both pass
+        let rows = check_against_baseline(
+            &[base.clone(), bias.clone()],
+            &[base.clone(), bias.clone()],
+            0.5,
+        );
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert!(rows.iter().all(|r| r.failures.is_empty()), "{rows:?}");
+    }
+
+    #[test]
     fn measure_native_rejects_unknowns() {
-        assert!(measure_native("nope", "bk", "all-layer", 1, 1, 1, 1).is_err());
-        assert!(measure_native("mlp_e2e", "warp", "all-layer", 1, 1, 1, 1).is_err());
-        assert!(measure_native("mlp_e2e", "bk", "per-tensor", 1, 1, 1, 1).is_err());
+        assert!(measure_native("nope", "bk", "all-layer", 1, 1, 1, 1, "").is_err());
+        assert!(measure_native("mlp_e2e", "warp", "all-layer", 1, 1, 1, 1, "").is_err());
+        assert!(measure_native("mlp_e2e", "bk", "per-tensor", 1, 1, 1, 1, "").is_err());
     }
 }

@@ -20,8 +20,8 @@ use crate::arch::{LayerDims, LayerKind};
 
 pub use dispatch::{Dispatch, DispatchProfile};
 pub use strategy::{
-    bk_gcache_floats, bk_gcache_floats_unfused, clip_state_floats, layer_cost, ClippingStyle,
-    Strategy, ALL_STRATEGIES,
+    bk_gcache_floats, bk_gcache_floats_masked, bk_gcache_floats_unfused, clip_state_floats,
+    layer_cost, ClippingStyle, Strategy, ALL_STRATEGIES,
 };
 
 /// Time cost (multiply-accumulate*2, matching the paper's 2BTpd counting)
@@ -60,11 +60,54 @@ pub fn attention_sublayers(l: &LayerDims) -> [LayerDims; 2] {
     ]
 }
 
+/// The two trainable adapter sublayers of a LoRA linear
+/// (`LayerKind::Lora`, dims d/p = the base projection, rank r from the
+/// kind): `A: d -> r` fed by the layer input and `B: r -> p` fed by the
+/// cached `h = x·A`. Module formulas sum over them; the frozen base
+/// contributes only forward + output-gradient time, added in
+/// [`strategy::layer_cost`].
+pub fn lora_sublayers(l: &LayerDims) -> [LayerDims; 2] {
+    let LayerKind::Lora { rank } = l.kind else {
+        unreachable!("lora_sublayers on {:?}", l.kind);
+    };
+    [
+        LayerDims {
+            kind: LayerKind::Linear,
+            name: format!("{}.lora_a", l.name),
+            t: l.t,
+            d: l.d,
+            p: rank,
+        },
+        LayerDims {
+            kind: LayerKind::Linear,
+            name: format!("{}.lora_b", l.name),
+            t: l.t,
+            d: rank,
+            p: l.p,
+        },
+    ]
+}
+
 /// f64 everywhere: counts overflow u64 at ImageNet scale (2BT^2 with
 /// T = 224^2 and B = 100 is ~5e14 per layer).
 pub fn module_time(m: Module, b: f64, l: &LayerDims) -> f64 {
     if l.kind == LayerKind::Attention {
         return attention_sublayers(l).iter().map(|s| module_time(m, b, s)).sum();
+    }
+    if matches!(l.kind, LayerKind::Lora { .. }) {
+        return lora_sublayers(l).iter().map(|s| module_time(m, b, s)).sum();
+    }
+    if l.kind == LayerKind::PosEmbedding {
+        // row-add forward, identity backward, plain Frobenius norm,
+        // position-wise scatter sum: every module is O(BTp) — the table
+        // rows never collide, so there are no Grams and nothing to
+        // instantiate beyond the gradient already in hand
+        let (t, p) = (l.t as f64, l.p as f64);
+        return match m {
+            Module::Forward | Module::GhostNorm | Module::PsgInstantiation => b * t * p,
+            Module::OutputGrad => 0.0,
+            Module::ParamGrad | Module::WeightedSum => 2.0 * b * t * p,
+        };
     }
     let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
     match m {
@@ -88,6 +131,20 @@ pub fn module_space(m: Module, b: f64, l: &LayerDims) -> f64 {
     if l.kind == LayerKind::Attention {
         return attention_sublayers(l).iter().map(|s| module_space(m, b, s)).sum();
     }
+    if matches!(l.kind, LayerKind::Lora { .. }) {
+        return lora_sublayers(l).iter().map(|s| module_space(m, b, s)).sum();
+    }
+    if l.kind == LayerKind::PosEmbedding {
+        let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
+        return match m {
+            Module::Forward => t * p + b * t * d,
+            Module::OutputGrad => b * t * (p + d),
+            Module::ParamGrad => t * p,
+            // the norm is an in-place Frobenius reduction and the sum a
+            // scatter into the grad table: no Grams, no per-sample slabs
+            Module::GhostNorm | Module::PsgInstantiation | Module::WeightedSum => 0.0,
+        };
+    }
     let (t, d, p) = (l.t as f64, l.d as f64, l.p as f64);
     match m {
         Module::Forward => p * d + b * t * d,
@@ -106,6 +163,15 @@ pub fn ghost_preferred(l: &LayerDims) -> bool {
     match l.kind {
         LayerKind::Embedding => true,
         LayerKind::Norm => false,
+        // both routes are the same Frobenius reduction (rows never
+        // collide); call it ghost so measured dispatch never "learns"
+        // a preference from noise
+        LayerKind::PosEmbedding => true,
+        // one route for the whole layer; the narrowest trainable factor
+        // — the rank-r adapter against min(d, p) — decides
+        LayerKind::Lora { rank } => {
+            2.0 * (l.t as f64) * (l.t as f64) < (rank as f64) * (l.d.min(l.p) as f64)
+        }
         // one route for the whole attention layer; the narrower output
         // projection (pd = d^2) decides, so instantiation is never
         // picked while a sublayer would still prefer ghost by a wide
@@ -175,6 +241,13 @@ pub fn base_space(b: f64, layers: &[LayerDims]) -> f64 {
             // keyed on canonical tensors: a tied head's weight slab is
             // the owning embedding's, already counted there
             LayerKind::TiedLinear => 0.0,
+            // the (t, p) position table
+            LayerKind::PosEmbedding => (l.t * l.p) as f64,
+            // frozen base W (d, p) + the two adapters (biases are not
+            // counted anywhere in this table)
+            LayerKind::Lora { rank } => {
+                (l.d * l.p) as f64 + (rank * (l.d + l.p)) as f64
+            }
             _ => (l.p * l.d) as f64,
         })
         .sum();
@@ -186,6 +259,11 @@ pub fn base_space(b: f64, layers: &[LayerDims]) -> f64 {
                 // qkv (3d) + ao (d) activations plus the B*H*T^2
                 // softmax cache every implementation keeps
                 LayerKind::Attention => b * t * (3.0 * d + d) + b * p * t * t,
+                // plain linear activations plus the cached h = x·A and
+                // the adapter-path forward temp
+                LayerKind::Lora { rank } => {
+                    b * t * (3.0 * d + p) + b * t * (rank as f64 + p)
+                }
                 _ => b * t * (3.0 * d + p),
             }
         })
@@ -390,6 +468,61 @@ mod tests {
         let base_tied = base_space(b, std::slice::from_ref(&tied));
         let base_plain = base_space(b, std::slice::from_ref(&plain));
         assert_eq!(base_plain - base_tied, (32 * 64) as f64);
+    }
+
+    #[test]
+    fn pos_embedding_is_linear_time_no_grams() {
+        let l = LayerDims {
+            kind: LayerKind::PosEmbedding,
+            name: "wpe".into(),
+            t: 16,
+            d: 32,
+            p: 32,
+        };
+        let b = 4.0;
+        // every module is O(BTp); the norm has no Gram space at all
+        assert_eq!(module_time(Module::Forward, b, &l), b * 16.0 * 32.0);
+        assert_eq!(module_time(Module::GhostNorm, b, &l), b * 16.0 * 32.0);
+        assert_eq!(module_time(Module::WeightedSum, b, &l), 2.0 * b * 16.0 * 32.0);
+        assert_eq!(module_time(Module::OutputGrad, b, &l), 0.0);
+        assert_eq!(module_space(Module::GhostNorm, b, &l), 0.0);
+        assert_eq!(module_space(Module::PsgInstantiation, b, &l), 0.0);
+        assert!(ghost_preferred(&l));
+        // weights in base_space are the (t, p) table
+        let base = base_space(b, std::slice::from_ref(&l));
+        assert_eq!(base, (16 * 32) as f64 + b * 16.0 * (3.0 * 32.0 + 32.0));
+    }
+
+    #[test]
+    fn lora_modules_sum_over_adapters() {
+        let l = LayerDims {
+            kind: LayerKind::Lora { rank: 4 },
+            name: "fc".into(),
+            t: 16,
+            d: 32,
+            p: 64,
+        };
+        let b = 4.0;
+        let [a, bb] = lora_sublayers(&l);
+        assert_eq!((a.d, a.p), (32, 4));
+        assert_eq!((bb.d, bb.p), (4, 64));
+        for m in [Module::Forward, Module::GhostNorm, Module::PsgInstantiation,
+                  Module::WeightedSum] {
+            assert_eq!(
+                module_time(m, b, &l),
+                module_time(m, b, &a) + module_time(m, b, &bb)
+            );
+        }
+        // skinny adapters: ghost wins only below 2T^2 = rank*min(d,p)
+        assert!(!ghost_preferred(&l)); // 512 > 4*32
+        let mut short = l.clone();
+        short.t = 4;
+        assert!(ghost_preferred(&short)); // 32 < 128
+        // weights: frozen base d*p + adapters r*(d+p), counted once
+        let base = base_space(b, std::slice::from_ref(&l));
+        let weights = (32 * 64 + 4 * (32 + 64)) as f64;
+        let acts = b * 16.0 * (3.0 * 32.0 + 64.0) + b * 16.0 * (4.0 + 64.0);
+        assert_eq!(base, weights + acts);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Strategy composition — Table 2 / Table 5 of the paper, encoded as
 //! module sums with the layerwise mixed decision for hybrids.
 
-use super::{attention_sublayers, ghost_preferred, module_space, module_time, Cost, Module};
+use super::{
+    attention_sublayers, ghost_preferred, lora_sublayers, module_space, module_time, Cost, Module,
+};
 use crate::arch::{LayerDims, LayerKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -175,17 +177,43 @@ pub fn bk_gcache_floats_unfused(b: f64, layers: &[LayerDims]) -> f64 {
 /// the same quantity, and the fused-schedule tests pin measured ==
 /// predicted on the registry models.
 pub fn bk_gcache_floats(style: ClippingStyle, b: f64, layers: &[LayerDims]) -> f64 {
+    bk_gcache_floats_masked(style, b, layers, &vec![true; layers.len()])
+}
+
+/// [`bk_gcache_floats`] under a per-layer trainability mask: frozen
+/// layers keep no book-kept cache and join no clipping group — in the
+/// walk they are pure frontier transitions (`backward_data` still runs,
+/// so the frontier gradient flows through them at their input width),
+/// exactly matching the fused gauge's stateless-layer accounting.
+/// Groups are balanced contiguous blocks over *trainable* owner layers,
+/// mirroring the native backend's group assignment. Note a layer whose
+/// bias alone trains still book-keeps its full-width output gradient
+/// (the bias sum reads it), so bias-only masks shrink the peak only via
+/// the layers that are frozen outright.
+pub fn bk_gcache_floats_masked(
+    style: ClippingStyle,
+    b: f64,
+    layers: &[LayerDims],
+    trainable: &[bool],
+) -> f64 {
+    debug_assert_eq!(trainable.len(), layers.len());
     let n = layers.len();
-    if n == 0 {
+    if n == 0 || !trainable.iter().any(|&t| t) {
         return 0.0;
     }
-    // group ids: owners positionally; a tied head inherits the group of
-    // the embedding whose tensor it views
-    let n_own = layers.iter().filter(|l| l.kind != LayerKind::TiedLinear).count();
-    let mut groups = vec![0usize; n];
+    // group ids: trainable owners positionally; frozen layers carry a
+    // sentinel (no cache, no group); a trainable tied head inherits the
+    // group of the embedding whose tensor it views
+    const FROZEN: usize = usize::MAX;
+    let n_own = layers
+        .iter()
+        .zip(trainable)
+        .filter(|(l, &tr)| tr && l.kind != LayerKind::TiedLinear)
+        .count();
+    let mut groups = vec![FROZEN; n];
     let mut oi = 0usize;
     for (i, l) in layers.iter().enumerate() {
-        if l.kind != LayerKind::TiedLinear {
+        if trainable[i] && l.kind != LayerKind::TiedLinear {
             groups[i] = style.group_of(oi, n_own);
             oi += 1;
         }
@@ -196,29 +224,36 @@ pub fn bk_gcache_floats(style: ClippingStyle, b: f64, layers: &[LayerDims]) -> f
         .map(|e| groups[e])
         .unwrap_or(0);
     for (i, l) in layers.iter().enumerate() {
-        if l.kind == LayerKind::TiedLinear {
+        if trainable[i] && l.kind == LayerKind::TiedLinear {
+            // a tied head shares the embedding's tensor, so their
+            // trainability (and group) cannot diverge
+            debug_assert_ne!(emb_group, FROZEN, "trainable tied head over a frozen embedding");
             groups[i] = emb_group;
         }
     }
-    // each group finalizes at its lowest-index member
+    // each group finalizes at its lowest-index (trainable) member
     let g = style.n_groups(n_own);
     let finalize_at: Vec<usize> = (0..g)
         .map(|gi| (0..n).find(|&i| groups[i] == gi).expect("non-empty group"))
         .collect();
-    // walk top-down: keep each cache, advance the frontier, release at
-    // group boundaries — mirroring StackRun::fused_pass's gauge
+    // walk top-down: keep trainable caches, advance the frontier,
+    // release at group boundaries — mirroring StackRun::fused_pass's
+    // gauge (which subtracts a frozen layer's old frontier before
+    // sampling the peak)
     let mut kept = vec![0.0f64; g];
     let mut kept_total = 0.0f64;
     let last = &layers[n - 1];
     let mut peak = b * last.t as f64 * gcache_width(last);
     for i in (0..n).rev() {
         let l = &layers[i];
-        let cache = b * l.t as f64 * gcache_width(l);
-        kept[groups[i]] += cache;
-        kept_total += cache;
+        if trainable[i] {
+            let cache = b * l.t as f64 * gcache_width(l);
+            kept[groups[i]] += cache;
+            kept_total += cache;
+        }
         let frontier = if i > 0 { b * l.t as f64 * frontier_width(l) } else { 0.0 };
         peak = peak.max(kept_total + frontier);
-        if finalize_at[groups[i]] == i {
+        if trainable[i] && finalize_at[groups[i]] == i {
             kept_total -= kept[groups[i]];
             kept[groups[i]] = 0.0;
         }
@@ -257,6 +292,35 @@ pub fn layer_cost(strategy: Strategy, b: f64, l: &LayerDims) -> Cost {
         return Cost {
             time: t,
             space_overhead: over,
+        };
+    }
+    if matches!(l.kind, LayerKind::Lora { .. }) {
+        // Frozen base + two trainable skinny adapters: the adapters are
+        // ordinary generalized-linear layers costed per strategy (the
+        // gA = g·B^T recompute is sublayer B's output gradient); the
+        // base pays only its forward and the backward-data flow g·W^T,
+        // once per backprop — it never norms, instantiates, or sums.
+        let [a, ad_b] = lora_sublayers(l);
+        let mut c = layer_cost(strategy, b, &a);
+        c.add(layer_cost(strategy, b, &ad_b));
+        let mut base = l.clone();
+        base.kind = LayerKind::Linear;
+        c.time += module_time(Module::Forward, b, &base)
+            + module_time(Module::OutputGrad, b, &base) * strategy.backprops() as f64;
+        return c;
+    }
+    if l.kind == LayerKind::PosEmbedding {
+        // row-add forward (identity backward) + Frobenius norm +
+        // position-wise scatter; both norm routes are the same O(BTp)
+        // reduction, so every DP strategy pays the same time and no
+        // extra space
+        let fwd = module_time(Module::Forward, b, l);
+        let gn = module_time(Module::GhostNorm, b, l);
+        let ws = module_time(Module::ParamGrad, b, l);
+        let time = if strategy == Strategy::NonDp { fwd + ws } else { fwd + gn + ws };
+        return Cost {
+            time,
+            space_overhead: 0.0,
         };
     }
 
@@ -505,6 +569,132 @@ mod tests {
         // the embedding's group the walk still drains to zero (the
         // asserts inside the simulation would panic otherwise)
         assert!(bk_gcache_floats(ClippingStyle::GroupWise(2), 1.0, &layers) <= all);
+    }
+
+    #[test]
+    fn masked_gcache_all_true_is_unmasked() {
+        let layers: Vec<LayerDims> = (0..4).map(|i| lin(8, 64, 32 << i)).collect();
+        let b = 16.0;
+        for style in [
+            ClippingStyle::AllLayer,
+            ClippingStyle::LayerWise,
+            ClippingStyle::GroupWise(2),
+        ] {
+            assert_eq!(
+                bk_gcache_floats_masked(style, b, &layers, &[true; 4]),
+                bk_gcache_floats(style, b, &layers)
+            );
+        }
+        // no trainable layers: nothing is ever book-kept
+        assert_eq!(
+            bk_gcache_floats_masked(ClippingStyle::AllLayer, b, &layers, &[false; 4]),
+            0.0
+        );
+    }
+
+    #[test]
+    fn masked_gcache_frozen_layers_are_frontier_transitions() {
+        // Same stack as style_cost_reporting (p = 32/64/128/256, b=16,
+        // t=8, rows=128) with layer 2 (p=128) frozen. All-layer walk by
+        // hand: init 32768 (loss grad); i=3 kept 32768 + frontier 8192
+        // -> 40960; i=2 frozen, 32768 + 8192 -> 40960; i=1 kept 40960 +
+        // 8192 -> 49152; i=0 kept 45056, frontier 0. Peak 49152 — the
+        // frozen layer's 16384-float cache never joins the gauge
+        // (full-stack peak is 65536).
+        let layers: Vec<LayerDims> = (0..4).map(|i| lin(8, 64, 32 << i)).collect();
+        let b = 16.0;
+        let mask = [true, true, false, true];
+        let all = bk_gcache_floats_masked(ClippingStyle::AllLayer, b, &layers, &mask);
+        assert_eq!(all, 49152.0);
+        assert!(all < bk_gcache_floats(ClippingStyle::AllLayer, b, &layers));
+        // layer-wise releases each cache immediately; the frozen layer
+        // changes nothing about the peak (which full layer-wise also hits)
+        let lw = bk_gcache_floats_masked(ClippingStyle::LayerWise, b, &layers, &mask);
+        assert_eq!(lw, bk_gcache_floats(ClippingStyle::LayerWise, b, &layers));
+    }
+
+    #[test]
+    fn masked_gcache_frozen_tied_stack() {
+        // Embedding (7,4) -> Linear (4,4) -> TiedLinear (4,7), t=2,
+        // b=1, embedding + tied head frozen (a lora-style mask). Walk:
+        // init 14 (loss grad over the head); i=2 frozen -> 14 vs 8;
+        // i=1 kept 8 + frontier 8 -> 16, finalize releases; i=0 frozen,
+        // 0. Peak 16 vs 30 fully trainable.
+        let mk = |kind, d: u64, p: u64| LayerDims {
+            kind,
+            name: "l".into(),
+            t: 2,
+            d,
+            p,
+        };
+        let layers = vec![
+            mk(LayerKind::Embedding, 7, 4),
+            mk(LayerKind::Linear, 4, 4),
+            mk(LayerKind::TiedLinear, 4, 7),
+        ];
+        let mask = [false, true, false];
+        for style in [ClippingStyle::AllLayer, ClippingStyle::LayerWise] {
+            let m = bk_gcache_floats_masked(style, 1.0, &layers, &mask);
+            assert_eq!(m, 16.0, "{style:?}");
+            assert!(m < bk_gcache_floats(style, 1.0, &layers));
+        }
+    }
+
+    #[test]
+    fn lora_cost_is_adapters_plus_frozen_base_flow() {
+        let l = LayerDims {
+            kind: LayerKind::Lora { rank: 4 },
+            name: "fc".into(),
+            t: 16,
+            d: 32,
+            p: 64,
+        };
+        let b = 8.0;
+        let [a, ad_b] = lora_sublayers(&l);
+        let mut base = l.clone();
+        base.kind = LayerKind::Linear;
+        for s in ALL_STRATEGIES {
+            let c = layer_cost(s, b, &l);
+            let sub = layer_cost(s, b, &a).time + layer_cost(s, b, &ad_b).time;
+            let flow = module_time(Module::Forward, b, &base)
+                + module_time(Module::OutputGrad, b, &base) * s.backprops() as f64;
+            assert_eq!(c.time, sub + flow, "{s:?}");
+            // DP overhead comes only from the adapters — far below the
+            // full layer's (Bpd psg / 2BT^2-per-factor Gram) overheads
+            assert_eq!(
+                c.space_overhead,
+                layer_cost(s, b, &a).space_overhead + layer_cost(s, b, &ad_b).space_overhead,
+                "{s:?}"
+            );
+            assert!(c.space_overhead <= layer_cost(s, b, &base).space_overhead, "{s:?}");
+        }
+        // DP-LoRA time stays well under full DP fine-tuning of the base
+        let lora_bk = layer_cost(Strategy::Bk, b, &l).time;
+        let full_bk = layer_cost(Strategy::Bk, b, &base).time;
+        assert!(lora_bk < full_bk, "{lora_bk} vs {full_bk}");
+    }
+
+    #[test]
+    fn pos_embedding_cost_is_linear_and_route_free() {
+        let l = LayerDims {
+            kind: LayerKind::PosEmbedding,
+            name: "wpe".into(),
+            t: 16,
+            d: 32,
+            p: 32,
+        };
+        let b = 8.0;
+        let btp = b * 16.0 * 32.0;
+        assert_eq!(layer_cost(Strategy::NonDp, b, &l).time, btp + 2.0 * btp);
+        for s in ALL_STRATEGIES {
+            let c = layer_cost(s, b, &l);
+            if s != Strategy::NonDp {
+                // fwd + frobenius norm + scatter, identical across DP
+                // strategies (the norm has one route)
+                assert_eq!(c.time, btp + btp + 2.0 * btp, "{s:?}");
+            }
+            assert_eq!(c.space_overhead, 0.0, "{s:?}");
+        }
     }
 
     #[test]

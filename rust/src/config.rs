@@ -50,6 +50,12 @@ pub struct TrainConfig {
     /// Per-sample clipping granularity: "all-layer" (flat, default),
     /// "layer-wise", or "group-wise[:k]" (native backend only).
     pub clipping_style: String,
+    /// Trainability preset (native backend only): "" inherits the
+    /// model's own preset; otherwise "all", "bias-only", "lora:<rank>",
+    /// or "mask:<layer,...>" override it. Frozen tensors skip norms,
+    /// clipped sums, noise, and optimizer state but keep the forward
+    /// and `backward_data` flow.
+    pub trainable: String,
     pub steps: usize,
     pub lr: f64,
     pub clip: f64,
@@ -103,6 +109,7 @@ impl Default for TrainConfig {
             model: "mlp_e2e".to_string(),
             strategy: "bk".to_string(),
             clipping_style: "all-layer".to_string(),
+            trainable: String::new(),
             steps: 100,
             lr: 1e-3,
             clip: 1.0,
@@ -134,6 +141,7 @@ impl TrainConfig {
         c.model = v.opt_str("model", &c.model).to_string();
         c.strategy = v.opt_str("strategy", &c.strategy).to_string();
         c.clipping_style = v.opt_str("clipping_style", &c.clipping_style).to_string();
+        c.trainable = v.opt_str("trainable", &c.trainable).to_string();
         c.artifacts_dir = PathBuf::from(v.opt_str("artifacts_dir", "artifacts"));
         c.steps = v.opt_i64("steps", c.steps as i64) as usize;
         c.lr = v.opt_f64("lr", c.lr);
@@ -187,6 +195,9 @@ impl TrainConfig {
         }
         if let Some(s) = args.get("clipping-style") {
             self.clipping_style = s.to_string();
+        }
+        if let Some(s) = args.get("trainable") {
+            self.trainable = s.to_string();
         }
         if let Some(d) = args.get("artifacts-dir") {
             self.artifacts_dir = PathBuf::from(d);
@@ -263,6 +274,19 @@ impl TrainConfig {
                 "unknown clipping_style '{}', expected all-layer, layer-wise, or group-wise[:k]",
                 self.clipping_style
             ));
+        }
+        if !self.trainable.is_empty() {
+            if self.backend != "native" {
+                return Err(format!(
+                    "trainable = '{}' requires the native backend (pjrt artifacts are \
+                     compiled fully trainable)",
+                    self.trainable
+                ));
+            }
+            // syntax only here; mask layer names are checked against the
+            // model's plan when the backend is built
+            crate::runtime::native::model::Trainable::parse(&self.trainable)
+                .map_err(|e| e.to_string())?;
         }
         if self.steps == 0 {
             return Err("steps must be > 0".into());
@@ -386,6 +410,27 @@ mod tests {
         );
         c.apply_cli(&args).unwrap();
         assert_eq!(c.shards, 3);
+    }
+
+    #[test]
+    fn trainable_parse_and_reject() {
+        let v = parse(r#"{"trainable": "bias-only"}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&v).unwrap().trainable, "bias-only");
+        // legacy configs without the field inherit the model's preset
+        let v = parse(r#"{"model": "mlp_e2e"}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&v).unwrap().trainable, "");
+        let v = parse(r#"{"trainable": "half"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let v = parse(r#"{"trainable": "lora:0"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let v = parse(r#"{"backend": "pjrt", "trainable": "bias-only"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        let mut c = TrainConfig::default();
+        let args = crate::cli::Args::parse(
+            "train --trainable lora:4".split_whitespace().map(String::from),
+        );
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.trainable, "lora:4");
     }
 
     #[test]

@@ -99,6 +99,12 @@ pub struct Fingerprint {
     pub sigma: f64,
     pub seed: u64,
     pub logical_batch: usize,
+    /// Canonical trainability preset (`Trainable::canonical`): which
+    /// tensors the released gradients covered. Resuming under a
+    /// different mask would splice two incompatible gradient streams
+    /// into one ledger (and desynchronize the per-slot noise streams).
+    /// v1 files and v2 files from before this field resume as "all".
+    pub trainable: String,
 }
 
 impl Fingerprint {
@@ -112,6 +118,7 @@ impl Fingerprint {
         // u64 seeds may exceed i64: store as a decimal string
         v.set("seed", Value::from(self.seed.to_string()));
         v.set("logical_batch", Value::from(self.logical_batch));
+        v.set("trainable", Value::from(self.trainable.as_str()));
         v
     }
 
@@ -134,6 +141,8 @@ impl Fingerprint {
             logical_batch: v
                 .req_i64("logical_batch")
                 .map_err(|e| anyhow!("fingerprint: {e}"))? as usize,
+            // pre-trainability v2 checkpoints were always fully trainable
+            trainable: v.opt_str("trainable", "all").to_string(),
         })
     }
 
@@ -165,6 +174,12 @@ impl Fingerprint {
             diffs.push(format!(
                 "logical_batch {} vs run {}",
                 self.logical_batch, run.logical_batch
+            ));
+        }
+        if self.trainable != run.trainable {
+            diffs.push(format!(
+                "trainable '{}' vs run '{}'",
+                self.trainable, run.trainable
             ));
         }
         if !diffs.is_empty() {
@@ -632,6 +647,7 @@ mod tests {
             sigma: 0.7310585786300049,
             seed: 42,
             logical_batch: 32,
+            trainable: "all".into(),
         }
     }
 
@@ -790,6 +806,69 @@ mod tests {
         assert!(err.contains("strategy"), "{err}");
         assert!(err.contains("fingerprint mismatch"), "{err}");
         a.check(&fp()).unwrap();
+    }
+
+    #[test]
+    fn trainability_drift_refuses_and_maskless_headers_default_to_all() {
+        // drift: resuming a bias-only checkpoint under full fine-tuning
+        // must be refused with the mask named
+        let a = fp();
+        let mut b = fp();
+        b.trainable = "bias-only".into();
+        let err = b.check(&a).unwrap_err().to_string();
+        assert!(err.contains("trainable 'bias-only' vs run 'all'"), "{err}");
+        // a pre-trainability v2 fingerprint (no "trainable" key) parses
+        // as fully trainable and checks clean against an "all" run
+        let mut v = Value::obj();
+        v.set("strategy", Value::from("bk"));
+        v.set("clipping_style", Value::from("all-layer"));
+        v.set("clip_fn", Value::from("abadi"));
+        v.set("clip", Value::from(1.0));
+        v.set("sigma", Value::from(0.7310585786300049));
+        v.set("seed", Value::from("42"));
+        v.set("logical_batch", Value::from(32usize));
+        let old = Fingerprint::from_json(&v).unwrap();
+        assert_eq!(old.trainable, "all");
+        old.check(&a).unwrap();
+    }
+
+    #[test]
+    fn masked_state_roundtrips_zero_length_moments() {
+        // bias-only + adam: frozen slots have 0-length m/v entries in
+        // state order; the payload must round-trip them exactly
+        let _g = lock_faults();
+        let dir = tmpdir("mask");
+        let info = {
+            let mut s = NativeSpec {
+                name: "ckm".into(),
+                batch: 1,
+                seq: 1,
+                d_in: 2,
+                hidden: vec![],
+                n_classes: 2,
+                optimizer: "adam".into(),
+                clip_fn: "abadi".into(),
+                ..NativeSpec::default()
+            };
+            s.trainable = "bias-only".into();
+            s.info()
+        };
+        let lens = info.state_tensor_lens();
+        // params full for every slot; moments zero for the frozen weight
+        assert_eq!(lens.len(), 6);
+        assert!(lens[0] > 0 && lens[1] > 0);
+        assert_eq!(lens[2], 0, "frozen weight adam-m must be empty");
+        assert_eq!(lens[4], 0, "frozen weight adam-v must be empty");
+        assert!(lens[3] > 0 && lens[5] > 0);
+        let tensors = tensors_for(&info);
+        let mut f = fp();
+        f.trainable = "bias-only".into();
+        save(&dir, &meta(3, &info, &f), &tensors).unwrap();
+        let ck = read(&latest(&dir).unwrap()).unwrap();
+        assert_eq!(ck.tensors, tensors);
+        ck.validate(&info).unwrap();
+        assert_eq!(ck.fingerprint.unwrap().trainable, "bias-only");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -242,6 +242,7 @@ impl Trainer {
             sigma: self.sigma,
             seed: self.cfg.seed,
             logical_batch: self.logical_batch(),
+            trainable: self.info.trainable_preset.clone(),
         }
     }
 

@@ -36,15 +36,23 @@ impl NoiseSource {
         self.step = self.step.max(step);
     }
 
-    /// Standard-normal tensors, one per trainable tensor in
-    /// `param_names` order. Each call advances the step counter (one
-    /// logical batch = one draw set).
+    /// Standard-normal tensors, one per tensor in `param_names` order;
+    /// frozen tensors get an empty draw (no gradient is released for
+    /// them, so noising them would only waste privacy-neutral entropy).
+    /// Streams stay forked per (step, slot index) — a trainable slot's
+    /// draw is identical whatever the mask around it, so changing the
+    /// mask between runs never re-correlates surviving streams. Each
+    /// call advances the step counter (one logical batch = one draw
+    /// set).
     pub fn tensors(&mut self, info: &ModelInfo) -> Vec<Vec<f32>> {
         self.step += 1;
         info.param_names
             .iter()
             .enumerate()
             .map(|(i, name)| {
+                if !info.trainable[i] {
+                    return Vec::new();
+                }
                 let n: usize = info.param_shapes[name].iter().product();
                 let mut gs =
                     GaussianSource::from_rng(self.root.fork(self.step * 1_000_003 + i as u64));
@@ -92,6 +100,31 @@ mod tests {
         let t1b = ns2.tensors(&info);
         assert_eq!(t1[0], t1b[0]);
         assert_eq!(t1[1], t1b[1]);
+    }
+
+    #[test]
+    fn frozen_slots_draw_nothing_without_shifting_streams() {
+        let mut spec = NativeSpec {
+            name: "noise_t".into(),
+            batch: 1,
+            seq: 1,
+            d_in: 16,
+            hidden: vec![],
+            n_classes: 16,
+            optimizer: "sgd".into(),
+            clip_fn: "abadi".into(),
+            ..NativeSpec::default()
+        };
+        let full = spec.info();
+        spec.trainable = "bias-only".into();
+        let masked = spec.info();
+        assert_eq!(masked.trainable, vec![false, true]);
+        let all = NoiseSource::new(11).tensors(&full);
+        let some = NoiseSource::new(11).tensors(&masked);
+        assert!(some[0].is_empty(), "frozen slot must draw nothing");
+        // the trainable slot's stream is keyed by slot index, not by
+        // its position among trainable slots: identical under any mask
+        assert_eq!(some[1], all[1]);
     }
 
     #[test]

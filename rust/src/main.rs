@@ -13,6 +13,8 @@
 //!                 banded on time; exit non-zero on regression
 //!   complexity  — print the paper's complexity tables for a model,
 //!                 including per-clipping-style cost reporting
+//!                 (`--trainable bias-only|lora:<rank>|mask:<layers>`
+//!                 masks the predictions to the trainable set)
 //!                 (`--gcache-md` emits the fused-vs-legacy g-cache
 //!                 markdown rows for the CI step summary) and the
 //!                 per-layer ghost/inst route under both the formula
@@ -56,6 +58,7 @@ fn main() {
             println!(
                 "       train --model <m> --strategy <s> [--threads <n>] [--shards <n>] \
                  [--clipping-style all-layer|layer-wise|group-wise[:k]] \
+                 [--trainable all|bias-only|lora:<rank>|mask:<layers>] \
                  [--dispatch formula|measured] [--dispatch-profile <file>] \
                  [--checkpoint-dir <d> --checkpoint-every <k> --keep-last <n>] \
                  [--on-nonfinite abort|skip|rollback] [--resume]"
@@ -63,10 +66,11 @@ fn main() {
             println!("       ckpt inspect <checkpoint.fdp|dir> | ckpt list <dir>");
             println!(
                 "       bench [--model <m>] [--strategy a,b,...] [--styles a,b,...] \
-                 [--threads <n>] [--shards <n>] [--json]"
+                 [--threads <n>] [--shards <n>] [--trainable <preset>] [--json]"
             );
             println!(
-                "       complexity [--model <m>] [--batch <b>] [--shards <n> [--micro-batches <k>]] \
+                "       complexity [--model <m>] [--batch <b>] [--trainable <preset>] \
+                 [--shards <n> [--micro-batches <k>]] \
                  [--dispatch formula|measured] [--dispatch-profile <file>]"
             );
             println!("       calibrate-dispatch [--threads <n>] [--dispatch-profile <file>]");
@@ -138,7 +142,28 @@ fn cmd_complexity(args: &Args) -> i32 {
     // catalog first, then the native registry (gpt_nano_*, mlp_*, ...),
     // so the complexity report covers the natively executable
     // transformers with their attention terms
-    let native_spec = NativeSpec::by_name(model);
+    let mut native_spec = NativeSpec::by_name(model);
+    // `--trainable all|bias-only|lora:<rank>|mask:<layers>` overrides the
+    // registry preset: predictions below (param census, LoRA layer
+    // rewrite, masked g-cache peaks) all follow the override
+    if let Some(preset) = args.get("trainable") {
+        match native_spec.as_mut() {
+            Some(spec) => {
+                spec.trainable = preset.to_string();
+                if let Err(e) = spec.trainable_preset() {
+                    eprintln!("trainable error: {e}");
+                    return 2;
+                }
+            }
+            None => {
+                eprintln!(
+                    "--trainable needs a native registry model (catalog \
+                     architectures carry no trainability plan)"
+                );
+                return 2;
+            }
+        }
+    }
     let (layers, default_b): (Vec<_>, f64) = match (&arch, &native_spec) {
         (Some(arch), _) => (arch.gl_layers().cloned().collect(), 100.0),
         (None, Some(spec)) => (
@@ -176,6 +201,16 @@ fn cmd_complexity(args: &Args) -> i32 {
             fmt_count(spec.n_params() as f64),
             if spec.tied { ", vocab head tied to the embedding" } else { "" },
         );
+        if spec.trainable != "all" {
+            let trainable = spec.n_trainable_params();
+            println!(
+                "trainable: preset '{}' trains {} of {} floats ({:.2}%)",
+                spec.trainable,
+                fmt_count(trainable as f64),
+                fmt_count(spec.n_params() as f64),
+                100.0 * trainable as f64 / spec.n_params() as f64,
+            );
+        }
     }
     let b = args.get_f64("batch", default_b);
     // g-cache reporting walks the FULL trainable stack (LayerNorm
@@ -184,6 +219,13 @@ fn cmd_complexity(args: &Args) -> i32 {
     let gcache_layers = match &native_spec {
         Some(spec) if arch.is_none() => spec.arch_layers(),
         _ => layers.clone(),
+    };
+    // trainability mask, index-parallel to `gcache_layers`: frozen
+    // layers book-keep nothing, so the fused peak treats them as pure
+    // frontier transitions (`bk_gcache_floats_masked`)
+    let gcache_mask: Vec<bool> = match &native_spec {
+        Some(spec) if arch.is_none() => spec.arch_layer_trainable(),
+        _ => vec![true; gcache_layers.len()],
     };
     use fastdp::complexity::ClippingStyle;
     let gcache_styles = [
@@ -198,7 +240,8 @@ fn cmd_complexity(args: &Args) -> i32 {
     if args.has_flag("gcache-md") {
         let legacy = complexity::bk_gcache_floats_unfused(b, &gcache_layers);
         for style in gcache_styles {
-            let fused = complexity::bk_gcache_floats(style, b, &gcache_layers);
+            let fused =
+                complexity::bk_gcache_floats_masked(style, b, &gcache_layers, &gcache_mask);
             println!(
                 "| {model} | {} | {} | {} | {:.1}% |",
                 style.name(),
@@ -308,16 +351,20 @@ fn cmd_complexity(args: &Args) -> i32 {
         }
     }
     let legacy = complexity::bk_gcache_floats_unfused(b, &gcache_layers);
+    // clipping groups form over trainable owner layers only (the
+    // backend's rule); frozen layers mint no group
     let n_own = gcache_layers
         .iter()
-        .filter(|l| l.kind != fastdp::arch::LayerKind::TiedLinear)
+        .zip(&gcache_mask)
+        .filter(|(l, &m)| m && l.kind != fastdp::arch::LayerKind::TiedLinear)
         .count();
     let mut t = Table::new(
         &format!("clipping styles (B={b}): fused BK g-cache peak vs legacy, + clip state (floats)"),
         &["style", "groups", "g-cache (fused)", "g-cache (legacy)", "saved", "clip state"],
     );
     for style in &styles {
-        let fused = complexity::bk_gcache_floats(*style, b, &gcache_layers);
+        let fused =
+            complexity::bk_gcache_floats_masked(*style, b, &gcache_layers, &gcache_mask);
         t.row(&[
             style.name(),
             style.n_groups(n_own).to_string(),
@@ -356,7 +403,7 @@ fn cmd_complexity(args: &Args) -> i32 {
             &["style", "replica state", "per-shard g-cache", "reduction in-flight", "total"],
         );
         for style in &styles {
-            let g = complexity::bk_gcache_floats(*style, b, &gcache_layers);
+            let g = complexity::bk_gcache_floats_masked(*style, b, &gcache_layers, &gcache_mask);
             let sp = complexity::sharded_space(shards, micro, param_floats, adam, g);
             t.row(&[
                 style.name(),
@@ -432,7 +479,7 @@ fn cmd_ckpt(args: &Args) -> i32 {
                     match &ck.fingerprint {
                         Some(fp) => println!(
                             "fingerprint: strategy={} clipping={}/{} clip={} sigma={} \
-                             seed={} logical_batch={}",
+                             seed={} logical_batch={} trainable={}",
                             fp.strategy,
                             fp.clipping_style,
                             fp.clip_fn,
@@ -440,6 +487,7 @@ fn cmd_ckpt(args: &Args) -> i32 {
                             fp.sigma,
                             fp.seed,
                             fp.logical_batch,
+                            fp.trainable,
                         ),
                         None => println!("fingerprint: none (v1 checkpoint)"),
                     }
@@ -529,7 +577,7 @@ fn cmd_list(args: &Args) -> i32 {
     // Native registry (always available).
     let mut t = Table::new(
         "native models (backend=native, no artifacts needed)",
-        &["model", "kind", "B", "T", "dims", "params", "optimizer", "clip"],
+        &["model", "kind", "B", "T", "dims", "params", "optimizer", "clip", "trainable"],
     );
     for spec in NativeSpec::registry() {
         let info = spec.info();
@@ -547,6 +595,7 @@ fn cmd_list(args: &Args) -> i32 {
             fmt_count(info.n_params as f64),
             spec.optimizer.clone(),
             spec.clip_fn.clone(),
+            info.trainable_preset.clone(),
         ]);
     }
     print!("{}", t.render());

@@ -43,10 +43,20 @@ pub struct ModelInfo {
     pub optimizer: String,
     /// "abadi" | "automatic" | "flat".
     pub clip_fn: String,
-    /// Trainable tensors, in state/noise/checkpoint order.
+    /// Canonical tensors, in state/noise/checkpoint order.
     pub param_names: Vec<String>,
     pub param_shapes: BTreeMap<String, Vec<usize>>,
     pub n_params: usize,
+    /// Trainability flag per canonical tensor (`param_names` order).
+    /// Frozen tensors keep full parameter storage (forward needs them)
+    /// but carry zero-length gradient, noise, and optimizer-moment
+    /// buffers — see DESIGN.md §9.
+    pub trainable: Vec<bool>,
+    /// Canonical trainability preset (`Trainable::canonical` form:
+    /// "all", "bias-only", "lora:<rank>", "mask:<names>") — recorded in
+    /// the checkpoint privacy fingerprint so a resume with a drifted
+    /// mask is refused.
+    pub trainable_preset: String,
 }
 
 impl ModelInfo {
@@ -83,10 +93,43 @@ impl ModelInfo {
             .collect();
         let mut out = param_lens.clone();
         if self.is_adam() {
-            out.extend(param_lens.iter().copied()); // m
-            out.extend(param_lens); // v
+            // frozen tensors carry no optimizer state: their moment
+            // slots are present (layout is positional) but empty
+            let moment_lens: Vec<usize> = param_lens
+                .iter()
+                .zip(&self.trainable)
+                .map(|(&len, &t)| if t { len } else { 0 })
+                .collect();
+            out.extend(moment_lens.iter().copied()); // m
+            out.extend(moment_lens); // v
         }
         out
+    }
+
+    /// Element count of each tensor's gradient/noise buffer: the full
+    /// parameter length for trainable tensors, zero for frozen ones.
+    pub fn grad_lens(&self) -> Vec<usize> {
+        self.param_names
+            .iter()
+            .zip(&self.trainable)
+            .map(|(n, &t)| {
+                if t {
+                    self.param_shapes[n].iter().product()
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    /// Parameters the trainability mask actually trains.
+    pub fn n_trainable_params(&self) -> usize {
+        self.param_names
+            .iter()
+            .zip(&self.trainable)
+            .filter(|(_, &t)| t)
+            .map(|(n, _)| self.param_shapes[n].iter().product::<usize>())
+            .sum()
     }
 }
 
@@ -143,6 +186,10 @@ pub struct AllocStats {
     /// nondp / the unfused diagnostic schedule. Comparable to
     /// `complexity::bk_gcache_floats`.
     pub peak_gcache_floats: usize,
+    /// Optimizer-moment floats actually allocated (Adam m + v over
+    /// trainable tensors only; 0 for SGD). Drops under bias-only / LoRA
+    /// presets — the measured side of the PEFT space claim.
+    pub opt_state_floats: usize,
 }
 
 /// One trainable (model, strategy) pair the coordinator can drive.
@@ -267,13 +314,19 @@ pub fn create_backend(cfg: &crate::config::TrainConfig) -> Result<Box<dyn Backen
     })?;
     match cfg.backend.as_str() {
         "native" => {
-            let spec = native::model::NativeSpec::by_name(&cfg.model).ok_or_else(|| {
+            let mut spec = native::model::NativeSpec::by_name(&cfg.model).ok_or_else(|| {
                 anyhow!(
                     "model '{}' is not in the native registry (available: {})",
                     cfg.model,
                     native::model::registry_names().join(", ")
                 )
             })?;
+            if !cfg.trainable.is_empty() {
+                // --trainable overrides the registry preset (e.g. run
+                // gpt_nano_e2e bias-only without a registry twin)
+                spec.trainable = cfg.trainable.clone();
+            }
+            spec.trainable_preset()?;
             let strategy = crate::complexity::Strategy::parse(&cfg.strategy)
                 .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
             let dispatch = native::autotune::resolve_dispatch(

@@ -37,14 +37,30 @@ pub struct Attention {
     name: String,
     d: usize,
     heads: usize,
+    /// Per-tensor trainability `[w_qkv, b_qkv, w_o, b_o]` (bias-only
+    /// fine-tuning freezes both projections). A fully frozen layer
+    /// still flows `backward_data` — see the note there.
+    train: [bool; 4],
 }
 
 impl Attention {
     /// Build a causal self-attention layer over width `d` with `heads`
-    /// heads (`d % heads == 0`, validated by `build_stack`).
+    /// heads (`d % heads == 0`, validated by `build_stack`), fully
+    /// trainable.
     pub fn new(name: String, d: usize, heads: usize) -> Self {
         debug_assert!(heads > 0 && d % heads == 0);
-        Self { name, d, heads }
+        Self {
+            name,
+            d,
+            heads,
+            train: [true; 4],
+        }
+    }
+
+    /// Set the `[w_qkv, b_qkv, w_o, b_o]` trainability mask.
+    pub fn with_trainable(mut self, train: [bool; 4]) -> Self {
+        self.train = train;
+        self
     }
 
     /// Number of attention heads.
@@ -189,11 +205,11 @@ impl DpLayer for Attention {
 
     fn backward_data(
         &self,
-        _g_out: &[f32],
+        g_out: &[f32],
         _x: LayerIn<'_>,
         _out: &[f32],
         params: &[Vec<f32>],
-        _cache: &[Vec<f32>],
+        cache: &[Vec<f32>],
         scratch: &mut Scratch<'_>,
         g_in: &mut [f32],
         ctx: Ctx,
@@ -213,6 +229,16 @@ impl DpLayer for Attention {
         // its `backward_data`. The differential harness and the
         // full-stack FD tests pin this invariant; breaking the call
         // order produces garbage gradients they catch immediately.
+        //
+        // Exception: a fully *frozen* attention layer gets no norm/sum
+        // hook at all (the tape skips it), so nothing filled
+        // `Scratch::attn` — recompute the core here instead. This is
+        // the one softmax backward the frozen layer pays per walk;
+        // partially frozen (bias-only) layers still hook and keep the
+        // shared recompute.
+        if self.train == [false; 4] {
+            self.recompute_core(g_out, params, cache, scratch.attn, ctx);
+        }
         let rows = ctx.rows();
         let dm = self.d;
         let g_qkv = &scratch.attn[rows * dm..rows * 4 * dm];
@@ -236,10 +262,11 @@ impl DpLayer for Attention {
         // (backward_data reuses them — see the invariant there)
         let (_g_ao, g_qkv) = self.recompute_core(g_out, params, cache, scratch.attn, ctx);
         // both projections are generalized linear: the same ghost /
-        // streamed-instantiation dispatch as `Linear`
-        match route {
-            NormRoute::Ghost => {
-                kernels::ghost_norm(
+        // streamed-instantiation dispatch as `Linear`, each gated on
+        // its tensor's trainability
+        if self.train[0] {
+            match route {
+                NormRoute::Ghost => kernels::ghost_norm(
                     x.feat(),
                     g_qkv,
                     b,
@@ -250,22 +277,8 @@ impl DpLayer for Attention {
                     scratch.gram_g,
                     sq,
                     ctx.threads,
-                );
-                kernels::ghost_norm(
-                    &cache[2],
-                    g_out,
-                    b,
-                    t,
-                    dm,
-                    dm,
-                    scratch.gram_a,
-                    scratch.gram_g,
-                    sq,
-                    ctx.threads,
-                );
-            }
-            NormRoute::Inst => {
-                kernels::psg_norms_streaming(
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
                     x.feat(),
                     g_qkv,
                     b,
@@ -275,22 +288,42 @@ impl DpLayer for Attention {
                     scratch.stream,
                     sq,
                     ctx.threads,
-                );
-                kernels::psg_norms_streaming(
-                    &cache[2],
-                    g_out,
-                    b,
-                    t,
-                    dm,
-                    dm,
-                    scratch.stream,
-                    sq,
-                    ctx.threads,
-                );
+                ),
             }
         }
-        kernels::bias_sq_norms(g_qkv, b, t, 3 * dm, scratch.small, sq, ctx.threads);
-        kernels::bias_sq_norms(g_out, b, t, dm, scratch.small, sq, ctx.threads);
+        if self.train[2] {
+            match route {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    &cache[2],
+                    g_out,
+                    b,
+                    t,
+                    dm,
+                    dm,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    &cache[2],
+                    g_out,
+                    b,
+                    t,
+                    dm,
+                    dm,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                ),
+            }
+        }
+        if self.train[1] {
+            kernels::bias_sq_norms(g_qkv, b, t, 3 * dm, scratch.small, sq, ctx.threads);
+        }
+        if self.train[3] {
+            kernels::bias_sq_norms(g_out, b, t, dm, scratch.small, sq, ctx.threads);
+        }
     }
 
     fn clipped_grads(
@@ -310,31 +343,39 @@ impl DpLayer for Attention {
         let [gw_qkv, gb_qkv, gw_o, gb_o] = grads else {
             unreachable!("{}: attention has exactly 4 param tensors", self.name);
         };
-        kernels::weighted_grad(
-            x.feat(),
-            g_qkv,
-            c,
-            b,
-            t,
-            dm,
-            3 * dm,
-            scratch.partials,
-            gw_qkv,
-            ctx.threads,
-        );
-        kernels::bias_grad(g_qkv, c, b, t, 3 * dm, gb_qkv);
-        kernels::weighted_grad(
-            &cache[2],
-            g_out,
-            c,
-            b,
-            t,
-            dm,
-            dm,
-            scratch.partials,
-            gw_o,
-            ctx.threads,
-        );
-        kernels::bias_grad(g_out, c, b, t, dm, gb_o);
+        if self.train[0] {
+            kernels::weighted_grad(
+                x.feat(),
+                g_qkv,
+                c,
+                b,
+                t,
+                dm,
+                3 * dm,
+                scratch.partials,
+                gw_qkv,
+                ctx.threads,
+            );
+        }
+        if self.train[1] {
+            kernels::bias_grad(g_qkv, c, b, t, 3 * dm, gb_qkv);
+        }
+        if self.train[2] {
+            kernels::weighted_grad(
+                &cache[2],
+                g_out,
+                c,
+                b,
+                t,
+                dm,
+                dm,
+                scratch.partials,
+                gw_o,
+                ctx.threads,
+            );
+        }
+        if self.train[3] {
+            kernels::bias_grad(g_out, c, b, t, dm, gb_o);
+        }
     }
 }

@@ -19,12 +19,27 @@ pub struct Linear {
     name: String,
     d: usize,
     p: usize,
+    /// Per-tensor trainability `[weight, bias]`: a frozen tensor's
+    /// norm/sum kernels are skipped entirely (bias-only fine-tuning
+    /// freezes the weight but keeps the d*p forward/backward_data).
+    train: [bool; 2],
 }
 
 impl Linear {
-    /// Build a `(d, p)` linear layer.
+    /// Build a `(d, p)` linear layer, fully trainable.
     pub fn new(name: String, d: usize, p: usize) -> Self {
-        Self { name, d, p }
+        Self {
+            name,
+            d,
+            p,
+            train: [true, true],
+        }
+    }
+
+    /// Set the `[weight, bias]` trainability mask.
+    pub fn with_trainable(mut self, train: [bool; 2]) -> Self {
+        self.train = train;
+        self
     }
 }
 
@@ -60,7 +75,13 @@ impl DpLayer for Linear {
     }
 
     fn psg_len(&self) -> usize {
-        self.d * self.p
+        // a frozen weight never instantiates per-sample grads; the bias
+        // norm/sum kernels read `g_out` directly and need no store
+        if self.train[0] {
+            self.d * self.p
+        } else {
+            0
+        }
     }
 
     fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], is_head: bool) {
@@ -127,32 +148,36 @@ impl DpLayer for Linear {
         ctx: Ctx,
     ) {
         let (b, t) = (ctx.b, ctx.t);
-        match route {
-            NormRoute::Ghost => kernels::ghost_norm(
-                x.feat(),
-                g_out,
-                b,
-                t,
-                self.d,
-                self.p,
-                scratch.gram_a,
-                scratch.gram_g,
-                sq,
-                ctx.threads,
-            ),
-            NormRoute::Inst => kernels::psg_norms_streaming(
-                x.feat(),
-                g_out,
-                b,
-                t,
-                self.d,
-                self.p,
-                scratch.stream,
-                sq,
-                ctx.threads,
-            ),
+        if self.train[0] {
+            match route {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    x.feat(),
+                    g_out,
+                    b,
+                    t,
+                    self.d,
+                    self.p,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    x.feat(),
+                    g_out,
+                    b,
+                    t,
+                    self.d,
+                    self.p,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                ),
+            }
         }
-        kernels::bias_sq_norms(g_out, b, t, self.p, scratch.small, sq, ctx.threads);
+        if self.train[1] {
+            kernels::bias_sq_norms(g_out, b, t, self.p, scratch.small, sq, ctx.threads);
+        }
     }
 
     fn clipped_grads(
@@ -167,19 +192,23 @@ impl DpLayer for Linear {
         ctx: Ctx,
     ) {
         let (gw, gb) = grads.split_at_mut(1);
-        kernels::weighted_grad(
-            x.feat(),
-            g_out,
-            c,
-            ctx.b,
-            ctx.t,
-            self.d,
-            self.p,
-            scratch.partials,
-            &mut gw[0],
-            ctx.threads,
-        );
-        kernels::bias_grad(g_out, c, ctx.b, ctx.t, self.p, &mut gb[0]);
+        if self.train[0] {
+            kernels::weighted_grad(
+                x.feat(),
+                g_out,
+                c,
+                ctx.b,
+                ctx.t,
+                self.d,
+                self.p,
+                scratch.partials,
+                &mut gw[0],
+                ctx.threads,
+            );
+        }
+        if self.train[1] {
+            kernels::bias_grad(g_out, c, ctx.b, ctx.t, self.p, &mut gb[0]);
+        }
     }
 
     fn psg_norms_stored(
@@ -192,9 +221,12 @@ impl DpLayer for Linear {
         ctx: Ctx,
     ) {
         let (b, t) = (ctx.b, ctx.t);
+        debug_assert!(self.train[0], "stored-psg route requires a trainable weight");
         kernels::psg_instantiate(x.feat(), g_out, b, t, self.d, self.p, store, ctx.threads);
         kernels::sq_norms_from_psg(store, b, self.d * self.p, sq, ctx.threads);
-        kernels::bias_sq_norms(g_out, b, t, self.p, scratch.small, sq, ctx.threads);
+        if self.train[1] {
+            kernels::bias_sq_norms(g_out, b, t, self.p, scratch.small, sq, ctx.threads);
+        }
     }
 
     fn psg_weighted_sum(
@@ -207,6 +239,8 @@ impl DpLayer for Linear {
     ) {
         let (gw, gb) = grads.split_at_mut(1);
         kernels::weighted_sum_psg(store, c, ctx.b, self.d, self.p, &mut gw[0], ctx.threads);
-        kernels::bias_grad(g_out, Some(c), ctx.b, ctx.t, self.p, &mut gb[0]);
+        if self.train[1] {
+            kernels::bias_grad(g_out, Some(c), ctx.b, ctx.t, self.p, &mut gb[0]);
+        }
     }
 }

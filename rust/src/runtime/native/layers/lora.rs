@@ -1,0 +1,373 @@
+//! LoRA-adapted linear layer: a frozen `(d, p)` base with trainable
+//! rank-`r` adapters — `out = x·W + b + (x·A)·B` with `A (d, r)`,
+//! `B (r, p)`, `r ≪ min(d, p)`.
+//!
+//! Both adapters are themselves generalized linear, so the whole BK
+//! machinery applies to the skinny factors directly:
+//!
+//! * `grad_A_i = x_i^T gA_i` with `gA = g·B^T` — a `(d, r)` linear with
+//!   the layer's input and a recomputed rank-wide output gradient;
+//! * `grad_B_i = h_i^T g_i` with `h = x·A` — an `(r, p)` linear whose
+//!   input is the cached adapter activation.
+//!
+//! Ghost norms cost `O(B T^2)` Grams against `d*r` / `r*p`
+//! instantiation, so at small rank the ghost route is almost always
+//! cheap (`complexity::ghost_preferred` decides per dims as usual). The
+//! frozen base contributes only its forward matmul and the
+//! `backward_data` flow `g·W^T + (g·B^T)·A^T` — no norms, no sums, no
+//! optimizer state.
+//!
+//! Forward caches: `h = x·A` (rows, r) for `grad_B`, plus a (rows, p)
+//! temp for the adapter path's forward product. The recompute scratch
+//! `[gA | gA·A^T]` lives in [`Scratch::attn`] (`rows * (r + d)`).
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+
+/// `out = x·W + b + (x·A)·B` over `(rows, d)` feature rows.
+pub struct LoraLinear {
+    name: String,
+    d: usize,
+    p: usize,
+    rank: usize,
+    /// Per-tensor trainability `[W, b, A, B]`; the `lora:<rank>` preset
+    /// is `[false, false, true, true]` (frozen base, live adapters).
+    train: [bool; 4],
+}
+
+impl LoraLinear {
+    /// Build a `(d, p)` LoRA linear with rank-`rank` adapters (frozen
+    /// base by default).
+    pub fn new(name: String, d: usize, p: usize, rank: usize) -> Self {
+        debug_assert!(rank > 0 && rank <= d.min(p));
+        Self {
+            name,
+            d,
+            p,
+            rank,
+            train: [false, false, true, true],
+        }
+    }
+
+    /// Set the `[W, b, A, B]` trainability mask.
+    pub fn with_trainable(mut self, train: [bool; 4]) -> Self {
+        self.train = train;
+        self
+    }
+
+    /// Recompute the adapter output gradient `gA = g·B^T` into the
+    /// front of `attn`; returns the freshly written `(rows, r)` view.
+    fn recompute_ga<'s>(
+        &self,
+        g_out: &[f32],
+        params: &[Vec<f32>],
+        attn: &'s mut [f32],
+        ctx: Ctx,
+    ) -> &'s [f32] {
+        let rows = ctx.rows();
+        let (ga, _) = attn.split_at_mut(rows * self.rank);
+        kernels::backward_data(g_out, &params[3], ga, rows, self.rank, self.p, ctx.threads);
+        &*ga
+    }
+}
+
+impl DpLayer for LoraLinear {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.d
+    }
+
+    fn out_width(&self) -> usize {
+        self.p
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        4
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![
+            vec![self.d, self.p],
+            vec![self.p],
+            vec![self.d, self.rank],
+            vec![self.rank, self.p],
+        ]
+    }
+
+    fn dims(&self, t: usize) -> Option<LayerDims> {
+        Some(LayerDims {
+            kind: LayerKind::Lora {
+                rank: self.rank as u64,
+            },
+            name: self.name.clone(),
+            t: t as u64,
+            d: self.d as u64,
+            p: self.p as u64,
+        })
+    }
+
+    fn cache_lens(&self, ctx: Ctx) -> Vec<usize> {
+        // h = x·A (rows, r) + the adapter forward temp (rows, p)
+        vec![ctx.rows() * self.rank, ctx.rows() * self.p]
+    }
+
+    fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], is_head: bool) {
+        // base W like a plain Linear (there is no pretrained tensor to
+        // load; the frozen base is a fixed random feature map), bias 0
+        let scale = if is_head {
+            0.05 * (1.0 / self.d as f32).sqrt()
+        } else {
+            (2.0 / self.d as f32).sqrt()
+        };
+        let mut gs = GaussianSource::from_rng(rng);
+        gs.fill_f32(&mut params[0]);
+        for v in params[0].iter_mut() {
+            *v *= scale;
+        }
+        for v in params[1].iter_mut() {
+            *v = 0.0;
+        }
+        // A ~ N(0, 1/d) as in the LoRA paper. B is conventionally zero
+        // (adapter starts as identity on a pretrained base); here there
+        // is no pretrained base to preserve, and a zero B would zero
+        // grad_A = x^T(g·B^T) at step 0 — so B gets a small random init
+        // to keep both adapter paths live from the first step.
+        let a_scale = (1.0 / self.d as f32).sqrt();
+        gs.fill_f32(&mut params[2]);
+        for v in params[2].iter_mut() {
+            *v *= a_scale;
+        }
+        let b_scale = 0.1 * (1.0 / self.rank as f32).sqrt();
+        gs.fill_f32(&mut params[3]);
+        for v in params[3].iter_mut() {
+            *v *= b_scale;
+        }
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let rows = ctx.rows();
+        let x = x.feat();
+        let (h_c, tmp_c) = cache.split_at_mut(1);
+        kernels::linear_forward(
+            x,
+            &params[0],
+            Some(&params[1]),
+            out,
+            rows,
+            self.d,
+            self.p,
+            ctx.threads,
+        );
+        kernels::linear_forward(x, &params[2], None, &mut h_c[0], rows, self.d, self.rank, ctx.threads);
+        kernels::linear_forward(
+            &h_c[0],
+            &params[3],
+            None,
+            &mut tmp_c[0],
+            rows,
+            self.rank,
+            self.p,
+            ctx.threads,
+        );
+        for (o, &a) in out.iter_mut().zip(tmp_c[0].iter()) {
+            *o += a;
+        }
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        // g_in = g·W^T + (g·B^T)·A^T. gA is recomputed here rather than
+        // reused from the norm hook: it is a skinny O(rows·p·r) product,
+        // and recomputing keeps this layer independent of whether the
+        // hooks ran at all (a fully frozen LoRA layer is skippable).
+        let rows = ctx.rows();
+        let (ga, rest) = scratch.attn.split_at_mut(rows * self.rank);
+        let (tmp, _) = rest.split_at_mut(rows * self.d);
+        kernels::backward_data(g_out, &params[3], ga, rows, self.rank, self.p, ctx.threads);
+        kernels::backward_data(g_out, &params[0], g_in, rows, self.d, self.p, ctx.threads);
+        kernels::backward_data(ga, &params[2], tmp, rows, self.d, self.rank, ctx.threads);
+        for (g, &a) in g_in.iter_mut().zip(tmp.iter()) {
+            *g += a;
+        }
+    }
+
+    fn accum_sq_norms(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        route: NormRoute,
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, ctx.t);
+        let (d, p, r) = (self.d, self.p, self.rank);
+        if self.train[0] {
+            match route {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    x.feat(),
+                    g_out,
+                    b,
+                    t,
+                    d,
+                    p,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    x.feat(),
+                    g_out,
+                    b,
+                    t,
+                    d,
+                    p,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                ),
+            }
+        }
+        if self.train[1] {
+            kernels::bias_sq_norms(g_out, b, t, p, scratch.small, sq, ctx.threads);
+        }
+        if self.train[2] {
+            // adapter A is a (d, r) linear with output gradient gA
+            let rows = ctx.rows();
+            let (ga, _) = scratch.attn.split_at_mut(rows * r);
+            kernels::backward_data(g_out, &params[3], ga, rows, r, p, ctx.threads);
+            match route {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    x.feat(),
+                    ga,
+                    b,
+                    t,
+                    d,
+                    r,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    x.feat(),
+                    ga,
+                    b,
+                    t,
+                    d,
+                    r,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                ),
+            }
+        }
+        if self.train[3] {
+            // adapter B is an (r, p) linear with cached input h = x·A
+            match route {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    &cache[0],
+                    g_out,
+                    b,
+                    t,
+                    r,
+                    p,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    &cache[0],
+                    g_out,
+                    b,
+                    t,
+                    r,
+                    p,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                ),
+            }
+        }
+    }
+
+    fn clipped_grads(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, ctx.t);
+        let (d, p, r) = (self.d, self.p, self.rank);
+        let [gw, gb, ga_grad, gb_ad] = grads else {
+            unreachable!("{}: lora has exactly 4 param tensors", self.name);
+        };
+        if self.train[0] {
+            kernels::weighted_grad(
+                x.feat(),
+                g_out,
+                c,
+                b,
+                t,
+                d,
+                p,
+                scratch.partials,
+                gw,
+                ctx.threads,
+            );
+        }
+        if self.train[1] {
+            kernels::bias_grad(g_out, c, b, t, p, gb);
+        }
+        if self.train[2] {
+            let ga = self.recompute_ga(g_out, params, scratch.attn, ctx);
+            kernels::weighted_grad(x.feat(), ga, c, b, t, d, r, scratch.partials, ga_grad, ctx.threads);
+        }
+        if self.train[3] {
+            kernels::weighted_grad(
+                &cache[0],
+                g_out,
+                c,
+                b,
+                t,
+                r,
+                p,
+                scratch.partials,
+                gb_ad,
+                ctx.threads,
+            );
+        }
+    }
+}

@@ -49,6 +49,8 @@ pub mod attention;
 pub mod embedding;
 pub mod layernorm;
 pub mod linear;
+pub mod lora;
+pub mod pos_embedding;
 pub mod relu;
 pub mod tied_linear;
 
@@ -56,6 +58,8 @@ pub use attention::Attention;
 pub use embedding::Embedding;
 pub use layernorm::LayerNorm;
 pub use linear::Linear;
+pub use lora::LoraLinear;
+pub use pos_embedding::PosEmbedding;
 pub use relu::Relu;
 pub use tied_linear::TiedLinear;
 
@@ -145,9 +149,11 @@ pub struct Scratch<'a> {
     /// Batch-reduction partials for the weighted contraction,
     /// `>= workers * max(d*p)`.
     pub partials: &'a mut [f32],
-    /// Attention backward scratch, `>= B*T * 4*d_model` for the widest
-    /// attention layer (the recomputed `[g_ao | g_qkv]` pair); empty
-    /// when the stack has no attention layers.
+    /// Composite-layer backward scratch: `>= B*T * 4*d_model` for the
+    /// widest attention layer (the recomputed `[g_ao | g_qkv]` pair),
+    /// and `>= B*T * (rank + d)` for the widest LoRA layer (the
+    /// recomputed `[gA | gA·A^T]` pair); empty when the stack has
+    /// neither.
     pub attn: &'a mut [f32],
 }
 
@@ -344,9 +350,17 @@ pub trait DpLayer: Send + Sync {
 }
 
 /// Build the executable layer stack from a spec's canonical plan.
+///
+/// Trainability: layers with per-tensor kernel dispatch (Linear,
+/// Attention, LoRA) receive their slice of [`NativeSpec::plan_masks`]
+/// so partially-frozen layers (bias-only) skip the frozen tensors'
+/// kernels internally; uniformly-masked layers are gated at the tape
+/// level through [`StackRun::trainable`] instead.
 pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
+    let masks = spec.plan_masks();
     let mut out: Vec<Box<dyn DpLayer>> = Vec::new();
     for (k, l) in spec.plan().into_iter().enumerate() {
+        let mask = &masks[k];
         match l.op {
             PlanOp::Embedding { vocab, dim } => {
                 if k != 0 {
@@ -358,7 +372,24 @@ pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
                 }
                 out.push(Box::new(Embedding::new(l.name, vocab, dim)));
             }
-            PlanOp::Linear { d, p } => out.push(Box::new(Linear::new(l.name, d, p))),
+            PlanOp::Linear { d, p } => {
+                out.push(Box::new(Linear::new(l.name, d, p).with_trainable([mask[0], mask[1]])))
+            }
+            PlanOp::LoraLinear { d, p, rank } => {
+                if rank == 0 || rank > d.min(p) {
+                    bail!(
+                        "lora layer '{}' of model '{}': rank {} must be in 1..={}",
+                        l.name,
+                        spec.name,
+                        rank,
+                        d.min(p)
+                    );
+                }
+                out.push(Box::new(
+                    LoraLinear::new(l.name, d, p, rank)
+                        .with_trainable([mask[0], mask[1], mask[2], mask[3]]),
+                ));
+            }
             PlanOp::TiedLinear { d, p } => {
                 if k == 0 {
                     bail!(
@@ -381,7 +412,21 @@ pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
                         d
                     );
                 }
-                out.push(Box::new(Attention::new(l.name, d, heads)));
+                out.push(Box::new(
+                    Attention::new(l.name, d, heads)
+                        .with_trainable([mask[0], mask[1], mask[2], mask[3]]),
+                ));
+            }
+            PlanOp::PosEmbedding { seq, dim } => {
+                if k == 0 {
+                    bail!(
+                        "positional embedding '{}' of model '{}' cannot be the first \
+                         layer (it adds to feature activations)",
+                        l.name,
+                        spec.name
+                    );
+                }
+                out.push(Box::new(PosEmbedding::new(l.name, seq, dim)));
             }
         }
     }
@@ -425,6 +470,15 @@ pub struct StackRun<'a> {
     /// stashes `k`'s output gradient and has `j` add the ghost cross
     /// term `2 <G_j, G_k>` to the group's per-sample squared norms.
     pub alias_of: &'a [Option<usize>],
+    /// Per-layer trainability gate: `trainable[k]` is true iff any of
+    /// layer `k`'s canonical tensors trains under the active mask
+    /// (aliasing layers carry their owner's state). A false entry makes
+    /// every walk skip the layer's norm, clipped-sum, and book-keeping
+    /// hooks entirely — `backward_data` still flows activations through
+    /// — which is the frozen-layer skip invariant of DESIGN.md §9.
+    /// Distinct from `n_param_tensors() > 0`: a parameterized layer can
+    /// be frozen; a stateless layer is never trainable.
+    pub trainable: &'a [bool],
     /// Norm route per layer (meaningful for trainable layers).
     pub routes: &'a [NormRoute],
     /// Clipping-group id per layer (meaningful for trainable layers).
@@ -586,11 +640,15 @@ impl StackRun<'_> {
             self.stash_residual(arena, &mut pending, k, &g);
             if let Some(owner) = self.alias_of[k] {
                 debug_assert!(owner < k, "alias must point at an earlier layer");
-                let mut copy = arena.take(g.len());
-                copy.copy_from_slice(&g);
-                cross[owner] = Some((k, copy));
+                // a frozen shared tensor needs no cross term: neither
+                // side contributes norms
+                if self.trainable[owner] {
+                    let mut copy = arena.take(g.len());
+                    copy.copy_from_slice(&g);
+                    cross[owner] = Some((k, copy));
+                }
             }
-            if layer.n_param_tensors() > 0 {
+            if self.trainable[k] {
                 let gr = self.groups[k] * b..(self.groups[k] + 1) * b;
                 match psg[k].as_mut() {
                     Some(store) => {
@@ -629,14 +687,14 @@ impl StackRun<'_> {
                 );
                 self.merge_residual(arena, &mut pending, k, &mut g_prev);
                 let old = std::mem::replace(&mut g, g_prev);
-                if keep_g && layer.n_param_tensors() > 0 {
+                if keep_g && self.trainable[k] {
                     kept[k] = Some(old);
                 } else {
                     arena.give(old);
                 }
             }
         }
-        if keep_g && self.layers[0].n_param_tensors() > 0 {
+        if keep_g && self.trainable[0] {
             kept[0] = Some(g);
         } else {
             arena.give(g);
@@ -716,7 +774,7 @@ impl StackRun<'_> {
             let layer = &self.layers[k];
             let xin = self.input_of(k, acts, input);
             self.stash_residual(arena, &mut pending, k, &g);
-            let trainable = layer.n_param_tensors() > 0;
+            let trainable = self.trainable[k];
             if trainable {
                 let gr = self.groups[k] * b..(self.groups[k] + 1) * b;
                 match psg[k].as_mut() {
@@ -776,7 +834,7 @@ impl StackRun<'_> {
                 clip(&sq[gi * b..(gi + 1) * b], &mut cfac[gi * b..(gi + 1) * b]);
                 let c = &cfac[gi * b..(gi + 1) * b];
                 for j in (k..nl).rev() {
-                    if self.layers[j].n_param_tensors() == 0 || self.groups[j] != gi {
+                    if !self.trainable[j] || self.groups[j] != gi {
                         continue;
                     }
                     let gj = kept[j]
@@ -835,7 +893,7 @@ impl StackRun<'_> {
         let b = ctx.b;
         for k in (0..self.layers.len()).rev() {
             let layer = &self.layers[k];
-            if layer.n_param_tensors() == 0 {
+            if !self.trainable[k] {
                 continue;
             }
             let g = kept[k].as_ref().expect("book-kept output gradient");
@@ -886,7 +944,7 @@ impl StackRun<'_> {
             let layer = &self.layers[k];
             let xin = self.input_of(k, acts, input);
             self.stash_residual(arena, &mut pending, k, &g);
-            if layer.n_param_tensors() > 0 {
+            if self.trainable[k] {
                 let c = cfac.map(|cf| &cf[self.groups[k] * b..(self.groups[k] + 1) * b]);
                 let gk = &mut grads[self.slots[k].0..self.slots[k].1];
                 layer.clipped_grads(xin, &g, c, self.params_of(k), &caches[k], scratch, gk, ctx);

@@ -1,0 +1,165 @@
+//! Learned positional-embedding table (GPT-2 `wpe`): a `(t, dim)`
+//! table whose row `ti` is added to every sample's position-`ti`
+//! activation row — `out[i, ti, :] = x[i, ti, :] + W[ti, :]`.
+//!
+//! Unlike the token embedding, the table's rows never collide across
+//! positions within a sample: each position reads exactly its own row,
+//! once. The per-sample gradient with respect to the table is therefore
+//! just the sample's output gradient laid out over the `t` rows, so the
+//! per-sample squared norm is the plain gradient Frobenius norm — no
+//! token-equality Gram, no activation Gram, no instantiation. Both norm
+//! routes collapse to the same O(B T d) reduction, and the clipped sum
+//! is a serial position-wise scatter like the token embedding's.
+//! `backward_data` is the identity (the addition passes gradients
+//! straight through).
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+
+/// `out[i, ti, :] = x[i, ti, :] + W[ti, :]` over `(b, t, dim)` rows.
+pub struct PosEmbedding {
+    name: String,
+    t: usize,
+    dim: usize,
+}
+
+impl PosEmbedding {
+    /// Build a `(t, dim)` position table.
+    pub fn new(name: String, t: usize, dim: usize) -> Self {
+        Self { name, t, dim }
+    }
+}
+
+impl DpLayer for PosEmbedding {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.dim
+    }
+
+    fn out_width(&self) -> usize {
+        self.dim
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        1
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![vec![self.t, self.dim]]
+    }
+
+    fn dims(&self, t: usize) -> Option<LayerDims> {
+        debug_assert_eq!(t, self.t, "wpe table rows are the sequence length");
+        Some(LayerDims {
+            kind: LayerKind::PosEmbedding,
+            name: self.name.clone(),
+            t: t as u64,
+            d: self.dim as u64,
+            p: self.dim as u64,
+        })
+    }
+
+    fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], _is_head: bool) {
+        // small like GPT-2's wpe: positions start as a gentle bias on
+        // top of the token embedding, not a competing signal
+        let scale = 0.1 * (1.0 / self.dim as f32).sqrt();
+        let mut gs = GaussianSource::from_rng(rng);
+        gs.fill_f32(&mut params[0]);
+        for v in params[0].iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        _cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let x = x.feat();
+        let (t, dim) = (self.t, self.dim);
+        debug_assert_eq!(ctx.t, t);
+        for i in 0..ctx.b {
+            for ti in 0..t {
+                let row = (i * t + ti) * dim;
+                let w = &params[0][ti * dim..(ti + 1) * dim];
+                for j in 0..dim {
+                    out[row + j] = x[row + j] + w[j];
+                }
+            }
+        }
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        g_in: &mut [f32],
+        _ctx: Ctx,
+    ) {
+        // the addition is identity in x
+        g_in.copy_from_slice(g_out);
+    }
+
+    fn accum_sq_norms(
+        &self,
+        _x: LayerIn<'_>,
+        g_out: &[f32],
+        _route: NormRoute,
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        // rows never collide: the per-sample table gradient IS the
+        // sample's output gradient, so both routes are this one exact
+        // Frobenius reduction
+        kernels::sq_norms_from_psg(g_out, ctx.b, self.t * self.dim, sq, ctx.threads);
+    }
+
+    fn clipped_grads(
+        &self,
+        _x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        // grad_W[ti, :] += sum_i c_i g[i, ti, :] — a position-wise
+        // scatter, serial like the token embedding's
+        let (t, dim) = (self.t, self.dim);
+        for i in 0..ctx.b {
+            let ci = match c {
+                Some(cs) => cs[i],
+                None => 1.0,
+            };
+            if ci == 0.0 {
+                continue;
+            }
+            for ti in 0..t {
+                let g_row = &g_out[(i * t + ti) * dim..(i * t + ti + 1) * dim];
+                let w_row = &mut grads[0][ti * dim..(ti + 1) * dim];
+                for (wv, &gv) in w_row.iter_mut().zip(g_row) {
+                    *wv += ci * gv;
+                }
+            }
+        }
+    }
+}

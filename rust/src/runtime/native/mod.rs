@@ -84,6 +84,15 @@ pub struct NativeBackend {
     /// Residual skip per stack layer (`Some(r)` adds layer `r`'s input
     /// activation to layer `k`'s output; transformer blocks).
     residuals: Vec<Option<usize>>,
+    /// Per canonical tensor: trains under the spec's trainability
+    /// preset. Frozen tensors keep full parameter storage (forward and
+    /// `backward_data` read them) but get zero-length grad, noise, and
+    /// moment buffers — DESIGN.md §9.
+    slot_trainable: Vec<bool>,
+    /// Per stack layer: true iff any of its canonical tensors trains
+    /// (aliases inherit the owner's flags). `false` means the tape
+    /// skips the layer's norm/sum hooks entirely.
+    layer_trainable: Vec<bool>,
     /// Fused-schedule group boundaries: `finalize_at[k] = Some(g)`
     /// marks stack layer `k` as the lowest-index member of clipping
     /// group `g` — the walk finalizes `g` (clip factors + clipped sums
@@ -198,6 +207,16 @@ impl NativeBackend {
                 spec.name
             );
         }
+        if spec.wpe && spec.vocab == 0 {
+            bail!(
+                "model '{}': wpe = true requires token input (vocab > 0) — the position \
+                 table rides on the token embedding",
+                spec.name
+            );
+        }
+        // parse + validate the trainability preset up front (unknown
+        // mask names, lora on a lora-less plan, all-frozen specs)
+        spec.trainable_preset()?;
         let stack = layers::build_stack(&spec)?;
         let residuals: Vec<Option<usize>> = spec.plan().iter().map(|l| l.residual).collect();
         let t = spec.seq;
@@ -321,21 +340,35 @@ impl NativeBackend {
             }
         }
 
-        // clipping groups over *owner* trainable layers, in stack order;
+        // ---- trainability ---------------------------------------------
+        // per canonical tensor from the spec's preset (aliases see the
+        // owner's slots, so they inherit its flags), and per stack layer
+        // (true iff any of its tensors trains). Frozen layers never
+        // enter the norm/sum walks, clipping groups, or optimizer state.
+        let slot_trainable = spec.slot_trainable();
+        debug_assert_eq!(slot_trainable.len(), canon_names.len());
+        let layer_trainable: Vec<bool> = slots
+            .iter()
+            .map(|&(s, e)| slot_trainable[s..e].iter().any(|&tr| tr))
+            .collect();
+
+        // clipping groups over *trainable owner* layers, in stack order;
         // aliasing layers inherit the owner's group — tied tensors must
         // land in one group or the per-group R/sqrt(G) sensitivity
         // argument breaks (splitting ||G_emb + G_head|| across groups
-        // would double-charge the shared tensor).
+        // would double-charge the shared tensor). Frozen layers mint no
+        // group: they contribute no norms, so counting them would dilute
+        // R/sqrt(G) with groups that never see a gradient.
         let n_param_layers = stack
             .iter()
             .enumerate()
-            .filter(|(k, l)| l.n_param_tensors() > 0 && alias_of[*k].is_none())
+            .filter(|(k, _)| layer_trainable[*k] && alias_of[*k].is_none())
             .count();
         let n_groups = style.n_groups(n_param_layers);
         let mut groups = vec![0usize; stack.len()];
         let mut pl = 0usize;
-        for (k, l) in stack.iter().enumerate() {
-            if l.n_param_tensors() > 0 && alias_of[k].is_none() {
+        for k in 0..stack.len() {
+            if layer_trainable[k] && alias_of[k].is_none() {
                 groups[k] = style.group_of(pl, n_param_layers);
                 pl += 1;
             }
@@ -353,12 +386,19 @@ impl NativeBackend {
         let mut finalize_at: Vec<Option<usize>> = vec![None; stack.len()];
         for gi in 0..n_groups {
             let min_k = (0..stack.len())
-                .find(|&k| stack[k].n_param_tensors() > 0 && groups[k] == gi)
+                .find(|&k| layer_trainable[k] && groups[k] == gi)
                 .expect("every clipping group has a trainable member");
             finalize_at[min_k] = Some(gi);
         }
 
-        // shared scratch sizing
+        // shared scratch sizing, masked by per-tensor trainability:
+        // frozen weights never run norm/sum kernels, so they claim no
+        // Gram / stream / partials scratch — the AllocStats arena-peak
+        // drop for bias-only and LoRA runs comes from here. Recompute
+        // scratch (`attn`) stays unconditional: `backward_data` uses it
+        // even on fully frozen attention / LoRA layers.
+        let masks = spec.plan_masks();
+        debug_assert_eq!(masks.len(), stack.len());
         let mut max_dp = 1usize;
         let mut max_small = 1usize;
         let mut max_attn = 0usize;
@@ -366,37 +406,73 @@ impl NativeBackend {
         let mut need_stream_two = false;
         let mut need_stream_one = false;
         for (k, l) in stack.iter().enumerate() {
+            let mask = &masks[k];
             if let Some(d) = l.dims(t) {
                 match d.kind {
                     LayerKind::Norm => max_small = max_small.max(2 * d.p as usize),
                     LayerKind::Embedding => {}
+                    // the wpe norm is a plain Frobenius reduction and
+                    // its clipped sum a serial scatter: no shared scratch
+                    LayerKind::PosEmbedding => {}
                     LayerKind::Attention => {
                         // p encodes the head count; the widest projection
                         // is the fused QKV (d, 3d), and the recompute
                         // scratch holds [g_ao | g_qkv] = rows * 4d
                         let dm = d.d as usize;
-                        max_dp = max_dp.max(dm * 3 * dm);
                         max_small = max_small.max(3 * dm);
                         max_attn = max_attn.max(spec.batch * spec.seq * 4 * dm);
-                        if routes[k] == NormRoute::Ghost && t > 1 {
-                            need_gram = true;
+                        if mask[0] {
+                            max_dp = max_dp.max(dm * 3 * dm);
                         }
-                        if routes[k] == NormRoute::Inst {
-                            need_stream_two = true;
-                            need_stream_one = true;
+                        if mask[2] {
+                            max_dp = max_dp.max(dm * dm);
+                        }
+                        if mask[0] || mask[2] {
+                            if routes[k] == NormRoute::Ghost && t > 1 {
+                                need_gram = true;
+                            }
+                            if routes[k] == NormRoute::Inst {
+                                need_stream_two = true;
+                                need_stream_one = true;
+                            }
+                        }
+                    }
+                    LayerKind::Lora { rank } => {
+                        // recompute scratch holds [gA | gA·A^T] = rows*(r+d)
+                        let (dd, pp, r) = (d.d as usize, d.p as usize, rank as usize);
+                        max_small = max_small.max(pp);
+                        max_attn = max_attn.max(spec.batch * spec.seq * (r + dd));
+                        if mask[0] {
+                            max_dp = max_dp.max(dd * pp);
+                        }
+                        if mask[2] {
+                            max_dp = max_dp.max(dd * r);
+                        }
+                        if mask[3] {
+                            max_dp = max_dp.max(r * pp);
+                        }
+                        if mask[0] || mask[2] || mask[3] {
+                            if routes[k] == NormRoute::Ghost && t > 1 {
+                                need_gram = true;
+                            }
+                            if routes[k] == NormRoute::Inst {
+                                need_stream_two = true;
+                                need_stream_one = true;
+                            }
                         }
                     }
                     _ => {
-                        let dp = (d.d * d.p) as usize;
-                        max_dp = max_dp.max(dp);
                         max_small = max_small.max(d.p as usize);
-                        if routes[k] == NormRoute::Ghost && t > 1 {
-                            need_gram = true;
-                        }
-                        if routes[k] == NormRoute::Inst {
-                            need_stream_two = true;
-                            if !store_psg[k] {
-                                need_stream_one = true;
+                        if mask[0] {
+                            max_dp = max_dp.max((d.d * d.p) as usize);
+                            if routes[k] == NormRoute::Ghost && t > 1 {
+                                need_gram = true;
+                            }
+                            if routes[k] == NormRoute::Inst {
+                                need_stream_two = true;
+                                if !store_psg[k] {
+                                    need_stream_one = true;
+                                }
                             }
                         }
                     }
@@ -406,15 +482,29 @@ impl NativeBackend {
 
         let threads = if threads == 0 { par::default_threads() } else { threads };
         let info = spec.info();
-        let zeros = || -> Vec<Vec<f32>> {
-            info.param_names
-                .iter()
-                .map(|n| vec![0.0; info.param_shapes[n].iter().product()])
-                .collect()
-        };
-        let params = zeros();
+        debug_assert_eq!(info.trainable, slot_trainable);
+        // params are full-size for every slot (the forward reads frozen
+        // tensors); Adam moments exist only for trainable slots
+        let params: Vec<Vec<f32>> = info
+            .param_names
+            .iter()
+            .map(|n| vec![0.0; info.param_shapes[n].iter().product()])
+            .collect();
         let (opt_m, opt_v) = if info.is_adam() {
-            (zeros(), zeros())
+            let moments = || -> Vec<Vec<f32>> {
+                info.param_names
+                    .iter()
+                    .zip(&slot_trainable)
+                    .map(|(n, &tr)| {
+                        if tr {
+                            vec![0.0; info.param_shapes[n].iter().product()]
+                        } else {
+                            Vec::new()
+                        }
+                    })
+                    .collect()
+            };
+            (moments(), moments())
         } else {
             (Vec::new(), Vec::new())
         };
@@ -432,6 +522,8 @@ impl NativeBackend {
             store_psg,
             groups,
             residuals,
+            slot_trainable,
+            layer_trainable,
             finalize_at,
             unfused_schedule: false,
             last_peak_gcache: 0,
@@ -616,6 +708,7 @@ impl NativeBackend {
             routes: &self.routes,
             groups: &self.groups,
             residuals: &self.residuals,
+            trainable: &self.layer_trainable,
             ctx: self.ctx(),
         };
 
@@ -831,12 +924,23 @@ impl NativeBackend {
         }
         let adam = self.info.is_adam();
         for k in 0..n {
-            if grads[k].len() != self.params[k].len() {
+            // frozen slots expect zero-length grad/noise tensors and
+            // never touch the params or moments
+            let want = if self.slot_trainable[k] { self.params[k].len() } else { 0 };
+            if grads[k].len() != want {
                 bail!(
-                    "grad tensor {k} has {} elements, expected {}",
+                    "grad tensor {k} has {} elements, expected {want}",
                     grads[k].len(),
-                    self.params[k].len()
                 );
+            }
+            if !noise.is_empty() && noise[k].len() != want {
+                bail!(
+                    "noise tensor {k} has {} elements, expected {want}",
+                    noise[k].len(),
+                );
+            }
+            if !self.slot_trainable[k] {
+                continue;
             }
             let z = if noise.is_empty() { None } else { Some(noise[k].as_slice()) };
             if adam {
@@ -859,13 +963,21 @@ impl NativeBackend {
     }
 
     fn take_grad_bufs(&mut self) -> Vec<Vec<f32>> {
-        let sizes: Vec<usize> = self.params.iter().map(Vec::len).collect();
+        // frozen slots get the arena's zero-length placeholder — the
+        // walks never write them (the tape skips frozen layers)
+        let sizes: Vec<usize> = self
+            .params
+            .iter()
+            .zip(&self.slot_trainable)
+            .map(|(p, &tr)| if tr { p.len() } else { 0 })
+            .collect();
         sizes.into_iter().map(|n| self.arena.take(n)).collect()
     }
 
-    /// Clipping-group id of every trainable tensor, in state order
+    /// Clipping-group id of every canonical tensor, in state order
     /// (the differential test harness maps oracle gradients to groups
-    /// with this).
+    /// with this). Frozen tensors belong to no group; their entries are
+    /// a meaningless 0 and callers must mask by `info().trainable`.
     pub fn tensor_groups(&self) -> Vec<usize> {
         // canonical tensors only: an aliasing layer shares its owner's
         // slots (and, by construction, its clipping group)
@@ -910,6 +1022,7 @@ impl NativeBackend {
             routes: &self.routes,
             groups: &self.groups,
             residuals: &self.residuals,
+            trainable: &self.layer_trainable,
             ctx: self.ctx(),
         };
         let (mut acts, mut caches) = run.forward(&mut self.arena, input);
@@ -1036,6 +1149,7 @@ impl Backend for NativeBackend {
             routes: &self.routes,
             groups: &self.groups,
             residuals: &self.residuals,
+            trainable: &self.layer_trainable,
             ctx: self.ctx(),
         };
         let (mut acts, mut caches) = run.forward(&mut self.arena, input);
@@ -1072,8 +1186,13 @@ impl Backend for NativeBackend {
         // The gradient sums are handed to the caller (host-side
         // accumulation), so they are plain Vecs rather than arena
         // buffers — cloning out of the arena would cost the same
-        // allocation plus an extra copy.
-        let mut grads: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+        // allocation plus an extra copy. Frozen slots stay zero-length.
+        let mut grads: Vec<Vec<f32>> = self
+            .params
+            .iter()
+            .zip(&self.slot_trainable)
+            .map(|(p, &tr)| vec![0.0; if tr { p.len() } else { 0 }])
+            .collect();
         let out = self.compute_grads(x, y, clip, &mut grads)?;
         self.last_fresh = self.arena.fresh_allocs();
         Ok((grads, out))
@@ -1101,7 +1220,13 @@ impl Backend for NativeBackend {
         }
         for (k, t) in tensors.iter().enumerate() {
             let slot = k % n;
-            let want = self.params[slot].len();
+            // params are full-size for every slot; Adam moments are
+            // zero-length for frozen slots
+            let want = if k < n {
+                self.params[slot].len()
+            } else {
+                self.opt_m[slot].len()
+            };
             if t.len() != want {
                 bail!("state tensor {k} has {} elements, expected {want}", t.len());
             }
@@ -1129,6 +1254,8 @@ impl Backend for NativeBackend {
             arena_bytes: self.arena.total_bytes(),
             arena_peak_floats: self.arena.peak_outstanding_elems(),
             peak_gcache_floats: self.last_peak_gcache,
+            opt_state_floats: self.opt_m.iter().map(Vec::len).sum::<usize>()
+                + self.opt_v.iter().map(Vec::len).sum::<usize>(),
         }
     }
 }
@@ -1532,6 +1659,212 @@ mod tests {
         assert_eq!(la, lb);
         let mut c = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
         assert!(c.load_state(vec![vec![0.0; 1]]).is_err());
+    }
+
+    #[test]
+    fn bias_only_freezes_weights_and_trains() {
+        let mut spec = tiny_tok_spec();
+        spec.optimizer = "adam".into();
+        spec.trainable = "bias-only".into();
+        let (x, y) = batch_for(&spec, 31);
+        let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+        be.init(5).unwrap();
+        let info = be.info().clone();
+        // 1-D tensors train, 2-D tensors freeze
+        for (i, n) in info.param_names.iter().enumerate() {
+            assert_eq!(info.trainable[i], info.param_shapes[n].len() == 1, "{n}");
+        }
+        let before = be.state().unwrap();
+        let l0 = be.eval_loss(&x, &y).unwrap();
+        let mut h = hyper();
+        h.lr = 0.5;
+        for _ in 0..25 {
+            be.step(&x, &y, &[], &h).unwrap();
+        }
+        let l1 = be.eval_loss(&x, &y).unwrap();
+        assert!(l1 < l0, "bias-only loss should fall on a fixed batch: {l0} -> {l1}");
+        let after = be.state().unwrap();
+        let mut any_moved = false;
+        for (i, n) in info.param_names.iter().enumerate() {
+            if info.trainable[i] {
+                any_moved |= before[i] != after[i];
+            } else {
+                assert_eq!(before[i], after[i], "frozen tensor '{n}' moved");
+            }
+        }
+        assert!(any_moved, "no trainable tensor moved in 25 steps");
+    }
+
+    #[test]
+    fn lora_adapters_train_while_base_stays_frozen() {
+        let mut spec = tiny_gpt_spec();
+        spec.trainable = "lora:2".into();
+        let (x, y) = batch_for(&spec, 37);
+        let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+        be.init(5).unwrap();
+        let info = be.info().clone();
+        for (i, n) in info.param_names.iter().enumerate() {
+            assert_eq!(
+                info.trainable[i],
+                n.ends_with("_lora_a") || n.ends_with("_lora_b"),
+                "{n}"
+            );
+        }
+        let before = be.state().unwrap();
+        let l0 = be.eval_loss(&x, &y).unwrap();
+        let mut h = hyper();
+        h.lr = 0.5;
+        for _ in 0..40 {
+            be.step(&x, &y, &[], &h).unwrap();
+        }
+        let l1 = be.eval_loss(&x, &y).unwrap();
+        assert!(l1 < l0, "lora loss should fall on a fixed batch: {l0} -> {l1}");
+        let after = be.state().unwrap();
+        for (i, n) in info.param_names.iter().enumerate() {
+            if info.trainable[i] {
+                assert_ne!(before[i], after[i], "adapter '{n}' never moved");
+            } else {
+                assert_eq!(before[i], after[i], "frozen tensor '{n}' moved");
+            }
+        }
+    }
+
+    #[test]
+    fn wpe_model_trains_all_strategies() {
+        let mut spec = tiny_gpt_spec();
+        spec.wpe = true;
+        for strat in [Strategy::Opacus, Strategy::GhostClip, Strategy::Bk, Strategy::BkMixOpt] {
+            let (x, y) = batch_for(&spec, 41);
+            let mut be = NativeBackend::new(spec.clone(), strat, 2).unwrap();
+            be.init(5).unwrap();
+            let l0 = be.eval_loss(&x, &y).unwrap();
+            let mut h = hyper();
+            h.lr = 0.3;
+            for _ in 0..30 {
+                be.step(&x, &y, &[], &h).unwrap();
+            }
+            let l1 = be.eval_loss(&x, &y).unwrap();
+            assert!(l1 < l0, "{strat:?}: wpe loss should fall: {l0} -> {l1}");
+        }
+        // wpe without token input is a spec error
+        let mut s = tiny_spec();
+        s.wpe = true;
+        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        assert!(err.contains("wpe"), "{err}");
+    }
+
+    #[test]
+    fn masked_runs_reach_arena_steady_state() {
+        for (mut spec, preset) in [
+            (tiny_tok_spec(), "bias-only"),
+            (tiny_gpt_spec(), "lora:2"),
+            (tiny_tied_gpt_spec(), "bias-only"),
+        ] {
+            spec.trainable = preset.into();
+            for strat in [Strategy::Opacus, Strategy::GhostClip, Strategy::Bk, Strategy::BkMixOpt] {
+                for style in [ClippingStyle::AllLayer, ClippingStyle::LayerWise] {
+                    let (x, y) = batch_for(&spec, 9);
+                    let mut be =
+                        NativeBackend::with_style(spec.clone(), strat, style, 2).unwrap();
+                    be.init(1).unwrap();
+                    be.step(&x, &y, &[], &hyper()).unwrap();
+                    for _ in 0..3 {
+                        be.step(&x, &y, &[], &hyper()).unwrap();
+                        assert_eq!(
+                            be.alloc_stats().fresh_allocs_last_step,
+                            0,
+                            "{}/{preset}/{strat:?}/{style:?}: steady-state step must not allocate",
+                            spec.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_stacks_shrink_scratch_and_opt_state() {
+        // the frozen-layer skip must show up in measured allocation:
+        // bias-only drops the Gram/partials scratch (arena peak) and the
+        // frozen slots' Adam moments (opt_state_floats)
+        let mut full = tiny_gpt_spec();
+        full.optimizer = "adam".into();
+        let mut bias = full.clone();
+        bias.trainable = "bias-only".into();
+        let run = |spec: &NativeSpec| -> AllocStats {
+            let (x, y) = batch_for(spec, 43);
+            let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+            be.init(1).unwrap();
+            be.step(&x, &y, &[], &hyper()).unwrap();
+            be.alloc_stats()
+        };
+        let f = run(&full);
+        let b = run(&bias);
+        assert!(
+            b.arena_peak_floats < f.arena_peak_floats,
+            "bias-only arena peak {} must drop below full {}",
+            b.arena_peak_floats,
+            f.arena_peak_floats
+        );
+        assert!(
+            b.opt_state_floats < f.opt_state_floats,
+            "bias-only opt state {} must drop below full {}",
+            b.opt_state_floats,
+            f.opt_state_floats
+        );
+        // bias-only layers still book-keep their full-width output
+        // gradient (the bias sum reads it), so under flat clipping the
+        // g-cache peak matches full fine-tuning — it must not grow
+        assert!(
+            b.peak_gcache_floats <= f.peak_gcache_floats,
+            "bias-only g-cache peak {} must not exceed full {}",
+            b.peak_gcache_floats,
+            f.peak_gcache_floats
+        );
+        // lora freezes attention/norm/embedding outright — those layers
+        // keep no caches at all, so the peak strictly drops
+        let mut lora = full.clone();
+        lora.trainable = "lora:2".into();
+        let l = run(&lora);
+        assert!(
+            l.peak_gcache_floats < f.peak_gcache_floats,
+            "lora g-cache peak {} must drop below full {}",
+            l.peak_gcache_floats,
+            f.peak_gcache_floats
+        );
+        assert!(
+            l.opt_state_floats < f.opt_state_floats,
+            "lora opt state {} must drop below full {}",
+            l.opt_state_floats,
+            f.opt_state_floats
+        );
+    }
+
+    #[test]
+    fn mask_all_layers_is_fully_trainable_bitwise() {
+        // freezing nothing (a mask listing every parameterized layer)
+        // must be bitwise identical to the default fully trainable run
+        let spec = tiny_gpt_spec();
+        let all_names: Vec<String> = spec
+            .plan()
+            .iter()
+            .filter(|l| !l.param_names.is_empty())
+            .map(|l| l.name.clone())
+            .collect();
+        let mut masked = spec.clone();
+        masked.trainable = format!("mask:{}", all_names.join(","));
+        let (x, y) = batch_for(&spec, 47);
+        let run = |s: &NativeSpec| -> Vec<Vec<f32>> {
+            let mut be = NativeBackend::new(s.clone(), Strategy::Bk, 2).unwrap();
+            be.init(4).unwrap();
+            let mut out = StepOut::default();
+            for _ in 0..3 {
+                out = be.step(&x, &y, &[], &hyper()).unwrap();
+            }
+            assert!(out.mean_clip.is_finite());
+            be.state().unwrap()
+        };
+        assert_eq!(run(&spec), run(&masked), "explicit all-layer mask must match default");
     }
 
     #[test]

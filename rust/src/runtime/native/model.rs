@@ -16,8 +16,84 @@
 //! between the parameter census, the complexity dims, and the runtime.
 
 use crate::arch::{LayerDims, LayerKind};
+use crate::bail;
+use crate::error::Result;
 use crate::runtime::ModelInfo;
 use std::collections::BTreeMap;
+
+/// Parsed trainability preset (`NativeSpec::trainable`): which canonical
+/// tensors take gradients, noise, and optimizer state. Frozen tensors
+/// still forward (and `backward_data` still flows activation gradients
+/// through their layers) but contribute no per-sample norms, no clipped
+/// sums, no noise draws, and no opt state — the DP-PEFT contract
+/// (DESIGN.md §9).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Trainable {
+    /// Every tensor trains (the default; bitwise-identical to the
+    /// pre-mask backend).
+    All,
+    /// Only 1-D tensors train: biases and LayerNorm affines (BiTFiT).
+    BiasOnly,
+    /// Every `Linear` in the plan becomes a [`PlanOp::LoraLinear`] with
+    /// rank-`rank` adapters; only the adapters train, everything else
+    /// (embeddings, attention, norms, the frozen bases) is frozen.
+    Lora {
+        /// Adapter rank (`r ≪ d`, so ghost norms are always cheap).
+        rank: usize,
+    },
+    /// Exactly the named plan layers train (all their tensors); every
+    /// other layer is frozen. Aliasing layers (the tied head) follow
+    /// their owner and cannot be named independently.
+    Mask(Vec<String>),
+}
+
+impl Trainable {
+    /// Parse a preset string: `all` | `bias-only` | `lora:<rank>` |
+    /// `mask:<layer,layer,...>`. The empty string means `all`.
+    pub fn parse(s: &str) -> Result<Trainable> {
+        match s {
+            "" | "all" => Ok(Trainable::All),
+            "bias-only" => Ok(Trainable::BiasOnly),
+            _ => {
+                if let Some(r) = s.strip_prefix("lora:") {
+                    let rank: usize = r.parse().map_err(|_| {
+                        crate::anyhow!("bad LoRA rank '{r}' in trainable preset '{s}'")
+                    })?;
+                    if rank == 0 {
+                        bail!("LoRA rank must be > 0 in trainable preset '{s}'");
+                    }
+                    Ok(Trainable::Lora { rank })
+                } else if let Some(list) = s.strip_prefix("mask:") {
+                    let names: Vec<String> = list
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|n| !n.is_empty())
+                        .map(String::from)
+                        .collect();
+                    if names.is_empty() {
+                        bail!("trainable mask '{s}' names no layers");
+                    }
+                    Ok(Trainable::Mask(names))
+                } else {
+                    bail!(
+                        "unknown trainable preset '{s}' \
+                         (expected all | bias-only | lora:<rank> | mask:<layer,...>)"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Canonical string form (round-trips through [`Trainable::parse`]).
+    pub fn canonical(&self) -> String {
+        match self {
+            Trainable::All => "all".into(),
+            Trainable::BiasOnly => "bias-only".into(),
+            Trainable::Lora { rank } => format!("lora:{rank}"),
+            Trainable::Mask(names) => format!("mask:{}", names.join(",")),
+        }
+    }
+}
 
 /// One operation in a native layer stack.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,6 +141,29 @@ pub enum PlanOp {
         /// Output width = vocabulary size.
         p: usize,
     },
+    /// Learned positional embedding (GPT-2 `wpe`): adds a `(seq, dim)`
+    /// table row-wise to the sequence, `out[i, t, :] = x[i, t, :] +
+    /// W[t, :]`. Rows never collide across positions, so its per-sample
+    /// norm is the plain gradient Frobenius norm and backward to the
+    /// layer below is the identity.
+    PosEmbedding {
+        /// Table rows (= the spec's sequence length).
+        seq: usize,
+        /// Embedding dimension.
+        dim: usize,
+    },
+    /// LoRA-adapted linear (`trainable = "lora:<rank>"` rewrites every
+    /// plain `Linear` into this): a frozen `(d, p)` base W, b plus
+    /// trainable rank-`rank` adapters `A (d, rank)`, `B (rank, p)` —
+    /// `out = x·W + b + (x·A)·B`.
+    LoraLinear {
+        /// Input feature width.
+        d: usize,
+        /// Output feature width.
+        p: usize,
+        /// Adapter rank.
+        rank: usize,
+    },
 }
 
 /// One planned layer: the op plus its display / parameter names.
@@ -90,6 +189,8 @@ impl PlannedLayer {
             PlanOp::Relu { width } | PlanOp::LayerNorm { width } => width,
             PlanOp::Attention { d, .. } => d,
             PlanOp::TiedLinear { p, .. } => p,
+            PlanOp::PosEmbedding { dim, .. } => dim,
+            PlanOp::LoraLinear { p, .. } => p,
         }
     }
 
@@ -106,6 +207,10 @@ impl PlannedLayer {
                 vec![vec![d, 3 * d], vec![3 * d], vec![d, d], vec![d]]
             }
             PlanOp::TiedLinear { d, p } => vec![vec![p, d]],
+            PlanOp::PosEmbedding { seq, dim } => vec![vec![seq, dim]],
+            PlanOp::LoraLinear { d, p, rank } => {
+                vec![vec![d, p], vec![p], vec![d, rank], vec![rank, p]]
+            }
         }
     }
 
@@ -121,6 +226,10 @@ impl PlannedLayer {
             PlanOp::LayerNorm { width } => (LayerKind::Norm, width, width),
             PlanOp::Attention { d, heads } => (LayerKind::Attention, d, heads),
             PlanOp::TiedLinear { d, p } => (LayerKind::TiedLinear, d, p),
+            // d = p = dim; the table rows are the t axis (weight census
+            // is t*p — see `LayerDims::weight_params`)
+            PlanOp::PosEmbedding { dim, .. } => (LayerKind::PosEmbedding, dim, dim),
+            PlanOp::LoraLinear { d, p, rank } => (LayerKind::Lora { rank: rank as u64 }, d, p),
         };
         Some(LayerDims {
             kind,
@@ -173,6 +282,16 @@ pub struct NativeSpec {
     /// `(vocab, d_in)` embedding tensor, the shared tensor is counted
     /// once, and its per-sample norm includes the ghost cross term.
     pub tied: bool,
+    /// Insert a learned positional-embedding layer (`wpe`, a
+    /// `(seq, d_in)` table added row-wise) right after the token
+    /// embedding. Token models only (`vocab > 0`).
+    pub wpe: bool,
+    /// Trainability preset: `all` (default) | `bias-only` |
+    /// `lora:<rank>` | `mask:<layer,...>` — see [`Trainable::parse`].
+    /// `lora:<rank>` structurally rewrites every plain `Linear` of the
+    /// plan into a [`PlanOp::LoraLinear`]; the other presets only flag
+    /// tensors frozen. Validated by [`NativeSpec::trainable_preset`].
+    pub trainable: String,
 }
 
 impl Default for NativeSpec {
@@ -192,6 +311,8 @@ impl Default for NativeSpec {
             attn_heads: 0,
             ff: 0,
             tied: false,
+            wpe: false,
+            trainable: "all".into(),
         }
     }
 }
@@ -199,10 +320,29 @@ impl Default for NativeSpec {
 impl NativeSpec {
     /// The canonical layer walk: every other shape view derives from
     /// this one iterator, so layer kinds cannot drift between views.
+    /// The `lora:<rank>` trainability preset is *structural*: it
+    /// rewrites every plain `Linear` into a [`PlanOp::LoraLinear`]
+    /// carrying the frozen base tensors plus the trainable adapters.
     pub fn plan(&self) -> Vec<PlannedLayer> {
-        if self.blocks > 0 {
-            return self.transformer_plan();
+        let mut out = if self.blocks > 0 {
+            self.transformer_plan()
+        } else {
+            self.mlp_plan()
+        };
+        if let Ok(Trainable::Lora { rank }) = Trainable::parse(&self.trainable) {
+            for l in out.iter_mut() {
+                if let PlanOp::Linear { d, p } = l.op {
+                    l.op = PlanOp::LoraLinear { d, p, rank };
+                    l.param_names.push(format!("{}_lora_a", l.name));
+                    l.param_names.push(format!("{}_lora_b", l.name));
+                }
+            }
         }
+        out
+    }
+
+    /// The flat MLP / token-classifier plan (`blocks == 0`).
+    fn mlp_plan(&self) -> Vec<PlannedLayer> {
         let mut out = Vec::new();
         let mut d = self.d_in;
         let mut fc = 0usize;
@@ -226,6 +366,9 @@ impl NativeSpec {
                 param_names: vec!["emb_w".into()],
                 residual: None,
             });
+            if self.wpe {
+                self.push_wpe(&mut out);
+            }
             if self.layernorm {
                 push_ln(&mut out, &mut ln, d);
             }
@@ -283,6 +426,9 @@ impl NativeSpec {
             param_names: vec!["emb_w".into()],
             residual: None,
         });
+        if self.wpe {
+            self.push_wpe(&mut out);
+        }
         for bi in 0..self.blocks {
             let block_in = out.len();
             out.push(PlannedLayer {
@@ -363,6 +509,20 @@ impl NativeSpec {
         out
     }
 
+    /// The `wpe` positional-embedding layer, right after the token
+    /// embedding (GPT-2 order: `wte + wpe`, before any LayerNorm).
+    fn push_wpe(&self, out: &mut Vec<PlannedLayer>) {
+        out.push(PlannedLayer {
+            name: "wpe".into(),
+            op: PlanOp::PosEmbedding {
+                seq: self.seq,
+                dim: self.d_in,
+            },
+            param_names: vec!["wpe_w".into()],
+            residual: None,
+        });
+    }
+
     /// Per-linear-layer (d, p) width pairs, input to logits (derived
     /// view over [`NativeSpec::plan`]; linear layers only).
     pub fn layer_widths(&self) -> Vec<(usize, usize)> {
@@ -407,6 +567,21 @@ impl NativeSpec {
             .collect()
     }
 
+    /// Per-[`NativeSpec::arch_layers`]-entry trainability under this
+    /// spec's `trainable` preset: a layer counts as trainable when *any*
+    /// of its tensors does (a bias-only Linear still book-keeps its
+    /// full-width output gradient for `bias_grad`). Feed this to
+    /// [`crate::complexity::bk_gcache_floats_masked`] — the two vectors
+    /// are index-parallel by construction.
+    pub fn arch_layer_trainable(&self) -> Vec<bool> {
+        self.plan()
+            .iter()
+            .zip(self.plan_masks())
+            .filter(|(l, _)| l.dims(self.seq).is_some())
+            .map(|(_, mask)| mask.iter().any(|&f| f))
+            .collect()
+    }
+
     /// The complexity-side census of this spec: an [`crate::arch::Arch`]
     /// mirroring the plan layer by layer, with the same conventions
     /// `arch::language` uses for the real model zoo (notably the GPT-2
@@ -436,9 +611,161 @@ impl NativeSpec {
                 PlanOp::TiedLinear { d, p } => {
                     a.tied_linear(&l.name, t, d as u64, p as u64);
                 }
+                PlanOp::PosEmbedding { seq, dim } => {
+                    a.pos_embedding(&l.name, seq as u64, dim as u64);
+                }
+                PlanOp::LoraLinear { d, p, rank } => {
+                    a.lora_linear(&l.name, t, d as u64, p as u64, rank as u64, true);
+                }
             }
         }
         a
+    }
+
+    /// Per-plan-layer, per-tensor trainability flags under the spec's
+    /// `trainable` preset — parallel to [`NativeSpec::plan`] (one bool
+    /// per `param_names` entry). Aliasing layers (the tied head) carry
+    /// their owner's flags: a shared tensor has exactly one
+    /// trainability state. An unparseable preset degrades to
+    /// fully-trainable here; [`NativeSpec::trainable_preset`] is the
+    /// validating entry point.
+    pub fn plan_masks(&self) -> Vec<Vec<bool>> {
+        let preset = Trainable::parse(&self.trainable).unwrap_or(Trainable::All);
+        let plan = self.plan();
+        let mut by_name: BTreeMap<String, bool> = BTreeMap::new();
+        let mut out = Vec::with_capacity(plan.len());
+        for l in &plan {
+            let shapes = l.param_shapes();
+            let mut mask = Vec::with_capacity(shapes.len());
+            for (name, shape) in l.param_names.iter().zip(&shapes) {
+                let flag = if let Some(&f) = by_name.get(name) {
+                    // alias: the owner's flag, always
+                    f
+                } else {
+                    let f = match &preset {
+                        Trainable::All => true,
+                        // biases + LayerNorm affines: every 1-D tensor
+                        Trainable::BiasOnly => shape.len() == 1,
+                        // only the adapter pairs of the rewritten linears
+                        Trainable::Lora { .. } => {
+                            matches!(l.op, PlanOp::LoraLinear { .. })
+                                && (name.ends_with("_lora_a") || name.ends_with("_lora_b"))
+                        }
+                        Trainable::Mask(names) => names.iter().any(|n| n == &l.name),
+                    };
+                    by_name.insert(name.clone(), f);
+                    f
+                };
+                mask.push(flag);
+            }
+            out.push(mask);
+        }
+        out
+    }
+
+    /// Trainability flag per **canonical** tensor, in `info()` /
+    /// state-census order (the owner's flag; aliases share the slot).
+    pub fn slot_trainable(&self) -> Vec<bool> {
+        let plan = self.plan();
+        let masks = self.plan_masks();
+        let mut names: Vec<&String> = Vec::new();
+        let mut out = Vec::new();
+        for (l, m) in plan.iter().zip(&masks) {
+            for (name, &flag) in l.param_names.iter().zip(m) {
+                if !names.contains(&name) {
+                    names.push(name);
+                    out.push(flag);
+                }
+            }
+        }
+        out
+    }
+
+    /// Parameters the preset actually trains (canonical tensors only).
+    pub fn n_trainable_params(&self) -> usize {
+        let plan = self.plan();
+        let masks = self.plan_masks();
+        let mut seen: Vec<&String> = Vec::new();
+        let mut total = 0usize;
+        for (l, m) in plan.iter().zip(&masks) {
+            for ((name, shape), &flag) in l.param_names.iter().zip(l.param_shapes()).zip(m) {
+                if !seen.contains(&name) {
+                    seen.push(name);
+                    if flag {
+                        total += shape.iter().product::<usize>();
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Parse **and validate** the trainability preset against this
+    /// spec's plan: mask names must be real parameterized layers (and
+    /// owners, not aliases), `lora:` needs a linear to adapt, and the
+    /// preset must leave at least one tensor trainable. Backends call
+    /// this at construction; `fastdp` config validation calls it too.
+    pub fn trainable_preset(&self) -> Result<Trainable> {
+        let preset = Trainable::parse(&self.trainable)?;
+        let plan = self.plan();
+        match &preset {
+            Trainable::Mask(names) => {
+                for want in names {
+                    let Some(l) = plan.iter().find(|l| &l.name == want) else {
+                        let known: Vec<&str> = plan
+                            .iter()
+                            .filter(|l| !l.param_names.is_empty())
+                            .map(|l| l.name.as_str())
+                            .collect();
+                        bail!(
+                            "trainable mask names unknown layer '{want}' in model '{}' \
+                             (parameterized layers: {})",
+                            self.name,
+                            known.join(", ")
+                        );
+                    };
+                    if l.param_names.is_empty() {
+                        bail!(
+                            "trainable mask names stateless layer '{want}' in model '{}'",
+                            self.name
+                        );
+                    }
+                    // an aliasing layer repeats an earlier layer's tensor
+                    // name; its trainability is the owner's
+                    let aliased = l.param_names.iter().any(|n| {
+                        plan.iter()
+                            .take_while(|o| !std::ptr::eq(*o, l))
+                            .any(|o| o.param_names.contains(n))
+                    });
+                    if aliased {
+                        bail!(
+                            "trainable mask names aliasing layer '{want}' in model '{}' — \
+                             mask the layer owning '{}' instead",
+                            self.name,
+                            l.param_names[0]
+                        );
+                    }
+                }
+            }
+            Trainable::Lora { .. } => {
+                if !plan.iter().any(|l| matches!(l.op, PlanOp::LoraLinear { .. })) {
+                    bail!(
+                        "trainable preset '{}' on model '{}' finds no linear layer to adapt",
+                        self.trainable,
+                        self.name
+                    );
+                }
+            }
+            _ => {}
+        }
+        if !self.slot_trainable().iter().any(|&f| f) {
+            bail!(
+                "trainable preset '{}' freezes every tensor of model '{}'",
+                self.trainable,
+                self.name
+            );
+        }
+        Ok(preset)
     }
 
     /// Backend-neutral description (params in stack order: w0, b0, ...).
@@ -485,6 +812,12 @@ impl NativeSpec {
             param_names,
             param_shapes,
             n_params: self.n_params(),
+            trainable: self.slot_trainable(),
+            // same degrade-to-All policy as `plan_masks`; validation
+            // happens in `trainable_preset()` at backend construction
+            trainable_preset: Trainable::parse(&self.trainable)
+                .unwrap_or(Trainable::All)
+                .canonical(),
         }
     }
 
@@ -661,6 +994,63 @@ impl NativeSpec {
                 attn_heads: 4,
                 ff: 128,
                 tied: true,
+                ..NativeSpec::default()
+            },
+            // gpt_nano with a learned positional-embedding table (GPT-2
+            // wpe): exercises the PosEmbedding DpLayer whose rows never
+            // collide across positions, so its ghost norm is the plain
+            // gradient Frobenius norm.
+            NativeSpec {
+                name: "gpt_nano_wpe_e2e".into(),
+                batch: 8,
+                seq: 16,
+                d_in: 32,
+                hidden: Vec::new(),
+                n_classes: 64,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 64,
+                blocks: 2,
+                attn_heads: 4,
+                ff: 64,
+                wpe: true,
+                ..NativeSpec::default()
+            },
+            // LoRA fine-tune of gpt_nano: every Linear rewritten to a
+            // frozen base + rank-4 adapter pair, only adapters (and
+            // biases via their own mask state: frozen here) train.
+            NativeSpec {
+                name: "gpt_nano_lora_e2e".into(),
+                batch: 8,
+                seq: 16,
+                d_in: 32,
+                hidden: Vec::new(),
+                n_classes: 64,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 64,
+                blocks: 2,
+                attn_heads: 4,
+                ff: 64,
+                trainable: "lora:4".into(),
+                ..NativeSpec::default()
+            },
+            // Bigger LoRA workload for benching adapter ghost norms
+            // (rank 8 against d = 64 keeps 2T^2 vs d*r dispatch honest).
+            NativeSpec {
+                name: "gpt_nano_lora_bench".into(),
+                batch: 16,
+                seq: 32,
+                d_in: 64,
+                hidden: Vec::new(),
+                n_classes: 128,
+                optimizer: "adam".into(),
+                clip_fn: "automatic".into(),
+                vocab: 128,
+                blocks: 2,
+                attn_heads: 4,
+                ff: 128,
+                trainable: "lora:8".into(),
                 ..NativeSpec::default()
             },
         ]
@@ -919,5 +1309,159 @@ mod tests {
             .find(|l| l.kind == LayerKind::Attention)
             .unwrap();
         assert!(ghost_preferred(&attn_b));
+    }
+
+    #[test]
+    fn wpe_plan_inserts_position_table_after_embedding() {
+        let s = NativeSpec::by_name("gpt_nano_wpe_e2e").unwrap();
+        let base = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        let plan = s.plan();
+        assert_eq!(plan.len(), base.plan().len() + 1);
+        assert!(matches!(plan[0].op, PlanOp::Embedding { vocab: 64, dim: 32 }));
+        assert!(matches!(plan[1].op, PlanOp::PosEmbedding { seq: 16, dim: 32 }));
+        assert_eq!(plan[1].name, "wpe");
+        assert_eq!(plan[1].param_names, vec!["wpe_w".to_string()]);
+        assert_eq!(plan[1].param_shapes(), vec![vec![16, 32]]);
+        // residual markers shift by one against the wpe-less plan
+        assert_eq!(plan[3].residual, Some(2), "attn skip from the block input");
+        // census: exactly seq * d more parameters than the base model
+        assert_eq!(s.n_params(), base.n_params() + 16 * 32);
+        assert_eq!(s.arch().total_params() as usize, s.n_params());
+        // rows never collide -> plain-gradient ghost norm is always the
+        // cheap route for the position table
+        let arch = s.arch_layers();
+        let wpe = arch.iter().find(|l| l.kind == LayerKind::PosEmbedding).unwrap();
+        assert_eq!((wpe.t, wpe.d, wpe.p), (16, 32, 32));
+    }
+
+    #[test]
+    fn lora_plan_rewrites_every_linear() {
+        let s = NativeSpec::by_name("gpt_nano_lora_e2e").unwrap();
+        let base = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        let plan = s.plan();
+        assert_eq!(plan.len(), base.plan().len());
+        let loras: Vec<_> = plan
+            .iter()
+            .filter(|l| matches!(l.op, PlanOp::LoraLinear { .. }))
+            .collect();
+        // 2 blocks * (fc1, fc2) + head
+        assert_eq!(loras.len(), 5);
+        assert!(!plan.iter().any(|l| matches!(l.op, PlanOp::Linear { .. })));
+        // each rewritten layer carries base w, b + adapters a, b
+        let head = plan.last().unwrap();
+        assert!(matches!(head.op, PlanOp::LoraLinear { d: 32, p: 64, rank: 4 }));
+        assert_eq!(
+            head.param_names,
+            vec!["head_w", "head_b", "head_lora_a", "head_lora_b"]
+        );
+        assert_eq!(
+            head.param_shapes(),
+            vec![vec![32, 64], vec![64], vec![32, 4], vec![4, 64]]
+        );
+        // census: base params + rank * (d + p) per rewritten linear
+        let adapters = 4 * (32 + 64) + 4 * (64 + 32) + 4 * (32 + 64) + 4 * (64 + 32) + 4 * (32 + 64);
+        assert_eq!(s.n_params(), base.n_params() + adapters);
+        assert_eq!(s.arch().total_params() as usize, s.n_params());
+        // only the adapter pairs are trainable
+        let masks = s.plan_masks();
+        for (l, m) in plan.iter().zip(&masks) {
+            for (name, &flag) in l.param_names.iter().zip(m) {
+                let is_adapter = name.ends_with("_lora_a") || name.ends_with("_lora_b");
+                assert_eq!(flag, is_adapter, "{name}");
+            }
+        }
+        assert_eq!(s.n_trainable_params(), adapters);
+    }
+
+    #[test]
+    fn trainable_presets_parse_and_mask() {
+        assert!(matches!(Trainable::parse("all"), Ok(Trainable::All)));
+        assert!(matches!(Trainable::parse(""), Ok(Trainable::All)));
+        assert!(matches!(Trainable::parse("bias-only"), Ok(Trainable::BiasOnly)));
+        assert!(matches!(Trainable::parse("lora:4"), Ok(Trainable::Lora { rank: 4 })));
+        assert!(Trainable::parse("lora:0").is_err());
+        assert!(Trainable::parse("lora:x").is_err());
+        assert!(Trainable::parse("frozen-ish").is_err());
+        let Ok(Trainable::Mask(names)) = Trainable::parse("mask:emb, fc0") else {
+            panic!("mask parse");
+        };
+        assert_eq!(names, vec!["emb".to_string(), "fc0".to_string()]);
+        assert!(Trainable::parse("mask:").is_err());
+        assert_eq!(Trainable::parse("lora:4").unwrap().canonical(), "lora:4");
+
+        // bias-only: every 1-D tensor (biases + LN affines) trains
+        let mut s = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        s.trainable = "bias-only".into();
+        let plan = s.plan();
+        for (l, m) in plan.iter().zip(s.plan_masks()) {
+            for (shape, flag) in l.param_shapes().iter().zip(m) {
+                assert_eq!(flag, shape.len() == 1);
+            }
+        }
+        let info = s.info();
+        let n_bias: usize = info
+            .param_names
+            .iter()
+            .zip(&info.trainable)
+            .filter(|(_, &f)| f)
+            .map(|(n, _)| info.param_shapes[n].iter().product::<usize>())
+            .sum();
+        assert_eq!(s.n_trainable_params(), n_bias);
+        assert!(n_bias > 0 && n_bias < s.n_params());
+        assert!(s.trainable_preset().is_ok());
+    }
+
+    #[test]
+    fn mask_preset_validation_names_the_problem() {
+        let mut s = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        s.trainable = "mask:head".into();
+        let masks = s.plan_masks();
+        let plan = s.plan();
+        for (l, m) in plan.iter().zip(&masks) {
+            let want = l.name == "head";
+            assert!(m.iter().all(|&f| f == want), "{}", l.name);
+        }
+        assert!(s.trainable_preset().is_ok());
+        // unknown layer
+        s.trainable = "mask:nope".into();
+        let err = s.trainable_preset().unwrap_err().to_string();
+        assert!(err.contains("unknown layer 'nope'"), "{err}");
+        assert!(err.contains("head"), "lists parameterized layers: {err}");
+        // stateless layer
+        s.trainable = "mask:b0_relu".into();
+        let err = s.trainable_preset().unwrap_err().to_string();
+        assert!(err.contains("stateless layer"), "{err}");
+        // aliasing layer: the tied head does not own its tensor
+        let mut tied = NativeSpec::by_name("gpt_nano_tied_e2e").unwrap();
+        tied.trainable = "mask:head".into();
+        let err = tied.trainable_preset().unwrap_err().to_string();
+        assert!(err.contains("aliasing layer 'head'"), "{err}");
+        assert!(err.contains("emb_w"), "{err}");
+        // masking the owner instead is fine, and the alias inherits
+        tied.trainable = "mask:emb".into();
+        assert!(tied.trainable_preset().is_ok());
+        let masks = tied.plan_masks();
+        assert_eq!(masks.last().unwrap(), &vec![true], "alias inherits owner flag");
+        // lora on a model with no linear to adapt
+        let mut emb_only = NativeSpec {
+            name: "embless".into(),
+            ..NativeSpec::by_name("mlp_e2e").unwrap()
+        };
+        emb_only.trainable = "lora:2".into();
+        // mlp has linears, so this one is fine; freeze-everything is not
+        assert!(emb_only.trainable_preset().is_ok());
+    }
+
+    #[test]
+    fn all_trainable_masks_are_all_true() {
+        // the default preset must leave every census view untouched
+        for spec in NativeSpec::registry() {
+            if spec.trainable != "all" {
+                continue;
+            }
+            assert!(spec.slot_trainable().iter().all(|&f| f), "{}", spec.name);
+            assert_eq!(spec.n_trainable_params(), spec.n_params(), "{}", spec.name);
+            assert_eq!(spec.info().trainable.len(), spec.info().param_names.len());
+        }
     }
 }

@@ -374,6 +374,55 @@ mod tests {
     }
 
     #[test]
+    fn masked_sharded_fold_ships_no_frozen_grads() {
+        // Frozen slots carry zero-length grads end to end: shards ship
+        // nothing for them, the rank-0 fold keeps them empty, and the
+        // broadcast update leaves every replica bitwise identical to
+        // the 1-shard masked run.
+        let mk_masked = |n_shards: usize| {
+            let mut spec = NativeSpec::by_name("mlp_e2e").unwrap();
+            spec.trainable = "bias-only".into();
+            ShardedRun::new(
+                spec,
+                Strategy::Bk,
+                ClippingStyle::AllLayer,
+                2,
+                &Dispatch::Formula,
+                n_shards,
+            )
+            .unwrap()
+        };
+        let mut run = mk_masked(3);
+        run.init(13).unwrap();
+        let mut solo = mk_masked(1);
+        solo.init(13).unwrap();
+        let mut rng = Xoshiro256::new(17);
+        let info = run.info().clone();
+        let batches: Vec<_> = (0..4).map(|_| batch_for(&info, &mut rng)).collect();
+        let (g_n, o_n) = run.sharded_grads(&batches, 1.0).unwrap();
+        let (g_1, o_1) = solo.sharded_grads(&batches, 1.0).unwrap();
+        assert_eq!(g_n, g_1, "masked grads diverged");
+        assert_eq!(o_n.loss.to_bits(), o_1.loss.to_bits());
+        for (len, tr) in g_n.iter().map(Vec::len).zip(&info.trainable) {
+            assert_eq!(len == 0, !tr, "frozen slots must reduce as zero-length");
+        }
+        assert!(g_n.iter().any(|g| g.is_empty()), "bias-only must freeze weights");
+        let h = StepHyper {
+            lr: 0.1,
+            clip: 1.0,
+            sigma_r: 0.0,
+            logical_batch: (info.batch * batches.len()) as f32,
+            step: 1.0,
+        };
+        run.apply_update(&g_n, &[], &h).unwrap();
+        solo.apply_update(&g_1, &[], &h).unwrap();
+        let s0 = solo.shards[0].state().unwrap();
+        for (i, shard) in run.shards.iter().enumerate() {
+            assert_eq!(s0, shard.state().unwrap(), "masked replica {i} diverged");
+        }
+    }
+
+    #[test]
     fn sharded_matches_sequential_fold_bitwise() {
         // K=5 micro-batches: ragged over N=2 (3+2) and N=3 (2+2+1),
         // idle shards at N=7. The full N x K matrix lives in

@@ -197,6 +197,9 @@ pub fn model_info(meta: &ModelMeta) -> ModelInfo {
         param_names: meta.param_names.clone(),
         param_shapes: meta.param_shapes.clone().into_iter().collect(),
         n_params: meta.n_params,
+        // pjrt artifacts predate the trainability plane: fully trainable
+        trainable: vec![true; meta.param_names.len()],
+        trainable_preset: "all".into(),
     }
 }
 

@@ -180,6 +180,75 @@ fn tied_gpt_round_trips_through_a_checkpoint() {
 }
 
 #[test]
+fn trainability_drift_is_refused_by_name() {
+    // Budget spent releasing bias-only gradients must not silently
+    // continue as a full fine-tune: the fingerprint records the
+    // canonical preset and resume names both sides of the drift.
+    let dir = tmpdir("maskdrift");
+    let mut cfg = cfg_for("mlp_e2e", 2);
+    cfg.trainable = "bias-only".into();
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 2;
+    Trainer::new(cfg.clone()).unwrap().run().unwrap();
+
+    cfg.trainable = String::new(); // registry default: fully trainable
+    let mut t = Trainer::new(cfg).unwrap();
+    let err = t.init().unwrap_err().to_string();
+    assert!(err.contains("fingerprint mismatch"), "{err}");
+    assert!(err.contains("trainable 'bias-only' vs run 'all'"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn masked_adam_run_resumes_bitwise() {
+    // Zero-length frozen moments round-trip through the v2 container:
+    // a LoRA registry model (frozen base + trainable adapters, Adam)
+    // checkpoints mid-run and the resumed trajectory stays bitwise.
+    let dir = tmpdir("maskedresume");
+    let mut cfg = cfg_for("gpt_nano_lora_e2e", 4);
+    cfg.lr = 1e-2;
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 2;
+    let mut a = Trainer::new(cfg.clone()).unwrap();
+    a.init().unwrap();
+    a.train_step().unwrap();
+    a.train_step().unwrap(); // checkpoint lands here
+
+    let full = a.backend.state().unwrap();
+    let n = a.info.param_names.len();
+    assert_eq!(full.len(), 3 * n, "Adam state must be params + m + v");
+    let frozen = a.info.trainable.iter().filter(|&&tr| !tr).count();
+    assert!(frozen > 0, "lora preset must freeze base tensors");
+    for (i, tr) in a.info.trainable.iter().enumerate() {
+        assert_eq!(
+            full[n + i].is_empty(),
+            !tr,
+            "moment {i} must be zero-length iff frozen"
+        );
+    }
+
+    let mut b = Trainer::new(cfg).unwrap();
+    b.init().unwrap();
+    assert_states_equal(&full, &b.backend.state().unwrap(), "masked resume");
+    for _ in 0..2 {
+        a.train_step().unwrap();
+        b.train_step().unwrap();
+    }
+    assert_states_equal(
+        &a.backend.state().unwrap(),
+        &b.backend.state().unwrap(),
+        "masked continuation parity",
+    );
+    assert!(a.epsilon().to_bits() == b.epsilon().to_bits());
+    let fp = checkpoint::read(&checkpoint::latest(&dir).unwrap())
+        .unwrap()
+        .fingerprint
+        .expect("v2 fingerprint");
+    assert_eq!(fp.trainable, "lora:4");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn inspecting_a_v2_file_reports_integrity_fields() {
     let dir = tmpdir("inspect");
     let mut cfg = cfg_for("mlp_e2e", 2);

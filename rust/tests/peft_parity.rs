@@ -1,0 +1,234 @@
+//! Trainability-plane acceptance tests.
+//!
+//! Two guarantees, pinned over the whole registry:
+//!
+//! 1. **Masking is exact, not approximate** — a `mask:` preset that
+//!    names every owner layer is the identity: parameters, per-group
+//!    clip factors, and the accountant's epsilon are BITWISE equal to
+//!    the fully-trainable run, for every registry model under every
+//!    clipping style and every strategy. The mask plumbing (slot
+//!    gating, group formation over trainable owners, zero-length
+//!    buffers) must never perturb the arithmetic of what does train.
+//!
+//! 2. **Frozen layers provably skip work** — the complexity engine's
+//!    masked predictions AND the backend's measured `AllocStats` both
+//!    drop for bias-only / LoRA presets against the full fine-tune,
+//!    and the measured fused g-cache peak matches the masked
+//!    prediction (two independent codepaths).
+//!
+//! No artifacts, no XLA: runs offline.
+
+use fastdp::complexity::{
+    bk_gcache_floats_masked, ClippingStyle, Strategy, ALL_STRATEGIES,
+};
+use fastdp::config::TrainConfig;
+use fastdp::coordinator::Trainer;
+use fastdp::runtime::native::model::NativeSpec;
+use fastdp::runtime::native::NativeBackend;
+use fastdp::runtime::{Backend, BatchX, StepHyper};
+use fastdp::util::rng::Xoshiro256;
+
+const STYLES: [ClippingStyle; 3] = [
+    ClippingStyle::AllLayer,
+    ClippingStyle::LayerWise,
+    ClippingStyle::GroupWise(2),
+];
+
+/// `mask:` preset string naming every owner parameterized layer of the
+/// spec's plan — the "freeze nothing" mask.
+fn mask_all(spec: &NativeSpec) -> String {
+    let plan = spec.plan();
+    let mut seen: Vec<String> = Vec::new();
+    let mut owners: Vec<String> = Vec::new();
+    for l in &plan {
+        if l.param_names.is_empty() {
+            continue;
+        }
+        let owned = l.param_names.iter().all(|n| !seen.contains(n));
+        seen.extend(l.param_names.iter().cloned());
+        if owned {
+            owners.push(l.name.clone());
+        }
+    }
+    format!("mask:{}", owners.join(","))
+}
+
+fn batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
+    let rows = spec.batch * spec.seq;
+    let mut rng = Xoshiro256::new(seed);
+    let x = if spec.vocab > 0 {
+        BatchX::I32((0..rows).map(|_| rng.next_below(spec.vocab as u64) as i32).collect())
+    } else {
+        BatchX::F32((0..rows * spec.d_in).map(|_| rng.next_f32() - 0.5).collect())
+    };
+    let y: Vec<i32> = (0..rows)
+        .map(|_| rng.next_below(spec.n_classes as u64) as i32)
+        .collect();
+    (x, y)
+}
+
+/// One training step; returns (full state — params plus any Adam
+/// moments, so optimizer-state divergence is caught too — and the
+/// per-group clip factors).
+fn run_step(
+    spec: &NativeSpec,
+    strategy: Strategy,
+    style: ClippingStyle,
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let mut be = NativeBackend::with_style(spec.clone(), strategy, style, 2).unwrap();
+    be.init(29).unwrap();
+    let h = StepHyper {
+        lr: 0.2,
+        clip: 1.0,
+        sigma_r: 0.0,
+        logical_batch: spec.batch as f32,
+        step: 1.0,
+    };
+    let (x, y) = batch_for(spec, 41);
+    let out = be.step(&x, &y, &[], &h).unwrap();
+    (be.state().unwrap(), out.group_clip)
+}
+
+#[test]
+fn mask_naming_every_layer_is_bitwise_identity_across_registry() {
+    // Every registry model (LoRA registry variants included: both
+    // sides run from trainable = "all", so the comparison is the plain
+    // Linear plan) x every style x every strategy.
+    for spec in NativeSpec::registry() {
+        let mut base = spec.clone();
+        base.trainable = "all".into();
+        base.batch = base.batch.min(2); // keep the sweep cheap
+        let mut masked = base.clone();
+        masked.trainable = mask_all(&base);
+        assert!(
+            masked.slot_trainable().iter().all(|&f| f),
+            "{}: mask-all must freeze nothing",
+            spec.name
+        );
+        for strategy in ALL_STRATEGIES {
+            for style in STYLES {
+                let (s_base, c_base) = run_step(&base, strategy, style);
+                let (s_mask, c_mask) = run_step(&masked, strategy, style);
+                assert_eq!(
+                    s_base, s_mask,
+                    "{}/{strategy:?}/{style:?}: mask-all state diverged",
+                    spec.name
+                );
+                assert_eq!(c_base.len(), c_mask.len());
+                assert!(
+                    c_base.iter().zip(&c_mask).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{}/{strategy:?}/{style:?}: clip factors diverged: {c_base:?} vs {c_mask:?}",
+                    spec.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mask_all_trainer_run_matches_epsilon_and_params_bitwise() {
+    // Coordinator-level identity: same noise draws (frozen-slot streams
+    // are keyed by slot index), same accountant trajectory, same final
+    // parameters.
+    for model in ["mlp_e2e", "seq_tok_e2e", "gpt_nano_tied_e2e"] {
+        let spec = NativeSpec::by_name(model).unwrap();
+        let mk_cfg = |trainable: String| {
+            let mut cfg = TrainConfig::default();
+            cfg.model = model.into();
+            cfg.strategy = "bk".into();
+            cfg.steps = 4;
+            cfg.lr = 0.3;
+            cfg.clip = 1.0;
+            cfg.log_every = 0;
+            cfg.privacy.sigma = 0.8;
+            cfg.privacy.dataset_size = 50_000;
+            cfg.privacy.strict_budget = false;
+            cfg.trainable = trainable;
+            cfg
+        };
+        let mut base = Trainer::new(mk_cfg(String::new())).unwrap();
+        let rb = base.run().unwrap();
+        let mut masked = Trainer::new(mk_cfg(mask_all(&spec))).unwrap();
+        let rm = masked.run().unwrap();
+        assert_eq!(
+            rb.final_epsilon.to_bits(),
+            rm.final_epsilon.to_bits(),
+            "{model}: epsilon diverged"
+        );
+        assert_eq!(rb.final_loss.to_bits(), rm.final_loss.to_bits(), "{model}: loss diverged");
+        assert_eq!(
+            base.backend.state().unwrap(),
+            masked.backend.state().unwrap(),
+            "{model}: parameters diverged"
+        );
+    }
+}
+
+#[test]
+fn frozen_presets_shrink_predictions_and_measurements() {
+    // gpt_nano_e2e under full / bias-only / lora:2 — the complexity
+    // engine's masked g-cache prediction must match the backend's
+    // measured fused peak (independent codepaths), and the frozen
+    // presets must measurably shrink optimizer state and trainable
+    // census. LoRA freezes whole layers (attention, LN, embedding), so
+    // its g-cache peak drops strictly; bias-only layers still book-keep
+    // their full-width output gradient, so its peak only never grows.
+    let mk = |preset: &str| {
+        let mut s = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        s.trainable = preset.into();
+        s
+    };
+    let run = |spec: &NativeSpec, style: ClippingStyle| {
+        let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+        be.init(5).unwrap();
+        let h = StepHyper {
+            lr: 0.1,
+            clip: 1.0,
+            sigma_r: 0.0,
+            logical_batch: spec.batch as f32,
+            step: 1.0,
+        };
+        let (x, y) = batch_for(spec, 23);
+        be.step(&x, &y, &[], &h).unwrap();
+        (be.peak_gcache_floats() as f64, be.alloc_stats())
+    };
+    for style in [ClippingStyle::AllLayer, ClippingStyle::LayerWise] {
+        let full = mk("all");
+        let bias = mk("bias-only");
+        let lora = mk("lora:2");
+        let (g_full, a_full) = run(&full, style);
+        let (g_bias, a_bias) = run(&bias, style);
+        let (g_lora, a_lora) = run(&lora, style);
+
+        // measured == predicted, per variant (1% band, exact in practice)
+        for (spec, measured) in [(&full, g_full), (&bias, g_bias), (&lora, g_lora)] {
+            let predicted = bk_gcache_floats_masked(
+                style,
+                spec.batch as f64,
+                &spec.arch_layers(),
+                &spec.arch_layer_trainable(),
+            );
+            assert!(
+                (measured - predicted).abs() <= 0.01 * predicted,
+                "{}/{style:?}: measured g-cache {measured} vs masked prediction {predicted}",
+                spec.trainable
+            );
+        }
+
+        // frozen presets skip work, measured
+        assert!(g_lora < g_full, "{style:?}: lora g-cache must drop ({g_lora} vs {g_full})");
+        assert!(g_bias <= g_full, "{style:?}: bias-only g-cache must never grow");
+        assert!(
+            a_bias.opt_state_floats < a_full.opt_state_floats,
+            "{style:?}: bias-only Adam state must shrink"
+        );
+        assert!(
+            a_lora.opt_state_floats < a_full.opt_state_floats,
+            "{style:?}: lora Adam state must shrink"
+        );
+
+        // and predicted: the trainable census orders the same way
+        assert!(bias.n_trainable_params() < full.n_trainable_params());
+        assert!(lora.n_trainable_params() < full.n_trainable_params());
+    }
+}

@@ -4,8 +4,10 @@
 //! (plain MLP, token models with Embedding/LayerNorm, GPT-style
 //! transformer blocks with causal attention, half of them with the
 //! vocab head weight-tied to the embedding), sequence length T,
-//! clipping style, and strategy all drawn from a seeded RNG — and
-//! asserts that the tape's per-sample squared gradient norms
+//! clipping style, strategy, and trainability preset (fully trainable,
+//! bias-only, LoRA rewrites, random owner-layer masks) all drawn from a
+//! seeded RNG — and asserts that the tape's per-sample squared gradient
+//! norms
 //! ([`NativeBackend::per_sample_sq_norms`], the ghost-norm /
 //! instantiation machinery the clip factors derive from) match a
 //! **materialized per-sample oracle**: each sample's gradient is
@@ -121,6 +123,38 @@ fn random_case(rng: &mut Xoshiro256, idx: usize) -> Case {
             }
         }
     };
+    let mut spec = spec;
+    // trainability preset: most stacks freeze a strict subset — the
+    // tape must skip frozen tensors everywhere (norms, groups, sums)
+    // and the materialized oracle sees the same frozen set as empty
+    // batch-1 gradients, so a mask leak on either side is a mismatch
+    spec.trainable = match rng.next_below(4) {
+        0 => "bias-only".into(),
+        1 => format!("lora:{}", below(rng, 1, 3)),
+        2 => {
+            // random subset of owner parameterized layers (aliasing
+            // layers — the tied head — are rejected by validation and
+            // inherit their owner's flag anyway)
+            let plan = spec.plan();
+            let mut seen: Vec<String> = Vec::new();
+            let mut picked: Vec<String> = Vec::new();
+            for l in &plan {
+                if l.param_names.is_empty() {
+                    continue;
+                }
+                let owned = l.param_names.iter().all(|n| !seen.contains(n));
+                seen.extend(l.param_names.iter().cloned());
+                if owned && rng.next_below(2) == 0 {
+                    picked.push(l.name.clone());
+                }
+            }
+            if picked.is_empty() { "all".into() } else { format!("mask:{}", picked.join(",")) }
+        }
+        _ => "all".into(),
+    };
+    if spec.trainable_preset().is_err() {
+        spec.trainable = "all".into();
+    }
     let strategy = STRATEGIES[rng.next_below(STRATEGIES.len() as u64) as usize];
     let style = match rng.next_below(4) {
         0 => ClippingStyle::AllLayer,
@@ -198,6 +232,10 @@ fn check_case(case: &Case) -> Result<(), String> {
             .clipped_grads(&xi, &yi, 1.0)
             .map_err(|e| format!("oracle backward: {e}"))?;
         for (kt, g) in grads.iter().enumerate() {
+            // frozen slots come back zero-length from the masked
+            // backward, so they contribute 0 to their (meaningless)
+            // group entry — the oracle norms cover the trainable set
+            // exactly like the tape's
             let acc: f64 = g.iter().map(|&v| (v as f64) * (v as f64)).sum();
             want[tensor_groups[kt] * b + i] += acc;
         }
@@ -270,7 +308,13 @@ fn shrink_candidates(c: &Case) -> Vec<Case> {
         s.shards = 1;
         out.push(s);
     }
-    let mut push = |spec: NativeSpec, strategy: Strategy, style: ClippingStyle| {
+    let mut push = |mut spec: NativeSpec, strategy: Strategy, style: ClippingStyle| {
+        // structural shrinks can orphan a mask preset (a named layer
+        // disappears); degrade to fully trainable rather than adopting
+        // a build error as the "minimal failure"
+        if spec.trainable_preset().is_err() {
+            spec.trainable = "all".into();
+        }
         out.push(Case {
             spec,
             strategy,
@@ -284,6 +328,14 @@ fn shrink_candidates(c: &Case) -> Vec<Case> {
     }
     if c.style != ClippingStyle::AllLayer {
         push(c.spec.clone(), c.strategy, ClippingStyle::AllLayer);
+    }
+    if c.spec.trainable != "all" {
+        // unfreeze-all / strip-LoRA: if the failure survives fully
+        // trainable the bug is in the tape itself, not the mask plumbing
+        // (for LoRA this also rewrites the plan back to plain Linears)
+        let mut s = c.spec.clone();
+        s.trainable = "all".into();
+        push(s, c.strategy, c.style);
     }
     if c.spec.batch > 1 {
         let mut s = c.spec.clone();
@@ -390,7 +442,7 @@ fn run_stacks(n: usize) {
             );
         }
         eprintln!(
-            "stack {idx:>3} ok in {:>8.2?}  ({} B={} T={} blocks={} {:?} {} shards={})",
+            "stack {idx:>3} ok in {:>8.2?}  ({} B={} T={} blocks={} {:?} {} shards={} trainable={})",
             t0.elapsed(),
             if case.spec.tied {
                 "gpt-tied"
@@ -407,6 +459,7 @@ fn run_stacks(n: usize) {
             case.strategy,
             case.style.name(),
             case.shards,
+            case.spec.trainable,
         );
     }
 }
