@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Generate golden reference values for the native conv/pool kernels
+(rust/tests/conv_golden.rs).
+
+Mirrors the Rust kernel semantics exactly:
+
+* ``unfold`` (im2col): x is HWC ``(b, h*w, cin)``; patches are
+  ``(b, t, k*k*cin)`` with t = output spatial positions and patch
+  element order ``(ky, kx, ci)``. Out-of-bounds taps (zero padding)
+  contribute zeros.
+* conv forward: ``out = patches @ W + bias`` with W ``(cin*k^2, cout)``
+  — the same plain linear contraction the ghost-norm / instantiation
+  kernels consume.
+* conv backward data: ``fold(g @ W^T)`` — fold is the exact transpose
+  of unfold (overlapping receptive fields accumulate).
+* ``avgpool2d`` / ``maxpool2d``: non-overlapping win x win windows over
+  HWC; max backward routes to the *first* window element attaining the
+  max in scan order (the Rust kernels recompute the argmax with a
+  strict ``>``).
+
+The conv backward (both dx and the per-sample weight gradient) is
+validated against central finite differences before the constants are
+emitted, so the committed goldens pin a *checked* derivation. Also
+emits the materialized f64 per-sample weight-gradient norms the
+ghost-norm Gram path must reproduce.
+"""
+
+import numpy as np
+
+
+def unfold(x, b, cin, h, w, k, stride, pad):
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    t = ho * wo
+    out = np.zeros((b, t, k * k * cin))
+    xs = x.reshape(b, h, w, cin)
+    for i in range(b):
+        for oy in range(ho):
+            for ox in range(wo):
+                for ky in range(k):
+                    iy = oy * stride + ky - pad
+                    for kx in range(k):
+                        ix = ox * stride + kx - pad
+                        if 0 <= iy < h and 0 <= ix < w:
+                            cell = (ky * k + kx) * cin
+                            out[i, oy * wo + ox, cell : cell + cin] = xs[i, iy, ix]
+    return out
+
+
+def fold(patches, b, cin, h, w, k, stride, pad):
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    dx = np.zeros((b, h, w, cin))
+    for i in range(b):
+        for oy in range(ho):
+            for ox in range(wo):
+                row = patches[i, oy * wo + ox]
+                for ky in range(k):
+                    iy = oy * stride + ky - pad
+                    if not 0 <= iy < h:
+                        continue
+                    for kx in range(k):
+                        ix = ox * stride + kx - pad
+                        if not 0 <= ix < w:
+                            continue
+                        cell = (ky * k + kx) * cin
+                        dx[i, iy, ix] += row[cell : cell + cin]
+    return dx.reshape(b, h * w * cin)
+
+
+def conv_forward(x, wconv, bias, b, cin, h, w, k, stride, pad):
+    patches = unfold(x, b, cin, h, w, k, stride, pad)
+    return patches, patches @ wconv + bias
+
+
+def fd_check_dx(x, wconv, bias, g_out, b, cin, h, w, k, stride, pad):
+    """Central-difference check of fold(g @ W^T) on loss = <g_out, out>."""
+    patches = unfold(x, b, cin, h, w, k, stride, pad)
+    analytic = fold(g_out @ wconv.T, b, cin, h, w, k, stride, pad)
+    del patches
+    eps = 1e-6
+    worst = 0.0
+    flat = x.reshape(-1)
+    for j in range(flat.size):
+        xp = flat.copy()
+        xp[j] += eps
+        xm = flat.copy()
+        xm[j] -= eps
+        lp = float((conv_forward(xp, wconv, bias, b, cin, h, w, k, stride, pad)[1] * g_out).sum())
+        lm = float((conv_forward(xm, wconv, bias, b, cin, h, w, k, stride, pad)[1] * g_out).sum())
+        num = (lp - lm) / (2 * eps)
+        worst = max(worst, abs(num - analytic.reshape(-1)[j]) / max(abs(num), 1e-6))
+    return worst
+
+
+def fd_check_dw(x, wconv, bias, g_out, b, cin, h, w, k, stride, pad):
+    """Central-difference check of patches^T @ g on loss = <g_out, out>."""
+    patches = unfold(x, b, cin, h, w, k, stride, pad)
+    analytic = np.einsum("btd,btp->dp", patches, g_out)
+    eps = 1e-6
+    worst = 0.0
+    for idx in np.ndindex(wconv.shape):
+        wp = wconv.copy()
+        wp[idx] += eps
+        wm = wconv.copy()
+        wm[idx] -= eps
+        lp = float(((patches @ wp + bias) * g_out).sum())
+        lm = float(((patches @ wm + bias) * g_out).sum())
+        num = (lp - lm) / (2 * eps)
+        worst = max(worst, abs(num - analytic[idx]) / max(abs(num), 1e-6))
+    return worst
+
+
+def avgpool(x, b, c, h, w, win):
+    xs = x.reshape(b, h, w, c)
+    ho, wo = h // win, w // win
+    out = np.zeros((b, ho, wo, c))
+    for dy in range(win):
+        for dx_ in range(win):
+            out += xs[:, dy::win, dx_::win][:, :ho, :wo]
+    return (out / (win * win)).reshape(b, ho * wo * c)
+
+
+def avgpool_backward(g, b, c, h, w, win):
+    ho, wo = h // win, w // win
+    gs = g.reshape(b, ho, wo, c)
+    dx = np.zeros((b, h, w, c))
+    for y in range(h):
+        for x_ in range(w):
+            dx[:, y, x_] = gs[:, y // win, x_ // win] / (win * win)
+    return dx.reshape(b, h * w * c)
+
+
+def maxpool(x, b, c, h, w, win):
+    xs = x.reshape(b, h, w, c)
+    ho, wo = h // win, w // win
+    out = np.zeros((b, ho, wo, c))
+    for i in range(b):
+        for oy in range(ho):
+            for ox in range(wo):
+                window = xs[i, oy * win : (oy + 1) * win, ox * win : (ox + 1) * win]
+                out[i, oy, ox] = window.reshape(win * win, c).max(axis=0)
+    return out.reshape(b, ho * wo * c)
+
+
+def maxpool_backward(x, g, b, c, h, w, win):
+    xs = x.reshape(b, h, w, c)
+    ho, wo = h // win, w // win
+    gs = g.reshape(b, ho, wo, c)
+    dx = np.zeros((b, h, w, c))
+    for i in range(b):
+        for oy in range(ho):
+            for ox in range(wo):
+                for ci in range(c):
+                    window = xs[
+                        i, oy * win : (oy + 1) * win, ox * win : (ox + 1) * win, ci
+                    ].reshape(-1)
+                    # first max in scan order, matching the Rust strict '>'
+                    j = int(np.argmax(window))
+                    dy, dx_ = j // win, j % win
+                    dx[i, oy * win + dy, ox * win + dx_, ci] += gs[i, oy, ox, ci]
+    return dx.reshape(b, h * w * c)
+
+
+def fmt(name, arr):
+    flat = np.asarray(arr, dtype=np.float64).ravel()
+    body = ",\n    ".join(
+        ", ".join(f"{v:.8}" for v in flat[i : i + 6]) for i in range(0, len(flat), 6)
+    )
+    return f"pub const {name}: [f32; {len(flat)}] = [\n    {body},\n];\n"
+
+
+def main():
+    rng = np.random.default_rng(20230713)  # the BK paper's ICML vintage
+    b, cin, h, w = 2, 2, 4, 4
+    k, stride, pad = 3, 1, 1
+    cout, win = 3, 2
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    t = ho * wo
+
+    x = rng.standard_normal((b, h * w * cin)) * 0.8
+    wconv = rng.standard_normal((cin * k * k, cout)) * 0.5
+    bias = rng.standard_normal(cout) * 0.3
+    g_out = rng.standard_normal((b, t, cout)) * 0.6
+
+    worst_dx = fd_check_dx(x, wconv, bias, g_out, b, cin, h, w, k, stride, pad)
+    worst_dw = fd_check_dw(x, wconv, bias, g_out, b, cin, h, w, k, stride, pad)
+    assert worst_dx < 1e-4, f"conv dx fails FD: {worst_dx}"
+    assert worst_dw < 1e-4, f"conv dw fails FD: {worst_dw}"
+    print(f"// FD check of the conv backward: dx worst rel err {worst_dx:.2e}, "
+          f"dw worst rel err {worst_dw:.2e}")
+
+    patches, out = conv_forward(x, wconv, bias, b, cin, h, w, k, stride, pad)
+    dx = fold(g_out @ wconv.T, b, cin, h, w, k, stride, pad)
+
+    # materialized per-sample weight-gradient norms (f64): the value the
+    # ghost Gram path over (patches, g) must reproduce
+    sq = np.zeros(b)
+    for i in range(b):
+        gw = patches[i].T @ g_out[i]
+        sq[i] = (gw * gw).sum()
+
+    # pooling over the conv output (c = cout channels on the ho x wo map)
+    pool_g = rng.standard_normal((b, (ho // win) * (wo // win) * cout)) * 0.7
+    avg_out = avgpool(out.reshape(b, -1), b, cout, ho, wo, win)
+    avg_dx = avgpool_backward(pool_g, b, cout, ho, wo, win)
+    max_out = maxpool(out.reshape(b, -1), b, cout, ho, wo, win)
+    max_dx = maxpool_backward(out.reshape(b, -1), pool_g, b, cout, ho, wo, win)
+
+    print("// Generated by python/tools/gen_conv_golden.py — do not edit.")
+    print(f"pub const B: usize = {b};")
+    print(f"pub const CIN: usize = {cin};")
+    print(f"pub const H: usize = {h};")
+    print(f"pub const W: usize = {w};")
+    print(f"pub const K: usize = {k};")
+    print(f"pub const STRIDE: usize = {stride};")
+    print(f"pub const PAD: usize = {pad};")
+    print(f"pub const COUT: usize = {cout};")
+    print(f"pub const WIN: usize = {win};")
+    print(f"pub const T: usize = {t};")
+    print(fmt("X", x))
+    print(fmt("WCONV", wconv))
+    print(fmt("BIAS", bias))
+    print(fmt("PATCHES", patches))
+    print(fmt("OUT", out))
+    print(fmt("G_OUT", g_out))
+    print(fmt("DX", dx))
+    print(fmt("GHOST_SQ", sq))
+    print(fmt("POOL_G", pool_g))
+    print(fmt("AVG_OUT", avg_out))
+    print(fmt("AVG_DX", avg_dx))
+    print(fmt("MAX_OUT", max_out))
+    print(fmt("MAX_DX", max_dx))
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,15 @@ bench-regression CI job pins — full fine-tune rows plus the bias-only
 and LoRA legs — and writes the committed baseline the `fastdp
 bench-check` subcommand compares against.
 
+Conv registry models route through a second mirror: the `(kind, t, d,
+p)` view below cannot represent stacks whose activation width changes
+between parameterized layers (pooling/flatten transitions, conv
+frontiers at `B*cin*h*w`), so `conv_entries` re-derives the plan of
+`ModelKind::Conv` — conv/relu/pool per stage, flatten, linear tail —
+and `fused_peak_entries` runs the entry walk of
+`complexity::bk_gcache_floats_layers` over raw element counts, exactly
+as `NativeSpec::gcache_layers` feeds it.
+
 The measured gauge in `StackRun::fused_pass` counts the same quantity
 (frontier gradient + book-kept per-layer output gradients, tied-alias
 cache included; residual skip copies excluded), so for the pinned models
@@ -175,6 +184,98 @@ def unfused_peak(b, layers):
     return sum(b * l[1] * out_width(l) for l in layers)
 
 
+# ---- conv registry mirror (plan-derived entry walk) ----------------
+#
+# stage: (cout, k, stride, pad, pool_win or 0) — residual skips and the
+# pool kind (max/avg) never change shapes, so they don't appear here.
+# Dims mirror the registry constructors in runtime/native/model.rs.
+CONV_MODELS = {
+    "conv_mnist_e2e": (16, 1, 14, 14, [(8, 3, 1, 1, 2), (16, 3, 1, 1, 0)], [], 10),
+    "resnet_tiny_e2e": (
+        8,
+        3,
+        16,
+        16,
+        [(8, 3, 1, 1, 0), (8, 3, 1, 1, 2), (8, 3, 1, 1, 2)],
+        [],
+        10,
+    ),
+    "conv_bench": (
+        16,
+        3,
+        32,
+        32,
+        [(16, 3, 1, 1, 2), (16, 3, 1, 1, 2), (32, 3, 1, 1, 0)],
+        [],
+        10,
+    ),
+}
+
+
+def conv_entries(b, cin, h, w, stages, hidden, n_classes):
+    """Mirror of `NativeSpec::gcache_layers` for `ModelKind::Conv`
+    (seq = 1, so rows = b): one (cache, frontier, trainable) entry per
+    plan layer — stateless ops included — plus the (t, p) arch view
+    `bk_gcache_floats_unfused` sums over parameterized layers."""
+    outw = []  # (out-width elements per sample, trainable)
+    arch = []  # (t, p) of parameterized layers
+    c, hh, ww = cin, h, w
+    for cout, k, stride, pad, win in stages:
+        ho = (hh + 2 * pad - k) // stride + 1
+        wo = (ww + 2 * pad - k) // stride + 1
+        outw.append((cout * ho * wo, 1))  # conv{si}
+        arch.append((ho * wo, cout))
+        outw.append((cout * ho * wo, 0))  # crelu{si}
+        if win:
+            ho //= win
+            wo //= win
+            outw.append((cout * ho * wo, 0))  # pool{si}
+        c, hh, ww = cout, ho, wo
+    d = c * hh * ww
+    outw.append((d, 0))  # flatten
+    for hid in hidden:
+        outw.append((hid, 1))  # fc{i}
+        arch.append((1, hid))
+        outw.append((hid, 0))  # relu{i}
+        d = hid
+    outw.append((n_classes, 1))  # head fc
+    arch.append((1, n_classes))
+    entries = []
+    prev = 0
+    for i, (w_out, tr) in enumerate(outw):
+        entries.append((b * w_out, float(b * prev) if i > 0 else 0.0, tr))
+        prev = w_out
+    return entries, arch
+
+
+def fused_peak_entries(style, entries):
+    """The entry walk of `complexity::bk_gcache_floats_layers` over
+    (cache, frontier, trainable) element counts. No tied aliases in the
+    conv registry, so the alias-inherits-owner-group rule is vacuous."""
+    n = len(entries)
+    owners = [i for i, e in enumerate(entries) if e[2]]
+    if not owners:
+        return 0.0
+    groups = [FROZEN] * n
+    for oi, i in enumerate(owners):
+        groups[i] = group_of(style, oi, len(owners))
+    g = n_groups(style, len(owners))
+    fin = {gi: min(i for i in range(n) if groups[i] == gi) for gi in range(g)}
+    kept = [0.0] * g
+    kept_total = 0.0
+    peak = float(entries[-1][0])
+    for i in reversed(range(n)):
+        cache, frontier, tr = entries[i]
+        if tr:
+            kept[groups[i]] += cache
+            kept_total += cache
+        peak = max(peak, kept_total + (frontier if i > 0 else 0.0))
+        if tr and fin[groups[i]] == i:
+            kept_total -= kept[groups[i]]
+            kept[groups[i]] = 0.0
+    return peak
+
+
 STYLES = ["all-layer", "layer-wise", "group-wise:2"]
 BASELINE_MODELS = ["mlp_ln", "seq_tok_e2e", "gpt_nano_e2e", "gpt_nano_tied_e2e"]
 
@@ -248,6 +349,21 @@ def main():
             )
             if name in BASELINE_MODELS:
                 rows.append(make_row(name, style, b, layers, fused, legacy))
+    # conv registry rows: the entry walk over plan-derived element
+    # counts (pooling/flatten frontiers change width mid-stack, so the
+    # (kind, t, d, p) mirror above cannot price them)
+    for name, (b, cin, h, w, stages, hidden, ncls) in CONV_MODELS.items():
+        entries, arch = conv_entries(b, cin, h, w, stages, hidden, ncls)
+        legacy = sum(b * t * p for t, p in arch)
+        for style in STYLES:
+            fused = fused_peak_entries(style, entries)
+            print(
+                f"{name:22} {'all':10} {style:14} {fused:10.0f} {legacy:10.0f} "
+                f"{100.0 * (1.0 - fused / legacy):6.1f}%"
+            )
+            # conv rows: seq_len 1, no attention heads, no tied head —
+            # the stub layer list below only feeds those three fields
+            rows.append(make_row(name, style, b, [("L", 1, 0, 0)], fused, legacy))
     # peft legs: masked fused peaks under the same walk; the adapter
     # census never enters the g-cache (a LoRA layer book-keeps the same
     # B*T*p output gradient), only *fully frozen* layers shrink the peak

@@ -1,44 +1,104 @@
-//! Figure 6: vision efficiency in the large-T regime. Measured on the
-//! CNN artifact (32^2, where the conv layers already cross 2T^2 > pd),
-//! and analytic at the paper's true scale (VGG11 / BEiT-large @224^2)
-//! where ghost-norm-only implementations explode in memory.
+//! Figure 6: vision efficiency in the large-T regime.
+//!
+//! Measured on the native conv registry (`conv_mnist_e2e`,
+//! `resnet_tiny_e2e`, `conv_bench` — at 32^2 the conv layers already
+//! cross 2T^2 > pd, so the hybrid routes to instantiation where
+//! ghost-norm-only implementations pay the Gram blow-up), and analytic
+//! at the paper's true scale (VGG11 / BEiT-large @224^2) where the
+//! ghost route explodes in memory.
+//!
+//! Every measured one-pass DP row is gated: the fused g-cache peak the
+//! backend actually held must equal the complexity engine's plan-walk
+//! prediction ([`bk_gcache_floats_layers`] over
+//! [`NativeSpec::gcache_layers`]) — two independent codepaths. Any
+//! mismatch exits non-zero. Rows are also written to
+//! `BENCH_fig6_vision.json` in the `BENCH_native_kernels.json` schema
+//! so the bench-regression gate can pin them.
 
-use fastdp::arch::catalog::vision_model;
-use fastdp::bench::{artifacts_dir, emit, layers_of, maybe_run_child, measure_in_child};
+use fastdp::bench::{emit, measure_native, BenchResult};
 use fastdp::complexity::{model_cost, Strategy, ALL_STRATEGIES};
-use fastdp::runtime::Manifest;
+use fastdp::json::Value;
+use fastdp::runtime::native::model::{registry_names, ModelKind, NativeSpec};
 use fastdp::util::stats::{fmt_bytes, fmt_count, fmt_duration};
 use fastdp::util::table::Table;
 
-fn main() {
-    maybe_run_child();
-    let manifest = Manifest::load(&artifacts_dir()).expect("manifest");
-    let iters = 3;
+use fastdp::arch::catalog::vision_model;
 
-    let mut t = Table::new(
-        "Figure 6 (measured, CNN 32^2): hybrid wins where ghost can't",
-        &["strategy", "time/step", "throughput", "peak RSS", "analytic space x nondp"],
-    );
-    let meta = &manifest.models["conv_bench"];
-    let layers = layers_of(meta);
-    let b = meta.batch as f64;
-    let nondp_space = model_cost(Strategy::NonDp, b, &layers).space;
-    for strat in manifest.strategies_for("conv_bench") {
-        match measure_in_child("conv_bench", &strat, iters) {
-            Ok(r) => {
-                let s = Strategy::parse(&strat).unwrap();
-                t.row(&[
-                    strat.clone(),
-                    fmt_duration(r.mean_step_secs),
-                    format!("{:.0}/s", r.samples_per_sec),
-                    fmt_bytes(r.peak_rss as f64),
-                    format!("{:.2}x", model_cost(s, b, &layers).space / nondp_space),
-                ]);
+fn main() {
+    let iters = 3;
+    let strategies = ["nondp", "opacus", "ghostclip", "bk", "bk_mixopt"];
+    let conv_models: Vec<String> = registry_names()
+        .into_iter()
+        .filter(|n| {
+            matches!(
+                NativeSpec::by_name(n).map(|s| s.model_kind()),
+                Some(ModelKind::Conv { .. })
+            )
+        })
+        .collect();
+    assert!(!conv_models.is_empty(), "conv registry is empty");
+
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut mismatches = 0usize;
+    for model in &conv_models {
+        let spec = NativeSpec::by_name(model).unwrap();
+        let layers = spec.arch_layers();
+        let b = spec.batch as f64;
+        let nondp_space = model_cost(Strategy::NonDp, b, &layers).space;
+        let mut t = Table::new(
+            &format!(
+                "Figure 6 (measured, native {model}, B={}): hybrid wins where ghost can't",
+                spec.batch
+            ),
+            &[
+                "strategy",
+                "time/step",
+                "throughput",
+                "peak RSS",
+                "g-cache peak",
+                "analytic space x nondp",
+            ],
+        );
+        for strat in strategies {
+            match measure_native(model, strat, "all-layer", 1, iters, 0, 1, "") {
+                Ok(r) => {
+                    let s = Strategy::parse(strat).unwrap();
+                    // the acceptance gate: measured fused peak == plan-walk
+                    // prediction, exactly (1% band absorbs f64 rounding)
+                    if r.peak_gcache_floats_measured > 0 {
+                        let want = r.peak_gcache_floats_predicted;
+                        let got = r.peak_gcache_floats_measured as f64;
+                        if (got - want).abs() > 0.01 * want {
+                            eprintln!(
+                                "g-cache MISMATCH {model}/{strat}: measured {got} vs \
+                                 plan-walk prediction {want}"
+                            );
+                            mismatches += 1;
+                        }
+                    }
+                    t.row(&[
+                        strat.to_string(),
+                        fmt_duration(r.mean_step_secs),
+                        format!("{:.0}/s", r.samples_per_sec),
+                        fmt_bytes(r.peak_rss as f64),
+                        if r.peak_gcache_floats_measured > 0 {
+                            fmt_count(r.peak_gcache_floats_measured as f64)
+                        } else {
+                            "-".into()
+                        },
+                        format!("{:.2}x", model_cost(s, b, &layers).space / nondp_space),
+                    ]);
+                    rows.push(r);
+                }
+                Err(e) => {
+                    eprintln!("bench {model}/{strat}: {e}");
+                    mismatches += 1;
+                }
             }
-            Err(e) => eprintln!("skip {strat}: {e}"),
         }
+        emit(&format!("fig6_{model}_native"), &t, true);
+        println!();
     }
-    emit("fig6_cnn_measured", &t, true);
 
     // analytic at paper scale
     for (name, img) in [("vgg11", 224u64), ("beit_large", 224)] {
@@ -60,9 +120,29 @@ fn main() {
         println!();
         emit(&format!("fig6_{name}_analytic"), &ta, true);
     }
+
+    // bench JSON in the BENCH_native_kernels.json schema, so CI can
+    // feed these rows through `fastdp bench-check --current ...`
+    let mut root = Value::obj();
+    root.set("model", Value::from("fig6_vision"))
+        .set("iters", Value::from(iters))
+        .set(
+            "results",
+            Value::Arr(rows.iter().map(BenchResult::to_json).collect()),
+        );
+    let path = "BENCH_fig6_vision.json";
+    match std::fs::write(path, root.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
+
     println!(
         "\nexpected shape (paper Fig 6 + §3.1): ghostclip/bk explode on VGG11 \
          (first conv 2T^2 = 5e9 floats); hybrids track nondp; on BEiT \
          (transformer) ghost is fine and hybrids equal bk."
     );
+    if mismatches > 0 {
+        eprintln!("\n{mismatches} measured row(s) failed the g-cache gate");
+        std::process::exit(1);
+    }
 }

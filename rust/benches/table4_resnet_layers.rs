@@ -1,10 +1,16 @@
 //! Table 4: layerwise space complexity of the per-sample gradient norm
 //! (ghost vs instantiation, with the hybrid decision in bold — here
-//! marked with '*') for ResNet-18/34/50 on ImageNet 224x224, B=1.
+//! marked with '*') for ResNet-18/34/50 on ImageNet 224x224, B=1 —
+//! plus the same per-layer decision over the native conv registry,
+//! where a measured training step gates the fused g-cache peak against
+//! the complexity engine's plan-walk prediction and the rows land in
+//! `BENCH_table4_resnet.json` for the bench-regression gate.
 
 use fastdp::arch::catalog::vision_model;
-use fastdp::bench::emit;
+use fastdp::bench::{emit, measure_native, BenchResult};
 use fastdp::complexity::{ghost_preferred, norm_space_ghost, norm_space_inst};
+use fastdp::json::Value;
+use fastdp::runtime::native::model::{registry_names, ModelKind, NativeSpec};
 use fastdp::util::stats::fmt_count;
 use fastdp::util::table::Table;
 
@@ -45,5 +51,79 @@ fn main() {
             "paper Table 4 reference totals: r18 ghost 399M / inst 11.5M / mixed 1.0M;\
              \n  r34 444M / 21.6M / 2.3M; r50 528M / 22.7M / 2.8M\n"
         );
+    }
+
+    // Native conv registry: the same layerwise decision, computed from
+    // the executable plan's dims, and a measured step whose fused
+    // g-cache peak must equal the plan-walk prediction exactly.
+    let conv_models: Vec<String> = registry_names()
+        .into_iter()
+        .filter(|n| {
+            matches!(
+                NativeSpec::by_name(n).map(|s| s.model_kind()),
+                Some(ModelKind::Conv { .. })
+            )
+        })
+        .collect();
+    assert!(!conv_models.is_empty(), "conv registry is empty");
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut mismatches = 0usize;
+    for model in &conv_models {
+        let spec = NativeSpec::by_name(model).unwrap();
+        let mut t = Table::new(
+            &format!("Table 4 (native, {model}, B=1): ghost vs instantiation by layer"),
+            &["layer", "T", "ghost 2T^2", "inst pd", "decision"],
+        );
+        for l in &spec.arch_layers() {
+            let g = norm_space_ghost(1.0, l);
+            let i = norm_space_inst(1.0, l);
+            let ghost = ghost_preferred(l);
+            t.row(&[
+                l.name.clone(),
+                l.t.to_string(),
+                format!("{}{}", fmt_count(g), if ghost { "*" } else { "" }),
+                format!("{}{}", fmt_count(i), if ghost { "" } else { "*" }),
+                if ghost { "ghost" } else { "instantiate" }.into(),
+            ]);
+        }
+        emit(&format!("table4_{model}_native"), &t, true);
+        match measure_native(model, "bk", "all-layer", 1, 2, 0, 1, "") {
+            Ok(r) => {
+                let got = r.peak_gcache_floats_measured as f64;
+                let want = r.peak_gcache_floats_predicted;
+                if (got - want).abs() > 0.01 * want {
+                    eprintln!(
+                        "g-cache MISMATCH {model}: measured {got} vs plan-walk \
+                         prediction {want}"
+                    );
+                    mismatches += 1;
+                } else {
+                    println!(
+                        "{model}: measured fused g-cache peak {got} == plan-walk prediction\n"
+                    );
+                }
+                rows.push(r);
+            }
+            Err(e) => {
+                eprintln!("bench {model}: {e}");
+                mismatches += 1;
+            }
+        }
+    }
+
+    let mut root = Value::obj();
+    root.set("model", Value::from("table4_resnet_layers"))
+        .set(
+            "results",
+            Value::Arr(rows.iter().map(BenchResult::to_json).collect()),
+        );
+    let path = "BENCH_table4_resnet.json";
+    match std::fs::write(path, root.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
+    if mismatches > 0 {
+        eprintln!("\n{mismatches} conv model(s) failed the g-cache gate");
+        std::process::exit(1);
     }
 }

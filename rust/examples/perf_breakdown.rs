@@ -35,7 +35,7 @@ fn main() -> fastdp::error::Result<()> {
     };
 
     // ---- phase breakdown on the BK fast path -----------------------
-    let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 0)?;
+    let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(0).build()?;
     be.init(0)?;
     let (mut t_noise, mut t_batch, mut t_step) = (Summary::new(), Summary::new(), Summary::new());
     for _ in 0..iters.max(1) {
@@ -82,7 +82,7 @@ fn main() -> fastdp::error::Result<()> {
         Strategy::FastGradClip,
         Strategy::Opacus,
     ] {
-        let mut be = NativeBackend::new(spec.clone(), strat, 0)?;
+        let mut be = NativeBackend::builder(spec.clone(), strat).threads(0).build()?;
         be.init(0)?;
         let (xs, y) = ds.sample_batch(rows);
         let x = BatchX::F32(xs);

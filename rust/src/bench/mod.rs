@@ -208,7 +208,7 @@ pub fn measure_native(
             shards,
         )?)
     } else {
-        Box::new(NativeBackend::with_style(spec.clone(), strat, cstyle, threads)?)
+        Box::new(NativeBackend::builder(spec.clone(), strat).style(cstyle).threads(threads).build()?)
     };
     be.init(0)?;
 
@@ -274,19 +274,14 @@ pub fn measure_native(
     let stats = be.alloc_stats();
     let steady_allocs = stats.fresh_allocs_last_step;
     // g-cache accounting: measured by the fused walk's gauge, predicted
-    // by the complexity engine's *masked* walk simulation over the same
-    // layers (frozen layers are pure frontier transitions) — only the
-    // one-pass DP strategies book-keep output gradients
+    // by the complexity engine's walk simulation over the plan-derived
+    // element counts (frozen/stateless layers are pure frontier
+    // transitions; conv trunks carry their real activation widths) —
+    // only the one-pass DP strategies book-keep output gradients
     let (predicted, unfused) = if strat != Strategy::NonDp && strat.backprops() == 1 {
-        let layers = spec.arch_layers();
         (
-            crate::complexity::bk_gcache_floats_masked(
-                cstyle,
-                spec.batch as f64,
-                &layers,
-                &spec.arch_layer_trainable(),
-            ),
-            crate::complexity::bk_gcache_floats_unfused(spec.batch as f64, &layers),
+            crate::complexity::bk_gcache_floats_layers(cstyle, &spec.gcache_layers()),
+            crate::complexity::bk_gcache_floats_unfused(spec.batch as f64, &spec.arch_layers()),
         )
     } else {
         (0.0, 0.0)

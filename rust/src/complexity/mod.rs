@@ -20,8 +20,8 @@ use crate::arch::{LayerDims, LayerKind};
 
 pub use dispatch::{Dispatch, DispatchProfile};
 pub use strategy::{
-    bk_gcache_floats, bk_gcache_floats_masked, bk_gcache_floats_unfused, clip_state_floats,
-    layer_cost, ClippingStyle, Strategy, ALL_STRATEGIES,
+    bk_gcache_floats, bk_gcache_floats_layers, bk_gcache_floats_masked, bk_gcache_floats_unfused,
+    clip_state_floats, layer_cost, ClippingStyle, GcacheLayer, Strategy, ALL_STRATEGIES,
 };
 
 /// Time cost (multiply-accumulate*2, matching the paper's 2BTpd counting)

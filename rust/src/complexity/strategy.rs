@@ -197,38 +197,79 @@ pub fn bk_gcache_floats_masked(
     trainable: &[bool],
 ) -> f64 {
     debug_assert_eq!(trainable.len(), layers.len());
-    let n = layers.len();
-    if n == 0 || !trainable.iter().any(|&t| t) {
-        return 0.0;
-    }
-    // group ids: trainable owners positionally; frozen layers carry a
-    // sentinel (no cache, no group); a trainable tied head inherits the
-    // group of the embedding whose tensor it views
-    const FROZEN: usize = usize::MAX;
-    let n_own = layers
+    let emb = layers.iter().position(|l| l.kind == LayerKind::Embedding);
+    let entries: Vec<GcacheLayer> = layers
         .iter()
         .zip(trainable)
-        .filter(|(l, &tr)| tr && l.kind != LayerKind::TiedLinear)
-        .count();
+        .map(|(l, &tr)| GcacheLayer {
+            cache: b * l.t as f64 * gcache_width(l),
+            frontier: b * l.t as f64 * frontier_width(l),
+            trainable: tr,
+            alias_of: if l.kind == LayerKind::TiedLinear { emb } else { None },
+        })
+        .collect();
+    bk_gcache_floats_layers(style, &entries)
+}
+
+/// One layer of the fused g-cache walk, as whole-batch element counts.
+///
+/// [`bk_gcache_floats_masked`] derives these from `(T, d, p)` dims — a
+/// view that cannot represent stacks whose activation width changes
+/// *between* parameterized layers (a conv's frontier gradient is
+/// `B·cin·h·w`, not `B·T_out·cin·k²`, and pooling/flatten transitions
+/// are invisible to `LayerDims`). The executable plan can:
+/// `NativeSpec::gcache_layers` emits one entry per plan layer,
+/// stateless ops included, and [`bk_gcache_floats_layers`] runs the
+/// same walk over raw element counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GcacheLayer {
+    /// Book-kept output-gradient floats (`B·T·out-width`) if this layer
+    /// trains; also the walk's init when it is the head layer (the loss
+    /// gradient is the first frontier).
+    pub cache: f64,
+    /// Frontier-gradient floats below this layer (`B·T·in-width`); 0
+    /// for a token-consuming front (embedding). Ignored for layer 0.
+    pub frontier: f64,
+    /// Whether any of the layer's tensors train (a bias-only layer
+    /// still book-keeps its full-width output gradient). Stateless ops
+    /// (ReLU, pooling, flatten) are `false` — pure frontier transitions.
+    pub trainable: bool,
+    /// Tied-alias link: `Some(i)` means this layer views layer `i`'s
+    /// tensor (the GPT-2 tied head over its embedding) and inherits
+    /// that owner's clipping group instead of minting one.
+    pub alias_of: Option<usize>,
+}
+
+/// The fused-walk simulation of [`bk_gcache_floats_masked`] over
+/// plan-derived element counts — the same walk, but correct for stacks
+/// with non-uniform activation widths (conv/pool/flatten trunks).
+/// `StackRun::fused_pass`'s gauge measures exactly this quantity.
+pub fn bk_gcache_floats_layers(style: ClippingStyle, layers: &[GcacheLayer]) -> f64 {
+    let n = layers.len();
+    if n == 0 || !layers.iter().any(|l| l.trainable) {
+        return 0.0;
+    }
+    // group ids: trainable owners positionally; frozen/stateless layers
+    // carry a sentinel (no cache, no group); a trainable alias inherits
+    // the group of the owner whose tensor it views
+    const FROZEN: usize = usize::MAX;
+    let n_own = layers.iter().filter(|l| l.trainable && l.alias_of.is_none()).count();
     let mut groups = vec![FROZEN; n];
     let mut oi = 0usize;
     for (i, l) in layers.iter().enumerate() {
-        if trainable[i] && l.kind != LayerKind::TiedLinear {
+        if l.trainable && l.alias_of.is_none() {
             groups[i] = style.group_of(oi, n_own);
             oi += 1;
         }
     }
-    let emb_group = layers
-        .iter()
-        .position(|l| l.kind == LayerKind::Embedding)
-        .map(|e| groups[e])
-        .unwrap_or(0);
-    for (i, l) in layers.iter().enumerate() {
-        if trainable[i] && l.kind == LayerKind::TiedLinear {
-            // a tied head shares the embedding's tensor, so their
-            // trainability (and group) cannot diverge
-            debug_assert_ne!(emb_group, FROZEN, "trainable tied head over a frozen embedding");
-            groups[i] = emb_group;
+    for i in 0..n {
+        if layers[i].trainable {
+            if let Some(j) = layers[i].alias_of {
+                // a shared tensor has exactly one trainability state, so
+                // an alias cannot train over a frozen owner
+                debug_assert_ne!(groups[j], FROZEN, "trainable alias over a frozen owner");
+                groups[i] = groups[j];
+            }
         }
     }
     // each group finalizes at its lowest-index (trainable) member
@@ -238,22 +279,20 @@ pub fn bk_gcache_floats_masked(
         .collect();
     // walk top-down: keep trainable caches, advance the frontier,
     // release at group boundaries — mirroring StackRun::fused_pass's
-    // gauge (which subtracts a frozen layer's old frontier before
+    // gauge (which subtracts a stateless layer's old frontier before
     // sampling the peak)
     let mut kept = vec![0.0f64; g];
     let mut kept_total = 0.0f64;
-    let last = &layers[n - 1];
-    let mut peak = b * last.t as f64 * gcache_width(last);
+    let mut peak = layers[n - 1].cache;
     for i in (0..n).rev() {
         let l = &layers[i];
-        if trainable[i] {
-            let cache = b * l.t as f64 * gcache_width(l);
-            kept[groups[i]] += cache;
-            kept_total += cache;
+        if l.trainable {
+            kept[groups[i]] += l.cache;
+            kept_total += l.cache;
         }
-        let frontier = if i > 0 { b * l.t as f64 * frontier_width(l) } else { 0.0 };
+        let frontier = if i > 0 { l.frontier } else { 0.0 };
         peak = peak.max(kept_total + frontier);
-        if trainable[i] && finalize_at[groups[i]] == i {
+        if l.trainable && finalize_at[groups[i]] == i {
             kept_total -= kept[groups[i]];
             kept[groups[i]] = 0.0;
         }
@@ -638,6 +677,91 @@ mod tests {
             assert_eq!(m, 16.0, "{style:?}");
             assert!(m < bk_gcache_floats(style, 1.0, &layers));
         }
+    }
+
+    #[test]
+    fn entry_walk_reproduces_dims_walk_pins() {
+        // The same 4-layer stack style_cost_reporting pins (t=8, d=64,
+        // p = 32<<i, b=16), expressed as raw element counts: the entry
+        // walk must land on the identical 65536 / 40960 / 57344 peaks.
+        let b = 16.0;
+        let rows = b * 8.0;
+        let entries: Vec<GcacheLayer> = (0..4)
+            .map(|i| GcacheLayer {
+                cache: rows * (32 << i) as f64,
+                frontier: rows * 64.0,
+                trainable: true,
+                alias_of: None,
+            })
+            .collect();
+        assert_eq!(bk_gcache_floats_layers(ClippingStyle::AllLayer, &entries), 65536.0);
+        assert_eq!(bk_gcache_floats_layers(ClippingStyle::LayerWise, &entries), 40960.0);
+        assert_eq!(bk_gcache_floats_layers(ClippingStyle::GroupWise(2), &entries), 57344.0);
+        // and the masked delegation is literally this walk
+        let layers: Vec<LayerDims> = (0..4).map(|i| lin(8, 64, 32 << i)).collect();
+        for style in [
+            ClippingStyle::AllLayer,
+            ClippingStyle::LayerWise,
+            ClippingStyle::GroupWise(2),
+        ] {
+            assert_eq!(
+                bk_gcache_floats_layers(style, &entries),
+                bk_gcache_floats_masked(style, b, &layers, &[true; 4])
+            );
+        }
+    }
+
+    #[test]
+    fn entry_walk_counts_conv_trunk_frontiers() {
+        // conv(1x16x16 -> 4x16x16) -> avgpool/2 -> flatten -> linear
+        // (256 -> 10), b=2. The frontier below the pool is the conv's
+        // FULL output activation (B·4·16·16 = 2048 floats) — a width no
+        // LayerDims view can express (the conv's t·d would give
+        // B·256·9 = 4608) — and the pool/flatten transitions must
+        // participate in the walk as stateless entries.
+        let b = 2.0;
+        let entries = vec![
+            GcacheLayer {
+                cache: b * 1024.0, // B·cout·ho·wo
+                frontier: b * 256.0,
+                trainable: true,
+                alias_of: None,
+            },
+            GcacheLayer {
+                cache: b * 256.0,
+                frontier: b * 1024.0, // the conv's output activation
+                trainable: false,
+                alias_of: None,
+            },
+            GcacheLayer {
+                cache: b * 256.0,
+                frontier: b * 256.0,
+                trainable: false,
+                alias_of: None,
+            },
+            GcacheLayer {
+                cache: b * 10.0,
+                frontier: b * 256.0,
+                trainable: true,
+                alias_of: None,
+            },
+        ];
+        // all-layer walk by hand: init 20; linear kept 20 + frontier 512
+        // -> 532; flatten 20 + 512; pool 20 + 2048 -> 2068; conv kept
+        // 2048 more, frontier 0 -> 2068. Peak 2068.
+        assert_eq!(bk_gcache_floats_layers(ClippingStyle::AllLayer, &entries), 2068.0);
+        // layer-wise finalizes the linear at its own index, so only the
+        // conv's cache survives to the bottom: peak 2048 at the conv.
+        assert_eq!(bk_gcache_floats_layers(ClippingStyle::LayerWise, &entries), 2048.0);
+        // frozen conv: the linear (sole group member) finalizes at its
+        // own index, so the pool frontier alone dominates
+        let mut frozen = entries.clone();
+        frozen[0].trainable = false;
+        assert_eq!(bk_gcache_floats_layers(ClippingStyle::AllLayer, &frozen), 2048.0);
+        // nothing trainable: nothing book-kept
+        let dead: Vec<GcacheLayer> =
+            entries.iter().cloned().map(|mut e| { e.trainable = false; e }).collect();
+        assert_eq!(bk_gcache_floats_layers(ClippingStyle::AllLayer, &dead), 0.0);
     }
 
     #[test]

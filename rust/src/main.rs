@@ -228,6 +228,26 @@ fn cmd_complexity(args: &Args) -> i32 {
         _ => vec![true; gcache_layers.len()],
     };
     use fastdp::complexity::ClippingStyle;
+    // native specs predict through the plan-derived entry walk —
+    // conv/pool/flatten activation widths are invisible to the (T,d,p)
+    // dims view; a `--batch` override scales the whole-batch element
+    // counts linearly
+    let native_entries: Option<Vec<fastdp::complexity::GcacheLayer>> = match &native_spec {
+        Some(spec) if arch.is_none() => {
+            let mut e = spec.gcache_layers();
+            let scale = b / spec.batch as f64;
+            for l in &mut e {
+                l.cache *= scale;
+                l.frontier *= scale;
+            }
+            Some(e)
+        }
+        _ => None,
+    };
+    let fused_peak = |style: ClippingStyle| match &native_entries {
+        Some(entries) => complexity::bk_gcache_floats_layers(style, entries),
+        None => complexity::bk_gcache_floats_masked(style, b, &gcache_layers, &gcache_mask),
+    };
     let gcache_styles = [
         ClippingStyle::AllLayer,
         ClippingStyle::LayerWise,
@@ -240,8 +260,7 @@ fn cmd_complexity(args: &Args) -> i32 {
     if args.has_flag("gcache-md") {
         let legacy = complexity::bk_gcache_floats_unfused(b, &gcache_layers);
         for style in gcache_styles {
-            let fused =
-                complexity::bk_gcache_floats_masked(style, b, &gcache_layers, &gcache_mask);
+            let fused = fused_peak(style);
             println!(
                 "| {model} | {} | {} | {} | {:.1}% |",
                 style.name(),
@@ -363,8 +382,7 @@ fn cmd_complexity(args: &Args) -> i32 {
         &["style", "groups", "g-cache (fused)", "g-cache (legacy)", "saved", "clip state"],
     );
     for style in &styles {
-        let fused =
-            complexity::bk_gcache_floats_masked(*style, b, &gcache_layers, &gcache_mask);
+        let fused = fused_peak(*style);
         t.row(&[
             style.name(),
             style.n_groups(n_own).to_string(),
@@ -403,7 +421,7 @@ fn cmd_complexity(args: &Args) -> i32 {
             &["style", "replica state", "per-shard g-cache", "reduction in-flight", "total"],
         );
         for style in &styles {
-            let g = complexity::bk_gcache_floats_masked(*style, b, &gcache_layers, &gcache_mask);
+            let g = fused_peak(*style);
             let sp = complexity::sharded_space(shards, micro, param_floats, adam, g);
             t.row(&[
                 style.name(),

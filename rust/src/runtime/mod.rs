@@ -344,13 +344,13 @@ pub fn create_backend(cfg: &crate::config::TrainConfig) -> Result<Box<dyn Backen
                     cfg.shards,
                 )?))
             } else {
-                Ok(Box::new(native::NativeBackend::with_style_dispatch(
-                    spec,
-                    strategy,
-                    style,
-                    cfg.threads,
-                    &dispatch,
-                )?))
+                Ok(Box::new(
+                    native::NativeBackend::builder(spec, strategy)
+                        .style(style)
+                        .threads(cfg.threads)
+                        .dispatch(dispatch)
+                        .build()?,
+                ))
             }
         }
         "pjrt" if style != crate::complexity::ClippingStyle::AllLayer => bail!(

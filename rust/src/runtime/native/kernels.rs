@@ -945,6 +945,281 @@ pub fn attention_backward(
     });
 }
 
+/// im2col unfold: gather every `k×k` receptive field of an HWC image
+/// batch into patch rows, so a conv becomes the plain `(d, p)` matmul /
+/// ghost-norm / instantiation kernels every linear layer uses.
+///
+/// `x` is `(b, h·w, cin)` — spatial positions major, channels innermost
+/// — and `patches` is `(b, t, k·k·cin)` with `t` = output spatial
+/// positions and patch element order `(ky, kx, ci)`, matching the conv
+/// weight's `(cin·k², cout)` layout. Out-of-bounds taps (zero padding)
+/// write zeros. Threaded over patch rows.
+#[allow(clippy::too_many_arguments)]
+pub fn unfold(
+    x: &[f32],
+    b: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    patches: &mut [f32],
+    threads: usize,
+) {
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let t = ho * wo;
+    let dk = cin * k * k;
+    debug_assert_eq!(x.len(), b * h * w * cin);
+    debug_assert_eq!(patches.len(), b * t * dk);
+    par::par_rows(patches, b * t, dk, threads, |r0, chunk| {
+        for (ri, row) in chunk.chunks_mut(dk).enumerate() {
+            let r = r0 + ri;
+            let (i, pos) = (r / t, r % t);
+            let (oy, ox) = (pos / wo, pos % wo);
+            let xs = &x[i * h * w * cin..(i + 1) * h * w * cin];
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                let dst = &mut row[ky * k * cin..(ky + 1) * k * cin];
+                if iy < 0 || iy >= h as isize {
+                    dst.fill(0.0);
+                    continue;
+                }
+                let base = iy as usize * w;
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    let cell = &mut dst[kx * cin..(kx + 1) * cin];
+                    if ix < 0 || ix >= w as isize {
+                        cell.fill(0.0);
+                    } else {
+                        cell.copy_from_slice(&xs[(base + ix as usize) * cin..][..cin]);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// col2im fold — the exact transpose of [`unfold`]: scatter-adds patch
+/// rows back onto the `(b, h·w, cin)` image grid (overlapping receptive
+/// fields accumulate), producing dL/dx from the unfolded gradient
+/// `patches = g · Wᵀ`. Zeroes `dx` first. Threaded over samples — every
+/// scatter target stays inside its own sample's row.
+#[allow(clippy::too_many_arguments)]
+pub fn fold(
+    patches: &[f32],
+    b: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    dx: &mut [f32],
+    threads: usize,
+) {
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let t = ho * wo;
+    let dk = cin * k * k;
+    debug_assert_eq!(patches.len(), b * t * dk);
+    debug_assert_eq!(dx.len(), b * h * w * cin);
+    par::par_rows(dx, b, h * w * cin, threads, |i0, chunk| {
+        for (ii, dxs) in chunk.chunks_mut(h * w * cin).enumerate() {
+            let i = i0 + ii;
+            dxs.fill(0.0);
+            for pos in 0..t {
+                let row = &patches[(i * t + pos) * dk..][..dk];
+                let (oy, ox) = (pos / wo, pos % wo);
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = &row[(ky * k + kx) * cin..][..cin];
+                        let dst = &mut dxs[(iy as usize * w + ix as usize) * cin..][..cin];
+                        for (dv, &sv) in dst.iter_mut().zip(src) {
+                            *dv += sv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Non-overlapping `win×win` average pooling over an HWC activation:
+/// `out (b, ho·wo, c)` = window means of `x (b, h·w, c)` with
+/// `ho = h/win`, `wo = w/win` (exact tiling — the plan validates
+/// divisibility). Threaded over samples.
+pub fn avgpool2d(
+    x: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    win: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let (ho, wo) = (h / win, w / win);
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(out.len(), b * ho * wo * c);
+    let inv = 1.0 / (win * win) as f32;
+    par::par_rows(out, b, ho * wo * c, threads, |i0, chunk| {
+        for (ii, os) in chunk.chunks_mut(ho * wo * c).enumerate() {
+            let xs = &x[(i0 + ii) * h * w * c..][..h * w * c];
+            os.fill(0.0);
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let cell = &mut os[(oy * wo + ox) * c..][..c];
+                    for dy in 0..win {
+                        for dx_ in 0..win {
+                            let src = &xs[((oy * win + dy) * w + ox * win + dx_) * c..][..c];
+                            for (ov, &sv) in cell.iter_mut().zip(src) {
+                                *ov += sv;
+                            }
+                        }
+                    }
+                    for ov in cell.iter_mut() {
+                        *ov *= inv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Average-pool backward: spread each output gradient uniformly
+/// (`g / win²`) over its window. The exact transpose of [`avgpool2d`].
+pub fn avgpool2d_backward(
+    g: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    win: usize,
+    dx: &mut [f32],
+    threads: usize,
+) {
+    let (ho, wo) = (h / win, w / win);
+    debug_assert_eq!(g.len(), b * ho * wo * c);
+    debug_assert_eq!(dx.len(), b * h * w * c);
+    let inv = 1.0 / (win * win) as f32;
+    par::par_rows(dx, b, h * w * c, threads, |i0, chunk| {
+        for (ii, dxs) in chunk.chunks_mut(h * w * c).enumerate() {
+            let gs = &g[(i0 + ii) * ho * wo * c..][..ho * wo * c];
+            for y in 0..h {
+                for x_ in 0..w {
+                    let src = &gs[((y / win) * wo + x_ / win) * c..][..c];
+                    let dst = &mut dxs[(y * w + x_) * c..][..c];
+                    for (dv, &sv) in dst.iter_mut().zip(src) {
+                        *dv = sv * inv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Non-overlapping `win×win` max pooling over an HWC activation.
+/// Backward recomputes the argmax from the cached input, so no index
+/// cache is needed (ties go to the first element in scan order — the
+/// same rule [`maxpool2d_backward`] applies, keeping the pair exact).
+pub fn maxpool2d(
+    x: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    win: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let (ho, wo) = (h / win, w / win);
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(out.len(), b * ho * wo * c);
+    par::par_rows(out, b, ho * wo * c, threads, |i0, chunk| {
+        for (ii, os) in chunk.chunks_mut(ho * wo * c).enumerate() {
+            let xs = &x[(i0 + ii) * h * w * c..][..h * w * c];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let cell = &mut os[(oy * wo + ox) * c..][..c];
+                    cell.copy_from_slice(&xs[(oy * win * w + ox * win) * c..][..c]);
+                    for dy in 0..win {
+                        for dx_ in 0..win {
+                            if dy == 0 && dx_ == 0 {
+                                continue;
+                            }
+                            let src = &xs[((oy * win + dy) * w + ox * win + dx_) * c..][..c];
+                            for (ov, &sv) in cell.iter_mut().zip(src) {
+                                if sv > *ov {
+                                    *ov = sv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Max-pool backward: route each output gradient to the first window
+/// element (scan order) attaining the max, recomputed from the cached
+/// input `x`. Everything else gets zero.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_backward(
+    x: &[f32],
+    g: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    win: usize,
+    dx: &mut [f32],
+    threads: usize,
+) {
+    let (ho, wo) = (h / win, w / win);
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(g.len(), b * ho * wo * c);
+    debug_assert_eq!(dx.len(), b * h * w * c);
+    par::par_rows(dx, b, h * w * c, threads, |i0, chunk| {
+        for (ii, dxs) in chunk.chunks_mut(h * w * c).enumerate() {
+            let i = i0 + ii;
+            let xs = &x[i * h * w * c..][..h * w * c];
+            let gs = &g[i * ho * wo * c..][..ho * wo * c];
+            dxs.fill(0.0);
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for ci in 0..c {
+                        let (mut best, mut by, mut bx) =
+                            (xs[(oy * win * w + ox * win) * c + ci], 0usize, 0usize);
+                        for dy in 0..win {
+                            for dx_ in 0..win {
+                                let v = xs[((oy * win + dy) * w + ox * win + dx_) * c + ci];
+                                if v > best {
+                                    best = v;
+                                    by = dy;
+                                    bx = dx_;
+                                }
+                            }
+                        }
+                        dxs[((oy * win + by) * w + ox * win + bx) * c + ci] +=
+                            gs[(oy * wo + ox) * c + ci];
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// Clipping flavors (matching `ref.py` exactly).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ClipKind {
@@ -1140,6 +1415,190 @@ mod tests {
             let a2: f32 = a[i * d..(i + 1) * d].iter().map(|x| x * x).sum();
             let g2: f32 = g[i * p..(i + 1) * p].iter().map(|x| x * x).sum();
             assert!((sq[i] - a2 * g2).abs() / (a2 * g2).max(1e-6) < 1e-5);
+        }
+    }
+
+    /// Direct (no-im2col) conv reference: HWC in, HWC out, weight
+    /// `(cin·k², cout)` in the `(ky, kx, ci)` patch order.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_conv(
+        x: &[f32],
+        w_t: &[f32],
+        bias: &[f32],
+        b: usize,
+        cin: usize,
+        h: usize,
+        w: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Vec<f32> {
+        let ho = (h + 2 * pad - k) / stride + 1;
+        let wo = (w + 2 * pad - k) / stride + 1;
+        let mut out = vec![0f32; b * ho * wo * cout];
+        for i in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for q in 0..cout {
+                        let mut acc = bias[q];
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * stride + ky) as isize - pad as isize;
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                for ci in 0..cin {
+                                    let xv = x
+                                        [((i * h + iy as usize) * w + ix as usize) * cin + ci];
+                                    let wv = w_t[((ky * k + kx) * cin + ci) * cout + q];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        out[((i * ho + oy) * wo + ox) * cout + q] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn unfold_matmul_matches_direct_conv() {
+        let mut rng = Xoshiro256::new(11);
+        for &(b, cin, h, w, cout, k, stride, pad) in &[
+            (2usize, 1usize, 5usize, 5usize, 3usize, 3usize, 1usize, 1usize),
+            (3, 4, 6, 7, 2, 3, 2, 0),
+            (1, 2, 4, 4, 5, 1, 1, 0),
+            (2, 3, 5, 5, 4, 5, 1, 2),
+        ] {
+            let ho = (h + 2 * pad - k) / stride + 1;
+            let wo = (w + 2 * pad - k) / stride + 1;
+            let (t, dk) = (ho * wo, cin * k * k);
+            let x = randv(&mut rng, b * h * w * cin);
+            let wt = randv(&mut rng, dk * cout);
+            let bias = randv(&mut rng, cout);
+            let mut patches = vec![0f32; b * t * dk];
+            unfold(&x, b, cin, h, w, k, stride, pad, &mut patches, 3);
+            let mut out = vec![0f32; b * t * cout];
+            linear_forward(&patches, &wt, Some(&bias), &mut out, b * t, dk, cout, 3);
+            let want = naive_conv(&x, &wt, &bias, b, cin, h, w, cout, k, stride, pad);
+            for (o, wv) in out.iter().zip(&want) {
+                assert!((o - wv).abs() < 1e-4, "{o} vs {wv}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_is_the_exact_transpose_of_unfold() {
+        // adjointness <unfold(x), y> == <x, fold(y)> makes fold the
+        // correct dL/dx scatter for any upstream gradient
+        let mut rng = Xoshiro256::new(12);
+        for &(b, cin, h, w, k, stride, pad) in &[
+            (2usize, 3usize, 5usize, 6usize, 3usize, 1usize, 1usize),
+            (1, 2, 7, 7, 3, 2, 0),
+            (2, 1, 4, 4, 2, 2, 1),
+        ] {
+            let ho = (h + 2 * pad - k) / stride + 1;
+            let wo = (w + 2 * pad - k) / stride + 1;
+            let (t, dk) = (ho * wo, cin * k * k);
+            let x = randv(&mut rng, b * h * w * cin);
+            let y = randv(&mut rng, b * t * dk);
+            let mut ux = vec![0f32; b * t * dk];
+            unfold(&x, b, cin, h, w, k, stride, pad, &mut ux, 2);
+            let mut fy = vec![0f32; b * h * w * cin];
+            fold(&y, b, cin, h, w, k, stride, pad, &mut fy, 2);
+            let lhs: f64 = ux.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let rhs: f64 = x.iter().zip(&fy).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "{lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn avgpool_roundtrip_and_transpose() {
+        let mut rng = Xoshiro256::new(13);
+        let (b, c, h, w, win) = (2usize, 3usize, 6usize, 4usize, 2usize);
+        let (ho, wo) = (h / win, w / win);
+        let x = randv(&mut rng, b * h * w * c);
+        let mut out = vec![0f32; b * ho * wo * c];
+        avgpool2d(&x, b, c, h, w, win, &mut out, 2);
+        // spot check one window mean
+        let want = (x[0] + x[1 * c] + x[w * c] + x[(w + 1) * c]) / 4.0;
+        assert!((out[0] - want).abs() < 1e-5);
+        // adjointness: <avg(x), g> == <x, avg_backward(g)>
+        let g = randv(&mut rng, b * ho * wo * c);
+        let mut dx = vec![0f32; b * h * w * c];
+        avgpool2d_backward(&g, b, c, h, w, win, &mut dx, 2);
+        let lhs: f64 = out.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        let (b, c, h, w, win) = (1usize, 1usize, 4usize, 4usize, 2usize);
+        #[rustfmt::skip]
+        let x = vec![
+            1.0f32, 5.0, 2.0, 2.0,
+            3.0,    1.0, 2.0, 9.0,
+            0.0,    0.0, 7.0, 7.0,
+            0.0,    0.0, 7.0, 7.0,
+        ];
+        let mut out = vec![0f32; 4];
+        maxpool2d(&x, b, c, h, w, win, &mut out, 1);
+        assert_eq!(out, vec![5.0, 9.0, 0.0, 7.0]);
+        let g = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut dx = vec![0f32; 16];
+        maxpool2d_backward(&x, &g, b, c, h, w, win, &mut dx, 1);
+        assert_eq!(dx[1], 1.0, "5.0 wins its window");
+        assert_eq!(dx[7], 2.0, "9.0 wins its window");
+        assert_eq!(dx[8], 3.0, "tie at 0.0: first in scan order wins");
+        assert_eq!(dx[10], 4.0, "tie at 7.0: first in scan order wins");
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn conv_ghost_norm_matches_instantiated_reference() {
+        // the im2col ghost-norm contract: unfold the input, then the
+        // linear ghost kernel over (t = spatial positions, d = cin*k^2)
+        // equals the materialized per-sample conv-grad norm
+        let mut rng = Xoshiro256::new(14);
+        let (b, cin, h, w, cout, k, stride, pad) = (3usize, 2, 5, 5, 4, 3, 1, 1);
+        let ho = (h + 2 * pad - k) / stride + 1;
+        let wo = (w + 2 * pad - k) / stride + 1;
+        let (t, dk) = (ho * wo, cin * k * k);
+        let x = randv(&mut rng, b * h * w * cin);
+        let g = randv(&mut rng, b * t * cout);
+        let mut patches = vec![0f32; b * t * dk];
+        unfold(&x, b, cin, h, w, k, stride, pad, &mut patches, 2);
+        let mut gram_a = vec![0f32; b * t * t];
+        let mut gram_g = vec![0f32; b * t * t];
+        let mut sq = vec![0f32; b];
+        ghost_norm(&patches, &g, b, t, dk, cout, &mut gram_a, &mut gram_g, &mut sq, 2);
+        for i in 0..b {
+            // per-sample grad: patches_i^T g_i, norm in f64
+            let mut want = 0f64;
+            for j in 0..dk {
+                for q in 0..cout {
+                    let mut acc = 0f64;
+                    for tt in 0..t {
+                        acc += patches[(i * t + tt) * dk + j] as f64
+                            * g[(i * t + tt) * cout + q] as f64;
+                    }
+                    want += acc * acc;
+                }
+            }
+            assert!(
+                (sq[i] as f64 - want).abs() < 1e-2 * want.max(1.0),
+                "{} vs {}",
+                sq[i],
+                want
+            );
         }
     }
 

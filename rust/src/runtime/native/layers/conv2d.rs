@@ -1,0 +1,345 @@
+//! 2-D convolution as a `DpLayer` via im2col/unfold: the forward pass
+//! unfolds each sample's `(h, w, cin)` HWC activation into
+//! `(t_out, cin*k*k)` patch rows (cached for backward), after which the
+//! convolution *is* a linear layer over `t_out = ho*wo` "tokens" of
+//! width `d = cin*k*k` — exactly the `{B,T,T}` generalized-linear shape
+//! attention routes through. Ghost norms, streamed/stored per-sample
+//! instantiation, and clipped weighted sums therefore reuse the
+//! existing SIMD kernels verbatim with `T = t_out`; the only
+//! conv-specific kernels are `unfold`/`fold` (exact transposes of each
+//! other), so backward-to-data is `backward_data` into the unfolded
+//! gradient followed by a `fold` scatter-add.
+//!
+//! Layout contract: activations are HWC per sample (spatial position
+//! major, channels innermost), so the `(b, t_out, cout)` output
+//! gradient handed down by the tape is *directly* the right operand of
+//! every norm/sum kernel — no transposes anywhere. The weight is stored
+//! `(cin*k*k, cout)` row-major with patch element order
+//! `(ky*k + kx)*cin + ci`, matching `unfold`'s column order and the
+//! linear kernels' `(d, p)` convention.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::super::kernels;
+use super::super::model::conv_out;
+use super::{Ctx, DpLayer, LayerIn, NormRoute, Scratch};
+use crate::arch::{LayerDims, LayerKind};
+use crate::util::rng::{GaussianSource, Xoshiro256};
+
+/// `out[b, t, co] = sum_{ky,kx,ci} x[b, patch(t,ky,kx), ci] * W[(ky,kx,ci), co] + bias[co]`.
+pub struct Conv2d {
+    name: String,
+    cin: usize,
+    h: usize,
+    w: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    /// Per-tensor trainability `[weight, bias]` (same contract as
+    /// `Linear`): frozen tensors skip their norm/sum kernels, while
+    /// forward and `backward_data` always run.
+    train: [bool; 2],
+}
+
+impl Conv2d {
+    /// Build a conv layer over `(cin, h, w)` HWC input, fully trainable.
+    pub fn new(
+        name: String,
+        cin: usize,
+        h: usize,
+        w: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Self {
+            name,
+            cin,
+            h,
+            w,
+            cout,
+            k,
+            stride,
+            pad,
+            train: [true, true],
+        }
+    }
+
+    /// Set the `[weight, bias]` trainability mask.
+    pub fn with_trainable(mut self, train: [bool; 2]) -> Self {
+        self.train = train;
+        self
+    }
+
+    /// Output spatial positions `ho * wo` — the conv layer's own T,
+    /// independent of the spec-level `ctx.t` (conv models run at
+    /// `seq = 1`; each conv layer carries its per-layer token count).
+    fn t_out(&self) -> usize {
+        conv_out(self.h, self.k, self.stride, self.pad) * conv_out(self.w, self.k, self.stride, self.pad)
+    }
+
+    /// Patch width `cin * k * k` — the unfolded d.
+    fn d(&self) -> usize {
+        self.cin * self.k * self.k
+    }
+}
+
+impl DpLayer for Conv2d {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.cin * self.h * self.w
+    }
+
+    fn out_width(&self) -> usize {
+        self.cout * self.t_out()
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        2
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![vec![self.d(), self.cout], vec![self.cout]]
+    }
+
+    fn dims(&self, _t: usize) -> Option<LayerDims> {
+        // the conv layer's T is its own output spatial count, not the
+        // spec-level token count the tape passes in
+        Some(LayerDims {
+            kind: LayerKind::Conv,
+            name: self.name.clone(),
+            t: self.t_out() as u64,
+            d: self.d() as u64,
+            p: self.cout as u64,
+        })
+    }
+
+    fn psg_len(&self) -> usize {
+        if self.train[0] {
+            self.d() * self.cout
+        } else {
+            0
+        }
+    }
+
+    fn cache_lens(&self, ctx: Ctx) -> Vec<usize> {
+        // the unfolded patches: backward's norm/sum kernels read them as
+        // the "input activation" of the equivalent linear layer
+        vec![ctx.b * self.t_out() * self.d()]
+    }
+
+    fn init(&self, rng: Xoshiro256, params: &mut [Vec<f32>], _is_head: bool) {
+        // He init over the patch fan-in (conv layers feed ReLUs; a conv
+        // is never the damped head)
+        let scale = (2.0 / self.d() as f32).sqrt();
+        let mut gs = GaussianSource::from_rng(rng);
+        gs.fill_f32(&mut params[0]);
+        for v in params[0].iter_mut() {
+            *v *= scale;
+        }
+        for v in params[1].iter_mut() {
+            *v = 0.0;
+        }
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        params: &[Vec<f32>],
+        out: &mut [f32],
+        cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        kernels::unfold(
+            x.feat(),
+            ctx.b,
+            self.cin,
+            self.h,
+            self.w,
+            self.k,
+            self.stride,
+            self.pad,
+            &mut cache[0],
+            ctx.threads,
+        );
+        kernels::linear_forward(
+            &cache[0],
+            &params[0],
+            Some(&params[1]),
+            out,
+            ctx.b * self.t_out(),
+            self.d(),
+            self.cout,
+            ctx.threads,
+        );
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        // unfolded gradient in the composite-layer scratch, then fold
+        // (the exact transpose of unfold) scatter-adds it back onto the
+        // input's HWC geometry
+        let n_unf = ctx.b * self.t_out() * self.d();
+        let g_unf = &mut scratch.attn[..n_unf];
+        kernels::backward_data(
+            g_out,
+            &params[0],
+            g_unf,
+            ctx.b * self.t_out(),
+            self.d(),
+            self.cout,
+            ctx.threads,
+        );
+        kernels::fold(
+            g_unf,
+            ctx.b,
+            self.cin,
+            self.h,
+            self.w,
+            self.k,
+            self.stride,
+            self.pad,
+            g_in,
+            ctx.threads,
+        );
+    }
+
+    fn accum_sq_norms(
+        &self,
+        _x: LayerIn<'_>,
+        g_out: &[f32],
+        route: NormRoute,
+        _params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, self.t_out());
+        if self.train[0] {
+            match route {
+                NormRoute::Ghost => kernels::ghost_norm(
+                    &cache[0],
+                    g_out,
+                    b,
+                    t,
+                    self.d(),
+                    self.cout,
+                    scratch.gram_a,
+                    scratch.gram_g,
+                    sq,
+                    ctx.threads,
+                ),
+                NormRoute::Inst => kernels::psg_norms_streaming(
+                    &cache[0],
+                    g_out,
+                    b,
+                    t,
+                    self.d(),
+                    self.cout,
+                    scratch.stream,
+                    sq,
+                    ctx.threads,
+                ),
+            }
+        }
+        if self.train[1] {
+            kernels::bias_sq_norms(g_out, b, t, self.cout, scratch.small, sq, ctx.threads);
+        }
+    }
+
+    fn clipped_grads(
+        &self,
+        _x: LayerIn<'_>,
+        g_out: &[f32],
+        c: Option<&[f32]>,
+        _params: &[Vec<f32>],
+        cache: &[Vec<f32>],
+        scratch: &mut Scratch<'_>,
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (gw, gb) = grads.split_at_mut(1);
+        let (b, t) = (ctx.b, self.t_out());
+        if self.train[0] {
+            kernels::weighted_grad(
+                &cache[0],
+                g_out,
+                c,
+                b,
+                t,
+                self.d(),
+                self.cout,
+                scratch.partials,
+                &mut gw[0],
+                ctx.threads,
+            );
+        }
+        if self.train[1] {
+            kernels::bias_grad(g_out, c, b, t, self.cout, &mut gb[0]);
+        }
+    }
+
+    fn psg_norms_stored(
+        &self,
+        x: LayerIn<'_>,
+        g_out: &[f32],
+        store: &mut [f32],
+        scratch: &mut Scratch<'_>,
+        sq: &mut [f32],
+        ctx: Ctx,
+    ) {
+        let (b, t) = (ctx.b, self.t_out());
+        debug_assert!(self.train[0], "stored-psg route requires a trainable weight");
+        // this hook has no cache access, so re-unfold the input into the
+        // composite-layer scratch (sized >= b * t_out * d for conv)
+        let n_unf = b * t * self.d();
+        let patches = &mut scratch.attn[..n_unf];
+        kernels::unfold(
+            x.feat(),
+            b,
+            self.cin,
+            self.h,
+            self.w,
+            self.k,
+            self.stride,
+            self.pad,
+            patches,
+            ctx.threads,
+        );
+        kernels::psg_instantiate(patches, g_out, b, t, self.d(), self.cout, store, ctx.threads);
+        kernels::sq_norms_from_psg(store, b, self.d() * self.cout, sq, ctx.threads);
+        if self.train[1] {
+            kernels::bias_sq_norms(g_out, b, t, self.cout, scratch.small, sq, ctx.threads);
+        }
+    }
+
+    fn psg_weighted_sum(
+        &self,
+        store: &[f32],
+        g_out: &[f32],
+        c: &[f32],
+        grads: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        let (gw, gb) = grads.split_at_mut(1);
+        kernels::weighted_sum_psg(store, c, ctx.b, self.d(), self.cout, &mut gw[0], ctx.threads);
+        if self.train[1] {
+            kernels::bias_grad(g_out, Some(c), ctx.b, self.t_out(), self.cout, &mut gb[0]);
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Stateless flatten: the HWC-per-sample activation layout means a
+//! sample's `(h*w, c)` spatial block is already one contiguous run of
+//! `n = c*h*w` floats, so flatten is a pure identity copy — it exists
+//! in the plan as the explicit shape transition from the conv trunk's
+//! spatial geometry to the linear tail's feature rows, and as the
+//! marker the complexity walks use to stop interpreting widths
+//! spatially. Backward is the same identity.
+
+use super::{Ctx, DpLayer, LayerIn, Scratch};
+use crate::arch::LayerDims;
+
+/// Identity shape transition over `n` features per sample.
+pub struct Flatten {
+    name: String,
+    n: usize,
+}
+
+impl Flatten {
+    /// Build a flatten over `n = c*h*w` features.
+    pub fn new(name: String, n: usize) -> Self {
+        Self { name, n }
+    }
+}
+
+impl DpLayer for Flatten {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.n
+    }
+
+    fn out_width(&self) -> usize {
+        self.n
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        0
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        Vec::new()
+    }
+
+    fn dims(&self, _t: usize) -> Option<LayerDims> {
+        None
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        _params: &[Vec<f32>],
+        out: &mut [f32],
+        _cache: &mut [Vec<f32>],
+        _ctx: Ctx,
+    ) {
+        out.copy_from_slice(x.feat());
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        _x: LayerIn<'_>,
+        _out: &[f32],
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        g_in: &mut [f32],
+        _ctx: Ctx,
+    ) {
+        g_in.copy_from_slice(g_out);
+    }
+}

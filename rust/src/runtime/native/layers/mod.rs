@@ -46,19 +46,25 @@
 #![allow(clippy::too_many_arguments)]
 
 pub mod attention;
+pub mod conv2d;
 pub mod embedding;
+pub mod flatten;
 pub mod layernorm;
 pub mod linear;
 pub mod lora;
+pub mod pool;
 pub mod pos_embedding;
 pub mod relu;
 pub mod tied_linear;
 
 pub use attention::Attention;
+pub use conv2d::Conv2d;
 pub use embedding::Embedding;
+pub use flatten::Flatten;
 pub use layernorm::LayerNorm;
 pub use linear::Linear;
 pub use lora::LoraLinear;
+pub use pool::Pool2d;
 pub use pos_embedding::PosEmbedding;
 pub use relu::Relu;
 pub use tied_linear::TiedLinear;
@@ -151,9 +157,11 @@ pub struct Scratch<'a> {
     pub partials: &'a mut [f32],
     /// Composite-layer backward scratch: `>= B*T * 4*d_model` for the
     /// widest attention layer (the recomputed `[g_ao | g_qkv]` pair),
-    /// and `>= B*T * (rank + d)` for the widest LoRA layer (the
-    /// recomputed `[gA | gA·A^T]` pair); empty when the stack has
-    /// neither.
+    /// `>= B*T * (rank + d)` for the widest LoRA layer (the recomputed
+    /// `[gA | gA·A^T]` pair), and `>= B * t_out * cin*k*k` for the
+    /// widest conv layer (the unfolded data gradient before `fold`,
+    /// plus re-unfolded patches on the stored-psg route); empty when
+    /// the stack has none of them.
     pub attn: &'a mut [f32],
 }
 
@@ -417,6 +425,48 @@ pub fn build_stack(spec: &NativeSpec) -> Result<Vec<Box<dyn DpLayer>>> {
                         .with_trainable([mask[0], mask[1], mask[2], mask[3]]),
                 ));
             }
+            PlanOp::Conv2d {
+                cin,
+                h,
+                w,
+                cout,
+                k: kk,
+                stride,
+                pad,
+            } => {
+                if kk == 0 || stride == 0 || kk > h + 2 * pad || kk > w + 2 * pad {
+                    bail!(
+                        "conv layer '{}' of model '{}': kernel {}x{} stride {} does not \
+                         fit the {}x{} (+{} pad) input",
+                        l.name,
+                        spec.name,
+                        kk,
+                        kk,
+                        stride,
+                        h,
+                        w,
+                        pad
+                    );
+                }
+                out.push(Box::new(
+                    Conv2d::new(l.name, cin, h, w, cout, kk, stride, pad)
+                        .with_trainable([mask[0], mask[1]]),
+                ));
+            }
+            PlanOp::Pool2d { kind, c, h, w, win } => {
+                if win == 0 || h % win != 0 || w % win != 0 {
+                    bail!(
+                        "pool layer '{}' of model '{}': window {} must tile the {}x{} input",
+                        l.name,
+                        spec.name,
+                        win,
+                        h,
+                        w
+                    );
+                }
+                out.push(Box::new(Pool2d::new(l.name, kind, c, h, w, win)));
+            }
+            PlanOp::Flatten { n } => out.push(Box::new(Flatten::new(l.name, n))),
             PlanOp::PosEmbedding { seq, dim } => {
                 if k == 0 {
                     bail!(

@@ -1,0 +1,132 @@
+//! Stateless 2-D pooling (average / max) over non-overlapping `win×win`
+//! windows of an HWC activation. Contributes no norms and no gradients;
+//! the tape only routes the data gradient through it. Average pooling's
+//! backward is the exact transpose (spread `g / win²` uniformly); max
+//! pooling's backward recomputes the argmax per (window, channel) from
+//! the cached *input* activation the tape already holds — first
+//! occurrence in scan order wins ties, so the route is deterministic
+//! and no index cache is needed.
+
+use super::super::kernels;
+use super::super::model::PoolKind;
+use super::{Ctx, DpLayer, LayerIn, Scratch};
+use crate::arch::LayerDims;
+
+/// Non-overlapping `win×win` pooling over `(c, h, w)` HWC input.
+pub struct Pool2d {
+    name: String,
+    kind: PoolKind,
+    c: usize,
+    h: usize,
+    w: usize,
+    win: usize,
+}
+
+impl Pool2d {
+    /// Build a pooling layer; `win` must tile `h` and `w` exactly
+    /// (validated by the plan).
+    pub fn new(name: String, kind: PoolKind, c: usize, h: usize, w: usize, win: usize) -> Self {
+        Self {
+            name,
+            kind,
+            c,
+            h,
+            w,
+            win,
+        }
+    }
+}
+
+impl DpLayer for Pool2d {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn in_width(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    fn out_width(&self) -> usize {
+        self.c * (self.h / self.win) * (self.w / self.win)
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        0
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        Vec::new()
+    }
+
+    fn dims(&self, _t: usize) -> Option<LayerDims> {
+        None
+    }
+
+    fn forward(
+        &self,
+        x: LayerIn<'_>,
+        _params: &[Vec<f32>],
+        out: &mut [f32],
+        _cache: &mut [Vec<f32>],
+        ctx: Ctx,
+    ) {
+        match self.kind {
+            PoolKind::Avg => kernels::avgpool2d(
+                x.feat(),
+                ctx.b,
+                self.c,
+                self.h,
+                self.w,
+                self.win,
+                out,
+                ctx.threads,
+            ),
+            PoolKind::Max => kernels::maxpool2d(
+                x.feat(),
+                ctx.b,
+                self.c,
+                self.h,
+                self.w,
+                self.win,
+                out,
+                ctx.threads,
+            ),
+        }
+    }
+
+    fn backward_data(
+        &self,
+        g_out: &[f32],
+        x: LayerIn<'_>,
+        _out: &[f32],
+        _params: &[Vec<f32>],
+        _cache: &[Vec<f32>],
+        _scratch: &mut Scratch<'_>,
+        g_in: &mut [f32],
+        ctx: Ctx,
+    ) {
+        match self.kind {
+            PoolKind::Avg => kernels::avgpool2d_backward(
+                g_out,
+                ctx.b,
+                self.c,
+                self.h,
+                self.w,
+                self.win,
+                g_in,
+                ctx.threads,
+            ),
+            PoolKind::Max => kernels::maxpool2d_backward(
+                x.feat(),
+                g_out,
+                ctx.b,
+                self.c,
+                self.h,
+                self.w,
+                self.win,
+                g_in,
+                ctx.threads,
+            ),
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //!
 //! The layer holds no tensor of its own — its single param slot is a
 //! canonical-tensor alias resolved by the backend's parameter-slot
-//! indirection (see `NativeBackend::with_style`), so `params[0]` here
+//! indirection (see `NativeBackend::builder`), so `params[0]` here
 //! *is* the embedding table. Both norm routes work off the same
 //! generalized-linear structure as [`super::Linear`], with the roles of
 //! `a`/`g` swapped in the weighted sum so the clipped gradient lands in

@@ -119,38 +119,106 @@ pub struct NativeBackend {
     // scratch sizing (computed once from the stack)
     max_dp: usize,
     max_small: usize,
-    /// Attention recompute scratch (`[g_ao | g_qkv]`): `B*T * 4*d` of
-    /// the widest attention layer, 0 when the stack has none.
+    /// Composite-layer backward scratch: `B*T * 4*d` of the widest
+    /// attention layer, `B*T * (rank+d)` of the widest LoRA layer, or
+    /// `B * t_out * cin*k*k` of the widest conv layer (the unfolded
+    /// data gradient); 0 when the stack has none of them.
     max_attn: usize,
-    need_gram: bool,
+    /// Ghost-norm Gram scratch floats: `B * max(t_layer^2)` over the
+    /// ghost-routed layers whose own token count exceeds 1 (`t_layer`
+    /// is the spec seq for linear/attention layers and the output
+    /// spatial count for conv layers); 0 when no layer needs Grams.
+    max_gram: usize,
     need_stream_two: bool,
     need_stream_one: bool,
 }
 
-impl NativeBackend {
-    /// Build with the default `all-layer` clipping style (the paper's
-    /// flat clipping; bitwise-identical to the pre-style behavior).
-    pub fn new(spec: NativeSpec, strategy: Strategy, threads: usize) -> Result<Self> {
-        Self::with_style(spec, strategy, ClippingStyle::AllLayer, threads)
+/// Construction options for a [`NativeBackend`] — the single entry
+/// point (`NativeBackend::builder(spec, strategy)`) replacing the old
+/// `new` / `with_style` / `with_style_dispatch` constructor ladder.
+/// Defaults: all-layer clipping, formulaic `2T^2 < pd` dispatch, and
+/// auto-detected threads (`0`).
+#[must_use = "call .build() to construct the backend"]
+pub struct NativeBackendBuilder {
+    spec: NativeSpec,
+    strategy: Strategy,
+    style: ClippingStyle,
+    dispatch: Dispatch,
+    threads: usize,
+}
+
+impl NativeBackendBuilder {
+    /// Clipping granularity (all-layer / layer-wise / group-wise:k).
+    pub fn style(mut self, style: ClippingStyle) -> Self {
+        self.style = style;
+        self
     }
 
-    /// Build with an explicit clipping style and the formulaic
-    /// ghost-vs-instantiation dispatch (`2T^2 < pd`).
+    /// Ghost-vs-instantiation norm-route dispatch for the mixed
+    /// strategies — the paper's formula or a measured per-machine cost
+    /// model (see `complexity::dispatch` and `autotune`). Non-mixed
+    /// strategies force their route and ignore this.
+    pub fn dispatch(mut self, dispatch: Dispatch) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    /// Worker threads (`0` = auto-detect).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Validate the spec and construct the backend.
+    pub fn build(self) -> Result<NativeBackend> {
+        NativeBackend::build_impl(self.spec, self.strategy, self.style, self.threads, &self.dispatch)
+    }
+}
+
+impl NativeBackend {
+    /// Start building a (model, strategy) backend; finish with
+    /// [`NativeBackendBuilder::build`]. See the builder for the
+    /// defaults its setters override.
+    pub fn builder(spec: NativeSpec, strategy: Strategy) -> NativeBackendBuilder {
+        NativeBackendBuilder {
+            spec,
+            strategy,
+            style: ClippingStyle::AllLayer,
+            dispatch: Dispatch::Formula,
+            threads: 0,
+        }
+    }
+
+    /// Build with the default `all-layer` clipping style.
+    #[deprecated(note = "use NativeBackend::builder(spec, strategy).threads(..).build()")]
+    pub fn new(spec: NativeSpec, strategy: Strategy, threads: usize) -> Result<Self> {
+        Self::build_impl(spec, strategy, ClippingStyle::AllLayer, threads, &Dispatch::Formula)
+    }
+
+    /// Build with an explicit clipping style.
+    #[deprecated(note = "use NativeBackend::builder(spec, strategy).style(..).build()")]
     pub fn with_style(
         spec: NativeSpec,
         strategy: Strategy,
         style: ClippingStyle,
         threads: usize,
     ) -> Result<Self> {
-        Self::with_style_dispatch(spec, strategy, style, threads, &Dispatch::Formula)
+        Self::build_impl(spec, strategy, style, threads, &Dispatch::Formula)
     }
 
     /// Build with an explicit clipping style and norm-route dispatch.
-    /// `dispatch` decides ghost vs instantiation per mixed-strategy
-    /// layer — either the paper's formula or a measured per-machine
-    /// cost model (see `complexity::dispatch` and `autotune`). The
-    /// non-mixed strategies force their route and ignore it.
+    #[deprecated(note = "use NativeBackend::builder(spec, strategy).dispatch(..).build()")]
     pub fn with_style_dispatch(
+        spec: NativeSpec,
+        strategy: Strategy,
+        style: ClippingStyle,
+        threads: usize,
+        dispatch: &Dispatch,
+    ) -> Result<Self> {
+        Self::build_impl(spec, strategy, style, threads, dispatch)
+    }
+
+    fn build_impl(
         spec: NativeSpec,
         strategy: Strategy,
         style: ClippingStyle,
@@ -214,6 +282,9 @@ impl NativeBackend {
                 spec.name
             );
         }
+        // kind-specific plan validation (conv geometry, flag/kind
+        // consistency) before any layer construction
+        spec.validate_kind()?;
         // parse + validate the trainability preset up front (unknown
         // mask names, lora on a lora-less plan, all-frozen specs)
         spec.trainable_preset()?;
@@ -402,7 +473,7 @@ impl NativeBackend {
         let mut max_dp = 1usize;
         let mut max_small = 1usize;
         let mut max_attn = 0usize;
-        let mut need_gram = false;
+        let mut max_gram = 0usize;
         let mut need_stream_two = false;
         let mut need_stream_one = false;
         for (k, l) in stack.iter().enumerate() {
@@ -429,7 +500,7 @@ impl NativeBackend {
                         }
                         if mask[0] || mask[2] {
                             if routes[k] == NormRoute::Ghost && t > 1 {
-                                need_gram = true;
+                                max_gram = max_gram.max(spec.batch * t * t);
                             }
                             if routes[k] == NormRoute::Inst {
                                 need_stream_two = true;
@@ -453,11 +524,34 @@ impl NativeBackend {
                         }
                         if mask[0] || mask[2] || mask[3] {
                             if routes[k] == NormRoute::Ghost && t > 1 {
-                                need_gram = true;
+                                max_gram = max_gram.max(spec.batch * t * t);
                             }
                             if routes[k] == NormRoute::Inst {
                                 need_stream_two = true;
                                 need_stream_one = true;
+                            }
+                        }
+                    }
+                    LayerKind::Conv => {
+                        // the conv layer runs the linear kernels at its
+                        // own token count t_out (output spatial
+                        // positions), not the spec seq: gram/stream
+                        // sizing must use the per-layer dims. The fold
+                        // scratch (`attn`) is unconditional — frozen
+                        // convs still route the data gradient.
+                        let (tt, dd, pp) = (d.t as usize, d.d as usize, d.p as usize);
+                        max_small = max_small.max(pp);
+                        max_attn = max_attn.max(spec.batch * tt * dd);
+                        if mask[0] {
+                            max_dp = max_dp.max(dd * pp);
+                            if routes[k] == NormRoute::Ghost && tt > 1 {
+                                max_gram = max_gram.max(spec.batch * tt * tt);
+                            }
+                            if routes[k] == NormRoute::Inst {
+                                need_stream_two = true;
+                                if !store_psg[k] {
+                                    need_stream_one = true;
+                                }
                             }
                         }
                     }
@@ -466,7 +560,7 @@ impl NativeBackend {
                         if mask[0] {
                             max_dp = max_dp.max((d.d * d.p) as usize);
                             if routes[k] == NormRoute::Ghost && t > 1 {
-                                need_gram = true;
+                                max_gram = max_gram.max(spec.batch * t * t);
                             }
                             if routes[k] == NormRoute::Inst {
                                 need_stream_two = true;
@@ -538,7 +632,7 @@ impl NativeBackend {
             max_dp,
             max_small,
             max_attn,
-            need_gram,
+            max_gram,
             need_stream_two,
             need_stream_one,
         })
@@ -692,7 +786,6 @@ impl NativeBackend {
     ) -> Result<StepOut> {
         self.check_batch(x, y)?;
         let b = self.spec.batch;
-        let t = self.spec.seq;
         let rows = self.rows();
         let nl = self.stack.len();
         let workers = self.ctx().workers();
@@ -754,8 +847,13 @@ impl NativeBackend {
         } else {
             let two = self.two_pass();
             let need_stream = if two { self.need_stream_two } else { self.need_stream_one };
-            let mut gram_a = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
-            let mut gram_g = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+            // gram scratch is sized per-layer (`max_gram` covers the
+            // largest b * t_layer^2 over ghost layers — conv layers run
+            // at their own t_out, not the spec seq)
+            let mut gram_a =
+                if self.max_gram > 0 { self.arena.take(self.max_gram) } else { Vec::new() };
+            let mut gram_g =
+                if self.max_gram > 0 { self.arena.take(self.max_gram) } else { Vec::new() };
             let mut stream = if need_stream {
                 self.arena.take(workers * self.max_dp)
             } else {
@@ -882,7 +980,7 @@ impl NativeBackend {
             if need_stream {
                 self.arena.give(stream);
             }
-            if self.need_gram {
+            if self.max_gram > 0 {
                 self.arena.give(gram_g);
                 self.arena.give(gram_a);
             }
@@ -1010,7 +1108,6 @@ impl NativeBackend {
         self.check_batch(x, y)?;
         self.arena.begin_step();
         let b = self.spec.batch;
-        let t = self.spec.seq;
         let nl = self.stack.len();
         let workers = self.ctx().workers();
         let input = self.layer_input(x);
@@ -1031,8 +1128,8 @@ impl NativeBackend {
         } else {
             Vec::new()
         };
-        let mut gram_a = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
-        let mut gram_g = if self.need_gram { self.arena.take(b * t * t) } else { Vec::new() };
+        let mut gram_a = if self.max_gram > 0 { self.arena.take(self.max_gram) } else { Vec::new() };
+        let mut gram_g = if self.max_gram > 0 { self.arena.take(self.max_gram) } else { Vec::new() };
         let need_stream = self.need_stream_two;
         let mut stream = if need_stream {
             self.arena.take(workers * self.max_dp)
@@ -1074,7 +1171,7 @@ impl NativeBackend {
         if need_stream {
             self.arena.give(stream);
         }
-        if self.need_gram {
+        if self.max_gram > 0 {
             self.arena.give(gram_g);
             self.arena.give(gram_a);
         }
@@ -1348,7 +1445,7 @@ mod tests {
     fn step_is_deterministic() {
         let (x, y) = batch_for(&tiny_spec(), 7);
         let run = || -> Vec<Vec<f32>> {
-            let mut bk = NativeBackend::new(tiny_spec(), Strategy::Bk, 2).unwrap();
+            let mut bk = NativeBackend::builder(tiny_spec(), Strategy::Bk).threads(2).build().unwrap();
             bk.init(3).unwrap();
             bk.step(&x, &y, &[], &hyper()).unwrap();
             bk.state().unwrap()
@@ -1376,7 +1473,7 @@ mod tests {
                 ] {
                     let (x, y) = batch_for(&spec, 9);
                     let mut be =
-                        NativeBackend::with_style(spec.clone(), strat, style, 2).unwrap();
+                        NativeBackend::builder(spec.clone(), strat).style(style).threads(2).build().unwrap();
                     be.init(1).unwrap();
                     be.step(&x, &y, &[], &hyper()).unwrap();
                     assert!(be.alloc_stats().fresh_allocs_last_step > 0, "cold step allocates");
@@ -1398,7 +1495,7 @@ mod tests {
     fn training_reduces_loss() {
         let spec = tiny_spec();
         let (x, y) = batch_for(&spec, 11);
-        let mut be = NativeBackend::new(spec, Strategy::Bk, 2).unwrap();
+        let mut be = NativeBackend::builder(spec, Strategy::Bk).threads(2).build().unwrap();
         be.init(5).unwrap();
         let l0 = be.eval_loss(&x, &y).unwrap();
         let mut h = hyper();
@@ -1419,7 +1516,7 @@ mod tests {
             ClippingStyle::GroupWise(2),
         ] {
             let (x, y) = batch_for(&spec, 13);
-            let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+            let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).style(style).threads(2).build().unwrap();
             be.init(5).unwrap();
             let l0 = be.eval_loss(&x, &y).unwrap();
             let mut h = hyper();
@@ -1442,7 +1539,7 @@ mod tests {
         let spec = tiny_gpt_spec();
         let (x, y) = batch_for(&spec, 17);
         let mut be =
-            NativeBackend::with_style(spec.clone(), Strategy::Bk, ClippingStyle::LayerWise, 2)
+            NativeBackend::builder(spec.clone(), Strategy::Bk).style(ClippingStyle::LayerWise).threads(2).build()
                 .unwrap();
         be.init(5).unwrap();
         let sq = be.per_sample_sq_norms(&x, &y).unwrap();
@@ -1464,27 +1561,27 @@ mod tests {
     fn transformer_spec_validation() {
         let mut s = tiny_gpt_spec();
         s.attn_heads = 3; // does not divide d_in = 8
-        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        let err = NativeBackend::builder(s, Strategy::Bk).threads(1).build().unwrap_err().to_string();
         assert!(err.contains("attn_heads"), "{err}");
         let mut s = tiny_gpt_spec();
         s.vocab = 0;
         s.n_classes = 11;
-        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        let err = NativeBackend::builder(s, Strategy::Bk).threads(1).build().unwrap_err().to_string();
         assert!(err.contains("vocab"), "{err}");
         let mut s = tiny_gpt_spec();
         s.ff = 0;
-        assert!(NativeBackend::new(s, Strategy::Bk, 1).is_err());
+        assert!(NativeBackend::builder(s, Strategy::Bk).threads(1).build().is_err());
         // tying is a transformer-head property: no blocks, no tie
         let mut s = tiny_tok_spec();
         s.tied = true;
-        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        let err = NativeBackend::builder(s, Strategy::Bk).threads(1).build().unwrap_err().to_string();
         assert!(err.contains("tied"), "{err}");
     }
 
     #[test]
     fn every_registry_model_builds_with_consistent_census() {
         for spec in NativeSpec::registry() {
-            let be = NativeBackend::new(spec.clone(), Strategy::Bk, 1).unwrap();
+            let be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(1).build().unwrap();
             assert_eq!(be.info().n_params, spec.n_params(), "{}", spec.name);
             assert_eq!(
                 be.tensor_groups().len(),
@@ -1498,20 +1595,16 @@ mod tests {
     #[test]
     fn tied_gpt_shares_one_canonical_tensor() {
         let spec = tiny_tied_gpt_spec();
-        let be = NativeBackend::with_style(
-            spec.clone(),
-            Strategy::Bk,
-            ClippingStyle::LayerWise,
-            2,
-        )
-        .unwrap();
-        let untied = NativeBackend::with_style(
-            tiny_gpt_spec(),
-            Strategy::Bk,
-            ClippingStyle::LayerWise,
-            2,
-        )
-        .unwrap();
+        let be = NativeBackend::builder(spec.clone(), Strategy::Bk)
+            .style(ClippingStyle::LayerWise)
+            .threads(2)
+            .build()
+            .unwrap();
+        let untied = NativeBackend::builder(tiny_gpt_spec(), Strategy::Bk)
+            .style(ClippingStyle::LayerWise)
+            .threads(2)
+            .build()
+            .unwrap();
         // one tensor fewer than untied (head_w + head_b collapse into
         // emb_w), and the state census follows the canonical tensors
         assert_eq!(
@@ -1531,7 +1624,7 @@ mod tests {
     fn tied_gpt_trains_and_norms_include_cross_term() {
         let spec = tiny_tied_gpt_spec();
         let (x, y) = batch_for(&spec, 23);
-        let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(2).build().unwrap();
         be.init(5).unwrap();
         let sq = be.per_sample_sq_norms(&x, &y).unwrap();
         assert_eq!(sq.len(), spec.batch);
@@ -1561,13 +1654,13 @@ mod tests {
         // in tests/tied_golden.rs and the differential harness oracle.)
         let tied_spec = tiny_tied_gpt_spec();
         let (x, y) = batch_for(&tied_spec, 29);
-        let mut tb = NativeBackend::new(tied_spec.clone(), Strategy::Bk, 2).unwrap();
+        let mut tb = NativeBackend::builder(tied_spec.clone(), Strategy::Bk).threads(2).build().unwrap();
         tb.init(7).unwrap();
         let tied_params = tb.state().unwrap();
 
         // untied twin with head_w = emb_w^T, head_b = 0
         let untied_spec = tiny_gpt_spec();
-        let mut ub = NativeBackend::new(untied_spec.clone(), Strategy::Bk, 2).unwrap();
+        let mut ub = NativeBackend::builder(untied_spec.clone(), Strategy::Bk).threads(2).build().unwrap();
         let names = untied_spec.info().param_names;
         let emb_w = tied_params[0].clone();
         let (vocab, d) = (untied_spec.vocab, untied_spec.d_in);
@@ -1609,7 +1702,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_shapes_and_tokens() {
-        let mut be = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        let mut be = NativeBackend::builder(tiny_spec(), Strategy::Bk).threads(1).build().unwrap();
         be.init(0).unwrap();
         let bad_x = BatchX::F32(vec![0.0; 5]);
         assert!(be.step(&bad_x, &[0; 4], &[], &hyper()).is_err());
@@ -1619,7 +1712,7 @@ mod tests {
         assert!(be.eval_loss(&tok, &[0; 4]).is_err());
 
         // token models reject features and out-of-range ids
-        let mut tb = NativeBackend::new(tiny_tok_spec(), Strategy::Bk, 1).unwrap();
+        let mut tb = NativeBackend::builder(tiny_tok_spec(), Strategy::Bk).threads(1).build().unwrap();
         tb.init(0).unwrap();
         let feats = BatchX::F32(vec![0.0; 4 * 5 * 6]);
         assert!(tb.eval_loss(&feats, &[0; 20]).is_err());
@@ -1632,14 +1725,14 @@ mod tests {
     fn new_splits_clip_and_optimizer_errors() {
         let mut s = tiny_spec();
         s.clip_fn = "quantum".into();
-        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        let err = NativeBackend::builder(s, Strategy::Bk).threads(1).build().unwrap_err().to_string();
         assert!(err.contains("unknown clip_fn 'quantum'"), "{err}");
         assert!(err.contains("abadi"), "lists the valid clip_fns: {err}");
         assert!(!err.contains("optimizer"), "clip error must not mention optimizers: {err}");
 
         let mut s = tiny_spec();
         s.optimizer = "lion".into();
-        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        let err = NativeBackend::builder(s, Strategy::Bk).threads(1).build().unwrap_err().to_string();
         assert!(err.contains("unknown optimizer 'lion'"), "{err}");
         assert!(err.contains("sgd"), "lists the valid optimizers: {err}");
         assert!(!err.contains("clip_fn"), "optimizer error must not mention clip_fn: {err}");
@@ -1648,16 +1741,16 @@ mod tests {
     #[test]
     fn state_roundtrip_restores_params() {
         let (x, y) = batch_for(&tiny_spec(), 2);
-        let mut a = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        let mut a = NativeBackend::builder(tiny_spec(), Strategy::Bk).threads(1).build().unwrap();
         a.init(8).unwrap();
         a.step(&x, &y, &[], &hyper()).unwrap();
         let snap = a.state().unwrap();
         let la = a.eval_loss(&x, &y).unwrap();
-        let mut b = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        let mut b = NativeBackend::builder(tiny_spec(), Strategy::Bk).threads(1).build().unwrap();
         b.load_state(snap).unwrap();
         let lb = b.eval_loss(&x, &y).unwrap();
         assert_eq!(la, lb);
-        let mut c = NativeBackend::new(tiny_spec(), Strategy::Bk, 1).unwrap();
+        let mut c = NativeBackend::builder(tiny_spec(), Strategy::Bk).threads(1).build().unwrap();
         assert!(c.load_state(vec![vec![0.0; 1]]).is_err());
     }
 
@@ -1667,7 +1760,7 @@ mod tests {
         spec.optimizer = "adam".into();
         spec.trainable = "bias-only".into();
         let (x, y) = batch_for(&spec, 31);
-        let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(2).build().unwrap();
         be.init(5).unwrap();
         let info = be.info().clone();
         // 1-D tensors train, 2-D tensors freeze
@@ -1700,7 +1793,7 @@ mod tests {
         let mut spec = tiny_gpt_spec();
         spec.trainable = "lora:2".into();
         let (x, y) = batch_for(&spec, 37);
-        let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(2).build().unwrap();
         be.init(5).unwrap();
         let info = be.info().clone();
         for (i, n) in info.param_names.iter().enumerate() {
@@ -1735,7 +1828,7 @@ mod tests {
         spec.wpe = true;
         for strat in [Strategy::Opacus, Strategy::GhostClip, Strategy::Bk, Strategy::BkMixOpt] {
             let (x, y) = batch_for(&spec, 41);
-            let mut be = NativeBackend::new(spec.clone(), strat, 2).unwrap();
+            let mut be = NativeBackend::builder(spec.clone(), strat).threads(2).build().unwrap();
             be.init(5).unwrap();
             let l0 = be.eval_loss(&x, &y).unwrap();
             let mut h = hyper();
@@ -1749,7 +1842,7 @@ mod tests {
         // wpe without token input is a spec error
         let mut s = tiny_spec();
         s.wpe = true;
-        let err = NativeBackend::new(s, Strategy::Bk, 1).unwrap_err().to_string();
+        let err = NativeBackend::builder(s, Strategy::Bk).threads(1).build().unwrap_err().to_string();
         assert!(err.contains("wpe"), "{err}");
     }
 
@@ -1765,7 +1858,7 @@ mod tests {
                 for style in [ClippingStyle::AllLayer, ClippingStyle::LayerWise] {
                     let (x, y) = batch_for(&spec, 9);
                     let mut be =
-                        NativeBackend::with_style(spec.clone(), strat, style, 2).unwrap();
+                        NativeBackend::builder(spec.clone(), strat).style(style).threads(2).build().unwrap();
                     be.init(1).unwrap();
                     be.step(&x, &y, &[], &hyper()).unwrap();
                     for _ in 0..3 {
@@ -1793,7 +1886,7 @@ mod tests {
         bias.trainable = "bias-only".into();
         let run = |spec: &NativeSpec| -> AllocStats {
             let (x, y) = batch_for(spec, 43);
-            let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+            let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(2).build().unwrap();
             be.init(1).unwrap();
             be.step(&x, &y, &[], &hyper()).unwrap();
             be.alloc_stats()
@@ -1855,7 +1948,7 @@ mod tests {
         masked.trainable = format!("mask:{}", all_names.join(","));
         let (x, y) = batch_for(&spec, 47);
         let run = |s: &NativeSpec| -> Vec<Vec<f32>> {
-            let mut be = NativeBackend::new(s.clone(), Strategy::Bk, 2).unwrap();
+            let mut be = NativeBackend::builder(s.clone(), Strategy::Bk).threads(2).build().unwrap();
             be.init(4).unwrap();
             let mut out = StepOut::default();
             for _ in 0..3 {
@@ -1874,7 +1967,7 @@ mod tests {
         for spec in [tiny_spec(), tiny_tok_spec(), tiny_gpt_spec(), tiny_tied_gpt_spec()] {
             let (x, y) = batch_for(&spec, 21);
             let run = |style: ClippingStyle| -> Vec<Vec<f32>> {
-                let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+                let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).style(style).threads(2).build().unwrap();
                 be.init(4).unwrap();
                 be.step(&x, &y, &[], &hyper()).unwrap();
                 be.state().unwrap()
@@ -1894,7 +1987,7 @@ mod tests {
         let n_param_layers = spec.plan().iter().filter(|l| !l.param_names.is_empty()).count();
         let (x, y) = batch_for(&spec, 22);
         let run = |style: ClippingStyle| -> Vec<Vec<f32>> {
-            let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+            let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).style(style).threads(2).build().unwrap();
             be.init(4).unwrap();
             be.step(&x, &y, &[], &hyper()).unwrap();
             be.state().unwrap()

@@ -95,6 +95,102 @@ impl Trainable {
     }
 }
 
+/// Explicit model family for [`NativeSpec`]: which plan `plan()` builds.
+///
+/// Historically the family was inferred from flag combinations
+/// (`blocks > 0` ⇒ GPT, `vocab > 0` ⇒ token model, …). That implicit
+/// rule still works — field-struct construction gets [`ModelKind::Auto`]
+/// and resolves through [`NativeSpec::model_kind`] — but the plan-builder
+/// constructors ([`NativeSpec::mlp`], [`NativeSpec::gpt`],
+/// [`NativeSpec::conv`]) set the family explicitly, and conv spec fields
+/// (input image shape, conv stages) live **only** on the conv arm.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Legacy flag resolution: `blocks > 0` ⇒ [`ModelKind::Gpt`], else
+    /// [`ModelKind::Mlp`]. What `..NativeSpec::default()` construction
+    /// gets, so existing field-struct callers keep working.
+    Auto,
+    /// Flat MLP / token-classifier plan (`vocab`/`layernorm`/`seq`
+    /// flags shape the stack as before).
+    Mlp,
+    /// GPT-style pre-LN transformer plan (`blocks`, `attn_heads`, `ff`,
+    /// `tied`, `wpe` flags apply).
+    Gpt,
+    /// Conv2d/pool/flatten vision plan. The image shape and the conv
+    /// stage list live here and nowhere else; `hidden` still names
+    /// post-flatten linear widths and `n_classes` the head width.
+    Conv {
+        /// Input channels.
+        cin: usize,
+        /// Input image height.
+        h: usize,
+        /// Input image width.
+        w: usize,
+        /// Conv stages in order (each: conv → ReLU → optional pool).
+        stages: Vec<ConvStage>,
+    },
+}
+
+/// One conv stage of a [`ModelKind::Conv`] plan: a `k×k` convolution
+/// (stride/pad), a ReLU, and an optional non-overlapping pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvStage {
+    /// Output channels.
+    pub cout: usize,
+    /// Square kernel extent.
+    pub k: usize,
+    /// Stride (both axes).
+    pub stride: usize,
+    /// Zero padding (both axes).
+    pub pad: usize,
+    /// Identity skip around the conv (`out += input`, the ResNet block
+    /// skip); requires a shape-preserving conv (`cin == cout`, output
+    /// spatial extent == input extent).
+    pub residual: bool,
+    /// Non-overlapping `win×win` pooling (stride = win) after the ReLU.
+    pub pool: Option<(PoolKind, usize)>,
+}
+
+impl ConvStage {
+    /// A plain `k×k` conv stage (no skip, no pool).
+    pub fn new(cout: usize, k: usize, stride: usize, pad: usize) -> Self {
+        ConvStage {
+            cout,
+            k,
+            stride,
+            pad,
+            residual: false,
+            pool: None,
+        }
+    }
+
+    /// Add a non-overlapping `win×win` pool after the ReLU.
+    pub fn pool(mut self, kind: PoolKind, win: usize) -> Self {
+        self.pool = Some((kind, win));
+        self
+    }
+
+    /// Add the identity skip around the conv.
+    pub fn residual(mut self) -> Self {
+        self.residual = true;
+        self
+    }
+}
+
+/// Pooling reduction over each window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Window mean; backward spreads the gradient uniformly.
+    Avg,
+    /// Window max; backward routes the gradient to the argmax element.
+    Max,
+}
+
+/// Output spatial extent of one conv axis: `(n + 2·pad − k)/stride + 1`.
+pub fn conv_out(n: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (n + 2 * pad).saturating_sub(k) / stride + 1
+}
+
 /// One operation in a native layer stack.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanOp {
@@ -164,6 +260,62 @@ pub enum PlanOp {
         /// Adapter rank.
         rank: usize,
     },
+    /// 2-D convolution over an HWC activation layout (`h·w` spatial
+    /// positions, channels innermost), square `k×k` kernel with bias.
+    /// Executed as im2col: unfold the input into `(B, T, cin·k²)`
+    /// patches with T = output spatial positions, then the same
+    /// `(d, p)` matmul / ghost-norm / instantiation kernels every
+    /// linear layer uses — the weight tensor is stored `(cin·k², cout)`.
+    Conv2d {
+        /// Input channels.
+        cin: usize,
+        /// Input spatial height.
+        h: usize,
+        /// Input spatial width.
+        w: usize,
+        /// Output channels.
+        cout: usize,
+        /// Square kernel extent.
+        k: usize,
+        /// Stride (both axes).
+        stride: usize,
+        /// Zero padding (both axes).
+        pad: usize,
+    },
+    /// Non-overlapping `win×win` spatial pooling (stride = win) over an
+    /// HWC activation of `c` channels; stateless.
+    Pool2d {
+        /// Window reduction (avg or max).
+        kind: PoolKind,
+        /// Channels (unchanged by the op).
+        c: usize,
+        /// Input spatial height (`h % win == 0`).
+        h: usize,
+        /// Input spatial width (`w % win == 0`).
+        w: usize,
+        /// Pool window extent = stride.
+        win: usize,
+    },
+    /// CHW/HWC → flat-vector boundary between the conv trunk and the
+    /// linear tail. Numerically the identity (activations are already
+    /// flat rows); stateless.
+    Flatten {
+        /// Flattened feature width (`c·h·w` of the layer below).
+        n: usize,
+    },
+}
+
+impl PlanOp {
+    /// Output spatial extent of the conv/pool ops (`None` otherwise).
+    pub fn out_hw(&self) -> Option<(usize, usize)> {
+        match *self {
+            PlanOp::Conv2d {
+                h, w, k, stride, pad, ..
+            } => Some((conv_out(h, k, stride, pad), conv_out(w, k, stride, pad))),
+            PlanOp::Pool2d { h, w, win, .. } => Some((h / win, w / win)),
+            _ => None,
+        }
+    }
 }
 
 /// One planned layer: the op plus its display / parameter names.
@@ -191,6 +343,15 @@ impl PlannedLayer {
             PlanOp::TiedLinear { p, .. } => p,
             PlanOp::PosEmbedding { dim, .. } => dim,
             PlanOp::LoraLinear { p, .. } => p,
+            PlanOp::Conv2d { cout, .. } => {
+                let (ho, wo) = self.op.out_hw().unwrap();
+                cout * ho * wo
+            }
+            PlanOp::Pool2d { c, .. } => {
+                let (ho, wo) = self.op.out_hw().unwrap();
+                c * ho * wo
+            }
+            PlanOp::Flatten { n } => n,
         }
     }
 
@@ -211,6 +372,11 @@ impl PlannedLayer {
             PlanOp::LoraLinear { d, p, rank } => {
                 vec![vec![d, p], vec![p], vec![d, rank], vec![rank, p]]
             }
+            // weight in the kernel's (d, p) = (cin·k², cout) layout
+            PlanOp::Conv2d { cin, cout, k, .. } => {
+                vec![vec![cin * k * k, cout], vec![cout]]
+            }
+            PlanOp::Pool2d { .. } | PlanOp::Flatten { .. } => Vec::new(),
         }
     }
 
@@ -223,6 +389,19 @@ impl PlannedLayer {
             PlanOp::Embedding { vocab, dim } => (LayerKind::Embedding, vocab, dim),
             PlanOp::Linear { d, p } => (LayerKind::Linear, d, p),
             PlanOp::Relu { .. } => return None,
+            // a conv carries its *own* T — the output spatial positions
+            // of the im2col view — regardless of the spec's sequence axis
+            PlanOp::Conv2d { cin, cout, k, .. } => {
+                let (ho, wo) = self.op.out_hw().unwrap();
+                return Some(LayerDims {
+                    kind: LayerKind::Conv,
+                    name: self.name.clone(),
+                    t: (ho * wo) as u64,
+                    d: (cin * k * k) as u64,
+                    p: cout as u64,
+                });
+            }
+            PlanOp::Pool2d { .. } | PlanOp::Flatten { .. } => return None,
             PlanOp::LayerNorm { width } => (LayerKind::Norm, width, width),
             PlanOp::Attention { d, heads } => (LayerKind::Attention, d, heads),
             PlanOp::TiedLinear { d, p } => (LayerKind::TiedLinear, d, p),
@@ -292,6 +471,12 @@ pub struct NativeSpec {
     /// plan into a [`PlanOp::LoraLinear`]; the other presets only flag
     /// tensors frozen. Validated by [`NativeSpec::trainable_preset`].
     pub trainable: String,
+    /// Explicit model family. [`ModelKind::Auto`] (the `Default`)
+    /// resolves through the legacy flag rules, so field-struct
+    /// construction keeps working; the plan-builder constructors set
+    /// this explicitly, and the conv image shape / stage list live only
+    /// on [`ModelKind::Conv`].
+    pub model: ModelKind,
 }
 
 impl Default for NativeSpec {
@@ -313,21 +498,199 @@ impl Default for NativeSpec {
             tied: false,
             wpe: false,
             trainable: "all".into(),
+            model: ModelKind::Auto,
         }
     }
 }
 
 impl NativeSpec {
+    /// Plan-builder constructor: a flat MLP (`ReLU` between hidden
+    /// widths) with an explicit [`ModelKind::Mlp`]. Defaults for the
+    /// remaining fields come from `Default` — set them with struct
+    /// update syntax (`NativeSpec { optimizer: .., ..NativeSpec::mlp(..) }`).
+    pub fn mlp(name: &str, batch: usize, d_in: usize, hidden: &[usize], n_classes: usize) -> Self {
+        NativeSpec {
+            name: name.into(),
+            batch,
+            d_in,
+            hidden: hidden.to_vec(),
+            n_classes,
+            model: ModelKind::Mlp,
+            ..NativeSpec::default()
+        }
+    }
+
+    /// Plan-builder constructor: a GPT-style pre-LN transformer
+    /// (next-token over `vocab`) with an explicit [`ModelKind::Gpt`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn gpt(
+        name: &str,
+        batch: usize,
+        seq: usize,
+        d_model: usize,
+        vocab: usize,
+        blocks: usize,
+        heads: usize,
+        ff: usize,
+    ) -> Self {
+        NativeSpec {
+            name: name.into(),
+            batch,
+            seq,
+            d_in: d_model,
+            n_classes: vocab,
+            vocab,
+            blocks,
+            attn_heads: heads,
+            ff,
+            model: ModelKind::Gpt,
+            ..NativeSpec::default()
+        }
+    }
+
+    /// Plan-builder constructor: a conv/pool/flatten vision stack over
+    /// `cin×h×w` images with an explicit [`ModelKind::Conv`]. `hidden`
+    /// (post-flatten linear widths) and `n_classes` shape the linear
+    /// tail exactly as in the MLP plan.
+    pub fn conv(
+        name: &str,
+        batch: usize,
+        cin: usize,
+        h: usize,
+        w: usize,
+        stages: &[ConvStage],
+        n_classes: usize,
+    ) -> Self {
+        NativeSpec {
+            name: name.into(),
+            batch,
+            d_in: cin * h * w,
+            n_classes,
+            model: ModelKind::Conv {
+                cin,
+                h,
+                w,
+                stages: stages.to_vec(),
+            },
+            ..NativeSpec::default()
+        }
+    }
+
+    /// The effective model family: the explicit [`NativeSpec::model`]
+    /// when set, else the legacy flag resolution (`blocks > 0` ⇒ GPT,
+    /// everything else the MLP/token plan).
+    pub fn model_kind(&self) -> ModelKind {
+        match &self.model {
+            ModelKind::Auto => {
+                if self.blocks > 0 {
+                    ModelKind::Gpt
+                } else {
+                    ModelKind::Mlp
+                }
+            }
+            k => k.clone(),
+        }
+    }
+
+    /// Validate kind/flag consistency and (for conv models) the stage
+    /// geometry. Backends call this at construction.
+    pub fn validate_kind(&self) -> Result<()> {
+        match self.model_kind() {
+            ModelKind::Auto => unreachable!("model_kind resolves Auto"),
+            ModelKind::Mlp => {
+                if self.blocks > 0 {
+                    bail!(
+                        "model '{}': ModelKind::Mlp with blocks = {} (use NativeSpec::gpt)",
+                        self.name,
+                        self.blocks
+                    );
+                }
+            }
+            ModelKind::Gpt => {
+                if self.blocks == 0 {
+                    bail!("model '{}': ModelKind::Gpt needs blocks > 0", self.name);
+                }
+            }
+            ModelKind::Conv { cin, h, w, stages } => {
+                if self.blocks > 0 || self.vocab > 0 || self.seq != 1 {
+                    bail!(
+                        "model '{}': conv plans are flat-image (seq = 1, no vocab/blocks)",
+                        self.name
+                    );
+                }
+                if self.d_in != cin * h * w {
+                    bail!(
+                        "model '{}': d_in {} != cin*h*w = {}",
+                        self.name,
+                        self.d_in,
+                        cin * h * w
+                    );
+                }
+                if stages.is_empty() {
+                    bail!("model '{}': conv plan has no stages", self.name);
+                }
+                let (mut c, mut hh, mut ww) = (cin, h, w);
+                for (si, st) in stages.iter().enumerate() {
+                    if st.cout == 0 || st.k == 0 || st.stride == 0 {
+                        bail!("model '{}': conv stage {si} has a zero dim", self.name);
+                    }
+                    if st.k > hh + 2 * st.pad || st.k > ww + 2 * st.pad {
+                        bail!(
+                            "model '{}': conv stage {si} kernel {} exceeds padded input {}x{}",
+                            self.name,
+                            st.k,
+                            hh + 2 * st.pad,
+                            ww + 2 * st.pad
+                        );
+                    }
+                    let (mut ho, mut wo) = (
+                        conv_out(hh, st.k, st.stride, st.pad),
+                        conv_out(ww, st.k, st.stride, st.pad),
+                    );
+                    if st.residual && (st.cout != c || ho != hh || wo != ww) {
+                        bail!(
+                            "model '{}': conv stage {si} residual needs a shape-preserving \
+                             conv ({}x{}x{} in vs {}x{}x{} out)",
+                            self.name,
+                            c,
+                            hh,
+                            ww,
+                            st.cout,
+                            ho,
+                            wo
+                        );
+                    }
+                    if let Some((_, win)) = st.pool {
+                        if win == 0 || ho % win != 0 || wo % win != 0 {
+                            bail!(
+                                "model '{}': conv stage {si} pool window {win} \
+                                 does not tile {ho}x{wo}",
+                                self.name
+                            );
+                        }
+                        ho /= win;
+                        wo /= win;
+                    }
+                    c = st.cout;
+                    hh = ho;
+                    ww = wo;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// The canonical layer walk: every other shape view derives from
     /// this one iterator, so layer kinds cannot drift between views.
     /// The `lora:<rank>` trainability preset is *structural*: it
     /// rewrites every plain `Linear` into a [`PlanOp::LoraLinear`]
     /// carrying the frozen base tensors plus the trainable adapters.
     pub fn plan(&self) -> Vec<PlannedLayer> {
-        let mut out = if self.blocks > 0 {
-            self.transformer_plan()
-        } else {
-            self.mlp_plan()
+        let mut out = match self.model_kind() {
+            ModelKind::Auto => unreachable!("model_kind resolves Auto"),
+            ModelKind::Gpt => self.transformer_plan(),
+            ModelKind::Conv { cin, h, w, stages } => self.conv_plan(cin, h, w, &stages),
+            ModelKind::Mlp => self.mlp_plan(),
         };
         if let Ok(Trainable::Lora { rank }) = Trainable::parse(&self.trainable) {
             for l in out.iter_mut() {
@@ -391,6 +754,111 @@ impl NativeSpec {
                 residual: None,
             });
             d = h;
+        }
+        out.push(PlannedLayer {
+            name: format!("fc{fc}"),
+            op: PlanOp::Linear {
+                d,
+                p: self.n_classes,
+            },
+            param_names: vec![format!("w{fc}"), format!("b{fc}")],
+            residual: None,
+        });
+        out
+    }
+
+    /// The conv/pool/flatten vision plan ([`ModelKind::Conv`]):
+    ///
+    /// ```text
+    /// [ Conv2d (+x if residual) -> ReLU -> Pool? ] * stages
+    ///   -> Flatten -> [ Linear -> ReLU ] * hidden -> Linear(n_classes)
+    /// ```
+    ///
+    /// Activations are HWC (spatial positions major, channels
+    /// innermost), so the im2col gradient `(B, T, cout)` that flows on
+    /// the tape is directly the ghost-norm / instantiation operand — no
+    /// transpose anywhere. A residual stage marks `residual =
+    /// Some(self)`: the tape adds the conv's *own input* back to its
+    /// output, the ResNet identity skip.
+    fn conv_plan(
+        &self,
+        cin: usize,
+        h: usize,
+        w: usize,
+        stages: &[ConvStage],
+    ) -> Vec<PlannedLayer> {
+        let mut out = Vec::new();
+        let (mut c, mut hh, mut ww) = (cin, h, w);
+        for (si, st) in stages.iter().enumerate() {
+            let conv_idx = out.len();
+            let op = PlanOp::Conv2d {
+                cin: c,
+                h: hh,
+                w: ww,
+                cout: st.cout,
+                k: st.k,
+                stride: st.stride,
+                pad: st.pad,
+            };
+            let (mut ho, mut wo) = op.out_hw().unwrap();
+            out.push(PlannedLayer {
+                name: format!("conv{si}"),
+                op,
+                param_names: vec![format!("conv{si}_w"), format!("conv{si}_b")],
+                residual: st.residual.then_some(conv_idx),
+            });
+            out.push(PlannedLayer {
+                name: format!("crelu{si}"),
+                op: PlanOp::Relu {
+                    width: st.cout * ho * wo,
+                },
+                param_names: Vec::new(),
+                residual: None,
+            });
+            if let Some((kind, win)) = st.pool {
+                out.push(PlannedLayer {
+                    name: format!("pool{si}"),
+                    op: PlanOp::Pool2d {
+                        kind,
+                        c: st.cout,
+                        h: ho,
+                        w: wo,
+                        win,
+                    },
+                    param_names: Vec::new(),
+                    residual: None,
+                });
+                ho /= win;
+                wo /= win;
+            }
+            c = st.cout;
+            hh = ho;
+            ww = wo;
+        }
+        out.push(PlannedLayer {
+            name: "flatten".into(),
+            op: PlanOp::Flatten { n: c * hh * ww },
+            param_names: Vec::new(),
+            residual: None,
+        });
+        // the linear tail reuses the MLP naming (fc{i} / w{i} / b{i})
+        let mut d = c * hh * ww;
+        let mut fc = 0usize;
+        for &hwid in &self.hidden {
+            out.push(PlannedLayer {
+                name: format!("fc{fc}"),
+                op: PlanOp::Linear { d, p: hwid },
+                param_names: vec![format!("w{fc}"), format!("b{fc}")],
+                residual: None,
+            });
+            out.push(PlannedLayer {
+                name: format!("relu{fc}"),
+                op: PlanOp::Relu { width: hwid },
+                param_names: Vec::new(),
+                residual: None,
+            });
+            fc += 1;
+            d = hwid;
         }
         out.push(PlannedLayer {
             name: format!("fc{fc}"),
@@ -582,6 +1050,38 @@ impl NativeSpec {
             .collect()
     }
 
+    /// Plan-derived entries for the fused g-cache walk
+    /// ([`crate::complexity::bk_gcache_floats_layers`]): one entry per
+    /// plan layer — stateless ops included — as whole-batch element
+    /// counts at this spec's batch. The `(T, d, p)` view behind
+    /// [`crate::complexity::bk_gcache_floats_masked`] cannot represent
+    /// stacks whose activation width changes between parameterized
+    /// layers (a conv's frontier gradient is `B·cin·h·w`, and pooling/
+    /// flatten transitions are invisible to it), so conv predictions
+    /// route through this instead. The frontier below layer `k` is the
+    /// previous layer's output activation; the walk ignores layer 0's.
+    /// The fused-schedule tests pin `StackRun`'s measured gauge ==
+    /// this walk's prediction on the registry models.
+    pub fn gcache_layers(&self) -> Vec<crate::complexity::GcacheLayer> {
+        let plan = self.plan();
+        let masks = self.plan_masks();
+        let rows = (self.batch * self.seq) as f64;
+        let emb = plan.iter().position(|l| matches!(l.op, PlanOp::Embedding { .. }));
+        plan.iter()
+            .zip(&masks)
+            .enumerate()
+            .map(|(k, (l, mask))| crate::complexity::GcacheLayer {
+                cache: rows * l.out_width() as f64,
+                frontier: if k == 0 { 0.0 } else { rows * plan[k - 1].out_width() as f64 },
+                trainable: mask.iter().any(|&f| f),
+                alias_of: match l.op {
+                    PlanOp::TiedLinear { .. } => emb,
+                    _ => None,
+                },
+            })
+            .collect()
+    }
+
     /// The complexity-side census of this spec: an [`crate::arch::Arch`]
     /// mirroring the plan layer by layer, with the same conventions
     /// `arch::language` uses for the real model zoo (notably the GPT-2
@@ -617,6 +1117,18 @@ impl NativeSpec {
                 PlanOp::LoraLinear { d, p, rank } => {
                     a.lora_linear(&l.name, t, d as u64, p as u64, rank as u64, true);
                 }
+                PlanOp::Conv2d { cin, cout, k, .. } => {
+                    let (ho, wo) = l.op.out_hw().unwrap();
+                    a.conv_dims(
+                        &l.name,
+                        (ho * wo) as u64,
+                        cin as u64,
+                        cout as u64,
+                        k as u64,
+                        true,
+                    );
+                }
+                PlanOp::Pool2d { .. } | PlanOp::Flatten { .. } => {}
             }
         }
         a
@@ -789,16 +1301,15 @@ impl NativeSpec {
                 param_names.push(name.clone());
             }
         }
-        let kind = if self.blocks > 0 {
+        let kind = match self.model_kind() {
             // GPT-style transformer: same next-token Markov-corpus
             // pipeline the pjrt gpt artifacts use
-            "gpt"
-        } else if self.vocab > 0 {
-            "seqtok"
-        } else if self.seq > 1 {
-            "seqmlp"
-        } else {
-            "mlp"
+            ModelKind::Gpt => "gpt",
+            // conv trunk + linear tail over flat image vectors
+            ModelKind::Conv { .. } => "conv",
+            _ if self.vocab > 0 => "seqtok",
+            _ if self.seq > 1 => "seqmlp",
+            _ => "mlp",
         };
         ModelInfo {
             name: self.name.clone(),
@@ -821,141 +1332,68 @@ impl NativeSpec {
         }
     }
 
-    /// Built-in model registry (the native analogue of `artifacts/`).
+    /// Built-in model registry (the native analogue of `artifacts/`),
+    /// built entirely through the plan-builder constructors.
     pub fn registry() -> Vec<NativeSpec> {
         vec![
             // The seed MLP config: the bench acceptance target.
-            NativeSpec {
-                name: "mlp_e2e".into(),
-                batch: 32,
-                seq: 1,
-                d_in: 128,
-                hidden: vec![256, 256],
-                n_classes: 10,
-                optimizer: "sgd".into(),
-                clip_fn: "automatic".into(),
-                ..NativeSpec::default()
-            },
+            NativeSpec::mlp("mlp_e2e", 32, 128, &[256, 256], 10),
             // Wider variant where per-sample instantiation gets expensive
             // (Opacus memory blows up; BK does not).
-            NativeSpec {
-                name: "mlp_wide".into(),
-                batch: 32,
-                seq: 1,
-                d_in: 512,
-                hidden: vec![1024, 1024],
-                n_classes: 10,
-                optimizer: "sgd".into(),
-                clip_fn: "automatic".into(),
-                ..NativeSpec::default()
-            },
+            NativeSpec::mlp("mlp_wide", 32, 512, &[1024, 1024], 10),
             // MLP with LayerNorm after each hidden linear: exercises the
             // norm-layer DP path (instantiated per-sample grads) on the
             // flat-vector pipeline.
             NativeSpec {
-                name: "mlp_ln".into(),
-                batch: 32,
-                seq: 1,
-                d_in: 64,
-                hidden: vec![128, 128],
-                n_classes: 10,
-                optimizer: "sgd".into(),
-                clip_fn: "automatic".into(),
                 layernorm: true,
-                ..NativeSpec::default()
+                ..NativeSpec::mlp("mlp_ln", 32, 64, &[128, 128], 10)
             },
             // Sequential per-token classifier: T = 32 makes the mixed
             // dispatch non-trivial (2T^2 = 2048 straddles the layer pd's).
             NativeSpec {
-                name: "seq_e2e".into(),
-                batch: 16,
                 seq: 32,
-                d_in: 64,
-                hidden: vec![128, 128],
-                n_classes: 10,
                 optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                ..NativeSpec::default()
+                ..NativeSpec::mlp("seq_e2e", 16, 64, &[128, 128], 10)
             },
             // Larger sequence workload for benching the Gram kernels.
             NativeSpec {
-                name: "seq_bench".into(),
-                batch: 32,
                 seq: 64,
-                d_in: 128,
-                hidden: vec![256, 256],
-                n_classes: 16,
                 optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                ..NativeSpec::default()
+                ..NativeSpec::mlp("seq_bench", 32, 128, &[256, 256], 16)
             },
             // Token sequence model: Embedding -> LayerNorm -> MLP head,
             // next-token prediction over a 64-token vocabulary. The
             // embedding exercises the token-equality ghost norm and the
             // LayerNorms the norm-layer route, all natively.
             NativeSpec {
-                name: "seq_tok_e2e".into(),
-                batch: 16,
                 seq: 16,
-                d_in: 32,
-                hidden: vec![64],
-                n_classes: 64,
-                optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
                 vocab: 64,
                 layernorm: true,
-                ..NativeSpec::default()
+                optimizer: "adam".into(),
+                ..NativeSpec::mlp("seq_tok_e2e", 16, 32, &[64], 64)
             },
             // Bigger token workload for benching the embedding + LN path.
             NativeSpec {
-                name: "seq_tok_bench".into(),
-                batch: 16,
                 seq: 32,
-                d_in: 64,
-                hidden: vec![128, 128],
-                n_classes: 128,
-                optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
                 vocab: 128,
                 layernorm: true,
-                ..NativeSpec::default()
+                optimizer: "adam".into(),
+                ..NativeSpec::mlp("seq_tok_bench", 16, 64, &[128, 128], 128)
             },
             // GPT-nano: a real causal-attention transformer (the paper's
             // actual experimental subject, scaled to the CPU testbed) —
             // Embedding -> 2 pre-LN blocks -> LN -> vocab head,
             // next-token over the Markov corpus, entirely native.
             NativeSpec {
-                name: "gpt_nano_e2e".into(),
-                batch: 8,
-                seq: 16,
-                d_in: 32,
-                hidden: Vec::new(),
-                n_classes: 64,
                 optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                vocab: 64,
-                blocks: 2,
-                attn_heads: 4,
-                ff: 64,
-                ..NativeSpec::default()
+                ..NativeSpec::gpt("gpt_nano_e2e", 8, 16, 32, 64, 2, 4, 64)
             },
             // Bigger transformer workload for benching the attention
             // kernels (T = 32 keeps the ghost/instantiation dispatch
             // non-trivial: 2T^2 = 2048 vs d^2 = 4096).
             NativeSpec {
-                name: "gpt_nano_bench".into(),
-                batch: 16,
-                seq: 32,
-                d_in: 64,
-                hidden: Vec::new(),
-                n_classes: 128,
                 optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                vocab: 128,
-                blocks: 2,
-                attn_heads: 4,
-                ff: 128,
-                ..NativeSpec::default()
+                ..NativeSpec::gpt("gpt_nano_bench", 16, 32, 64, 128, 2, 4, 128)
             },
             // Weight-tied gpt_nano (lm_head = wte^T, the real GPT-2
             // convention): the head is a TiedLinear view of the
@@ -963,96 +1401,94 @@ impl NativeSpec {
             // the ghost cross term, and the model has vocab*d fewer
             // parameters than its untied sibling.
             NativeSpec {
-                name: "gpt_nano_tied_e2e".into(),
-                batch: 8,
-                seq: 16,
-                d_in: 32,
-                hidden: Vec::new(),
-                n_classes: 64,
-                optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                vocab: 64,
-                blocks: 2,
-                attn_heads: 4,
-                ff: 64,
                 tied: true,
-                ..NativeSpec::default()
+                optimizer: "adam".into(),
+                ..NativeSpec::gpt("gpt_nano_tied_e2e", 8, 16, 32, 64, 2, 4, 64)
             },
             // Tied bench workload: same dims as gpt_nano_bench, tied
             // head — benches the cross-term kernel next to the Grams.
             NativeSpec {
-                name: "gpt_nano_tied_bench".into(),
-                batch: 16,
-                seq: 32,
-                d_in: 64,
-                hidden: Vec::new(),
-                n_classes: 128,
-                optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                vocab: 128,
-                blocks: 2,
-                attn_heads: 4,
-                ff: 128,
                 tied: true,
-                ..NativeSpec::default()
+                optimizer: "adam".into(),
+                ..NativeSpec::gpt("gpt_nano_tied_bench", 16, 32, 64, 128, 2, 4, 128)
             },
             // gpt_nano with a learned positional-embedding table (GPT-2
             // wpe): exercises the PosEmbedding DpLayer whose rows never
             // collide across positions, so its ghost norm is the plain
             // gradient Frobenius norm.
             NativeSpec {
-                name: "gpt_nano_wpe_e2e".into(),
-                batch: 8,
-                seq: 16,
-                d_in: 32,
-                hidden: Vec::new(),
-                n_classes: 64,
-                optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                vocab: 64,
-                blocks: 2,
-                attn_heads: 4,
-                ff: 64,
                 wpe: true,
-                ..NativeSpec::default()
+                optimizer: "adam".into(),
+                ..NativeSpec::gpt("gpt_nano_wpe_e2e", 8, 16, 32, 64, 2, 4, 64)
             },
             // LoRA fine-tune of gpt_nano: every Linear rewritten to a
             // frozen base + rank-4 adapter pair, only adapters (and
             // biases via their own mask state: frozen here) train.
             NativeSpec {
-                name: "gpt_nano_lora_e2e".into(),
-                batch: 8,
-                seq: 16,
-                d_in: 32,
-                hidden: Vec::new(),
-                n_classes: 64,
-                optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                vocab: 64,
-                blocks: 2,
-                attn_heads: 4,
-                ff: 64,
                 trainable: "lora:4".into(),
-                ..NativeSpec::default()
+                optimizer: "adam".into(),
+                ..NativeSpec::gpt("gpt_nano_lora_e2e", 8, 16, 32, 64, 2, 4, 64)
             },
             // Bigger LoRA workload for benching adapter ghost norms
             // (rank 8 against d = 64 keeps 2T^2 vs d*r dispatch honest).
             NativeSpec {
-                name: "gpt_nano_lora_bench".into(),
-                batch: 16,
-                seq: 32,
-                d_in: 64,
-                hidden: Vec::new(),
-                n_classes: 128,
-                optimizer: "adam".into(),
-                clip_fn: "automatic".into(),
-                vocab: 128,
-                blocks: 2,
-                attn_heads: 4,
-                ff: 128,
                 trainable: "lora:8".into(),
-                ..NativeSpec::default()
+                optimizer: "adam".into(),
+                ..NativeSpec::gpt("gpt_nano_lora_bench", 16, 32, 64, 128, 2, 4, 128)
             },
+            // MNIST-style conv stack over 1x14x14 images: conv -> pool ->
+            // conv -> flatten -> linear head. Both convs sit in the
+            // paper's 2T^2 > pd regime (Table 4): the mixed dispatch must
+            // pick per-sample instantiation, where the im2col BK cost
+            // stays linear in T while ghost norms would be O(B T^2).
+            NativeSpec::conv(
+                "conv_mnist_e2e",
+                16,
+                1,
+                14,
+                14,
+                &[
+                    ConvStage::new(8, 3, 1, 1).pool(PoolKind::Max, 2),
+                    ConvStage::new(16, 3, 1, 1),
+                ],
+                10,
+            ),
+            // ResNet-style trunk over 3x16x16 images: a stem conv plus
+            // two shape-preserving residual stages (identity skips ride
+            // the same tape residual machinery as the transformer
+            // blocks), avg-pooled down to a 128-wide linear head.
+            NativeSpec {
+                optimizer: "adam".into(),
+                ..NativeSpec::conv(
+                    "resnet_tiny_e2e",
+                    8,
+                    3,
+                    16,
+                    16,
+                    &[
+                        ConvStage::new(8, 3, 1, 1),
+                        ConvStage::new(8, 3, 1, 1).residual().pool(PoolKind::Avg, 2),
+                        ConvStage::new(8, 3, 1, 1).residual().pool(PoolKind::Avg, 2),
+                    ],
+                    10,
+                )
+            },
+            // Bigger vision workload for benching the unfold/fold + conv
+            // kernels (T = 1024 on the stem: the regime where ghost-only
+            // implementations explode and BK instantiation stays flat).
+            NativeSpec::conv(
+                "conv_bench",
+                16,
+                3,
+                32,
+                32,
+                &[
+                    ConvStage::new(16, 3, 1, 1).pool(PoolKind::Max, 2),
+                    ConvStage::new(16, 3, 1, 1).residual().pool(PoolKind::Max, 2),
+                    ConvStage::new(32, 3, 1, 1),
+                ],
+                10,
+            ),
         ]
     }
 
@@ -1450,6 +1886,229 @@ mod tests {
         emb_only.trainable = "lora:2".into();
         // mlp has linears, so this one is fine; freeze-everything is not
         assert!(emb_only.trainable_preset().is_ok());
+    }
+
+    #[test]
+    fn model_kind_resolves_legacy_flags() {
+        // field-struct construction (ModelKind::Auto) resolves exactly
+        // as the old implicit rules did
+        let legacy_gpt = NativeSpec {
+            name: "legacy".into(),
+            vocab: 64,
+            n_classes: 64,
+            blocks: 2,
+            attn_heads: 4,
+            ff: 64,
+            d_in: 32,
+            seq: 16,
+            ..NativeSpec::default()
+        };
+        assert_eq!(legacy_gpt.model, ModelKind::Auto);
+        assert_eq!(legacy_gpt.model_kind(), ModelKind::Gpt);
+        let explicit = NativeSpec::by_name("gpt_nano_e2e").unwrap();
+        assert_eq!(explicit.model, ModelKind::Gpt);
+        // same name-for-name plan either way
+        let mut twin = legacy_gpt.clone();
+        twin.name = "gpt_nano_e2e".into();
+        twin.batch = 8;
+        twin.optimizer = "adam".into();
+        assert_eq!(twin.plan(), explicit.plan());
+        assert!(legacy_gpt.validate_kind().is_ok());
+        // inconsistent explicit kinds are rejected
+        let mut bad = explicit.clone();
+        bad.model = ModelKind::Mlp;
+        assert!(bad.validate_kind().unwrap_err().to_string().contains("blocks"));
+        let mut bad = NativeSpec::by_name("mlp_e2e").unwrap();
+        bad.model = ModelKind::Gpt;
+        assert!(bad.validate_kind().is_err());
+    }
+
+    #[test]
+    fn conv_plan_shape_and_residuals() {
+        let s = NativeSpec::by_name("conv_mnist_e2e").unwrap();
+        assert_eq!(s.info().kind, "conv");
+        assert_eq!(s.d_in, 14 * 14);
+        let plan = s.plan();
+        // conv0, crelu0, pool0, conv1, crelu1, flatten, fc0
+        assert_eq!(plan.len(), 7);
+        assert!(matches!(
+            plan[0].op,
+            PlanOp::Conv2d { cin: 1, h: 14, w: 14, cout: 8, k: 3, stride: 1, pad: 1 }
+        ));
+        assert_eq!(plan[0].out_width(), 8 * 14 * 14);
+        assert!(matches!(plan[1].op, PlanOp::Relu { width } if width == 8 * 14 * 14));
+        assert!(matches!(
+            plan[2].op,
+            PlanOp::Pool2d { kind: PoolKind::Max, c: 8, h: 14, w: 14, win: 2 }
+        ));
+        assert_eq!(plan[2].out_width(), 8 * 7 * 7);
+        assert!(matches!(
+            plan[3].op,
+            PlanOp::Conv2d { cin: 8, h: 7, w: 7, cout: 16, .. }
+        ));
+        assert!(matches!(plan[5].op, PlanOp::Flatten { n } if n == 16 * 7 * 7));
+        assert!(matches!(plan[6].op, PlanOp::Linear { d, p: 10 } if d == 16 * 7 * 7));
+        assert_eq!(plan[6].param_names, vec!["w0".to_string(), "b0".to_string()]);
+        assert!(plan.iter().all(|l| l.residual.is_none()));
+        // census: conv weights are (cin*k^2, cout) + bias
+        assert_eq!(
+            s.n_params(),
+            (1 * 9 * 8 + 8) + (8 * 9 * 16 + 16) + (16 * 49 * 10 + 10)
+        );
+        assert_eq!(s.arch().total_params() as usize, s.n_params());
+        // conv dims carry their own T (output spatial positions)
+        let arch = s.arch_layers();
+        assert_eq!(arch.len(), 3);
+        assert_eq!((arch[0].t, arch[0].d, arch[0].p), (196, 9, 8));
+        assert_eq!((arch[1].t, arch[1].d, arch[1].p), (49, 72, 16));
+        assert_eq!(arch[0].kind, LayerKind::Conv);
+        // both convs sit in the 2T^2 > pd regime: instantiation wins
+        assert!(!ghost_preferred(&arch[0]));
+        assert!(!ghost_preferred(&arch[1]));
+    }
+
+    #[test]
+    fn resnet_residuals_mark_self_skips() {
+        let s = NativeSpec::by_name("resnet_tiny_e2e").unwrap();
+        let plan = s.plan();
+        // stem conv, relu, [conv res, relu, pool] x2, flatten, head
+        let convs: Vec<usize> = plan
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| matches!(l.op, PlanOp::Conv2d { .. }))
+            .map(|(k, _)| k)
+            .collect();
+        assert_eq!(convs.len(), 3);
+        assert_eq!(plan[convs[0]].residual, None, "stem has no skip");
+        // residual stages skip to their own input (identity add)
+        assert_eq!(plan[convs[1]].residual, Some(convs[1]));
+        assert_eq!(plan[convs[2]].residual, Some(convs[2]));
+        // skip shape check: residual convs are shape-preserving
+        for &k in &convs[1..] {
+            let in_w = if k == 0 { s.d_in } else { plan[k - 1].out_width() };
+            assert_eq!(plan[k].out_width(), in_w, "residual width must match");
+        }
+        assert_eq!(plan.last().unwrap().out_width(), 10);
+        assert!(s.validate_kind().is_ok());
+    }
+
+    #[test]
+    fn conv_geometry_validation_names_the_problem() {
+        // pool window must tile the conv output
+        let bad = NativeSpec::conv(
+            "bad_pool",
+            4,
+            1,
+            7,
+            7,
+            &[ConvStage::new(4, 3, 1, 1).pool(PoolKind::Max, 2)],
+            10,
+        );
+        let err = bad.validate_kind().unwrap_err().to_string();
+        assert!(err.contains("pool window 2"), "{err}");
+        // residual around a non-shape-preserving conv
+        let bad = NativeSpec::conv(
+            "bad_res",
+            4,
+            1,
+            8,
+            8,
+            &[ConvStage::new(4, 3, 1, 1).residual()],
+            10,
+        );
+        let err = bad.validate_kind().unwrap_err().to_string();
+        assert!(err.contains("shape-preserving"), "{err}");
+        // d_in drift against the image shape
+        let mut bad = NativeSpec::by_name("conv_mnist_e2e").unwrap();
+        bad.d_in = 100;
+        assert!(bad.validate_kind().unwrap_err().to_string().contains("d_in"));
+        // kernel larger than the padded input
+        let bad = NativeSpec::conv("bad_k", 4, 1, 2, 2, &[ConvStage::new(4, 5, 1, 0)], 10);
+        assert!(bad.validate_kind().unwrap_err().to_string().contains("kernel"));
+        // the registry conv models all pass
+        for name in ["conv_mnist_e2e", "resnet_tiny_e2e", "conv_bench"] {
+            assert!(NativeSpec::by_name(name).unwrap().validate_kind().is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn conv_models_take_masks_and_bias_only() {
+        let mut s = NativeSpec::by_name("conv_mnist_e2e").unwrap();
+        s.trainable = "bias-only".into();
+        for (l, m) in s.plan().iter().zip(s.plan_masks()) {
+            for (shape, flag) in l.param_shapes().iter().zip(m) {
+                assert_eq!(flag, shape.len() == 1, "{}", l.name);
+            }
+        }
+        assert!(s.trainable_preset().is_ok());
+        s.trainable = "mask:conv1".into();
+        assert!(s.trainable_preset().is_ok());
+        let plan = s.plan();
+        for (l, m) in plan.iter().zip(s.plan_masks()) {
+            let want = l.name == "conv1";
+            assert!(m.iter().all(|&f| f == want), "{}", l.name);
+        }
+        // lora adapts the head linear only; convs stay frozen
+        s.trainable = "lora:2".into();
+        assert!(s.trainable_preset().is_ok());
+        let plan = s.plan();
+        assert!(plan.iter().any(|l| matches!(l.op, PlanOp::LoraLinear { .. })));
+        assert!(plan.iter().any(|l| matches!(l.op, PlanOp::Conv2d { .. })));
+    }
+
+    #[test]
+    fn gcache_layers_match_dims_walk_on_uniform_stacks() {
+        // Plan-derived entries and the (T, d, p) dims walk are the same
+        // simulation wherever the dims view is expressive enough: every
+        // non-conv registry model must predict identically through both
+        // (conv stacks are exactly where the dims view breaks down).
+        use crate::complexity::{bk_gcache_floats_layers, bk_gcache_floats_masked, ClippingStyle};
+        for spec in NativeSpec::registry() {
+            if spec.model_kind() == ModelKind::Conv {
+                continue;
+            }
+            let entries = spec.gcache_layers();
+            assert_eq!(entries.len(), spec.plan().len(), "{}", spec.name);
+            for style in [
+                ClippingStyle::AllLayer,
+                ClippingStyle::LayerWise,
+                ClippingStyle::GroupWise(2),
+            ] {
+                assert_eq!(
+                    bk_gcache_floats_layers(style, &entries),
+                    bk_gcache_floats_masked(
+                        style,
+                        spec.batch as f64,
+                        &spec.arch_layers(),
+                        &spec.arch_layer_trainable(),
+                    ),
+                    "{} {:?}",
+                    spec.name,
+                    style
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gcache_layers_carry_conv_activation_widths() {
+        let s = NativeSpec::by_name("conv_mnist_e2e").unwrap();
+        let e = s.gcache_layers();
+        let b = s.batch as f64;
+        // conv0, crelu0, pool0, conv1, crelu1, flatten, fc0
+        assert_eq!(e.len(), 7);
+        assert_eq!(e[0].cache, b * (8 * 14 * 14) as f64);
+        assert_eq!(e[0].frontier, 0.0, "front layer has no frontier below");
+        assert!(e[0].trainable);
+        // frontier below the pool is conv0's FULL output activation —
+        // the width the (T, d, p) view cannot express
+        assert_eq!(e[2].frontier, b * (8 * 14 * 14) as f64);
+        assert!(!e[2].trainable, "pooling is stateless");
+        // frontier below conv1 is the pooled activation, not T·cin·k²
+        assert_eq!(e[3].frontier, b * (8 * 7 * 7) as f64);
+        assert_eq!(e[3].cache, b * (16 * 7 * 7) as f64);
+        assert_eq!(e[6].cache, b * 10.0, "head loss gradient");
+        assert!(e.iter().all(|l| l.alias_of.is_none()));
     }
 
     #[test]

@@ -495,7 +495,7 @@ mod golden {
                     ..h
                 };
 
-                let mut new = NativeBackend::new(spec.clone(), strat, threads).unwrap();
+                let mut new = NativeBackend::builder(spec.clone(), strat).threads(threads).build().unwrap();
                 new.init(17).unwrap();
                 let mut old = ReferenceBackend::new(spec.clone(), strat, threads);
                 old.init(17);

@@ -69,13 +69,13 @@ impl ShardedRun {
         }
         let mut shards = Vec::with_capacity(n_shards);
         for _ in 0..n_shards {
-            shards.push(NativeBackend::with_style_dispatch(
-                spec.clone(),
-                strategy,
-                style,
-                threads,
-                dispatch,
-            )?);
+            shards.push(
+                NativeBackend::builder(spec.clone(), strategy)
+                    .style(style)
+                    .threads(threads)
+                    .dispatch(dispatch.clone())
+                    .build()?,
+            );
         }
         Ok(Self { shards })
     }

@@ -134,14 +134,12 @@ fn flipped_routes_train_equivalently() {
     );
     let step_state = |dispatch: &Dispatch| -> Vec<f32> {
         let spec = NativeSpec::by_name("mlp_ln").unwrap();
-        let mut be = NativeBackend::with_style_dispatch(
-            spec.clone(),
-            Strategy::BkMixOpt,
-            ClippingStyle::AllLayer,
-            2,
-            dispatch,
-        )
-        .unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), Strategy::BkMixOpt)
+            .style(ClippingStyle::AllLayer)
+            .threads(2)
+            .dispatch(dispatch.clone())
+            .build()
+            .unwrap();
         be.init(3).unwrap();
         let mut ds = fastdp::data::VectorDataset::new(spec.d_in, spec.n_classes, 2.0, 17);
         let (xs, ys) = ds.sample_batch(spec.batch * spec.seq);

@@ -5,7 +5,9 @@
 //!
 //! No artifacts, no Python, no XLA: this must pass offline.
 
-use fastdp::complexity::{bk_gcache_floats, bk_gcache_floats_unfused, ClippingStyle, Strategy};
+use fastdp::complexity::{
+    bk_gcache_floats, bk_gcache_floats_layers, bk_gcache_floats_unfused, ClippingStyle, Strategy,
+};
 use fastdp::runtime::native::model::NativeSpec;
 use fastdp::runtime::native::NativeBackend;
 use fastdp::runtime::{Backend, BatchX, StepHyper};
@@ -57,7 +59,7 @@ fn run_schedule(
     steps: usize,
 ) -> (Vec<Vec<f32>>, f32, f32, Vec<f32>) {
     let (x, y) = batch_for(spec, 31);
-    let mut be = NativeBackend::with_style(spec.clone(), strategy, style, 2).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), strategy).style(style).threads(2).build().unwrap();
     be.set_unfused_schedule(unfused);
     be.init(9).unwrap();
     let h = hyper(spec);
@@ -132,7 +134,7 @@ fn measured_gcache_peak_matches_complexity_prediction() {
         let b = spec.batch as f64;
         for style in STYLES {
             let (x, y) = batch_for(&spec, 17);
-            let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+            let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).style(style).threads(2).build().unwrap();
             be.init(3).unwrap();
             be.step(&x, &y, &[], &hyper(&spec)).unwrap();
             let measured = be.peak_gcache_floats() as f64;
@@ -150,6 +152,79 @@ fn measured_gcache_peak_matches_complexity_prediction() {
     }
 }
 
+/// The PR 10 vision models: im2col conv + max pool + flatten, and the
+/// ResNet-style trunk with identity self-skips and avg pools.
+const CONV_MODELS: [&str; 2] = ["conv_mnist_e2e", "resnet_tiny_e2e"];
+
+#[test]
+fn conv_fused_is_bitwise_identical_to_unfused() {
+    // Vision stacks join the fused-schedule bar: unfold caches, pooling
+    // backward, flatten, and the residual self-skip all ride the same
+    // walk, so moving the clipped sums into it must stay bitwise.
+    for name in CONV_MODELS {
+        let spec = NativeSpec::by_name(name).unwrap();
+        for style in STYLES {
+            let fused = run_schedule(&spec, Strategy::Bk, style, false, 2);
+            let unfused = run_schedule(&spec, Strategy::Bk, style, true, 2);
+            assert_eq!(
+                fused.0, unfused.0,
+                "{name}/{style:?}: fused and unfused states must match bitwise"
+            );
+            assert_eq!(fused.1, unfused.1, "{name}/{style:?}: loss");
+            assert_eq!(fused.2, unfused.2, "{name}/{style:?}: mean clip");
+            assert_eq!(fused.3, unfused.3, "{name}/{style:?}: group clips");
+        }
+    }
+}
+
+#[test]
+fn conv_measured_gcache_peak_matches_plan_walk() {
+    // The (T, d, p) dims view cannot price a conv frontier (the real
+    // gradient below a pool is the conv's full output activation, not
+    // T·cin·k²); the plan-derived entry walk can — and it must equal
+    // the fused gauge EXACTLY, float for float, on every vision model
+    // under every style. This is the PR's acceptance bar.
+    for name in CONV_MODELS {
+        let spec = NativeSpec::by_name(name).unwrap();
+        let entries = spec.gcache_layers();
+        for style in STYLES {
+            let (x, y) = batch_for(&spec, 17);
+            let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk)
+                .style(style)
+                .threads(2)
+                .build()
+                .unwrap();
+            be.init(3).unwrap();
+            be.step(&x, &y, &[], &hyper(&spec)).unwrap();
+            let measured = be.peak_gcache_floats() as f64;
+            let predicted = bk_gcache_floats_layers(style, &entries);
+            assert_eq!(
+                measured, predicted,
+                "{name}/{style:?}: measured gauge vs plan-walk prediction"
+            );
+            assert!(be.alloc_stats().arena_peak_floats as f64 >= measured);
+        }
+        // group-wise clipping still buys real memory on a conv trunk;
+        // the gauge is deterministic so strict inequality is exact
+        let peak = |style| {
+            let (x, y) = batch_for(&spec, 23);
+            let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk)
+                .style(style)
+                .threads(2)
+                .build()
+                .unwrap();
+            be.init(3).unwrap();
+            be.step(&x, &y, &[], &hyper(&spec)).unwrap();
+            be.peak_gcache_floats()
+        };
+        let g_all = peak(ClippingStyle::AllLayer);
+        let g_gw = peak(ClippingStyle::GroupWise(2));
+        let g_lw = peak(ClippingStyle::LayerWise);
+        assert!(g_gw < g_all, "{name}: group-wise:2 {g_gw} vs all-layer {g_all}");
+        assert!(g_lw <= g_gw, "{name}: layer-wise {g_lw} vs group-wise:2 {g_gw}");
+    }
+}
+
 #[test]
 fn group_wise_peaks_strictly_below_all_layer() {
     // The memory win, measured twice over: the g-cache gauge and the
@@ -160,7 +235,7 @@ fn group_wise_peaks_strictly_below_all_layer() {
         let spec = NativeSpec::by_name(name).unwrap();
         let peaks = |style: ClippingStyle| {
             let (x, y) = batch_for(&spec, 23);
-            let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+            let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).style(style).threads(2).build().unwrap();
             be.init(3).unwrap();
             let h = hyper(&spec);
             be.step(&x, &y, &[], &h).unwrap();
@@ -198,7 +273,7 @@ fn fused_schedule_stays_allocation_free_once_warm() {
         let spec = NativeSpec::by_name(name).unwrap();
         let (x, y) = batch_for(&spec, 5);
         let mut be =
-            NativeBackend::with_style(spec.clone(), Strategy::Bk, ClippingStyle::GroupWise(2), 2)
+            NativeBackend::builder(spec.clone(), Strategy::Bk).style(ClippingStyle::GroupWise(2)).threads(2).build()
                 .unwrap();
         be.init(1).unwrap();
         let h = hyper(&spec);
@@ -220,7 +295,7 @@ fn two_pass_and_nondp_report_no_gcache_peak() {
     let spec = NativeSpec::by_name("mlp_ln").unwrap();
     let (x, y) = batch_for(&spec, 3);
     for strategy in [Strategy::GhostClip, Strategy::NonDp] {
-        let mut be = NativeBackend::new(spec.clone(), strategy, 2).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), strategy).threads(2).build().unwrap();
         be.init(1).unwrap();
         be.step(&x, &y, &[], &hyper(&spec)).unwrap();
         assert_eq!(

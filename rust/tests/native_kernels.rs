@@ -215,7 +215,7 @@ fn one_step_state(spec: &NativeSpec, strat: Strategy, seed: u64, clip: f32) -> V
         logical_batch: spec.batch as f32,
         step: 1.0,
     };
-    let mut be = NativeBackend::new(spec.clone(), strat, 2).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), strat).threads(2).build().unwrap();
     be.init(17).unwrap();
     be.step(&x, &y, &[], &h).unwrap();
     be.state().unwrap()
@@ -278,7 +278,7 @@ fn nondp_gradient_matches_finite_difference() {
     };
     let rows = spec.batch * spec.seq;
     let (x, y) = batch_for(&spec, 4);
-    let mut be = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
     be.init(6).unwrap();
     let (grads, _) = be.clipped_grads(&x, &y, 1.0).unwrap();
     let state = be.state().unwrap();
@@ -291,10 +291,10 @@ fn nondp_gradient_matches_finite_difference() {
             plus[k][idx] += h;
             let mut minus = state.clone();
             minus[k][idx] -= h;
-            let mut bp = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            let mut bp = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
             bp.load_state(plus).unwrap();
             let lp = bp.eval_loss(&x, &y).unwrap() * rows as f32;
-            let mut bm = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            let mut bm = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
             bm.load_state(minus).unwrap();
             let lm = bm.eval_loss(&x, &y).unwrap() * rows as f32;
             let numeric = (lp - lm) / (2.0 * h);
@@ -324,7 +324,7 @@ fn token_batch_for(spec: &NativeSpec, seed: u64) -> (BatchX, Vec<i32>) {
 fn fd_check_spec(spec: &NativeSpec, seed: u64) {
     let rows = spec.batch * spec.seq;
     let (x, y) = token_batch_for(spec, seed);
-    let mut be = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
     be.init(6).unwrap();
     let (grads, _) = be.clipped_grads(&x, &y, 1.0).unwrap();
     let state = be.state().unwrap();
@@ -338,10 +338,10 @@ fn fd_check_spec(spec: &NativeSpec, seed: u64) {
             plus[k][idx] += h;
             let mut minus = state.clone();
             minus[k][idx] -= h;
-            let mut bp = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            let mut bp = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
             bp.load_state(plus).unwrap();
             let lp = bp.eval_loss(&x, &y).unwrap() * rows as f32;
-            let mut bm = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            let mut bm = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
             bm.load_state(minus).unwrap();
             let lm = bm.eval_loss(&x, &y).unwrap() * rows as f32;
             let numeric = (lp - lm) / (2.0 * h);
@@ -408,7 +408,7 @@ fn all_strategies_reach_flat_memory() {
         Strategy::BkMixGhostClip,
         Strategy::BkMixOpt,
     ] {
-        let mut be = NativeBackend::new(spec.clone(), strat, 2).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), strat).threads(2).build().unwrap();
         be.init(1).unwrap();
         be.step(&x, &y, &[], &h).unwrap();
         for _ in 0..2 {

@@ -19,7 +19,7 @@
 //! No artifacts, no XLA: runs offline.
 
 use fastdp::complexity::{
-    bk_gcache_floats_masked, ClippingStyle, Strategy, ALL_STRATEGIES,
+    bk_gcache_floats_layers, bk_gcache_floats_masked, ClippingStyle, Strategy, ALL_STRATEGIES,
 };
 use fastdp::config::TrainConfig;
 use fastdp::coordinator::Trainer;
@@ -75,7 +75,7 @@ fn run_step(
     strategy: Strategy,
     style: ClippingStyle,
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
-    let mut be = NativeBackend::with_style(spec.clone(), strategy, style, 2).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), strategy).style(style).threads(2).build().unwrap();
     be.init(29).unwrap();
     let h = StepHyper {
         lr: 0.2,
@@ -179,7 +179,7 @@ fn frozen_presets_shrink_predictions_and_measurements() {
         s
     };
     let run = |spec: &NativeSpec, style: ClippingStyle| {
-        let mut be = NativeBackend::with_style(spec.clone(), Strategy::Bk, style, 2).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).style(style).threads(2).build().unwrap();
         be.init(5).unwrap();
         let h = StepHyper {
             lr: 0.1,
@@ -230,5 +230,67 @@ fn frozen_presets_shrink_predictions_and_measurements() {
         // and predicted: the trainable census orders the same way
         assert!(bias.n_trainable_params() < full.n_trainable_params());
         assert!(lora.n_trainable_params() < full.n_trainable_params());
+    }
+}
+
+#[test]
+fn frozen_conv_trunk_matches_entry_walk_prediction() {
+    // Conv models ride the same trainability plane. Freezing the conv
+    // trunk (head-only fine-tune) must drop the measured fused g-cache
+    // peak to the plan entry-walk prediction — the dims-based masked
+    // walk cannot express conv stacks (their frontiers are
+    // activation-shaped `b*c*h*w`, not patch-shaped `b*t*cin*k^2`), so
+    // this pins the `gcache_layers()` route end to end.
+    let run = |spec: &NativeSpec, style: ClippingStyle| {
+        let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk)
+            .style(style)
+            .threads(2)
+            .build()
+            .unwrap();
+        be.init(5).unwrap();
+        let h = StepHyper {
+            lr: 0.1,
+            clip: 1.0,
+            sigma_r: 0.0,
+            logical_batch: spec.batch as f32,
+            step: 1.0,
+        };
+        let (x, y) = batch_for(spec, 23);
+        be.step(&x, &y, &[], &h).unwrap();
+        be.peak_gcache_floats() as f64
+    };
+    for model in ["conv_mnist_e2e", "resnet_tiny_e2e"] {
+        let full = NativeSpec::by_name(model).unwrap();
+        let mut head_only = full.clone();
+        head_only.trainable = "mask:fc0".into();
+        for style in [ClippingStyle::AllLayer, ClippingStyle::LayerWise] {
+            let g_full = run(&full, style);
+            let g_head = run(&head_only, style);
+            for (spec, measured) in [(&full, g_full), (&head_only, g_head)] {
+                let predicted = bk_gcache_floats_layers(style, &spec.gcache_layers());
+                assert!(
+                    (measured - predicted).abs() <= 0.01 * predicted,
+                    "{model}/{}/{style:?}: measured g-cache {measured} vs plan-walk \
+                     prediction {predicted}",
+                    spec.trainable
+                );
+            }
+            // All-layer keeps every trainable cache live until the
+            // bottom, so freezing the trunk drops its peak strictly.
+            // Layer-wise drains each conv at itself; the bottom
+            // activation frontier can dominate either way, so only
+            // monotonicity is guaranteed there.
+            assert!(
+                g_head <= g_full,
+                "{model}/{style:?}: head-only g-cache must never grow ({g_head} vs {g_full})"
+            );
+            if style == ClippingStyle::AllLayer {
+                assert!(
+                    g_head < g_full,
+                    "{model}: head-only all-layer g-cache must drop ({g_head} vs {g_full})"
+                );
+            }
+            assert!(head_only.n_trainable_params() < full.n_trainable_params());
+        }
     }
 }

@@ -40,7 +40,7 @@ fn registry_lists_models_and_strategies() {
 #[test]
 fn init_eval_step_roundtrip_mlp() {
     let spec = NativeSpec::by_name("mlp_e2e").unwrap();
-    let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 0).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(0).build().unwrap();
     be.init(0).unwrap();
     let (x, y) = batch_for(&spec, 7);
 
@@ -150,7 +150,7 @@ fn dp_strategies_agree_on_one_step() {
     };
     let mut reference: Option<Vec<Vec<f32>>> = None;
     for strat in strategies {
-        let mut be = NativeBackend::new(spec.clone(), strat, 0).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), strat).threads(0).build().unwrap();
         be.init(3).unwrap();
         let noise = noise_for(&be, 99);
         be.step(&x, &y, &noise, &h).unwrap();
@@ -191,7 +191,7 @@ fn ghost_and_inst_routes_cover_seq_model() {
         step: 1.0,
     };
     let run = |strat: Strategy| -> Vec<Vec<f32>> {
-        let mut be = NativeBackend::new(spec.clone(), strat, 0).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), strat).threads(0).build().unwrap();
         be.init(21).unwrap();
         be.step(&x, &y, &[], &h).unwrap();
         be.state().unwrap()
@@ -231,7 +231,7 @@ fn dp_strategies_agree_on_token_model() {
     ];
     let mut reference: Option<Vec<Vec<f32>>> = None;
     for strat in strategies {
-        let mut be = NativeBackend::new(spec.clone(), strat, 0).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), strat).threads(0).build().unwrap();
         be.init(3).unwrap();
         be.step(&x, &y, &[], &h).unwrap();
         let state = be.state().unwrap();
@@ -301,7 +301,7 @@ fn dp_strategies_agree_on_gpt_model() {
     ];
     let mut reference: Option<Vec<Vec<f32>>> = None;
     for strat in strategies {
-        let mut be = NativeBackend::new(spec.clone(), strat, 0).unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), strat).threads(0).build().unwrap();
         be.init(3).unwrap();
         be.step(&x, &y, &[], &h).unwrap();
         let state = be.state().unwrap();
@@ -345,7 +345,7 @@ fn token_model_gradient_matches_finite_difference() {
     };
     let rows = spec.batch * spec.seq;
     let (x, y) = token_batch_for(&spec, 4);
-    let mut be = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
     be.init(6).unwrap();
     let (grads, _) = be.clipped_grads(&x, &y, 1.0).unwrap();
     let state = be.state().unwrap();
@@ -358,10 +358,10 @@ fn token_model_gradient_matches_finite_difference() {
             plus[k][idx] += h;
             let mut minus = state.clone();
             minus[k][idx] -= h;
-            let mut bp = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            let mut bp = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
             bp.load_state(plus).unwrap();
             let lp = bp.eval_loss(&x, &y).unwrap() * rows as f32;
-            let mut bm = NativeBackend::new(spec.clone(), Strategy::NonDp, 1).unwrap();
+            let mut bm = NativeBackend::builder(spec.clone(), Strategy::NonDp).threads(1).build().unwrap();
             bm.load_state(minus).unwrap();
             let lm = bm.eval_loss(&x, &y).unwrap() * rows as f32;
             let numeric = (lp - lm) / (2.0 * h);
@@ -388,11 +388,11 @@ fn accumulation_halves_match_fused_without_noise() {
         logical_batch: spec.batch as f32,
         step: 1.0,
     };
-    let mut fused = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+    let mut fused = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(2).build().unwrap();
     fused.init(9).unwrap();
     fused.step(&x, &y, &[], &h).unwrap();
 
-    let mut halved = NativeBackend::new(spec.clone(), Strategy::Bk, 2).unwrap();
+    let mut halved = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(2).build().unwrap();
     halved.init(9).unwrap();
     let (grads, _) = halved.clipped_grads(&x, &y, h.clip).unwrap();
     halved.apply_update(&grads, &[], &h).unwrap();
@@ -407,7 +407,7 @@ fn accumulation_halves_match_fused_without_noise() {
 #[test]
 fn backend_rejects_contract_violations() {
     let spec = NativeSpec::by_name("mlp_e2e").unwrap();
-    let mut be = NativeBackend::new(spec.clone(), Strategy::Bk, 1).unwrap();
+    let mut be = NativeBackend::builder(spec.clone(), Strategy::Bk).threads(1).build().unwrap();
     let (x, y) = batch_for(&spec, 1);
     let h = StepHyper {
         lr: 0.1,

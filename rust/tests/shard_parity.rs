@@ -74,7 +74,7 @@ fn reference(
     style: ClippingStyle,
     batches: &[(BatchX, Vec<i32>)],
 ) -> StepTrace {
-    let mut be = NativeBackend::with_style(spec.clone(), strategy, style, 2)
+    let mut be = NativeBackend::builder(spec.clone(), strategy).style(style).threads(2).build()
         .expect("reference backend");
     be.init(INIT_SEED).unwrap();
     let (grads, out) = be.sharded_grads(batches, 1.0).expect("reference fold");
@@ -209,6 +209,23 @@ fn shard_parity_quick() {
     );
     // idle shards: N > K leaves empty shard ranges
     check_model("mlp_e2e", &[Strategy::Bk], &[ClippingStyle::AllLayer], &[7], 2);
+    // conv trunks: unfold/pool backward and the conv ghost/instantiate
+    // routes ride the reduction bitwise like the dense layers
+    check_model(
+        "conv_mnist_e2e",
+        &[Strategy::Bk],
+        &[ClippingStyle::GroupWise(2)],
+        &[2, 3],
+        3,
+    );
+    // residual conv + adam replica moments stay in lockstep
+    check_model(
+        "resnet_tiny_e2e",
+        &[Strategy::Opacus],
+        &[ClippingStyle::LayerWise],
+        &[3],
+        3,
+    );
 }
 
 /// The full acceptance matrix: every registry model × clipping style ×

@@ -388,13 +388,11 @@ fn full_step_is_bitwise_deterministic_for_fixed_config() {
     // embedding, attention, LayerNorm, tied head all in the walk).
     let run = || {
         let spec = NativeSpec::by_name("gpt_nano_tied_e2e").unwrap();
-        let mut be = NativeBackend::with_style(
-            spec.clone(),
-            Strategy::BkMixOpt,
-            fastdp::complexity::ClippingStyle::LayerWise,
-            4,
-        )
-        .unwrap();
+        let mut be = NativeBackend::builder(spec.clone(), Strategy::BkMixOpt)
+            .style(fastdp::complexity::ClippingStyle::LayerWise)
+            .threads(4)
+            .build()
+            .unwrap();
         be.init(7).unwrap();
         let mut corpus = fastdp::data::TokenCorpus::new(spec.vocab, spec.seq, 13);
         let (xs, ys) = corpus.sample_batch(spec.batch);

@@ -3,7 +3,8 @@
 //! Generates randomized layer stacks — depth, widths, layer kinds
 //! (plain MLP, token models with Embedding/LayerNorm, GPT-style
 //! transformer blocks with causal attention, half of them with the
-//! vocab head weight-tied to the embedding), sequence length T,
+//! vocab head weight-tied to the embedding, conv/pool vision trunks
+//! with residual skips behind a flatten), sequence length T,
 //! clipping style, strategy, and trainability preset (fully trainable,
 //! bias-only, LoRA rewrites, random owner-layer masks) all drawn from a
 //! seeded RNG — and asserts that the tape's per-sample squared gradient
@@ -27,7 +28,7 @@
 //! --ignored`). Per-stack timing is printed for the workflow log.
 
 use fastdp::complexity::{ClippingStyle, Dispatch, Strategy};
-use fastdp::runtime::native::model::NativeSpec;
+use fastdp::runtime::native::model::{ConvStage, ModelKind, NativeSpec, PoolKind};
 use fastdp::runtime::native::shard::ShardedRun;
 use fastdp::runtime::native::NativeBackend;
 use fastdp::runtime::{Backend, BatchX};
@@ -58,11 +59,66 @@ fn below(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
     lo + rng.next_below((hi - lo + 1) as u64) as usize
 }
 
-/// Random stack: every third case is a transformer so attention layers
-/// are guaranteed in any prefix of the sweep.
+/// Random stack: every fourth case is a transformer and every fourth a
+/// conv/pool trunk, so attention and vision layers are both guaranteed
+/// in any prefix of the sweep.
 fn random_case(rng: &mut Xoshiro256, idx: usize) -> Case {
     let batch = below(rng, 2, 4);
-    let spec = match idx % 3 {
+    let spec = match idx % 4 {
+        3 => {
+            // conv/pool vision trunk: 1x1 / 3x3 stages (mostly
+            // shape-preserving, occasionally unpadded so the map
+            // shrinks), optional identity skips on channel-preserving
+            // stages, optional 2x2 max/avg pooling, and an optional
+            // hidden linear behind the flatten — unfold/fold, pool
+            // backward, and the flatten boundary all meet the
+            // materialized oracle here
+            let cin = below(rng, 1, 3);
+            let h0 = 2 * below(rng, 2, 4); // 4/6/8: a first 2x2 pool tiles
+            let w0 = 2 * below(rng, 2, 4);
+            let (mut c, mut h, mut w) = (cin, h0, w0);
+            let mut stages: Vec<ConvStage> = Vec::new();
+            for _ in 0..below(rng, 1, 2) {
+                let cout = below(rng, 1, 4);
+                let k = if rng.next_below(2) == 0 { 1 } else { 3 };
+                // unpadded 3x3 shrinks h,w by 2; keep it only while the
+                // result stays positive and even (later pools must tile)
+                let pad = if k == 3 && h > 4 && w > 4 && rng.next_below(3) == 0 {
+                    0
+                } else {
+                    k / 2
+                };
+                let mut st = ConvStage::new(cout, k, 1, pad);
+                let (ho, wo) = (h + 2 * pad - (k - 1), w + 2 * pad - (k - 1));
+                if pad == k / 2 && cout == c && rng.next_below(2) == 0 {
+                    st = st.residual();
+                }
+                if ho % 2 == 0 && wo % 2 == 0 && ho >= 2 && wo >= 2 && rng.next_below(2) == 0 {
+                    let kind = if rng.next_below(2) == 0 { PoolKind::Max } else { PoolKind::Avg };
+                    st = st.pool(kind, 2);
+                    h = ho / 2;
+                    w = wo / 2;
+                } else {
+                    h = ho;
+                    w = wo;
+                }
+                c = cout;
+                stages.push(st);
+            }
+            let mut s = NativeSpec::conv(
+                &format!("diff{idx}"),
+                batch,
+                cin,
+                h0,
+                w0,
+                &stages,
+                below(rng, 2, 6),
+            );
+            if rng.next_below(2) == 0 {
+                s.hidden = vec![below(rng, 2, 6)];
+            }
+            s
+        }
         2 => {
             // GPT-style: 1-2 blocks of causal attention + MLP; every
             // other transformer ties the vocab head to the embedding
@@ -202,7 +258,7 @@ fn slice_sample(x: &BatchX, y: &[i32], spec: &NativeSpec, i: usize) -> (BatchX, 
 /// Run one case: tape norms vs the materialized per-sample f64 oracle.
 fn check_case(case: &Case) -> Result<(), String> {
     let Case { spec, strategy, style, data_seed, shards } = case;
-    let mut be = NativeBackend::with_style(spec.clone(), *strategy, *style, 2)
+    let mut be = NativeBackend::builder(spec.clone(), *strategy).style(*style).threads(2).build()
         .map_err(|e| format!("build: {e}"))?;
     be.init(data_seed ^ 0x5EED).map_err(|e| format!("init: {e}"))?;
     let (x, y) = batch_for(spec, *data_seed);
@@ -224,7 +280,7 @@ fn check_case(case: &Case) -> Result<(), String> {
         let mut s1 = spec.clone();
         s1.batch = 1;
         s1.name = format!("{}_oracle", spec.name);
-        let mut ob = NativeBackend::new(s1, Strategy::NonDp, 1)
+        let mut ob = NativeBackend::builder(s1, Strategy::NonDp).threads(1).build()
             .map_err(|e| format!("oracle build: {e}"))?;
         ob.load_state(params.clone()).map_err(|e| e.to_string())?;
         let (xi, yi) = slice_sample(&x, &y, spec, i);
@@ -261,7 +317,7 @@ fn check_case(case: &Case) -> Result<(), String> {
         let batches: Vec<(BatchX, Vec<i32>)> = (0..k)
             .map(|j| batch_for(spec, data_seed.wrapping_add(j as u64 + 1)))
             .collect();
-        let mut solo = NativeBackend::with_style(spec.clone(), *strategy, *style, 2)
+        let mut solo = NativeBackend::builder(spec.clone(), *strategy).style(*style).threads(2).build()
             .map_err(|e| format!("solo build: {e}"))?;
         solo.init(data_seed ^ 0x5EED).map_err(|e| format!("solo init: {e}"))?;
         let (want_g, want_o) = solo
@@ -314,6 +370,12 @@ fn shrink_candidates(c: &Case) -> Vec<Case> {
         // a build error as the "minimal failure"
         if spec.trainable_preset().is_err() {
             spec.trainable = "all".into();
+        }
+        // geometry shrinks can invalidate a conv trunk (untileable
+        // pool, d_in out of sync); drop those candidates instead of
+        // adopting a build error as the failure
+        if spec.validate_kind().is_err() {
+            return;
         }
         out.push(Case {
             spec,
@@ -371,6 +433,56 @@ fn shrink_candidates(c: &Case) -> Vec<Case> {
         let mut s = c.spec.clone();
         s.attn_heads = 1;
         push(s, c.strategy, c.style);
+    }
+    if let ModelKind::Conv { cin, h, w, stages } = c.spec.model_kind() {
+        // conv -> linear: plain MLP over the same flat input — if the
+        // failure survives, the bug is in the shared linear/clip
+        // machinery, not the trunk
+        let mut s = c.spec.clone();
+        s.model = ModelKind::Mlp;
+        s.hidden = vec![4];
+        push(s, c.strategy, c.style);
+        if stages.len() > 1 {
+            let mut s = c.spec.clone();
+            s.model = ModelKind::Conv {
+                cin,
+                h,
+                w,
+                stages: stages[..stages.len() - 1].to_vec(),
+            };
+            push(s, c.strategy, c.style);
+        }
+        if stages.iter().any(|st| st.pool.is_some()) {
+            let mut s = c.spec.clone();
+            let mut st2 = stages.clone();
+            for st in &mut st2 {
+                st.pool = None;
+            }
+            s.model = ModelKind::Conv { cin, h, w, stages: st2 };
+            push(s, c.strategy, c.style);
+        }
+        if stages.iter().any(|st| st.residual) {
+            let mut s = c.spec.clone();
+            let mut st2 = stages.clone();
+            for st in &mut st2 {
+                st.residual = false;
+            }
+            s.model = ModelKind::Conv { cin, h, w, stages: st2 };
+            push(s, c.strategy, c.style);
+        }
+        if h >= 4 && w >= 4 {
+            // halve the map (push rejects the candidate if a pool no
+            // longer tiles)
+            let mut s = c.spec.clone();
+            s.model = ModelKind::Conv {
+                cin,
+                h: h / 2,
+                w: w / 2,
+                stages: stages.clone(),
+            };
+            s.d_in = cin * (h / 2) * (w / 2);
+            push(s, c.strategy, c.style);
+        }
     }
     if c.spec.hidden.len() > 1 {
         let mut s = c.spec.clone();
@@ -444,7 +556,9 @@ fn run_stacks(n: usize) {
         eprintln!(
             "stack {idx:>3} ok in {:>8.2?}  ({} B={} T={} blocks={} {:?} {} shards={} trainable={})",
             t0.elapsed(),
-            if case.spec.tied {
+            if matches!(case.spec.model_kind(), ModelKind::Conv { .. }) {
+                "conv"
+            } else if case.spec.tied {
                 "gpt-tied"
             } else if case.spec.blocks > 0 {
                 "gpt"
@@ -471,8 +585,9 @@ fn tape_differential_quick() {
 }
 
 /// The acceptance sweep: 100 seeded random stacks (a superset of the
-/// quick run — same RNG stream), including transformer/attention stacks
-/// at every third index. Slow; runs in the `--ignored` CI job.
+/// quick run — same RNG stream), with transformer/attention and
+/// conv/pool stacks each at every fourth index. Slow; runs in the
+/// `--ignored` CI job.
 #[test]
 #[ignore = "slow: full 100-stack differential sweep; run with --ignored (CI slow-tests job)"]
 fn tape_differential_100() {
